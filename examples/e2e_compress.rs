@@ -1,0 +1,93 @@
+//! End-to-end driver (DESIGN.md §6): proves all three layers compose.
+//!
+//!   1. generate a synthetic corpus (rust data substrate),
+//!   2. TRAIN a transformer for a few hundred steps through the AOT
+//!      train-step HLO executed by the rust PJRT runtime (L2/L1 → L3),
+//!      logging the loss curve,
+//!   3. capture calibration activations with the native forward,
+//!   4. QUANTIZE with GLVQ (SDBA + companding) and with RTN at 2 bits,
+//!   5. EVALUATE perplexity fp32 vs RTN vs GLVQ via the ForwardLoss HLO,
+//!   6. SERVE three batched generate requests through the L3 server.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_compress`
+//! (pass `--model m` for the larger model; results land in runs/e2e/)
+
+use glvq::coordinator::server::{self, NativeBackend, Request, Response, ServerOpts};
+use glvq::data::corpus::Mix;
+use glvq::exp::Workspace;
+use glvq::info;
+
+fn main() -> anyhow::Result<()> {
+    glvq::util::logging::set_level(glvq::util::logging::Level::Info);
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "s".to_string());
+
+    let mut ws = Workspace::new("artifacts", "runs")?;
+
+    // --- train through the AOT train-step artifact (loss curve logged) ---
+    let steps = Workspace::default_steps(&model);
+    info!("=== [1/4] training model {model} for {steps} steps via PJRT train_step ===");
+    let store = ws.trained(&model, steps, 3e-3)?;
+    info!("loss curve written to runs/e2e/model_{model}.loss.tsv");
+
+    // --- baseline perplexity ---
+    info!("=== [2/4] fp32 perplexity (ForwardLoss HLO) ===");
+    let fp_wiki = ws.ppl(&model, &store, Mix::Wiki)?;
+    let fp_web = ws.ppl(&model, &store, Mix::Web)?;
+    info!("fp32: wiki ppl {:.3}, web ppl {:.3}", fp_wiki.ppl, fp_web.ppl);
+
+    // --- quantize ---
+    info!("=== [3/4] quantizing at 2 bits: GLVQ-16D (SDBA+companding) vs RTN ===");
+    let (qm_glvq, dq_glvq) = ws.quantize(&model, "glvq-16d", 2.0, None)?;
+    let (_, dq_rtn) = ws.quantize(&model, "rtn", 2.0, None)?;
+    let container = ws.dir.join(format!("{model}_glvq16_2b.glvq"));
+    qm_glvq.save(&container)?;
+    let (payload, side) = qm_glvq.size_bytes();
+    info!(
+        "container {}: {:.3} avg bits, {} B payload + {} B side ({:.2}%)",
+        container.display(),
+        qm_glvq.avg_bits(),
+        payload,
+        side,
+        100.0 * side as f64 / payload as f64
+    );
+
+    let g_wiki = ws.ppl(&model, &dq_glvq, Mix::Wiki)?;
+    let r_wiki = ws.ppl(&model, &dq_rtn, Mix::Wiki)?;
+    info!(
+        "2-bit wiki ppl: fp32 {:.3} | GLVQ {:.3} | RTN {:.3}",
+        fp_wiki.ppl, g_wiki.ppl, r_wiki.ppl
+    );
+    assert!(
+        g_wiki.ppl < r_wiki.ppl,
+        "GLVQ must beat RTN at 2 bits ({} vs {})",
+        g_wiki.ppl,
+        r_wiki.ppl
+    );
+
+    // --- serve ---
+    info!("=== [4/4] serving 3 batched generate requests over the GLVQ model ===");
+    let cfg = ws.model_cfg(&model)?;
+    let handle = server::start(
+        move || Ok(Box::new(NativeBackend { cfg, store: dq_glvq }) as Box<_>),
+        ServerOpts { max_batch: 4 },
+    );
+    let rxs: Vec<_> = ["the kama ", "Boku ", "the ri"]
+        .iter()
+        .map(|p| handle.submit(Request::Generate { prompt: p.as_bytes().to_vec(), max_new: 32 }))
+        .collect();
+    for (p, rx) in ["the kama ", "Boku ", "the ri"].iter().zip(rxs) {
+        match rx.recv()? {
+            Response::Generated { text } => {
+                info!("prompt {p:?} → {:?}", String::from_utf8_lossy(&text))
+            }
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+    let metrics = handle.shutdown();
+    info!("server metrics: {}", metrics.report());
+    info!("e2e compress: OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: quantize one weight group with GLVQ and inspect the result.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Demonstrates the core public API at group granularity — the full-model
+//! pipeline is shown in `e2e_compress.rs`.
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::config::GlvqConfig;
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::linalg::Mat;
+use glvq::quant::traits::{recon_error, GroupQuantizer};
+use glvq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A heavy-tailed weight group (the regime GLVQ targets) and a
+    // calibration slice of input activations.
+    let mut rng = Rng::new(7);
+    let weights: Vec<f32> = (0..256 * 128).map(|_| rng.student_t(4.0) as f32 * 0.02).collect();
+    let w = Mat::from_vec(256, 128, weights); // paper orientation: m rows × 128 group cols
+    let x = Mat::random_normal(128, 256, 1.0, &mut rng); // (n × N) calibration
+
+    println!("group: {}x{} weights, kurtosis {:.2}", w.rows, w.cols,
+        glvq::linalg::stats::kurtosis(&w.data));
+
+    for bits in [2u8, 3, 4] {
+        // GLVQ: learned lattice + learned mu-law companding (paper Alg. 1)
+        let mut cfg = GlvqConfig::default();
+        cfg.lattice_dim = 16;
+        let fit = GlvqGroupQuantizer::new(cfg).fit(&w, &x, bits);
+        let e_glvq = recon_error(&w, &fit.quantized.dequantize(), &x);
+
+        // RTN floor at the same rate
+        let q_rtn = RtnQuantizer.quantize(&w, &x, bits);
+        let e_rtn = recon_error(&w, &q_rtn.dequantize(), &x);
+
+        println!(
+            "{bits}-bit: glvq err {e_glvq:10.3} (mu={:5.1}, {} iters)  |  rtn err {e_rtn:10.3}  |  glvq/rtn = {:.2}x",
+            fit.mu,
+            fit.iters_run,
+            e_glvq / e_rtn
+        );
+        println!(
+            "         payload {} B + side info {} B ({:.2}%)",
+            fit.quantized.codes.payload_bytes(),
+            fit.quantized.side_bytes(),
+            100.0 * fit.quantized.side_bytes() as f64
+                / fit.quantized.codes.payload_bytes() as f64
+        );
+    }
+    Ok(())
+}

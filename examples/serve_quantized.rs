@@ -1,0 +1,80 @@
+//! Serving example: load a quantized container from disk, run the streaming
+//! decoder sanity check, then serve a batch of mixed generate/score
+//! requests and report latency/throughput metrics.
+//!
+//! Run: `cargo run --release --example serve_quantized [-- --model s]`
+
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use glvq::coordinator::server::{self, NativeBackend, Request, Response, ServerOpts};
+use glvq::exp::Workspace;
+use glvq::glvq::pipeline::dequantized_store;
+use glvq::info;
+use glvq::quant::format::QuantizedModel;
+use glvq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    glvq::util::logging::set_level(glvq::util::logging::Level::Info);
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "s".to_string());
+    let mut ws = Workspace::new("artifacts", "runs")?;
+
+    // quantize (or reuse) a 2-bit GLVQ container and persist it
+    let store = ws.trained_default(&model)?;
+    let path = ws.dir.join(format!("{model}_glvq8_2b.glvq"));
+    let qm = if path.exists() {
+        info!("loading container {}", path.display());
+        QuantizedModel::load(&path)?
+    } else {
+        let (qm, _) = ws.quantize(&model, "glvq-8d", 2.0, None)?;
+        qm.save(&path)?;
+        info!("wrote container {}", path.display());
+        qm
+    };
+
+    // streaming-decode sanity: one token's dequant-GEMV through every layer
+    let mut sm = StreamingMatvec::new(16);
+    let mut stats = DecodeStats::default();
+    let mut rng = Rng::new(3);
+    for qt in &qm.tensors {
+        let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; qt.rows];
+        sm.matvec(qt, &x, &mut y, &mut stats);
+    }
+    info!(
+        "streaming decode: {} tensors, {:.2} MB touched/token, peak panel {} elems",
+        qm.tensors.len(),
+        stats.total_bytes() as f64 / 1e6,
+        qm.tensors.iter().map(|t| sm.peak_panel_elems(t)).max().unwrap_or(0)
+    );
+
+    // serve a burst of requests over the dequantized model
+    let dq = dequantized_store(&qm, &store);
+    let cfg = ws.model_cfg(&model)?;
+    let handle = server::start(
+        move || Ok(Box::new(NativeBackend { cfg, store: dq }) as Box<_>),
+        ServerOpts { max_batch: 8 },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let req = if i % 3 == 2 {
+            Request::Score { prompt: b"the kama ".to_vec(), continuation: b"vove".to_vec() }
+        } else {
+            Request::Generate { prompt: format!("the sentence {i} ").into_bytes(), max_new: 16 }
+        };
+        rxs.push(handle.submit(req));
+    }
+    let mut generated = 0;
+    let mut scored = 0;
+    for rx in rxs {
+        match rx.recv()? {
+            Response::Generated { .. } => generated += 1,
+            Response::Scored { .. } => scored += 1,
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+        }
+    }
+    let metrics = handle.shutdown();
+    info!("served {generated} generates + {scored} scores: {}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Rate-distortion sweep: perplexity vs bits for GLVQ and the strongest
+//! baselines — the crossover picture behind the paper's Tables 1–3.
+//!
+//! Run: `cargo run --release --example sweep_bits`
+
+use glvq::data::corpus::Mix;
+use glvq::exp::Workspace;
+use glvq::info;
+
+fn main() -> anyhow::Result<()> {
+    glvq::util::logging::set_level(glvq::util::logging::Level::Info);
+    let mut ws = Workspace::new("artifacts", "runs")?;
+    let model = "s";
+    let store = ws.trained_default(model)?;
+    let fp = ws.ppl(model, &store, Mix::Wiki)?;
+    info!("fp32 wiki ppl: {:.3}", fp.ppl);
+
+    println!("{:<12} {:>6} {:>10} {:>12}", "method", "bits", "wiki ppl", "Δ vs fp32");
+    for bits in [4.0f64, 3.0, 2.0, 1.5, 1.0] {
+        for method in ["rtn", "gptq", "tcq", "glvq-8d"] {
+            // rtn/gptq/tcq are integer-rate methods
+            if bits.fract() != 0.0 && method != "glvq-8d" {
+                continue;
+            }
+            if bits < 2.0 && (method == "gptq" || method == "tcq" || method == "rtn") {
+                continue; // sub-2-bit handled by binarization baselines (Table 3)
+            }
+            let (_, dq) = ws.quantize(model, method, bits, None)?;
+            let r = ws.ppl(model, &dq, Mix::Wiki)?;
+            println!(
+                "{:<12} {:>6} {:>10.3} {:>+12.3}",
+                method,
+                bits,
+                r.ppl,
+                r.ppl - fp.ppl
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+"""AOT export: lower every L2 graph to HLO *text* + write artifacts/manifest.json.
+
+Run once at build time (`make artifacts`); the rust runtime (L3) is
+self-contained afterwards.
+
+Interchange is HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the `xla` crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--models s,m]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import glvq_opt, model
+
+LATTICE_DIMS = [8, 16, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, fname: str, text: str) -> str:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {fname} ({len(text)} chars)")
+    return fname
+
+
+def export_model(cfg: model.ModelConfig, out_dir: str) -> Dict:
+    """Lower train_step / forward_loss / logits for one model size."""
+    specs = cfg.param_specs()
+    f32, i32 = jnp.float32, jnp.int32
+    pspecs = [jax.ShapeDtypeStruct(s, f32) for _, s, _ in specs]
+    P = len(pspecs)
+    bt, be, T = cfg.batch_train, cfg.batch_eval, cfg.seq_len
+    xt = jax.ShapeDtypeStruct((bt, T), i32)
+    xe = jax.ShapeDtypeStruct((be, T), i32)
+    x1 = jax.ShapeDtypeStruct((1, T), i32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    def flat_train(*args):
+        params = list(args[:P])
+        m = list(args[P : 2 * P])
+        v = list(args[2 * P : 3 * P])
+        t, lr, x, y = args[3 * P], args[3 * P + 1], args[3 * P + 2], args[3 * P + 3]
+        loss, np_, nm, nv = model.train_step(cfg, params, m, v, t, lr, x, y)
+        return (loss, *np_, *nm, *nv)
+
+    def flat_loss(*args):
+        p = model.list_to_params(cfg, list(args[:P]))
+        return (model.nll_sum(cfg, p, args[P], args[P + 1]),)
+
+    def flat_logits(*args):
+        p = model.list_to_params(cfg, list(args[:P]))
+        return (model.forward(cfg, p, args[P]),)
+
+    name = cfg.name
+    print(f"model {name}: {P} params, {cfg.param_count()} weights")
+    files = {}
+    lowered = jax.jit(flat_train).lower(*pspecs, *pspecs, *pspecs, scalar, scalar, xt, xt)
+    files["train_step"] = _write(out_dir, f"train_step_{name}.hlo.txt", to_hlo_text(lowered))
+    lowered = jax.jit(flat_loss).lower(*pspecs, xe, xe)
+    files["forward_loss"] = _write(out_dir, f"forward_loss_{name}.hlo.txt", to_hlo_text(lowered))
+    lowered = jax.jit(flat_logits).lower(*pspecs, x1)
+    files["logits"] = _write(out_dir, f"logits_{name}.hlo.txt", to_hlo_text(lowered))
+
+    return {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch_train": cfg.batch_train,
+            "batch_eval": cfg.batch_eval,
+        },
+        "params": [
+            {"name": n, "shape": list(s), "quantizable": q} for n, s, q in specs
+        ],
+        "programs": files,
+    }
+
+
+def export_glvq(d: int, out_dir: str) -> Dict:
+    """Lower glvq_step / encode / decode for one lattice dimension."""
+    ts = glvq_opt.tile_specs(d)
+    print(f"glvq d={d}")
+    files = {}
+    lowered = jax.jit(glvq_opt.glvq_step).lower(
+        ts["w"], ts["x"], ts["g"], ts["ginv"], ts["mu"], ts["g0"]
+    )
+    files["step"] = _write(out_dir, f"glvq_step_d{d}.hlo.txt", to_hlo_text(lowered))
+    lowered = jax.jit(glvq_opt.glvq_encode).lower(ts["w"], ts["ginv"], ts["mu"])
+    files["encode"] = _write(out_dir, f"glvq_encode_d{d}.hlo.txt", to_hlo_text(lowered))
+    lowered = jax.jit(glvq_opt.glvq_decode).lower(ts["z"], ts["g"], ts["mu"])
+    files["decode"] = _write(out_dir, f"glvq_decode_d{d}.hlo.txt", to_hlo_text(lowered))
+    return {
+        "d": d,
+        "r": glvq_opt.TILE_R,
+        "n": glvq_opt.GROUP_N,
+        "ncal": glvq_opt.CALIB_N,
+        "lam": 0.1,
+        "programs": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="s,m", help="comma list from {s,m,l}")
+    ap.add_argument("--dims", default="8,16,32", help="lattice dims to export")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: Dict = {"version": 1, "models": {}, "glvq": {}}
+    for ms in [s for s in args.models.split(",") if s]:
+        manifest["models"][ms] = export_model(model.CONFIGS[ms], args.out)
+    for d in [int(s) for s in args.dims.split(",") if s]:
+        manifest["glvq"][str(d)] = export_glvq(d, args.out)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L2: the GLVQ group-optimization graph (paper Alg. 1, one iteration).
+
+Lowered by aot.py to `glvq_step_d{8,16,32}.hlo.txt` with canonical tile
+shapes (R rows × n cols, N calibration vectors). The rust L3 optimizer:
+  - computes Ginv with its own linalg (LU) — jnp.linalg.inv would lower to a
+    typed-FFI custom call that xla_extension 0.5.1 rejects,
+  - splits a group's rows into R-row tiles, pads the last tile with zeros,
+  - accumulates (loss, dG, dmu) over tiles, applies Adam + spectral clamp to
+    G and projects mu onto [10, 255] (Eq. 12 text).
+
+The Z-step (Babai, Eq. 6) runs *inside* this graph through the L1 Pallas
+kernel under stop_gradient — exactly the paper's alternating scheme: Z is
+refreshed every iteration, gradients flow only through decode (Eq. 10/11).
+
+Also defined: the pure encode and decode programs used by the accelerated
+quantization/runtime paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import babai as babai_kernel
+from compile.kernels import decode as decode_kernel
+from compile.kernels import ref
+
+# Canonical tile shapes baked into the AOT artifacts.
+TILE_R = 128  # rows per tile
+GROUP_N = 128  # columns per group (paper default group size)
+CALIB_N = 256  # calibration vectors per group
+
+
+def glvq_step(w, x, g, ginv, mu, g0, lam: float = 0.1):
+    """One alternating-opt iteration on a (R, n) weight tile.
+
+    w: (R, n) raw weights          x: (n, N) calibration inputs
+    g, ginv, g0: (d, d)            mu: scalar f32 in [10, 255]
+    Returns (loss, dG, dmu). Z is recomputed (Babai) and stop-gradiented.
+    """
+
+    # Z-step: L1 Pallas fused compand+Babai kernel. Computed OUTSIDE the
+    # differentiated closure — pallas_call supports no AD, and the paper's
+    # alternating scheme freezes Z during the G/mu gradient step anyway.
+    z = babai_kernel.babai_encode(w, ginv, mu)
+
+    def loss_fn(g_, mu_):
+        # G/mu-step path: differentiable decode (plain jnp so XLA fuses + AD).
+        y = (z + 0.5) @ g_.T  # (R, l, d) — half-integer grid decode
+        w_hat = ref.mu_law_inv(y.reshape(w.shape), mu_)
+        err = (w - w_hat) @ x
+        return jnp.sum(jnp.square(err)) + lam * jnp.sum(jnp.square(g_ - g0))
+
+    loss, (dg, dmu) = jax.value_and_grad(loss_fn, argnums=(0, 1))(g, mu)
+    return loss, dg, dmu
+
+
+def glvq_encode(w, ginv, mu):
+    """Final encode of a (R, n) tile → (R, n/d, d) integer codes (f32)."""
+    return babai_kernel.babai_encode(w, ginv, mu)
+
+
+def glvq_decode(z, g, mu):
+    """Decode (R, l, d) codes → (R, l*d) reconstructed weights."""
+    return decode_kernel.lattice_decode(z, g, mu)
+
+
+def tile_specs(d: int, r: int = TILE_R, n: int = GROUP_N, ncal: int = CALIB_N):
+    """ShapeDtypeStructs for lowering glvq_step at lattice dimension d."""
+    f32 = jnp.float32
+    return dict(
+        w=jax.ShapeDtypeStruct((r, n), f32),
+        x=jax.ShapeDtypeStruct((n, ncal), f32),
+        g=jax.ShapeDtypeStruct((d, d), f32),
+        ginv=jax.ShapeDtypeStruct((d, d), f32),
+        mu=jax.ShapeDtypeStruct((), f32),
+        g0=jax.ShapeDtypeStruct((d, d), f32),
+        z=jax.ShapeDtypeStruct((r, n // d, d), f32),
+    )

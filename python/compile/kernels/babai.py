@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: tiled Babai rounding (Eq. 6) — the GLVQ encode hot-spot.
+
+z = round(Ginv @ y - 1/2) per d-length sub-block (half-integer grid) of each weight row. We tile the
+row dimension so each grid step stages one (TILE_M, n) weight panel plus the
+(d, d) inverse basis in VMEM and performs a single MXU-shaped matmul
+  (TILE_M * n/d, d) @ (d, d)
+followed by a vectorized round. The fused variant also applies mu-law
+companding (Eq. 9) on the loaded panel before rounding, saving one HBM
+round-trip of the companded intermediate.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA encode
+kernel stages codebooks in shared memory per threadblock; here BlockSpec
+expresses the HBM→VMEM schedule and the systolic MXU plays the role of the
+warp GEMV. interpret=True everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; correctness is validated against kernels/ref.py.
+
+VMEM footprint per grid step (f32): TILE_M*n + d*d + TILE_M*n  (in+out)
+  = 128*128*4 * 2 + tiny  ≈ 131 KiB   « 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+
+
+def _babai_kernel(ginv_ref, w_ref, z_ref, *, d: int):
+    w = w_ref[...]  # (tile, n) already companded
+    tile, n = w.shape
+    blocks = w.reshape(tile * (n // d), d)
+    z = jnp.round(blocks @ ginv_ref[...].T - 0.5)
+    z_ref[...] = z.reshape(tile, n // d, d)
+
+
+def _babai_compand_kernel(ginv_ref, w_ref, mu_ref, z_ref, *, d: int):
+    w = w_ref[...]  # (tile, n) raw weights
+    mu = mu_ref[0, 0]
+    w = jnp.sign(w) * jnp.log1p(mu * jnp.abs(w)) / jnp.log1p(mu)
+    tile, n = w.shape
+    blocks = w.reshape(tile * (n // d), d)
+    z = jnp.round(blocks @ ginv_ref[...].T - 0.5)
+    z_ref[...] = z.reshape(tile, n // d, d)
+
+
+def _tile(m: int) -> int:
+    return TILE_M if m % TILE_M == 0 else m
+
+
+def babai_round(w: jnp.ndarray, ginv: jnp.ndarray) -> jnp.ndarray:
+    """w: (m, n) companded; ginv: (d, d) → (m, n/d, d) integer-valued f32."""
+    m, n = w.shape
+    d = ginv.shape[0]
+    assert n % d == 0
+    tile = _tile(m)
+    grid = (m // tile,)
+    return pl.pallas_call(
+        functools.partial(_babai_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n // d, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n // d, d), jnp.float32),
+        interpret=True,
+    )(ginv, w)
+
+
+def babai_encode(w: jnp.ndarray, ginv: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Fused compand + Babai round. w raw (m, n); mu scalar → (m, n/d, d)."""
+    m, n = w.shape
+    d = ginv.shape[0]
+    assert n % d == 0
+    tile = _tile(m)
+    grid = (m // tile,)
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_babai_compand_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n // d, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n // d, d), jnp.float32),
+        interpret=True,
+    )(ginv, w, mu2)

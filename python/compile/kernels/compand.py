@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: elementwise mu-law companding (Eq. 9), tiled over rows.
+
+Kept as a standalone kernel for the non-fused pipeline variant and for
+kernel-level testing; the production encode path uses the fused
+babai.babai_encode. interpret=True; oracle kernels/ref.py::mu_law.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+
+
+def _mu_law_kernel(x_ref, mu_ref, o_ref):
+    x = x_ref[...]
+    mu = mu_ref[0, 0]
+    o_ref[...] = jnp.sign(x) * jnp.log1p(mu * jnp.abs(x)) / jnp.log1p(mu)
+
+
+def _mu_law_inv_kernel(y_ref, mu_ref, o_ref):
+    y = y_ref[...]
+    mu = mu_ref[0, 0]
+    o_ref[...] = jnp.sign(y) * (jnp.exp(jnp.abs(y) * jnp.log1p(mu)) - 1.0) / mu
+
+
+def _call(kernel, x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    m, n = x.shape
+    tile = TILE_M if m % TILE_M == 0 else m
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, mu2)
+
+
+def mu_law(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """F_mu(x), x: (m, n), mu scalar."""
+    return _call(_mu_law_kernel, x, mu)
+
+
+def mu_law_inv(y: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """F_mu^{-1}(y), y: (m, n), mu scalar."""
+    return _call(_mu_law_inv_kernel, y, mu)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: fused lattice decode + mu-law expand (Eq. 10).
+
+w_hat = F_mu^{-1}(G (z + 1/2)) per sub-block (half-integer grid). This is the paper's runtime decode —
+a d×d matmul per sub-block (no codebook lookup, unlike AQLM), which on TPU
+maps directly onto the MXU:
+  (TILE_M * l, d) @ (d, d)    then elementwise expand.
+
+VMEM per grid step (f32): TILE_M*l*d (codes) + d*d + TILE_M*l*d (out)
+  = 2 * 128*128*4 + tiny ≈ 131 KiB.
+
+interpret=True (CPU plugin); oracle: kernels/ref.py::lattice_decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+
+
+def _decode_kernel(g_ref, z_ref, mu_ref, o_ref, *, d: int):
+    z = z_ref[...]  # (tile, l, d)
+    tile, l, _ = z.shape
+    y = ((z.reshape(tile * l, d) + 0.5) @ g_ref[...].T).reshape(tile, l * d)
+    mu = mu_ref[0, 0]
+    o_ref[...] = jnp.sign(y) * (jnp.exp(jnp.abs(y) * jnp.log1p(mu)) - 1.0) / mu
+
+
+def lattice_decode(z: jnp.ndarray, g: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """z: (m, l, d) codes; g: (d, d); mu scalar → reconstructed (m, l*d)."""
+    m, l, d = z.shape
+    tile = TILE_M if m % TILE_M == 0 else m
+    grid = (m // tile,)
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, l, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, l * d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, l * d), jnp.float32),
+        interpret=True,
+    )(g, z, mu2)

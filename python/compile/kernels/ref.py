@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package is checked by pytest (+hypothesis) against
+the function of the same name here. These references are also the semantic
+contract for the rust-native implementations (rust/src/{lattice,compand}/).
+
+Shapes follow the GLVQ paper (§3.2): a weight group W_g (m×n) is viewed as
+row-major sub-blocks of length d, i.e. a (m, n/d, d) block tensor; lattice
+columns live on the last axis, so Babai encoding is `round(blocks @ Ginv^T)`
+and decoding is `blocks_z @ G^T`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MU_MIN = 10.0
+MU_MAX = 255.0
+
+
+def mu_law(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (9): F(x) = sgn(x) ln(1+mu|x|)/ln(1+mu)."""
+    return jnp.sign(x) * jnp.log1p(mu * jnp.abs(x)) / jnp.log1p(mu)
+
+
+def mu_law_inv(y: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (9): F^-1(y) = sgn(y) ((1+mu)^|y| - 1)/mu."""
+    return jnp.sign(y) * (jnp.exp(jnp.abs(y) * jnp.log1p(mu)) - 1.0) / mu
+
+
+def to_blocks(w: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(m, n) -> (m, n/d, d) row-major sub-blocks (paper §3.2 reshape)."""
+    m, n = w.shape
+    assert n % d == 0, f"group width {n} not divisible by lattice dim {d}"
+    return w.reshape(m, n // d, d)
+
+
+def from_blocks(b: jnp.ndarray) -> jnp.ndarray:
+    m, l, d = b.shape
+    return b.reshape(m, l * d)
+
+
+def babai_round(w: jnp.ndarray, ginv: jnp.ndarray) -> jnp.ndarray:
+    """Babai rounding (Eq. 6) on the *half-integer* grid:
+    z = round(Ginv y - 1/2) per sub-block; decode adds the 1/2 back, so the
+    reconstruction levels are symmetric at every bit width (QuIP#'s E8+1/2
+    convention; at 1 bit this is sign quantization instead of {-s, 0}).
+
+    w: (m, n) weights already companded; ginv: (d, d). Returns (m, n/d, d)
+    integer-valued f32 codes.
+    """
+    d = ginv.shape[0]
+    blocks = to_blocks(w, d)
+    return jnp.round(blocks @ ginv.T - 0.5)
+
+
+def lattice_decode(z: jnp.ndarray, g: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Decode + expand (Eq. 10, shifted grid): w_hat = F^-1(G (z + 1/2)).
+
+    z: (m, l, d) codes; g: (d, d); returns (m, l*d).
+    """
+    y = (z + 0.5) @ g.T
+    return mu_law_inv(from_blocks(y), mu)
+
+
+def glvq_quantize(w: jnp.ndarray, g: jnp.ndarray, ginv: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Full encode->decode chain (Eq. 10) returning reconstructed weights."""
+    z = babai_round(mu_law(w, mu), ginv)
+    return lattice_decode(z, g, mu)
+
+
+def glvq_loss(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    ginv: jnp.ndarray,
+    mu: jnp.ndarray,
+    g0: jnp.ndarray,
+    lam: float = 0.1,
+) -> jnp.ndarray:
+    """Eq. (11): ||W X - W_hat X||^2 + lam ||G - G0||_F^2.
+
+    Codes are stop-gradiented (the paper's alternating scheme fixes Z during
+    the G/mu gradient step); gradients flow through decode only.
+    """
+    z = jax.lax.stop_gradient(babai_round(mu_law(w, mu), ginv))
+    w_hat = lattice_decode(z, g, mu)
+    err = (w - w_hat) @ x
+    return jnp.sum(jnp.square(err)) + lam * jnp.sum(jnp.square(g - g0))
+
+
+def glvq_step(w, x, g, ginv, mu, g0, lam: float = 0.1):
+    """One alternating-optimization observation: (loss, dG, dmu).
+
+    The Z-step is implicit (Babai refreshed inside); the caller (rust L3
+    optimizer) applies the gradient update + spectral clamp + mu projection.
+    """
+    loss, grads = jax.value_and_grad(glvq_loss, argnums=(2, 4))(w, x, g, ginv, mu, g0, lam)
+    return loss, grads[0], grads[1]

@@ -1,0 +1,208 @@
+"""L2: decoder-only transformer in JAX — the model whose weights GLVQ compresses.
+
+Build-time only. The forward/loss/train-step graphs defined here are lowered
+once by `aot.py` to HLO text and executed from the rust runtime (L3). Python
+is never on the request path.
+
+Conventions (mirrored exactly by rust `eval/native_fwd.rs`):
+  - byte-level vocab (V=256), learned absolute positional embedding
+  - pre-RMSNorm blocks, multi-head causal attention, tanh-GELU MLP
+  - all matmul weights stored (n_in, n_out); activations `x @ W`
+  - params are a flat {name: array} dict, canonical order = sorted(names)
+
+Nothing here may lower to a typed-FFI custom call (xla_extension 0.5.1
+rejects API_VERSION_TYPED_FFI): no jnp.linalg.*, no jax.random inside graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyperparameters (baked into lowered HLO shapes)."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layer: int = 4
+    n_head: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+    batch_train: int = 16
+    batch_eval: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...], bool]]:
+        """(name, shape, quantizable) in canonical (sorted-name) order.
+
+        `quantizable` marks the 2-D matmul weights GLVQ compresses; norms,
+        embeddings and positional tables stay in full precision (same policy
+        as the paper's Llama setup, which keeps embeddings/norms FP16).
+        """
+        specs: List[Tuple[str, Tuple[int, ...], bool]] = []
+        specs.append(("emb", (self.vocab, self.d_model), False))
+        specs.append(("final.gain", (self.d_model,), False))
+        specs.append(("out", (self.d_model, self.vocab), True))
+        specs.append(("pos", (self.seq_len, self.d_model), False))
+        for i in range(self.n_layer):
+            p = f"{i:02d}."
+            specs.append((p + "attn.gain", (self.d_model,), False))
+            specs.append((p + "attn.wk", (self.d_model, self.d_model), True))
+            specs.append((p + "attn.wo", (self.d_model, self.d_model), True))
+            specs.append((p + "attn.wq", (self.d_model, self.d_model), True))
+            specs.append((p + "attn.wv", (self.d_model, self.d_model), True))
+            specs.append((p + "mlp.gain", (self.d_model,), False))
+            specs.append((p + "mlp.w1", (self.d_model, self.d_ff), True))
+            specs.append((p + "mlp.w2", (self.d_ff, self.d_model), True))
+        specs.sort(key=lambda s: s[0])
+        return specs
+
+    def param_count(self) -> int:
+        n = 0
+        for _, shape, _ in self.param_specs():
+            c = 1
+            for s in shape:
+                c *= s
+            n += c
+        return n
+
+
+# Canonical model family: the substitution for Llama 7B/13B/70B (DESIGN.md §3).
+CONFIGS: Dict[str, ModelConfig] = {
+    "s": ModelConfig(name="s", d_model=128, n_layer=4, n_head=4, d_ff=512),
+    "m": ModelConfig(name="m", d_model=256, n_layer=6, n_head=8, d_ff=1024),
+    "l": ModelConfig(name="l", d_model=512, n_layer=8, n_head=8, d_ff=2048),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init; deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    specs = cfg.param_specs()
+    keys = jax.random.split(key, len(specs))
+    for (name, shape, _), k in zip(specs, keys):
+        if name.endswith("gain"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "pos":
+            params[name] = 0.01 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            scale = 0.5 / float(jnp.sqrt(jnp.float32(fan_in)))
+            # residual-output projections get the depth-scaled init
+            if name.endswith(("wo", "w2")):
+                scale = scale / float(jnp.sqrt(jnp.float32(2.0 * cfg.n_layer)))
+            params[name] = scale * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def params_to_list(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[k] for k in sorted(params.keys())]
+
+
+def list_to_params(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    names = [n for n, _, _ in cfg.param_specs()]
+    assert len(names) == len(flat)
+    return dict(zip(names, flat))
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh approximation — matched by rust native_fwd
+    return jax.nn.gelu(x, approximate=True)
+
+
+def attention(h: jnp.ndarray, p: Dict[str, jnp.ndarray], prefix: str, cfg: ModelConfig) -> jnp.ndarray:
+    B, T, D = h.shape
+    H, dh = cfg.n_head, cfg.d_head
+    a = rmsnorm(h, p[prefix + "attn.gain"])
+    q = (a @ p[prefix + "attn.wq"]).reshape(B, T, H, dh)
+    k = (a @ p[prefix + "attn.wk"]).reshape(B, T, H, dh)
+    v = (a @ p[prefix + "attn.wv"]).reshape(B, T, H, dh)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    att = jnp.where(mask > 0, att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, D)
+    return h + o @ p[prefix + "attn.wo"]
+
+
+def mlp(h: jnp.ndarray, p: Dict[str, jnp.ndarray], prefix: str) -> jnp.ndarray:
+    m = rmsnorm(h, p[prefix + "mlp.gain"])
+    return h + gelu(m @ p[prefix + "mlp.w1"]) @ p[prefix + "mlp.w2"]
+
+
+def forward(cfg: ModelConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T) int32 tokens → logits (B, T, V)."""
+    B, T = x.shape
+    h = p["emb"][x] + p["pos"][None, :T, :]
+    for i in range(cfg.n_layer):
+        prefix = f"{i:02d}."
+        h = attention(h, p, prefix, cfg)
+        h = mlp(h, p, prefix)
+    h = rmsnorm(h, p["final.gain"])
+    return h @ p["out"]
+
+
+def nll_sum(cfg: ModelConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Total negative log-likelihood over all (B*T) target positions."""
+    logits = forward(cfg, p, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.sum(tgt)
+
+
+def mean_loss(cfg: ModelConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return nll_sum(cfg, p, x, y) / jnp.float32(x.shape[0] * x.shape[1])
+
+
+# --------------------------------------------------------------------------
+# Adam train step (lowered as one HLO program; optimizer state rides along)
+# --------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def train_step(
+    cfg: ModelConfig,
+    params: List[jnp.ndarray],
+    m: List[jnp.ndarray],
+    v: List[jnp.ndarray],
+    t: jnp.ndarray,  # scalar f32 step counter (1-based)
+    lr: jnp.ndarray,  # scalar f32
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+):
+    """One Adam step. Returns (loss, params', m', v')."""
+    pdict = list_to_params(cfg, params)
+    loss, grads = jax.value_and_grad(lambda q: mean_loss(cfg, q, x, y))(pdict)
+    glist = params_to_list(grads)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for w, mi, vi, g in zip(params, m, v, glist):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+        mhat = mi / bc1
+        vhat = vi / bc2
+        w = w - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_p.append(w)
+        new_m.append(mi)
+        new_v.append(vi)
+    return loss, new_p, new_m, new_v

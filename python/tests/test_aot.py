@@ -1,0 +1,73 @@
+"""AOT export integrity: manifest consistency + HLO text sanity.
+
+Uses a tiny export (model 's' would be slow to lower repeatedly in CI loops,
+so these tests lower the small glvq programs and check the manifest produced
+by a scoped aot run into a tmp dir).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, glvq_opt, model
+
+
+def test_to_hlo_text_produces_parseable_header():
+    lowered = jax.jit(lambda a, b: (a @ b,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32), jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:64]
+    assert "ENTRY" in text
+
+
+def test_glvq_step_lowering_has_no_typed_ffi_custom_calls():
+    """xla_extension 0.5.1 rejects API_VERSION_TYPED_FFI custom calls; the
+    graphs must avoid jnp.linalg.* / jax.random."""
+    ts = glvq_opt.tile_specs(8)
+    lowered = jax.jit(glvq_opt.glvq_step).lower(
+        ts["w"], ts["x"], ts["g"], ts["ginv"], ts["mu"], ts["g0"]
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "graph lowered to a custom call"
+
+
+def test_model_loss_lowering_has_no_custom_calls():
+    cfg = model.ModelConfig(name="t", d_model=32, n_layer=1, n_head=2, d_ff=64, seq_len=16, batch_eval=2)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in cfg.param_specs()]
+    P = len(specs)
+
+    def flat_loss(*args):
+        p = model.list_to_params(cfg, list(args[:P]))
+        return (model.nll_sum(cfg, p, args[P], args[P + 1]),)
+
+    xs = jax.ShapeDtypeStruct((2, 16), jnp.int32)
+    text = aot.to_hlo_text(jax.jit(flat_loss).lower(*specs, xs, xs))
+    assert "custom-call" not in text
+
+
+def test_export_glvq_writes_files_and_manifest_entry(tmp_path):
+    entry = aot.export_glvq(8, str(tmp_path))
+    assert entry["d"] == 8 and entry["r"] == 128 and entry["n"] == 128
+    for key, fname in entry["programs"].items():
+        p = os.path.join(str(tmp_path), fname)
+        assert os.path.exists(p), (key, fname)
+        head = open(p).read(64)
+        assert head.startswith("HloModule")
+
+
+def test_manifest_schema_for_model_entry(tmp_path):
+    cfg = model.ModelConfig(name="t", d_model=32, n_layer=1, n_head=2, d_ff=64, seq_len=16, batch_train=2, batch_eval=2)
+    entry = aot.export_model(cfg, str(tmp_path))
+    names = [p["name"] for p in entry["params"]]
+    assert names == sorted(names)
+    assert set(entry["programs"]) == {"train_step", "forward_loss", "logits"}
+    assert entry["config"]["d_model"] == 32
+    # shapes serializable
+    json.dumps(entry)

@@ -1,0 +1,82 @@
+"""L2 glvq_step numerics: gradient correctness + optimization progress."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import glvq_opt
+from compile.kernels import ref
+
+
+def setup(seed=0, r=16, n=32, d=8, ncal=24):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((r, n)).astype(np.float32) * 0.05
+    x = rng.standard_normal((n, ncal)).astype(np.float32)
+    g = (np.eye(d) * 0.02 + rng.standard_normal((d, d)) * 0.002).astype(np.float32)
+    ginv = np.linalg.inv(g).astype(np.float32)
+    mu = np.float32(80.0)
+    return map(jnp.asarray, (w, x, g, ginv, mu, g))
+
+
+def test_step_returns_finite_loss_and_grads():
+    w, x, g, ginv, mu, g0 = setup()
+    loss, dg, dmu = glvq_opt.glvq_step(w, x, g, ginv, mu, g0)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(dg)))
+    assert np.isfinite(float(dmu))
+    assert np.asarray(dg).shape == (8, 8)
+
+
+def test_step_matches_ref_oracle():
+    w, x, g, ginv, mu, g0 = setup(seed=3)
+    loss, dg, dmu = glvq_opt.glvq_step(w, x, g, ginv, mu, g0)
+    loss_r, dg_r, dmu_r = ref.glvq_step(w, x, g, ginv, mu, g0)
+    assert_allclose(float(loss), float(loss_r), rtol=1e-4)
+    assert_allclose(np.asarray(dg), np.asarray(dg_r), rtol=1e-3, atol=1e-3)
+    assert_allclose(float(dmu), float(dmu_r), rtol=1e-3, atol=1e-3)
+
+
+def test_grad_g_matches_finite_difference():
+    w, x, g, ginv, mu, g0 = setup(seed=1, r=8, n=16, d=4, ncal=8)
+    _, dg, _ = glvq_opt.glvq_step(w, x, g, ginv, mu, g0)
+
+    def loss_at(gm):
+        z = ref.babai_round(ref.mu_law(w, mu), ginv)  # Z frozen, as in step
+        w_hat = ref.lattice_decode(z, gm, mu)
+        err = (w - w_hat) @ x
+        return float(jnp.sum(jnp.square(err)) + 0.1 * jnp.sum(jnp.square(gm - g0)))
+
+    eps = 1e-4
+    gnp = np.asarray(g)
+    for (i, j) in [(0, 0), (1, 2), (3, 3)]:
+        gp, gm_ = gnp.copy(), gnp.copy()
+        gp[i, j] += eps
+        gm_[i, j] -= eps
+        fd = (loss_at(jnp.asarray(gp)) - loss_at(jnp.asarray(gm_))) / (2 * eps)
+        assert abs(fd - float(np.asarray(dg)[i, j])) < 2e-2 * max(1.0, abs(fd)), (
+            f"G[{i},{j}]: fd={fd} ad={float(np.asarray(dg)[i, j])}"
+        )
+
+
+def test_gradient_descent_on_g_reduces_loss():
+    w, x, g, ginv, mu, g0 = setup(seed=2)
+    g = np.asarray(g).copy()
+    losses = []
+    lr = 1e-6
+    for _ in range(10):
+        ginv_ = jnp.asarray(np.linalg.inv(g).astype(np.float32))
+        loss, dg, dmu = glvq_opt.glvq_step(w, x, jnp.asarray(g), ginv_, mu, g0)
+        losses.append(float(loss))
+        g = g - lr * np.asarray(dg)
+    assert losses[-1] < losses[0], losses
+
+
+def test_encode_decode_programs_roundtrip():
+    w, x, g, ginv, mu, g0 = setup(seed=4, r=128, n=128, d=8)
+    z = glvq_opt.glvq_encode(w, ginv, mu)
+    what = glvq_opt.glvq_decode(z, g, mu)
+    ref_what = ref.glvq_quantize(w, g, ginv, mu)
+    assert_allclose(np.asarray(what), np.asarray(ref_what), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,139 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes, lattice dims and mu; assert_allclose everywhere.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import babai, compand, decode, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand_group(rng, m, n, scale=0.05):
+    return rng.standard_normal((m, n)).astype(np.float32) * scale
+
+
+def rand_basis(rng, d, scale=0.02):
+    """Well-conditioned generation matrix: identity-dominant perturbation."""
+    g = np.eye(d, dtype=np.float32) * scale + rng.standard_normal((d, d)).astype(np.float32) * scale * 0.1
+    return g
+
+
+@given(
+    m=st.sampled_from([1, 3, 16, 128, 256]),
+    blocks=st.integers(1, 8),
+    d=st.sampled_from([4, 8, 16, 32]),
+    mu=st.floats(10.0, 255.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_mu_law_kernel_matches_ref(m, blocks, d, mu, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_group(rng, m, blocks * d)
+    got = compand.mu_law(jnp.asarray(x), jnp.float32(mu))
+    want = ref.mu_law(jnp.asarray(x), jnp.float32(mu))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    m=st.sampled_from([1, 16, 128]),
+    mu=st.floats(10.0, 255.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_mu_law_roundtrip_identity(m, mu, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, size=(m, 64)).astype(np.float32)
+    y = compand.mu_law(jnp.asarray(x), jnp.float32(mu))
+    back = compand.mu_law_inv(y, jnp.float32(mu))
+    assert_allclose(np.asarray(back), x, rtol=1e-4, atol=1e-5)
+    # companding maps [-1,1] into [-1,1] (monotone, odd)
+    assert np.all(np.abs(np.asarray(y)) <= 1.0 + 1e-5)
+
+
+@given(
+    m=st.sampled_from([1, 4, 128, 384]),
+    blocks=st.integers(1, 6),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_babai_round_matches_ref(m, blocks, d, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_group(rng, m, blocks * d)
+    g = rand_basis(rng, d)
+    ginv = np.linalg.inv(g).astype(np.float32)
+    got = babai.babai_round(jnp.asarray(w), jnp.asarray(ginv))
+    want = ref.babai_round(jnp.asarray(w), jnp.asarray(ginv))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert np.asarray(got).shape == (m, blocks, d)
+
+
+@given(
+    m=st.sampled_from([1, 16, 128]),
+    blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16]),
+    mu=st.floats(10.0, 255.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_fused_encode_matches_ref_chain(m, blocks, d, mu, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_group(rng, m, blocks * d)
+    g = rand_basis(rng, d)
+    ginv = np.linalg.inv(g).astype(np.float32)
+    got = babai.babai_encode(jnp.asarray(w), jnp.asarray(ginv), jnp.float32(mu))
+    want = ref.babai_round(ref.mu_law(jnp.asarray(w), jnp.float32(mu)), jnp.asarray(ginv))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.sampled_from([1, 16, 128]),
+    blocks=st.integers(1, 4),
+    d=st.sampled_from([4, 8, 16, 32]),
+    mu=st.floats(10.0, 255.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_decode_kernel_matches_ref(m, blocks, d, mu, seed):
+    rng = np.random.default_rng(seed)
+    z = rng.integers(-8, 9, size=(m, blocks, d)).astype(np.float32)
+    g = rand_basis(rng, d)
+    got = decode.lattice_decode(jnp.asarray(z), jnp.asarray(g), jnp.float32(mu))
+    want = ref.lattice_decode(jnp.asarray(z), jnp.asarray(g), jnp.float32(mu))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert np.asarray(got).shape == (m, blocks * d)
+
+
+def test_encode_decode_reconstructs_lattice_points_exactly():
+    """Points already on the (companded) lattice survive the round trip."""
+    rng = np.random.default_rng(0)
+    d, m, blocks = 8, 32, 4
+    g = rand_basis(rng, d, scale=0.03)
+    ginv = np.linalg.inv(g).astype(np.float32)
+    mu = jnp.float32(50.0)
+    z0 = rng.integers(-4, 5, size=(m, blocks, d)).astype(np.float32)
+    w = ref.lattice_decode(jnp.asarray(z0), jnp.asarray(g), mu)  # on-lattice
+    z1 = babai.babai_encode(w, jnp.asarray(ginv), mu)
+    assert_allclose(np.asarray(z1), z0, atol=1e-4)
+
+
+def test_quantization_error_bounded_by_babai_bound():
+    """Appendix A sanity: ||y - G z|| <= 0.5 * sum bound for near-orthogonal G."""
+    rng = np.random.default_rng(1)
+    d = 8
+    g = rand_basis(rng, d, scale=0.05)
+    ginv = np.linalg.inv(g).astype(np.float32)
+    y = rng.standard_normal((16, d)).astype(np.float32) * 0.1
+    z = np.round(y @ ginv.T)
+    err = np.linalg.norm(y - z @ g.T, axis=1)
+    # loose bound: ||e|| = ||G delta|| <= sigma_max(G) * 0.5 * sqrt(d)
+    sigma_max = np.linalg.svd(g, compute_uv=False)[0]
+    assert np.all(err <= sigma_max * 0.5 * np.sqrt(d) + 1e-6)

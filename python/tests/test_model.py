@@ -1,0 +1,76 @@
+"""L2 model sanity: shapes, causality, trainability."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+TINY = model.ModelConfig(name="tiny", d_model=32, n_layer=2, n_head=2, d_ff=64, seq_len=16, batch_train=4, batch_eval=2)
+
+
+def test_param_specs_sorted_and_quantizable_flags():
+    specs = TINY.param_specs()
+    names = [n for n, _, _ in specs]
+    assert names == sorted(names)
+    qnames = {n for n, _, q in specs if q}
+    assert "out" in qnames and "emb" not in qnames and "pos" not in qnames
+    for i in range(TINY.n_layer):
+        assert f"{i:02d}.attn.wq" in qnames
+        assert f"{i:02d}.mlp.gain" not in qnames
+
+
+def test_forward_shapes_and_finite():
+    p = model.init_params(TINY, seed=0)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 256, (4, 16)), jnp.int32)
+    logits = model.forward(TINY, p, x)
+    assert logits.shape == (4, 16, 256)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality_future_tokens_do_not_affect_past_logits():
+    p = model.init_params(TINY, seed=1)
+    rng = np.random.default_rng(1)
+    x1 = rng.integers(0, 256, (1, 16)).astype(np.int32)
+    x2 = x1.copy()
+    x2[0, 10:] = rng.integers(0, 256, 6)  # perturb the future
+    l1 = np.asarray(model.forward(TINY, p, jnp.asarray(x1)))
+    l2 = np.asarray(model.forward(TINY, p, jnp.asarray(x2)))
+    np.testing.assert_allclose(l1[0, :10], l2[0, :10], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, 10:], l2[0, 10:])
+
+
+def test_initial_loss_near_uniform():
+    p = model.init_params(TINY, seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (4, 16)), jnp.int32)
+    loss = float(model.mean_loss(TINY, p, x, x))
+    assert abs(loss - np.log(256)) < 0.5
+
+
+def test_train_step_reduces_loss():
+    p = model.params_to_list(model.init_params(TINY, seed=0))
+    m = [jnp.zeros_like(w) for w in p]
+    v = [jnp.zeros_like(w) for w in p]
+    rng = np.random.default_rng(0)
+    # a memorizable batch: fixed tokens
+    x = jnp.asarray(rng.integers(0, 64, (4, 16)), jnp.int32)
+    y = jnp.roll(x, -1, axis=1)
+    step = jax.jit(lambda p_, m_, v_, t: model.train_step(TINY, p_, m_, v_, t, jnp.float32(1e-2), x, y))
+    losses = []
+    for t in range(1, 31):
+        loss, p, m, v = step(p, m, v, jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+
+def test_configs_exist_and_divisible():
+    for cfg in model.CONFIGS.values():
+        assert cfg.d_model % cfg.n_head == 0
+        assert cfg.d_model % 128 == 0 or cfg.d_model < 128 or cfg.d_model % 64 == 0
+        # quantizable matrices must have input dim divisible by lattice dims
+        for _, shape, q in cfg.param_specs():
+            if q:
+                assert shape[0] % 32 == 0, shape

@@ -1,0 +1,102 @@
+//! Bench: native hot-path kernels (L1 analogues on the rust side):
+//! Babai batch encode, mu-law compand, blocked matmul, Hadamard, bit
+//! pack/unpack. These are the §Perf optimization targets.
+//!
+//! Run: `cargo bench --bench bench_kernels`
+
+use glvq::bench_support::Bencher;
+use glvq::compand::MuLaw;
+use glvq::lattice::babai::{babai_batch_into, BabaiEncoder};
+use glvq::lattice::{GenLattice, LatticeEncoder};
+use glvq::linalg::matrix::matmul_into;
+use glvq::linalg::Mat;
+use glvq::quant::pack::{code_range, PackedCodes};
+use glvq::quant::traits::hadamard;
+use glvq::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    println!("# L3 native kernel hot paths");
+
+    // Babai batch encode: 2048 blocks x d
+    for d in [8usize, 16, 32] {
+        let mut g = Mat::eye(d).scale(0.05);
+        for v in g.data.iter_mut() {
+            *v += rng.normal_f32() * 0.002;
+        }
+        let lat = GenLattice::new(g).unwrap();
+        let panel = Mat::random_normal(2048, d, 0.05, &mut rng);
+        let mut z = Mat::zeros(2048, d);
+        let work = (2048 * d * d) as f64; // MACs
+        let r = b.run(&format!("babai_batch/d{d} (2048 blocks)"), work, || {
+            babai_batch_into(&lat, &panel, &mut z);
+            std::hint::black_box(&z);
+        });
+        println!("{}", r.report());
+
+        let single = BabaiEncoder;
+        let y = panel.row(0).to_vec();
+        let r = b.run(&format!("babai_single/d{d}"), (d * d) as f64, || {
+            std::hint::black_box(single.encode(&lat, &y));
+        });
+        println!("{}", r.report());
+    }
+
+    // mu-law forward+inverse on 32k elements
+    let comp = MuLaw::new(87.6);
+    let data = {
+        let mut v = vec![0.0f32; 32768];
+        rng.fill_normal(&mut v, 0.3);
+        v
+    };
+    let mut buf = data.clone();
+    let r = b.run("mu_law_fwd/32k", 32768.0, || {
+        buf.copy_from_slice(&data);
+        comp.forward_slice(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    println!("{}", r.report());
+    let r = b.run("mu_law_inv/32k", 32768.0, || {
+        comp.inverse_slice(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    println!("{}", r.report());
+
+    // blocked matmul 256x256x256
+    let a = Mat::random_normal(256, 256, 1.0, &mut rng);
+    let bm = Mat::random_normal(256, 256, 1.0, &mut rng);
+    let mut c = Mat::zeros(256, 256);
+    let r = b.run("matmul/256^3", (256f64).powi(3), || {
+        matmul_into(&a, &bm, &mut c);
+        std::hint::black_box(&c);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r.report(), 2.0 * r.throughput() / 1e9);
+
+    // Hadamard d=128
+    let x = {
+        let mut v = vec![0.0f32; 128];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+    let r = b.run("hadamard/d128", 128.0 * 7.0, || {
+        std::hint::black_box(hadamard(&x));
+    });
+    println!("{}", r.report());
+
+    // pack/unpack 16384 2-bit codes
+    let (lo, hi) = code_range(2);
+    let codes: Vec<i32> = (0..16384).map(|i| (i % (hi - lo + 1) as usize) as i32 + lo).collect();
+    let packed = PackedCodes::pack(&codes, 2);
+    let mut out = vec![0i32; 16384];
+    let r = b.run("pack/16k @2bit", 16384.0, || {
+        std::hint::black_box(PackedCodes::pack(&codes, 2));
+    });
+    println!("{}", r.report());
+    let r = b.run("unpack/16k @2bit", 16384.0, || {
+        packed.unpack_into(&mut out);
+        std::hint::black_box(&out);
+    });
+    println!("{}", r.report());
+}

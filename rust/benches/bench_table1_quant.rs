@@ -1,0 +1,43 @@
+//! Bench: per-group quantization throughput across methods — the compute
+//! behind Table 1/2/3 (quality tables). Reports groups/s and weights/s for
+//! a canonical (256×128) group at 2 bits.
+//!
+//! Run: `cargo bench --bench bench_table1_quant`
+
+use glvq::baselines;
+use glvq::bench_support::Bencher;
+use glvq::config::GlvqConfig;
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::linalg::Mat;
+use glvq::quant::traits::GroupQuantizer;
+use glvq::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let data: Vec<f32> = (0..256 * 128).map(|_| rng.student_t(5.0) as f32 * 0.02).collect();
+    let w = Mat::from_vec(256, 128, data);
+    let x = Mat::random_normal(128, 192, 1.0, &mut rng);
+    let weights = (w.rows * w.cols) as f64;
+
+    let b = Bencher::default();
+    println!("# Table 1/2/3 work unit: quantize one 256x128 group at 2 bits");
+
+    for method in ["rtn", "omniquant_lite", "gptq", "kmeans_vq", "quip_lite", "tcq"] {
+        let q = baselines::by_name(method).unwrap();
+        let r = b.run(&format!("quantize/{method}"), weights, || {
+            std::hint::black_box(q.quantize(&w, &x, 2));
+        });
+        println!("{}", r.report());
+    }
+
+    for (label, d, iters) in [("glvq-8d", 8usize, 16usize), ("glvq-16d", 16, 16), ("glvq-32d", 32, 16)] {
+        let mut cfg = GlvqConfig::default();
+        cfg.lattice_dim = d;
+        cfg.iters = iters;
+        let q = GlvqGroupQuantizer::new(cfg);
+        let r = b.run(&format!("quantize/{label} ({iters} iters)"), weights, || {
+            std::hint::black_box(q.quantize(&w, &x, 2));
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: streaming dequant-matvec throughput per method — Table 4's TOK/s
+//! and MEM-BW columns at micro scale. One iteration = one "token" through a
+//! quantized (1024×1024) layer (8 column groups of 128).
+//!
+//! Run: `cargo bench --bench bench_table4_decode`
+
+use glvq::baselines;
+use glvq::bench_support::Bencher;
+use glvq::config::GlvqConfig;
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::linalg::Mat;
+use glvq::quant::format::QuantizedTensor;
+use glvq::quant::traits::GroupQuantizer;
+use glvq::util::rng::Rng;
+
+fn build(method: &str, bits: u8) -> QuantizedTensor {
+    let mut rng = Rng::new(2);
+    let wt = Mat::random_normal(1024, 1024, 0.02, &mut rng);
+    let x = Mat::random_normal(128, 64, 1.0, &mut rng);
+    let mut groups = Vec::new();
+    for gi in 0..8 {
+        let panel = wt.slice(0, 1024, gi * 128, (gi + 1) * 128);
+        let qg = if let Some(q) = baselines::by_name(method) {
+            q.quantize(&panel, &x, bits)
+        } else {
+            let mut cfg = GlvqConfig::default();
+            cfg.lattice_dim = if method.contains("32") { 32 } else { 8 };
+            cfg.iters = 4;
+            GlvqGroupQuantizer::new(cfg).quantize(&panel, &x, bits)
+        };
+        groups.push((0usize, gi * 128, qg));
+    }
+    QuantizedTensor { name: method.into(), rows: 1024, cols: 1024, groups }
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("# Table 4 work unit: streaming dequant-matvec of a 1024x1024 layer (2-bit)");
+    let x: Vec<f32> = {
+        let mut rng = Rng::new(3);
+        (0..1024).map(|_| rng.normal_f32()).collect()
+    };
+    for method in ["rtn", "gptq", "kmeans_vq", "quip_lite", "tcq", "glvq-8d", "glvq-32d"] {
+        let qt = build(method, 2);
+        let mut sm = StreamingMatvec::new(16);
+        let mut y = vec![0.0f32; 1024];
+        let mut stats = DecodeStats::default();
+        sm.matvec(&qt, &x, &mut y, &mut stats); // prime + capture stats
+        let bytes = stats.total_bytes() as f64;
+        let r = b.run(&format!("decode-matvec/{method}"), bytes, || {
+            let mut s = DecodeStats::default();
+            sm.matvec(&qt, &x, &mut y, &mut s);
+            std::hint::black_box(&y);
+        });
+        println!("{}   ({:.3} MB/token)", r.report(), bytes / 1e6);
+    }
+}

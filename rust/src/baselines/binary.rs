@@ -1,0 +1,134 @@
+//! Binarization baselines for the sub-2-bit regime (Table 3):
+//!
+//! - `residual: false` → OneBit-lite: ŵ = α_r · sign(w) with the L2-optimal
+//!   per-row scale α_r = mean|w_r| (1 bit/weight).
+//! - `residual: true`  → BiLLM-lite: a second sign pass on the residual,
+//!   ŵ = α_r·s₁ + β_r·s₂ (2 bits/weight) — captures BiLLM's
+//!   residual-binarization mechanism without the salient-column split.
+
+use crate::linalg::Mat;
+use crate::quant::pack::{code_range, PackedCodes};
+use crate::quant::traits::{GroupQuantizer, QuantizedGroup, SideInfo};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BinaryQuantizer {
+    pub residual: bool,
+}
+
+impl GroupQuantizer for BinaryQuantizer {
+    fn quantize(&self, w: &Mat, _x: &Mat, bits: u8) -> QuantizedGroup {
+        let (m, n) = (w.rows, w.cols);
+        let eff_bits: u8 = if self.residual { 2 } else { 1 };
+        let _ = bits; // rate is structural for binarization
+        let (lo, _) = code_range(eff_bits);
+
+        let mut row_scales = vec![0.0f32; m];
+        let mut residual_scales = if self.residual { Some(vec![0.0f32; m]) } else { None };
+        let mut codes = vec![0i32; m * n];
+
+        for r in 0..m {
+            let row = w.row(r);
+            let alpha = row.iter().map(|v| v.abs()).sum::<f32>() / n as f32;
+            row_scales[r] = alpha;
+            if let Some(res_scales) = residual_scales.as_mut() {
+                // residual pass
+                let resid: Vec<f32> = row
+                    .iter()
+                    .map(|&v| v - alpha * if v >= 0.0 { 1.0 } else { -1.0 })
+                    .collect();
+                let beta = resid.iter().map(|v| v.abs()).sum::<f32>() / n as f32;
+                res_scales[r] = beta;
+                for c in 0..n {
+                    let u1 = (row[c] >= 0.0) as u32;
+                    let u2 = (resid[c] >= 0.0) as u32;
+                    codes[r * n + c] = ((u1 | (u2 << 1)) as i32) + lo;
+                }
+            } else {
+                for c in 0..n {
+                    let u1 = (row[c] >= 0.0) as u32;
+                    codes[r * n + c] = (u1 as i32) + lo;
+                }
+            }
+        }
+
+        QuantizedGroup {
+            method: "binary",
+            bits: eff_bits,
+            rows: m,
+            cols: n,
+            codes: PackedCodes::pack(&codes, eff_bits),
+            side: SideInfo::Binary { row_scales, residual_scales },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_bit_reconstruction_is_scaled_signs() {
+        let mut rng = Rng::new(1);
+        let w = Mat::random_normal(4, 16, 0.05, &mut rng);
+        let q = BinaryQuantizer { residual: false }.quantize(&w, &Mat::zeros(16, 1), 1);
+        let w_hat = q.dequantize();
+        for r in 0..4 {
+            let alpha = w.row(r).iter().map(|v| v.abs()).sum::<f32>() / 16.0;
+            for c in 0..16 {
+                let want = alpha * if w.at(r, c) >= 0.0 { 1.0 } else { -1.0 };
+                assert!((w_hat.at(r, c) - want).abs() < 1e-6);
+            }
+        }
+        assert_eq!(q.bits, 1);
+    }
+
+    #[test]
+    fn residual_pass_strictly_reduces_weight_mse() {
+        proptest(20, |rig| {
+            let (m, n) = (rig.usize_in(2, 12), 32);
+            let w = Mat::from_vec(m, n, rig.vec_normal(m * n, 0.05));
+            let zero_x = Mat::zeros(n, 1);
+            let one = BinaryQuantizer { residual: false }.quantize(&w, &zero_x, 1);
+            let two = BinaryQuantizer { residual: true }.quantize(&w, &zero_x, 2);
+            let mse = |q: &QuantizedGroup| -> f64 {
+                let h = q.dequantize();
+                w.data
+                    .iter()
+                    .zip(&h.data)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum()
+            };
+            assert!(mse(&two) <= mse(&one) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn scale_is_l2_optimal_for_signs() {
+        // for fixed signs s, argmin_a ||w - a s||² = mean(w·s) = mean|w|
+        let mut rng = Rng::new(2);
+        let w = Mat::random_normal(1, 64, 0.1, &mut rng);
+        let q = BinaryQuantizer { residual: false }.quantize(&w, &Mat::zeros(64, 1), 1);
+        if let SideInfo::Binary { row_scales, .. } = &q.side {
+            let alpha = row_scales[0];
+            let mse = |a: f32| -> f32 {
+                w.data
+                    .iter()
+                    .map(|&v| {
+                        let s = if v >= 0.0 { 1.0 } else { -1.0 };
+                        (v - a * s) * (v - a * s)
+                    })
+                    .sum()
+            };
+            assert!(mse(alpha) <= mse(alpha * 1.1) + 1e-7);
+            assert!(mse(alpha) <= mse(alpha * 0.9) + 1e-7);
+        } else {
+            panic!("wrong side info");
+        }
+    }
+}

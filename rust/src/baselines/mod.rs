@@ -1,0 +1,61 @@
+//! Baseline quantizers — in-repo stand-ins for the paper's comparison
+//! methods (DESIGN.md §3 maps each to its published counterpart):
+//!
+//! | module            | stands in for          | mechanism kept |
+//! |-------------------|------------------------|----------------|
+//! | [`rtn`]           | vanilla RTN            | per-group affine round-to-nearest |
+//! | [`omniquant_lite`]| OmniQuant              | grid-searched learnable clipping |
+//! | [`gptq`]          | GPTQ (full algorithm)  | Hessian-aware sequential column quant + error propagation |
+//! | [`kmeans_vq`]     | AQLM / SqueezeLLM      | free-form VQ codebook (sensitivity-weighted k-means) |
+//! | [`quip_lite`]     | QuIP#                  | randomized Hadamard incoherence + fixed E8 lattice |
+//! | [`tcq`]           | QTIP                   | trellis-coded quantization with Viterbi encoding |
+//! | [`binary`]        | OneBit / BiLLM         | sign+scale binarization (+ residual pass) |
+//!
+//! All implement [`crate::quant::GroupQuantizer`], so every method runs
+//! through the identical pipeline and differs only in its group fit.
+
+pub mod binary;
+pub mod gptq;
+pub mod kmeans_vq;
+pub mod omniquant_lite;
+pub mod quip_lite;
+pub mod rtn;
+pub mod tcq;
+
+use crate::quant::traits::GroupQuantizer;
+
+/// Resolve a method name (CLI / experiment tables) to a boxed quantizer.
+/// GLVQ variants are constructed separately (they carry a config).
+pub fn by_name(name: &str) -> Option<Box<dyn GroupQuantizer + Sync + Send>> {
+    match name {
+        "rtn" => Some(Box::new(rtn::RtnQuantizer)),
+        "omniquant_lite" | "omniq" => Some(Box::new(omniquant_lite::OmniQuantLite::default())),
+        "gptq" => Some(Box::new(gptq::GptqQuantizer::default())),
+        "kmeans_vq" | "aqlm_lite" => Some(Box::new(kmeans_vq::KMeansVq::default())),
+        "quip_lite" | "quip" => Some(Box::new(quip_lite::QuipLite::default())),
+        "tcq" | "qtip_lite" => Some(Box::new(tcq::TcqQuantizer::default())),
+        "binary" | "onebit_lite" => Some(Box::new(binary::BinaryQuantizer { residual: false })),
+        "binary_residual" | "billm_lite" => Some(Box::new(binary::BinaryQuantizer { residual: true })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_resolves_known_methods() {
+        for m in [
+            "rtn",
+            "omniquant_lite",
+            "gptq",
+            "kmeans_vq",
+            "quip_lite",
+            "tcq",
+            "binary",
+            "binary_residual",
+        ] {
+            assert!(super::by_name(m).is_some(), "{m}");
+        }
+        assert!(super::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,90 @@
+//! OmniQuant-lite: uniform quantization with *learned* clipping, realized as
+//! a calibration-aware grid search over the clip ratio (the closed-form
+//! equivalent of OmniQuant's learnable clipping parameters for the
+//! weight-only case). The best ratio minimizes the paper's reconstruction
+//! objective ||W X − Ŵ X||² rather than plain weight MSE.
+
+use super::rtn::rtn_with_range;
+use crate::linalg::Mat;
+use crate::quant::traits::{recon_error, GroupQuantizer, QuantizedGroup};
+
+#[derive(Clone, Debug)]
+pub struct OmniQuantLite {
+    /// candidate clip ratios (fraction of |max| kept)
+    pub ratios: Vec<f32>,
+}
+
+impl Default for OmniQuantLite {
+    fn default() -> Self {
+        OmniQuantLite {
+            ratios: vec![1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6, 0.5],
+        }
+    }
+}
+
+impl GroupQuantizer for OmniQuantLite {
+    fn quantize(&self, w: &Mat, x: &Mat, bits: u8) -> QuantizedGroup {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &w.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let mut best: Option<(f64, QuantizedGroup)> = None;
+        for &r in &self.ratios {
+            let mut q = rtn_with_range(w, bits, mn * r, mx * r);
+            q.method = "omniquant_lite";
+            let err = recon_error(w, &q.dequantize(), x);
+            if best.as_ref().map_or(true, |(be, _)| err < *be) {
+                best = Some((err, q));
+            }
+        }
+        best.expect("at least one ratio").1
+    }
+
+    fn name(&self) -> &'static str {
+        "omniquant_lite"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::quant::traits::recon_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn never_worse_than_rtn() {
+        let mut rng = Rng::new(3);
+        for seed in 0..5u64 {
+            let mut r2 = Rng::new(seed);
+            // heavy-tailed weights where clipping helps
+            let data: Vec<f32> = (0..512).map(|_| r2.student_t(3.0) as f32 * 0.02).collect();
+            let w = Mat::from_vec(16, 32, data);
+            let x = Mat::random_normal(32, 32, 1.0, &mut rng);
+            let e_rtn = recon_error(&w, &RtnQuantizer.quantize(&w, &x, 2).dequantize(), &x);
+            let e_omni = recon_error(
+                &w,
+                &OmniQuantLite::default().quantize(&w, &x, 2).dequantize(),
+                &x,
+            );
+            assert!(e_omni <= e_rtn + 1e-9, "omni {e_omni} vs rtn {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn clipping_strictly_helps_with_outliers() {
+        let mut rng = Rng::new(4);
+        let mut w = Mat::random_normal(16, 32, 0.01, &mut rng);
+        w.data[5] = 1.0; // single massive outlier
+        let x = Mat::random_normal(32, 32, 1.0, &mut rng);
+        let e_rtn = recon_error(&w, &RtnQuantizer.quantize(&w, &x, 2).dequantize(), &x);
+        let e_omni = recon_error(
+            &w,
+            &OmniQuantLite::default().quantize(&w, &x, 2).dequantize(),
+            &x,
+        );
+        assert!(e_omni < e_rtn * 0.9, "omni {e_omni} vs rtn {e_rtn}");
+    }
+}

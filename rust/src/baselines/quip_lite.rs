@@ -1,0 +1,141 @@
+//! QuIP#-lite: randomized Hadamard incoherence processing + a *fixed* E8
+//! lattice codebook — the structured-but-not-learned lattice VQ the paper
+//! positions GLVQ against ("QuIP# is constrained by the use of fixed
+//! lattice designs across the entire model").
+//!
+//! Encode per 8-block: r = H(sign ⊙ w); p = nearest-E8(r / s);
+//! store z = 2p (always integer since E8 ⊂ ½Z⁸ with parity); decode
+//! reverses: ŵ = sign ⊙ H⁻¹(s·z/2). Clamping z into the b-bit range can
+//! leave E8 (tail blocks) — the same saturation every fixed-codebook method
+//! suffers, and part of why the learned lattice wins at 2 bits.
+
+use crate::lattice::fixed::nearest_e8;
+use crate::linalg::Mat;
+use crate::quant::pack::{clamp_code, PackedCodes};
+use crate::quant::traits::{hadamard, sign_vector, GroupQuantizer, QuantizedGroup, SideInfo};
+
+#[derive(Clone, Copy, Debug)]
+pub struct QuipLite {
+    pub sign_seed: u64,
+}
+
+impl Default for QuipLite {
+    fn default() -> Self {
+        QuipLite { sign_seed: 0xC0DE }
+    }
+}
+
+const D: usize = 8;
+
+impl GroupQuantizer for QuipLite {
+    fn quantize(&self, w: &Mat, _x: &Mat, bits: u8) -> QuantizedGroup {
+        let (m, n) = (w.rows, w.cols);
+        assert_eq!(n % D, 0, "group width must be divisible by 8 for E8");
+        let nblocks = m * n / D;
+        let signs = sign_vector(self.sign_seed, D);
+
+        // rotate all blocks, collect statistics for the scale
+        let mut rotated = vec![0.0f32; m * n];
+        for b in 0..nblocks {
+            let mut block = [0.0f32; D];
+            for i in 0..D {
+                block[i] = w.data[b * D + i] * signs[i];
+            }
+            let r = hadamard(&block);
+            rotated[b * D..(b + 1) * D].copy_from_slice(&r);
+        }
+        let std = crate::linalg::stats::std_dev(&rotated) as f32;
+        let code_span = (1i32 << (bits - 1)) as f32;
+        // z = 2p ≈ 2r/s: grid-search the scale around std(z) ≈ code_span/2.5
+        // minimizing rotated-domain MSE (the rotation is orthonormal, so this
+        // equals the weight-domain MSE).
+        let base = (5.0 * std / code_span).max(1e-8);
+        let mut best: Option<(f64, f32, Vec<i32>)> = None;
+        for mult in [0.6f32, 0.8, 1.0, 1.3, 1.7, 2.2] {
+            let s = base * mult;
+            let mut codes = vec![0i32; m * n];
+            let mut err = 0.0f64;
+            for b in 0..nblocks {
+                let mut y = [0.0f32; D];
+                for i in 0..D {
+                    y[i] = rotated[b * D + i] / s;
+                }
+                let p = nearest_e8(&y);
+                for i in 0..D {
+                    let z = clamp_code(2.0 * p[i], bits);
+                    codes[b * D + i] = z;
+                    let rec = s * z as f32 * 0.5;
+                    err += ((rotated[b * D + i] - rec) as f64).powi(2);
+                }
+            }
+            if best.as_ref().map_or(true, |(be, _, _)| err < *be) {
+                best = Some((err, s, codes));
+            }
+        }
+        let (_, s, codes) = best.expect("non-empty grid");
+
+        QuantizedGroup {
+            method: "quip_lite",
+            bits,
+            rows: m,
+            cols: n,
+            codes: PackedCodes::pack(&codes, bits),
+            side: SideInfo::RotatedLattice { d: D, scale: s, sign_seed: self.sign_seed },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "quip_lite"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::quant::traits::recon_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_reasonable_at_4_bits() {
+        let mut rng = Rng::new(1);
+        let w = Mat::random_normal(16, 32, 0.05, &mut rng);
+        let x = Mat::random_normal(32, 16, 1.0, &mut rng);
+        let q = QuipLite::default().quantize(&w, &x, 4);
+        let w_hat = q.dequantize();
+        let rel = w.frob_dist(&w_hat) / w.frob_norm();
+        assert!(rel < 0.25, "relative error {rel}");
+        let _ = recon_error(&w, &w_hat, &x);
+    }
+
+    #[test]
+    fn beats_rtn_on_gaussian_weights_at_2_bits() {
+        // E8 packing gain should show on near-Gaussian blocks
+        let mut rng = Rng::new(2);
+        let mut wins = 0;
+        for seed in 0..6u64 {
+            let mut r = Rng::new(seed + 10);
+            let w = Mat::random_normal(32, 64, 0.05, &mut r);
+            let x = Mat::random_normal(64, 32, 1.0, &mut rng);
+            let e_q = recon_error(&w, &QuipLite::default().quantize(&w, &x, 2).dequantize(), &x);
+            let e_r = recon_error(&w, &RtnQuantizer.quantize(&w, &x, 2).dequantize(), &x);
+            if e_q < e_r {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "quip should usually beat rtn at 2 bits: {wins}/6");
+    }
+
+    #[test]
+    fn decode_uses_recorded_seed() {
+        let mut rng = Rng::new(3);
+        let w = Mat::random_normal(8, 16, 0.05, &mut rng);
+        let x = Mat::zeros(16, 4);
+        let a = QuipLite { sign_seed: 1 }.quantize(&w, &x, 3);
+        let b = QuipLite { sign_seed: 2 }.quantize(&w, &x, 3);
+        // different rotations → different codes, but both must decode finitely
+        assert!(a.dequantize().data.iter().all(|v| v.is_finite()));
+        assert!(b.dequantize().data.iter().all(|v| v.is_finite()));
+        assert_ne!(a.codes.data, b.codes.data);
+    }
+}

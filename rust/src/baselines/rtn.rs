@@ -1,0 +1,110 @@
+//! Round-to-nearest (RTN) uniform quantization with a per-group affine
+//! grid — the universal PTQ floor every paper compares against.
+
+use crate::linalg::Mat;
+use crate::quant::pack::{code_range, PackedCodes};
+use crate::quant::traits::{GroupQuantizer, QuantizedGroup, SideInfo};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RtnQuantizer;
+
+/// Quantize with an explicit clip range [cmin, cmax] (shared with the
+/// OmniQuant-lite grid search).
+pub fn rtn_with_range(w: &Mat, bits: u8, cmin: f32, cmax: f32) -> QuantizedGroup {
+    let (lo, hi) = code_range(bits);
+    let levels = (hi - lo) as f32;
+    let span = (cmax - cmin).max(1e-12);
+    let scale = span / levels;
+    let zero = cmin - lo as f32 * scale;
+    let codes: Vec<i32> = w
+        .data
+        .iter()
+        .map(|&v| {
+            let c = ((v - zero) / scale).round();
+            (c as i64).clamp(lo as i64, hi as i64) as i32
+        })
+        .collect();
+    QuantizedGroup {
+        method: "rtn",
+        bits,
+        rows: w.rows,
+        cols: w.cols,
+        codes: PackedCodes::pack(&codes, bits),
+        side: SideInfo::Uniform { scale, zero },
+    }
+}
+
+impl GroupQuantizer for RtnQuantizer {
+    fn quantize(&self, w: &Mat, _x: &Mat, bits: u8) -> QuantizedGroup {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &w.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        rtn_with_range(w, bits, mn, mx)
+    }
+
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::traits::recon_error;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        proptest(30, |rig| {
+            let bits = rig.usize_in(2, 8) as u8;
+            let (m, n) = (rig.usize_in(1, 20), rig.usize_in(1, 20));
+            let w = Mat::from_vec(m, n, rig.vec_normal(m * n, 0.1));
+            let q = RtnQuantizer.quantize(&w, &Mat::zeros(n, 1), bits);
+            let w_hat = q.dequantize();
+            let span = w.data.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &v| {
+                (a.min(v), b.max(v))
+            });
+            let step = (span.1 - span.0) / (((1usize << bits) - 1) as f32);
+            for (a, b) in w.data.iter().zip(&w_hat.data) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-5, "bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let mut rng = Rng::new(1);
+        let w = Mat::random_normal(16, 16, 0.05, &mut rng);
+        let x = Mat::random_normal(16, 8, 1.0, &mut rng);
+        let q = RtnQuantizer.quantize(&w, &x, 8);
+        let e = recon_error(&w, &q.dequantize(), &x);
+        assert!(e < 1e-3, "e={e}");
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let mut rng = Rng::new(2);
+        let w = Mat::random_normal(32, 32, 0.05, &mut rng);
+        let x = Mat::random_normal(32, 16, 1.0, &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [1u8, 2, 3, 4, 6] {
+            let e = recon_error(&w, &RtnQuantizer.quantize(&w, &x, bits).dequantize(), &x);
+            assert!(e <= last * 1.05, "bits={bits}: {e} vs {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let w = Mat::from_vec(2, 2, vec![0.25; 4]);
+        let q = RtnQuantizer.quantize(&w, &Mat::zeros(2, 1), 2);
+        let w_hat = q.dequantize();
+        for v in &w_hat.data {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+}

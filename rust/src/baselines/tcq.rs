@@ -1,0 +1,233 @@
+//! Trellis-coded quantization (QTIP-lite): a stateful scalar quantizer
+//! where the reachable codebook subset depends on a 4-state trellis — the
+//! mechanism that lets QTIP decouple codebook size from bitrate.
+//!
+//! Codebook: 2^(b+1) Lloyd-Max scalar levels partitioned into 4 Ungerboeck
+//! subsets (level i → subset i mod 4). From state s, input bit u selects
+//! subset ((s&1)<<1)|u and the remaining b−1 bits select the level within
+//! it; state' = ((s<<1)|u) & 3. Encoding runs exact Viterbi over the
+//! group's weights (m·n samples), so each weight costs b bits but chooses
+//! among 2^(b+1) effective levels.
+
+use crate::linalg::stats::quantile;
+use crate::linalg::Mat;
+use crate::quant::pack::{code_range, PackedCodes};
+use crate::quant::traits::{GroupQuantizer, QuantizedGroup, SideInfo};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TcqQuantizer {
+    pub lloyd_iters: usize,
+}
+
+impl Default for TcqQuantizer {
+    fn default() -> Self {
+        TcqQuantizer { lloyd_iters: 8 }
+    }
+}
+
+const STATES: usize = 4;
+
+/// Lloyd-Max scalar levels initialized at quantiles.
+fn lloyd_levels(data: &[f32], k: usize, iters: usize) -> Vec<f32> {
+    let mut levels: Vec<f32> = (0..k)
+        .map(|i| quantile(data, (i as f64 + 0.5) / k as f64))
+        .collect();
+    for _ in 0..iters {
+        let mut acc = vec![0.0f64; k];
+        let mut cnt = vec![0usize; k];
+        for &v in data {
+            let mut best = 0usize;
+            let mut bd = f32::INFINITY;
+            for (i, &l) in levels.iter().enumerate() {
+                let d = (v - l).abs();
+                if d < bd {
+                    bd = d;
+                    best = i;
+                }
+            }
+            acc[best] += v as f64;
+            cnt[best] += 1;
+        }
+        for i in 0..k {
+            if cnt[i] > 0 {
+                levels[i] = (acc[i] / cnt[i] as f64) as f32;
+            }
+        }
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    levels
+}
+
+#[inline]
+fn subset_of(state: usize, u: usize) -> usize {
+    ((state & 1) << 1) | u
+}
+
+#[inline]
+fn next_state(state: usize, u: usize) -> usize {
+    ((state << 1) | u) & (STATES - 1)
+}
+
+impl GroupQuantizer for TcqQuantizer {
+    fn quantize(&self, w: &Mat, _x: &Mat, bits: u8) -> QuantizedGroup {
+        assert!(bits >= 1 && bits <= 7);
+        let (m, n) = (w.rows, w.cols);
+        let nsamp = m * n;
+        let k = 1usize << (bits + 1); // total levels
+        let per = k / 4; // levels per subset (= 2^{b-1})
+        let sorted_levels = lloyd_levels(&w.data, k, self.lloyd_iters);
+        // levels laid out [subset][j] — subset of sorted index i is i % 4
+        let mut levels = vec![0.0f32; k];
+        let mut counts = [0usize; 4];
+        for (i, &l) in sorted_levels.iter().enumerate() {
+            let sub = i % 4;
+            levels[sub * per + counts[sub]] = l;
+            counts[sub] += 1;
+        }
+
+        // exact Viterbi over the sample sequence
+        let branches = 1usize << bits; // u (1 bit) × level-in-subset (b-1 bits)
+        let mut cost = [0.0f64; STATES];
+        let mut alive = [true, false, false, false]; // start in state 0
+        // backpointers: (prev_state, code) per (t, state)
+        let mut bp = vec![[(0u8, 0u8); STATES]; nsamp];
+        for t in 0..nsamp {
+            let v = w.data[t];
+            let mut ncost = [f64::INFINITY; STATES];
+            let mut nbp = [(0u8, 0u8); STATES];
+            for s in 0..STATES {
+                if !alive[s] || !cost[s].is_finite() {
+                    continue;
+                }
+                for code in 0..branches {
+                    let u = code & 1;
+                    let j = code >> 1;
+                    if j >= per {
+                        continue;
+                    }
+                    let lvl = levels[subset_of(s, u) * per + j];
+                    let c = cost[s] + ((v - lvl) as f64).powi(2);
+                    let ns = next_state(s, u);
+                    if c < ncost[ns] {
+                        ncost[ns] = c;
+                        nbp[ns] = (s as u8, code as u8);
+                    }
+                }
+            }
+            cost = ncost;
+            bp[t] = nbp;
+            alive = [true; STATES];
+        }
+
+        // traceback from the cheapest final state
+        let mut state = (0..STATES)
+            .min_by(|&a, &b| cost[a].partial_cmp(&cost[b]).unwrap())
+            .unwrap();
+        let mut codes_rev = Vec::with_capacity(nsamp);
+        for t in (0..nsamp).rev() {
+            let (ps, code) = bp[t][state];
+            codes_rev.push(code as i32);
+            state = ps as usize;
+        }
+        codes_rev.reverse();
+        let (lo, _) = code_range(bits);
+        let codes: Vec<i32> = codes_rev.into_iter().map(|c| c + lo).collect();
+
+        QuantizedGroup {
+            method: "tcq",
+            bits,
+            rows: m,
+            cols: n,
+            codes: PackedCodes::pack(&codes, bits),
+            side: SideInfo::Trellis { levels, states: STATES },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "tcq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::quant::traits::recon_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decode_is_consistent_with_viterbi_path() {
+        // quantize, decode, and verify the decoded values are all codebook
+        // levels reachable by the state machine
+        let mut rng = Rng::new(1);
+        let w = Mat::random_normal(8, 16, 0.05, &mut rng);
+        let q = TcqQuantizer::default().quantize(&w, &Mat::zeros(16, 1), 2);
+        let w_hat = q.dequantize();
+        if let SideInfo::Trellis { levels, .. } = &q.side {
+            for v in &w_hat.data {
+                assert!(levels.iter().any(|l| (l - v).abs() < 1e-6), "{v} not a level");
+            }
+        }
+    }
+
+    #[test]
+    fn tcq_beats_rtn_at_same_rate() {
+        // 2^(b+1) effective levels at b bits should beat 2^b uniform levels
+        let mut rng = Rng::new(2);
+        let mut wins = 0;
+        for seed in 0..6u64 {
+            let mut r = Rng::new(seed + 20);
+            let data: Vec<f32> = (0..24 * 32).map(|_| r.student_t(5.0) as f32 * 0.03).collect();
+            let w = Mat::from_vec(24, 32, data);
+            let x = Mat::random_normal(32, 24, 1.0, &mut rng);
+            let e_t = recon_error(&w, &TcqQuantizer::default().quantize(&w, &x, 2).dequantize(), &x);
+            let e_r = recon_error(&w, &RtnQuantizer.quantize(&w, &x, 2).dequantize(), &x);
+            if e_t < e_r {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 5, "tcq should beat rtn: {wins}/6");
+    }
+
+    #[test]
+    fn weight_mse_not_much_worse_than_unconstrained_lloyd() {
+        // the trellis constraint costs something but must stay close to the
+        // unconstrained scalar quantizer with the same level count
+        let mut rng = Rng::new(3);
+        let w = Mat::random_normal(16, 16, 0.05, &mut rng);
+        let q = TcqQuantizer::default().quantize(&w, &Mat::zeros(16, 1), 3);
+        let w_hat = q.dequantize();
+        let mse_tcq: f64 = w
+            .data
+            .iter()
+            .zip(&w_hat.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.data.len() as f64;
+        // unconstrained Lloyd at 2^{b+1} levels
+        let levels = lloyd_levels(&w.data, 16, 8);
+        let mse_free: f64 = w
+            .data
+            .iter()
+            .map(|&v| {
+                levels
+                    .iter()
+                    .map(|&l| ((v - l) as f64).powi(2))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum::<f64>()
+            / w.data.len() as f64;
+        assert!(mse_tcq <= mse_free * 4.0 + 1e-12, "tcq {mse_tcq} vs free {mse_free}");
+    }
+
+    #[test]
+    fn all_bit_widths_roundtrip() {
+        let mut rng = Rng::new(4);
+        let w = Mat::random_normal(4, 8, 0.05, &mut rng);
+        for bits in [1u8, 2, 3, 4] {
+            let q = TcqQuantizer::default().quantize(&w, &Mat::zeros(8, 1), bits);
+            assert!(q.dequantize().data.iter().all(|v| v.is_finite()));
+            assert_eq!(q.payload_bits(), 4 * 8 * bits as usize);
+        }
+    }
+}

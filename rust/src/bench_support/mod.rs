@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set):
+//! warmup + timed iterations with mean / p50 / p95 and a throughput helper.
+//! Used by `benches/*.rs` (cargo bench targets with `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// optional work units per iteration (bytes, MACs, tokens…)
+    pub work_per_iter: f64,
+}
+
+impl BenchResult {
+    /// work units per second at the mean time.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            self.work_per_iter * 1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let tp = if self.work_per_iter > 0.0 {
+            format!("  {:>10.3} Mwork/s", self.throughput() / 1e6)
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>10.1} µs/iter  p50 {:>8.1}  p95 {:>8.1}{}",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p95_ns / 1e3,
+            tp
+        )
+    }
+}
+
+/// Benchmark runner: auto-calibrates iteration count to the time budget.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub budget_ms: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 10, budget_ms: 500.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher { warmup_iters: 1, min_iters: 3, budget_ms: 80.0 }
+    }
+
+    /// Time `f`, returning per-iteration statistics. `work_per_iter` feeds
+    /// the throughput column (0 to omit).
+    pub fn run<F: FnMut()>(&self, name: &str, work_per_iter: f64, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // estimate single-iteration cost
+        let probe = Instant::now();
+        f();
+        let est_ns = probe.elapsed().as_nanos().max(1) as f64;
+        let iters = ((self.budget_ms * 1e6 / est_ns) as usize).clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: p(0.5),
+            p95_ns: p(0.95),
+            work_per_iter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, budget_ms: 30.0 };
+        let r = b.run("sleep1ms", 0.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
+        assert!(r.mean_ns > 0.8e6, "mean {}", r.mean_ns);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            work_per_iter: 1000.0,
+        };
+        assert!((r.throughput() - 1000.0).abs() < 1e-9);
+        assert!(r.report().contains("x"));
+    }
+}

@@ -1,0 +1,163 @@
+//! μ-law companding (paper §3.3, Eq. 9): group-specific learnable
+//! non-linearity that uniformizes heavy-tailed weight distributions before
+//! lattice quantization.
+//!
+//!   F_μ(x)   = sgn(x) · ln(1 + μ|x|) / ln(1 + μ)
+//!   F_μ⁻¹(y) = sgn(y) · ((1 + μ)^|y| − 1) / μ
+//!
+//! μ is clamped to [10, 255] (paper) and initialized from the group's
+//! kurtosis: μ⁰ = 100 · tanh(κ/10) (Eq. 12), floored at MU_MIN.
+
+use crate::linalg::stats::kurtosis;
+
+pub const MU_MIN: f32 = 10.0;
+pub const MU_MAX: f32 = 255.0;
+
+/// A (possibly learnable) μ-law compander.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MuLaw {
+    pub mu: f32,
+}
+
+impl MuLaw {
+    pub fn new(mu: f32) -> MuLaw {
+        MuLaw { mu: mu.clamp(MU_MIN, MU_MAX) }
+    }
+
+    /// Identity-like compander used by "no companding" ablations: μ at the
+    /// minimum of the legal band is the flattest curve we can express.
+    pub fn weakest() -> MuLaw {
+        MuLaw { mu: MU_MIN }
+    }
+
+    /// Paper Eq. 12: kurtosis-driven init, projected to [MU_MIN, MU_MAX].
+    pub fn init_from_kurtosis(weights: &[f32]) -> MuLaw {
+        let k = kurtosis(weights) as f32;
+        MuLaw::new(100.0 * (k / 10.0).tanh())
+    }
+
+    #[inline]
+    pub fn forward(&self, x: f32) -> f32 {
+        let denom = (1.0 + self.mu).ln();
+        x.signum() * (1.0 + self.mu * x.abs()).ln() / denom
+    }
+
+    #[inline]
+    pub fn inverse(&self, y: f32) -> f32 {
+        let log1p_mu = (1.0 + self.mu).ln();
+        y.signum() * ((y.abs() * log1p_mu).exp() - 1.0) / self.mu
+    }
+
+    /// dF⁻¹/dμ and dF⁻¹/dy are what the gradient path needs; the native
+    /// optimizer uses the analytic dμ derivative of the full chain instead
+    /// (see glvq/optimizer.rs), so here we expose only the forwards.
+    pub fn forward_slice(&self, xs: &mut [f32]) {
+        let denom = (1.0 + self.mu).ln();
+        for x in xs.iter_mut() {
+            *x = x.signum() * (1.0 + self.mu * x.abs()).ln() / denom;
+        }
+    }
+
+    pub fn inverse_slice(&self, ys: &mut [f32]) {
+        let log1p_mu = (1.0 + self.mu).ln();
+        for y in ys.iter_mut() {
+            *y = y.signum() * ((y.abs() * log1p_mu).exp() - 1.0) / self.mu;
+        }
+    }
+
+    /// Clamp μ back into the legal band after a gradient update (paper:
+    /// "After each update we project μ onto the practical range [10, 255]").
+    pub fn project(&mut self) {
+        self.mu = self.mu.clamp(MU_MIN, MU_MAX);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_identity_within_unit_interval() {
+        proptest(50, |rig| {
+            let mu = rig.f32_in(MU_MIN, MU_MAX);
+            let c = MuLaw::new(mu);
+            let x = rig.f32_in(-1.0, 1.0);
+            let back = c.inverse(c.forward(x));
+            assert!((back - x).abs() < 1e-5 * (1.0 + x.abs()), "x={x} mu={mu} back={back}");
+        });
+    }
+
+    #[test]
+    fn forward_is_odd_and_monotone() {
+        let c = MuLaw::new(100.0);
+        let mut prev = f32::NEG_INFINITY;
+        for i in -100..=100 {
+            let x = i as f32 / 100.0;
+            let y = c.forward(x);
+            assert!(y >= prev, "not monotone at {x}");
+            prev = y;
+            assert!((c.forward(-x) + y).abs() < 1e-6, "not odd at {x}");
+        }
+    }
+
+    #[test]
+    fn maps_unit_interval_onto_itself() {
+        let c = MuLaw::new(255.0);
+        assert!((c.forward(1.0) - 1.0).abs() < 1e-6);
+        assert!((c.forward(-1.0) + 1.0).abs() < 1e-6);
+        assert_eq!(c.forward(0.0), 0.0);
+    }
+
+    #[test]
+    fn expands_resolution_near_zero() {
+        // |F'(x)| near 0 must exceed 1 (finer resolution for small weights)
+        let c = MuLaw::new(100.0);
+        let eps = 1e-4;
+        let slope0 = (c.forward(eps) - c.forward(0.0)) / eps;
+        let slope1 = (c.forward(1.0) - c.forward(1.0 - eps)) / eps;
+        assert!(slope0 > 5.0, "slope near 0 = {slope0}");
+        assert!(slope1 < 0.5, "slope near 1 = {slope1}");
+    }
+
+    #[test]
+    fn kurtosis_init_monotone_in_tail_weight() {
+        let mut rng = Rng::new(1);
+        let normal: Vec<f32> = (0..30_000).map(|_| rng.normal_f32() * 0.02).collect();
+        let heavy: Vec<f32> = (0..30_000).map(|_| rng.student_t(3.0) as f32 * 0.02).collect();
+        let mn = MuLaw::init_from_kurtosis(&normal).mu;
+        let mh = MuLaw::init_from_kurtosis(&heavy).mu;
+        assert!(mh > mn, "heavy {mh} vs normal {mn}");
+        assert!((MU_MIN..=MU_MAX).contains(&mn));
+        assert!((MU_MIN..=MU_MAX).contains(&mh));
+    }
+
+    #[test]
+    fn clamp_projects_out_of_band_values() {
+        assert_eq!(MuLaw::new(1.0).mu, MU_MIN);
+        assert_eq!(MuLaw::new(1e6).mu, MU_MAX);
+        let mut c = MuLaw { mu: 500.0 };
+        c.project();
+        assert_eq!(c.mu, MU_MAX);
+    }
+
+    #[test]
+    fn slice_ops_match_scalar_ops() {
+        proptest(20, |rig| {
+            let mu = rig.f32_in(MU_MIN, MU_MAX);
+            let c = MuLaw::new(mu);
+            let xs = rig.vec_f32(64, -1.0, 1.0);
+            let mut fwd = xs.clone();
+            c.forward_slice(&mut fwd);
+            for (x, f) in xs.iter().zip(&fwd) {
+                assert!((c.forward(*x) - f).abs() < 1e-7);
+            }
+            let mut inv = fwd.clone();
+            c.inverse_slice(&mut inv);
+            for (x, i) in xs.iter().zip(&inv) {
+                assert!((x - i).abs() < 1e-5);
+            }
+        });
+    }
+}

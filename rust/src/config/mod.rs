@@ -1,0 +1,256 @@
+//! Typed run configuration: quantization settings, training settings, and
+//! JSON (de)serialization with validation. Presets cover the paper's main
+//! configurations (GLVQ-8D / GLVQ-16D / GLVQ-32D at 2/3/4 bits).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Lattice-index assignment algorithm (paper default: Babai; GCD is the
+/// Tables-12/13 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assignment {
+    Babai,
+    Gcd,
+}
+
+impl Assignment {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Assignment::Babai => "babai",
+            Assignment::Gcd => "gcd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Assignment> {
+        match s {
+            "babai" => Ok(Assignment::Babai),
+            "gcd" => Ok(Assignment::Gcd),
+            _ => bail!("unknown assignment '{s}' (babai|gcd)"),
+        }
+    }
+}
+
+/// Full GLVQ quantization configuration (paper §3 + ablation switches).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlvqConfig {
+    /// lattice dimension d ∈ {8, 16, 32}
+    pub lattice_dim: usize,
+    /// target average bits per weight (can be fractional via SDBA mixing)
+    pub target_bits: f64,
+    /// columns per group (paper default 128; Table 9/10 sweeps this)
+    pub group_size: usize,
+    /// salience-determined bit allocation on/off (Table 6 ablation)
+    pub bit_allocation: bool,
+    /// learn per-group lattice (off = shared fixed lattice, Table 7)
+    pub adaptive_lattice: bool,
+    /// learn per-group μ (off = fixed global μ, Table 8)
+    pub adaptive_companding: bool,
+    /// index assignment (Babai vs GCD, Tables 12/13)
+    pub assignment: Assignment,
+    /// alternating-optimization iterations per group
+    pub iters: usize,
+    /// Adam learning rate for G, *relative* to the basis magnitude
+    pub lr_g: f32,
+    /// Adam learning rate for μ
+    pub lr_mu: f32,
+    /// Frobenius regularization λ (paper: 0.1)
+    pub lambda: f32,
+    /// relative-improvement stop threshold ε
+    pub epsilon: f32,
+    /// spectral band for G, relative to the initial σ_max:
+    /// σ(G) kept within [σ_min·σ_max(G₀), σ_max·σ_max(G₀)]
+    pub sigma_min: f32,
+    pub sigma_max: f32,
+    /// calibration vectors per group
+    pub calib_n: usize,
+    /// run group optimization through the PJRT glvq_step artifacts instead
+    /// of the native optimizer (canonical shapes only)
+    pub use_pjrt: bool,
+    pub seed: u64,
+}
+
+impl Default for GlvqConfig {
+    fn default() -> Self {
+        GlvqConfig {
+            lattice_dim: 16,
+            target_bits: 2.0,
+            group_size: 128,
+            bit_allocation: true,
+            adaptive_lattice: true,
+            adaptive_companding: true,
+            assignment: Assignment::Babai,
+            iters: 24,
+            lr_g: 0.1,
+            lr_mu: 2.0,
+            lambda: 0.1,
+            epsilon: 1e-4,
+            sigma_min: 0.02,
+            sigma_max: 4.0,
+            calib_n: 256,
+            use_pjrt: false,
+            seed: 0,
+        }
+    }
+}
+
+impl GlvqConfig {
+    /// Paper variants: "glvq-8d", "glvq-16d", "glvq-32d", and the uniform
+    /// (no bit allocation) "-u" versions from Table 4.
+    pub fn preset(name: &str) -> Result<GlvqConfig> {
+        let mut c = GlvqConfig::default();
+        match name {
+            "glvq-8d" => c.lattice_dim = 8,
+            "glvq-16d" => c.lattice_dim = 16,
+            "glvq-32d" => c.lattice_dim = 32,
+            "glvq-8d-u" => {
+                c.lattice_dim = 8;
+                c.bit_allocation = false;
+            }
+            "glvq-32d-u" => {
+                c.lattice_dim = 32;
+                c.bit_allocation = false;
+            }
+            _ => bail!("unknown preset '{name}'"),
+        }
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.lattice_dim.is_power_of_two() || !(2..=64).contains(&self.lattice_dim) {
+            bail!("lattice_dim must be a power of two in [2, 64]");
+        }
+        if self.group_size % self.lattice_dim != 0 {
+            bail!(
+                "group_size {} must be divisible by lattice_dim {}",
+                self.group_size,
+                self.lattice_dim
+            );
+        }
+        if !(0.5..=8.0).contains(&self.target_bits) {
+            bail!("target_bits out of range");
+        }
+        if self.sigma_min >= self.sigma_max {
+            bail!("sigma band empty");
+        }
+        if self.iters == 0 {
+            bail!("iters must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lattice_dim", Json::num(self.lattice_dim as f64)),
+            ("target_bits", Json::num(self.target_bits)),
+            ("group_size", Json::num(self.group_size as f64)),
+            ("bit_allocation", Json::Bool(self.bit_allocation)),
+            ("adaptive_lattice", Json::Bool(self.adaptive_lattice)),
+            ("adaptive_companding", Json::Bool(self.adaptive_companding)),
+            ("assignment", Json::str(self.assignment.name())),
+            ("iters", Json::num(self.iters as f64)),
+            ("lr_g", Json::num(self.lr_g as f64)),
+            ("lr_mu", Json::num(self.lr_mu as f64)),
+            ("lambda", Json::num(self.lambda as f64)),
+            ("epsilon", Json::num(self.epsilon as f64)),
+            ("sigma_min", Json::num(self.sigma_min as f64)),
+            ("sigma_max", Json::num(self.sigma_max as f64)),
+            ("calib_n", Json::num(self.calib_n as f64)),
+            ("use_pjrt", Json::Bool(self.use_pjrt)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GlvqConfig> {
+        let d = GlvqConfig::default();
+        let get_n = |k: &str, dv: f64| j.get(k).as_f64().unwrap_or(dv);
+        let get_b = |k: &str, dv: bool| j.get(k).as_bool().unwrap_or(dv);
+        let c = GlvqConfig {
+            lattice_dim: get_n("lattice_dim", d.lattice_dim as f64) as usize,
+            target_bits: get_n("target_bits", d.target_bits),
+            group_size: get_n("group_size", d.group_size as f64) as usize,
+            bit_allocation: get_b("bit_allocation", d.bit_allocation),
+            adaptive_lattice: get_b("adaptive_lattice", d.adaptive_lattice),
+            adaptive_companding: get_b("adaptive_companding", d.adaptive_companding),
+            assignment: Assignment::parse(
+                j.get("assignment").as_str().unwrap_or("babai"),
+            )?,
+            iters: get_n("iters", d.iters as f64) as usize,
+            lr_g: get_n("lr_g", d.lr_g as f64) as f32,
+            lr_mu: get_n("lr_mu", d.lr_mu as f64) as f32,
+            lambda: get_n("lambda", d.lambda as f64) as f32,
+            epsilon: get_n("epsilon", d.epsilon as f64) as f32,
+            sigma_min: get_n("sigma_min", d.sigma_min as f64) as f32,
+            sigma_max: get_n("sigma_max", d.sigma_max as f64) as f32,
+            calib_n: get_n("calib_n", d.calib_n as f64) as usize,
+            use_pjrt: get_b("use_pjrt", d.use_pjrt),
+            seed: get_n("seed", d.seed as f64) as u64,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// Training run settings for the AOT train-step driver.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub model: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub corpus_bytes: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { model: "s".into(), steps: 300, lr: 3e-3, corpus_bytes: 1 << 21, seed: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        GlvqConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(GlvqConfig::preset("glvq-8d").unwrap().lattice_dim, 8);
+        assert!(!GlvqConfig::preset("glvq-32d-u").unwrap().bit_allocation);
+        assert!(GlvqConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = GlvqConfig::default();
+        c.group_size = 100; // not divisible by 16
+        assert!(c.validate().is_err());
+        let mut c = GlvqConfig::default();
+        c.lattice_dim = 12;
+        assert!(c.validate().is_err());
+        let mut c = GlvqConfig::default();
+        c.sigma_min = 5.0; // above sigma_max=4.0 ⇒ empty band
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = GlvqConfig::preset("glvq-32d").unwrap();
+        c.target_bits = 1.5;
+        c.assignment = Assignment::Gcd;
+        let j = c.to_json();
+        let c2 = GlvqConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn from_json_applies_defaults_for_missing_keys() {
+        let j = Json::parse(r#"{"lattice_dim": 8}"#).unwrap();
+        let c = GlvqConfig::from_json(&j).unwrap();
+        assert_eq!(c.lattice_dim, 8);
+        assert_eq!(c.group_size, 128);
+    }
+}

@@ -1,0 +1,141 @@
+//! Serving metrics: counters + a fixed-capacity reservoir histogram giving
+//! p50/p95/p99 latencies and throughput for the server and Table-4 bench.
+
+use std::time::Instant;
+
+/// Streaming latency histogram (reservoir of raw samples; exact quantiles
+/// for ≤ capacity samples, uniform subsample beyond).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    samples: Vec<f64>,
+    capacity: usize,
+    seen: usize,
+    rng_state: u64,
+}
+
+impl LatencyHist {
+    pub fn new(capacity: usize) -> LatencyHist {
+        LatencyHist { samples: Vec::with_capacity(capacity), capacity, seen: 0, rng_state: 0x9E37 }
+    }
+
+    pub fn record(&mut self, value_ms: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.capacity {
+            self.samples.push(value_ms);
+        } else {
+            // reservoir replacement
+            self.rng_state = self
+                .rng_state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = (self.rng_state >> 33) as usize % self.seen;
+            if j < self.capacity {
+                self.samples[j] = value_ms;
+            }
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+        v[pos]
+    }
+
+    pub fn count(&self) -> usize {
+        self.seen
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+/// Aggregated server metrics.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    pub started: Instant,
+    pub requests: usize,
+    pub tokens_out: usize,
+    pub batches: usize,
+    pub latency: LatencyHist,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics {
+            started: Instant::now(),
+            requests: 0,
+            tokens_out: 0,
+            batches: 0,
+            latency: LatencyHist::new(4096),
+        }
+    }
+}
+
+impl ServerMetrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.tokens_out as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} batches={} tok/s={:.1} p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            self.requests,
+            self.tokens_out,
+            self.batches,
+            self.tokens_per_sec(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.95),
+            self.latency.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let mut h = LatencyHist::new(1000);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.quantile(0.5) - 50.0).abs() <= 2.0);
+        assert!((h.quantile(0.95) - 95.0).abs() <= 2.0);
+        assert!((h.mean() - 50.5).abs() < 0.6);
+    }
+
+    #[test]
+    fn reservoir_keeps_capacity_bound() {
+        let mut h = LatencyHist::new(64);
+        for i in 0..10_000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert!(h.samples.len() <= 64);
+        // median of uniform 0..10000 should be near 5000
+        assert!((h.quantile(0.5) - 5000.0).abs() < 1500.0);
+    }
+
+    #[test]
+    fn empty_hist_is_zero() {
+        let h = LatencyHist::new(8);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the runtime system around the quantizers.
+//!
+//! - [`scheduler`] — thread-pool work queue with deterministic reduction
+//!   (drives the quantization pipeline),
+//! - [`decode_stream`] — the paper's §3.4 on-the-fly decoding: materialize a
+//!   handful of sub-blocks, matvec, release (peak-memory bound),
+//! - [`server`] — batched LM request loop (generate/score) over the PJRT
+//!   logits program with latency/throughput metrics,
+//! - [`metrics`] — counters + streaming histograms for the above.
+
+pub mod decode_stream;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;

@@ -1,0 +1,145 @@
+//! Work scheduler for the quantization service: a scoped thread pool with
+//! an atomic work queue and deterministic result placement.
+//!
+//! Group quantization is embarrassingly parallel (groups are independent
+//! given their calibration slice), but results must assemble in group order
+//! regardless of completion order — `parallel_map` guarantees exactly that:
+//! output[i] is f(items[i]) no matter which worker ran it. Worker panics are
+//! surfaced as an Err carrying the index (failure injection is tested).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads: physical parallelism minus one for the
+/// coordinator, at least 1, unless overridden by GLVQ_THREADS.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("GLVQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on `threads` workers; results in input order.
+/// Returns Err((index, message)) if any invocation panicked.
+pub fn parallel_map<T, R, F>(
+    threads: usize,
+    items: &[T],
+    f: F,
+) -> Result<Vec<R>, (usize, String)>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let failure: Mutex<Option<(usize, String)>> = Mutex::new(None);
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n || failure.lock().unwrap().is_some() {
+                    break;
+                }
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(i, &items[i])
+                }));
+                match result {
+                    Ok(r) => {
+                        slots.lock().unwrap()[i] = Some(r);
+                    }
+                    Err(e) => {
+                        let msg = e
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<panic>".into());
+                        *failure.lock().unwrap() = Some((i, msg));
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(fail) = failure.into_inner().unwrap() {
+        return Err(fail);
+    }
+    let out: Vec<R> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("all slots filled on success"))
+        .collect();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let items: Vec<usize> = (0..200).collect();
+        let out = parallel_map(8, &items, |i, &x| {
+            // stagger completion order
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            (i, x * 2)
+        })
+        .unwrap();
+        for (i, (gi, v)) in out.iter().enumerate() {
+            assert_eq!(*gi, i);
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_sequential() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(1, &items, |_, &x| x + 1).unwrap();
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let items: Vec<u32> = vec![];
+        let out = parallel_map(4, &items, |_, &x| x).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_panic_reported_with_index() {
+        let items: Vec<usize> = (0..50).collect();
+        let err = parallel_map(4, &items, |_, &x| {
+            if x == 33 {
+                panic!("boom at {x}");
+            }
+            x
+        })
+        .unwrap_err();
+        assert_eq!(err.0, 33);
+        assert!(err.1.contains("boom"), "{}", err.1);
+    }
+
+    #[test]
+    fn deterministic_results_across_thread_counts() {
+        let items: Vec<usize> = (0..64).collect();
+        let a = parallel_map(1, &items, |_, &x| x * x).unwrap();
+        let b = parallel_map(7, &items, |_, &x| x * x).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,315 @@
+//! Batched LM serving loop: the L3 request path over the quantized model.
+//!
+//! A worker thread owns the model backend (native forward or PJRT logits
+//! artifact), drains the request queue into bounded batches, and answers
+//! generate/score requests; [`super::metrics::ServerMetrics`] tracks
+//! latency/throughput (the Table-4 runtime story at serving granularity).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::eval::native_fwd;
+use crate::model::ModelConfig;
+use crate::runtime::exec::LogitsExec;
+use crate::runtime::Engine;
+use crate::tensor::TensorStore;
+
+use super::metrics::ServerMetrics;
+
+/// Model backend abstraction: last-position logits for a token prefix.
+/// Backends are created *inside* the server thread (PJRT handles are not
+/// Send), so [`start`] takes a factory closure.
+pub trait LmBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+}
+
+/// Native-forward backend (no artifacts needed).
+pub struct NativeBackend {
+    pub cfg: ModelConfig,
+    pub store: TensorStore,
+}
+
+impl LmBackend for NativeBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t = self.cfg.seq_len;
+        let keep = tokens.len().min(t);
+        let mut x = tokens[tokens.len() - keep..].to_vec();
+        let last = keep.max(1) - 1;
+        x.resize(t, 0);
+        let logits = native_fwd::forward(&self.cfg, &self.store, &x, 1, None)?;
+        Ok(logits.row(last).to_vec())
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+/// PJRT backend over the logits artifact.
+pub struct PjrtBackend {
+    exec: LogitsExec,
+    params: Vec<crate::runtime::exec::StagedBuf>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: &Engine, model: &str, store: &TensorStore) -> Result<PjrtBackend> {
+        let exec = LogitsExec::new(engine, model)?;
+        let params = exec.stage_params(store)?;
+        Ok(PjrtBackend { exec, params })
+    }
+}
+
+impl LmBackend for PjrtBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t = self.exec.seq;
+        let keep = tokens.len().min(t);
+        let mut x = tokens[tokens.len() - keep..].to_vec();
+        let last = keep.max(1) - 1;
+        x.resize(t, 0);
+        let logits = self.exec.logits(&self.params, &x)?;
+        let v = self.exec.vocab;
+        Ok(logits[last * v..(last + 1) * v].to_vec())
+    }
+
+    fn seq_len(&self) -> usize {
+        self.exec.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.exec.vocab
+    }
+}
+
+/// A client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// greedy-decode `max_new` bytes after the prompt
+    Generate { prompt: Vec<u8>, max_new: usize },
+    /// total log P(continuation | prompt)
+    Score { prompt: Vec<u8>, continuation: Vec<u8> },
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Generated { text: Vec<u8> },
+    Scored { logprob: f64 },
+    Error { message: String },
+}
+
+struct Job {
+    request: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
+/// Handle used by clients to submit requests.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Job>,
+    join: Option<std::thread::JoinHandle<ServerMetrics>>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, request: Request) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Job { request, reply, submitted: Instant::now() });
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        self.submit(request).recv().context("server dropped the reply")
+    }
+
+    /// Stop the worker and return final metrics.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        drop(self.tx);
+        self.join
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("server thread panicked")
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// max requests drained into one processing batch
+    pub max_batch: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts { max_batch: 8 }
+    }
+}
+
+/// Start the serving loop on its own thread. `make_backend` runs inside the
+/// worker thread (PJRT clients/executables are thread-local).
+pub fn start<F>(make_backend: F, opts: ServerOpts) -> ServerHandle
+where
+    F: FnOnce() -> Result<Box<dyn LmBackend>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Job>();
+    let join = std::thread::spawn(move || {
+        let mut backend = make_backend().expect("backend construction failed");
+        let mut metrics = ServerMetrics::default();
+        loop {
+            // block for the first job, then drain up to max_batch
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break, // all senders dropped → shutdown
+            };
+            let mut batch = vec![first];
+            while batch.len() < opts.max_batch {
+                match rx.try_recv() {
+                    Ok(j) => batch.push(j),
+                    Err(_) => break,
+                }
+            }
+            metrics.batches += 1;
+            for job in batch {
+                let response = handle(&mut *backend, &job.request, &mut metrics);
+                metrics.requests += 1;
+                metrics
+                    .latency
+                    .record(job.submitted.elapsed().as_secs_f64() * 1e3);
+                let _ = job.reply.send(response);
+            }
+        }
+        metrics
+    });
+    ServerHandle { tx, join: Some(join) }
+}
+
+fn handle(backend: &mut dyn LmBackend, request: &Request, metrics: &mut ServerMetrics) -> Response {
+    match request {
+        Request::Generate { prompt, max_new } => {
+            let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+            let start = tokens.len();
+            for _ in 0..*max_new {
+                let logits = match backend.logits_last(&tokens) {
+                    Ok(l) => l,
+                    Err(e) => return Response::Error { message: e.to_string() },
+                };
+                let next = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0);
+                tokens.push(next);
+                metrics.tokens_out += 1;
+            }
+            let text: Vec<u8> = tokens[start..].iter().map(|&t| t.clamp(0, 255) as u8).collect();
+            Response::Generated { text }
+        }
+        Request::Score { prompt, continuation } => {
+            let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+            let mut total = 0.0f64;
+            for &b in continuation {
+                let logits = match backend.logits_last(&tokens) {
+                    Ok(l) => l,
+                    Err(e) => return Response::Error { message: e.to_string() },
+                };
+                let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                let lse: f32 = logits.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+                total += (logits[b as usize] - lse) as f64;
+                tokens.push(b as i32);
+                metrics.tokens_out += 1;
+            }
+            Response::Scored { logprob: total }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, ModelConfig};
+
+    fn tiny_backend() -> Result<Box<dyn LmBackend>> {
+        let cfg = ModelConfig {
+            name: "t",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 1,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 32,
+            batch_train: 2,
+            batch_eval: 2,
+        };
+        let store = init_params(&cfg, 0);
+        Ok(Box::new(NativeBackend { cfg, store }))
+    }
+
+    #[test]
+    fn generate_and_score_roundtrip() {
+        let handle = start(tiny_backend, ServerOpts::default());
+        match handle.call(Request::Generate { prompt: b"the kama ".to_vec(), max_new: 5 }).unwrap()
+        {
+            Response::Generated { text } => assert_eq!(text.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+        match handle
+            .call(Request::Score { prompt: b"the ".to_vec(), continuation: b"ka".to_vec() })
+            .unwrap()
+        {
+            Response::Scored { logprob } => assert!(logprob < 0.0 && logprob.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 2);
+        assert_eq!(metrics.tokens_out, 7);
+        assert!(metrics.latency.quantile(0.5) >= 0.0);
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let handle = start(tiny_backend, ServerOpts { max_batch: 4 });
+        let receivers: Vec<_> = (0..10)
+            .map(|i| {
+                handle.submit(Request::Generate {
+                    prompt: format!("req {i} ").into_bytes(),
+                    max_new: 2,
+                })
+            })
+            .collect();
+        for rx in receivers {
+            match rx.recv().unwrap() {
+                Response::Generated { text } => assert_eq!(text.len(), 2),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 10);
+        assert!(metrics.batches <= 10);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let h1 = start(tiny_backend, ServerOpts::default());
+        let h2 = start(tiny_backend, ServerOpts::default());
+        let r1 = h1.call(Request::Generate { prompt: b"abc".to_vec(), max_new: 4 }).unwrap();
+        let r2 = h2.call(Request::Generate { prompt: b"abc".to_vec(), max_new: 4 }).unwrap();
+        match (r1, r2) {
+            (Response::Generated { text: a }, Response::Generated { text: b }) => {
+                assert_eq!(a, b)
+            }
+            _ => panic!(),
+        }
+        h1.shutdown();
+        h2.shutdown();
+    }
+}

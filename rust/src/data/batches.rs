@@ -1,0 +1,123 @@
+//! Deterministic batch iteration over a token stream + the calibration
+//! sampler that feeds per-layer activation capture (paper: 4M RedPajama
+//! tokens → here a seed-controlled token budget, swept in Table 11).
+
+use crate::util::rng::Rng;
+
+/// (x, y) next-token batches: x = tokens[p..p+T], y = tokens[p+1..p+T+1].
+pub struct BatchIter<'a> {
+    tokens: &'a [i32],
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+    /// when false, walk windows sequentially (eval); when true, sample
+    /// random offsets (training)
+    random: bool,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(tokens: &'a [i32], batch: usize, seq: usize, seed: u64, random: bool) -> Self {
+        assert!(tokens.len() > seq + 1, "token stream too short");
+        BatchIter { tokens, batch, seq, rng: Rng::new(seed), random, cursor: 0 }
+    }
+
+    /// Number of full sequential batches available (eval mode).
+    pub fn n_sequential_batches(&self) -> usize {
+        (self.tokens.len() - 1) / self.seq / self.batch
+    }
+
+    /// Next batch; returns flattened row-major (batch*seq) x and y, or None
+    /// when a sequential pass is exhausted.
+    pub fn next_batch(&mut self) -> Option<(Vec<i32>, Vec<i32>)> {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = if self.random {
+                self.rng.below(self.tokens.len() - self.seq - 1)
+            } else {
+                let s = self.cursor;
+                if s + self.seq + 1 > self.tokens.len() {
+                    return None;
+                }
+                self.cursor += self.seq;
+                s
+            };
+            x.extend_from_slice(&self.tokens[start..start + self.seq]);
+            y.extend_from_slice(&self.tokens[start + 1..start + self.seq + 1]);
+        }
+        Some((x, y))
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// Sample `n` calibration sequences of length `seq` at random offsets.
+/// Returns row-major (n × seq) token ids — the model runs these to capture
+/// per-layer input activations for the quantizers.
+pub fn sample_calibration(tokens: &[i32], n: usize, seq: usize, seed: u64) -> Vec<i32> {
+    assert!(tokens.len() > seq + 1);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n * seq);
+    for _ in 0..n {
+        let start = rng.below(tokens.len() - seq - 1);
+        out.extend_from_slice(&tokens[start..start + seq]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % 251) as i32).collect()
+    }
+
+    #[test]
+    fn sequential_pass_covers_stream_without_overlap() {
+        let t = toks(1000);
+        let mut it = BatchIter::new(&t, 2, 10, 0, false);
+        let mut seen = Vec::new();
+        while let Some((x, _)) = it.next_batch() {
+            seen.extend(x);
+        }
+        // windows advance by seq => x values are the stream prefix in order
+        assert!(seen.len() >= 900);
+        for (i, &v) in seen.iter().enumerate() {
+            assert_eq!(v, t[i]);
+        }
+    }
+
+    #[test]
+    fn y_is_x_shifted_by_one() {
+        let t = toks(500);
+        let mut it = BatchIter::new(&t, 3, 7, 1, true);
+        let (x, y) = it.next_batch().unwrap();
+        for row in 0..3 {
+            for j in 0..6 {
+                assert_eq!(x[row * 7 + j + 1], y[row * 7 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn random_mode_is_deterministic_in_seed() {
+        let t = toks(5000);
+        let a = BatchIter::new(&t, 4, 16, 9, true).next_batch().unwrap();
+        let b = BatchIter::new(&t, 4, 16, 9, true).next_batch().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn calibration_shapes_and_determinism() {
+        let t = toks(10_000);
+        let c1 = sample_calibration(&t, 8, 32, 5);
+        let c2 = sample_calibration(&t, 8, 32, 5);
+        assert_eq!(c1.len(), 8 * 32);
+        assert_eq!(c1, c2);
+        assert_ne!(c1, sample_calibration(&t, 8, 32, 6));
+    }
+}

@@ -1,0 +1,262 @@
+//! Synthetic language corpus generator.
+//!
+//! The corpus must make the paper's evaluation *meaningful* on a small
+//! trained transformer, so it has learnable structure at several ranges:
+//!
+//! - a fixed word vocabulary built from syllables (local byte structure),
+//! - an SVO grammar with agreement-like co-occurrence (mid-range),
+//! - bracketed asides `( … )` / `[ … ]` whose closer type must match the
+//!   opener across a long span (long-range — the ARC-C probe),
+//! - entity repetition: paragraph-level named entities that recur
+//!   (induction — the Winogrande probe),
+//! - two *mixes* with different word/grammar statistics standing in for the
+//!   paper's two eval sets (Wikitext2 → `Mix::Wiki`, C4 → `Mix::Web`).
+//!
+//! Generation is fully deterministic in the seed.
+
+use crate::util::rng::Rng;
+
+/// Which evaluation distribution to emulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Mix {
+    /// longer sentences, heavier entity reuse, nested brackets
+    Wiki,
+    /// shorter, noisier: numbers, stray punctuation, fewer repeats
+    Web,
+}
+
+impl Mix {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::Wiki => "wiki",
+            Mix::Web => "web",
+        }
+    }
+}
+
+const SYLLABLES: &[&str] = &[
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du", "ka", "ke", "ki", "ko", "ku",
+    "la", "le", "li", "lo", "lu", "ma", "me", "mi", "mo", "mu", "na", "ne", "ni", "no", "nu",
+    "ra", "re", "ri", "ro", "ru", "sa", "se", "si", "so", "su", "ta", "te", "ti", "to", "tu",
+    "va", "ve", "vi", "vo", "vu", "za", "ze", "zi", "zo", "zu",
+];
+
+/// Deterministic word list shared by both mixes; nouns/verbs/adjectives are
+/// disjoint slices so grammar induces real co-occurrence statistics.
+pub struct Vocabulary {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>,
+    pub adjectives: Vec<String>,
+    pub entities: Vec<String>,
+}
+
+impl Vocabulary {
+    pub fn build(seed: u64) -> Vocabulary {
+        let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+        let mut word = |syl: usize| -> String {
+            let mut s = String::new();
+            for _ in 0..syl {
+                s.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+            }
+            s
+        };
+        let nouns = (0..120).map(|_| word(2)).collect();
+        let verbs = (0..60).map(|_| word(2)).collect();
+        let adjectives = (0..60).map(|_| word(3)).collect();
+        // entities are Capitalized 2-syllable words
+        let entities = (0..40)
+            .map(|_| {
+                let w = word(2);
+                let mut c = w.chars();
+                match c.next() {
+                    Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+                    None => w,
+                }
+            })
+            .collect();
+        Vocabulary { nouns, verbs, adjectives, entities }
+    }
+}
+
+/// Corpus generator state.
+pub struct Corpus {
+    pub mix: Mix,
+    vocab: Vocabulary,
+    rng: Rng,
+    /// zipf-ish sampling weights over nouns (frequent-bigram probe relies
+    /// on a skewed distribution)
+    noun_weights: Vec<f64>,
+    verb_weights: Vec<f64>,
+}
+
+impl Corpus {
+    pub fn new(mix: Mix, seed: u64) -> Corpus {
+        let vocab = Vocabulary::build(1); // shared vocab across seeds/mixes
+        let zipf = |n: usize| -> Vec<f64> { (0..n).map(|i| 1.0 / (i as f64 + 1.5)).collect() };
+        Corpus {
+            mix,
+            noun_weights: zipf(vocab.nouns.len()),
+            verb_weights: zipf(vocab.verbs.len()),
+            vocab,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn vocab(&self) -> &Vocabulary {
+        &self.vocab
+    }
+
+    fn noun(&mut self) -> String {
+        let i = self.rng.categorical(&self.noun_weights);
+        self.vocab.nouns[i].clone()
+    }
+
+    fn verb(&mut self) -> String {
+        let i = self.rng.categorical(&self.verb_weights);
+        self.vocab.verbs[i].clone()
+    }
+
+    fn adjective(&mut self) -> String {
+        let i = self.rng.below(self.vocab.adjectives.len());
+        self.vocab.adjectives[i].clone()
+    }
+
+    /// One sentence, optionally referencing paragraph entities.
+    fn sentence(&mut self, entities: &[String]) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let subject = if !entities.is_empty() && self.rng.f64() < 0.55 {
+            entities[self.rng.below(entities.len())].clone()
+        } else {
+            format!("the {}", self.noun())
+        };
+        parts.push(subject);
+        parts.push(self.verb());
+        if self.rng.f64() < 0.7 {
+            let adj = if self.rng.f64() < 0.4 { format!("{} ", self.adjective()) } else { String::new() };
+            parts.push(format!("the {}{}", adj, self.noun()));
+        }
+        // bracketed aside with type-matching closer (long-range dependency)
+        let aside_p = match self.mix {
+            Mix::Wiki => 0.35,
+            Mix::Web => 0.15,
+        };
+        if self.rng.f64() < aside_p {
+            let (open, close) = if self.rng.f64() < 0.5 { ('(', ')') } else { ('[', ']') };
+            let inner = format!("{} {} {}", self.noun(), self.verb(), self.noun());
+            parts.push(format!("{open}{inner}{close}"));
+        }
+        if self.mix == Mix::Web && self.rng.f64() < 0.25 {
+            parts.push(format!("{}", self.rng.below(1000)));
+        }
+        let mut s = parts.join(" ");
+        s.push_str(if self.mix == Mix::Web && self.rng.f64() < 0.2 { "!" } else { "." });
+        s
+    }
+
+    /// One paragraph: picks 1-3 entities that recur across its sentences —
+    /// the induction signal.
+    pub fn paragraph(&mut self) -> String {
+        let n_entities = match self.mix {
+            Mix::Wiki => 1 + self.rng.below(3),
+            Mix::Web => self.rng.below(2),
+        };
+        let entities: Vec<String> = (0..n_entities)
+            .map(|_| self.vocab.entities[self.rng.below(self.vocab.entities.len())].clone())
+            .collect();
+        let n_sent = match self.mix {
+            Mix::Wiki => 4 + self.rng.below(5),
+            Mix::Web => 2 + self.rng.below(3),
+        };
+        let mut out = String::new();
+        for i in 0..n_sent {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.sentence(&entities));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Generate at least `n_bytes` of corpus text (byte == token).
+    pub fn generate(&mut self, n_bytes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n_bytes + 256);
+        while out.len() < n_bytes {
+            out.extend_from_slice(self.paragraph().as_bytes());
+        }
+        out.truncate(n_bytes);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Corpus::new(Mix::Wiki, 7).generate(4096);
+        let b = Corpus::new(Mix::Wiki, 7).generate(4096);
+        assert_eq!(a, b);
+        let c = Corpus::new(Mix::Wiki, 8).generate(4096);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mixes_have_different_statistics() {
+        let wiki = Corpus::new(Mix::Wiki, 1).generate(60_000);
+        let web = Corpus::new(Mix::Web, 1).generate(60_000);
+        let digits = |v: &[u8]| v.iter().filter(|b| b.is_ascii_digit()).count() as f64 / v.len() as f64;
+        assert!(digits(&web) > digits(&wiki) * 2.0, "web should carry more digits");
+        let brackets = |v: &[u8]| v.iter().filter(|&&b| b == b'(' || b == b'[').count() as f64 / v.len() as f64;
+        assert!(brackets(&wiki) > brackets(&web), "wiki should carry more brackets");
+    }
+
+    #[test]
+    fn ascii_only_and_brackets_balanced() {
+        let text = Corpus::new(Mix::Wiki, 3).generate(50_000);
+        assert!(text.iter().all(|&b| b.is_ascii()));
+        // brackets balance within the untruncated portion
+        let upto = text.iter().rposition(|&b| b == b'\n').unwrap_or(0);
+        let mut depth_round = 0i64;
+        let mut depth_square = 0i64;
+        for &b in &text[..upto] {
+            match b {
+                b'(' => depth_round += 1,
+                b')' => depth_round -= 1,
+                b'[' => depth_square += 1,
+                b']' => depth_square -= 1,
+                _ => {}
+            }
+            assert!(depth_round >= 0 && depth_square >= 0);
+        }
+        assert_eq!(depth_round, 0);
+        assert_eq!(depth_square, 0);
+    }
+
+    #[test]
+    fn entities_recur_within_paragraphs() {
+        let mut c = Corpus::new(Mix::Wiki, 5);
+        let mut repeats = 0;
+        for _ in 0..50 {
+            let p = c.paragraph();
+            for e in &c.vocab().entities.clone() {
+                let count = p.matches(e.as_str()).count();
+                if count >= 2 {
+                    repeats += 1;
+                    break;
+                }
+            }
+        }
+        assert!(repeats > 10, "entity repetition too rare: {repeats}/50");
+    }
+
+    #[test]
+    fn vocabulary_is_stable() {
+        let a = Vocabulary::build(1);
+        let b = Vocabulary::build(1);
+        assert_eq!(a.nouns, b.nouns);
+        assert_eq!(a.entities, b.entities);
+        assert!(a.nouns.len() >= 100);
+    }
+}

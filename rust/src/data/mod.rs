@@ -1,0 +1,7 @@
+//! Data substrate: the synthetic corpus that substitutes for
+//! WikiText-2 / C4 / RedPajama (DESIGN.md §3), the byte tokenizer, and
+//! deterministic batch / calibration samplers.
+
+pub mod batches;
+pub mod corpus;
+pub mod tokenizer;

@@ -1,0 +1,38 @@
+//! Byte-level tokenizer (vocab = 256). Trivial by design — the model's
+//! vocabulary axis matches the paper's setup structurally (token ids feed an
+//! embedding table) without dragging in BPE training.
+
+pub const VOCAB: usize = 256;
+
+/// Encode text to token ids.
+pub fn encode(text: &[u8]) -> Vec<i32> {
+    text.iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids to bytes (lossy for out-of-range ids → '?').
+pub fn decode(tokens: &[i32]) -> Vec<u8> {
+    tokens
+        .iter()
+        .map(|&t| if (0..256).contains(&t) { t as u8 } else { b'?' })
+        .collect()
+}
+
+pub fn decode_string(tokens: &[i32]) -> String {
+    String::from_utf8_lossy(&decode(tokens)).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let text = b"the kama vove (riko tesu) 42.";
+        assert_eq!(decode(&encode(text)), text.to_vec());
+    }
+
+    #[test]
+    fn out_of_range_replaced() {
+        assert_eq!(decode(&[65, 300, -1]), vec![b'A', b'?', b'?']);
+    }
+}

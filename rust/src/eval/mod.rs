@@ -1,0 +1,11 @@
+//! Evaluation harness: native transformer forward (with calibration
+//! capture), perplexity, and the zero-shot probe tasks.
+//!
+//! The native forward mirrors `python/compile/model.py` operation-for-
+//! operation and is cross-checked against the ForwardLoss HLO artifact in
+//! rust/tests/pjrt_parity.rs — it exists so (a) per-layer activations can be
+//! captured for calibration and (b) evaluation runs even without artifacts.
+
+pub mod native_fwd;
+pub mod perplexity;
+pub mod zeroshot;

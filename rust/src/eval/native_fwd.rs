@@ -1,0 +1,370 @@
+//! Pure-rust transformer forward — an exact mirror of model.py — plus
+//! per-layer activation capture for quantizer calibration.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+use crate::model::ModelConfig;
+use crate::tensor::TensorStore;
+use crate::util::rng::Rng;
+
+/// Captures the inputs of each quantizable matmul: tensor name → columns of
+/// activations (n_in × up-to-max_cols), subsampled reservoir-style.
+pub struct CalibCapture {
+    pub max_cols: usize,
+    pub cols: BTreeMap<String, Vec<Vec<f32>>>,
+    seen: BTreeMap<String, usize>,
+    rng: Rng,
+}
+
+impl CalibCapture {
+    pub fn new(max_cols: usize, seed: u64) -> CalibCapture {
+        CalibCapture {
+            max_cols,
+            cols: BTreeMap::new(),
+            seen: BTreeMap::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Offer all rows of `acts` (rows = samples, cols = n_in) as candidate
+    /// calibration columns for `name` (reservoir sampling keeps a uniform
+    /// subsample across the whole eval stream).
+    fn offer(&mut self, name: &str, acts: &Mat) {
+        let entry = self.cols.entry(name.to_string()).or_default();
+        let seen = self.seen.entry(name.to_string()).or_insert(0);
+        for r in 0..acts.rows {
+            *seen += 1;
+            if entry.len() < self.max_cols {
+                entry.push(acts.row(r).to_vec());
+            } else {
+                let j = self.rng.below(*seen);
+                if j < self.max_cols {
+                    entry[j] = acts.row(r).to_vec();
+                }
+            }
+        }
+    }
+
+    /// Finalize into (n_in × N) matrices.
+    pub fn into_calib_set(self) -> crate::glvq::pipeline::CalibSet {
+        let mut acts = BTreeMap::new();
+        for (name, cols) in self.cols {
+            if cols.is_empty() {
+                continue;
+            }
+            let n_in = cols[0].len();
+            let n = cols.len();
+            let mut x = Mat::zeros(n_in, n);
+            for (c, col) in cols.iter().enumerate() {
+                for (r, &v) in col.iter().enumerate() {
+                    *x.at_mut(r, c) = v;
+                }
+            }
+            acts.insert(name, x);
+        }
+        crate::glvq::pipeline::CalibSet { acts }
+    }
+}
+
+fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
+    let mut out = x.clone();
+    let d = x.cols;
+    for r in 0..x.rows {
+        let row = out.row_mut(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = *v * inv * gain[j];
+        }
+    }
+    out
+}
+
+fn gelu_tanh(x: f32) -> f32 {
+    // jax.nn.gelu(approximate=True)
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn softmax_rows(m: &mut Mat) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Forward pass over one (B × T) token batch. Returns logits (B·T × V).
+/// If `capture` is set, quantizable-matmul inputs are offered to it.
+pub fn forward(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    tokens: &[i32],
+    batch: usize,
+    mut capture: Option<&mut CalibCapture>,
+) -> Result<Mat> {
+    let (t_len, d) = (cfg.seq_len, cfg.d_model);
+    assert_eq!(tokens.len(), batch * t_len);
+    let get = |name: &str| -> Result<Mat> {
+        Ok(store.get(name).with_context(|| format!("missing {name}"))?.to_mat())
+    };
+    let get1 = |name: &str| -> Result<Vec<f32>> {
+        Ok(store
+            .get(name)
+            .with_context(|| format!("missing {name}"))?
+            .data
+            .clone())
+    };
+
+    let emb = get("emb")?;
+    let pos = get("pos")?;
+    // h: (B·T × D)
+    let mut h = Mat::zeros(batch * t_len, d);
+    for b in 0..batch {
+        for t in 0..t_len {
+            let tok = tokens[b * t_len + t] as usize;
+            let dst = h.row_mut(b * t_len + t);
+            for j in 0..d {
+                dst[j] = emb.at(tok, j) + pos.at(t, j);
+            }
+        }
+    }
+
+    let (nh, dh) = (cfg.n_head, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for layer in 0..cfg.n_layer {
+        let p = format!("{layer:02}.");
+        // ---- attention ----
+        let a = rmsnorm(&h, &get1(&format!("{p}attn.gain"))?);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&format!("{p}attn.wq"), &a);
+            cap.offer(&format!("{p}attn.wk"), &a);
+            cap.offer(&format!("{p}attn.wv"), &a);
+        }
+        let q = a.matmul(&get(&format!("{p}attn.wq"))?);
+        let k = a.matmul(&get(&format!("{p}attn.wk"))?);
+        let v = a.matmul(&get(&format!("{p}attn.wv"))?);
+        let mut att_out = Mat::zeros(batch * t_len, d);
+        for b in 0..batch {
+            for head in 0..nh {
+                let off = head * dh;
+                // scores (T × T) for this batch/head
+                let mut scores = Mat::zeros(t_len, t_len);
+                for i in 0..t_len {
+                    let qi = &q.row(b * t_len + i)[off..off + dh];
+                    for j in 0..=i {
+                        let kj = &k.row(b * t_len + j)[off..off + dh];
+                        let mut s = 0.0f32;
+                        for e in 0..dh {
+                            s += qi[e] * kj[e];
+                        }
+                        *scores.at_mut(i, j) = s * scale;
+                    }
+                    for j in i + 1..t_len {
+                        *scores.at_mut(i, j) = -1e9;
+                    }
+                }
+                softmax_rows(&mut scores);
+                for i in 0..t_len {
+                    let dst = &mut att_out.row_mut(b * t_len + i)[off..off + dh];
+                    for j in 0..=i {
+                        let w = scores.at(i, j);
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vj = &v.row(b * t_len + j)[off..off + dh];
+                        for e in 0..dh {
+                            dst[e] += w * vj[e];
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&format!("{p}attn.wo"), &att_out);
+        }
+        let proj = att_out.matmul(&get(&format!("{p}attn.wo"))?);
+        for i in 0..h.data.len() {
+            h.data[i] += proj.data[i];
+        }
+
+        // ---- mlp ----
+        let m = rmsnorm(&h, &get1(&format!("{p}mlp.gain"))?);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&format!("{p}mlp.w1"), &m);
+        }
+        let mut hidden = m.matmul(&get(&format!("{p}mlp.w1"))?);
+        for v in hidden.data.iter_mut() {
+            *v = gelu_tanh(*v);
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&format!("{p}mlp.w2"), &hidden);
+        }
+        let mlp_out = hidden.matmul(&get(&format!("{p}mlp.w2"))?);
+        for i in 0..h.data.len() {
+            h.data[i] += mlp_out.data[i];
+        }
+    }
+
+    let hf = rmsnorm(&h, &get1("final.gain")?);
+    if let Some(cap) = capture.as_deref_mut() {
+        cap.offer("out", &hf);
+    }
+    Ok(hf.matmul(&get("out")?))
+}
+
+/// Total NLL over a batch (matches model.py::nll_sum).
+pub fn nll_sum(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    x: &[i32],
+    y: &[i32],
+    batch: usize,
+) -> Result<f64> {
+    let logits = forward(cfg, store, x, batch, None)?;
+    Ok(nll_from_logits(&logits, y))
+}
+
+/// NLL from precomputed logits (rows = positions, cols = vocab).
+pub fn nll_from_logits(logits: &Mat, targets: &[i32]) -> f64 {
+    assert_eq!(logits.rows, targets.len());
+    let mut total = 0.0f64;
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        total += (lse - row[targets[r] as usize]) as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, ModelConfig, CONFIG_S};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch_train: 2,
+            batch_eval: 2,
+        }
+    }
+
+    fn toks(cfg: &ModelConfig, batch: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * cfg.seq_len).map(|_| rng.below(256) as i32).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 0);
+        let x = toks(&cfg, 2, 1);
+        let logits = forward(&cfg, &store, &x, 2, None).unwrap();
+        assert_eq!((logits.rows, logits.cols), (2 * 16, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn initial_loss_near_uniform() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 0);
+        let x = toks(&cfg, 2, 2);
+        let y = toks(&cfg, 2, 3);
+        let nll = nll_sum(&cfg, &store, &x, &y, 2).unwrap();
+        let per_tok = nll / (2.0 * 16.0);
+        assert!((per_tok - (256f64).ln()).abs() < 0.5, "per-token nll {per_tok}");
+    }
+
+    #[test]
+    fn causality() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 1);
+        let mut x1 = toks(&cfg, 1, 4);
+        let logits1 = forward(&cfg, &store, &x1, 1, None).unwrap();
+        // perturb the future
+        for t in 10..16 {
+            x1[t] = (x1[t] + 37) % 256;
+        }
+        let logits2 = forward(&cfg, &store, &x1, 1, None).unwrap();
+        for t in 0..10 {
+            for v in 0..256 {
+                assert!(
+                    (logits1.at(t, v) - logits2.at(t, v)).abs() < 1e-4,
+                    "position {t} affected by future"
+                );
+            }
+        }
+        let mut diff = 0.0f32;
+        for t in 10..16 {
+            for v in 0..256 {
+                diff += (logits1.at(t, v) - logits2.at(t, v)).abs();
+            }
+        }
+        assert!(diff > 1.0, "future positions should change");
+    }
+
+    #[test]
+    fn capture_collects_all_quantizable_inputs() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 2);
+        let x = toks(&cfg, 2, 5);
+        let mut cap = CalibCapture::new(24, 0);
+        forward(&cfg, &store, &x, 2, Some(&mut cap)).unwrap();
+        let calib = cap.into_calib_set();
+        for name in cfg.quantizable_names() {
+            let xm = calib.acts.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+            let spec = cfg
+                .param_specs()
+                .into_iter()
+                .find(|s| s.name == name)
+                .unwrap();
+            assert_eq!(xm.rows, spec.shape[0], "{name}");
+            assert_eq!(xm.cols, 24.min(2 * 16), "{name}");
+            assert!(xm.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn capture_reservoir_caps_columns() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 3);
+        let mut cap = CalibCapture::new(8, 1);
+        for seed in 0..3 {
+            let x = toks(&cfg, 2, 100 + seed);
+            forward(&cfg, &store, &x, 2, Some(&mut cap)).unwrap();
+        }
+        let calib = cap.into_calib_set();
+        for (_, x) in calib.acts {
+            assert_eq!(x.cols, 8);
+        }
+    }
+
+    #[test]
+    fn config_s_runs() {
+        let cfg = CONFIG_S;
+        let store = init_params(&cfg, 4);
+        let mut rng = Rng::new(9);
+        let x: Vec<i32> = (0..cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+        let logits = forward(&cfg, &store, &x, 1, None).unwrap();
+        assert_eq!(logits.rows, cfg.seq_len);
+    }
+}

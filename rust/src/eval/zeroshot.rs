@@ -1,0 +1,323 @@
+//! Zero-shot probe tasks — the DESIGN.md §3 substitution for the paper's
+//! LM-Eval suite (Table 2):
+//!
+//! | probe    | stands in for | skill probed                                 |
+//! |----------|---------------|----------------------------------------------|
+//! | BracketC | ARC-Challenge | long-range type-matched bracket completion    |
+//! | BigramE  | ARC-Easy      | frequent-word continuation vs non-word        |
+//! | Plaus    | PIQA          | grammatical vs scrambled continuation         |
+//! | Induct   | Winogrande    | induction-head entity→verb copying            |
+//!
+//! Every task is a forced choice scored by the (quantized) LM's total
+//! continuation log-probability; accuracy is % correct, exactly the
+//! LM-Eval `acc` convention.
+
+use anyhow::Result;
+
+use crate::data::corpus::Vocabulary;
+use crate::eval::native_fwd;
+use crate::model::ModelConfig;
+use crate::runtime::exec::LogitsExec;
+use crate::runtime::Engine;
+use crate::tensor::TensorStore;
+use crate::util::rng::Rng;
+
+/// One forced-choice item.
+#[derive(Clone, Debug)]
+pub struct ProbeItem {
+    pub context: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub correct: usize,
+}
+
+/// LM scoring interface: total log P(continuation | prompt).
+pub trait LmScorer {
+    fn score(&mut self, prompt: &[i32], continuation: &[i32]) -> Result<f64>;
+    fn seq_len(&self) -> usize;
+}
+
+/// Scorer over the native forward.
+pub struct NativeScorer<'a> {
+    pub cfg: &'a ModelConfig,
+    pub store: &'a TensorStore,
+}
+
+impl<'a> LmScorer for NativeScorer<'a> {
+    fn score(&mut self, prompt: &[i32], continuation: &[i32]) -> Result<f64> {
+        let (x, start) = pad_sequence(prompt, continuation, self.cfg.seq_len);
+        let logits = native_fwd::forward(self.cfg, self.store, &x, 1, None)?;
+        Ok(continuation_logprob(&logits.data, self.cfg.vocab, &x, start, continuation.len()))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+}
+
+/// Scorer over the PJRT logits artifact.
+pub struct PjrtScorer {
+    exec: LogitsExec,
+    params: Vec<crate::runtime::exec::StagedBuf>,
+}
+
+impl PjrtScorer {
+    pub fn new(engine: &Engine, model: &str, store: &TensorStore) -> Result<PjrtScorer> {
+        let exec = LogitsExec::new(engine, model)?;
+        let params = exec.stage_params(store)?;
+        Ok(PjrtScorer { exec, params })
+    }
+}
+
+impl LmScorer for PjrtScorer {
+    fn score(&mut self, prompt: &[i32], continuation: &[i32]) -> Result<f64> {
+        let (x, start) = pad_sequence(prompt, continuation, self.exec.seq);
+        let logits = self.exec.logits(&self.params, &x)?;
+        Ok(continuation_logprob(&logits, self.exec.vocab, &x, start, continuation.len()))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.exec.seq
+    }
+}
+
+/// Left-truncate the prompt so prompt+continuation fits in seq_len; pad
+/// right with zeros. Returns (sequence, index of first continuation token).
+fn pad_sequence(prompt: &[i32], continuation: &[i32], seq_len: usize) -> (Vec<i32>, usize) {
+    let keep = seq_len.saturating_sub(continuation.len()).min(prompt.len());
+    let p = &prompt[prompt.len() - keep..];
+    let mut x = Vec::with_capacity(seq_len);
+    x.extend_from_slice(p);
+    let start = x.len();
+    x.extend_from_slice(continuation);
+    x.resize(seq_len, 0);
+    (x, start)
+}
+
+/// Sum of log P(x[t] | x[<t]) for t in [start, start+len). `logits` is the
+/// flattened (seq × vocab) array.
+fn continuation_logprob(logits: &[f32], vocab: usize, x: &[i32], start: usize, len: usize) -> f64 {
+    let mut total = 0.0f64;
+    for t in start..start + len {
+        // logits at position t-1 predict token t
+        let row = &logits[(t - 1) * vocab..t * vocab];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        total += (row[x[t] as usize] - lse) as f64;
+    }
+    total
+}
+
+fn scramble_word(w: &str, rng: &mut Rng) -> String {
+    let mut b: Vec<u8> = w.bytes().collect();
+    rng.shuffle(&mut b);
+    // ensure it differs
+    if String::from_utf8_lossy(&b) == w {
+        b.reverse();
+    }
+    String::from_utf8_lossy(&b).into_owned()
+}
+
+/// Task 1 (ARC-C proxy): long-range bracket completion.
+pub fn gen_bracket_items(vocab: &Vocabulary, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed ^ 0xB7AC7);
+    (0..n)
+        .map(|_| {
+            let (open, close, wrong) = if rng.below(2) == 0 {
+                ('(', ')', ']')
+            } else {
+                ('[', ']', ')')
+            };
+            let inner = format!(
+                "{} {} {} {} {}",
+                vocab.nouns[rng.below(vocab.nouns.len())],
+                vocab.verbs[rng.below(vocab.verbs.len())],
+                vocab.nouns[rng.below(vocab.nouns.len())],
+                vocab.verbs[rng.below(vocab.verbs.len())],
+                vocab.nouns[rng.below(vocab.nouns.len())],
+            );
+            let ctx = format!(
+                "the {} {} the {} {open}{inner}",
+                vocab.nouns[rng.below(vocab.nouns.len())],
+                vocab.verbs[rng.below(vocab.verbs.len())],
+                vocab.nouns[rng.below(vocab.nouns.len())],
+            );
+            ProbeItem {
+                context: ctx.into_bytes(),
+                choices: vec![vec![close as u8], vec![wrong as u8]],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// Task 2 (ARC-E proxy): real vocabulary word vs scrambled non-word after
+/// the frequent "the " bigram.
+pub fn gen_bigram_items(vocab: &Vocabulary, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed ^ 0xB16_A);
+    (0..n)
+        .map(|_| {
+            let noun = &vocab.nouns[rng.below(vocab.nouns.len() / 4)]; // frequent nouns
+            let wrong = scramble_word(noun, &mut rng);
+            let ctx = format!(
+                "the {} {} the ",
+                vocab.nouns[rng.below(vocab.nouns.len())],
+                vocab.verbs[rng.below(vocab.verbs.len())],
+            );
+            ProbeItem {
+                context: ctx.into_bytes(),
+                choices: vec![noun.clone().into_bytes(), wrong.into_bytes()],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// Task 3 (PIQA proxy): grammatical vs role-violating continuation.
+pub fn gen_plaus_items(vocab: &Vocabulary, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed ^ 0x41A);
+    (0..n)
+        .map(|_| {
+            let subj = &vocab.nouns[rng.below(vocab.nouns.len())];
+            let verb = &vocab.verbs[rng.below(vocab.verbs.len())];
+            let adj = &vocab.adjectives[rng.below(vocab.adjectives.len())];
+            let obj = &vocab.nouns[rng.below(vocab.nouns.len())];
+            let ctx = format!("the {subj} ");
+            // grammatical: verb then object; violation: adjective (never in
+            // verb position in the grammar) then object
+            let good = format!("{verb} the {obj}.");
+            let bad = format!("{adj} the {obj}.");
+            ProbeItem {
+                context: ctx.into_bytes(),
+                choices: vec![good.into_bytes(), bad.into_bytes()],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// Task 4 (Winogrande proxy): induction — after "E1 v1 … E2 v2 …", the
+/// prompt ends with "E1 " and the model should prefer v1 over v2.
+pub fn gen_induction_items(vocab: &Vocabulary, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::new(seed ^ 0x14D_0C7);
+    (0..n)
+        .map(|_| {
+            let e1 = &vocab.entities[rng.below(vocab.entities.len())];
+            let mut e2 = &vocab.entities[rng.below(vocab.entities.len())];
+            while e2 == e1 {
+                e2 = &vocab.entities[rng.below(vocab.entities.len())];
+            }
+            let v1 = &vocab.verbs[rng.below(vocab.verbs.len())];
+            let mut v2 = &vocab.verbs[rng.below(vocab.verbs.len())];
+            while v2 == v1 {
+                v2 = &vocab.verbs[rng.below(vocab.verbs.len())];
+            }
+            let n1 = &vocab.nouns[rng.below(vocab.nouns.len())];
+            let n2 = &vocab.nouns[rng.below(vocab.nouns.len())];
+            let ctx = format!("{e1} {v1} the {n1}. {e2} {v2} the {n2}. {e1} ");
+            ProbeItem {
+                context: ctx.into_bytes(),
+                choices: vec![v1.clone().into_bytes(), v2.clone().into_bytes()],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// The full probe suite in Table-2 column order.
+pub fn task_names() -> [&'static str; 4] {
+    ["BracketC", "BigramE", "Plaus", "Induct"]
+}
+
+pub fn gen_all_tasks(vocab: &Vocabulary, n: usize, seed: u64) -> Vec<(String, Vec<ProbeItem>)> {
+    vec![
+        ("BracketC".into(), gen_bracket_items(vocab, n, seed)),
+        ("BigramE".into(), gen_bigram_items(vocab, n, seed)),
+        ("Plaus".into(), gen_plaus_items(vocab, n, seed)),
+        ("Induct".into(), gen_induction_items(vocab, n, seed)),
+    ]
+}
+
+/// Accuracy of a scorer on a task (% of items whose correct choice wins).
+/// Choices are length-normalized (mean per-token logprob) as LM-Eval does
+/// for `acc` on unequal-length options.
+pub fn eval_task(scorer: &mut dyn LmScorer, items: &[ProbeItem]) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in items {
+        let prompt: Vec<i32> = item.context.iter().map(|&b| b as i32).collect();
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let cont: Vec<i32> = choice.iter().map(|&b| b as i32).collect();
+            let lp = scorer.score(&prompt, &cont)? / cont.len().max(1) as f64;
+            if lp > best.0 {
+                best = (lp, ci);
+            }
+        }
+        if best.1 == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / items.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Vocabulary;
+    use crate::model::{init_params, ModelConfig};
+
+    #[test]
+    fn items_are_deterministic_and_well_formed() {
+        let vocab = Vocabulary::build(1);
+        for (name, items) in gen_all_tasks(&vocab, 20, 7) {
+            assert_eq!(items.len(), 20, "{name}");
+            let again = match name.as_str() {
+                "BracketC" => gen_bracket_items(&vocab, 20, 7),
+                "BigramE" => gen_bigram_items(&vocab, 20, 7),
+                "Plaus" => gen_plaus_items(&vocab, 20, 7),
+                _ => gen_induction_items(&vocab, 20, 7),
+            };
+            for (a, b) in items.iter().zip(&again) {
+                assert_eq!(a.context, b.context);
+                assert_eq!(a.choices, b.choices);
+            }
+            for item in &items {
+                assert!(item.correct < item.choices.len());
+                assert!(!item.context.is_empty());
+                assert!(item.choices.iter().all(|c| !c.is_empty()));
+                assert_ne!(item.choices[0], item.choices[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_sequence_truncates_left_and_marks_start() {
+        let prompt: Vec<i32> = (0..100).collect();
+        let cont = vec![200, 201];
+        let (x, start) = pad_sequence(&prompt, &cont, 16);
+        assert_eq!(x.len(), 16);
+        assert_eq!(start, 14);
+        assert_eq!(x[13], 99); // last prompt token kept
+        assert_eq!(x[14], 200);
+    }
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let cfg = ModelConfig {
+            name: "t",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 1,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 64,
+            batch_train: 2,
+            batch_eval: 2,
+        };
+        let store = init_params(&cfg, 0);
+        let vocab = Vocabulary::build(1);
+        let items = gen_bracket_items(&vocab, 30, 3);
+        let mut scorer = NativeScorer { cfg: &cfg, store: &store };
+        let acc = eval_task(&mut scorer, &items).unwrap();
+        assert!((10.0..=90.0).contains(&acc), "untrained acc {acc} wildly off chance");
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment drivers: one function per paper table (DESIGN.md §5).
+//!
+//! Shared workflow: train (or load) a checkpoint through the AOT train-step
+//! artifact → capture calibration activations with the native forward →
+//! quantize with each method → evaluate perplexity (PJRT ForwardLoss) and
+//! zero-shot probes (PJRT Logits) → print the table and write
+//! `results/<id>.txt`.
+
+pub mod tables;
+pub mod workspace;
+
+pub use workspace::Workspace;

@@ -1,0 +1,416 @@
+//! Table drivers — each regenerates one table of the paper's evaluation
+//! (same rows/series; our substrate is the S/M synthetic-corpus models, so
+//! the claim is the *shape*, not the absolute numbers — DESIGN.md §3/§5).
+//!
+//! Method name mapping (ours → paper row):
+//!   rtn              → vanilla RTN floor
+//!   omniquant_lite   → OmniQ
+//!   gptq             → GPTQ (the strongest uniform scalar method)
+//!   kmeans_vq        → AQLM (free-form VQ with lookup decode)
+//!   quip_lite        → QuIP# (Hadamard + fixed E8)
+//!   tcq              → QTIP (trellis-coded)
+//!   binary           → OneBit (1-bit sign+scale)
+//!   binary_residual  → BiLLM-lite (2-bit residual binarization; the paper's
+//!                      BiLLM is ~1.1 b — ours is the same mechanism at 2 b,
+//!                      reported at its true rate)
+//!   glvq-8d/-32d(-u) → GLVQ variants
+
+use anyhow::Result;
+
+use crate::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use crate::data::corpus::Mix;
+use crate::glvq::pipeline::PipelineOpts;
+use crate::info;
+use crate::util::rng::Rng;
+
+use super::workspace::Workspace;
+
+/// Simple fixed-width table printer (also returned as the result text).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let mut out = format!("## {title}\n");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+const T1_METHODS: &[&str] = &["rtn", "omniquant_lite", "gptq", "quip_lite", "tcq", "glvq-8d", "glvq-32d"];
+const T2_METHODS: &[&str] = &["omniquant_lite", "gptq", "kmeans_vq", "quip_lite", "tcq", "glvq-8d"];
+pub const T1_MODELS: &[&str] = &["s", "m"];
+
+/// Table 1: 2-bit perplexity across model sizes and both eval mixes.
+pub fn table1(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["Method", "Bits", "wiki-S", "wiki-M", "web-S", "web-M"]);
+    // FP16 reference row
+    let mut fp16 = vec!["FP16".to_string(), "16".to_string()];
+    for mix in [Mix::Wiki, Mix::Web] {
+        for model in T1_MODELS {
+            let store = ws.trained_default(model)?;
+            fp16.push(f2(ws.ppl(model, &store, mix)?.ppl));
+        }
+    }
+    t.row(fp16);
+    for method in T1_METHODS {
+        let mut row = vec![method.to_string(), "2".to_string()];
+        for mix in [Mix::Wiki, Mix::Web] {
+            for model in T1_MODELS {
+                let (_, dq) = ws.quantize(model, method, 2.0, None)?;
+                row.push(f2(ws.ppl(model, &dq, mix)?.ppl));
+            }
+        }
+        t.row(row);
+    }
+    let text = t.render("Table 1: perplexity (2-bit), wiki + web mixes, S/M models");
+    ws.write_result("table1", &text)?;
+    Ok(text)
+}
+
+/// Table 2: zero-shot probe accuracy at 4/3/2 bits.
+pub fn table2(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["Model", "Method", "Bits", "BracketC", "BigramE", "Plaus", "Induct"]);
+    for model in T1_MODELS {
+        let store = ws.trained_default(model)?;
+        let mut row = vec![model.to_string(), "FP16".into(), "16".into()];
+        for (_, acc) in ws.zeroshot(model, &store)? {
+            row.push(f1(acc));
+        }
+        t.row(row);
+        for bits in [4.0, 3.0, 2.0] {
+            for method in T2_METHODS {
+                let (_, dq) = ws.quantize(model, method, bits, None)?;
+                let mut row = vec![model.to_string(), method.to_string(), format!("{bits}")];
+                for (_, acc) in ws.zeroshot(model, &dq)? {
+                    row.push(f1(acc));
+                }
+                t.row(row);
+            }
+        }
+    }
+    let text = t.render("Table 2: zero-shot probe accuracy (acc %, LM-score forced choice)");
+    ws.write_result("table2", &text)?;
+    Ok(text)
+}
+
+/// Table 3: fractional and sub-2-bit rates.
+pub fn table3(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["Method", "Bits", "ppl-S", "ppl-M", "Δ to GLVQ"]);
+    let rows: &[(&str, f64)] = &[
+        ("binary", 1.0),      // OneBit-lite
+        ("glvq-8d", 1.0),     // GLVQ 1.0 bit (uniform 1-bit groups)
+        ("binary_residual", 2.0), // BiLLM-lite (true rate 2.0)
+        ("glvq-8d", 1.5),     // GLVQ 1.5 bit (SDBA 1/2 mix)
+        ("rtn", 2.0),         // 2-bit uniform reference
+        ("glvq-8d", 2.0),
+    ];
+    let mut glvq_at: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut measured: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (method, bits) in rows {
+        let mut ppls = [0.0f64; 2];
+        for (i, model) in T1_MODELS.iter().enumerate() {
+            let (qm, dq) = ws.quantize(model, method, *bits, None)?;
+            ppls[i] = ws.ppl(model, &dq, Mix::Wiki)?.ppl;
+            if *method == "glvq-8d" {
+                glvq_at.insert(format!("{model}:{bits}"), ppls[i]);
+            }
+            let _ = qm;
+        }
+        measured.push((method.to_string(), *bits, ppls[0], ppls[1]));
+    }
+    for (method, bits, p_s, p_m) in measured {
+        let anchor = glvq_at
+            .get(&format!("s:{}", if bits <= 1.0 { 1.0 } else if bits <= 1.5 { 1.5 } else { 2.0 }))
+            .copied()
+            .unwrap_or(p_s);
+        let delta = p_s - anchor;
+        t.row(vec![method, format!("{bits}"), f2(p_s), f2(p_m), format!("{delta:+.2}")]);
+    }
+    let text = t.render("Table 3: fractional / sub-2-bit rates (wiki ppl)");
+    ws.write_result("table3", &text)?;
+    Ok(text)
+}
+
+/// Table 4: decode throughput (TOK/s proxy), bytes-moved bandwidth model,
+/// and 2-bit perplexity — the accuracy/efficiency trade-off.
+pub fn table4(ws: &mut Workspace) -> Result<String> {
+    let model = "m";
+    let methods: &[&str] = &[
+        "rtn",
+        "gptq",
+        "kmeans_vq",
+        "quip_lite",
+        "tcq",
+        "glvq-8d-u",
+        "glvq-32d-u",
+        "glvq-8d",
+        "glvq-32d",
+    ];
+    let mut t = Table::new(&["Method", "TOK/s", "MB/tok", "GB/s(model)", "ppl(2bit)"]);
+    let cfg = ws.model_cfg(model)?;
+    let mut rng = Rng::new(5);
+    for method in methods {
+        let (qm, dq) = ws.quantize(model, method, 2.0, None)?;
+        let ppl = ws.ppl(model, &dq, Mix::Wiki)?.ppl;
+        // one "token" = streaming dequant-matvec through every quantized
+        // tensor (the dequant-GEMV workload of autoregressive decode)
+        let mut sm = StreamingMatvec::new(16);
+        let reps = 20usize;
+        let mut stats = DecodeStats::default();
+        let inputs: Vec<Vec<f32>> = qm
+            .tensors
+            .iter()
+            .map(|qt| (0..qt.cols).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut outs: Vec<Vec<f32>> = qm.tensors.iter().map(|qt| vec![0.0; qt.rows]).collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for (i, qt) in qm.tensors.iter().enumerate() {
+                sm.matvec(qt, &inputs[i], &mut outs[i], &mut stats);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let tok_s = reps as f64 / secs;
+        let bytes_per_tok = stats.total_bytes() as f64 / reps as f64;
+        let gbs = bytes_per_tok * tok_s / 1e9;
+        t.row(vec![
+            method.to_string(),
+            f1(tok_s),
+            format!("{:.3}", bytes_per_tok / 1e6),
+            format!("{gbs:.3}"),
+            f2(ppl),
+        ]);
+        let _ = cfg;
+    }
+    let text =
+        t.render("Table 4: streaming decode throughput + bytes-moved bandwidth (model M, 2-bit)");
+    ws.write_result("table4", &text)?;
+    Ok(text)
+}
+
+/// Table 5: side-information overhead — analytic Eq. 27 vs measured.
+pub fn table5(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["d", "m_g", "n_g", "b=2 (%)", "b=3 (%)", "b=4 (%)", "measured (%)"]);
+    for &d in &[8usize, 16, 32] {
+        for &ng in &[128usize, 256] {
+            let mg = 4096usize;
+            let mut cells = vec![d.to_string(), mg.to_string(), ng.to_string()];
+            for &b in &[2usize, 3, 4] {
+                // Eq. 27 with our +2-byte scale deviation: (16d²+32+16)/(m n b)
+                let oh = (16.0 * (d * d) as f64 + 48.0) / ((mg * ng * b) as f64) * 100.0;
+                cells.push(format!("{oh:.3}"));
+            }
+            // measured from a real container (model s, glvq at this d, 2-bit)
+            let method = match d {
+                8 => "glvq-8d",
+                16 => "glvq-16d",
+                _ => "glvq-32d",
+            };
+            let (qm, _) = ws.quantize("s", method, 2.0, None)?;
+            let (payload, side) = qm.size_bytes();
+            cells.push(format!("{:.3}", side as f64 / payload as f64 * 100.0));
+            t.row(cells);
+        }
+    }
+    let text = t.render("Table 5: side-info overhead, analytic (Eq. 27) vs measured container");
+    ws.write_result("table5", &text)?;
+    Ok(text)
+}
+
+/// Generic two-variant ablation over bits × models (Tables 6, 7, 8).
+fn ablation_table(
+    ws: &mut Workspace,
+    id: &str,
+    title: &str,
+    with: (&str, &str),
+    without: (&str, &str),
+) -> Result<String> {
+    let mut t = Table::new(&["Variant", "Bits", "ppl-S", "ppl-M"]);
+    for bits in [2.0, 3.0, 4.0] {
+        for (label, method) in [with, without] {
+            let mut row = vec![label.to_string(), format!("{bits}")];
+            for model in T1_MODELS {
+                let (_, dq) = ws.quantize(model, method, bits, None)?;
+                row.push(f2(ws.ppl(model, &dq, Mix::Wiki)?.ppl));
+            }
+            t.row(row);
+        }
+    }
+    let text = t.render(title);
+    ws.write_result(id, &text)?;
+    Ok(text)
+}
+
+/// Table 6: SDBA bit allocation on/off.
+pub fn table6(ws: &mut Workspace) -> Result<String> {
+    ablation_table(
+        ws,
+        "table6",
+        "Table 6: salience-determined bit allocation ablation (wiki ppl)",
+        ("glvq-8d (SDBA)", "glvq-8d"),
+        ("glvq-8d-u (uniform)", "glvq-8d-u"),
+    )
+}
+
+/// Table 7: adaptive vs fixed (shared) lattice.
+pub fn table7(ws: &mut Workspace) -> Result<String> {
+    ablation_table(
+        ws,
+        "table7",
+        "Table 7: adaptive vs fixed lattice basis (wiki ppl)",
+        ("glvq-8d (adaptive)", "glvq-8d"),
+        ("glvq-8d (fixed)", "glvq-fixed"),
+    )
+}
+
+/// Table 8: group-specific companding on/off.
+pub fn table8(ws: &mut Workspace) -> Result<String> {
+    ablation_table(
+        ws,
+        "table8",
+        "Table 8: group-specific mu-law companding ablation (wiki ppl)",
+        ("glvq-8d (companding)", "glvq-8d"),
+        ("glvq-8d (fixed mu)", "glvq-8d-nocompand"),
+    )
+}
+
+/// Tables 9+10: group-size sweep on model S, both eval mixes.
+pub fn table9(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["GroupSize", "2b wiki", "3b wiki", "4b wiki", "2b web", "3b web", "4b web", "side/payload %"]);
+    for &gs in &[32usize, 64, 128, 256, 512] {
+        let mut row = vec![gs.to_string()];
+        let mut overhead = 0.0f64;
+        for mix in [Mix::Wiki, Mix::Web] {
+            for bits in [2.0, 3.0, 4.0] {
+                let opts = PipelineOpts { group_size: gs, target_bits: bits, ..Default::default() };
+                let (qm, dq) = ws.quantize("s", "glvq-8d", bits, Some(opts))?;
+                row.push(f2(ws.ppl("s", &dq, mix)?.ppl));
+                if bits == 2.0 && mix == Mix::Wiki {
+                    let (payload, side) = qm.size_bytes();
+                    overhead = side as f64 / payload as f64 * 100.0;
+                }
+            }
+        }
+        row.push(format!("{overhead:.2}"));
+        t.row(row);
+    }
+    let text = t.render("Tables 9+10: group-size sweep (GLVQ-8D, model S)");
+    ws.write_result("table9", &text)?;
+    Ok(text)
+}
+
+/// Table 11: calibration-size sweep (columns captured per group).
+pub fn table11(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&["CalibCols", "ppl-S wiki", "ppl-S web"]);
+    for &n in &[16usize, 32, 64, 128, 192, 256] {
+        // calibration size flows through the capture budget
+        let calib = ws.calibration_sized("s", n)?;
+        let (_, dq) = ws.quantize_with_calib("s", "glvq-8d", 2.0, &calib)?;
+        let w = ws.ppl("s", &dq, Mix::Wiki)?.ppl;
+        let c = ws.ppl("s", &dq, Mix::Web)?.ppl;
+        t.row(vec![n.to_string(), f2(w), f2(c)]);
+    }
+    let text = t.render("Table 11: calibration-set size sweep (GLVQ-8D 2-bit, model S)");
+    ws.write_result("table11", &text)?;
+    Ok(text)
+}
+
+/// Tables 12+13: Babai vs GCD (ppl + zero-shot).
+pub fn table12(ws: &mut Workspace) -> Result<String> {
+    let mut t = Table::new(&[
+        "Assignment", "Bits", "ppl-S", "ppl-M", "BracketC", "BigramE", "Plaus", "Induct",
+    ]);
+    for bits in [4.0, 3.0, 2.0] {
+        for (label, method) in [("babai", "glvq-8d"), ("gcd", "glvq-8d-gcd")] {
+            let mut row = vec![label.to_string(), format!("{bits}")];
+            for model in T1_MODELS {
+                let (_, dq) = ws.quantize(model, method, bits, None)?;
+                row.push(f2(ws.ppl(model, &dq, Mix::Wiki)?.ppl));
+            }
+            let (_, dq) = ws.quantize("s", method, bits, None)?;
+            for (_, acc) in ws.zeroshot("s", &dq)? {
+                row.push(f1(acc));
+            }
+            t.row(row);
+        }
+    }
+    let text = t.render("Tables 12+13: Babai rounding vs greedy coordinate descent");
+    ws.write_result("table12", &text)?;
+    Ok(text)
+}
+
+/// Run one table by id ("table1".."table13", "all").
+pub fn run(ws: &mut Workspace, id: &str) -> Result<()> {
+    let run_one = |ws: &mut Workspace, id: &str| -> Result<String> {
+        match id {
+            "table1" => table1(ws),
+            "table2" => table2(ws),
+            "table3" => table3(ws),
+            "table4" => table4(ws),
+            "table5" => table5(ws),
+            "table6" => table6(ws),
+            "table7" => table7(ws),
+            "table8" => table8(ws),
+            "table9" | "table10" => table9(ws),
+            "table11" => table11(ws),
+            "table12" | "table13" => table12(ws),
+            _ => anyhow::bail!("unknown table id {id}"),
+        }
+    };
+    if id == "all" {
+        for id in [
+            "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8",
+            "table9", "table11", "table12",
+        ] {
+            info!("=== running {id} ===");
+            let text = run_one(ws, id)?;
+            println!("{text}");
+        }
+    } else {
+        let text = run_one(ws, id)?;
+        println!("{text}");
+    }
+    Ok(())
+}

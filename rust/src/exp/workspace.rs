@@ -1,0 +1,306 @@
+//! Experiment workspace: trained checkpoints, calibration capture, corpora,
+//! quantization and evaluation helpers shared by every table driver.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::baselines;
+use crate::config::GlvqConfig;
+use crate::data::batches::BatchIter;
+use crate::data::corpus::{Corpus, Mix};
+use crate::data::tokenizer::encode;
+use crate::eval::native_fwd::CalibCapture;
+use crate::eval::perplexity::{ppl_pjrt, PplResult};
+use crate::eval::zeroshot::{self, PjrtScorer};
+use crate::glvq::optimizer::GlvqGroupQuantizer;
+use crate::glvq::pipeline::{dequantized_store, quantize_model, CalibSet, PipelineOpts};
+use crate::model::ModelConfig;
+use crate::quant::format::QuantizedModel;
+use crate::runtime::exec::{TrainState, TrainStepExec};
+use crate::runtime::Engine;
+use crate::tensor::TensorStore;
+use crate::{info, warnlog};
+
+/// Seeds: training corpus, eval corpora, calibration stream.
+pub const TRAIN_SEED: u64 = 42;
+pub const EVAL_WIKI_SEED: u64 = 1042;
+pub const EVAL_WEB_SEED: u64 = 1043;
+pub const CALIB_SEED: u64 = 7;
+
+/// How many eval batches per perplexity measurement (fixed across methods).
+pub const EVAL_BATCHES: usize = 12;
+/// Zero-shot items per probe task.
+pub const ZS_ITEMS: usize = 40;
+
+pub struct Workspace {
+    pub engine: Engine,
+    pub dir: PathBuf,
+    pub results_dir: PathBuf,
+    calib_cache: BTreeMap<String, CalibSet>,
+    store_cache: BTreeMap<String, TensorStore>,
+    eval_tokens: BTreeMap<Mix, Vec<i32>>,
+    quant_cache: BTreeMap<String, (QuantizedModel, TensorStore)>,
+}
+
+impl Workspace {
+    pub fn new(artifacts: &str, dir: &str) -> Result<Workspace> {
+        let engine = Engine::new(std::path::Path::new(artifacts))?;
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let results_dir = dir.join("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(Workspace {
+            engine,
+            dir,
+            results_dir,
+            calib_cache: BTreeMap::new(),
+            store_cache: BTreeMap::new(),
+            eval_tokens: BTreeMap::new(),
+            quant_cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn model_cfg(&self, model: &str) -> Result<ModelConfig> {
+        Ok(self
+            .engine
+            .models
+            .get(model)
+            .with_context(|| format!("artifacts missing model {model}"))?
+            .config)
+    }
+
+    /// Held-out eval token stream for a mix (cached).
+    pub fn eval_tokens(&mut self, mix: Mix) -> &[i32] {
+        self.eval_tokens.entry(mix).or_insert_with(|| {
+            let seed = if mix == Mix::Wiki { EVAL_WIKI_SEED } else { EVAL_WEB_SEED };
+            encode(&Corpus::new(mix, seed).generate(1 << 18))
+        })
+    }
+
+    /// Train a model through the AOT train-step artifact (or load the cached
+    /// checkpoint). Returns the trained store; loss curve is written next to
+    /// the checkpoint.
+    pub fn trained(&mut self, model: &str, steps: usize, lr: f32) -> Result<TensorStore> {
+        if let Some(s) = self.store_cache.get(model) {
+            return Ok(s.clone());
+        }
+        let path = self.dir.join(format!("model_{model}.gten"));
+        if path.exists() {
+            let store = TensorStore::load(&path)?;
+            self.store_cache.insert(model.to_string(), store.clone());
+            return Ok(store);
+        }
+        let cfg = self.model_cfg(model)?;
+        info!("training model {model} for {steps} steps (lr={lr})");
+        let corpus = Corpus::new(Mix::Wiki, TRAIN_SEED).generate(1 << 21);
+        let tokens = encode(&corpus);
+        let init = crate::model::init_params(&cfg, 0);
+        let exec = TrainStepExec::new(&self.engine, model)?;
+        let mut state = TrainState::from_store(&self.engine, model, &init)?;
+        let mut it = BatchIter::new(&tokens, cfg.batch_train, cfg.seq_len, TRAIN_SEED, true);
+        let mut curve: Vec<(usize, f32)> = Vec::new();
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let (x, y) = it.next_batch().context("corpus exhausted")?;
+            // cosine-decayed lr with short warmup
+            let warm = (step as f32 / 20.0).min(1.0);
+            let cos = 0.5 * (1.0 + (std::f32::consts::PI * step as f32 / steps as f32).cos());
+            let lr_t = lr * warm * (0.1 + 0.9 * cos);
+            let loss = exec.step(&mut state, lr_t, &x, &y)?;
+            if step % 20 == 0 || step + 1 == steps {
+                info!("  step {step:4} loss {loss:.4} ({:.1}s)", t0.elapsed().as_secs_f64());
+                curve.push((step, loss));
+            }
+        }
+        let store = state.to_store()?;
+        store.save(&path)?;
+        let curve_txt: String = curve
+            .iter()
+            .map(|(s, l)| format!("{s}\t{l}\n"))
+            .collect();
+        std::fs::write(self.dir.join(format!("model_{model}.loss.tsv")), curve_txt)?;
+        self.store_cache.insert(model.to_string(), store.clone());
+        Ok(store)
+    }
+
+    /// Default training budget per model size.
+    pub fn default_steps(model: &str) -> usize {
+        match model {
+            "s" => 400,
+            "m" => 250,
+            _ => 150,
+        }
+    }
+
+    pub fn trained_default(&mut self, model: &str) -> Result<TensorStore> {
+        self.trained(model, Self::default_steps(model), 3e-3)
+    }
+
+    /// Calibration activations captured by the native forward on a fresh
+    /// calibration stream (cached per model+budget).
+    pub fn calibration(&mut self, model: &str, n_cols: usize) -> Result<CalibSet> {
+        let key = format!("{model}:{n_cols}");
+        if let Some(c) = self.calib_cache.get(&key) {
+            return Ok(c.clone());
+        }
+        let cfg = self.model_cfg(model)?;
+        let store = self.trained_default(model)?;
+        let corpus = Corpus::new(Mix::Wiki, CALIB_SEED).generate(1 << 17);
+        let tokens = encode(&corpus);
+        let mut cap = CalibCapture::new(n_cols, CALIB_SEED);
+        let mut it = BatchIter::new(&tokens, cfg.batch_eval, cfg.seq_len, CALIB_SEED, true);
+        // enough batches to fill the reservoir a few times over
+        let batches = (2 * n_cols).div_ceil(cfg.batch_eval * cfg.seq_len).max(2);
+        for _ in 0..batches {
+            let (x, _) = it.next_batch().context("calib exhausted")?;
+            crate::eval::native_fwd::forward(&cfg, &store, &x, cfg.batch_eval, Some(&mut cap))?;
+        }
+        let calib = cap.into_calib_set();
+        self.calib_cache.insert(key, calib.clone());
+        Ok(calib)
+    }
+
+    /// Build a GLVQ quantizer for a method string like "glvq-8d",
+    /// "glvq-32d", "glvq-8d-u"; None if the name is a baseline.
+    pub fn glvq_for(method: &str, bits: f64, group_size: usize) -> Option<(GlvqGroupQuantizer, bool)> {
+        let cfg = GlvqConfig::preset(method).ok()?;
+        let mut cfg = cfg;
+        cfg.target_bits = bits;
+        cfg.group_size = group_size;
+        cfg.iters = 32;
+        let bit_alloc = cfg.bit_allocation;
+        Some((GlvqGroupQuantizer::new(cfg), bit_alloc))
+    }
+
+    /// Quantize a trained model with a named method at a bit target.
+    /// Method names: glvq-8d / glvq-16d / glvq-32d / glvq-*-u / any
+    /// baselines::by_name key. Returns (container, dequantized store).
+    pub fn quantize(
+        &mut self,
+        model: &str,
+        method: &str,
+        bits: f64,
+        opts_override: Option<PipelineOpts>,
+    ) -> Result<(QuantizedModel, TensorStore)> {
+        let gs = opts_override.as_ref().map_or(128, |o| o.group_size);
+        let key = format!("{model}:{method}:{bits}:{gs}");
+        if let Some(hit) = self.quant_cache.get(&key) {
+            return Ok(hit.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let cfg = self.model_cfg(model)?;
+        let store = self.trained_default(model)?;
+        let calib = self.calibration(model, 192)?;
+        let specs = cfg.param_specs();
+        let mut opts = opts_override.unwrap_or_default();
+        opts.target_bits = bits;
+
+        let (qm, report) = if let Some((q, bit_alloc)) = Self::glvq_for(method, bits, opts.group_size) {
+            opts.bit_allocation = bit_alloc && opts.bit_allocation;
+            quantize_model(&specs, &store, &calib, &q, &opts)?
+        } else if method.starts_with("glvq-fixed") {
+            // Table-7 ablation: shared fixed lattice
+            let mut c = GlvqConfig::default();
+            c.lattice_dim = 8;
+            c.group_size = opts.group_size;
+            c.adaptive_lattice = false;
+            c.target_bits = bits;
+            c.iters = 32;
+            let q = GlvqGroupQuantizer::new(c);
+            quantize_model(&specs, &store, &calib, &q, &opts)?
+        } else if method == "glvq-8d-nocompand" {
+            // Table-8 ablation: fixed global μ
+            let mut c = GlvqConfig::default();
+            c.lattice_dim = 8;
+            c.group_size = opts.group_size;
+            c.adaptive_companding = false;
+            c.target_bits = bits;
+            c.iters = 32;
+            let q = GlvqGroupQuantizer::new(c);
+            quantize_model(&specs, &store, &calib, &q, &opts)?
+        } else if method == "glvq-8d-gcd" {
+            // Table-12/13 ablation: GCD assignment
+            let mut c = GlvqConfig::default();
+            c.lattice_dim = 8;
+            c.group_size = opts.group_size;
+            c.assignment = crate::config::Assignment::Gcd;
+            c.target_bits = bits;
+            c.iters = 32;
+            let q = GlvqGroupQuantizer::new(c);
+            quantize_model(&specs, &store, &calib, &q, &opts)?
+        } else {
+            let q = baselines::by_name(method)
+                .with_context(|| format!("unknown method {method}"))?;
+            opts.bit_allocation = false; // baselines use uniform allocation
+            quantize_model(&specs, &store, &calib, &*q, &opts)?
+        };
+        if report.tensors.is_empty() {
+            warnlog!("{method}: no tensors quantized");
+        }
+        let dq = dequantized_store(&qm, &store);
+        info!(
+            "quantized {model} with {method}@{bits}b (gs={gs}): avg_bits={:.3} err={:.2} ({:.1}s)",
+            qm.avg_bits(),
+            report.total_recon_error(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.quant_cache.insert(key, (qm.clone(), dq.clone()));
+        Ok((qm, dq))
+    }
+
+    /// Calibration with an explicit column budget (Table-11 sweep).
+    pub fn calibration_sized(&mut self, model: &str, n_cols: usize) -> Result<CalibSet> {
+        self.calibration(model, n_cols)
+    }
+
+    /// Quantize against an explicit calibration set (bypasses the quantized-
+    /// model cache — used by the calibration-size sweep).
+    pub fn quantize_with_calib(
+        &mut self,
+        model: &str,
+        method: &str,
+        bits: f64,
+        calib: &CalibSet,
+    ) -> Result<(QuantizedModel, TensorStore)> {
+        let cfg = self.model_cfg(model)?;
+        let store = self.trained_default(model)?;
+        let specs = cfg.param_specs();
+        let mut opts = PipelineOpts::default();
+        opts.target_bits = bits;
+        let (q, bit_alloc) = Self::glvq_for(method, bits, opts.group_size)
+            .with_context(|| format!("{method} is not a GLVQ preset"))?;
+        opts.bit_allocation = bit_alloc;
+        let (qm, _) = quantize_model(&specs, &store, calib, &q, &opts)?;
+        let dq = dequantized_store(&qm, &store);
+        Ok((qm, dq))
+    }
+
+    /// Perplexity of a (possibly quantized) store through PJRT ForwardLoss.
+    pub fn ppl(&mut self, model: &str, store: &TensorStore, mix: Mix) -> Result<PplResult> {
+        let tokens = self.eval_tokens(mix).to_vec();
+        ppl_pjrt(&self.engine, model, store, &tokens, EVAL_BATCHES)
+    }
+
+    /// Zero-shot probe accuracies (task name → %).
+    pub fn zeroshot(&mut self, model: &str, store: &TensorStore) -> Result<Vec<(String, f64)>> {
+        let vocab = crate::data::corpus::Vocabulary::build(1);
+        let tasks = zeroshot::gen_all_tasks(&vocab, ZS_ITEMS, 11);
+        let mut scorer = PjrtScorer::new(&self.engine, model, store)?;
+        let mut out = Vec::new();
+        for (name, items) in tasks {
+            let acc = zeroshot::eval_task(&mut scorer, &items)?;
+            out.push((name, acc));
+        }
+        Ok(out)
+    }
+
+    /// Write a result blob under results/.
+    pub fn write_result(&self, id: &str, text: &str) -> Result<()> {
+        let path = self.results_dir.join(format!("{id}.txt"));
+        std::fs::write(&path, text)?;
+        info!("wrote {}", path.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,165 @@
+//! Group partitioning (paper §3.2): a weight tensor stored (n_in × n_out)
+//! is viewed in the paper's orientation Wᵀ = (m × n) with m = n_out rows and
+//! n = n_in input-feature columns; column groups of `group_size` along n are
+//! the quantization units, and each group is further reshaped row-major into
+//! d-length sub-blocks for the lattice.
+
+use crate::linalg::Mat;
+
+/// One group's placement within its tensor (paper column group).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupSpan {
+    /// starting input-feature column (in the m×n orientation)
+    pub col0: usize,
+    /// number of columns (== group_size except possibly the last group)
+    pub cols: usize,
+}
+
+/// Compute the column-group spans for input dimension `n_in`.
+/// The tail group is shrunk (never padded) so every weight belongs to
+/// exactly one group; spans are clamped to at least `d` columns.
+pub fn group_spans(n_in: usize, group_size: usize) -> Vec<GroupSpan> {
+    assert!(group_size > 0);
+    let mut spans = Vec::new();
+    let mut c = 0usize;
+    while c < n_in {
+        let cols = group_size.min(n_in - c);
+        spans.push(GroupSpan { col0: c, cols });
+        c += cols;
+    }
+    spans
+}
+
+/// Extract the (m × cols) panel for a span from the transposed weight
+/// (wt: m × n_in) — this is `W_g` in the paper.
+pub fn group_panel(wt: &Mat, span: GroupSpan) -> Mat {
+    wt.slice(0, wt.rows, span.col0, span.col0 + span.cols)
+}
+
+/// Extract the (cols × N) calibration slice for a span from the layer's
+/// activation matrix X (n_in × N).
+pub fn group_calib(x: &Mat, span: GroupSpan) -> Mat {
+    x.slice(span.col0, span.col0 + span.cols, 0, x.cols)
+}
+
+/// View a (m × n) group panel as a (B × d) block panel, B = m·n/d.
+/// Because blocks are contiguous d-length runs within rows (row-major), the
+/// underlying data is already in block order — this is a pure reshape.
+pub fn as_blocks(w: &Mat, d: usize) -> Mat {
+    assert_eq!(
+        w.cols % d,
+        0,
+        "group width {} not divisible by lattice dim {d}",
+        w.cols
+    );
+    Mat::from_vec(w.rows * w.cols / d, d, w.data.clone())
+}
+
+/// Inverse of [`as_blocks`].
+pub fn from_blocks(blocks: &Mat, m: usize, n: usize) -> Mat {
+    assert_eq!(blocks.rows * blocks.cols, m * n);
+    Mat::from_vec(m, n, blocks.data.clone())
+}
+
+/// Covariance of block vectors (d × d): C = (1/B) Σ y_b y_bᵀ + eps·I.
+/// Seeds the Cholesky lattice initialization (paper Eq. 8 context).
+pub fn block_covariance(blocks: &Mat, eps: f32) -> Mat {
+    let (bn, d) = (blocks.rows, blocks.cols);
+    let mut c = Mat::zeros(d, d);
+    for b in 0..bn {
+        let row = blocks.row(b);
+        for i in 0..d {
+            let yi = row[i];
+            if yi == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                *c.at_mut(i, j) += yi * row[j];
+            }
+        }
+    }
+    let scale = 1.0 / bn.max(1) as f32;
+    for v in c.data.iter_mut() {
+        *v *= scale;
+    }
+    for i in 0..d {
+        *c.at_mut(i, i) += eps;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spans_cover_exactly_once() {
+        proptest(30, |rig| {
+            let n = rig.usize_in(1, 2000);
+            let gs = *rig.choice(&[32usize, 64, 128, 256, 512]);
+            let spans = group_spans(n, gs);
+            let mut covered = 0usize;
+            for (i, s) in spans.iter().enumerate() {
+                assert_eq!(s.col0, covered);
+                covered += s.cols;
+                if i + 1 < spans.len() {
+                    assert_eq!(s.cols, gs);
+                }
+            }
+            assert_eq!(covered, n);
+        });
+    }
+
+    #[test]
+    fn block_reshape_roundtrip_and_layout() {
+        let w = Mat::from_vec(2, 4, vec![0., 1., 2., 3., 10., 11., 12., 13.]);
+        let blocks = as_blocks(&w, 2);
+        assert_eq!(blocks.rows, 4);
+        // row-major d-runs: [0,1], [2,3], [10,11], [12,13]
+        assert_eq!(blocks.row(0), &[0., 1.]);
+        assert_eq!(blocks.row(1), &[2., 3.]);
+        assert_eq!(blocks.row(2), &[10., 11.]);
+        let back = from_blocks(&blocks, 2, 4);
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn panel_and_calib_slices_align() {
+        let mut rng = Rng::new(2);
+        let wt = Mat::random_normal(6, 10, 1.0, &mut rng);
+        let x = Mat::random_normal(10, 5, 1.0, &mut rng);
+        let spans = group_spans(10, 4);
+        assert_eq!(spans.len(), 3);
+        let p = group_panel(&wt, spans[1]);
+        assert_eq!((p.rows, p.cols), (6, 4));
+        assert_eq!(p.at(0, 0), wt.at(0, 4));
+        let c = group_calib(&x, spans[1]);
+        assert_eq!((c.rows, c.cols), (4, 5));
+        assert_eq!(c.at(0, 0), x.at(4, 0));
+        // product of full pieces reconstructs the full product
+        let full = wt.matmul(&x);
+        let mut sum = Mat::zeros(6, 5);
+        for s in spans {
+            let part = group_panel(&wt, s).matmul(&group_calib(&x, s));
+            sum = sum.add(&part);
+        }
+        assert!(sum.frob_dist(&full) < 1e-3);
+    }
+
+    #[test]
+    fn covariance_is_symmetric_psd_diagonal_dominantish() {
+        let mut rng = Rng::new(3);
+        let blocks = Mat::random_normal(500, 8, 0.1, &mut rng);
+        let c = block_covariance(&blocks, 1e-6);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((c.at(i, j) - c.at(j, i)).abs() < 1e-6);
+            }
+            assert!(c.at(i, i) > 0.0);
+        }
+        // cholesky must succeed (PSD + eps)
+        assert!(crate::linalg::decomp::cholesky(&c).is_ok());
+    }
+}

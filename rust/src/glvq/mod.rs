@@ -1,0 +1,16 @@
+//! The paper's core contribution: Grouped Lattice Vector Quantization.
+//!
+//! - [`group`] — partitioning weight tensors into column groups and d-length
+//!   sub-blocks (paper §3.2 reshape),
+//! - [`optimizer`] — the per-group alternating optimizer (Alg. 1): Babai/GCD
+//!   Z-step, analytic-gradient Adam G/μ-step, spectral clamp, Frobenius
+//!   regularization, ε-convergence,
+//! - [`pipeline`] — model-scope orchestration: salience → bit allocation →
+//!   per-group optimization → `.glvq` container assembly.
+
+pub mod group;
+pub mod optimizer;
+pub mod pipeline;
+
+pub use optimizer::{GlvqGroupQuantizer, GroupFit};
+pub use pipeline::{quantize_model, CalibSet, PipelineReport};

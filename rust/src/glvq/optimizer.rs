@@ -1,0 +1,487 @@
+//! Per-group GLVQ alternating optimizer (paper Algorithm 1).
+//!
+//! Each iteration:
+//!   1. **Z-step** (Eq. 6): codes `Z = assign(G⁻¹ F_μ(W))`, clamped to the
+//!      b-bit range; `assign` is Babai rounding or GCD (ablation).
+//!   2. **G/μ-step** (Eq. 7 + companding chain rule): analytic gradients of
+//!      `L = ||W X − F_μ⁻¹(G Z) X||² + λ||G − G₀||²` w.r.t. G and μ with Z
+//!      frozen; Adam update; spectral clamp of G to [σ_min, σ_max]; μ
+//!      projected to [10, 255].
+//! Stops when the relative loss improvement falls below ε (two consecutive
+//! iterations) or the iteration budget is exhausted.
+//!
+//! Initialization: μ⁰ = 100·tanh(κ/10) (Eq. 12) and G₀ = α·chol(cov(Y))
+//! (the paper's covariance-Cholesky init) with α chosen so Babai codes fill
+//! the b-bit range.
+//!
+//! The analytic gradients are verified against the JAX AD graph
+//! (`glvq_step_d*.hlo.txt`) in rust/tests/pjrt_parity.rs.
+
+use crate::compand::MuLaw;
+use crate::config::{Assignment, GlvqConfig};
+use crate::glvq::group::{as_blocks, block_covariance};
+use crate::lattice::babai::babai_batch_shifted_into;
+use crate::lattice::gcd::GcdEncoder;
+use crate::lattice::{GenLattice, LatticeEncoder};
+use crate::linalg::decomp::cholesky;
+use crate::linalg::matrix::matmul_into;
+use crate::linalg::spectral::spectral_clamp;
+use crate::linalg::Mat;
+use crate::quant::pack::{clamp_code, code_range, PackedCodes};
+use crate::quant::traits::{GroupQuantizer, QuantizedGroup, SideInfo};
+
+/// Result of fitting one group: quantized codes + diagnostics.
+#[derive(Clone, Debug)]
+pub struct GroupFit {
+    pub quantized: QuantizedGroup,
+    pub final_loss: f64,
+    pub initial_loss: f64,
+    pub iters_run: usize,
+    pub mu: f32,
+}
+
+/// Scalar Adam state for the μ parameter and matrix Adam for G.
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+}
+
+impl Adam {
+    fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0.0 }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.t += 1.0;
+        let bc1 = 1.0 - B1.powf(self.t);
+        let bc2 = 1.0 - B2.powf(self.t);
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grads[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grads[i] * grads[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= lr * mh / (vh.sqrt() + EPS);
+        }
+    }
+}
+
+/// The GLVQ group quantizer (implements [`GroupQuantizer`]).
+pub struct GlvqGroupQuantizer {
+    pub cfg: GlvqConfig,
+    /// shared fixed basis for the Table-7 ablation (adaptive_lattice=false);
+    /// None ⇒ per-group scaled identity seed
+    pub fixed_mu: f32,
+}
+
+impl GlvqGroupQuantizer {
+    pub fn new(cfg: GlvqConfig) -> GlvqGroupQuantizer {
+        GlvqGroupQuantizer { cfg, fixed_mu: 50.0 }
+    }
+
+    /// Fit one group; the full Alg. 1 loop.
+    pub fn fit(&self, w: &Mat, x: &Mat, bits: u8) -> GroupFit {
+        let cfg = &self.cfg;
+        let d = cfg.lattice_dim;
+        let (m, n) = (w.rows, w.cols);
+        assert_eq!(n % d, 0, "group width {n} not divisible by d={d}");
+
+        // ---- companding init (Eq. 12) ----
+        let mut comp = if cfg.adaptive_companding {
+            MuLaw::init_from_kurtosis(&w.data)
+        } else {
+            MuLaw::new(self.fixed_mu)
+        };
+
+        // normalize weights into [-1, 1] for μ-law domain; the scale folds
+        // into G (decode = s · F⁻¹(G z) with s absorbed by regenerating G′ =
+        // ... we instead keep an explicit normalization and fold it into G
+        // at the end via the lattice scale).
+        let wmax = w.max_abs().max(1e-8);
+        let wn = w.scale(1.0 / wmax);
+
+        // companded blocks Y (B × d)
+        let mut y = as_blocks(&wn, d);
+        comp.forward_slice(&mut y.data);
+
+        // ---- lattice init: α · chol(cov(Y)), α grid-searched ----
+        let (lo, hi) = code_range(bits);
+        let code_span = 0.5 * (hi - lo) as f32; // ≈ 2^{b-1}
+        let alpha0 = 4.0 / ((1u32 << bits) as f32); // step ≈ ±2σ range / 2^b
+        let shape = if cfg.adaptive_lattice {
+            let cov = block_covariance(&y, 1e-7);
+            match cholesky(&cov) {
+                Ok(l) => l,
+                Err(_) => Mat::eye(d).scale(crate::linalg::stats::std_dev(&y.data) as f32),
+            }
+        } else {
+            // fixed-basis ablation: scaled identity (per-group scalar only)
+            Mat::eye(d).scale(crate::linalg::stats::std_dev(&y.data).max(1e-6) as f32)
+        };
+        // pick the init scale by direct search on companded-domain MSE
+        let mut best_init: Option<(f64, f32)> = None;
+        for mult in [0.4f32, 0.6, 0.85, 1.2, 1.7, 2.4] {
+            let cand = shape.scale(alpha0 * mult);
+            let lat_c = match GenLattice::new(cand) {
+                Ok(l) => l,
+                Err(_) => continue,
+            };
+            let mut zc = Mat::zeros(y.rows, d);
+            babai_batch_shifted_into(&lat_c, &y, &mut zc);
+            let mut err = 0.0f64;
+            for (b, row) in (0..zc.rows).map(|b| (b, zc.row(b))) {
+                for i in 0..d {
+                    // shifted-grid decode ŷ = G (z + ½)
+                    let mut acc = 0.0f32;
+                    for j in 0..d {
+                        acc += lat_c.g.at(i, j) * (clamp_code(row[j], bits) as f32 + 0.5);
+                    }
+                    err += ((y.at(b, i) - acc) as f64).powi(2);
+                }
+            }
+            if best_init.as_ref().map_or(true, |(e, _)| err < *e) {
+                best_init = Some((err, alpha0 * mult));
+            }
+        }
+        let alpha = best_init.map(|(_, a)| a).unwrap_or(alpha0);
+        let _ = code_span;
+
+        let mut lat = GenLattice::new(shape.scale(alpha)).unwrap_or_else(|_| {
+            GenLattice::scaled_identity(d, alpha * 0.05)
+        });
+        let g0_ref = lat.g.clone();
+        // learning rates are relative to the basis magnitude so the same
+        // config works across groups of very different scales
+        let g_mag = (lat.g.frob_norm() / (d as f32)).max(1e-6);
+        let lr_g_eff = cfg.lr_g * g_mag;
+        // spectral band relative to the initial spectrum
+        let sigma0 = crate::linalg::spectral::sigma_max(&lat.g, 30).max(1e-8);
+        let (band_lo, band_hi) = (cfg.sigma_min * sigma0, cfg.sigma_max * sigma0);
+
+        // scratch buffers reused across iterations (hot path)
+        let nblocks = m * n / d;
+        let mut z = Mat::zeros(nblocks, d);
+        let mut v = Mat::zeros(nblocks, d); // decoded lattice points G z
+        let mut w_hat = Mat::zeros(m, n);
+        let mut diff = Mat::zeros(m, n); // D = (W − Ŵ), raw units
+        let mut dsn = Mat::zeros(m, n); // D·S
+        // §Perf: precompute the calibration Gram matrix S = X Xᵀ once —
+        // the loss tr(D S Dᵀ) and its gradient −2·D·S then cost m·n² per
+        // iteration instead of 2·m·n·N (3× fewer MACs at N=256, and the
+        // per-iteration cost no longer scales with the calibration size).
+        let s_gram = x.matmul(&x.transpose());
+
+        let mut adam_g = Adam::new(d * d);
+        let mut adam_mu = Adam::new(1);
+
+        let gcd = GcdEncoder::default();
+        let mut losses: Vec<f64> = Vec::with_capacity(cfg.iters);
+        let mut best: Option<(f64, Mat, f32)> = None; // (loss, G, mu)
+
+        for iter in 0..cfg.iters {
+            // ---- Z-step ----
+            // refresh Y under current μ
+            y.data.copy_from_slice(&wn.data);
+            comp.forward_slice(&mut y.data);
+            let half = crate::lattice::babai::half_shift(&lat.g);
+            match cfg.assignment {
+                Assignment::Babai => babai_batch_shifted_into(&lat, &y, &mut z),
+                Assignment::Gcd => {
+                    // GCD on the shifted target: z = gcd(y − G·½)
+                    let mut ysh = vec![0.0f32; d];
+                    for b in 0..nblocks {
+                        for (i, v) in ysh.iter_mut().enumerate() {
+                            *v = y.at(b, i) - half[i];
+                        }
+                        let zz = gcd.encode(&lat, &ysh);
+                        z.row_mut(b).copy_from_slice(&zz);
+                    }
+                }
+            }
+            for c in z.data.iter_mut() {
+                *c = clamp_code(*c, bits) as f32;
+            }
+
+            // ---- decode + loss (half-integer grid: V = (Z+½) Gᵀ) ----
+            let mut zs = z.clone();
+            for c in zs.data.iter_mut() {
+                *c += 0.5;
+            }
+            let gt = lat.g.transpose();
+            matmul_into(&zs, &gt, &mut v); // V = (Z+½) Gᵀ  (B × d)
+            w_hat.data.copy_from_slice(&v.data);
+            comp.inverse_slice(&mut w_hat.data); // Ŵn = F⁻¹(V) (as m×n layout)
+
+            for i in 0..diff.data.len() {
+                diff.data[i] = (wn.data[i] - w_hat.data[i]) * wmax;
+            }
+            matmul_into(&diff, &s_gram, &mut dsn); // D·S
+            let recon: f64 = diff
+                .data
+                .iter()
+                .zip(&dsn.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let reg: f64 = cfg.lambda as f64 * (lat.g.frob_dist(&g0_ref) as f64).powi(2);
+            let loss = recon + reg;
+            losses.push(loss);
+
+            if best.as_ref().map_or(true, |(bl, _, _)| loss < *bl) {
+                best = Some((loss, lat.g.clone(), comp.mu));
+            }
+
+            // convergence check (relative improvement below ε twice)
+            if iter >= 2 {
+                let a = losses[iter - 1];
+                let b = losses[iter];
+                let rel = |p: f64, q: f64| (p - q).abs() / p.abs().max(1e-12);
+                if rel(a, b) < cfg.epsilon as f64 && rel(losses[iter - 2], a) < cfg.epsilon as f64 {
+                    break;
+                }
+            }
+            if iter + 1 == cfg.iters {
+                break;
+            }
+
+            // ---- gradients ----
+            // dL/dŴn = −2 wmax · D S  (m × n) — D·S already computed above
+            let dldw = &mut dsn;
+            for g in dldw.data.iter_mut() {
+                *g *= -2.0 * wmax;
+            }
+            // chain through F⁻¹: dL/dV = dL/dŴn ⊙ F⁻¹'(V); also dμ term
+            let mu = comp.mu;
+            let log1p_mu = (1.0 + mu).ln();
+            let mut dmu = 0.0f64;
+            // reuse w_hat buffer as dL/dV (same layout as V)
+            for i in 0..v.data.len() {
+                let vv = v.data[i];
+                let t = vv.abs();
+                let a = (t * log1p_mu).exp(); // (1+mu)^{|v|}
+                let dfdv = a * log1p_mu / mu;
+                let g_up = dldw.data[i];
+                // ∂F⁻¹/∂μ = sgn(v)( a·t·μ/(1+μ) − (a−1) ) / μ²
+                let dfdmu = vv.signum() * (a * t * mu / (1.0 + mu) - (a - 1.0)) / (mu * mu);
+                dmu += (g_up * dfdmu) as f64;
+                w_hat.data[i] = g_up * dfdv; // dL/dV
+            }
+            // dL/dG = (dL/dV panel)ᵀ @ (Z+½) + 2λ(G − G0)
+            let dldv = Mat::from_vec(nblocks, d, w_hat.data.clone());
+            let mut dg = dldv.transpose().matmul(&zs);
+            dg.axpy(2.0 * cfg.lambda, &lat.g.sub(&g0_ref));
+
+            // ---- updates ----
+            if cfg.adaptive_lattice {
+                let mut gnew = lat.g.clone();
+                adam_g.step(&mut gnew.data, &dg.data, lr_g_eff);
+                gnew = spectral_clamp(&gnew, band_lo, band_hi);
+                if lat.set_g(gnew).is_err() {
+                    break; // singular update — keep previous basis, stop
+                }
+            }
+            if cfg.adaptive_companding {
+                let mut mu_arr = [comp.mu];
+                adam_mu.step(&mut mu_arr, &[dmu as f32], cfg.lr_mu);
+                comp = MuLaw { mu: mu_arr[0] };
+                comp.project();
+            }
+        }
+
+        // restore the best (G, μ) seen
+        let (best_loss, best_g, best_mu) = best.expect("at least one iteration ran");
+        let _ = lat.set_g(best_g);
+        comp = MuLaw::new(best_mu);
+
+        // ---- final encode with the best parameters (shifted grid) ----
+        y.data.copy_from_slice(&wn.data);
+        comp.forward_slice(&mut y.data);
+        let half = crate::lattice::babai::half_shift(&lat.g);
+        match cfg.assignment {
+            Assignment::Babai => babai_batch_shifted_into(&lat, &y, &mut z),
+            Assignment::Gcd => {
+                let mut ysh = vec![0.0f32; d];
+                for b in 0..nblocks {
+                    for (i, v) in ysh.iter_mut().enumerate() {
+                        *v = y.at(b, i) - half[i];
+                    }
+                    let zz = gcd.encode(&lat, &ysh);
+                    z.row_mut(b).copy_from_slice(&zz);
+                }
+            }
+        }
+        let codes: Vec<i32> = z.data.iter().map(|&c| clamp_code(c, bits)).collect();
+
+        // Side info: G, μ, plus the group normalization scale (decode chain
+        // ŵ = wmax·F⁻¹(Gz) — bit-exact with the training objective).
+        let side = SideInfo::Lattice { d, g: lat.g.data.clone(), mu: comp.mu, scale: wmax };
+        let quantized = QuantizedGroup {
+            method: if self.cfg.adaptive_lattice { "glvq" } else { "glvq_fixed" },
+            bits,
+            rows: m,
+            cols: n,
+            codes: PackedCodes::pack(&codes, bits),
+            side,
+        };
+
+        GroupFit {
+            quantized,
+            final_loss: best_loss,
+            initial_loss: losses[0],
+            iters_run: losses.len(),
+            mu: comp.mu,
+        }
+    }
+}
+
+impl GroupQuantizer for GlvqGroupQuantizer {
+    fn quantize(&self, w: &Mat, x: &Mat, bits: u8) -> QuantizedGroup {
+        self.fit(w, x, bits).quantized
+    }
+
+    fn name(&self) -> &'static str {
+        if self.cfg.adaptive_lattice {
+            "glvq"
+        } else {
+            "glvq_fixed"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::traits::recon_error;
+    use crate::util::rng::Rng;
+
+    fn setup(m: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        // heavy-tailed weights like LLM groups
+        let data: Vec<f32> = (0..m * n).map(|_| rng.student_t(5.0) as f32 * 0.02).collect();
+        let w = Mat::from_vec(m, n, data);
+        let x = Mat::random_normal(n, 64, 1.0, &mut rng);
+        (w, x)
+    }
+
+    fn cfg(d: usize) -> GlvqConfig {
+        let mut c = GlvqConfig::default();
+        c.lattice_dim = d;
+        c.iters = 12;
+        c
+    }
+
+    #[test]
+    fn optimization_reduces_loss() {
+        let (w, x) = setup(32, 64, 1);
+        let q = GlvqGroupQuantizer::new(cfg(8));
+        let fit = q.fit(&w, &x, 3);
+        assert!(
+            fit.final_loss <= fit.initial_loss,
+            "final {} > initial {}",
+            fit.final_loss,
+            fit.initial_loss
+        );
+        assert!(fit.final_loss.is_finite());
+        assert!(fit.iters_run >= 3);
+    }
+
+    #[test]
+    fn dequantize_matches_training_loss_scale() {
+        let (w, x) = setup(16, 32, 2);
+        let q = GlvqGroupQuantizer::new(cfg(8));
+        let fit = q.fit(&w, &x, 4);
+        let w_hat = fit.quantized.dequantize();
+        let e = recon_error(&w, &w_hat, &x);
+        // the container decode chain is bit-exact with the training
+        // objective (minus the λ||G−G0||² regularizer), so the measured
+        // reconstruction error must not exceed the recorded training loss
+        assert!(
+            e <= fit.final_loss * 1.02 + 1e-6,
+            "container error {e} vs training loss {}",
+            fit.final_loss
+        );
+    }
+
+    #[test]
+    fn glvq_beats_plain_rtn_on_heavy_tails() {
+        let (w, x) = setup(32, 64, 3);
+        let q = GlvqGroupQuantizer::new(cfg(8));
+        let fit = q.fit(&w, &x, 2);
+        let w_hat = fit.quantized.dequantize();
+        let e_glvq = recon_error(&w, &w_hat, &x);
+
+        // RTN at the same rate
+        let maxabs = w.max_abs();
+        let levels = 3.0f32;
+        let scale = 2.0 * maxabs / levels;
+        let mut rtn = w.clone();
+        for v in rtn.data.iter_mut() {
+            *v = ((*v + maxabs) / scale).round().clamp(0.0, levels) * scale - maxabs;
+        }
+        let e_rtn = recon_error(&w, &rtn, &x);
+        assert!(
+            e_glvq < e_rtn,
+            "glvq {e_glvq} should beat rtn {e_rtn} on heavy-tailed weights"
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let (w, x) = setup(16, 32, 4);
+        let q = GlvqGroupQuantizer::new(cfg(8));
+        let e2 = {
+            let f = q.fit(&w, &x, 2);
+            recon_error(&w, &f.quantized.dequantize(), &x)
+        };
+        let e4 = {
+            let f = q.fit(&w, &x, 4);
+            recon_error(&w, &f.quantized.dequantize(), &x)
+        };
+        assert!(e4 < e2, "4-bit {e4} vs 2-bit {e2}");
+    }
+
+    #[test]
+    fn fixed_lattice_ablation_is_worse_or_equal() {
+        let (w, x) = setup(32, 64, 5);
+        let adaptive = GlvqGroupQuantizer::new(cfg(8)).fit(&w, &x, 2);
+        let mut c = cfg(8);
+        c.adaptive_lattice = false;
+        let fixed = GlvqGroupQuantizer::new(c).fit(&w, &x, 2);
+        let ea = recon_error(&w, &adaptive.quantized.dequantize(), &x);
+        let ef = recon_error(&w, &fixed.quantized.dequantize(), &x);
+        assert!(ea <= ef * 1.1, "adaptive {ea} vs fixed {ef}");
+    }
+
+    #[test]
+    fn codes_respect_bit_range() {
+        let (w, x) = setup(16, 32, 6);
+        for bits in [1u8, 2, 3, 4] {
+            let fit = GlvqGroupQuantizer::new(cfg(8)).fit(&w, &x, bits);
+            let (lo, hi) = code_range(bits);
+            for c in fit.quantized.codes.unpack() {
+                assert!(c >= lo && c <= hi);
+            }
+            assert_eq!(fit.quantized.bits, bits);
+        }
+    }
+
+    #[test]
+    fn gcd_assignment_also_converges() {
+        let (w, x) = setup(16, 32, 7);
+        let mut c = cfg(8);
+        c.assignment = Assignment::Gcd;
+        c.iters = 6;
+        let fit = GlvqGroupQuantizer::new(c).fit(&w, &x, 3);
+        assert!(fit.final_loss.is_finite());
+        assert!(fit.final_loss <= fit.initial_loss * 1.01);
+    }
+
+    #[test]
+    fn mu_stays_in_band() {
+        let (w, x) = setup(16, 32, 8);
+        let fit = GlvqGroupQuantizer::new(cfg(8)).fit(&w, &x, 2);
+        assert!((10.0..=255.0).contains(&fit.mu), "mu={}", fit.mu);
+    }
+}

@@ -1,0 +1,315 @@
+//! Model-scope quantization pipeline: paper Alg. 1 lifted from one group to
+//! the whole model, with SDBA bit allocation per tensor.
+//!
+//! For every quantizable tensor (stored (n_in × n_out)):
+//!   1. transpose to the paper orientation Wᵀ (m × n_in),
+//!   2. split n_in into column groups,
+//!   3. compute per-group salience + run SDBA (or uniform allocation),
+//!   4. quantize groups in parallel via the coordinator scheduler,
+//!   5. assemble a [`QuantizedTensor`] with exact placement.
+//!
+//! Works with any [`GroupQuantizer`] — GLVQ and every baseline share this
+//! driver, so method comparisons differ only in the quantizer itself.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::scheduler::{default_threads, parallel_map};
+use crate::glvq::group::{group_calib, group_panel, group_spans};
+use crate::linalg::Mat;
+use crate::model::ParamSpec;
+use crate::quant::format::{QuantizedModel, QuantizedTensor};
+use crate::quant::traits::{recon_error, GroupQuantizer};
+use crate::salience::{allocate, group_salience, Allocation};
+use crate::tensor::TensorStore;
+
+/// Calibration activations per tensor: name → (n_in × N) input matrix.
+#[derive(Clone, Debug, Default)]
+pub struct CalibSet {
+    pub acts: BTreeMap<String, Mat>,
+}
+
+impl CalibSet {
+    /// Random calibration (unit normal) — for tests and for methods whose
+    /// data-awareness is being deliberately ablated.
+    pub fn random(specs: &[ParamSpec], n: usize, seed: u64) -> CalibSet {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut acts = BTreeMap::new();
+        for s in specs.iter().filter(|s| s.quantizable) {
+            let n_in = s.shape[0];
+            acts.insert(s.name.clone(), Mat::random_normal(n_in, n, 1.0, &mut rng));
+        }
+        CalibSet { acts }
+    }
+}
+
+/// Per-tensor quantization summary.
+#[derive(Clone, Debug)]
+pub struct TensorReport {
+    pub name: String,
+    pub groups: usize,
+    pub avg_bits: f64,
+    pub recon_error: f64,
+    pub side_bytes: usize,
+    pub payload_bytes: usize,
+}
+
+/// Whole-run report.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub tensors: Vec<TensorReport>,
+    pub wall_ms: f64,
+}
+
+impl PipelineReport {
+    pub fn total_recon_error(&self) -> f64 {
+        self.tensors.iter().map(|t| t.recon_error).sum()
+    }
+
+    pub fn avg_bits(&self) -> f64 {
+        let (bits, weights): (f64, f64) = self.tensors.iter().fold((0.0, 0.0), |(b, w), t| {
+            let n = (t.payload_bytes * 8) as f64;
+            (b + n, w + n / t.avg_bits.max(1e-9))
+        });
+        bits / weights.max(1.0)
+    }
+}
+
+/// Options orthogonal to the quantizer itself.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub group_size: usize,
+    pub target_bits: f64,
+    /// SDBA on/off (off ⇒ uniform round(target) bits everywhere)
+    pub bit_allocation: bool,
+    pub threads: usize,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            group_size: 128,
+            target_bits: 2.0,
+            bit_allocation: true,
+            threads: default_threads(),
+        }
+    }
+}
+
+/// Quantize all quantizable tensors of `store`.
+pub fn quantize_model(
+    specs: &[ParamSpec],
+    store: &TensorStore,
+    calib: &CalibSet,
+    quantizer: &(dyn GroupQuantizer + Sync),
+    opts: &PipelineOpts,
+) -> Result<(QuantizedModel, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    let mut model = QuantizedModel::default();
+    let mut report = PipelineReport::default();
+
+    for spec in specs.iter().filter(|s| s.quantizable) {
+        let tensor = match store.get(&spec.name) {
+            Some(t) => t,
+            None => bail!("store missing quantizable tensor {}", spec.name),
+        };
+        if tensor.shape.len() != 2 {
+            bail!("{} is not rank-2", spec.name);
+        }
+        let w = tensor.to_mat(); // (n_in × n_out)
+        let wt = w.transpose(); // paper orientation (m × n_in)
+        let n_in = wt.cols;
+        let x = match calib.acts.get(&spec.name) {
+            Some(x) => x,
+            None => bail!("calibration set missing {}", spec.name),
+        };
+        if x.rows != n_in {
+            bail!("{}: calib rows {} != n_in {}", spec.name, x.rows, n_in);
+        }
+
+        let spans = group_spans(n_in, opts.group_size);
+        let panels: Vec<(Mat, Mat)> = spans
+            .iter()
+            .map(|&s| (group_panel(&wt, s), group_calib(x, s)))
+            .collect();
+
+        // ---- bit allocation ----
+        let alloc: Allocation = if opts.bit_allocation {
+            let base = opts.target_bits.round().max(1.0) as u8;
+            let sal = parallel_map(opts.threads, &panels, |i, (pw, px)| {
+                group_salience(i, pw, px, base)
+            })
+            .map_err(|(i, m)| anyhow::anyhow!("salience worker {i} panicked: {m}"))?;
+            allocate(&sal, opts.target_bits)
+        } else {
+            Allocation::uniform(spans.len(), opts.target_bits.round().max(1.0) as u8)
+        };
+
+        // ---- per-group quantization (parallel, deterministic order) ----
+        let jobs: Vec<(usize, &(Mat, Mat), u8)> = panels
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, p, alloc.bits[i]))
+            .collect();
+        let quantized = parallel_map(opts.threads, &jobs, |_, (gi, (pw, px), bits)| {
+            let qg = quantizer.quantize(pw, px, *bits);
+            let err = recon_error(pw, &qg.dequantize(), px);
+            (*gi, qg, err)
+        })
+        .map_err(|(i, m)| anyhow::anyhow!("quantize worker {i} panicked: {m}"))?;
+
+        let mut groups = Vec::with_capacity(quantized.len());
+        let mut total_err = 0.0f64;
+        let mut side_bytes = 0usize;
+        let mut payload_bytes = 0usize;
+        let mut total_bits = 0usize;
+        for ((gi, qg, err), span) in quantized.into_iter().zip(&spans) {
+            debug_assert_eq!(spans[gi].col0, span.col0);
+            total_err += err;
+            side_bytes += qg.side_bytes();
+            payload_bytes += qg.codes.payload_bytes();
+            total_bits += qg.payload_bits();
+            groups.push((0usize, span.col0, qg));
+        }
+
+        let qt = QuantizedTensor {
+            name: spec.name.clone(),
+            rows: wt.rows,
+            cols: wt.cols,
+            groups,
+        };
+        report.tensors.push(TensorReport {
+            name: spec.name.clone(),
+            groups: spans.len(),
+            avg_bits: total_bits as f64 / (wt.rows * wt.cols) as f64,
+            recon_error: total_err,
+            side_bytes,
+            payload_bytes,
+        });
+        model.tensors.push(qt);
+    }
+
+    report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok((model, report))
+}
+
+/// Replace quantizable tensors in `store` with their dequantized versions
+/// (original (n_in × n_out) orientation restored) — the eval path runs the
+/// model with exactly the weights the container holds.
+pub fn dequantized_store(model: &QuantizedModel, store: &TensorStore) -> TensorStore {
+    let mut out = store.clone();
+    for qt in &model.tensors {
+        let wt_hat = qt.dequantize(); // (m × n_in)
+        let w_hat = wt_hat.transpose(); // (n_in × n_out)
+        out.insert(&qt.name, crate::tensor::Tensor::from_mat(&w_hat));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::config::GlvqConfig;
+    use crate::glvq::optimizer::GlvqGroupQuantizer;
+    use crate::model::{init_params, CONFIG_S};
+    use crate::tensor::Tensor;
+
+    fn tiny_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "a".into(), shape: vec![64, 32], quantizable: true },
+            ParamSpec { name: "g".into(), shape: vec![32], quantizable: false },
+        ]
+    }
+
+    fn tiny_store(seed: u64) -> TensorStore {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut s = TensorStore::new();
+        let mut data = vec![0.0f32; 64 * 32];
+        rng.fill_normal(&mut data, 0.03);
+        s.insert("a", Tensor::from_vec(&[64, 32], data));
+        s.insert("g", Tensor::from_vec(&[32], vec![1.0; 32]));
+        s
+    }
+
+    #[test]
+    fn pipeline_quantizes_with_rtn_and_reports() {
+        let specs = tiny_specs();
+        let store = tiny_store(1);
+        let calib = CalibSet::random(&specs, 32, 7);
+        let opts = PipelineOpts { group_size: 32, target_bits: 3.0, bit_allocation: true, threads: 2 };
+        let (model, report) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
+        assert_eq!(model.tensors.len(), 1);
+        assert_eq!(report.tensors.len(), 1);
+        let t = &report.tensors[0];
+        assert_eq!(t.groups, 2); // n_in=64 / 32
+        assert!((model.avg_bits() - 3.0).abs() < 1e-9, "{}", model.avg_bits());
+        assert!(t.recon_error.is_finite() && t.recon_error > 0.0);
+    }
+
+    #[test]
+    fn glvq_pipeline_beats_rtn_pipeline() {
+        let specs = tiny_specs();
+        let store = tiny_store(2);
+        let calib = CalibSet::random(&specs, 48, 9);
+        let opts = PipelineOpts { group_size: 32, target_bits: 2.0, bit_allocation: false, threads: 2 };
+        let mut cfg = GlvqConfig::default();
+        cfg.lattice_dim = 8;
+        cfg.group_size = 32;
+        cfg.iters = 10;
+        let glvq = GlvqGroupQuantizer::new(cfg);
+        let (_, rep_glvq) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
+        let (_, rep_rtn) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
+        assert!(
+            rep_glvq.total_recon_error() < rep_rtn.total_recon_error(),
+            "glvq {} vs rtn {}",
+            rep_glvq.total_recon_error(),
+            rep_rtn.total_recon_error()
+        );
+    }
+
+    #[test]
+    fn dequantized_store_preserves_non_quantized_and_shapes() {
+        let specs = tiny_specs();
+        let store = tiny_store(3);
+        let calib = CalibSet::random(&specs, 16, 1);
+        let opts = PipelineOpts { group_size: 32, target_bits: 4.0, bit_allocation: false, threads: 1 };
+        let (model, _) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
+        let dq = dequantized_store(&model, &store);
+        assert_eq!(dq.get("g").unwrap(), store.get("g").unwrap());
+        let a = dq.get("a").unwrap();
+        assert_eq!(a.shape, vec![64, 32]);
+        // 4-bit RTN should be a close reconstruction
+        let orig = store.get("a").unwrap();
+        let err: f32 = orig
+            .data
+            .iter()
+            .zip(&a.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.02, "max err {err}");
+    }
+
+    #[test]
+    fn missing_calibration_is_an_error() {
+        let specs = tiny_specs();
+        let store = tiny_store(4);
+        let calib = CalibSet::default();
+        let opts = PipelineOpts::default();
+        assert!(quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).is_err());
+    }
+
+    #[test]
+    fn full_model_s_shapes_flow_through() {
+        // smoke the real model-S geometry (random weights, tiny calib)
+        let cfg = CONFIG_S;
+        let specs = cfg.param_specs();
+        let store = init_params(&cfg, 5);
+        let calib = CalibSet::random(&specs, 16, 2);
+        let opts = PipelineOpts { group_size: 128, target_bits: 2.0, bit_allocation: false, threads: 4 };
+        let (model, report) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
+        assert_eq!(model.tensors.len(), cfg.quantizable_names().len());
+        assert!(report.wall_ms > 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Babai rounding (paper Eq. 6 / Appendix A): z = round(G⁻¹ y).
+//!
+//! O(d²) per vector with the cached inverse; this is the encoder used by
+//! GLVQ training and final encoding. The batch variant is the native hot
+//! path (see EXPERIMENTS.md §Perf) — it processes a (rows × d) panel with
+//! the blocked matmul and rounds in place, allocation-free per panel.
+
+use super::{GenLattice, LatticeEncoder};
+use crate::linalg::matrix::matmul_into;
+use crate::linalg::Mat;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BabaiEncoder;
+
+impl LatticeEncoder for BabaiEncoder {
+    fn encode(&self, lat: &GenLattice, y: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(y.len(), lat.dim());
+        let x = lat.ginv.matvec(y);
+        x.into_iter().map(|v| v.round()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "babai"
+    }
+}
+
+/// Batch Babai: each row of `y_panel` (shape rows×d) is one target vector.
+/// Returns the integer coordinate panel (rows×d). `scratch` must be rows×d
+/// and is overwritten — callers reuse it across panels to avoid allocation.
+pub fn babai_batch_into(lat: &GenLattice, y_panel: &Mat, scratch: &mut Mat) {
+    assert_eq!(y_panel.cols, lat.dim());
+    assert_eq!((scratch.rows, scratch.cols), (y_panel.rows, y_panel.cols));
+    // z_row = round(Ginv @ y_row)  ⇔  Z = round(Y @ Ginv^T)
+    let ginv_t = lat.ginv.transpose();
+    matmul_into(y_panel, &ginv_t, scratch);
+    for v in scratch.data.iter_mut() {
+        *v = v.round();
+    }
+}
+
+pub fn babai_batch(lat: &GenLattice, y_panel: &Mat) -> Mat {
+    let mut out = Mat::zeros(y_panel.rows, y_panel.cols);
+    babai_batch_into(lat, y_panel, &mut out);
+    out
+}
+
+/// Shifted-grid batch Babai: codes for the *half-integer* lattice
+/// Λ_½ = { G (z + ½·1) : z ∈ Z^d } — z = round(G⁻¹y − ½). GLVQ stores these
+/// codes because the reconstruction levels are symmetric at every bit width
+/// (at 1 bit the plain grid degenerates to {−s, 0}; the shifted grid gives
+/// ±s/2 — sign quantization), matching QuIP#'s E8+½ convention.
+pub fn babai_batch_shifted_into(lat: &GenLattice, y_panel: &Mat, scratch: &mut Mat) {
+    assert_eq!(y_panel.cols, lat.dim());
+    assert_eq!((scratch.rows, scratch.cols), (y_panel.rows, y_panel.cols));
+    let ginv_t = lat.ginv.transpose();
+    matmul_into(y_panel, &ginv_t, scratch);
+    for v in scratch.data.iter_mut() {
+        *v = (*v - 0.5).round();
+    }
+}
+
+/// The decode offset for the shifted grid: h = G · (½·1), i.e.
+/// h_i = ½ Σ_j G_ij. Decode is ŷ = G z + h.
+pub fn half_shift(g: &Mat) -> Vec<f32> {
+    (0..g.rows)
+        .map(|i| 0.5 * g.row(i).iter().sum::<f32>())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::encode_error;
+    use crate::util::proptest::proptest;
+
+    fn near_identity_lattice(d: usize, rig: &mut crate::util::proptest::Rig) -> GenLattice {
+        let mut g = Mat::eye(d).scale(rig.f32_in(0.01, 0.1));
+        for v in g.data.iter_mut() {
+            *v += rig.f32_in(-0.002, 0.002);
+        }
+        GenLattice::new(g).unwrap()
+    }
+
+    #[test]
+    fn exact_on_lattice_points() {
+        proptest(30, |rig| {
+            let d = *rig.choice(&[2, 4, 8, 16]);
+            let lat = near_identity_lattice(d, rig);
+            let z0: Vec<f32> = (0..d).map(|_| rig.usize_in(0, 12) as f32 - 6.0).collect();
+            let y = lat.decode(&z0);
+            let z1 = BabaiEncoder.encode(&lat, &y);
+            assert_eq!(z0, z1, "d={d}");
+        });
+    }
+
+    #[test]
+    fn batch_matches_single_vector_encoder() {
+        proptest(20, |rig| {
+            let d = *rig.choice(&[4, 8, 16]);
+            let rows = rig.usize_in(1, 40);
+            let lat = near_identity_lattice(d, rig);
+            let panel = Mat::from_vec(rows, d, rig.vec_normal(rows * d, 0.1));
+            let z = babai_batch(&lat, &panel);
+            for r in 0..rows {
+                let single = BabaiEncoder.encode(&lat, panel.row(r));
+                assert_eq!(z.row(r), &single[..], "row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_half_diameter_for_orthogonal_basis() {
+        // For diagonal G with steps s_i, Babai is exact-nearest; the error in
+        // each coordinate is at most s_i/2.
+        proptest(20, |rig| {
+            let d = rig.usize_in(1, 8);
+            let steps: Vec<f32> = (0..d).map(|_| rig.f32_in(0.02, 0.3)).collect();
+            let mut g = Mat::zeros(d, d);
+            for i in 0..d {
+                *g.at_mut(i, i) = steps[i];
+            }
+            let lat = GenLattice::new(g).unwrap();
+            let y = rig.vec_normal(d, 1.0);
+            let z = BabaiEncoder.encode(&lat, &y);
+            let rec = lat.decode(&z);
+            for i in 0..d {
+                assert!((y[i] - rec[i]).abs() <= steps[i] / 2.0 + 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn error_metric_consistent() {
+        let lat = GenLattice::scaled_identity(2, 1.0);
+        let y = vec![0.4, -0.2];
+        let z = BabaiEncoder.encode(&lat, &y);
+        assert_eq!(z, vec![0.0, 0.0]);
+        let e = encode_error(&lat, &y, &z);
+        assert!((e - (0.4f32 * 0.4 + 0.04).sqrt()).abs() < 1e-6);
+    }
+}
+
+/// Allocating variant of [`babai_batch_shifted_into`].
+pub fn babai_batch_shifted(lat: &GenLattice, y_panel: &Mat) -> Mat {
+    let mut out = Mat::zeros(y_panel.rows, y_panel.cols);
+    babai_batch_shifted_into(lat, y_panel, &mut out);
+    out
+}

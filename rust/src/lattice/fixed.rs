@@ -1,0 +1,166 @@
+//! Classic structured lattices with exact nearest-point decoders
+//! (Conway & Sloane, "Sphere Packings, Lattices and Groups" ch. 20):
+//!
+//! - Zⁿ  — round each coordinate,
+//! - Dₙ  — integer points with even coordinate sum,
+//! - E₈  — D₈ ∪ (D₈ + ½·1), the densest 8-d packing; the codebook QuIP#
+//!   builds on, here used by the `quip_lite` baseline and the fixed-lattice
+//!   ablation (Table 7).
+//!
+//! These decoders return the *exact* nearest lattice point, which makes
+//! them strong reference implementations to test Babai against.
+
+/// Nearest point in Zⁿ.
+pub fn nearest_zn(y: &[f32]) -> Vec<f32> {
+    y.iter().map(|v| v.round()).collect()
+}
+
+/// Nearest point in Dₙ (sum of coordinates even).
+pub fn nearest_dn(y: &[f32]) -> Vec<f32> {
+    let mut f: Vec<f32> = y.iter().map(|v| v.round()).collect();
+    let sum: i64 = f.iter().map(|&v| v as i64).sum();
+    if sum % 2 != 0 {
+        // flip the coordinate where rounding the "wrong" way costs least
+        let mut best = 0usize;
+        let mut best_cost = f32::INFINITY;
+        for i in 0..y.len() {
+            let delta = y[i] - f[i];
+            // moving f[i] one unit toward the other side
+            let dir = if delta >= 0.0 { 1.0 } else { -1.0 };
+            let cost = (y[i] - (f[i] + dir)).abs() - delta.abs();
+            if cost < best_cost {
+                best_cost = cost;
+                best = i;
+            }
+        }
+        let delta = y[best] - f[best];
+        f[best] += if delta >= 0.0 { 1.0 } else { -1.0 };
+    }
+    f
+}
+
+/// Nearest point in E₈ = D₈ ∪ (D₈ + ½·1).
+pub fn nearest_e8(y: &[f32]) -> Vec<f32> {
+    assert_eq!(y.len(), 8);
+    let a = nearest_dn(y);
+    let shifted: Vec<f32> = y.iter().map(|v| v - 0.5).collect();
+    let mut b = nearest_dn(&shifted);
+    for v in b.iter_mut() {
+        *v += 0.5;
+    }
+    let da: f32 = y.iter().zip(&a).map(|(p, q)| (p - q) * (p - q)).sum();
+    let db: f32 = y.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum();
+    if da <= db {
+        a
+    } else {
+        b
+    }
+}
+
+/// Exact nearest-point decode for a named lattice family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FixedLattice {
+    Zn,
+    Dn,
+    E8,
+}
+
+impl FixedLattice {
+    pub fn nearest(&self, y: &[f32]) -> Vec<f32> {
+        match self {
+            FixedLattice::Zn => nearest_zn(y),
+            FixedLattice::Dn => nearest_dn(y),
+            FixedLattice::E8 => nearest_e8(y),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FixedLattice::Zn => "Zn",
+            FixedLattice::Dn => "Dn",
+            FixedLattice::E8 => "E8",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    fn dist2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn dn_points_have_even_sum() {
+        proptest(50, |rig| {
+            let n = rig.usize_in(2, 10);
+            let y = rig.vec_normal(n, 2.0);
+            let p = nearest_dn(&y);
+            let sum: i64 = p.iter().map(|&v| v as i64).sum();
+            assert_eq!(sum.rem_euclid(2), 0, "{p:?}");
+        });
+    }
+
+    #[test]
+    fn dn_beats_or_matches_brute_force_neighbourhood() {
+        // exact check: compare against exhaustive search over the ±1 cube
+        // around the rounded point (which contains the true nearest for Dn).
+        proptest(30, |rig| {
+            let n = rig.usize_in(2, 5);
+            let y = rig.vec_normal(n, 1.5);
+            let p = nearest_dn(&y);
+            let base: Vec<i64> = y.iter().map(|v| v.round() as i64).collect();
+            let mut best = f32::INFINITY;
+            let cube = 3usize.pow(n as u32);
+            for code in 0..cube {
+                let mut c = code;
+                let mut cand = Vec::with_capacity(n);
+                for i in 0..n {
+                    cand.push((base[i] + (c % 3) as i64 - 1) as f32);
+                    c /= 3;
+                }
+                let s: i64 = cand.iter().map(|&v| v as i64).sum();
+                if s % 2 == 0 {
+                    best = best.min(dist2(&y, &cand));
+                }
+            }
+            assert!(dist2(&y, &p) <= best + 1e-5);
+        });
+    }
+
+    #[test]
+    fn e8_contains_half_integer_points() {
+        let y = vec![0.5f32; 8];
+        let p = nearest_e8(&y);
+        assert_eq!(p, vec![0.5f32; 8]); // ½·1 ∈ E8 (sum of D8 part even)
+    }
+
+    #[test]
+    fn e8_never_worse_than_d8_or_z8_rounding() {
+        proptest(60, |rig| {
+            let y = rig.vec_normal(8, 1.2);
+            let e = nearest_e8(&y);
+            let d = nearest_dn(&y);
+            assert!(dist2(&y, &e) <= dist2(&y, &d) + 1e-5);
+        });
+    }
+
+    #[test]
+    fn e8_coordinates_all_integer_or_all_half_integer() {
+        proptest(40, |rig| {
+            let y = rig.vec_normal(8, 2.0);
+            let p = nearest_e8(&y);
+            let frac: Vec<f32> = p.iter().map(|v| (v - v.floor()).abs()).collect();
+            let all_int = frac.iter().all(|f| *f < 1e-6 || *f > 1.0 - 1e-6);
+            let all_half = frac.iter().all(|f| (f - 0.5).abs() < 1e-6);
+            assert!(all_int || all_half, "{p:?}");
+        });
+    }
+
+    #[test]
+    fn zn_is_plain_rounding() {
+        assert_eq!(nearest_zn(&[0.4, -1.6, 2.5]), vec![0.0, -2.0, 3.0]);
+    }
+}

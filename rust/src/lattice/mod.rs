@@ -1,0 +1,97 @@
+//! Lattice quantization core.
+//!
+//! A lattice Λ = { G z : z ∈ Z^d } is defined by its generation matrix G
+//! ([`GenLattice`]). Encoding finds integer coordinates whose lattice point
+//! approximates a target vector; this crate ships three encoders:
+//!
+//! - [`babai`] — Babai rounding `z = round(G⁻¹ y)` (the paper's choice,
+//!   Eq. 6, with the Appendix-A error bound),
+//! - [`gcd`] — greedy coordinate descent (the paper's ablation competitor,
+//!   Tables 12–13),
+//! - [`fixed`] — classic structured lattices (Zⁿ, D4, E8) with exact
+//!   Conway–Sloane nearest-point decoders, used by the QuIP#-lite baseline.
+
+pub mod babai;
+pub mod fixed;
+pub mod gcd;
+
+use crate::linalg::decomp::{inverse, DecompError};
+use crate::linalg::Mat;
+
+/// A full-rank lattice with learnable generation matrix (paper §2.2).
+#[derive(Clone, Debug)]
+pub struct GenLattice {
+    /// Generation matrix G (d×d); columns are the basis vectors.
+    pub g: Mat,
+    /// Cached inverse G⁻¹ kept in sync by [`GenLattice::set_g`].
+    pub ginv: Mat,
+}
+
+impl GenLattice {
+    pub fn new(g: Mat) -> Result<GenLattice, DecompError> {
+        let ginv = inverse(&g)?;
+        Ok(GenLattice { g, ginv })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.g.rows
+    }
+
+    /// Replace G (re-inverts; call after each optimizer update).
+    pub fn set_g(&mut self, g: Mat) -> Result<(), DecompError> {
+        self.ginv = inverse(&g)?;
+        self.g = g;
+        Ok(())
+    }
+
+    /// Decode integer coordinates to the lattice point y = G z.
+    pub fn decode(&self, z: &[f32]) -> Vec<f32> {
+        self.g.matvec(z)
+    }
+
+    /// Scaled identity lattice (step·Zⁿ) — the RTN-equivalent baseline and
+    /// the "fixed lattice" ablation seed.
+    pub fn scaled_identity(d: usize, step: f32) -> GenLattice {
+        let g = Mat::eye(d).scale(step);
+        GenLattice::new(g).expect("identity is invertible")
+    }
+}
+
+/// Encode trait: assign integer lattice coordinates to each target column.
+pub trait LatticeEncoder {
+    /// y (len d) → z (len d, integer-valued f32).
+    fn encode(&self, lat: &GenLattice, y: &[f32]) -> Vec<f32>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Quantization error ||y - G z||₂ for a given assignment.
+pub fn encode_error(lat: &GenLattice, y: &[f32], z: &[f32]) -> f32 {
+    let rec = lat.decode(z);
+    y.iter()
+        .zip(&rec)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_lattice_decode_is_scaling() {
+        let lat = GenLattice::scaled_identity(4, 0.5);
+        let z = vec![1.0, -2.0, 0.0, 3.0];
+        assert_eq!(lat.decode(&z), vec![0.5, -1.0, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn set_g_keeps_inverse_in_sync() {
+        let mut lat = GenLattice::scaled_identity(3, 1.0);
+        let g = Mat::from_vec(3, 3, vec![2.0, 0.0, 0.0, 0.0, 4.0, 0.0, 0.0, 1.0, 1.0]);
+        lat.set_g(g.clone()).unwrap();
+        let prod = lat.g.matmul(&lat.ginv);
+        assert!(prod.frob_dist(&Mat::eye(3)) < 1e-5);
+    }
+}

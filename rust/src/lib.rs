@@ -1,0 +1,33 @@
+//! # GLVQ — Grouped Lattice Vector Quantization for low-bit LLM compression
+//!
+//! Production-quality reproduction of *"Learning Grouped Lattice Vector
+//! Quantizers for Low-Bit LLM Compression"* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordinator: quantization pipeline (Alg. 1 at
+//!   model scope), salience-determined bit allocation, baselines, streaming
+//!   decode runtime, batched serving, evaluation harness, CLI.
+//! - **L2/L1 (python/, build-time only)** — JAX transformer + Pallas kernels,
+//!   AOT-lowered to HLO text under `artifacts/`, loaded at runtime through
+//!   the PJRT C API ([`runtime`]).
+//!
+//! Layout follows DESIGN.md §4; every public item is documented and every
+//! module carries unit tests.
+
+pub mod util;
+pub mod linalg;
+pub mod tensor;
+pub mod lattice;
+pub mod compand;
+pub mod quant;
+pub mod data;
+pub mod model;
+pub mod salience;
+pub mod glvq;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+pub mod bench_support;
+pub mod config;

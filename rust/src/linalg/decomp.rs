@@ -1,0 +1,291 @@
+//! Matrix decompositions: LU (partial pivoting) solve/inverse/det, Cholesky,
+//! and modified Gram-Schmidt — the pieces GLVQ needs for `G^{-1}`,
+//! covariance-based lattice initialization (paper Eq. 8 context) and the
+//! Appendix-A error-bound machinery.
+
+use super::matrix::Mat;
+
+#[derive(Debug)]
+pub enum DecompError {
+    Singular,
+    NotPositiveDefinite,
+    NotSquare,
+}
+
+impl std::fmt::Display for DecompError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecompError::Singular => write!(f, "matrix is singular"),
+            DecompError::NotPositiveDefinite => write!(f, "matrix is not positive definite"),
+            DecompError::NotSquare => write!(f, "matrix is not square"),
+        }
+    }
+}
+
+impl std::error::Error for DecompError {}
+
+/// LU decomposition with partial pivoting. Stores combined L\U plus the
+/// permutation; all downstream solves reuse the single factorization.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    sign: f32,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Lu, DecompError> {
+        if a.rows != a.cols {
+            return Err(DecompError::NotSquare);
+        }
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0f32;
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut maxv = lu.at(k, k).abs();
+            for i in k + 1..n {
+                let v = lu.at(i, k).abs();
+                if v > maxv {
+                    maxv = v;
+                    p = i;
+                }
+            }
+            if maxv < 1e-12 {
+                return Err(DecompError::Singular);
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu.at(k, j);
+                    *lu.at_mut(k, j) = lu.at(p, j);
+                    *lu.at_mut(p, j) = t;
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu.at(k, k);
+            for i in k + 1..n {
+                let f = lu.at(i, k) / pivot;
+                *lu.at_mut(i, k) = f;
+                for j in k + 1..n {
+                    *lu.at_mut(i, j) -= f * lu.at(k, j);
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    pub fn det(&self) -> f32 {
+        let n = self.lu.rows;
+        let mut d = self.sign;
+        for i in 0..n {
+            d *= self.lu.at(i, i);
+        }
+        d
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f32]) -> Vec<f32> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f32> = (0..n).map(|i| b[self.piv[i]]).collect();
+        // forward substitution (unit lower)
+        for i in 0..n {
+            for j in 0..i {
+                x[i] -= self.lu.at(i, j) * x[j];
+            }
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                x[i] -= self.lu.at(i, j) * x[j];
+            }
+            x[i] /= self.lu.at(i, i);
+        }
+        x
+    }
+
+    pub fn inverse(&self) -> Mat {
+        let n = self.lu.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0f32; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                *inv.at_mut(i, j) = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+}
+
+/// Convenience: A^{-1} via LU.
+pub fn inverse(a: &Mat) -> Result<Mat, DecompError> {
+    Ok(Lu::new(a)?.inverse())
+}
+
+/// Cholesky factor L (lower-triangular, A = L Lᵀ). Used to initialize the
+/// lattice basis from the group covariance (paper: "initialized using the
+/// Cholesky decomposition of the group's covariance matrix").
+pub fn cholesky(a: &Mat) -> Result<Mat, DecompError> {
+    if a.rows != a.cols {
+        return Err(DecompError::NotSquare);
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(DecompError::NotPositiveDefinite);
+                }
+                *l.at_mut(i, i) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Modified Gram-Schmidt on the *columns* of B. Returns (B*, mu) where B*'s
+/// columns are orthogonal and mu[j][i] (j < i) are the projection
+/// coefficients — exactly the quantities in the Appendix-A Babai bound.
+pub fn gram_schmidt(b: &Mat) -> (Mat, Mat) {
+    let n = b.cols;
+    let mut bs = b.clone();
+    let mut mu = Mat::eye(n);
+    for i in 0..n {
+        for j in 0..i {
+            let bj: Vec<f32> = bs.col(j);
+            let bi: Vec<f32> = bs.col(i);
+            let den: f32 = bj.iter().map(|x| x * x).sum();
+            let num: f32 = bi.iter().zip(&bj).map(|(x, y)| x * y).sum();
+            let m = if den > 0.0 { num / den } else { 0.0 };
+            *mu.at_mut(j, i) = m;
+            for r in 0..bs.rows {
+                let v = bs.at(r, i) - m * bs.at(r, j);
+                *bs.at_mut(r, i) = v;
+            }
+        }
+    }
+    (bs, mu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    fn well_conditioned(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::random_normal(n, n, 0.1, rng);
+        for i in 0..n {
+            *a.at_mut(i, i) += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn lu_solve_recovers_known_solution() {
+        proptest(30, |rig| {
+            let n = rig.usize_in(1, 24);
+            let a = well_conditioned(n, &mut rig.rng);
+            let x_true = rig.vec_normal(n, 1.0);
+            let b = a.matvec(&x_true);
+            let x = Lu::new(&a).unwrap().solve(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-3, "i={i} {x:?} vs {x_true:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        proptest(30, |rig| {
+            let n = rig.usize_in(1, 32);
+            let a = well_conditioned(n, &mut rig.rng);
+            let inv = inverse(&a).unwrap();
+            let prod = a.matmul(&inv);
+            assert!(prod.frob_dist(&Mat::eye(n)) < 1e-3, "n={n}");
+        });
+    }
+
+    #[test]
+    fn singular_matrix_is_rejected() {
+        let mut a = Mat::zeros(3, 3);
+        *a.at_mut(0, 0) = 1.0;
+        *a.at_mut(1, 1) = 1.0; // rank 2
+        assert!(matches!(Lu::new(&a), Err(DecompError::Singular)));
+    }
+
+    #[test]
+    fn det_of_diagonal_and_permutation() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 3.0]);
+        assert!((Lu::new(&a).unwrap().det() - 6.0).abs() < 1e-5);
+        let p = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        assert!((Lu::new(&p).unwrap().det() + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cholesky_reconstructs_spd_matrix() {
+        proptest(30, |rig| {
+            let n = rig.usize_in(1, 16);
+            let b = Mat::random_normal(n, n, 1.0, &mut rig.rng);
+            let mut a = b.matmul(&b.transpose()); // SPD-ish
+            for i in 0..n {
+                *a.at_mut(i, i) += 0.5;
+            }
+            let l = cholesky(&a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.frob_dist(&a) < 1e-2 * (1.0 + a.frob_norm()));
+            // lower-triangular
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(matches!(cholesky(&a), Err(DecompError::NotPositiveDefinite)));
+    }
+
+    #[test]
+    fn gram_schmidt_orthogonalizes_columns() {
+        proptest(20, |rig| {
+            let n = rig.usize_in(2, 10);
+            let b = well_conditioned(n, &mut rig.rng);
+            let (bs, mu) = gram_schmidt(&b);
+            // orthogonality
+            for i in 0..n {
+                for j in 0..i {
+                    let dot: f32 = bs.col(i).iter().zip(bs.col(j).iter()).map(|(x, y)| x * y).sum();
+                    let ni: f32 = bs.col(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+                    let nj: f32 = bs.col(j).iter().map(|x| x * x).sum::<f32>().sqrt();
+                    assert!(dot.abs() < 1e-2 * (ni * nj + 1e-6), "i={i} j={j}");
+                }
+            }
+            // reconstruction: b_i = b*_i + sum_{j<i} mu[j,i] b*_j
+            for i in 0..n {
+                for r in 0..n {
+                    let mut v = bs.at(r, i);
+                    for j in 0..i {
+                        v += mu.at(j, i) * bs.at(r, j);
+                    }
+                    assert!((v - b.at(r, i)).abs() < 1e-3);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,309 @@
+//! Row-major f32 matrix with the operations the quantizers need.
+//!
+//! `matmul` is cache-blocked + micro-kerneled (see `bench_support` and
+//! EXPERIMENTS.md §Perf for measurements); everything else favours clarity.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, scale);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // simple blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A @ B. Blocked ikj loop with an 8-wide inner kernel; this is the
+    /// native hot path for calibration products and reconstruction errors.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut c);
+        c
+    }
+
+    /// y = A @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    pub fn add(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let data = self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let data = self.data.iter().zip(&b.data).map(|(x, y)| x - y).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let data = self.data.iter().map(|x| x * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// self += s * b (axpy).
+    pub fn axpy(&mut self, s: f32, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn frob_dist(&self, b: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Extract a sub-matrix of rows [r0, r1) and cols [c0, c1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `block` into self at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst = &mut self.row_mut(r0 + i)[c0..c0 + block.cols];
+            dst.copy_from_slice(block.row(i));
+        }
+    }
+}
+
+/// C = A @ B into a preallocated C (zeroed by caller or overwritten here).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    // i-k-j ordering: stream B rows, accumulate into C row; unrolled by 8.
+    const KB: usize = 64;
+    for k0 in (0..k).step_by(KB) {
+        let kmax = (k0 + KB).min(k);
+        for i in 0..n {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * m..(i + 1) * m];
+            for kk in k0..kmax {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * m..(kk + 1) * m];
+                let chunks = m / 8;
+                for t in 0..chunks {
+                    let j = t * 8;
+                    crow[j] += aik * brow[j];
+                    crow[j + 1] += aik * brow[j + 1];
+                    crow[j + 2] += aik * brow[j + 2];
+                    crow[j + 3] += aik * brow[j + 3];
+                    crow[j + 4] += aik * brow[j + 4];
+                    crow[j + 5] += aik * brow[j + 5];
+                    crow[j + 6] += aik * brow[j + 6];
+                    crow[j + 7] += aik * brow[j + 7];
+                }
+                for j in chunks * 8..m {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        proptest(30, |rig| {
+            let (n, k, m) = (rig.usize_in(1, 40), rig.usize_in(1, 40), rig.usize_in(1, 40));
+            let a = Mat::from_vec(n, k, rig.vec_normal(n * k, 1.0));
+            let b = Mat::from_vec(k, m, rig.vec_normal(k * m, 1.0));
+            let fast = a.matmul(&b);
+            let slow = naive_matmul(&a, &b);
+            assert!(fast.frob_dist(&slow) < 1e-3 * (1.0 + slow.frob_norm()));
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        proptest(20, |rig| {
+            let n = rig.usize_in(1, 24);
+            let a = Mat::from_vec(n, n, rig.vec_normal(n * n, 1.0));
+            let i = Mat::eye(n);
+            assert!(a.matmul(&i).frob_dist(&a) < 1e-5);
+            assert!(i.matmul(&a).frob_dist(&a) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn transpose_involution_and_shape() {
+        proptest(20, |rig| {
+            let (n, m) = (rig.usize_in(1, 50), rig.usize_in(1, 50));
+            let a = Mat::from_vec(n, m, rig.vec_normal(n * m, 1.0));
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (m, n));
+            assert_eq!(t.transpose(), a);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        proptest(20, |rig| {
+            let (n, m) = (rig.usize_in(1, 30), rig.usize_in(1, 30));
+            let a = Mat::from_vec(n, m, rig.vec_normal(n * m, 1.0));
+            let x = rig.vec_normal(m, 1.0);
+            let xm = Mat::from_vec(m, 1, x.clone());
+            let want = a.matmul(&xm);
+            let got = a.matvec(&x);
+            for i in 0..n {
+                assert!((got[i] - want.at(i, 0)).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn slice_and_set_block_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Mat::random_normal(10, 8, 1.0, &mut rng);
+        let b = a.slice(2, 7, 1, 5);
+        assert_eq!((b.rows, b.cols), (5, 4));
+        let mut c = Mat::zeros(10, 8);
+        c.set_block(2, 1, &b);
+        assert_eq!(c.at(3, 2), a.at(3, 2));
+        assert_eq!(c.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = Mat::zeros(2, 2);
+        b.axpy(2.0, &a);
+        assert_eq!(b.data, vec![2.0, 4.0, 6.0, 8.0]);
+        assert!((a.frob_norm() - (30.0f32).sqrt()).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+}

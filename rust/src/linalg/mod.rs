@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK in the vendored set).
+//!
+//! Everything GLVQ needs: a row-major [`Mat`] with blocked matmul, LU/Cholesky
+//! decompositions ([`decomp`]), LLL lattice basis reduction ([`lll`], used by
+//! the Appendix-A Babai error-bound property tests), power-iteration spectral
+//! estimates and clamping ([`spectral`]), and weight statistics ([`stats`]).
+//!
+//! The PJRT path never sees these — they serve the rust-native optimizer,
+//! the baselines, and the places where XLA 0.5.1 cannot go (matrix inverse
+//! lowers to a typed-FFI custom call it rejects, so `G^{-1}` is always
+//! produced here and fed *into* the graphs).
+
+pub mod decomp;
+pub mod lll;
+pub mod matrix;
+pub mod spectral;
+pub mod stats;
+
+pub use matrix::Mat;

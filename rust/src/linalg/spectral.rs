@@ -1,0 +1,125 @@
+//! Spectral estimates via power iteration + the spectral clamp the GLVQ
+//! optimizer applies after every G-update ("Spectral normalization is
+//! applied after each update to constrain the singular values of G within
+//! a stable range [σ_min, σ_max]").
+//!
+//! For the small d×d generation matrices (d ≤ 32) power iteration on GᵀG is
+//! accurate and allocation-light; the clamp rescales G when σ_max or σ_min
+//! leaves the band (a practical surrogate for full SVD projection that
+//! preserves lattice shape — documented deviation: the paper does not
+//! specify the projection operator).
+
+use super::decomp::{inverse, DecompError};
+use super::matrix::Mat;
+
+/// Largest singular value of A (power iteration on AᵀA).
+pub fn sigma_max(a: &Mat, iters: usize) -> f32 {
+    let at = a.transpose();
+    let n = a.cols;
+    let mut v = vec![1.0f32; n];
+    let mut norm = (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    let mut lam = 0.0f32;
+    for _ in 0..iters {
+        let w = at.matvec(&a.matvec(&v)); // AᵀA v
+        norm = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm < 1e-20 {
+            return 0.0;
+        }
+        v = w.iter().map(|x| x / norm).collect();
+        lam = norm;
+    }
+    lam.sqrt()
+}
+
+/// Smallest singular value via power iteration on (AᵀA)^{-1}.
+pub fn sigma_min(a: &Mat, iters: usize) -> Result<f32, DecompError> {
+    let ata = a.transpose().matmul(a);
+    let inv = inverse(&ata)?;
+    let s = sigma_max_sym(&inv, iters);
+    Ok(if s > 0.0 { 1.0 / s.sqrt() } else { 0.0 })
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix.
+fn sigma_max_sym(a: &Mat, iters: usize) -> f32 {
+    let n = a.cols;
+    let mut v = vec![1.0f32; n];
+    let mut lam = 0.0f32;
+    for _ in 0..iters {
+        let w = a.matvec(&v);
+        let norm = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm < 1e-20 {
+            return 0.0;
+        }
+        v = w.iter().map(|x| x / norm).collect();
+        lam = norm;
+    }
+    lam
+}
+
+/// Clamp the singular values of G into [smin, smax] by global rescaling:
+/// if σ_max(G) > smax, scale down; if σ_min(G) < smin (and G nonsingular),
+/// blend toward a scaled identity to lift the bottom of the spectrum.
+pub fn spectral_clamp(g: &Mat, smin: f32, smax: f32) -> Mat {
+    let mut out = g.clone();
+    let sm = sigma_max(&out, 30);
+    if sm > smax && sm > 0.0 {
+        out = out.scale(smax / sm);
+    }
+    let smn = sigma_min(&out, 30).unwrap_or(0.0);
+    if smn < smin {
+        // lift: G <- G + eps * I scaled to restore conditioning
+        let n = out.rows;
+        let lift = smin - smn;
+        for i in 0..n {
+            let s = if out.at(i, i) >= 0.0 { 1.0 } else { -1.0 };
+            *out.at_mut(i, i) += s * lift;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn sigma_max_of_diagonal() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 1.0]);
+        assert!((sigma_max(&a, 100) - 5.0).abs() < 1e-3);
+        assert!((sigma_min(&a, 100).unwrap() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sigma_max_upper_bounds_matvec_gain() {
+        proptest(20, |rig| {
+            let n = rig.usize_in(2, 16);
+            let a = Mat::from_vec(n, n, rig.vec_normal(n * n, 1.0));
+            let s = sigma_max(&a, 200);
+            for _ in 0..5 {
+                let x = rig.vec_normal(n, 1.0);
+                let xn: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let y = a.matvec(&x);
+                let yn: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+                assert!(yn <= s * xn * 1.01 + 1e-4, "gain {} > sigma {}", yn / xn, s);
+            }
+        });
+    }
+
+    #[test]
+    fn clamp_enforces_band() {
+        proptest(15, |rig| {
+            let n = rig.usize_in(2, 12);
+            let mut a = Mat::from_vec(n, n, rig.vec_normal(n * n, 0.5));
+            for i in 0..n {
+                *a.at_mut(i, i) += 1.0;
+            }
+            let c = spectral_clamp(&a, 0.05, 1.5);
+            assert!(sigma_max(&c, 100) <= 1.5 * 1.05);
+            assert!(sigma_min(&c, 100).unwrap_or(0.0) >= 0.05 * 0.5);
+        });
+    }
+}

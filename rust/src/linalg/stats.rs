@@ -1,0 +1,164 @@
+//! Weight/activation statistics: moments, kurtosis (drives the μ-law init,
+//! paper Eq. 12), quantiles, and the KL-divergence surrogate used by the
+//! salience-determined bit allocation (paper Eq. 3).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Sample excess-free kurtosis (normal → 3). The paper's μ init uses the
+/// plain kurtosis κ_g: μ_g⁰ = 100 tanh(κ_g / 10).
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 3.0;
+    }
+    let m = mean(xs);
+    let n = xs.len() as f64;
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    if var < 1e-24 {
+        return 3.0;
+    }
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    m4 / (var * var)
+}
+
+/// q-th quantile (0..=1) by sorting a copy. Linear interpolation.
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Dynamic range proxy: max|x| / (p50|x| + eps). Large for outlier-heavy
+/// groups — one of the salience signals.
+pub fn dynamic_range(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let abss: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let med = quantile(&abss, 0.5) as f64;
+    let max = abss.iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    max / (med + 1e-12)
+}
+
+/// KL divergence between two empirical distributions given by histograms of
+/// the same binning. Inputs are raw samples; we bin jointly over their
+/// combined range. This is the D_KL(WX || ŴX) surrogate in SDBA (Eq. 3).
+pub fn kl_divergence(p_samples: &[f32], q_samples: &[f32], bins: usize) -> f64 {
+    assert!(bins >= 2);
+    if p_samples.is_empty() || q_samples.is_empty() {
+        return 0.0;
+    }
+    let lo = p_samples
+        .iter()
+        .chain(q_samples)
+        .fold(f32::INFINITY, |a, &b| a.min(b));
+    let hi = p_samples
+        .iter()
+        .chain(q_samples)
+        .fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if !(hi > lo) {
+        return 0.0;
+    }
+    let width = (hi - lo) / bins as f32;
+    let mut hp = vec![0.0f64; bins];
+    let mut hq = vec![0.0f64; bins];
+    for &x in p_samples {
+        let b = (((x - lo) / width) as usize).min(bins - 1);
+        hp[b] += 1.0;
+    }
+    for &x in q_samples {
+        let b = (((x - lo) / width) as usize).min(bins - 1);
+        hq[b] += 1.0;
+    }
+    // Laplace smoothing keeps the divergence finite
+    let np = p_samples.len() as f64 + bins as f64;
+    let nq = q_samples.len() as f64 + bins as f64;
+    let mut kl = 0.0;
+    for b in 0..bins {
+        let p = (hp[b] + 1.0) / np;
+        let q = (hq[b] + 1.0) / nq;
+        kl += p * (p / q).ln();
+    }
+    kl.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn moments_of_constant() {
+        let xs = vec![2.0f32; 100];
+        assert!((mean(&xs) - 2.0).abs() < 1e-9);
+        assert!(variance(&xs) < 1e-9);
+        assert_eq!(kurtosis(&xs), 3.0); // degenerate → normal default
+    }
+
+    #[test]
+    fn kurtosis_normal_near_three_and_t_heavier() {
+        let mut rng = Rng::new(11);
+        let normal: Vec<f32> = (0..40_000).map(|_| rng.normal_f32()).collect();
+        let heavy: Vec<f32> = (0..40_000).map(|_| rng.student_t(4.0) as f32).collect();
+        let kn = kurtosis(&normal);
+        let kh = kurtosis(&heavy);
+        assert!((kn - 3.0).abs() < 0.25, "kn={kn}");
+        assert!(kh > kn + 0.5, "kh={kh} kn={kn}");
+    }
+
+    #[test]
+    fn quantiles_of_linear_ramp() {
+        let xs: Vec<f32> = (0..=100).map(|i| i as f32).collect();
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert!((quantile(&xs, 0.5) - 50.0).abs() < 1e-5);
+        assert!((quantile(&xs, 0.25) - 25.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn kl_zero_for_identical_and_positive_for_shifted() {
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..20_000).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 2.0).collect();
+        let same = kl_divergence(&a, &a, 64);
+        let diff = kl_divergence(&a, &b, 64);
+        assert!(same < 0.01, "same={same}");
+        assert!(diff > 0.3, "diff={diff}");
+    }
+
+    #[test]
+    fn dynamic_range_flags_outliers() {
+        let mut xs = vec![0.01f32; 1000];
+        let clean = dynamic_range(&xs);
+        xs[0] = 5.0;
+        let dirty = dynamic_range(&xs);
+        assert!(dirty > clean * 50.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! `glvq` — CLI for the GLVQ reproduction (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   gen-data   write a synthetic corpus to a file
+//!   train      train a model through the AOT train-step artifact
+//!   quantize   quantize a trained checkpoint into a .glvq container
+//!   eval       perplexity + zero-shot of a (quantized) checkpoint
+//!   serve      batched generate/score server demo over stdin requests
+//!   exp        regenerate a paper table (table1..table13 | all)
+//!   info       print artifact / model inventory
+//!
+//! Hand-rolled argument parsing (clap is not in the vendored crate set).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use glvq::config::GlvqConfig;
+use glvq::coordinator::server::{self, NativeBackend, Request, Response, ServerOpts};
+use glvq::data::corpus::{Corpus, Mix};
+use glvq::exp::{tables, Workspace};
+use glvq::glvq::pipeline::PipelineOpts;
+use glvq::info;
+use glvq::tensor::TensorStore;
+use glvq::util::logging;
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [--flags]
+  gen-data  --mix wiki|web --bytes N --seed S --out FILE
+  train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
+  quantize  --model s|m --method glvq-8d|rtn|gptq|... --bits B --out FILE
+  eval      --model s|m --method M --bits B [--zeroshot]
+  serve     --model s|m [--quantized METHOD --bits B] (reads 'gen <prompt>' lines)
+  exp       table1..table13 | all  [--dir runs]
+  info      [--artifacts DIR]";
+
+fn main() -> Result<()> {
+    logging::level_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let artifacts = args.get("artifacts", "artifacts");
+    let dir = args.get("dir", "runs");
+
+    match cmd.as_str() {
+        "gen-data" => {
+            let mix = if args.get("mix", "wiki") == "web" { Mix::Web } else { Mix::Wiki };
+            let bytes = args.get_usize("bytes", 1 << 20);
+            let seed = args.get_usize("seed", 42) as u64;
+            let out = args.get("out", "corpus.txt");
+            let text = Corpus::new(mix, seed).generate(bytes);
+            std::fs::write(&out, &text)?;
+            info!("wrote {bytes} bytes of {} corpus to {out}", mix.name());
+        }
+        "train" => {
+            let model = args.get("model", "s");
+            let mut ws = Workspace::new(&artifacts, &dir)?;
+            let steps = args.get_usize("steps", Workspace::default_steps(&model));
+            let lr = args.get_f64("lr", 3e-3) as f32;
+            let store = ws.trained(&model, steps, lr)?;
+            info!("trained model {model}: {} tensors", store.entries.len());
+        }
+        "quantize" => {
+            let model = args.get("model", "s");
+            let method = args.get("method", "glvq-16d");
+            let bits = args.get_f64("bits", 2.0);
+            let out = args.get("out", &format!("{dir}/{model}_{method}_{bits}b.glvq"));
+            let mut ws = Workspace::new(&artifacts, &dir)?;
+            let gs = args.get_usize("group-size", 128);
+            let opts = PipelineOpts { group_size: gs, target_bits: bits, ..Default::default() };
+            let (qm, _) = ws.quantize(&model, &method, bits, Some(opts))?;
+            qm.save(std::path::Path::new(&out))?;
+            let (payload, side) = qm.size_bytes();
+            info!(
+                "saved {out}: avg {:.3} bits, payload {payload} B, side {side} B ({:.2}%)",
+                qm.avg_bits(),
+                side as f64 / payload as f64 * 100.0
+            );
+        }
+        "eval" => {
+            let model = args.get("model", "s");
+            let method = args.get("method", "none");
+            let bits = args.get_f64("bits", 2.0);
+            let mut ws = Workspace::new(&artifacts, &dir)?;
+            let store = if method == "none" {
+                ws.trained_default(&model)?
+            } else {
+                ws.quantize(&model, &method, bits, None)?.1
+            };
+            for mix in [Mix::Wiki, Mix::Web] {
+                let r = ws.ppl(&model, &store, mix)?;
+                println!(
+                    "{} {} ppl({}) = {:.3}  (nll/tok {:.4}, {} tokens)",
+                    model,
+                    method,
+                    mix.name(),
+                    r.ppl,
+                    r.nll_per_token,
+                    r.tokens
+                );
+            }
+            if args.flags.contains_key("zeroshot") {
+                for (task, acc) in ws.zeroshot(&model, &store)? {
+                    println!("{model} {method} {task}: {acc:.1}%");
+                }
+            }
+        }
+        "serve" => {
+            let model = args.get("model", "s");
+            let mut ws = Workspace::new(&artifacts, &dir)?;
+            let method = args.get("quantized", "none");
+            let bits = args.get_f64("bits", 2.0);
+            let store: TensorStore = if method == "none" {
+                ws.trained_default(&model)?
+            } else {
+                ws.quantize(&model, &method, bits, None)?.1
+            };
+            let cfg = ws.model_cfg(&model)?;
+            let handle = server::start(
+                move || Ok(Box::new(NativeBackend { cfg, store }) as Box<_>),
+                ServerOpts::default(),
+            );
+            info!("serving model {model} (quantized={method}); type: gen <prompt> | score <p> | quit");
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if stdin.read_line(&mut line)? == 0 {
+                    break;
+                }
+                let line = line.trim();
+                if line == "quit" || line.is_empty() {
+                    break;
+                }
+                let resp = if let Some(p) = line.strip_prefix("gen ") {
+                    handle.call(Request::Generate { prompt: p.as_bytes().to_vec(), max_new: 48 })?
+                } else if let Some(p) = line.strip_prefix("score ") {
+                    handle.call(Request::Score {
+                        prompt: p.as_bytes().to_vec(),
+                        continuation: b". the".to_vec(),
+                    })?
+                } else {
+                    println!("unknown command");
+                    continue;
+                };
+                match resp {
+                    Response::Generated { text } => {
+                        println!("→ {}", String::from_utf8_lossy(&text))
+                    }
+                    Response::Scored { logprob } => println!("→ logprob {logprob:.3}"),
+                    Response::Error { message } => println!("error: {message}"),
+                }
+            }
+            let metrics = handle.shutdown();
+            info!("{}", metrics.report());
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "table1".to_string());
+            let mut ws = Workspace::new(&artifacts, &dir)?;
+            tables::run(&mut ws, &id)?;
+        }
+        "info" => {
+            let ws = Workspace::new(&artifacts, &dir)?;
+            for (name, m) in &ws.engine.models {
+                println!(
+                    "model {name}: d={} L={} H={} ff={} seq={} params={} programs={:?}",
+                    m.config.d_model,
+                    m.config.n_layer,
+                    m.config.n_head,
+                    m.config.d_ff,
+                    m.config.seq_len,
+                    m.params.len(),
+                    m.programs.keys().collect::<Vec<_>>()
+                );
+            }
+            for (d, g) in &ws.engine.glvq {
+                println!("glvq d={d}: tile {}x{} ncal={} programs={:?}", g.r, g.n, g.ncal, g.programs.keys().collect::<Vec<_>>());
+            }
+            let _ = GlvqConfig::default();
+        }
+        other => {
+            bail!("unknown command '{other}'\n{USAGE}");
+        }
+    }
+    Ok(())
+}
+

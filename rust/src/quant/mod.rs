@@ -1,0 +1,12 @@
+//! Quantized-weight representation shared by GLVQ and all baselines:
+//! bit-packed integer codes ([`pack`]), per-group side information and the
+//! `GroupQuantizer` contract ([`traits`]), and the on-disk `.glvq`
+//! container ([`format`]) whose measured sizes back the Table-5 overhead
+//! reproduction.
+
+pub mod format;
+pub mod pack;
+pub mod traits;
+
+pub use pack::PackedCodes;
+pub use traits::{GroupQuantizer, QuantizedGroup, SideInfo};

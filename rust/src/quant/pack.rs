@@ -1,0 +1,173 @@
+//! Bit-packing of integer codes, b ∈ 1..=8 bits per code.
+//!
+//! Codes are signed integers in the symmetric-ish range
+//! [−2^(b−1), 2^(b−1)−1]; they are stored offset-shifted as unsigned
+//! b-bit fields packed LSB-first into a byte stream. This is the payload
+//! the Table-5 overhead accounting measures (`m·n·b/8` bytes, Eq. 26).
+
+/// Inclusive signed code range for b bits.
+pub fn code_range(bits: u8) -> (i32, i32) {
+    assert!((1..=8).contains(&bits), "bits must be 1..=8");
+    let half = 1i32 << (bits - 1);
+    (-half, half - 1)
+}
+
+/// Clamp a raw (possibly out-of-range) integer code into the b-bit range.
+#[inline]
+pub fn clamp_code(v: f32, bits: u8) -> i32 {
+    let (lo, hi) = code_range(bits);
+    (v.round() as i64).clamp(lo as i64, hi as i64) as i32
+}
+
+/// Bit-packed code vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    pub bits: u8,
+    pub n: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedCodes {
+    /// Pack signed codes; panics if any code is out of range (callers clamp
+    /// with [`clamp_code`] first — out-of-range here means a logic bug).
+    pub fn pack(codes: &[i32], bits: u8) -> PackedCodes {
+        let (lo, hi) = code_range(bits);
+        let nbits = codes.len() * bits as usize;
+        let mut data = vec![0u8; nbits.div_ceil(8)];
+        let mut bitpos = 0usize;
+        for &c in codes {
+            assert!(c >= lo && c <= hi, "code {c} out of {bits}-bit range [{lo},{hi}]");
+            let u = (c - lo) as u32;
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            data[byte] |= (u << off) as u8;
+            if off + bits as usize > 8 {
+                data[byte + 1] |= (u >> (8 - off)) as u8;
+            }
+            bitpos += bits as usize;
+        }
+        PackedCodes { bits, n: codes.len(), data }
+    }
+
+    /// Unpack all codes.
+    pub fn unpack(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.n];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Unpack into a caller-provided buffer (len == n). Allocation-free —
+    /// this is on the streaming-decode hot path.
+    pub fn unpack_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.n);
+        let (lo, _) = code_range(self.bits);
+        let b = self.bits as usize;
+        let mask = ((1u32 << b) - 1) as u32;
+        let mut bitpos = 0usize;
+        for slot in out.iter_mut() {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let mut u = (self.data[byte] as u32) >> off;
+            if off + b > 8 {
+                u |= (self.data[byte + 1] as u32) << (8 - off);
+            }
+            *slot = (u & mask) as i32 + lo;
+            bitpos += b;
+        }
+    }
+
+    /// Unpack a sub-range [start, start+len) without touching the rest —
+    /// used by the streaming decoder to materialize one sub-block at a time.
+    pub fn unpack_range_into(&self, start: usize, out: &mut [i32]) {
+        assert!(start + out.len() <= self.n);
+        let (lo, _) = code_range(self.bits);
+        let b = self.bits as usize;
+        let mask = ((1u32 << b) - 1) as u32;
+        let mut bitpos = start * b;
+        for slot in out.iter_mut() {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let mut u = (self.data[byte] as u32) >> off;
+            if off + b > 8 {
+                u |= (self.data[byte + 1] as u32) << (8 - off);
+            }
+            *slot = (u & mask) as i32 + lo;
+            bitpos += b;
+        }
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn ranges_are_symmetricish() {
+        assert_eq!(code_range(1), (-1, 0));
+        assert_eq!(code_range(2), (-2, 1));
+        assert_eq!(code_range(4), (-8, 7));
+        assert_eq!(code_range(8), (-128, 127));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        proptest(60, |rig| {
+            let bits = rig.usize_in(1, 8) as u8;
+            let (lo, hi) = code_range(bits);
+            let n = rig.usize_in(0, 300);
+            let codes: Vec<i32> = (0..n)
+                .map(|_| rig.usize_in(0, (hi - lo) as usize) as i32 + lo)
+                .collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            assert_eq!(packed.unpack(), codes);
+            assert_eq!(packed.payload_bytes(), (n * bits as usize).div_ceil(8));
+        });
+    }
+
+    #[test]
+    fn range_unpack_matches_full_unpack() {
+        proptest(40, |rig| {
+            let bits = rig.usize_in(1, 8) as u8;
+            let (lo, hi) = code_range(bits);
+            let n = rig.usize_in(1, 200);
+            let codes: Vec<i32> = (0..n)
+                .map(|_| rig.usize_in(0, (hi - lo) as usize) as i32 + lo)
+                .collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            let start = rig.usize_in(0, n - 1);
+            let len = rig.usize_in(0, n - start);
+            let mut out = vec![0i32; len];
+            packed.unpack_range_into(start, &mut out);
+            assert_eq!(&out[..], &codes[start..start + len]);
+        });
+    }
+
+    #[test]
+    fn clamp_code_saturates() {
+        assert_eq!(clamp_code(100.0, 2), 1);
+        assert_eq!(clamp_code(-100.0, 2), -2);
+        assert_eq!(clamp_code(0.4, 2), 0);
+        assert_eq!(clamp_code(-1.6, 2), -2);
+    }
+
+    #[test]
+    fn out_of_range_pack_panics() {
+        let r = std::panic::catch_unwind(|| PackedCodes::pack(&[5], 2));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn boundary_values_survive() {
+        for bits in 1..=8u8 {
+            let (lo, hi) = code_range(bits);
+            let codes = vec![lo, hi, 0.min(hi).max(lo)];
+            let p = PackedCodes::pack(&codes, bits);
+            assert_eq!(p.unpack(), codes);
+        }
+    }
+}

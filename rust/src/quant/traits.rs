@@ -1,0 +1,341 @@
+//! The quantizer contract every method (GLVQ + baselines) implements, and
+//! the unified quantized-group representation with per-method side info.
+//!
+//! A *group* is an (rows × cols) weight panel — the paper's column group of
+//! one linear layer (cols = group size, default 128; rows = output dim).
+//! Calibration inputs X are (cols × N): the activations feeding those
+//! columns. `quantize` returns codes + side info; `dequantize` must
+//! reproduce exactly what the runtime streaming decoder computes.
+
+use crate::compand::MuLaw;
+use crate::linalg::Mat;
+use crate::quant::pack::PackedCodes;
+
+/// Per-group side information — the "extra storage" Table 5 accounts for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SideInfo {
+    /// Uniform scalar quantization: w ≈ scale · code (+ zero).
+    Uniform { scale: f32, zero: f32 },
+    /// Lattice VQ (GLVQ / fixed-lattice): d×d generation matrix, μ, and the
+    /// group normalization scale. Codes live on the *half-integer* grid:
+    /// weights decode as scale·F_μ⁻¹(G (z + ½·1)) per d-length sub-block
+    /// (symmetric reconstruction levels at every bit width — the same ½
+    /// offset convention as QuIP#'s E8+½). The paper stores G+μ; we add one
+    /// FP16 scalar for the normalization — side info is 2d²+4 instead of
+    /// 2d²+2 bytes, a documented deviation that keeps the container
+    /// bit-exact with the training objective.
+    Lattice { d: usize, g: Vec<f32>, mu: f32, scale: f32 },
+    /// Hadamard-rotated lattice (QuIP#-lite): sign diagonal seed + scale;
+    /// decode = unrotate(scale · nearest-lattice-point).
+    RotatedLattice { d: usize, scale: f32, sign_seed: u64 },
+    /// Free-form VQ codebook (AQLM/SqueezeLLM-lite): k centers of dim `dim`.
+    Codebook { dim: usize, centers: Vec<f32> },
+    /// Trellis-coded quantization (QTIP-lite): scalar reproduction levels
+    /// per trellis branch (levels.len() = 2^branch_bits · states).
+    Trellis { levels: Vec<f32>, states: usize },
+    /// Binarization (OneBit/BiLLM-lite): per-row scale(s); `residual` adds a
+    /// second sign pass over the residual for the high-salience rows.
+    Binary { row_scales: Vec<f32>, residual_scales: Option<Vec<f32>> },
+}
+
+impl SideInfo {
+    /// Bytes this side info costs on disk at FP16 storage (the paper stores
+    /// G and μ in FP16 — Appendix B, Eq. 26: 2d² + 2 bytes for lattice).
+    pub fn fp16_bytes(&self) -> usize {
+        match self {
+            SideInfo::Uniform { .. } => 4,
+            SideInfo::Lattice { d, .. } => 2 * d * d + 4,
+            SideInfo::RotatedLattice { .. } => 2 + 8,
+            SideInfo::Codebook { centers, .. } => 2 * centers.len(),
+            SideInfo::Trellis { levels, .. } => 2 * levels.len(),
+            SideInfo::Binary { row_scales, residual_scales } => {
+                2 * row_scales.len()
+                    + residual_scales.as_ref().map_or(0, |r| 2 * r.len())
+            }
+        }
+    }
+}
+
+/// A quantized weight group: packed codes + side info + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedGroup {
+    pub method: &'static str,
+    pub bits: u8,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: PackedCodes,
+    pub side: SideInfo,
+}
+
+impl QuantizedGroup {
+    /// Total payload bits for rate accounting (codes only, paper convention;
+    /// side info reported separately — Table 5).
+    pub fn payload_bits(&self) -> usize {
+        self.rows * self.cols * self.bits as usize
+    }
+
+    pub fn side_bytes(&self) -> usize {
+        self.side.fp16_bytes()
+    }
+
+    /// Reconstruct the full (rows × cols) weight panel.
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Allocation-light reconstruction into a caller buffer; mirrors the
+    /// runtime streaming decoder's math exactly (tested for equality).
+    pub fn dequantize_into(&self, out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (self.rows, self.cols));
+        let codes = self.codes.unpack();
+        match &self.side {
+            SideInfo::Uniform { scale, zero } => {
+                for (o, &c) in out.data.iter_mut().zip(&codes) {
+                    *o = c as f32 * scale + zero;
+                }
+            }
+            SideInfo::Lattice { d, g, mu, scale } => {
+                let d = *d;
+                let gm = Mat::from_vec(d, d, g.clone());
+                let comp = MuLaw::new(*mu);
+                let blocks = self.rows * self.cols / d;
+                debug_assert_eq!(codes.len(), blocks * d);
+                let mut y = vec![0.0f32; d];
+                for b in 0..blocks {
+                    let z = &codes[b * d..(b + 1) * d];
+                    // ŵ = scale · F⁻¹(G (z + ½))
+                    for i in 0..d {
+                        let mut acc = 0.0f32;
+                        let row = gm.row(i);
+                        for (j, &zj) in z.iter().enumerate() {
+                            acc += row[j] * (zj as f32 + 0.5);
+                        }
+                        y[i] = scale * comp.inverse(acc);
+                    }
+                    out.data[b * d..(b + 1) * d].copy_from_slice(&y);
+                }
+            }
+            SideInfo::RotatedLattice { d, scale, sign_seed } => {
+                let d = *d;
+                let blocks = self.rows * self.cols / d;
+                let signs = sign_vector(*sign_seed, d);
+                let mut y = vec![0.0f32; d];
+                for b in 0..blocks {
+                    let z = &codes[b * d..(b + 1) * d];
+                    for i in 0..d {
+                        y[i] = z[i] as f32 * 0.5; // half-integer E8 grid units
+                    }
+                    let mut w = hadamard_inverse(&y);
+                    for i in 0..d {
+                        w[i] *= signs[i] * scale;
+                    }
+                    out.data[b * d..(b + 1) * d].copy_from_slice(&w);
+                }
+            }
+            SideInfo::Codebook { dim, centers } => {
+                let dim = *dim;
+                let lo = crate::quant::pack::code_range(self.codes.bits).0;
+                let blocks = self.rows * self.cols / dim;
+                for b in 0..blocks {
+                    let idx = (codes[b] - lo) as usize;
+                    let c = &centers[idx * dim..(idx + 1) * dim];
+                    out.data[b * dim..(b + 1) * dim].copy_from_slice(c);
+                }
+            }
+            SideInfo::Trellis { levels, states } => {
+                // Stateful TCQ decode (QTIP-lite, baselines::tcq): levels are
+                // laid out [subset][j] with 4 Ungerboeck subsets; each b-bit
+                // code is (u | j<<1): u drives the state machine, j indexes
+                // within the allowed subset. state' = ((state<<1)|u) & (S-1).
+                let per = levels.len() / 4;
+                let lo = crate::quant::pack::code_range(self.bits).0;
+                let smask = states - 1;
+                let mut state = 0usize;
+                for (o, &c) in out.data.iter_mut().zip(&codes) {
+                    let u = ((c - lo) as usize) & 1;
+                    let j = ((c - lo) as usize) >> 1;
+                    let subset = ((state & 1) << 1) | u;
+                    *o = levels[subset * per + j.min(per - 1)];
+                    state = ((state << 1) | u) & smask;
+                }
+            }
+            SideInfo::Binary { row_scales, residual_scales } => {
+                let lo = crate::quant::pack::code_range(self.bits).0;
+                for r in 0..self.rows {
+                    let s = row_scales[r];
+                    for c in 0..self.cols {
+                        let u = (codes[r * self.cols + c] - lo) as u32;
+                        // bit0 = primary sign, bit1 = residual sign (BiLLM-lite)
+                        let v = if let Some(rs) = residual_scales {
+                            let s2 = rs[r];
+                            let sign1 = if u & 1 != 0 { 1.0 } else { -1.0 };
+                            let sign2 = if u & 2 != 0 { 1.0 } else { -1.0 };
+                            s * sign1 + s2 * sign2
+                        } else {
+                            let sign1 = if u & 1 != 0 { 1.0 } else { -1.0 };
+                            s * sign1
+                        };
+                        out.data[r * self.cols + c] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic ±1 diagonal from a seed (QuIP#-lite randomized rotation).
+pub fn sign_vector(seed: u64, d: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..d)
+        .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// In-place fast Walsh-Hadamard transform (normalized by 1/sqrt(d)).
+pub fn hadamard(x: &[f32]) -> Vec<f32> {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "hadamard needs power-of-two dim");
+    let mut v = x.to_vec();
+    let mut h = 1;
+    while h < d {
+        for i in (0..d).step_by(h * 2) {
+            for j in i..i + h {
+                let a = v[j];
+                let b = v[j + h];
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (d as f32).sqrt();
+    for t in v.iter_mut() {
+        *t *= norm;
+    }
+    v
+}
+
+/// Inverse WHT (the normalized transform is an involution).
+pub fn hadamard_inverse(x: &[f32]) -> Vec<f32> {
+    hadamard(x)
+}
+
+/// The quantizer contract. `bits` is the per-weight budget for this group.
+pub trait GroupQuantizer {
+    /// Quantize a (rows × cols) panel given calibration X (cols × N).
+    fn quantize(&self, w: &Mat, x: &Mat, bits: u8) -> QuantizedGroup;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Reconstruction objective the paper optimizes (Eq. 5):
+/// ||W X − Ŵ X||_F² — the shared metric for comparing methods on a group.
+pub fn recon_error(w: &Mat, w_hat: &Mat, x: &Mat) -> f64 {
+    let diff = w.sub(w_hat);
+    let proj = diff.matmul(x);
+    proj.data.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::PackedCodes;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn hadamard_is_involution_and_orthonormal() {
+        proptest(30, |rig| {
+            let d = *rig.choice(&[2usize, 4, 8, 16, 32, 64, 128]);
+            let x = rig.vec_normal(d, 1.0);
+            let y = hadamard(&x);
+            let back = hadamard_inverse(&y);
+            let n_in: f32 = x.iter().map(|v| v * v).sum();
+            let n_out: f32 = y.iter().map(|v| v * v).sum();
+            assert!((n_in - n_out).abs() < 1e-3 * (1.0 + n_in), "not orthonormal");
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn sign_vector_deterministic_and_pm_one() {
+        let a = sign_vector(42, 16);
+        let b = sign_vector(42, 16);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| *v == 1.0 || *v == -1.0));
+        assert_ne!(sign_vector(43, 16), a);
+    }
+
+    #[test]
+    fn uniform_dequantize() {
+        let codes = vec![-2, -1, 0, 1];
+        let qg = QuantizedGroup {
+            method: "rtn",
+            bits: 2,
+            rows: 2,
+            cols: 2,
+            codes: PackedCodes::pack(&codes, 2),
+            side: SideInfo::Uniform { scale: 0.5, zero: 0.1 },
+        };
+        let m = qg.dequantize();
+        assert_eq!(m.data, vec![-0.9, -0.4, 0.1, 0.6]);
+        assert_eq!(qg.payload_bits(), 8);
+        assert_eq!(qg.side_bytes(), 4);
+    }
+
+    #[test]
+    fn lattice_dequantize_matches_manual_chain() {
+        // d=2, G = [[s,0],[0,s]], mu-law inverse applied after G z
+        let d = 2;
+        let s = 0.04f32;
+        let mu = 60.0f32;
+        let codes = vec![1, -2, 0, 3];
+        let qg = QuantizedGroup {
+            method: "glvq",
+            bits: 3,
+            rows: 1,
+            cols: 4,
+            codes: PackedCodes::pack(&codes, 3),
+            side: SideInfo::Lattice { d, g: vec![s, 0.0, 0.0, s], mu, scale: 0.5 },
+        };
+        let m = qg.dequantize();
+        let c = MuLaw::new(mu);
+        let want: Vec<f32> =
+            codes.iter().map(|&z| 0.5 * c.inverse(s * (z as f32 + 0.5))).collect();
+        for (a, b) in m.data.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(qg.side_bytes(), 2 * 4 + 4);
+    }
+
+    #[test]
+    fn codebook_dequantize_places_centers() {
+        let centers = vec![0.1, 0.2, -0.3, -0.4]; // two centers of dim 2
+        // logical indices [1, 0] stored as signed 1-bit codes offset by lo=-1
+        let (lo, _) = crate::quant::pack::code_range(1);
+        let stored: Vec<i32> = [1i32, 0].iter().map(|&i| i + lo).collect();
+        let qg = QuantizedGroup {
+            method: "kmeans",
+            bits: 1,
+            rows: 1,
+            cols: 4,
+            codes: PackedCodes::pack(&stored, 1),
+            side: SideInfo::Codebook { dim: 2, centers: centers.clone() },
+        };
+        let got = qg.dequantize();
+        assert_eq!(got.data, vec![-0.3, -0.4, 0.1, 0.2]);
+    }
+
+    #[test]
+    fn recon_error_zero_for_exact_reconstruction() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let w = Mat::random_normal(4, 6, 0.1, &mut rng);
+        let x = Mat::random_normal(6, 10, 1.0, &mut rng);
+        assert_eq!(recon_error(&w, &w, &x), 0.0);
+        let w2 = w.scale(1.1);
+        assert!(recon_error(&w, &w2, &x) > 0.0);
+    }
+}

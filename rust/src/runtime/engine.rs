@@ -1,0 +1,207 @@
+//! PJRT engine: client lifecycle, manifest parsing, executable cache.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// Parsed manifest entry for one exported model.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    /// parameter names in canonical order with shapes + quantizable flags
+    pub params: Vec<(String, Vec<usize>, bool)>,
+    /// program name → artifact file name
+    pub programs: BTreeMap<String, String>,
+}
+
+/// Parsed manifest entry for one lattice dimension's GLVQ programs.
+#[derive(Clone, Debug)]
+pub struct GlvqArtifacts {
+    pub d: usize,
+    pub r: usize,
+    pub n: usize,
+    pub ncal: usize,
+    pub programs: BTreeMap<String, String>,
+}
+
+/// The runtime engine: one PJRT CPU client + lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub glvq: BTreeMap<usize, GlvqArtifacts>,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+fn static_name(n: &str) -> &'static str {
+    // ModelConfig.name is &'static; the manifest only ever contains s/m/l
+    match n {
+        "s" => "s",
+        "m" => "m",
+        "l" => "l",
+        _ => "custom",
+    }
+}
+
+impl Engine {
+    /// Create the engine from an artifacts directory (manifest.json inside).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mpath = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        if j.get("version").as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(mobj) = j.get("models").as_obj() {
+            for (name, entry) in mobj {
+                let c = entry.get("config");
+                let cfg = ModelConfig {
+                    name: static_name(name),
+                    vocab: c.get("vocab").as_usize().context("vocab")?,
+                    d_model: c.get("d_model").as_usize().context("d_model")?,
+                    n_layer: c.get("n_layer").as_usize().context("n_layer")?,
+                    n_head: c.get("n_head").as_usize().context("n_head")?,
+                    d_ff: c.get("d_ff").as_usize().context("d_ff")?,
+                    seq_len: c.get("seq_len").as_usize().context("seq_len")?,
+                    batch_train: c.get("batch_train").as_usize().context("batch_train")?,
+                    batch_eval: c.get("batch_eval").as_usize().context("batch_eval")?,
+                };
+                let mut params = Vec::new();
+                for p in entry.get("params").as_arr().context("params")? {
+                    let pname = p.get("name").as_str().context("param name")?.to_string();
+                    let shape: Vec<usize> = p
+                        .get("shape")
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect();
+                    let q = p.get("quantizable").as_bool().unwrap_or(false);
+                    params.push((pname, shape, q));
+                }
+                let mut programs = BTreeMap::new();
+                if let Some(progs) = entry.get("programs").as_obj() {
+                    for (k, v) in progs {
+                        programs.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+                    }
+                }
+                models.insert(name.clone(), ModelArtifacts { config: cfg, params, programs });
+            }
+        }
+
+        let mut glvq = BTreeMap::new();
+        if let Some(gobj) = j.get("glvq").as_obj() {
+            for (dstr, entry) in gobj {
+                let d: usize = dstr.parse().unwrap_or(0);
+                let mut programs = BTreeMap::new();
+                if let Some(progs) = entry.get("programs").as_obj() {
+                    for (k, v) in progs {
+                        programs.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+                    }
+                }
+                glvq.insert(
+                    d,
+                    GlvqArtifacts {
+                        d,
+                        r: entry.get("r").as_usize().unwrap_or(128),
+                        n: entry.get("n").as_usize().unwrap_or(128),
+                        ncal: entry.get("ncal").as_usize().unwrap_or(256),
+                        programs,
+                    },
+                );
+            }
+        }
+
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            models,
+            glvq,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn load(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", path.display()))?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(file.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Look up a model's program artifact file.
+    pub fn model_program(&self, model: &str, program: &str) -> Result<String> {
+        self.models
+            .get(model)
+            .and_then(|m| m.programs.get(program))
+            .cloned()
+            .with_context(|| format!("manifest has no {program} for model {model}"))
+    }
+
+    pub fn glvq_program(&self, d: usize, program: &str) -> Result<String> {
+        self.glvq
+            .get(&d)
+            .and_then(|g| g.programs.get(program))
+            .cloned()
+            .with_context(|| format!("manifest has no glvq {program} for d={d}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in rust/tests/ (integration);
+    // here we test manifest parsing against a synthetic manifest.
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("glvq_engine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "version": 1,
+          "models": {
+            "s": {
+              "config": {"vocab":256,"d_model":128,"n_layer":4,"n_head":4,
+                          "d_ff":512,"seq_len":128,"batch_train":16,"batch_eval":8},
+              "params": [{"name":"emb","shape":[256,128],"quantizable":false}],
+              "programs": {"train_step":"train_step_s.hlo.txt"}
+            }
+          },
+          "glvq": {"8": {"d":8,"r":128,"n":128,"ncal":256,
+                          "programs":{"step":"glvq_step_d8.hlo.txt"}}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let eng = Engine::new(&dir).unwrap();
+        assert_eq!(eng.models["s"].config.d_model, 128);
+        assert_eq!(eng.models["s"].params[0].0, "emb");
+        assert_eq!(eng.glvq[&8].ncal, 256);
+        assert_eq!(eng.model_program("s", "train_step").unwrap(), "train_step_s.hlo.txt");
+        assert!(eng.model_program("s", "nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

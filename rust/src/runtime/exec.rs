@@ -1,0 +1,360 @@
+//! Typed executors over the AOT artifacts + Tensor⇄Literal conversion.
+//!
+//! Executable signatures (fixed by aot.py, P = number of params):
+//!   train_step:   (P params, P m, P v, t, lr, x[Bt,T], y[Bt,T])
+//!                 → (loss, P params', P m', P v')
+//!   forward_loss: (P params, x[Be,T], y[Be,T]) → (nll_sum,)
+//!   logits:       (P params, x[1,T]) → (logits[1,T,V],)
+//!   glvq step:    (w[R,n], x[n,N], g, ginv, mu, g0) → (loss, dG, dμ)
+//!   glvq encode:  (w[R,n], ginv, mu) → (z[R,n/d,d],)
+//!   glvq decode:  (z[R,n/d,d], g, mu) → (w_hat[R,n],)
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::runtime::engine::Engine;
+use crate::tensor::{Tensor, TensorStore};
+
+/// f32 tensor → device literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// (batch, seq) token ids → i32 literal.
+pub fn tokens_to_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    if tokens.len() != batch * seq {
+        bail!("token count {} != {}x{}", tokens.len(), batch, seq);
+    }
+    Ok(xla::Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?)
+}
+
+pub fn literal_to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// A device buffer paired with the host literal it was uploaded from.
+/// `BufferFromHostLiteral` copies asynchronously, so the literal must stay
+/// alive until an execution consuming the buffer has synchronized — holding
+/// both together makes that invariant structural. Buffers/literals are
+/// freed on Drop; this replaces the crate's literal-based `execute`, whose
+/// internal conversions leak (~3.4 MB/call measured for model S — see
+/// EXPERIMENTS.md §Perf).
+pub struct StagedBuf {
+    pub buf: xla::PjRtBuffer,
+    _lit: xla::Literal,
+}
+
+/// Upload a literal to a device buffer (takes ownership to pin the host
+/// memory for the async transfer).
+pub fn to_buffer(client: &xla::PjRtClient, lit: xla::Literal) -> Result<StagedBuf> {
+    let buf = client.buffer_from_host_literal(None, &lit)?;
+    Ok(StagedBuf { buf, _lit: lit })
+}
+
+/// Run a buffer-argument execution and return the first output as a
+/// decomposed tuple of literals. `to_literal_sync` synchronizes, so by the
+/// time this returns the input transfers have completed and the callers'
+/// StagedBufs may be dropped.
+fn run_b(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::Literal>> {
+    let mut result = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+    Ok(result.decompose_tuple()?)
+}
+
+/// Training state that lives as device literals between steps (no
+/// per-step Tensor conversion of the full parameter set).
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: usize,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl TrainState {
+    /// Initialize from a parameter store (Adam moments zeroed).
+    pub fn from_store(engine: &Engine, model: &str, store: &TensorStore) -> Result<TrainState> {
+        let arts = engine.models.get(model).context("unknown model")?;
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        for (name, shape, _) in &arts.params {
+            let t = store
+                .get(name)
+                .with_context(|| format!("store missing {name}"))?;
+            if &t.shape != shape {
+                bail!("{name}: shape {:?} != manifest {:?}", t.shape, shape);
+            }
+            params.push(tensor_to_literal(t)?);
+            let zeros = Tensor::zeros(shape);
+            m.push(tensor_to_literal(&zeros)?);
+            v.push(tensor_to_literal(&zeros)?);
+            names.push(name.clone());
+            shapes.push(shape.clone());
+        }
+        Ok(TrainState { params, m, v, step: 0, names, shapes })
+    }
+
+    /// Export current parameters back to a TensorStore.
+    pub fn to_store(&self) -> Result<TensorStore> {
+        let mut store = TensorStore::new();
+        for ((lit, name), shape) in self.params.iter().zip(&self.names).zip(&self.shapes) {
+            let data = literal_to_f32s(lit)?;
+            store.insert(name, Tensor::from_vec(shape, data));
+        }
+        Ok(store)
+    }
+}
+
+/// The train-step executor.
+pub struct TrainStepExec {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TrainStepExec {
+    pub fn new(engine: &Engine, model: &str) -> Result<TrainStepExec> {
+        let arts = engine.models.get(model).context("unknown model")?;
+        let file = engine.model_program(model, "train_step")?;
+        Ok(TrainStepExec {
+            exe: engine.load(&file)?,
+            batch: arts.config.batch_train,
+            seq: arts.config.seq_len,
+        })
+    }
+
+    /// One optimizer step; updates `state` in place, returns the loss.
+    pub fn step(&self, state: &mut TrainState, lr: f32, x: &[i32], y: &[i32]) -> Result<f32> {
+        let p = state.params.len();
+        state.step += 1;
+        let client = self.exe.client().clone();
+        let mut bufs: Vec<StagedBuf> = Vec::with_capacity(3 * p + 4);
+        // state literals are cloned into the staged pairs (host-side copy)
+        for lit in state.params.iter().chain(&state.m).chain(&state.v) {
+            bufs.push(to_buffer(&client, lit.clone())?);
+        }
+        bufs.push(to_buffer(&client, scalar_literal(state.step as f32))?);
+        bufs.push(to_buffer(&client, scalar_literal(lr))?);
+        bufs.push(to_buffer(&client, tokens_to_literal(x, self.batch, self.seq)?)?);
+        bufs.push(to_buffer(&client, tokens_to_literal(y, self.batch, self.seq)?)?);
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.buf).collect();
+        let mut tup = run_b(&self.exe, &refs)?;
+        if tup.len() != 1 + 3 * p {
+            bail!("train_step returned {} outputs, expected {}", tup.len(), 1 + 3 * p);
+        }
+        let loss = tup[0].get_first_element::<f32>()?;
+        let rest: Vec<xla::Literal> = tup.drain(1..).collect();
+        let mut it = rest.into_iter();
+        state.params = it.by_ref().take(p).collect();
+        state.m = it.by_ref().take(p).collect();
+        state.v = it.by_ref().take(p).collect();
+        Ok(loss)
+    }
+}
+
+/// The forward-loss (NLL sum) executor for perplexity evaluation.
+pub struct ForwardLossExec {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq: usize,
+    param_names: Vec<String>,
+}
+
+impl ForwardLossExec {
+    pub fn new(engine: &Engine, model: &str) -> Result<ForwardLossExec> {
+        let arts = engine.models.get(model).context("unknown model")?;
+        let file = engine.model_program(model, "forward_loss")?;
+        Ok(ForwardLossExec {
+            exe: engine.load(&file)?,
+            batch: arts.config.batch_eval,
+            seq: arts.config.seq_len,
+            param_names: arts.params.iter().map(|(n, _, _)| n.clone()).collect(),
+        })
+    }
+
+    /// Upload the parameter set to device buffers once; reuse across
+    /// eval batches (leak-free: buffers are dropped when the Vec drops).
+    pub fn stage_params(&self, store: &TensorStore) -> Result<Vec<StagedBuf>> {
+        let client = self.exe.client();
+        self.param_names
+            .iter()
+            .map(|n| {
+                let t = store.get(n).with_context(|| format!("store missing {n}"))?;
+                to_buffer(client, tensor_to_literal(t)?)
+            })
+            .collect()
+    }
+
+    /// Total NLL over one (batch × seq) batch.
+    pub fn nll_sum(&self, params: &[StagedBuf], x: &[i32], y: &[i32]) -> Result<f64> {
+        let client = self.exe.client();
+        let xb = to_buffer(client, tokens_to_literal(x, self.batch, self.seq)?)?;
+        let yb = to_buffer(client, tokens_to_literal(y, self.batch, self.seq)?)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = params.iter().map(|b| &b.buf).collect();
+        refs.push(&xb.buf);
+        refs.push(&yb.buf);
+        let tup = run_b(&self.exe, &refs)?;
+        Ok(tup[0].get_first_element::<f32>()? as f64)
+    }
+}
+
+/// The logits executor (single-sequence scoring / generation).
+pub struct LogitsExec {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub seq: usize,
+    pub vocab: usize,
+    param_names: Vec<String>,
+}
+
+impl LogitsExec {
+    pub fn new(engine: &Engine, model: &str) -> Result<LogitsExec> {
+        let arts = engine.models.get(model).context("unknown model")?;
+        let file = engine.model_program(model, "logits")?;
+        Ok(LogitsExec {
+            exe: engine.load(&file)?,
+            seq: arts.config.seq_len,
+            vocab: arts.config.vocab,
+            param_names: arts.params.iter().map(|(n, _, _)| n.clone()).collect(),
+        })
+    }
+
+    pub fn stage_params(&self, store: &TensorStore) -> Result<Vec<StagedBuf>> {
+        let client = self.exe.client();
+        self.param_names
+            .iter()
+            .map(|n| {
+                let t = store.get(n).with_context(|| format!("store missing {n}"))?;
+                to_buffer(client, tensor_to_literal(t)?)
+            })
+            .collect()
+    }
+
+    /// Logits for one sequence (padded to seq_len); returns (seq×vocab).
+    pub fn logits(&self, params: &[StagedBuf], x: &[i32]) -> Result<Vec<f32>> {
+        if x.len() != self.seq {
+            bail!("sequence must be padded to {}", self.seq);
+        }
+        let client = self.exe.client();
+        let xb = to_buffer(client, tokens_to_literal(x, 1, self.seq)?)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = params.iter().map(|b| &b.buf).collect();
+        refs.push(&xb.buf);
+        let tup = run_b(&self.exe, &refs)?;
+        literal_to_f32s(&tup[0])
+    }
+}
+
+/// The GLVQ group-step executor (accelerated alternating optimization).
+pub struct GlvqStepExec {
+    step: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    encode: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    decode: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub d: usize,
+    pub r: usize,
+    pub n: usize,
+    pub ncal: usize,
+}
+
+impl GlvqStepExec {
+    pub fn new(engine: &Engine, d: usize) -> Result<GlvqStepExec> {
+        let arts = engine.glvq.get(&d).context("no glvq artifacts for d")?;
+        Ok(GlvqStepExec {
+            step: engine.load(&engine.glvq_program(d, "step")?)?,
+            encode: engine.load(&engine.glvq_program(d, "encode")?)?,
+            decode: engine.load(&engine.glvq_program(d, "decode")?)?,
+            d,
+            r: arts.r,
+            n: arts.n,
+            ncal: arts.ncal,
+        })
+    }
+
+    /// One alternating-opt observation on a canonical (R×n) tile.
+    /// Returns (loss, dG, dμ).
+    pub fn step(
+        &self,
+        w: &Mat,
+        x: &Mat,
+        g: &Mat,
+        ginv: &Mat,
+        mu: f32,
+        g0: &Mat,
+    ) -> Result<(f64, Mat, f32)> {
+        let client = self.step.client();
+        let bufs = [
+            to_buffer(client, mat_to_literal(w)?)?,
+            to_buffer(client, mat_to_literal(x)?)?,
+            to_buffer(client, mat_to_literal(g)?)?,
+            to_buffer(client, mat_to_literal(ginv)?)?,
+            to_buffer(client, scalar_literal(mu))?,
+            to_buffer(client, mat_to_literal(g0)?)?,
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.buf).collect();
+        let tup = run_b(&self.step, &refs)?;
+        let loss = tup[0].get_first_element::<f32>()? as f64;
+        let dg = Mat::from_vec(self.d, self.d, literal_to_f32s(&tup[1])?);
+        let dmu = tup[2].get_first_element::<f32>()?;
+        Ok((loss, dg, dmu))
+    }
+
+    /// Final Babai encode of a tile → codes (R·n/d·d integer-valued f32).
+    pub fn encode(&self, w: &Mat, ginv: &Mat, mu: f32) -> Result<Vec<f32>> {
+        let client = self.encode.client();
+        let bufs = [
+            to_buffer(client, mat_to_literal(w)?)?,
+            to_buffer(client, mat_to_literal(ginv)?)?,
+            to_buffer(client, scalar_literal(mu))?,
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.buf).collect();
+        let tup = run_b(&self.encode, &refs)?;
+        literal_to_f32s(&tup[0])
+    }
+
+    /// Decode codes back to a (R×n) tile.
+    pub fn decode(&self, z: &[f32], g: &Mat, mu: f32) -> Result<Mat> {
+        let blocks = (self.r * self.n / self.d) as i64;
+        let zlit =
+            xla::Literal::vec1(z).reshape(&[self.r as i64, blocks / self.r as i64, self.d as i64])?;
+        let client = self.decode.client();
+        let bufs = [
+            to_buffer(client, zlit)?,
+            to_buffer(client, mat_to_literal(g)?)?,
+            to_buffer(client, scalar_literal(mu))?,
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| &b.buf).collect();
+        let tup = run_b(&self.decode, &refs)?;
+        Ok(Mat::from_vec(self.r, self.n, literal_to_f32s(&tup[0])?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_f32s(&lit).unwrap(), t.data);
+    }
+
+    #[test]
+    fn token_literal_shape_checked() {
+        assert!(tokens_to_literal(&[1, 2, 3], 2, 2).is_err());
+        assert!(tokens_to_literal(&[1, 2, 3, 4], 2, 2).is_ok());
+    }
+}

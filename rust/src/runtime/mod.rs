@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! - [`engine`] — PJRT CPU client + artifact registry (parses
+//!   `artifacts/manifest.json`) + compile cache,
+//! - [`exec`] — typed executors: TrainStep / ForwardLoss / Logits / GlvqStep
+//!   with Tensor⇄Literal conversion.
+//!
+//! Python never runs at runtime; interchange is HLO *text* (xla_extension
+//! 0.5.1 rejects jax≥0.5 serialized protos — see DESIGN.md).
+
+pub mod engine;
+pub mod exec;
+
+pub use engine::Engine;

@@ -1,0 +1,288 @@
+//! Salience-Determined Bit Allocation (SDBA) — paper §3.1, Eq. 3, adopted
+//! from Slim-LLM.
+//!
+//! Groups receive b_g ∈ {N−1, N, N+1} bits with the balance constraint
+//! |G_{N+1}| = |G_{N−1}| so the mean stays exactly N. Salience is the
+//! KL divergence between the group's full-precision output distribution
+//! (W_g X) and its base-precision quantized output (Ŵ_g X) — groups whose
+//! outputs distort most at N bits are promoted.
+//!
+//! The promoted/demoted count k is found by the double-pointer search over
+//! k ∈ [0, G/2]: a golden-section-style shrink on the (empirically convex)
+//! total-distortion curve, O(log G) cost evaluations, matching the paper's
+//! O(log m) claim.
+//!
+//! Fractional global rates (Table 3: 1.5, 1.0 bits) reuse the same salience
+//! ordering: groups are split between ⌊t⌋ and ⌈t⌉ bits with the exact count
+//! ratio that hits the target mean.
+
+use crate::linalg::stats::kl_divergence;
+use crate::linalg::Mat;
+
+/// Per-group salience + distortion estimates at the three candidate widths.
+#[derive(Clone, Debug)]
+pub struct GroupSalience {
+    /// group index in pipeline order
+    pub index: usize,
+    /// KL(WX || Ŵ_N X) — the promotion priority
+    pub salience: f64,
+    /// distortion (recon MSE) at N−1 / N / N+1 bits
+    pub dist: [f64; 3],
+}
+
+/// Compute salience + distortion profile for one group using a fast RTN
+/// proxy quantizer at each candidate width (the full GLVQ optimizer is far
+/// too expensive to run G× per candidate; the paper's Slim-LLM heuristic is
+/// likewise proxy-based).
+pub fn group_salience(index: usize, w: &Mat, x: &Mat, base_bits: u8) -> GroupSalience {
+    let full = w.matmul(x);
+    let mut dist = [0.0f64; 3];
+    let mut salience = 0.0f64;
+    for (slot, delta) in [(-1i32, 0usize), (0, 1), (1, 2)] {
+        let b = (base_bits as i32 + slot).clamp(1, 8) as u8;
+        let w_hat = rtn_proxy(w, b);
+        let qout = w_hat.matmul(x);
+        let mse: f64 = full
+            .data
+            .iter()
+            .zip(&qout.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        dist[delta] = mse;
+        if slot == 0 {
+            salience = kl_divergence(&full.data, &qout.data, 64);
+        }
+    }
+    GroupSalience { index, salience, dist }
+}
+
+/// Minimal RTN used only as the salience proxy.
+fn rtn_proxy(w: &Mat, bits: u8) -> Mat {
+    let maxabs = w.max_abs().max(1e-12);
+    let levels = ((1i64 << bits) - 1) as f32;
+    let scale = 2.0 * maxabs / levels;
+    let mut out = w.clone();
+    for v in out.data.iter_mut() {
+        let q = ((*v + maxabs) / scale).round().clamp(0.0, levels);
+        *v = q * scale - maxabs;
+    }
+    out
+}
+
+/// A bit assignment for all groups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    pub bits: Vec<u8>,
+}
+
+impl Allocation {
+    pub fn mean_bits(&self) -> f64 {
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.bits.len().max(1) as f64
+    }
+
+    pub fn uniform(n_groups: usize, bits: u8) -> Allocation {
+        Allocation { bits: vec![bits; n_groups] }
+    }
+}
+
+/// SDBA with integer target N: balanced ±1 promotion/demotion of the k most
+/// and least salient groups; k minimizes the summed distortion estimate.
+pub fn allocate_balanced(saliences: &[GroupSalience], base_bits: u8) -> Allocation {
+    let g = saliences.len();
+    if base_bits <= 1 {
+        // demotion below 1 bit is impossible, so the balance constraint
+        // forces the uniform allocation at the floor rate
+        return Allocation::uniform(g, 1);
+    }
+    let mut order: Vec<usize> = (0..g).collect();
+    // descending salience
+    order.sort_by(|&a, &b| {
+        saliences[b]
+            .salience
+            .partial_cmp(&saliences[a].salience)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let cost = |k: usize| -> f64 {
+        let mut total = 0.0;
+        for (rank, &gi) in order.iter().enumerate() {
+            let d = &saliences[gi].dist;
+            total += if rank < k {
+                d[2] // promoted to N+1
+            } else if rank >= g - k {
+                d[0] // demoted to N−1
+            } else {
+                d[1]
+            };
+        }
+        total
+    };
+
+    // double-pointer / golden-section shrink over k ∈ [0, g/2]
+    let (mut lo, mut hi) = (0usize, g / 2);
+    while hi - lo > 2 {
+        let m1 = lo + (hi - lo) / 3;
+        let m2 = hi - (hi - lo) / 3;
+        if cost(m1) <= cost(m2) {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+    }
+    let mut best_k = lo;
+    let mut best_cost = cost(lo);
+    for k in lo + 1..=hi {
+        let c = cost(k);
+        if c < best_cost {
+            best_cost = c;
+            best_k = k;
+        }
+    }
+
+    let mut bits = vec![base_bits; g];
+    for (rank, &gi) in order.iter().enumerate() {
+        if rank < best_k {
+            bits[gi] = (base_bits + 1).min(8);
+        } else if rank >= g - best_k {
+            bits[gi] = base_bits.saturating_sub(1).max(1);
+        }
+    }
+    Allocation { bits }
+}
+
+/// Fractional-rate allocation (paper §4.3): hit `target` mean bits exactly
+/// (up to rounding on group count) by splitting groups between ⌊t⌋ and ⌈t⌉
+/// in salience order (most salient get the extra bit).
+pub fn allocate_fractional(saliences: &[GroupSalience], target: f64) -> Allocation {
+    let g = saliences.len();
+    let lo = target.floor().max(1.0) as u8;
+    let hi = target.ceil().max(1.0) as u8;
+    if lo == hi {
+        return allocate_balanced(saliences, lo);
+    }
+    // n_hi groups at hi bits s.t. mean ≈ target
+    let n_hi = ((target - lo as f64) * g as f64).round() as usize;
+    let mut order: Vec<usize> = (0..g).collect();
+    order.sort_by(|&a, &b| {
+        saliences[b]
+            .salience
+            .partial_cmp(&saliences[a].salience)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut bits = vec![lo; g];
+    for &gi in order.iter().take(n_hi) {
+        bits[gi] = hi;
+    }
+    Allocation { bits }
+}
+
+/// Entry point: integer targets go through the balanced SDBA; fractional
+/// targets through the hi/lo split.
+pub fn allocate(saliences: &[GroupSalience], target_bits: f64) -> Allocation {
+    if (target_bits - target_bits.round()).abs() < 1e-9 {
+        allocate_balanced(saliences, target_bits.round() as u8)
+    } else {
+        allocate_fractional(saliences, target_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    fn fake_saliences(g: usize, seed: u64) -> Vec<GroupSalience> {
+        let mut rng = Rng::new(seed);
+        (0..g)
+            .map(|i| {
+                let s = rng.f64() * 10.0;
+                // distortion decreases with bits, scaled by salience
+                GroupSalience {
+                    index: i,
+                    salience: s,
+                    dist: [4.0 * s + 1.0, 1.0 * s + 0.5, 0.3 * s + 0.2],
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn balanced_allocation_invariants() {
+        proptest(30, |rig| {
+            let g = rig.usize_in(2, 200);
+            let base = rig.usize_in(2, 4) as u8;
+            let sal = fake_saliences(g, rig.case as u64);
+            let alloc = allocate_balanced(&sal, base);
+            assert_eq!(alloc.bits.len(), g);
+            let promoted = alloc.bits.iter().filter(|&&b| b == base + 1).count();
+            let demoted = alloc.bits.iter().filter(|&&b| b == base - 1).count();
+            assert_eq!(promoted, demoted, "|G_N+1| must equal |G_N-1|");
+            assert!((alloc.mean_bits() - base as f64).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn promoted_groups_have_higher_salience_than_demoted() {
+        let sal = fake_saliences(60, 3);
+        let alloc = allocate_balanced(&sal, 2);
+        let min_promoted = sal
+            .iter()
+            .zip(&alloc.bits)
+            .filter(|(_, &b)| b == 3)
+            .map(|(s, _)| s.salience)
+            .fold(f64::INFINITY, f64::min);
+        let max_demoted = sal
+            .iter()
+            .zip(&alloc.bits)
+            .filter(|(_, &b)| b == 1)
+            .map(|(s, _)| s.salience)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if min_promoted.is_finite() && max_demoted.is_finite() {
+            assert!(min_promoted >= max_demoted);
+        }
+    }
+
+    #[test]
+    fn fractional_targets_hit_mean() {
+        proptest(20, |rig| {
+            let g = rig.usize_in(8, 300);
+            let sal = fake_saliences(g, rig.case as u64 + 100);
+            for target in [1.5f64, 1.25, 2.5] {
+                let alloc = allocate(&sal, target);
+                assert!(
+                    (alloc.mean_bits() - target).abs() <= 0.5 / g as f64 + 1e-2,
+                    "g={g} target={target} mean={}",
+                    alloc.mean_bits()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn integer_target_routes_to_balanced() {
+        let sal = fake_saliences(40, 9);
+        let a = allocate(&sal, 2.0);
+        let b = allocate_balanced(&sal, 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn salience_computation_flags_wide_groups() {
+        let mut rng = Rng::new(4);
+        // low-variance group vs heavy-tailed group
+        let w_small = Mat::random_normal(16, 32, 0.005, &mut rng);
+        let mut w_big = Mat::random_normal(16, 32, 0.005, &mut rng);
+        for i in 0..8 {
+            w_big.data[i * 37] = 0.5; // inject outliers
+        }
+        let x = Mat::random_normal(32, 64, 1.0, &mut rng);
+        let s_small = group_salience(0, &w_small, &x, 2);
+        let s_big = group_salience(1, &w_big, &x, 2);
+        assert!(s_big.dist[1] > s_small.dist[1]);
+        // distortion must be monotone in bits
+        for s in [&s_small, &s_big] {
+            assert!(s.dist[0] >= s.dist[1] && s.dist[1] >= s.dist[2], "{:?}", s.dist);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! N-dimensional f32 tensor + the `.gten` binary container used to persist
+//! model weights between pipeline stages (train → quantize → eval).
+//!
+//! Format (little-endian):
+//!   magic "GTEN" | u32 version | u32 n_entries
+//!   per entry: u32 name_len | name utf8 | u32 ndim | u64 dims... | f32 data...
+//! A u32 CRC32 of everything after the magic trails the file.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Row-major nd tensor (f32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// View a rank-2 tensor as a Mat (copies).
+    pub fn to_mat(&self) -> Mat {
+        assert_eq!(self.ndim(), 2, "to_mat on rank-{} tensor", self.ndim());
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+}
+
+/// Named tensor collection with deterministic (sorted) iteration order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorStore {
+    pub entries: BTreeMap<String, Tensor>,
+}
+
+const MAGIC: &[u8; 4] = b"GTEN";
+const VERSION: u32 = 1;
+
+impl TensorStore {
+    pub fn new() -> TensorStore {
+        TensorStore { entries: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.entries.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut body: Vec<u8> = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            body.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            body.extend_from_slice(nb);
+            body.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &v in &t.data {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crc32(&body);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TensorStore> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        if buf.len() < 12 || &buf[..4] != MAGIC {
+            bail!("{}: not a GTEN file", path.display());
+        }
+        let body = &buf[4..buf.len() - 4];
+        let stored_crc = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored_crc {
+            bail!("{}: CRC mismatch (corrupted)", path.display());
+        }
+        let mut pos = 0usize;
+        let rd_u32 = |b: &[u8], p: &mut usize| -> Result<u32> {
+            if *p + 4 > b.len() {
+                bail!("truncated");
+            }
+            let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+            *p += 4;
+            Ok(v)
+        };
+        let version = rd_u32(body, &mut pos)?;
+        if version != VERSION {
+            bail!("unsupported GTEN version {version}");
+        }
+        let n = rd_u32(body, &mut pos)? as usize;
+        let mut store = TensorStore::new();
+        for _ in 0..n {
+            let name_len = rd_u32(body, &mut pos)? as usize;
+            if pos + name_len > body.len() {
+                bail!("truncated name");
+            }
+            let name = std::str::from_utf8(&body[pos..pos + name_len])?.to_string();
+            pos += name_len;
+            let ndim = rd_u32(body, &mut pos)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                if pos + 8 > body.len() {
+                    bail!("truncated dims");
+                }
+                shape.push(u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap()) as usize);
+                pos += 8;
+            }
+            let numel: usize = shape.iter().product();
+            if pos + numel * 4 > body.len() {
+                bail!("truncated data for {name}");
+            }
+            let mut data = Vec::with_capacity(numel);
+            for i in 0..numel {
+                data.push(f32::from_le_bytes(
+                    body[pos + i * 4..pos + i * 4 + 4].try_into().unwrap(),
+                ));
+            }
+            pos += numel * 4;
+            store.entries.insert(name, Tensor { shape, data });
+        }
+        Ok(store)
+    }
+
+    /// Total payload bytes (f32 count * 4).
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.values().map(|t| t.numel() * 4).sum()
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) — table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static mut TABLE: [u32; 256] = [0; 256];
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| unsafe {
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            TABLE[i as usize] = c;
+        }
+    });
+    let table = unsafe { &*std::ptr::addr_of!(TABLE) };
+    let mut crc = 0xFFFFFFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn tensor_mat_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.to_mat(), m);
+    }
+
+    #[test]
+    fn store_save_load_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut store = TensorStore::new();
+        store.insert("emb", Tensor::from_vec(&[4, 8], (0..32).map(|i| i as f32).collect()));
+        let mut big = vec![0.0f32; 1000];
+        rng.fill_normal(&mut big, 0.3);
+        store.insert("00.attn.wq", Tensor::from_vec(&[10, 100], big));
+        store.insert("scalar-ish", Tensor::from_vec(&[1], vec![7.5]));
+
+        let dir = std::env::temp_dir().join(format!("gten_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.gten");
+        store.save(&path).unwrap();
+        let loaded = TensorStore::load(&path).unwrap();
+        assert_eq!(store, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_file_is_rejected() {
+        let mut store = TensorStore::new();
+        store.insert("w", Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        let dir = std::env::temp_dir().join(format!("gten_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.gten");
+        store.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(TensorStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn names_sorted_deterministically() {
+        let mut s = TensorStore::new();
+        s.insert("z", Tensor::zeros(&[1]));
+        s.insert("a", Tensor::zeros(&[1]));
+        assert_eq!(s.names(), vec!["a".to_string(), "z".to_string()]);
+    }
+}

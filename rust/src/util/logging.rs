@@ -1,0 +1,107 @@
+//! Leveled stderr logger + scoped wall-clock timers.
+//!
+//! Level is process-global, set once from the CLI (`-v`, `-q`, or
+//! `GLVQ_LOG=debug`). Deliberately tiny: no formatting machinery beyond
+//! `format!`, no timestamps on quiet levels.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_env() {
+    if let Ok(v) = std::env::var("GLVQ_LOG") {
+        set_level(match v.as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        });
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, msg: &str) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($t)*)) };
+}
+
+/// RAII wall-clock timer: logs at Debug on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Timer {
+        Timer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        log(Level::Debug, &format!("{}: {:.1} ms", self.label, self.elapsed_ms()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::new("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundational utilities: deterministic PRNG, minimal JSON codec, logging,
+//! and a small property-testing harness.
+//!
+//! These exist because the build is fully offline against a fixed vendored
+//! crate set (no serde / rand / proptest available); each is a deliberate,
+//! tested substrate rather than a stub.
+
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;

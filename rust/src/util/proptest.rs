@@ -1,0 +1,114 @@
+//! Mini property-testing harness (proptest is not in the vendored crate
+//! set). Seeded, reproducible, with failure reporting that prints the
+//! offending case index + seed so a failure can be replayed exactly.
+//!
+//! Usage:
+//! ```ignore
+//! proptest(100, |rig| {
+//!     let n = rig.usize_in(1, 64);
+//!     let xs = rig.vec_f32(n, -1.0, 1.0);
+//!     check(roundtrip(&xs) == xs, "roundtrip");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Rig {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Rig {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32() * scale).collect()
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics with case/seed on failure
+/// (body is expected to assert!/panic! on property violation).
+pub fn proptest<F: FnMut(&mut Rig)>(cases: usize, mut body: F) {
+    proptest_seeded(0xC0FFEE, cases, &mut body)
+}
+
+pub fn proptest_seeded<F: FnMut(&mut Rig)>(seed: u64, cases: usize, body: &mut F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rig = Rig { rng: Rng::new(case_seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rig)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        proptest(50, |rig| {
+            let a = rig.usize_in(0, 100);
+            let b = rig.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            proptest(50, |rig| {
+                let n = rig.usize_in(0, 100);
+                assert!(n < 95, "n={n}");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("property failed at case"), "{msg}");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        proptest(100, |rig| {
+            let x = rig.f32_in(-2.0, 3.0);
+            assert!((-2.0..=3.0).contains(&x));
+            let n = rig.usize_in(3, 7);
+            assert!((3..=7).contains(&n));
+            let v = rig.vec_f32(n, 0.0, 1.0);
+            assert_eq!(v.len(), n);
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Integration: the rust-native model metadata must match the manifest the
+//! python AOT export wrote — names, order, shapes, quantizable flags.
+//! Skips (with a loud message) when artifacts are absent.
+
+use glvq::model::ModelConfig;
+use glvq::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn param_specs_match_manifest_exactly() {
+    let Some(engine) = engine() else { return };
+    for (name, arts) in &engine.models {
+        let cfg = ModelConfig::by_name(name).expect("known model name");
+        let specs = cfg.param_specs();
+        assert_eq!(specs.len(), arts.params.len(), "model {name} param count");
+        for (spec, (mname, mshape, mq)) in specs.iter().zip(&arts.params) {
+            assert_eq!(&spec.name, mname, "model {name} param order");
+            assert_eq!(&spec.shape, mshape, "model {name} shape of {mname}");
+            assert_eq!(spec.quantizable, *mq, "model {name} flag of {mname}");
+        }
+    }
+}
+
+#[test]
+fn configs_match_manifest() {
+    let Some(engine) = engine() else { return };
+    for (name, arts) in &engine.models {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        assert_eq!(cfg.d_model, arts.config.d_model);
+        assert_eq!(cfg.n_layer, arts.config.n_layer);
+        assert_eq!(cfg.n_head, arts.config.n_head);
+        assert_eq!(cfg.d_ff, arts.config.d_ff);
+        assert_eq!(cfg.seq_len, arts.config.seq_len);
+        assert_eq!(cfg.vocab, arts.config.vocab);
+    }
+}
+
+#[test]
+fn all_artifact_files_exist_and_parse_as_hlo() {
+    let Some(engine) = engine() else { return };
+    let mut files: Vec<String> = Vec::new();
+    for arts in engine.models.values() {
+        files.extend(arts.programs.values().cloned());
+    }
+    for g in engine.glvq.values() {
+        files.extend(g.programs.values().cloned());
+    }
+    assert!(!files.is_empty());
+    for f in files {
+        let path = std::path::Path::new("artifacts").join(&f);
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{f}: {e}"));
+        assert!(text.starts_with("HloModule"), "{f} is not HLO text");
+        assert!(text.contains("ENTRY"), "{f} lacks an entry computation");
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration: the rust-native implementations must agree with the AOT
+//! JAX/Pallas graphs executed through PJRT —
+//!   (a) native transformer forward ≡ ForwardLoss HLO,
+//!   (b) native GLVQ analytic gradients ≡ glvq_step HLO (JAX autodiff),
+//!   (c) native encode/decode ≡ Pallas encode/decode kernels.
+//! These are the tests that pin the three layers together.
+
+use glvq::compand::MuLaw;
+use glvq::eval::native_fwd;
+use glvq::glvq::group::as_blocks;
+use glvq::lattice::babai::babai_batch_shifted;
+use glvq::lattice::GenLattice;
+use glvq::linalg::decomp::inverse;
+use glvq::linalg::Mat;
+use glvq::model::{init_params, ModelConfig};
+use glvq::runtime::exec::{ForwardLossExec, GlvqStepExec};
+use glvq::runtime::Engine;
+use glvq::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn native_forward_matches_forward_loss_hlo() {
+    let Some(engine) = engine() else { return };
+    let cfg = ModelConfig::by_name("s").unwrap();
+    let store = init_params(&cfg, 3);
+    let exec = ForwardLossExec::new(&engine, "s").unwrap();
+    let params = exec.stage_params(&store).unwrap();
+
+    let mut rng = Rng::new(11);
+    let n = exec.batch * exec.seq;
+    let x: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+
+    let pjrt = exec.nll_sum(&params, &x, &y).unwrap();
+    let native = native_fwd::nll_sum(&cfg, &store, &x, &y, exec.batch).unwrap();
+    let rel = (pjrt - native).abs() / native.abs().max(1e-9);
+    assert!(rel < 2e-3, "pjrt {pjrt} vs native {native} (rel {rel})");
+}
+
+#[test]
+fn native_glvq_gradients_match_jax_autodiff() {
+    let Some(engine) = engine() else { return };
+    let exec = GlvqStepExec::new(&engine, 8).unwrap();
+    let (d, r, n, ncal) = (exec.d, exec.r, exec.n, exec.ncal);
+
+    let mut rng = Rng::new(5);
+    let w = Mat::random_normal(r, n, 0.05, &mut rng);
+    let x = Mat::random_normal(n, ncal, 1.0, &mut rng);
+    let mut g = Mat::eye(d).scale(0.04);
+    for v in g.data.iter_mut() {
+        *v += rng.normal_f32() * 0.003;
+    }
+    let ginv = inverse(&g).unwrap();
+    let mu = 80.0f32;
+    let g0 = g.clone();
+
+    // --- PJRT glvq_step (JAX value_and_grad through the decode chain) ---
+    let (loss_pjrt, dg_pjrt, dmu_pjrt) = exec.step(&w, &x, &g, &ginv, mu, &g0).unwrap();
+
+    // --- native analytic replication of the same observation ---
+    let comp = MuLaw::new(mu);
+    let lat = GenLattice::new(g.clone()).unwrap();
+    let mut wt = w.clone();
+    comp.forward_slice(&mut wt.data);
+    let y = as_blocks(&wt, d);
+    let mut z = babai_batch_shifted(&lat, &y); // NOTE: no clamping — matches the graph
+    for c in z.data.iter_mut() {
+        *c += 0.5; // half-integer grid decode
+    }
+    let v = z.matmul(&g.transpose());
+    let mut w_hat = Mat::from_vec(r, n, v.data.clone());
+    comp.inverse_slice(&mut w_hat.data);
+    let err = w.sub(&w_hat).matmul(&x);
+    let loss_native: f64 = err.data.iter().map(|e| (*e as f64).powi(2)).sum();
+
+    let rel = (loss_pjrt - loss_native).abs() / loss_native.max(1e-9);
+    assert!(rel < 5e-3, "loss pjrt {loss_pjrt} vs native {loss_native}");
+
+    // native gradients (same math as glvq::optimizer)
+    let xt = x.transpose();
+    let mut dldw = err.matmul(&xt);
+    for gv in dldw.data.iter_mut() {
+        *gv *= -2.0;
+    }
+    let log1p_mu = (1.0 + mu).ln();
+    let mut dmu_native = 0.0f64;
+    let mut dldv = Mat::zeros(v.rows, v.cols);
+    for i in 0..v.data.len() {
+        let vv = v.data[i];
+        let t = vv.abs();
+        let a = (t * log1p_mu).exp();
+        let dfdv = a * log1p_mu / mu;
+        let dfdmu = vv.signum() * (a * t * mu / (1.0 + mu) - (a - 1.0)) / (mu * mu);
+        dmu_native += (dldw.data[i] * dfdmu) as f64;
+        dldv.data[i] = dldw.data[i] * dfdv;
+    }
+    let dg_native = dldv.transpose().matmul(&z); // λ reg term is zero at G=G0
+
+    let denom = dg_pjrt.frob_norm().max(1e-6);
+    let dg_rel = dg_pjrt.frob_dist(&dg_native) / denom;
+    assert!(dg_rel < 2e-2, "dG mismatch rel {dg_rel}");
+    let dmu_rel = (dmu_pjrt as f64 - dmu_native).abs() / dmu_native.abs().max(1e-6);
+    assert!(dmu_rel < 2e-2, "dmu pjrt {dmu_pjrt} vs native {dmu_native}");
+}
+
+#[test]
+fn native_encode_decode_match_pallas_kernels() {
+    let Some(engine) = engine() else { return };
+    for d in [8usize, 16, 32] {
+        let exec = GlvqStepExec::new(&engine, d).unwrap();
+        let (r, n) = (exec.r, exec.n);
+        let mut rng = Rng::new(d as u64);
+        let w = Mat::random_normal(r, n, 0.05, &mut rng);
+        let mut g = Mat::eye(d).scale(0.05);
+        for v in g.data.iter_mut() {
+            *v += rng.normal_f32() * 0.004;
+        }
+        let ginv = inverse(&g).unwrap();
+        let mu = 42.0f32;
+
+        // Pallas fused compand+babai kernel (through HLO)
+        let z_pjrt = exec.encode(&w, &ginv, mu).unwrap();
+
+        // native equivalent
+        let comp = MuLaw::new(mu);
+        let mut wt = w.clone();
+        comp.forward_slice(&mut wt.data);
+        let lat = GenLattice::new(g.clone()).unwrap();
+        let z_native = babai_batch_shifted(&lat, &as_blocks(&wt, d));
+        assert_eq!(z_pjrt.len(), z_native.data.len(), "d={d}");
+        let mismatches = z_pjrt
+            .iter()
+            .zip(&z_native.data)
+            .filter(|(a, b)| (**a - **b).abs() > 0.5)
+            .count();
+        // rounding ties at exactly .5 may differ in float order-of-ops;
+        // must be a vanishing fraction
+        assert!(
+            mismatches * 1000 <= z_pjrt.len(),
+            "d={d}: {mismatches}/{} code mismatches",
+            z_pjrt.len()
+        );
+
+        // decode parity on the pjrt codes
+        let w_hat_pjrt = exec.decode(&z_pjrt, &g, mu).unwrap();
+        let zs: Vec<f32> = z_pjrt.iter().map(|v| v + 0.5).collect();
+        let z_mat = Mat::from_vec(r * n / d, d, zs);
+        let v = z_mat.matmul(&g.transpose());
+        let mut w_hat_native = Mat::from_vec(r, n, v.data.clone());
+        comp.inverse_slice(&mut w_hat_native.data);
+        let rel = w_hat_pjrt.frob_dist(&w_hat_native) / w_hat_native.frob_norm().max(1e-9);
+        assert!(rel < 1e-4, "d={d}: decode mismatch rel {rel}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: full quantize → save → load → dequantize → evaluate chain
+//! across methods, plus pipeline invariants (rate accounting, SDBA balance)
+//! and failure injection. Artifact-free (native paths only).
+
+use glvq::baselines;
+use glvq::config::GlvqConfig;
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use glvq::eval::native_fwd;
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::glvq::pipeline::{dequantized_store, quantize_model, CalibSet, PipelineOpts};
+use glvq::model::{init_params, ModelConfig};
+use glvq::quant::format::QuantizedModel;
+use glvq::util::rng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t",
+        vocab: 256,
+        d_model: 64,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 128,
+        seq_len: 32,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+#[test]
+fn full_chain_all_methods_roundtrip_through_disk() {
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let store = init_params(&cfg, 1);
+    let calib = CalibSet::random(&specs, 32, 2);
+    let dir = std::env::temp_dir().join(format!("glvq_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for method in ["rtn", "gptq", "omniquant_lite", "kmeans_vq", "quip_lite", "tcq"] {
+        let q = baselines::by_name(method).unwrap();
+        let opts = PipelineOpts { group_size: 64, target_bits: 3.0, bit_allocation: false, threads: 2 };
+        let (qm, report) = quantize_model(&specs, &store, &calib, &*q, &opts).unwrap();
+        assert!(report.total_recon_error().is_finite(), "{method}");
+
+        let path = dir.join(format!("{method}.glvq"));
+        qm.save(&path).unwrap();
+        let loaded = QuantizedModel::load(&path).unwrap();
+        assert_eq!(qm, loaded, "{method}: container not round-trip stable");
+
+        // dequantized store must run end-to-end through the native model
+        let dq = dequantized_store(&loaded, &store);
+        let mut rng = Rng::new(3);
+        let x: Vec<i32> = (0..cfg.seq_len * 2).map(|_| rng.below(256) as i32).collect();
+        let y: Vec<i32> = (0..cfg.seq_len * 2).map(|_| rng.below(256) as i32).collect();
+        let nll = native_fwd::nll_sum(&cfg, &dq, &x, &y, 2).unwrap();
+        assert!(nll.is_finite() && nll > 0.0, "{method}: nll {nll}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn glvq_chain_with_sdba_hits_rate_and_beats_rtn() {
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    // heavy-tailed weights so the lattice/companding machinery matters
+    let mut store = init_params(&cfg, 2);
+    let mut rng = Rng::new(9);
+    for name in cfg.quantizable_names() {
+        let t = store.entries.get_mut(&name).unwrap();
+        for v in t.data.iter_mut() {
+            *v = rng.student_t(4.0) as f32 * 0.02;
+        }
+    }
+    let calib = CalibSet::random(&specs, 48, 3);
+
+    let mut gcfg = GlvqConfig::default();
+    gcfg.lattice_dim = 8;
+    gcfg.group_size = 64;
+    gcfg.iters = 10;
+    let glvq = GlvqGroupQuantizer::new(gcfg);
+    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: true, threads: 2 };
+    let (qm, rep_glvq) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
+
+    // SDBA must keep the exact mean rate
+    assert!((qm.avg_bits() - 2.0).abs() < 1e-9, "avg bits {}", qm.avg_bits());
+
+    let rtn = baselines::by_name("rtn").unwrap();
+    let (_, rep_rtn) = quantize_model(&specs, &store, &calib, &*rtn, &opts).unwrap();
+    assert!(
+        rep_glvq.total_recon_error() < rep_rtn.total_recon_error(),
+        "glvq {} vs rtn {}",
+        rep_glvq.total_recon_error(),
+        rep_rtn.total_recon_error()
+    );
+}
+
+#[test]
+fn streaming_decoder_agrees_with_dense_on_full_model() {
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let store = init_params(&cfg, 4);
+    let calib = CalibSet::random(&specs, 24, 5);
+    let mut gcfg = GlvqConfig::default();
+    gcfg.lattice_dim = 8;
+    gcfg.group_size = 64;
+    gcfg.iters = 6;
+    let glvq = GlvqGroupQuantizer::new(gcfg);
+    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: false, threads: 2 };
+    let (qm, _) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
+
+    let mut sm = StreamingMatvec::new(8);
+    let mut rng = Rng::new(6);
+    for qt in &qm.tensors {
+        let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; qt.rows];
+        let mut stats = DecodeStats::default();
+        sm.matvec(qt, &x, &mut y, &mut stats);
+        let want = qt.dequantize().matvec(&x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{}: {a} vs {b}", qt.name);
+        }
+    }
+}
+
+#[test]
+fn quantization_error_visible_in_model_loss_ordering() {
+    // 2-bit must hurt more than 4-bit on the same model — the end-to-end
+    // rate/distortion direction every table depends on.
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let store = init_params(&cfg, 7);
+    let calib = CalibSet::random(&specs, 32, 8);
+    let rtn = baselines::by_name("rtn").unwrap();
+    let mut rng = Rng::new(12);
+    let x: Vec<i32> = (0..cfg.seq_len * 2).map(|_| rng.below(256) as i32).collect();
+    let y: Vec<i32> = (0..cfg.seq_len * 2).map(|_| rng.below(256) as i32).collect();
+    let base = native_fwd::nll_sum(&cfg, &store, &x, &y, 2).unwrap();
+
+    let mut nlls = Vec::new();
+    for bits in [4.0, 2.0, 1.0] {
+        let opts = PipelineOpts { group_size: 64, target_bits: bits, bit_allocation: false, threads: 2 };
+        let (qm, _) = quantize_model(&specs, &store, &calib, &*rtn, &opts).unwrap();
+        let dq = dequantized_store(&qm, &store);
+        nlls.push(native_fwd::nll_sum(&cfg, &dq, &x, &y, 2).unwrap());
+    }
+    let d4 = (nlls[0] - base).abs();
+    let d2 = (nlls[1] - base).abs();
+    let d1 = (nlls[2] - base).abs();
+    assert!(d4 <= d2 && d2 <= d1, "distortion not monotone: {d4} {d2} {d1}");
+}
+
+#[test]
+fn pipeline_rejects_mismatched_calibration() {
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let store = init_params(&cfg, 1);
+    // calibration with the wrong activation dimension
+    let mut calib = CalibSet::random(&specs, 16, 2);
+    let first = cfg.quantizable_names()[0].clone();
+    calib
+        .acts
+        .insert(first, glvq::linalg::Mat::zeros(3, 16));
+    let rtn = baselines::by_name("rtn").unwrap();
+    let opts = PipelineOpts::default();
+    assert!(quantize_model(&specs, &store, &calib, &*rtn, &opts).is_err());
+}
