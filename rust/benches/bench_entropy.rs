@@ -1,0 +1,96 @@
+//! Bench: rANS entropy-coding backend — encode/decode throughput (MB/s of
+//! equivalent fixed-width payload) and compressed-vs-fixed payload ratio on
+//! synthetic discrete-Gaussian codes (the post-Babai code distribution).
+//!
+//! Results are appended to `runs/bench/entropy.json` so successive runs
+//! form a trajectory (`{"runs": [...]}`).
+//!
+//! Run: `cargo bench --bench bench_entropy`
+
+use glvq::bench_support::Bencher;
+use glvq::entropy::{RansCodes, DEFAULT_CHUNK, DEFAULT_LANES};
+use glvq::quant::pack::clamp_code;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+/// Discrete-Gaussian codes at σ = range/8 — Babai codes concentrate well
+/// inside the clamp range.
+fn gaussian_codes(rng: &mut Rng, bits: u8, n: usize) -> Vec<i32> {
+    let sigma = (1 << (bits - 1)) as f32 / 8.0;
+    (0..n).map(|_| clamp_code(rng.normal_f32() * sigma, bits)).collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(11);
+    let n = 1 << 18; // 256k codes per measurement
+
+    println!("# entropy backend: rANS encode/decode on discrete-Gaussian codes ({n} codes)");
+    let mut entries: Vec<Json> = Vec::new();
+
+    for bits in [2u8, 3, 4, 6, 8] {
+        let codes = gaussian_codes(&mut rng, bits, n);
+        let fixed_bytes = (n * bits as usize).div_ceil(8) as f64;
+
+        let enc = b.run(&format!("rans_encode/b{bits}"), fixed_bytes, || {
+            std::hint::black_box(RansCodes::encode(&codes, bits, DEFAULT_CHUNK, DEFAULT_LANES));
+        });
+        println!("{}", enc.report());
+
+        let rc = RansCodes::encode(&codes, bits, DEFAULT_CHUNK, DEFAULT_LANES);
+        let mut out = vec![0i32; n];
+        let dec = b.run(&format!("rans_decode/b{bits}"), fixed_bytes, || {
+            rc.decode_into(&mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", dec.report());
+        assert_eq!(out, codes, "decode must be bit-exact");
+
+        let ratio = rc.payload_bytes() as f64 / fixed_bytes;
+        println!(
+            "  payload: {} B vs {} B fixed  (ratio {:.3}, {:.1}% saved, H≈{:.2} bits)",
+            rc.payload_bytes(),
+            fixed_bytes as usize,
+            ratio,
+            100.0 * (1.0 - ratio),
+            rc.hist.entropy_bits()
+        );
+
+        entries.push(Json::obj(vec![
+            ("bits", Json::num(bits as f64)),
+            ("codes", Json::num(n as f64)),
+            ("encode_mb_s", Json::num(enc.throughput() / 1e6)),
+            ("decode_mb_s", Json::num(dec.throughput() / 1e6)),
+            ("payload_bytes", Json::num(rc.payload_bytes() as f64)),
+            ("fixed_bytes", Json::num(fixed_bytes)),
+            ("ratio", Json::num(ratio)),
+            ("entropy_bits", Json::num(rc.hist.entropy_bits())),
+        ]));
+    }
+
+    // append this run to the bench JSON trajectory
+    let dir = std::path::Path::new("runs/bench");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("WARN cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join("entropy.json");
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
+    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(Json::obj(vec![
+        ("unix_time", Json::num(stamp as f64)),
+        ("measurements", Json::Arr(entries)),
+    ]));
+    doc.set("runs", Json::Arr(runs));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("appended trajectory point to {}", path.display()),
+        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
+    }
+}

@@ -56,7 +56,7 @@ impl GroupQuantizer for BinaryQuantizer {
             bits: eff_bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, eff_bits),
+            codes: PackedCodes::pack(&codes, eff_bits).into(),
             side: SideInfo::Binary { row_scales, residual_scales },
         }
     }

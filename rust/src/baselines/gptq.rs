@@ -87,7 +87,7 @@ impl GroupQuantizer for GptqQuantizer {
             bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: PackedCodes::pack(&codes, bits).into(),
             side: SideInfo::Uniform { scale, zero },
         }
     }

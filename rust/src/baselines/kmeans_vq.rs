@@ -163,7 +163,7 @@ impl GroupQuantizer for KMeansVq {
             bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, idx_bits as u8),
+            codes: PackedCodes::pack(&codes, idx_bits as u8).into(),
             side: SideInfo::Codebook { dim: v, centers },
         }
     }

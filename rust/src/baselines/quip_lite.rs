@@ -79,7 +79,7 @@ impl GroupQuantizer for QuipLite {
             bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: PackedCodes::pack(&codes, bits).into(),
             side: SideInfo::RotatedLattice { d: D, scale: s, sign_seed: self.sign_seed },
         }
     }
@@ -136,6 +136,6 @@ mod tests {
         // different rotations → different codes, but both must decode finitely
         assert!(a.dequantize().data.iter().all(|v| v.is_finite()));
         assert!(b.dequantize().data.iter().all(|v| v.is_finite()));
-        assert_ne!(a.codes.data, b.codes.data);
+        assert_ne!(a.codes.unpack(), b.codes.unpack());
     }
 }

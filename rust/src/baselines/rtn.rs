@@ -29,7 +29,7 @@ pub fn rtn_with_range(w: &Mat, bits: u8, cmin: f32, cmax: f32) -> QuantizedGroup
         bits,
         rows: w.rows,
         cols: w.cols,
-        codes: PackedCodes::pack(&codes, bits),
+        codes: PackedCodes::pack(&codes, bits).into(),
         side: SideInfo::Uniform { scale, zero },
     }
 }

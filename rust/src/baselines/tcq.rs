@@ -138,7 +138,7 @@ impl GroupQuantizer for TcqQuantizer {
             bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: PackedCodes::pack(&codes, bits).into(),
             side: SideInfo::Trellis { levels, states: STATES },
         }
     }

@@ -18,7 +18,9 @@ use crate::quant::traits::{hadamard_inverse, sign_vector, SideInfo};
 /// Counters for the bytes-moved model (Table 4 MEM BW).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DecodeStats {
-    /// packed code bytes read
+    /// code payload bytes read — the *true stored* bytes: bit-granular for
+    /// fixed-width payloads, chunk-granular (stream + states + escapes +
+    /// frequency table) for entropy-coded payloads
     pub code_bytes: usize,
     /// side-info bytes read (FP16-equivalent accounting)
     pub side_bytes: usize,
@@ -43,6 +45,8 @@ pub struct StreamingMatvec {
     /// lattice-decode scratch: codes as f32 blocks (+½) for the blocked
     /// matmul path (§Perf: scalar per-block loops → one (B×d)@(d×d) GEMM)
     zf: Vec<f32>,
+    /// rANS chunk-decode scratch (reused across panels and groups)
+    rans_scratch: Vec<i32>,
     /// rows per streamed panel (the "handful of sub-blocks")
     pub panel_rows: usize,
 }
@@ -59,7 +63,28 @@ impl StreamingMatvec {
             codes_buf: Vec::new(),
             panel: Vec::new(),
             zf: Vec::new(),
+            rans_scratch: Vec::new(),
             panel_rows: panel_rows.max(1),
+        }
+    }
+
+    /// Effective panel rows for one group: `panel_rows`, except rANS
+    /// payloads whose chunk rows align — there the panel snaps to whole
+    /// chunks so every chunk is decoded (and charged) exactly once per
+    /// matvec. This is also the working-set bound `peak_panel_elems`
+    /// reports: chunk-granular decode cannot go below one chunk.
+    fn effective_panel_rows(&self, g: &crate::quant::traits::QuantizedGroup) -> usize {
+        let (m, n) = (g.rows, g.cols.max(1));
+        match &g.codes {
+            crate::quant::traits::CodePayload::Rans(rc) if rc.chunk_len % n == 0 => {
+                let chunk_rows = (rc.chunk_len / n).max(1);
+                if chunk_rows >= self.panel_rows {
+                    chunk_rows.min(m)
+                } else {
+                    ((self.panel_rows / chunk_rows) * chunk_rows).min(m)
+                }
+            }
+            _ => self.panel_rows.min(m),
         }
     }
 
@@ -110,16 +135,30 @@ impl StreamingMatvec {
             stats.macs += m * n;
             return;
         }
-        let pr = self.panel_rows.min(m);
+        let pr = self.effective_panel_rows(g);
         self.codes_buf.resize(pr * n, 0);
         self.panel.resize(pr * n, 0.0);
+        // expand the rANS decode table once per group, not once per panel
+        let rans_table = match &g.codes {
+            crate::quant::traits::CodePayload::Rans(rc) => Some(rc.hist.decode_table()),
+            _ => None,
+        };
 
         let mut r = 0usize;
         while r < m {
             let rows = pr.min(m - r);
             let count = rows * n;
-            g.codes.unpack_range_into(r * n, &mut self.codes_buf[..count]);
-            stats.code_bytes += (count * g.codes.bits as usize).div_ceil(8);
+            match (&g.codes, &rans_table) {
+                (crate::quant::traits::CodePayload::Rans(rc), Some(table)) => rc
+                    .decode_range_with(
+                        r * n,
+                        &mut self.codes_buf[..count],
+                        table,
+                        &mut self.rans_scratch,
+                    ),
+                _ => g.codes.unpack_range_into(r * n, &mut self.codes_buf[..count]),
+            }
+            stats.code_bytes += g.codes.range_payload_bytes(r * n, count);
             if let SideInfo::Lattice { d, g: gmat, mu, scale } = &g.side {
                 // §Perf fast path: blocked GEMM (B×d)@(d×d) + vectorized
                 // μ-law expand instead of per-block scalar loops.
@@ -140,7 +179,7 @@ impl StreamingMatvec {
             } else {
                 decode_codes(
                     &g.side,
-                    g.codes.bits,
+                    g.codes.bits(),
                     &self.codes_buf[..count],
                     &mut self.panel[..count],
                 );
@@ -161,9 +200,16 @@ impl StreamingMatvec {
     }
 
     /// Peak decoded-weights working set in elements (panel size) — the
-    /// quantity the paper claims drops >10× vs layer-at-once decode.
+    /// quantity the paper claims drops >10× vs layer-at-once decode. For
+    /// rANS groups the panel snaps to whole chunks (chunk-granular decode
+    /// can't go below one chunk), so the bound reflects the buffers
+    /// actually allocated.
     pub fn peak_panel_elems(&self, qt: &QuantizedTensor) -> usize {
-        self.panel_rows * qt.groups.iter().map(|(_, _, g)| g.cols).max().unwrap_or(0)
+        qt.groups
+            .iter()
+            .map(|(_, _, g)| self.effective_panel_rows(g) * g.cols)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -301,6 +347,81 @@ mod tests {
             }
             assert!(stats.code_bytes > 0 && stats.macs == 32 * 64);
         }
+    }
+
+    /// Re-encode every group payload with rANS (`rows_per_chunk` rows per
+    /// chunk) — lossless, so all decode paths must agree bit-for-bit.
+    fn to_entropy_tensor(qt: &QuantizedTensor, rows_per_chunk: usize) -> QuantizedTensor {
+        let mut out = qt.clone();
+        for (_, _, g) in &mut out.groups {
+            g.codes = g.codes.to_entropy(g.cols * rows_per_chunk.max(1), 4);
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_matvec_matches_oracle_on_entropy_payloads() {
+        for method in ["rtn", "glvq"] {
+            let (_, qt) = quantized_tensor(method, 7);
+            let dense = qt.dequantize();
+            let mut rng = Rng::new(8);
+            let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+            let want = dense.matvec(&x);
+            // chunking both aligned (8 rows = panel) and misaligned (5 rows)
+            for rows_per_chunk in [1usize, 5, 8, 64] {
+                let qte = to_entropy_tensor(&qt, rows_per_chunk);
+                // lossless re-encode: dequantize is bit-identical
+                assert_eq!(qte.dequantize().data, dense.data);
+                let mut sm = StreamingMatvec::new(8);
+                let mut y = vec![0.0f32; 32];
+                let mut stats = DecodeStats::default();
+                sm.matvec(&qte, &x, &mut y, &mut stats);
+                for (a, b) in y.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() < 1e-4,
+                        "{method}/chunk{rows_per_chunk}: {a} vs {b}"
+                    );
+                }
+                assert!(stats.code_bytes > 0 && stats.macs == 32 * 64);
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_code_bytes_reflect_compressed_payload() {
+        // skewed codes → the streamed byte count must track the compressed
+        // size, which for near-constant codes is far below fixed-width
+        let codes = vec![0i32; 64 * 64];
+        let qg = crate::quant::traits::QuantizedGroup {
+            method: "rtn",
+            bits: 4,
+            rows: 64,
+            cols: 64,
+            codes: crate::quant::pack::PackedCodes::pack(&codes, 4).into(),
+            side: SideInfo::Uniform { scale: 0.1, zero: 0.0 },
+        };
+        let fixed_bytes = qg.codes.payload_bytes();
+        let mut qge = qg.clone();
+        qge.codes = qge.codes.to_entropy(64 * 8, 4);
+        let qt = QuantizedTensor {
+            name: "e".into(),
+            rows: 64,
+            cols: 64,
+            groups: vec![(0, 0, qge)],
+        };
+        let mut sm = StreamingMatvec::new(8);
+        let mut y = vec![0.0f32; 64];
+        let mut stats = DecodeStats::default();
+        let x = vec![1.0f32; 64];
+        sm.matvec(&qt, &x, &mut y, &mut stats);
+        assert!(
+            stats.code_bytes < fixed_bytes / 4,
+            "compressed traffic {} vs fixed {}",
+            stats.code_bytes,
+            fixed_bytes
+        );
+        // panels aligned to chunks → every chunk is charged exactly once
+        assert_eq!(stats.code_bytes, qt.groups[0].2.codes.payload_bytes());
     }
 
     #[test]

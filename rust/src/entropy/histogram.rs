@@ -1,0 +1,241 @@
+//! Per-group code histograms → quantized rANS frequency tables.
+//!
+//! The alphabet for a `b`-bit group is the `2^b` offset codes
+//! `u = c − lo ∈ [0, 2^b)` plus one trailing **escape** symbol for codes
+//! outside the clamp range (index `2^b`). Babai-rounded GLVQ codes always
+//! land in range, but the escape keeps the coder total: any i32 can be
+//! represented, with the raw value carried out-of-band
+//! ([`super::stream::RansChunk::escapes`]).
+//!
+//! Counts get **Laplace (+1) smoothing** so every symbol has nonzero mass
+//! — a code value the calibration group never produced still decodes, at
+//! the cost of a sliver of rate. The smoothed counts are then quantized to
+//! a 12-bit table (sum exactly [`PROB_SCALE`], every entry ≥ 1) with
+//! largest-first correction of the rounding drift.
+
+use crate::entropy::rans::PROB_SCALE;
+use crate::quant::pack::code_range;
+
+/// Number of symbols for a `bits`-wide code alphabet (incl. escape).
+pub fn alphabet_size(bits: u8) -> usize {
+    (1usize << bits) + 1
+}
+
+/// Index of the escape symbol.
+pub fn escape_symbol(bits: u8) -> usize {
+    1usize << bits
+}
+
+/// A quantized per-group frequency table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodeHistogram {
+    pub bits: u8,
+    /// One 12-bit frequency per symbol; `freqs.len() == alphabet_size`,
+    /// every entry ≥ 1, `Σ freqs == PROB_SCALE`.
+    pub freqs: Vec<u16>,
+}
+
+impl CodeHistogram {
+    /// Build from raw codes with Laplace smoothing. `bits` must be in
+    /// `1..=8` — the crate-wide code-width invariant, enforced by
+    /// [`code_range`] (same contract as `PackedCodes::pack`), which also
+    /// keeps the alphabet (≤ 257) below `PROB_SCALE`.
+    pub fn build(codes: &[i32], bits: u8) -> CodeHistogram {
+        let s = alphabet_size(bits);
+        let (lo, hi) = code_range(bits);
+        let mut counts = vec![1u64; s];
+        for &c in codes {
+            let idx = if c >= lo && c <= hi { (c - lo) as usize } else { s - 1 };
+            counts[idx] += 1;
+        }
+        CodeHistogram { bits, freqs: quantize_freqs(&counts, PROB_SCALE) }
+    }
+
+    /// Reconstruct from a deserialized table (validates the invariants).
+    pub fn from_freqs(bits: u8, freqs: Vec<u16>) -> Result<CodeHistogram, String> {
+        if freqs.len() != alphabet_size(bits) {
+            return Err(format!(
+                "frequency table has {} entries, want {}",
+                freqs.len(),
+                alphabet_size(bits)
+            ));
+        }
+        let sum: u32 = freqs.iter().map(|&f| f as u32).sum();
+        if sum != PROB_SCALE || freqs.iter().any(|&f| f == 0) {
+            return Err(format!("frequency table sums to {sum}, want {PROB_SCALE} (all > 0)"));
+        }
+        Ok(CodeHistogram { bits, freqs })
+    }
+
+    /// Symbol index for a code value.
+    #[inline]
+    pub fn symbol_of(&self, c: i32) -> usize {
+        let (lo, hi) = code_range(self.bits);
+        if c >= lo && c <= hi {
+            (c - lo) as usize
+        } else {
+            escape_symbol(self.bits)
+        }
+    }
+
+    /// Cumulative starts per symbol (`starts[s] = Σ_{t<s} freqs[t]`).
+    pub fn starts(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.freqs.len()];
+        let mut cum = 0u32;
+        for (o, &f) in out.iter_mut().zip(&self.freqs) {
+            *o = cum;
+            cum += f as u32;
+        }
+        out
+    }
+
+    /// Expand to the 4096-entry slot → symbol decode table.
+    pub fn decode_table(&self) -> DecodeTable {
+        let starts = self.starts();
+        let mut slots = vec![0u16; PROB_SCALE as usize];
+        for (sym, (&st, &f)) in starts.iter().zip(&self.freqs).enumerate() {
+            for slot in st..st + f as u32 {
+                slots[slot as usize] = sym as u16;
+            }
+        }
+        DecodeTable { starts, freqs: self.freqs.clone(), slots }
+    }
+
+    /// Serialized size of the table inside the `.glvq` v2 container
+    /// (u16 per symbol).
+    pub fn table_bytes(&self) -> usize {
+        2 * self.freqs.len()
+    }
+
+    /// Empirical entropy of the quantized table in bits/symbol — the rate
+    /// the coder approaches on matching data.
+    pub fn entropy_bits(&self) -> f64 {
+        let total = PROB_SCALE as f64;
+        self.freqs
+            .iter()
+            .map(|&f| {
+                let p = f as f64 / total;
+                -p * p.log2()
+            })
+            .sum()
+    }
+}
+
+/// Slot-indexed decode view of a histogram.
+pub struct DecodeTable {
+    pub starts: Vec<u32>,
+    pub freqs: Vec<u16>,
+    /// 12-bit slot → symbol
+    pub slots: Vec<u16>,
+}
+
+/// Quantize positive counts to frequencies with sum exactly `target` and
+/// every entry ≥ 1 (assumes `counts.len() <= target`).
+pub fn quantize_freqs(counts: &[u64], target: u32) -> Vec<u16> {
+    assert!(!counts.is_empty() && counts.len() <= target as usize);
+    let total: u64 = counts.iter().sum();
+    let mut freqs: Vec<u32> = counts
+        .iter()
+        .map(|&c| (((c * target as u64) / total).max(1)) as u32)
+        .collect();
+    let mut sum: u32 = freqs.iter().sum();
+    // Rounding drift is at most a few entries per symbol; push it onto the
+    // heaviest symbols where the relative rate loss is smallest.
+    while sum > target {
+        let i = (0..freqs.len()).max_by_key(|&i| freqs[i]).unwrap();
+        debug_assert!(freqs[i] > 1);
+        freqs[i] -= 1;
+        sum -= 1;
+    }
+    while sum < target {
+        let i = (0..freqs.len()).max_by_key(|&i| freqs[i]).unwrap();
+        freqs[i] += 1;
+        sum += 1;
+    }
+    freqs.into_iter().map(|f| f as u16).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn quantized_table_invariants_hold() {
+        proptest(60, |rig| {
+            let bits = rig.usize_in(1, 8) as u8;
+            let (lo, hi) = code_range(bits);
+            let n = rig.usize_in(0, 400);
+            let codes: Vec<i32> = (0..n)
+                .map(|_| {
+                    if rig.usize_in(0, 9) == 0 {
+                        // occasional out-of-range code
+                        if rig.bool() {
+                            hi + 1 + rig.usize_in(0, 5) as i32
+                        } else {
+                            lo - 1 - rig.usize_in(0, 5) as i32
+                        }
+                    } else {
+                        rig.usize_in(0, (hi - lo) as usize) as i32 + lo
+                    }
+                })
+                .collect();
+            let h = CodeHistogram::build(&codes, bits);
+            assert_eq!(h.freqs.len(), alphabet_size(bits));
+            assert_eq!(h.freqs.iter().map(|&f| f as u32).sum::<u32>(), PROB_SCALE);
+            assert!(h.freqs.iter().all(|&f| f >= 1));
+            for &c in &codes {
+                let s = h.symbol_of(c);
+                assert!(s < alphabet_size(bits));
+                if c < lo || c > hi {
+                    assert_eq!(s, escape_symbol(bits));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn decode_table_partitions_all_slots() {
+        let codes: Vec<i32> = (-2..2).cycle().take(100).collect();
+        let h = CodeHistogram::build(&codes, 2);
+        let t = h.decode_table();
+        assert_eq!(t.slots.len(), PROB_SCALE as usize);
+        // every slot maps to the symbol whose [start, start+freq) covers it
+        for (slot, &sym) in t.slots.iter().enumerate() {
+            let s = sym as usize;
+            let st = t.starts[s];
+            let f = t.freqs[s] as u32;
+            assert!((slot as u32) >= st && (slot as u32) < st + f, "slot {slot} sym {sym}");
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_mass() {
+        let mut codes = vec![0i32; 1000];
+        codes.extend_from_slice(&[1, -1, 1, -1]);
+        let h = CodeHistogram::build(&codes, 3);
+        let zero_sym = h.symbol_of(0);
+        assert!(h.freqs[zero_sym] as u32 > PROB_SCALE * 8 / 10, "{:?}", h.freqs);
+        assert!(h.entropy_bits() < 1.0, "{}", h.entropy_bits());
+    }
+
+    #[test]
+    fn single_symbol_and_all_escape_degenerate_tables() {
+        // single-symbol: everything at code 0
+        let h = CodeHistogram::build(&vec![0i32; 500], 4);
+        assert_eq!(h.freqs.iter().map(|&f| f as u32).sum::<u32>(), PROB_SCALE);
+        assert!(h.freqs.iter().all(|&f| f >= 1));
+        // all-escape: every code far out of range
+        let h = CodeHistogram::build(&vec![9999i32; 500], 4);
+        assert!(h.freqs[escape_symbol(4)] as u32 > PROB_SCALE / 2);
+        assert!(h.freqs.iter().all(|&f| f >= 1));
+    }
+
+    #[test]
+    fn from_freqs_validates() {
+        assert!(CodeHistogram::from_freqs(2, vec![1024; 4]).is_err()); // wrong len
+        assert!(CodeHistogram::from_freqs(2, vec![1000, 1000, 1000, 1000, 96]).is_ok());
+        assert!(CodeHistogram::from_freqs(2, vec![2096, 1000, 1000, 0, 96]).is_err()); // zero
+        assert!(CodeHistogram::from_freqs(2, vec![1000, 1000, 1000, 1000, 97]).is_err()); // sum
+    }
+}

@@ -1,0 +1,29 @@
+//! Entropy-coded lattice codes: a static-table rANS backend for the
+//! `.glvq` container (v2).
+//!
+//! After Babai rounding, GLVQ's integer codes are far from uniform — they
+//! concentrate in a discrete-Gaussian-like mass around zero, so the
+//! fixed-width `m·n·b/8` payload of [`crate::quant::pack`] (Eq. 26)
+//! systematically overpays relative to the codes' empirical entropy. This
+//! module closes that gap losslessly:
+//!
+//! - [`rans`] — the core range-ANS coder: 32-bit state, 12-bit quantized
+//!   frequency tables, byte renormalization.
+//! - [`histogram`] — per-group code histograms with Laplace smoothing and
+//!   an escape symbol for out-of-range codes, quantized to rANS tables.
+//! - [`stream`] — N-way lane-interleaved encode/decode and the chunked
+//!   [`stream::RansCodes`] payload the streaming matvec random-accesses.
+//!
+//! Integration points: [`crate::quant::traits::CodePayload`] (the
+//! fixed-vs-entropy payload enum), `.glvq` v2 in
+//! [`crate::quant::format`], `--entropy` in the quantization pipeline and
+//! CLI, and the measured-with-entropy column of the Table-5 reproduction.
+//! Future backends (tANS, dictionary-shared tables across groups) slot in
+//! as further `CodePayload` variants.
+
+pub mod histogram;
+pub mod rans;
+pub mod stream;
+
+pub use histogram::CodeHistogram;
+pub use stream::{RansChunk, RansCodes, DEFAULT_CHUNK, DEFAULT_LANES};

@@ -1,0 +1,151 @@
+//! Core range ANS (rANS) coder: 32-bit state, 12-bit quantized frequency
+//! tables, byte-wise renormalization (the "ryg_rans" byte variant).
+//!
+//! Invariants:
+//! - Encoder state lives in `[RANS_L, RANS_L·256)` after each `put`; the
+//!   decoder renormalizes back above `RANS_L` after each `advance`.
+//! - Symbols are encoded in *reverse* order and the emitted byte buffer is
+//!   reversed once at the end, so the decoder reads bytes forward. This is
+//!   what makes N-way lane interleaving ([`super::stream`]) work: decode
+//!   step `i` pulls exactly the bytes encode step `i` pushed.
+//! - All frequencies are 12-bit (`PROB_SCALE` = 4096) and strictly
+//!   positive ([`super::histogram`] guarantees this), so `put`/`advance`
+//!   never divide by zero and the u32 state arithmetic cannot overflow:
+//!   `x_max = (RANS_L>>12)<<8 · freq ≤ 2^31` and `x<<8 < 2^31` at renorm.
+
+/// Number of probability bits; frequency tables sum to `1 << PROB_BITS`.
+pub const PROB_BITS: u32 = 12;
+/// Total frequency mass (4096).
+pub const PROB_SCALE: u32 = 1 << PROB_BITS;
+/// Lower bound of the normalized state interval.
+pub const RANS_L: u32 = 1 << 23;
+
+/// Fresh encoder state (also the decoder's terminal state for an empty
+/// stream).
+#[inline]
+pub fn initial_state() -> u32 {
+    RANS_L
+}
+
+/// Encode one symbol with cumulative range `[start, start+freq)` into
+/// `state`, appending renormalization bytes to `out` (low byte first;
+/// the whole buffer is reversed once after the last symbol).
+#[inline]
+pub fn put(state: &mut u32, out: &mut Vec<u8>, start: u32, freq: u32) {
+    debug_assert!(freq > 0 && freq <= PROB_SCALE);
+    debug_assert!(start + freq <= PROB_SCALE);
+    let x_max = ((RANS_L >> PROB_BITS) << 8) * freq;
+    let mut x = *state;
+    while x >= x_max {
+        out.push((x & 0xFF) as u8);
+        x >>= 8;
+    }
+    *state = ((x / freq) << PROB_BITS) + (x % freq) + start;
+}
+
+/// The 12-bit slot the decoder resolves to a symbol.
+#[inline]
+pub fn slot(state: u32) -> u32 {
+    state & (PROB_SCALE - 1)
+}
+
+/// Consume the symbol `(start, freq)` that `slot(state)` resolved to,
+/// renormalizing from `bytes` (forward cursor `pos`). Returns the new
+/// state. Panics on a malformed stream: the container CRC rejects
+/// *accidental* corruption before decode, and the v2 reader validates
+/// structural invariants (lengths, counts, table sums); a deliberately
+/// crafted stream body is outside the threat model and fails loudly here
+/// rather than decoding garbage.
+#[inline]
+pub fn advance(state: u32, start: u32, freq: u32, bytes: &[u8], pos: &mut usize) -> u32 {
+    debug_assert!(freq > 0);
+    let mut x = freq * (state >> PROB_BITS) + slot(state) - start;
+    while x < RANS_L {
+        x = (x << 8) | bytes[*pos] as u32;
+        *pos += 1;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    /// Single-lane encode/decode helper over a tiny fixed table.
+    fn roundtrip(symbols: &[usize], freqs: &[u32]) -> Vec<usize> {
+        let mut starts = vec![0u32; freqs.len()];
+        let mut cum = 0;
+        for (i, &f) in freqs.iter().enumerate() {
+            starts[i] = cum;
+            cum += f;
+        }
+        assert_eq!(cum, PROB_SCALE);
+
+        let mut state = initial_state();
+        let mut bytes = Vec::new();
+        for &s in symbols.iter().rev() {
+            put(&mut state, &mut bytes, starts[s], freqs[s]);
+        }
+        bytes.reverse();
+
+        let mut out = Vec::with_capacity(symbols.len());
+        let mut pos = 0;
+        let mut x = state;
+        for _ in 0..symbols.len() {
+            let sl = slot(x);
+            let sym = starts.iter().rposition(|&st| st <= sl).unwrap();
+            x = advance(x, starts[sym], freqs[sym], &bytes, &mut pos);
+            out.push(sym);
+        }
+        assert_eq!(pos, bytes.len(), "decoder must consume the whole stream");
+        assert_eq!(x, initial_state(), "state must return to the initial value");
+        out
+    }
+
+    #[test]
+    fn uniform_table_roundtrip() {
+        let freqs = vec![PROB_SCALE / 4; 4];
+        let syms = vec![0, 1, 2, 3, 3, 2, 1, 0, 0, 0, 3];
+        assert_eq!(roundtrip(&syms, &freqs), syms);
+    }
+
+    #[test]
+    fn skewed_table_roundtrip_random() {
+        let freqs = vec![3900, 100, 90, 6];
+        proptest(40, |rig| {
+            let n = rig.usize_in(0, 500);
+            let syms: Vec<usize> = (0..n)
+                .map(|_| {
+                    // sample roughly by mass
+                    let r = rig.usize_in(0, 4095);
+                    if r < 3900 {
+                        0
+                    } else if r < 4000 {
+                        1
+                    } else if r < 4090 {
+                        2
+                    } else {
+                        3
+                    }
+                })
+                .collect();
+            assert_eq!(roundtrip(&syms, &freqs), syms);
+        });
+    }
+
+    #[test]
+    fn skewed_stream_is_compact() {
+        // 4000/4096 mass on symbol 0 → ~0.1 bits/symbol; 4096 symbols of
+        // the dominant class must take far fewer than 4096/8 fixed bytes.
+        let freqs = vec![4000, 48, 32, 16];
+        let syms = vec![0usize; 4096];
+        let mut state = initial_state();
+        let mut bytes = Vec::new();
+        for _ in 0..syms.len() {
+            put(&mut state, &mut bytes, 0, freqs[0]);
+        }
+        // ~4096·log2(4096/4000)/8 ≈ 18 bytes
+        assert!(bytes.len() < 60, "{} bytes", bytes.len());
+    }
+}

@@ -185,7 +185,8 @@ impl Workspace {
         opts_override: Option<PipelineOpts>,
     ) -> Result<(QuantizedModel, TensorStore)> {
         let gs = opts_override.as_ref().map_or(128, |o| o.group_size);
-        let key = format!("{model}:{method}:{bits}:{gs}");
+        let entropy = opts_override.as_ref().is_some_and(|o| o.entropy);
+        let key = format!("{model}:{method}:{bits}:{gs}:{entropy}");
         if let Some(hit) = self.quant_cache.get(&key) {
             return Ok(hit.clone());
         }

@@ -322,7 +322,7 @@ impl GlvqGroupQuantizer {
             bits,
             rows: m,
             cols: n,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: PackedCodes::pack(&codes, bits).into(),
             side,
         };
 

@@ -84,6 +84,10 @@ pub struct PipelineOpts {
     /// SDBA on/off (off ⇒ uniform round(target) bits everywhere)
     pub bit_allocation: bool,
     pub threads: usize,
+    /// Losslessly re-encode each group's codes with the rANS backend
+    /// (`.glvq` v2): same codes, same reconstruction, smaller payload
+    /// whenever the code distribution is peaked (it is, post-Babai).
+    pub entropy: bool,
 }
 
 impl Default for PipelineOpts {
@@ -93,8 +97,18 @@ impl Default for PipelineOpts {
             target_bits: 2.0,
             bit_allocation: true,
             threads: default_threads(),
+            entropy: false,
         }
     }
+}
+
+/// Chunk length (in symbols) for entropy-coding a group of width `cols`:
+/// whole rows, as close to [`crate::entropy::DEFAULT_CHUNK`] symbols as
+/// possible, so streamed row panels touch the minimum number of chunks.
+pub fn entropy_chunk_len(cols: usize) -> usize {
+    let cols = cols.max(1);
+    let rows = (crate::entropy::DEFAULT_CHUNK / cols).max(1);
+    rows * cols
 }
 
 /// Quantize all quantizable tensors of `store`.
@@ -164,8 +178,13 @@ pub fn quantize_model(
         let mut side_bytes = 0usize;
         let mut payload_bytes = 0usize;
         let mut total_bits = 0usize;
-        for ((gi, qg, err), span) in quantized.into_iter().zip(&spans) {
+        for ((gi, mut qg, err), span) in quantized.into_iter().zip(&spans) {
             debug_assert_eq!(spans[gi].col0, span.col0);
+            if opts.entropy {
+                qg.codes = qg
+                    .codes
+                    .to_entropy(entropy_chunk_len(qg.cols), crate::entropy::DEFAULT_LANES);
+            }
             total_err += err;
             side_bytes += qg.side_bytes();
             payload_bytes += qg.codes.payload_bytes();
@@ -238,7 +257,7 @@ mod tests {
         let specs = tiny_specs();
         let store = tiny_store(1);
         let calib = CalibSet::random(&specs, 32, 7);
-        let opts = PipelineOpts { group_size: 32, target_bits: 3.0, bit_allocation: true, threads: 2 };
+        let opts = PipelineOpts { group_size: 32, target_bits: 3.0, bit_allocation: true, threads: 2, ..Default::default() };
         let (model, report) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
         assert_eq!(model.tensors.len(), 1);
         assert_eq!(report.tensors.len(), 1);
@@ -253,7 +272,7 @@ mod tests {
         let specs = tiny_specs();
         let store = tiny_store(2);
         let calib = CalibSet::random(&specs, 48, 9);
-        let opts = PipelineOpts { group_size: 32, target_bits: 2.0, bit_allocation: false, threads: 2 };
+        let opts = PipelineOpts { group_size: 32, target_bits: 2.0, bit_allocation: false, threads: 2, ..Default::default() };
         let mut cfg = GlvqConfig::default();
         cfg.lattice_dim = 8;
         cfg.group_size = 32;
@@ -274,7 +293,7 @@ mod tests {
         let specs = tiny_specs();
         let store = tiny_store(3);
         let calib = CalibSet::random(&specs, 16, 1);
-        let opts = PipelineOpts { group_size: 32, target_bits: 4.0, bit_allocation: false, threads: 1 };
+        let opts = PipelineOpts { group_size: 32, target_bits: 4.0, bit_allocation: false, threads: 1, ..Default::default() };
         let (model, _) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
         let dq = dequantized_store(&model, &store);
         assert_eq!(dq.get("g").unwrap(), store.get("g").unwrap());
@@ -289,6 +308,52 @@ mod tests {
             .map(|(x, y)| (x - y).abs())
             .fold(0.0, f32::max);
         assert!(err < 0.02, "max err {err}");
+    }
+
+    #[test]
+    fn entropy_mode_is_lossless_and_smaller_or_reports_truthfully() {
+        let specs = tiny_specs();
+        let store = tiny_store(6);
+        let calib = CalibSet::random(&specs, 32, 11);
+        let base = PipelineOpts {
+            group_size: 32,
+            target_bits: 2.0,
+            bit_allocation: false,
+            threads: 2,
+            ..Default::default()
+        };
+        let ent = PipelineOpts { entropy: true, ..base.clone() };
+        let mut cfg = GlvqConfig::default();
+        cfg.lattice_dim = 8;
+        cfg.group_size = 32;
+        cfg.iters = 8;
+        let glvq = GlvqGroupQuantizer::new(cfg);
+        let (qm, rep) = quantize_model(&specs, &store, &calib, &glvq, &base).unwrap();
+        let (qme, repe) = quantize_model(&specs, &store, &calib, &glvq, &ent).unwrap();
+
+        // identical codes and reconstruction — entropy coding is lossless
+        assert_eq!(qm.tensors.len(), qme.tensors.len());
+        for (t, te) in qm.tensors.iter().zip(&qme.tensors) {
+            assert_eq!(t.dequantize().data, te.dequantize().data, "{}", t.name);
+        }
+        assert!(qme.has_entropy_payloads());
+        assert!(!qm.has_entropy_payloads());
+        // nominal rate accounting is unchanged; stored payload is reported
+        // at its true (compressed) size
+        assert!((qm.avg_bits() - qme.avg_bits()).abs() < 1e-12);
+        let (payload_fixed, _) = qm.size_bytes();
+        let (payload_ent, _) = qme.size_bytes();
+        assert_eq!(repe.tensors[0].payload_bytes, payload_ent);
+        assert_eq!(rep.tensors[0].payload_bytes, payload_fixed);
+        assert_eq!(qme.fixed_payload_bytes(), payload_fixed);
+    }
+
+    #[test]
+    fn entropy_chunking_aligns_to_rows() {
+        assert_eq!(entropy_chunk_len(128), 4096);
+        assert_eq!(entropy_chunk_len(100), 4000);
+        assert_eq!(entropy_chunk_len(5000), 5000);
+        assert_eq!(entropy_chunk_len(1), crate::entropy::DEFAULT_CHUNK);
     }
 
     #[test]
@@ -307,7 +372,7 @@ mod tests {
         let specs = cfg.param_specs();
         let store = init_params(&cfg, 5);
         let calib = CalibSet::random(&specs, 16, 2);
-        let opts = PipelineOpts { group_size: 128, target_bits: 2.0, bit_allocation: false, threads: 4 };
+        let opts = PipelineOpts { group_size: 128, target_bits: 2.0, bit_allocation: false, threads: 4, ..Default::default() };
         let (model, report) = quantize_model(&specs, &store, &calib, &RtnQuantizer, &opts).unwrap();
         assert_eq!(model.tensors.len(), cfg.quantizable_names().len());
         assert!(report.wall_ms > 0.0);

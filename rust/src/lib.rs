@@ -19,6 +19,7 @@ pub mod linalg;
 pub mod tensor;
 pub mod lattice;
 pub mod compand;
+pub mod entropy;
 pub mod quant;
 pub mod data;
 pub mod model;

@@ -21,6 +21,7 @@ use glvq::data::corpus::{Corpus, Mix};
 use glvq::exp::{tables, Workspace};
 use glvq::glvq::pipeline::PipelineOpts;
 use glvq::info;
+use glvq::quant::format::QuantizedModel;
 use glvq::tensor::TensorStore;
 use glvq::util::logging;
 
@@ -68,12 +69,17 @@ impl Args {
 
 const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [--flags]
   gen-data  --mix wiki|web --bytes N --seed S --out FILE
+  quantize  --model s|m --method glvq-8d|rtn|gptq|... --bits B [--entropy] --out FILE
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
-  quantize  --model s|m --method glvq-8d|rtn|gptq|... --bits B --out FILE
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
-  info      [--artifacts DIR]";
+  info      [--artifacts DIR] [--container FILE.glvq]
+
+  --entropy    rANS entropy-code the packed lattice codes (.glvq v2):
+               smaller files at the same nominal bits, decoded losslessly
+               by the streaming runtime
+  --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
 
 fn main() -> Result<()> {
     logging::level_from_env();
@@ -112,15 +118,29 @@ fn main() -> Result<()> {
             let out = args.get("out", &format!("{dir}/{model}_{method}_{bits}b.glvq"));
             let mut ws = Workspace::new(&artifacts, &dir)?;
             let gs = args.get_usize("group-size", 128);
-            let opts = PipelineOpts { group_size: gs, target_bits: bits, ..Default::default() };
+            let entropy = args.flags.get("entropy").is_some_and(|v| v != "false");
+            let opts = PipelineOpts {
+                group_size: gs,
+                target_bits: bits,
+                entropy,
+                ..Default::default()
+            };
             let (qm, _) = ws.quantize(&model, &method, bits, Some(opts))?;
             qm.save(std::path::Path::new(&out))?;
             let (payload, side) = qm.size_bytes();
             info!(
-                "saved {out}: avg {:.3} bits, payload {payload} B, side {side} B ({:.2}%)",
+                "saved {out} (v{}): avg {:.3} bits, payload {payload} B, side {side} B ({:.2}%)",
+                qm.container_version(),
                 qm.avg_bits(),
-                side as f64 / payload as f64 * 100.0
+                side as f64 / payload.max(1) as f64 * 100.0
             );
+            if entropy {
+                let fixed = qm.fixed_payload_bytes();
+                info!(
+                    "entropy coding: {payload} B vs {fixed} B fixed-width ({:.1}% saved)",
+                    100.0 * (1.0 - payload as f64 / fixed.max(1) as f64)
+                );
+            }
         }
         "eval" => {
             let model = args.get("model", "s");
@@ -209,6 +229,41 @@ fn main() -> Result<()> {
             tables::run(&mut ws, &id)?;
         }
         "info" => {
+            if let Some(path) = args.flags.get("container") {
+                // container inspection needs no artifacts/PJRT: report the
+                // per-tensor fixed-vs-entropy byte accounting of a .glvq file
+                let qm = QuantizedModel::load(std::path::Path::new(path))?;
+                println!(
+                    "{path}: container v{}, {} tensors, avg {:.3} bits",
+                    qm.container_version(),
+                    qm.tensors.len(),
+                    qm.avg_bits()
+                );
+                println!(
+                    "{:<24} {:>9} {:>11} {:>11} {:>8} {:>8}",
+                    "tensor", "groups", "fixed B", "stored B", "save%", "side B"
+                );
+                for t in &qm.tensors {
+                    let fixed = t.fixed_payload_bytes();
+                    let stored = t.payload_bytes();
+                    println!(
+                        "{:<24} {:>9} {:>11} {:>11} {:>7.1}% {:>8}",
+                        t.name,
+                        t.groups.len(),
+                        fixed,
+                        stored,
+                        100.0 * (1.0 - stored as f64 / fixed.max(1) as f64),
+                        t.side_bytes()
+                    );
+                }
+                let (payload, side) = qm.size_bytes();
+                let fixed = qm.fixed_payload_bytes();
+                println!(
+                    "total: stored {payload} B vs fixed {fixed} B ({:.1}% saved), side {side} B",
+                    100.0 * (1.0 - payload as f64 / fixed.max(1) as f64)
+                );
+                return Ok(());
+            }
             let ws = Workspace::new(&artifacts, &dir)?;
             for (name, m) in &ws.engine.models {
                 println!(

@@ -1,28 +1,87 @@
 //! `.glvq` container: the on-disk format for a fully quantized model.
 //!
 //! Layout (little-endian):
-//!   magic "GLVQ" | u32 version
+//!   magic "GLVQ" | u32 version (1 or 2)
 //!   u32 n_tensors
 //!   per tensor: name | u32 rows | u32 cols | u32 n_groups
 //!     per group: u8 method_tag | u8 bits | u32 rows | u32 cols |
-//!                u32 col_offset | u32 row_offset |
-//!                codes (u32 len + bytes) | side info (tagged)
+//!                u32 row_offset | u32 col_offset |
+//!                codes | side info (tagged)
 //!   u32 crc32 of everything after magic
 //!
-//! Measured file sizes from this container back the Table-5 overhead
-//! reproduction (`glvq exp table5` reports analytic Eq. 27 vs measured).
+//! **v1** codes are always fixed-width: `u8 bits | u32 n | bytes`.
+//! **v2** codes are tagged payloads (`u8 payload_tag`):
+//!   - tag 0 (fixed): `u8 bits | u32 n | bytes` — identical to v1's body;
+//!   - tag 1 (rANS):  `u8 bits | u32 n | u32 chunk_len | u8 lanes |
+//!                     u32 n_syms + u16 freqs… |
+//!                     u32 n_chunks, per chunk: lanes×u32 states |
+//!                     bytes stream | u32 n_escapes + i32 raw escapes…`.
+//!
+//! The writer emits v1 whenever every payload is fixed-width (so seed-era
+//! files and tools stay byte-compatible) and v2 otherwise; the reader
+//! accepts both. The CRC is verified **incrementally while parsing** — a
+//! corrupted length field surfaces as a structured [`FormatError`] before
+//! any oversized allocation, and the trailing checksum is checked against
+//! the running digest. Measured file sizes from this container back the
+//! Table-5 overhead reproduction (`glvq exp table5`), and with `--entropy`
+//! the new measured-with-entropy column.
 
+use std::fmt;
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::entropy::histogram::CodeHistogram;
+use crate::entropy::stream::{RansChunk, RansCodes};
 use crate::quant::pack::PackedCodes;
-use crate::quant::traits::{QuantizedGroup, SideInfo};
-use crate::tensor::crc32;
+use crate::quant::traits::{CodePayload, QuantizedGroup, SideInfo};
+use crate::tensor::{crc32, Crc32};
 
 const MAGIC: &[u8; 4] = b"GLVQ";
-const VERSION: u32 = 1;
+/// Fixed-width-only container (seed format).
+pub const VERSION_V1: u32 = 1;
+/// Tagged-payload container with entropy-coded codes.
+pub const VERSION_V2: u32 = 2;
+
+/// Structured container errors — stable for callers to match on
+/// (`err.downcast_ref::<FormatError>()`), instead of string-matching
+/// `bail!` messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FormatError {
+    /// The file does not start with the "GLVQ" magic.
+    BadMagic,
+    /// The container version is not one this build reads.
+    UnsupportedVersion(u32),
+    /// The trailing CRC32 does not match the streamed digest.
+    CrcMismatch { stored: u32, computed: u32 },
+    /// The file ended (or a length field overran the body) while reading
+    /// the named field.
+    Truncated(&'static str),
+    /// An unknown tag byte for the named field.
+    UnknownTag { what: &'static str, tag: u8 },
+    /// A structurally invalid value (e.g. a malformed frequency table).
+    Invalid(String),
+}
+
+impl fmt::Display for FormatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FormatError::BadMagic => write!(f, "not a GLVQ container (bad magic)"),
+            FormatError::UnsupportedVersion(v) => {
+                write!(f, "unsupported container version {v} (supported: 1, 2)")
+            }
+            FormatError::CrcMismatch { stored, computed } => {
+                write!(f, "CRC mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            FormatError::Truncated(what) => write!(f, "truncated container ({what})"),
+            FormatError::UnknownTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
+            FormatError::Invalid(msg) => write!(f, "invalid container field: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
 
 /// One quantized tensor: its grid of quantized groups + placement.
 #[derive(Clone, Debug, PartialEq)]
@@ -53,7 +112,17 @@ impl QuantizedTensor {
         self.groups.iter().map(|(_, _, g)| g.side_bytes()).sum()
     }
 
-    /// Average bits per weight (codes only).
+    /// True stored code bytes (compressed size for entropy payloads).
+    pub fn payload_bytes(&self) -> usize {
+        self.groups.iter().map(|(_, _, g)| g.codes.payload_bytes()).sum()
+    }
+
+    /// What the codes would occupy fixed-width (`Σ ⌈n·b/8⌉`).
+    pub fn fixed_payload_bytes(&self) -> usize {
+        self.groups.iter().map(|(_, _, g)| g.codes.fixed_payload_bytes()).sum()
+    }
+
+    /// Average *nominal* bits per weight (codes only, paper convention).
     pub fn avg_bits(&self) -> f64 {
         self.payload_bits() as f64 / (self.rows * self.cols) as f64
     }
@@ -103,6 +172,9 @@ impl Writer {
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -110,6 +182,9 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn bytes(&mut self, b: &[u8]) {
@@ -124,53 +199,72 @@ impl Writer {
     }
 }
 
-struct Reader<'a> {
-    b: &'a [u8],
-    pos: usize,
+/// Streaming reader: pulls from an `io::Read`, tracks the remaining body
+/// length (so corrupt length fields fail fast instead of over-allocating)
+/// and feeds every consumed byte into an incremental CRC.
+struct Reader<R: Read> {
+    inner: R,
+    crc: Crc32,
+    /// body bytes left to consume (excludes the trailing CRC word)
+    remaining: u64,
 }
 
-impl<'a> Reader<'a> {
-    fn u8(&mut self) -> Result<u8> {
-        if self.pos >= self.b.len() {
-            bail!("truncated (u8)");
+impl<R: Read> Reader<R> {
+    fn fill(&mut self, what: &'static str, buf: &mut [u8]) -> Result<()> {
+        if (buf.len() as u64) > self.remaining {
+            return Err(FormatError::Truncated(what).into());
         }
-        let v = self.b[self.pos];
-        self.pos += 1;
+        self.inner
+            .read_exact(buf)
+            .map_err(|_| anyhow::Error::new(FormatError::Truncated(what)))?;
+        self.crc.update(buf);
+        self.remaining -= buf.len() as u64;
+        Ok(())
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(what, &mut b)?;
+        Ok(b[0])
+    }
+    fn u16(&mut self, what: &'static str) -> Result<u16> {
+        let mut b = [0u8; 2];
+        self.fill(what, &mut b)?;
+        Ok(u16::from_le_bytes(b))
+    }
+    fn u32(&mut self, what: &'static str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(what, &mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self, what: &'static str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(what, &mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f32(&mut self, what: &'static str) -> Result<f32> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+    fn i32(&mut self, what: &'static str) -> Result<i32> {
+        Ok(self.u32(what)? as i32)
+    }
+    fn bytes(&mut self, what: &'static str) -> Result<Vec<u8>> {
+        let n = self.u32(what)? as usize;
+        if (n as u64) > self.remaining {
+            return Err(FormatError::Truncated(what).into());
+        }
+        let mut v = vec![0u8; n];
+        self.fill(what, &mut v)?;
         Ok(v)
     }
-    fn u32(&mut self) -> Result<u32> {
-        if self.pos + 4 > self.b.len() {
-            bail!("truncated (u32)");
+    fn f32s(&mut self, what: &'static str) -> Result<Vec<f32>> {
+        let n = self.u32(what)? as usize;
+        if (n as u64) * 4 > self.remaining {
+            return Err(FormatError::Truncated(what).into());
         }
-        let v = u32::from_le_bytes(self.b[self.pos..self.pos + 4].try_into().unwrap());
-        self.pos += 4;
-        Ok(v)
-    }
-    fn u64(&mut self) -> Result<u64> {
-        if self.pos + 8 > self.b.len() {
-            bail!("truncated (u64)");
-        }
-        let v = u64::from_le_bytes(self.b[self.pos..self.pos + 8].try_into().unwrap());
-        self.pos += 8;
-        Ok(v)
-    }
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_bits(self.u32()?))
-    }
-    fn bytes(&mut self) -> Result<Vec<u8>> {
-        let n = self.u32()? as usize;
-        if self.pos + n > self.b.len() {
-            bail!("truncated (bytes)");
-        }
-        let v = self.b[self.pos..self.pos + n].to_vec();
-        self.pos += n;
-        Ok(v)
-    }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(self.f32()?);
+            v.push(self.f32(what)?);
         }
         Ok(v)
     }
@@ -220,39 +314,197 @@ fn write_side(w: &mut Writer, s: &SideInfo) {
     }
 }
 
-fn read_side(r: &mut Reader) -> Result<SideInfo> {
-    Ok(match r.u8()? {
-        1 => SideInfo::Uniform { scale: r.f32()?, zero: r.f32()? },
+fn read_side<R: Read>(r: &mut Reader<R>) -> Result<SideInfo> {
+    Ok(match r.u8("side tag")? {
+        1 => SideInfo::Uniform { scale: r.f32("side scale")?, zero: r.f32("side zero")? },
         2 => {
-            let d = r.u32()? as usize;
-            let g = r.f32s()?;
-            let mu = r.f32()?;
-            let scale = r.f32()?;
+            let d = r.u32("lattice d")? as usize;
+            let g = r.f32s("lattice G")?;
+            let mu = r.f32("lattice mu")?;
+            let scale = r.f32("lattice scale")?;
             SideInfo::Lattice { d, g, mu, scale }
         }
         3 => SideInfo::RotatedLattice {
-            d: r.u32()? as usize,
-            scale: r.f32()?,
-            sign_seed: r.u64()?,
+            d: r.u32("rotated d")? as usize,
+            scale: r.f32("rotated scale")?,
+            sign_seed: r.u64("rotated seed")?,
         },
-        4 => SideInfo::Codebook { dim: r.u32()? as usize, centers: r.f32s()? },
+        4 => SideInfo::Codebook {
+            dim: r.u32("codebook dim")? as usize,
+            centers: r.f32s("codebook centers")?,
+        },
         5 => {
-            let states = r.u32()? as usize;
-            SideInfo::Trellis { levels: r.f32s()?, states }
+            let states = r.u32("trellis states")? as usize;
+            SideInfo::Trellis { levels: r.f32s("trellis levels")?, states }
         }
         6 => {
-            let row_scales = r.f32s()?;
-            let residual_scales = if r.u8()? == 1 { Some(r.f32s()?) } else { None };
+            let row_scales = r.f32s("binary scales")?;
+            let residual_scales = if r.u8("binary residual flag")? == 1 {
+                Some(r.f32s("binary residual scales")?)
+            } else {
+                None
+            };
             SideInfo::Binary { row_scales, residual_scales }
         }
-        t => bail!("unknown side-info tag {t}"),
+        t => return Err(FormatError::UnknownTag { what: "side-info", tag: t }.into()),
     })
 }
 
+fn write_fixed_codes(w: &mut Writer, p: &PackedCodes) {
+    w.u8(p.bits);
+    w.u32(p.n as u32);
+    w.bytes(&p.data);
+}
+
+fn write_rans_codes(w: &mut Writer, r: &RansCodes) {
+    w.u8(r.bits);
+    w.u32(r.n as u32);
+    w.u32(r.chunk_len as u32);
+    w.u8(r.lanes);
+    w.u32(r.hist.freqs.len() as u32);
+    for &f in &r.hist.freqs {
+        w.u16(f);
+    }
+    w.u32(r.chunks.len() as u32);
+    for c in &r.chunks {
+        // lane count is fixed per payload; states are stored bare
+        for &s in &c.states {
+            w.u32(s);
+        }
+        w.bytes(&c.bytes);
+        w.u32(c.escapes.len() as u32);
+        for &e in &c.escapes {
+            w.i32(e);
+        }
+    }
+}
+
+fn write_payload_v2(w: &mut Writer, codes: &CodePayload) {
+    match codes {
+        CodePayload::Fixed(p) => {
+            w.u8(0);
+            write_fixed_codes(w, p);
+        }
+        CodePayload::Rans(r) => {
+            w.u8(1);
+            write_rans_codes(w, r);
+        }
+    }
+}
+
+fn read_fixed_codes<R: Read>(r: &mut Reader<R>) -> Result<PackedCodes> {
+    let bits = r.u8("code bits")?;
+    let n = r.u32("code count")? as usize;
+    let data = r.bytes("code bytes")?;
+    // consistency guard: a CRC-valid but crafted file must not be able to
+    // trigger an out-of-bounds panic at first unpack
+    if !(1..=8).contains(&bits) {
+        return Err(FormatError::Invalid(format!("fixed payload bits {bits} not in 1..=8")).into());
+    }
+    if data.len() != (n * bits as usize).div_ceil(8) {
+        return Err(FormatError::Invalid(format!(
+            "fixed payload has {} bytes, want {} for n={n} bits={bits}",
+            data.len(),
+            (n * bits as usize).div_ceil(8)
+        ))
+        .into());
+    }
+    Ok(PackedCodes { bits, n, data })
+}
+
+fn read_rans_codes<R: Read>(r: &mut Reader<R>) -> Result<RansCodes> {
+    let bits = r.u8("rans bits")?;
+    if !(1..=8).contains(&bits) {
+        return Err(FormatError::Invalid(format!("rans payload bits {bits} not in 1..=8")).into());
+    }
+    let n = r.u32("rans count")? as usize;
+    let chunk_len = r.u32("rans chunk_len")? as usize;
+    let lanes = r.u8("rans lanes")?;
+    if chunk_len == 0 || lanes == 0 {
+        return Err(FormatError::Invalid("rans chunk_len/lanes must be > 0".into()).into());
+    }
+    let nfreq = r.u32("rans freq count")? as usize;
+    if (nfreq as u64) * 2 > r.remaining {
+        return Err(FormatError::Truncated("rans freqs").into());
+    }
+    let mut freqs = Vec::with_capacity(nfreq);
+    for _ in 0..nfreq {
+        freqs.push(r.u16("rans freq")?);
+    }
+    let hist = CodeHistogram::from_freqs(bits, freqs)
+        .map_err(|e| anyhow::Error::new(FormatError::Invalid(e)))?;
+    let n_chunks = r.u32("rans chunk count")? as usize;
+    let expect_chunks = n.div_ceil(chunk_len);
+    if n_chunks != expect_chunks {
+        return Err(FormatError::Invalid(format!(
+            "rans payload has {n_chunks} chunks, want {expect_chunks} for n={n} chunk_len={chunk_len}"
+        ))
+        .into());
+    }
+    // every chunk costs at least lanes×u32 states + two length words —
+    // reject impossible counts before reserving anything
+    if (n_chunks as u64) * (4 * lanes as u64 + 8) > r.remaining {
+        return Err(FormatError::Truncated("rans chunks").into());
+    }
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for ci in 0..n_chunks {
+        let mut states = Vec::with_capacity(lanes as usize);
+        for _ in 0..lanes {
+            states.push(r.u32("rans state")?);
+        }
+        let bytes = r.bytes("rans stream")?;
+        let n_esc = r.u32("rans escape count")? as usize;
+        let chunk_syms = chunk_len.min(n - ci * chunk_len);
+        if n_esc > chunk_syms {
+            return Err(FormatError::Invalid(format!(
+                "rans chunk {ci} has {n_esc} escapes for {chunk_syms} symbols"
+            ))
+            .into());
+        }
+        if (n_esc as u64) * 4 > r.remaining {
+            return Err(FormatError::Truncated("rans escapes").into());
+        }
+        let mut escapes = Vec::with_capacity(n_esc);
+        for _ in 0..n_esc {
+            escapes.push(r.i32("rans escape")?);
+        }
+        chunks.push(RansChunk { states, bytes, escapes });
+    }
+    Ok(RansCodes { bits, n, chunk_len, lanes, hist, chunks })
+}
+
+fn read_payload<R: Read>(r: &mut Reader<R>, version: u32) -> Result<CodePayload> {
+    if version == VERSION_V1 {
+        return Ok(CodePayload::Fixed(read_fixed_codes(r)?));
+    }
+    match r.u8("payload tag")? {
+        0 => Ok(CodePayload::Fixed(read_fixed_codes(r)?)),
+        1 => Ok(CodePayload::Rans(read_rans_codes(r)?)),
+        t => Err(FormatError::UnknownTag { what: "payload", tag: t }.into()),
+    }
+}
+
 impl QuantizedModel {
+    /// True if any group carries an entropy-coded payload (forces v2).
+    pub fn has_entropy_payloads(&self) -> bool {
+        self.tensors
+            .iter()
+            .any(|t| t.groups.iter().any(|(_, _, g)| g.codes.is_entropy()))
+    }
+
+    /// The container version [`save`](QuantizedModel::save) will emit.
+    pub fn container_version(&self) -> u32 {
+        if self.has_entropy_payloads() {
+            VERSION_V2
+        } else {
+            VERSION_V1
+        }
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
+        let version = self.container_version();
         let mut w = Writer { buf: Vec::new() };
-        w.u32(VERSION);
+        w.u32(version);
         w.u32(self.tensors.len() as u32);
         for t in &self.tensors {
             w.bytes(t.name.as_bytes());
@@ -266,9 +518,10 @@ impl QuantizedModel {
                 w.u32(g.cols as u32);
                 w.u32(*r0 as u32);
                 w.u32(*c0 as u32);
-                w.u8(g.codes.bits);
-                w.u32(g.codes.n as u32);
-                w.bytes(&g.codes.data);
+                match (&g.codes, version) {
+                    (CodePayload::Fixed(p), VERSION_V1) => write_fixed_codes(&mut w, p),
+                    (codes, _) => write_payload_v2(&mut w, codes),
+                }
                 write_side(&mut w, &g.side);
             }
         }
@@ -282,42 +535,64 @@ impl QuantizedModel {
     }
 
     pub fn load(path: &Path) -> Result<QuantizedModel> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path)
-            .with_context(|| format!("open {}", path.display()))?
-            .read_to_end(&mut buf)?;
-        if buf.len() < 12 || &buf[..4] != MAGIC {
-            bail!("{}: not a GLVQ container", path.display());
+        let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = file.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        if len < 12 {
+            return Err(FormatError::Truncated("header").into());
         }
-        let body = &buf[4..buf.len() - 4];
-        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
-        if crc32(body) != stored {
-            bail!("{}: CRC mismatch", path.display());
+        let mut inner = std::io::BufReader::new(file);
+
+        let mut magic = [0u8; 4];
+        inner
+            .read_exact(&mut magic)
+            .map_err(|_| anyhow::Error::new(FormatError::Truncated("magic")))?;
+        if &magic != MAGIC {
+            return Err(FormatError::BadMagic.into());
         }
-        let mut r = Reader { b: body, pos: 0 };
-        let version = r.u32()?;
-        if version != VERSION {
-            bail!("unsupported container version {version}");
+
+        // body = everything between magic and trailing CRC word; the CRC is
+        // accumulated as the parser consumes it (no whole-file buffering).
+        let mut r = Reader { inner, crc: Crc32::new(), remaining: len - 8 };
+        let model = Self::read_body(&mut r)
+            .map_err(|e| e.context(format!("parse {}", path.display())))?;
+        if r.remaining != 0 {
+            return Err(FormatError::Truncated("unconsumed body bytes").into());
         }
-        let nt = r.u32()? as usize;
-        let mut tensors = Vec::with_capacity(nt);
+        let computed = r.crc.finalize();
+        let mut tail = [0u8; 4];
+        r.inner
+            .read_exact(&mut tail)
+            .map_err(|_| anyhow::Error::new(FormatError::Truncated("crc")))?;
+        let stored = u32::from_le_bytes(tail);
+        if stored != computed {
+            return Err(FormatError::CrcMismatch { stored, computed }.into());
+        }
+        Ok(model)
+    }
+
+    fn read_body<R: Read>(r: &mut Reader<R>) -> Result<QuantizedModel> {
+        let version = r.u32("version")?;
+        if version != VERSION_V1 && version != VERSION_V2 {
+            return Err(FormatError::UnsupportedVersion(version).into());
+        }
+        let nt = r.u32("tensor count")? as usize;
+        let mut tensors = Vec::with_capacity(nt.min(1 << 20));
         for _ in 0..nt {
-            let name = String::from_utf8(r.bytes()?)?;
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
-            let ng = r.u32()? as usize;
-            let mut groups = Vec::with_capacity(ng);
+            let name = String::from_utf8(r.bytes("tensor name")?)
+                .map_err(|_| anyhow::Error::new(FormatError::Invalid("tensor name not utf-8".into())))?;
+            let rows = r.u32("tensor rows")? as usize;
+            let cols = r.u32("tensor cols")? as usize;
+            let ng = r.u32("group count")? as usize;
+            let mut groups = Vec::with_capacity(ng.min(1 << 20));
             for _ in 0..ng {
-                let tag = r.u8()?;
-                let bits = r.u8()?;
-                let grows = r.u32()? as usize;
-                let gcols = r.u32()? as usize;
-                let r0 = r.u32()? as usize;
-                let c0 = r.u32()? as usize;
-                let cbits = r.u8()?;
-                let cn = r.u32()? as usize;
-                let cdata = r.bytes()?;
-                let side = read_side(&mut r)?;
+                let tag = r.u8("method tag")?;
+                let bits = r.u8("group bits")?;
+                let grows = r.u32("group rows")? as usize;
+                let gcols = r.u32("group cols")? as usize;
+                let r0 = r.u32("group row offset")? as usize;
+                let c0 = r.u32("group col offset")? as usize;
+                let codes = read_payload(r, version)?;
+                let side = read_side(r)?;
                 groups.push((
                     r0,
                     c0,
@@ -326,7 +601,7 @@ impl QuantizedModel {
                         bits,
                         rows: grows,
                         cols: gcols,
-                        codes: PackedCodes { bits: cbits, n: cn, data: cdata },
+                        codes,
                         side,
                     },
                 ));
@@ -340,22 +615,25 @@ impl QuantizedModel {
         self.tensors.iter().find(|t| t.name == name)
     }
 
-    /// Whole-model average bits per quantized weight.
+    /// Whole-model average nominal bits per quantized weight.
     pub fn avg_bits(&self) -> f64 {
         let bits: usize = self.tensors.iter().map(|t| t.payload_bits()).sum();
         let weights: usize = self.tensors.iter().map(|t| t.rows * t.cols).sum();
         bits as f64 / weights.max(1) as f64
     }
 
-    /// Total size accounting: (payload_bytes, side_bytes).
+    /// Total size accounting: (payload_bytes, side_bytes). Payload is the
+    /// true stored size — compressed for entropy-coded groups.
     pub fn size_bytes(&self) -> (usize, usize) {
-        let payload = self
-            .tensors
-            .iter()
-            .map(|t| t.groups.iter().map(|(_, _, g)| g.codes.payload_bytes()).sum::<usize>())
-            .sum();
+        let payload = self.tensors.iter().map(|t| t.payload_bytes()).sum();
         let side = self.tensors.iter().map(|t| t.side_bytes()).sum();
         (payload, side)
+    }
+
+    /// What the codes would occupy fixed-width — the entropy-saving
+    /// baseline (`glvq info --container` reports both).
+    pub fn fixed_payload_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.fixed_payload_bytes()).sum()
     }
 }
 
@@ -372,7 +650,7 @@ mod tests {
             bits: 2,
             rows: 8,
             cols: 8,
-            codes: PackedCodes::pack(&codes, 2),
+            codes: PackedCodes::pack(&codes, 2).into(),
             side: SideInfo::Lattice {
                 d: 8,
                 g: (0..64).map(|i| i as f32 * 0.01).collect(),
@@ -385,7 +663,7 @@ mod tests {
             bits: 2,
             rows: 8,
             cols: 8,
-            codes: PackedCodes::pack(&codes, 2),
+            codes: PackedCodes::pack(&codes, 2).into(),
             side: SideInfo::Uniform { scale: 0.02, zero: 0.0 },
         };
         QuantizedModel {
@@ -398,11 +676,27 @@ mod tests {
         }
     }
 
+    /// The sample model with every payload entropy-coded (forces v2).
+    fn sample_model_entropy() -> QuantizedModel {
+        let mut m = sample_model();
+        for t in &mut m.tensors {
+            for (_, _, g) in &mut t.groups {
+                g.codes = g.codes.to_entropy(16, 2);
+            }
+        }
+        m
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("glvq_fmt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn save_load_roundtrip() {
         let m = sample_model();
-        let dir = std::env::temp_dir().join(format!("glvq_fmt_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("v1");
         let p = dir.join("m.glvq");
         m.save(&p).unwrap();
         let loaded = QuantizedModel::load(&p).unwrap();
@@ -411,17 +705,123 @@ mod tests {
     }
 
     #[test]
-    fn corruption_detected() {
+    fn all_fixed_models_stay_on_v1() {
         let m = sample_model();
-        let dir = std::env::temp_dir().join(format!("glvq_fmt_c_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(m.container_version(), VERSION_V1);
+        let dir = tmp_dir("v1b");
         let p = dir.join("m.glvq");
         m.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..4], b"GLVQ");
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION_V1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_roundtrips_entropy_and_mixed_payloads() {
+        // all-entropy
+        let m = sample_model_entropy();
+        assert_eq!(m.container_version(), VERSION_V2);
+        let dir = tmp_dir("v2");
+        let p = dir.join("m.glvq");
+        m.save(&p).unwrap();
+        let loaded = QuantizedModel::load(&p).unwrap();
+        assert_eq!(m, loaded);
+
+        // mixed: one fixed + one entropy group in the same tensor
+        let mut mixed = sample_model();
+        mixed.tensors[0].groups[1].2.codes =
+            mixed.tensors[0].groups[1].2.codes.to_entropy(16, 4);
+        assert_eq!(mixed.container_version(), VERSION_V2);
+        mixed.save(&p).unwrap();
+        let loaded = QuantizedModel::load(&p).unwrap();
+        assert_eq!(mixed, loaded);
+
+        // write→read→write→read is stable
+        let p2 = dir.join("m2.glvq");
+        loaded.save(&p2).unwrap();
+        assert_eq!(QuantizedModel::load(&p2).unwrap(), loaded);
+        assert_eq!(std::fs::read(&p).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn entropy_payload_decodes_identically() {
+        let m = sample_model();
+        let me = sample_model_entropy();
+        for (t, te) in m.tensors.iter().zip(&me.tensors) {
+            for ((_, _, g), (_, _, ge)) in t.groups.iter().zip(&te.groups) {
+                assert_eq!(g.codes.unpack(), ge.codes.unpack());
+                assert_eq!(g.dequantize().data, ge.dequantize().data);
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = sample_model_entropy();
+        let dir = tmp_dir("c");
+        let p = dir.join("m.glvq");
+        m.save(&p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // flip one byte at every eighth position — every corruption must be
+        // rejected (structured parse error or CRC mismatch), never OK
+        for pos in (4..clean.len()).step_by(8) {
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 0x55;
+            std::fs::write(&p, &bytes).unwrap();
+            assert!(QuantizedModel::load(&p).is_err(), "corruption at {pos} accepted");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn structured_errors_are_matchable() {
+        let dir = tmp_dir("e");
+        let p = dir.join("m.glvq");
+
+        // bad magic
+        std::fs::write(&p, b"NOPE0000000000").unwrap();
+        let err = QuantizedModel::load(&p).unwrap_err();
+        assert_eq!(err.downcast_ref::<FormatError>(), Some(&FormatError::BadMagic));
+
+        // unsupported version
+        let m = sample_model();
+        m.save(&p).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
-        let mid = bytes.len() / 2;
-        bytes[mid] ^= 0x55;
+        bytes[4] = 9; // version word
+        let body_end = bytes.len() - 4;
+        let crc = crc32(&bytes[4..body_end]);
+        bytes[body_end..].copy_from_slice(&crc.to_le_bytes());
         std::fs::write(&p, &bytes).unwrap();
-        assert!(QuantizedModel::load(&p).is_err());
+        let err = QuantizedModel::load(&p).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FormatError>(),
+            Some(&FormatError::UnsupportedVersion(9))
+        );
+
+        // CRC mismatch (flip a bit in the stored checksum itself)
+        m.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = QuantizedModel::load(&p).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<FormatError>(), Some(FormatError::CrcMismatch { .. })),
+            "{err:?}"
+        );
+
+        // truncation
+        m.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let err = QuantizedModel::load(&p).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<FormatError>(), Some(FormatError::Truncated(_))),
+            "{err:?}"
+        );
+
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -448,5 +848,6 @@ mod tests {
         let (payload, side) = m.size_bytes();
         assert_eq!(payload, 2 * 64 * 2 / 8);
         assert_eq!(side, (2 * 64 + 4) + 4);
+        assert_eq!(m.fixed_payload_bytes(), payload);
     }
 }

@@ -9,4 +9,4 @@ pub mod pack;
 pub mod traits;
 
 pub use pack::PackedCodes;
-pub use traits::{GroupQuantizer, QuantizedGroup, SideInfo};
+pub use traits::{CodePayload, GroupQuantizer, QuantizedGroup, SideInfo};

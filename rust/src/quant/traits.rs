@@ -8,8 +8,121 @@
 //! reproduce exactly what the runtime streaming decoder computes.
 
 use crate::compand::MuLaw;
+use crate::entropy::RansCodes;
 use crate::linalg::Mat;
 use crate::quant::pack::PackedCodes;
+
+/// The stored form of a group's integer codes — the abstraction every
+/// compressed-payload backend plugs into.
+///
+/// - [`CodePayload::Fixed`]: bit-packed `m·n·b/8` payload (Eq. 26, the
+///   paper's convention; rate is exactly `bits` per weight).
+/// - [`CodePayload::Rans`]: entropy-coded chunks
+///   ([`crate::entropy::stream::RansCodes`]) whose size tracks the codes'
+///   empirical entropy — smaller files at equal nominal bits.
+///
+/// Both variants decode to the identical code vector, so every decode
+/// path (dense dequantize, streaming matvec) is payload-agnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodePayload {
+    Fixed(PackedCodes),
+    Rans(RansCodes),
+}
+
+impl From<PackedCodes> for CodePayload {
+    fn from(p: PackedCodes) -> CodePayload {
+        CodePayload::Fixed(p)
+    }
+}
+
+impl From<RansCodes> for CodePayload {
+    fn from(r: RansCodes) -> CodePayload {
+        CodePayload::Rans(r)
+    }
+}
+
+impl CodePayload {
+    pub fn bits(&self) -> u8 {
+        match self {
+            CodePayload::Fixed(p) => p.bits,
+            CodePayload::Rans(r) => r.bits,
+        }
+    }
+
+    /// Number of codes stored.
+    pub fn n(&self) -> usize {
+        match self {
+            CodePayload::Fixed(p) => p.n,
+            CodePayload::Rans(r) => r.n,
+        }
+    }
+
+    pub fn is_entropy(&self) -> bool {
+        matches!(self, CodePayload::Rans(_))
+    }
+
+    /// True on-disk payload size (codes only, excluding side info).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            CodePayload::Fixed(p) => p.payload_bytes(),
+            CodePayload::Rans(r) => r.payload_bytes(),
+        }
+    }
+
+    /// What the payload would cost fixed-width (`⌈n·b/8⌉`) — the baseline
+    /// for entropy-saving reports.
+    pub fn fixed_payload_bytes(&self) -> usize {
+        (self.n() * self.bits() as usize).div_ceil(8)
+    }
+
+    /// Payload bytes touched when decoding `[start, start+len)` — the
+    /// bytes-moved model for streaming decode stats. Fixed payloads are
+    /// bit-granular; rANS payloads are chunk-granular (plus the frequency
+    /// table with the first chunk).
+    pub fn range_payload_bytes(&self, start: usize, len: usize) -> usize {
+        match self {
+            CodePayload::Fixed(p) => (len * p.bits as usize).div_ceil(8),
+            CodePayload::Rans(r) => r.range_payload_bytes(start, len),
+        }
+    }
+
+    /// Decode all codes.
+    pub fn unpack(&self) -> Vec<i32> {
+        match self {
+            CodePayload::Fixed(p) => p.unpack(),
+            CodePayload::Rans(r) => r.decode(),
+        }
+    }
+
+    /// Decode all codes into a caller buffer (`len == n`).
+    pub fn unpack_into(&self, out: &mut [i32]) {
+        match self {
+            CodePayload::Fixed(p) => p.unpack_into(out),
+            CodePayload::Rans(r) => r.decode_into(out),
+        }
+    }
+
+    /// Decode the sub-range `[start, start+out.len())` — the streaming
+    /// decoder's entry point, valid for both variants.
+    pub fn unpack_range_into(&self, start: usize, out: &mut [i32]) {
+        match self {
+            CodePayload::Fixed(p) => p.unpack_range_into(start, out),
+            CodePayload::Rans(r) => r.decode_range_into(start, out),
+        }
+    }
+
+    /// Re-encode as an entropy-coded payload (lossless; no-op if already
+    /// entropy-coded). `chunk_len` should be a multiple of the group width
+    /// so streamed panels touch whole chunks.
+    pub fn to_entropy(&self, chunk_len: usize, lanes: u8) -> CodePayload {
+        match self {
+            CodePayload::Fixed(p) => {
+                CodePayload::Rans(RansCodes::encode(&p.unpack(), p.bits, chunk_len, lanes))
+            }
+            CodePayload::Rans(_) => self.clone(),
+        }
+    }
+}
 
 /// Per-group side information — the "extra storage" Table 5 accounts for.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,7 +176,7 @@ pub struct QuantizedGroup {
     pub bits: u8,
     pub rows: usize,
     pub cols: usize,
-    pub codes: PackedCodes,
+    pub codes: CodePayload,
     pub side: SideInfo,
 }
 
@@ -136,7 +249,7 @@ impl QuantizedGroup {
             }
             SideInfo::Codebook { dim, centers } => {
                 let dim = *dim;
-                let lo = crate::quant::pack::code_range(self.codes.bits).0;
+                let lo = crate::quant::pack::code_range(self.codes.bits()).0;
                 let blocks = self.rows * self.cols / dim;
                 for b in 0..blocks {
                     let idx = (codes[b] - lo) as usize;
@@ -277,7 +390,7 @@ mod tests {
             bits: 2,
             rows: 2,
             cols: 2,
-            codes: PackedCodes::pack(&codes, 2),
+            codes: PackedCodes::pack(&codes, 2).into(),
             side: SideInfo::Uniform { scale: 0.5, zero: 0.1 },
         };
         let m = qg.dequantize();
@@ -298,7 +411,7 @@ mod tests {
             bits: 3,
             rows: 1,
             cols: 4,
-            codes: PackedCodes::pack(&codes, 3),
+            codes: PackedCodes::pack(&codes, 3).into(),
             side: SideInfo::Lattice { d, g: vec![s, 0.0, 0.0, s], mu, scale: 0.5 },
         };
         let m = qg.dequantize();
@@ -322,7 +435,7 @@ mod tests {
             bits: 1,
             rows: 1,
             cols: 4,
-            codes: PackedCodes::pack(&stored, 1),
+            codes: PackedCodes::pack(&stored, 1).into(),
             side: SideInfo::Codebook { dim: 2, centers: centers.clone() },
         };
         let got = qg.dequantize();

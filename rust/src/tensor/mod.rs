@@ -167,8 +167,7 @@ impl TensorStore {
     }
 }
 
-/// CRC-32 (IEEE 802.3, reflected) — table-driven.
-pub fn crc32(data: &[u8]) -> u32 {
+fn crc32_table() -> &'static [u32; 256] {
     static mut TABLE: [u32; 256] = [0; 256];
     static INIT: std::sync::Once = std::sync::Once::new();
     INIT.call_once(|| unsafe {
@@ -180,12 +179,46 @@ pub fn crc32(data: &[u8]) -> u32 {
             TABLE[i as usize] = c;
         }
     });
-    let table = unsafe { &*std::ptr::addr_of!(TABLE) };
-    let mut crc = 0xFFFFFFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    unsafe { &*std::ptr::addr_of!(TABLE) }
+}
+
+/// Incremental CRC-32 (IEEE 802.3, reflected) — lets readers verify a
+/// container checksum while streaming instead of buffering the whole file.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
     }
-    crc ^ 0xFFFFFFFF
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFFFFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let table = crc32_table();
+        let mut crc = self.state;
+        for &b in data {
+            crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+        }
+        self.state = crc;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFFFFFF
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) of a whole buffer.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finalize()
 }
 
 #[cfg(test)]
@@ -198,6 +231,17 @@ mod tests {
         // CRC32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_incremental_matches_one_shot() {
+        let data: Vec<u8> = (0..997u32).map(|i| (i * 31 % 251) as u8).collect();
+        for split in [0usize, 1, 13, 500, 996, 997] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finalize(), crc32(&data), "split {split}");
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ fn full_chain_all_methods_roundtrip_through_disk() {
 
     for method in ["rtn", "gptq", "omniquant_lite", "kmeans_vq", "quip_lite", "tcq"] {
         let q = baselines::by_name(method).unwrap();
-        let opts = PipelineOpts { group_size: 64, target_bits: 3.0, bit_allocation: false, threads: 2 };
+        let opts = PipelineOpts { group_size: 64, target_bits: 3.0, bit_allocation: false, threads: 2, ..Default::default() };
         let (qm, report) = quantize_model(&specs, &store, &calib, &*q, &opts).unwrap();
         assert!(report.total_recon_error().is_finite(), "{method}");
 
@@ -77,7 +77,7 @@ fn glvq_chain_with_sdba_hits_rate_and_beats_rtn() {
     gcfg.group_size = 64;
     gcfg.iters = 10;
     let glvq = GlvqGroupQuantizer::new(gcfg);
-    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: true, threads: 2 };
+    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: true, threads: 2, ..Default::default() };
     let (qm, rep_glvq) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
 
     // SDBA must keep the exact mean rate
@@ -104,7 +104,7 @@ fn streaming_decoder_agrees_with_dense_on_full_model() {
     gcfg.group_size = 64;
     gcfg.iters = 6;
     let glvq = GlvqGroupQuantizer::new(gcfg);
-    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: false, threads: 2 };
+    let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: false, threads: 2, ..Default::default() };
     let (qm, _) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
 
     let mut sm = StreamingMatvec::new(8);
@@ -137,7 +137,7 @@ fn quantization_error_visible_in_model_loss_ordering() {
 
     let mut nlls = Vec::new();
     for bits in [4.0, 2.0, 1.0] {
-        let opts = PipelineOpts { group_size: 64, target_bits: bits, bit_allocation: false, threads: 2 };
+        let opts = PipelineOpts { group_size: 64, target_bits: bits, bit_allocation: false, threads: 2, ..Default::default() };
         let (qm, _) = quantize_model(&specs, &store, &calib, &*rtn, &opts).unwrap();
         let dq = dequantized_store(&qm, &store);
         nlls.push(native_fwd::nll_sum(&cfg, &dq, &x, &y, 2).unwrap());
@@ -162,4 +162,106 @@ fn pipeline_rejects_mismatched_calibration() {
     let rtn = baselines::by_name("rtn").unwrap();
     let opts = PipelineOpts::default();
     assert!(quantize_model(&specs, &store, &calib, &*rtn, &opts).is_err());
+}
+
+#[test]
+fn entropy_container_v2_roundtrips_and_streams_exactly() {
+    // the ISSUE acceptance chain: quantize with --entropy → .glvq v2 on
+    // disk → load → identical reconstruction, and the streaming matvec
+    // over the entropy-coded tensor matches full dequantize + dense matvec
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let mut store = init_params(&cfg, 21);
+    // heavy-tailed weights → peaked Babai codes → real compression
+    let mut rng = Rng::new(22);
+    for name in cfg.quantizable_names() {
+        let t = store.entries.get_mut(&name).unwrap();
+        for v in t.data.iter_mut() {
+            *v = rng.student_t(4.0) as f32 * 0.02;
+        }
+    }
+    let calib = CalibSet::random(&specs, 32, 23);
+    let mut gcfg = GlvqConfig::default();
+    gcfg.lattice_dim = 8;
+    gcfg.group_size = 64;
+    gcfg.iters = 8;
+    let glvq = GlvqGroupQuantizer::new(gcfg);
+    // 3 bits: the post-Babai histogram is clearly peaked vs the 8-symbol
+    // alphabet, so the compressed payload beats fixed-width with margin
+    let base = PipelineOpts {
+        group_size: 64,
+        target_bits: 3.0,
+        bit_allocation: false,
+        threads: 2,
+        ..Default::default()
+    };
+    let ent = PipelineOpts { entropy: true, ..base.clone() };
+    let (qm_fixed, _) = quantize_model(&specs, &store, &calib, &glvq, &base).unwrap();
+    let (qm, _) = quantize_model(&specs, &store, &calib, &glvq, &ent).unwrap();
+    assert!(qm.has_entropy_payloads());
+
+    let dir = std::env::temp_dir().join(format!("glvq_v2_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m_entropy.glvq");
+    qm.save(&path).unwrap();
+    // on-disk version is 2; the v1 writer path is byte-compatible elsewhere
+    let header = std::fs::read(&path).unwrap();
+    assert_eq!(u32::from_le_bytes(header[4..8].try_into().unwrap()), 2);
+
+    let loaded = QuantizedModel::load(&path).unwrap();
+    assert_eq!(qm, loaded, "v2 container not round-trip stable");
+
+    // lossless vs the fixed-width container, and actually smaller on
+    // heavy-tailed codes
+    let mut sm = StreamingMatvec::new(8);
+    let mut rng = Rng::new(24);
+    for (qt, qtf) in loaded.tensors.iter().zip(&qm_fixed.tensors) {
+        let dense = qt.dequantize();
+        assert_eq!(dense.data, qtf.dequantize().data, "{}", qt.name);
+        let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
+        let want = dense.matvec(&x);
+        let mut y = vec![0.0f32; qt.rows];
+        let mut stats = DecodeStats::default();
+        sm.matvec(qt, &x, &mut y, &mut stats);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{}: {a} vs {b}", qt.name);
+        }
+    }
+    let (payload_e, _) = loaded.size_bytes();
+    let (payload_f, _) = qm_fixed.size_bytes();
+    assert!(
+        payload_e < payload_f,
+        "entropy payload {payload_e} not smaller than fixed {payload_f}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v1_containers_from_the_seed_writer_still_load() {
+    // all-fixed models save as v1 — the exact seed-era byte format — and
+    // must keep loading plus match the original model
+    let cfg = tiny_cfg();
+    let specs = cfg.param_specs();
+    let store = init_params(&cfg, 31);
+    let calib = CalibSet::random(&specs, 16, 32);
+    let rtn = baselines::by_name("rtn").unwrap();
+    let opts = PipelineOpts {
+        group_size: 64,
+        target_bits: 3.0,
+        bit_allocation: false,
+        threads: 2,
+        ..Default::default()
+    };
+    let (qm, _) = quantize_model(&specs, &store, &calib, &*rtn, &opts).unwrap();
+    assert!(!qm.has_entropy_payloads());
+
+    let dir = std::env::temp_dir().join(format!("glvq_v1_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m_v1.glvq");
+    qm.save(&path).unwrap();
+    let header = std::fs::read(&path).unwrap();
+    assert_eq!(u32::from_le_bytes(header[4..8].try_into().unwrap()), 1);
+    let loaded = QuantizedModel::load(&path).unwrap();
+    assert_eq!(qm, loaded);
+    std::fs::remove_dir_all(&dir).ok();
 }

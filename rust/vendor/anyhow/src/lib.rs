@@ -1,0 +1,288 @@
+//! Vendored minimal reimplementation of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository is fully offline, so the real
+//! crates.io `anyhow` cannot be fetched. This crate provides the exact
+//! subset the workspace uses, with the same semantics:
+//!
+//! - [`Error`]: an opaque, `Send + Sync` error value wrapping any
+//!   `std::error::Error`, with a source chain and chain-walking
+//!   [`Error::downcast_ref`].
+//! - [`Result`]: `std::result::Result` defaulted to [`Error`].
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, attaching a message while preserving the source chain.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros (format-string forms).
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` itself — that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// An opaque error value with a source chain.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message error (what `anyhow!`/`bail!` produce).
+struct MessageError(String);
+
+impl Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context layer wrapping an underlying error.
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.context, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let src: &(dyn StdError + 'static) = &*self.source;
+        Some(src)
+    }
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Attach a context message, keeping `self` as the source.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error {
+            inner: Box::new(ContextError { context: context.to_string(), source: self.inner }),
+        }
+    }
+
+    /// Find the first error of type `E` anywhere in the source chain
+    /// (the outermost context layer first).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let first: &(dyn StdError + 'static) = &*self.inner;
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(first);
+        while let Some(err) = cur {
+            if let Some(hit) = err.downcast_ref::<E>() {
+                return Some(hit);
+            }
+            cur = err.source();
+        }
+        None
+    }
+
+    /// The outermost message (without the source chain).
+    pub fn to_string_outer(&self) -> String {
+        self.inner.to_string()
+    }
+
+    /// Iterate over the source chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        let first: &(dyn StdError + 'static) = &*self.inner;
+        Chain { next: Some(first) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(src) = cur.source() {
+            cur = src;
+        }
+        cur
+    }
+}
+
+/// Iterator over an error's source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.inner, f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(err) = source {
+            write!(f, "\n    {err}")?;
+            source = err.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `std::result::Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Leaf(u32);
+
+    impl Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf {}", self.0)
+        }
+    }
+
+    impl StdError for Leaf {}
+
+    #[test]
+    fn from_and_downcast_through_context() {
+        let err: Error = Error::new(Leaf(7)).context("outer").context("outermost");
+        assert_eq!(err.to_string(), "outermost");
+        assert_eq!(err.downcast_ref::<Leaf>(), Some(&Leaf(7)));
+        assert_eq!(err.root_cause().to_string(), "leaf 7");
+        assert_eq!(err.chain().count(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let v = String::from_utf8(vec![0xff])?;
+            Ok(v)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<u32> = None;
+        let e = missing.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+
+        fn failing(x: u32) -> Result<u32> {
+            ensure!(x > 2, "x too small: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(failing(2).unwrap_err().to_string(), "x too small: 2");
+        assert_eq!(failing(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(failing(4).unwrap(), 4);
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let err = Error::new(Leaf(1)).context("ctx");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("ctx") && dbg.contains("Caused by") && dbg.contains("leaf 1"), "{dbg}");
+    }
+}

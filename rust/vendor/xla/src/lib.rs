@@ -1,0 +1,262 @@
+//! Host-side stub of the `xla` PJRT binding API.
+//!
+//! The build environment is fully offline and does not ship the native
+//! `xla_extension` runtime, so this crate provides the exact API surface
+//! `glvq::runtime` uses with two behaviours:
+//!
+//! - **Host-side literal math is real**: [`Literal`] construction, reshape,
+//!   element access and conversion round-trip exactly (unit-testable
+//!   without any native library).
+//! - **Device paths return a structured error**: compiling an HLO module,
+//!   uploading buffers, and executing all fail with a clear
+//!   "PJRT runtime unavailable" [`Error`]. Callers that probe for
+//!   artifacts (`Engine::new` + `engine.load(..)`) degrade gracefully —
+//!   integration tests print their SKIP message exactly as they do when
+//!   the artifacts directory is absent.
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! AOT-artifact execution paths with no source changes in `glvq`.
+
+use std::fmt;
+
+/// Error type for all stubbed operations.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        msg: format!(
+            "{what}: PJRT/XLA native runtime unavailable (vendored stub `xla` crate; \
+             link the real xla bindings to enable device execution)"
+        ),
+    }
+}
+
+fn err(msg: String) -> Error {
+    Error { msg }
+}
+
+// ---------------------------------------------------------------------------
+// Literals (fully functional host-side)
+// ---------------------------------------------------------------------------
+
+/// Element payload: the two dtypes the workspace uses. Public only because
+/// the [`NativeType`] trait methods mention it; not part of the stable API.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Sealed-ish dtype trait for generic literal accessors.
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Payload;
+    fn slice(p: &Payload) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Payload {
+        Payload::F32(v)
+    }
+    fn slice(p: &Payload) -> Option<&[f32]> {
+        match p {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Payload {
+        Payload::I32(v)
+    }
+    fn slice(p: &Payload) -> Option<&[i32]> {
+        match p {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host literal: typed buffer + dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { payload: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.payload.len() {
+            return Err(err(format!(
+                "reshape: {} elements into shape {:?}",
+                self.payload.len(),
+                dims
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.payload)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| err("to_vec: dtype mismatch".to_string()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.payload)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| err("get_first_element: empty or dtype mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal — only device executions produce tuples,
+    /// so in the stub this is unreachable through working code paths.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![v]), dims: vec![] }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT objects (stubbed device paths)
+// ---------------------------------------------------------------------------
+
+/// Stub PJRT client. Construction succeeds (so manifest parsing and
+/// inventory paths work); any device operation errors.
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+/// Stub device buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Stub HLO module proto. Parsing always reports the runtime unavailable —
+/// callers treat it exactly like a missing artifact.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals_and_scalars() {
+        let l = Literal::vec1(&[5i32, 6]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, 6]);
+        let s = Literal::from(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let e = c.buffer_from_host_literal(None, &Literal::from(0.0)).unwrap_err();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
