@@ -1,4 +1,5 @@
-//! End-to-end driver (DESIGN.md §6): proves all three layers compose.
+//! **What it demonstrates:** the end-to-end driver (DESIGN.md §6) proving
+//! all three layers compose:
 //!
 //!   1. generate a synthetic corpus (rust data substrate),
 //!   2. TRAIN a transformer for a few hundred steps through the AOT
@@ -8,6 +9,12 @@
 //!   4. QUANTIZE with GLVQ (SDBA + companding) and with RTN at 2 bits,
 //!   5. EVALUATE perplexity fp32 vs RTN vs GLVQ via the ForwardLoss HLO,
 //!   6. SERVE three batched generate requests through the L3 server.
+//!
+//! **Expected output:** staged `=== [k/4] ... ===` progress lines, a 2-bit
+//! wiki-perplexity comparison where GLVQ beats RTN (asserted), server
+//! metrics, and a final `e2e compress: OK`; exits 0. Requires trained
+//! artifacts (`make artifacts`) — offline builds fail at step 1 with the
+//! structured PJRT-unavailable error.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_compress`
 //! (pass `--model m` for the larger model; results land in runs/e2e/)

@@ -1,9 +1,15 @@
-//! Quickstart: quantize one weight group with GLVQ and inspect the result.
+//! **What it demonstrates:** the core public API at group granularity —
+//! quantize one heavy-tailed weight group with GLVQ (learned lattice +
+//! learned μ-law companding, paper Alg. 1) and compare its reconstruction
+//! error against the RTN floor at 2/3/4 bits. The full-model pipeline is
+//! shown in `e2e_compress.rs`.
+//!
+//! **Expected output:** one line per bit width showing GLVQ error well
+//! below RTN (`glvq/rtn` ratio < 1.0, typically 0.3–0.7), followed by the
+//! payload/side-info byte split; exits 0. Runs offline — no artifacts or
+//! PJRT needed.
 //!
 //! Run: `cargo run --release --example quickstart`
-//!
-//! Demonstrates the core public API at group granularity — the full-model
-//! pipeline is shown in `e2e_compress.rs`.
 
 use glvq::baselines::rtn::RtnQuantizer;
 use glvq::config::GlvqConfig;

@@ -1,14 +1,27 @@
-//! Serving example: load a quantized container from disk, run the streaming
-//! decoder sanity check, then serve a batch of mixed generate/score
-//! requests and report latency/throughput metrics.
+//! **What it demonstrates:** serving directly from a compressed `.glvq`
+//! container — load (or build) a quantized model, sanity-check the batched
+//! multi-threaded streaming decoder against the decode-stats model, then
+//! serve a burst of mixed generate/score requests through
+//! `StreamingNativeBackend`, which runs every linear layer panel-by-panel
+//! from the compressed codes (no layer is ever fully dequantized).
 //!
-//! Run: `cargo run --release --example serve_quantized [-- --model s]`
+//! **Expected output** (values vary with hardware/seed): a "streaming
+//! decode" line reporting MB touched per token-batch and a peak panel far
+//! below the layer size, then a metrics line like
+//! `served 8 generates + 4 scores: requests=12 tokens=... tok/s=...
+//! decoded=...MB peak_panel=...elems`, and exit code 0.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_quantized
+//! [-- --model s]`  (needs trained checkpoints, i.e. a PJRT-enabled build)
 
-use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
-use glvq::coordinator::server::{self, NativeBackend, Request, Response, ServerOpts};
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::coordinator::scheduler;
+use glvq::coordinator::server::{
+    self, Request, Response, ServerOpts, StreamingNativeBackend,
+};
 use glvq::exp::Workspace;
-use glvq::glvq::pipeline::dequantized_store;
 use glvq::info;
+use glvq::linalg::Mat;
 use glvq::quant::format::QuantizedModel;
 use glvq::util::rng::Rng;
 
@@ -27,33 +40,46 @@ fn main() -> anyhow::Result<()> {
         info!("loading container {}", path.display());
         QuantizedModel::load(&path)?
     } else {
-        let (qm, _) = ws.quantize(&model, "glvq-8d", 2.0, None)?;
+        // container-only quantization: no dense dequantized copy is built
+        let qm = ws.quantize_container(&model, "glvq-8d", 2.0, None)?;
         qm.save(&path)?;
         info!("wrote container {}", path.display());
         qm
     };
 
-    // streaming-decode sanity: one token's dequant-GEMV through every layer
-    let mut sm = StreamingMatvec::new(16);
+    // streaming-decode sanity: one batch of 4 "tokens" through every
+    // layer; each group-panel is decoded exactly once for the whole batch
+    let threads = scheduler::default_threads();
+    let engine = StreamingMatmul::new(16, threads);
     let mut stats = DecodeStats::default();
     let mut rng = Rng::new(3);
     for qt in &qm.tensors {
-        let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
-        let mut y = vec![0.0f32; qt.rows];
-        sm.matvec(qt, &x, &mut y, &mut stats);
+        let x = Mat::random_normal(4, qt.cols, 1.0, &mut rng);
+        let mut y = Mat::zeros(4, qt.rows);
+        engine.matmul(qt, &x, &mut y, &mut stats);
     }
     info!(
-        "streaming decode: {} tensors, {:.2} MB touched/token, peak panel {} elems",
+        "streaming decode: {} tensors on {} threads, {:.2} MB touched/batch, peak panel {} elems",
         qm.tensors.len(),
+        threads,
         stats.total_bytes() as f64 / 1e6,
-        qm.tensors.iter().map(|t| sm.peak_panel_elems(t)).max().unwrap_or(0)
+        qm.tensors.iter().map(|t| engine.peak_panel_elems(t)).max().unwrap_or(0)
     );
 
-    // serve a burst of requests over the dequantized model
-    let dq = dequantized_store(&qm, &store);
+    // serve a burst of requests straight from the compressed weights: the
+    // server drains them into lockstep batches, so every decode is
+    // amortized across all concurrently-active sequences
     let cfg = ws.model_cfg(&model)?;
     let handle = server::start(
-        move || Ok(Box::new(NativeBackend { cfg, store: dq }) as Box<_>),
+        move || {
+            Ok(Box::new(StreamingNativeBackend {
+                cfg,
+                store,
+                qm,
+                engine: StreamingMatmul::new(16, threads),
+                stats: DecodeStats::default(),
+            }) as Box<_>)
+        },
         ServerOpts { max_batch: 8 },
     );
     let mut rxs = Vec::new();

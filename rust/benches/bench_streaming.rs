@@ -1,0 +1,147 @@
+//! Bench: the batched multi-threaded streaming serving engine
+//! (`StreamingMatmul`) — tokens/s and bytes-moved across the
+//! {1,2,4} threads × {1,4,16} batch grid, on the same quantized model.
+//!
+//! One "token" is one activation row pushed through a quantized
+//! 512×512 layer (4 column groups of 128); a batch-B call therefore
+//! scores B tokens while decoding every group-panel exactly once. The
+//! 4-thread batch-16 cell must beat the 1-thread batch-1 baseline by
+//! ≥ 2× tokens/s (asserted for the decode-heavy GLVQ methods — that is
+//! the amortization the engine exists for).
+//!
+//! Results are appended to `runs/bench/streaming.json` so successive
+//! runs form a trajectory (`{"runs": [...]}`).
+//!
+//! Run: `cargo bench --bench bench_streaming`
+
+use glvq::baselines;
+use glvq::bench_support::Bencher;
+use glvq::config::GlvqConfig;
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::linalg::Mat;
+use glvq::quant::format::QuantizedTensor;
+use glvq::quant::traits::GroupQuantizer;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+const DIM: usize = 512;
+const GROUP: usize = 128;
+
+fn build(method: &str, bits: u8) -> QuantizedTensor {
+    let mut rng = Rng::new(2);
+    let wt = Mat::random_normal(DIM, DIM, 0.02, &mut rng);
+    let x = Mat::random_normal(GROUP, 64, 1.0, &mut rng);
+    let mut groups = Vec::new();
+    for gi in 0..DIM / GROUP {
+        let panel = wt.slice(0, DIM, gi * GROUP, (gi + 1) * GROUP);
+        let qg = if let Some(q) = baselines::by_name(method) {
+            q.quantize(&panel, &x, bits)
+        } else {
+            let mut cfg = GlvqConfig::default();
+            cfg.lattice_dim = 8;
+            cfg.iters = 4;
+            GlvqGroupQuantizer::new(cfg).quantize(&panel, &x, bits)
+        };
+        groups.push((0usize, gi * GROUP, qg));
+    }
+    QuantizedTensor { name: method.into(), rows: DIM, cols: DIM, groups }
+}
+
+/// Losslessly re-encode every group with the rANS backend (chunk = 8 rows).
+fn to_entropy(qt: &QuantizedTensor) -> QuantizedTensor {
+    let mut out = qt.clone();
+    for (_, _, g) in &mut out.groups {
+        g.codes = g.codes.to_entropy(g.cols * 8, 4);
+    }
+    out
+}
+
+fn main() {
+    let b = Bencher { warmup_iters: 1, min_iters: 3, budget_ms: 200.0 };
+    println!("# streaming serving engine: {DIM}x{DIM} layer, 2-bit, threads x batch grid");
+    let mut entries: Vec<Json> = Vec::new();
+
+    let variants: Vec<(String, QuantizedTensor)> = {
+        let glvq = build("glvq-8d", 2);
+        let rans = to_entropy(&glvq);
+        vec![
+            ("rtn".to_string(), build("rtn", 2)),
+            ("glvq-8d".to_string(), glvq),
+            ("glvq-8d+rans".to_string(), rans),
+        ]
+    };
+
+    for (method, qt) in &variants {
+        let mut rng = Rng::new(3);
+        let mut baseline_tok_s = 0.0f64;
+        let mut best_tok_s = 0.0f64;
+        for &threads in &[1usize, 2, 4] {
+            for &batch in &[1usize, 4, 16] {
+                let engine = StreamingMatmul::new(16, threads);
+                let x = Mat::random_normal(batch, DIM, 1.0, &mut rng);
+                let mut y = Mat::zeros(batch, DIM);
+                // one primed call to capture the per-call byte traffic
+                let mut stats = DecodeStats::default();
+                engine.matmul(qt, &x, &mut y, &mut stats);
+                let bytes_per_tok = stats.total_bytes() as f64 / batch as f64;
+
+                let r = b.run(&format!("{method}/t{threads}/b{batch}"), batch as f64, || {
+                    let mut s = DecodeStats::default();
+                    engine.matmul(qt, &x, &mut y, &mut s);
+                    std::hint::black_box(&y);
+                });
+                let tok_s = r.throughput();
+                println!("{}   ({:.3} MB/token)", r.report(), bytes_per_tok / 1e6);
+                if threads == 1 && batch == 1 {
+                    baseline_tok_s = tok_s;
+                }
+                if threads == 4 && batch == 16 {
+                    best_tok_s = tok_s;
+                }
+                entries.push(Json::obj(vec![
+                    ("method", Json::str(method)),
+                    ("threads", Json::num(threads as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("tok_s", Json::num(tok_s)),
+                    ("bytes_per_tok", Json::num(bytes_per_tok)),
+                    ("peak_panel_elems", Json::num(engine.peak_panel_elems(qt) as f64)),
+                ]));
+            }
+        }
+        let speedup = best_tok_s / baseline_tok_s.max(1e-12);
+        println!("  {method}: 4-thread batch-16 vs 1-thread batch-1 = {speedup:.2}x tokens/s");
+        if method.starts_with("glvq") {
+            assert!(
+                speedup >= 2.0,
+                "{method}: batched multi-threaded engine only {speedup:.2}x over baseline"
+            );
+        }
+    }
+
+    // append this run to the bench JSON trajectory
+    let dir = std::path::Path::new("runs/bench");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("WARN cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join("streaming.json");
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
+    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(Json::obj(vec![
+        ("unix_time", Json::num(stamp as f64)),
+        ("measurements", Json::Arr(entries)),
+    ]));
+    doc.set("runs", Json::Arr(runs));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("appended trajectory point to {}", path.display()),
+        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
+    }
+}

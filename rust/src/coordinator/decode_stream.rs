@@ -3,20 +3,36 @@
 //! release the data immediately after use", bounding peak memory at
 //! activations + one sub-block panel instead of the whole dequantized layer.
 //!
-//! [`StreamingMatvec`] computes y = x · Wᵀ_q (paper orientation: quantized
-//! tensors store Wᵀ, m×n_in) one group-panel at a time from the packed
-//! codes, tracking exact bytes-touched so Table 4's MEM BW column can be
-//! reproduced as a bytes-moved model. Correctness oracle: full dequantize +
-//! dense matvec (tested for exact equality).
+//! [`StreamingMatmul`] is the serving engine: Y = X · Wᵀ_q for an
+//! activation batch X (B × n_in) against a quantized tensor storing Wᵀ
+//! (m × n_in). Each group-panel is decoded **exactly once per batch** —
+//! rANS chunk decode, Babai grid expansion and companding inversion are
+//! amortized across all B activation rows instead of paid per vector — and
+//! row-panel work items are distributed over
+//! [`crate::coordinator::scheduler::parallel_map`] worker threads, each
+//! with its own scratch buffers and [`DecodeStats`], merged after the
+//! join. Output is bit-identical for every batch size and thread count.
+//!
+//! [`StreamingMatvec`] is the single-vector convenience wrapper (B = 1,
+//! one thread) used by the Table-4 micro benches. Correctness oracle for
+//! both: per-group dense dequantize + matmul (tested for exact equality).
+//!
+//! [`DecodeStats`] tracks exact bytes-touched so Table 4's MEM BW column
+//! can be reproduced as a bytes-moved model, plus the peak decoded
+//! working set backing the paper's >10× peak-memory claim.
+
+use std::sync::Mutex;
 
 use crate::compand::MuLaw;
+use crate::coordinator::scheduler::parallel_map;
+use crate::entropy::histogram::DecodeTable;
 use crate::linalg::Mat;
 use crate::quant::format::QuantizedTensor;
 use crate::quant::pack::code_range;
-use crate::quant::traits::{hadamard_inverse, sign_vector, SideInfo};
+use crate::quant::traits::{hadamard_inverse, sign_vector, QuantizedGroup, SideInfo};
 
 /// Counters for the bytes-moved model (Table 4 MEM BW).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DecodeStats {
     /// code payload bytes read — the *true stored* bytes: bit-granular for
     /// fixed-width payloads, chunk-granular (stream + states + escapes +
@@ -30,16 +46,34 @@ pub struct DecodeStats {
     pub weights_decoded: usize,
     /// multiply-accumulate count
     pub macs: usize,
+    /// largest decode buffer materialized at any point (elements): the
+    /// peak decoded working set per worker — panel-sized for streaming
+    /// side-info families, whole-group for lookup/stateful fallbacks
+    pub peak_decoded: usize,
 }
 
 impl DecodeStats {
     pub fn total_bytes(&self) -> usize {
         self.code_bytes + self.side_bytes + self.act_bytes
     }
+
+    /// Fold another worker's counters into this one (sums; `peak_decoded`
+    /// takes the max). Merging per-thread stats in any order yields exactly
+    /// the single-thread totals — tested.
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.code_bytes += other.code_bytes;
+        self.side_bytes += other.side_bytes;
+        self.act_bytes += other.act_bytes;
+        self.weights_decoded += other.weights_decoded;
+        self.macs += other.macs;
+        self.peak_decoded = self.peak_decoded.max(other.peak_decoded);
+    }
 }
 
-/// Scratch buffers reused across calls (allocation-free hot loop).
-pub struct StreamingMatvec {
+/// Per-worker scratch buffers, reused across panels, groups and batches
+/// (allocation-free steady state).
+#[derive(Default)]
+struct PanelScratch {
     codes_buf: Vec<i32>,
     panel: Vec<f32>,
     /// lattice-decode scratch: codes as f32 blocks (+½) for the blocked
@@ -47,33 +81,48 @@ pub struct StreamingMatvec {
     zf: Vec<f32>,
     /// rANS chunk-decode scratch (reused across panels and groups)
     rans_scratch: Vec<i32>,
+}
+
+/// One unit of parallel work: a row-panel of one group (or, for
+/// non-streaming side-info families, the whole group).
+#[derive(Clone, Copy)]
+struct PanelItem {
+    /// index into `qt.groups`
+    gi: usize,
+    /// first row of this panel within the group
+    r: usize,
+    /// rows in this panel
+    rows: usize,
+}
+
+/// Batched multi-threaded streaming decode-matmul engine.
+///
+/// Holds one scratch slab per worker thread behind a mutex pool; `matmul`
+/// is `&self`, so a single engine can be shared across layers and calls.
+pub struct StreamingMatmul {
     /// rows per streamed panel (the "handful of sub-blocks")
     pub panel_rows: usize,
+    /// worker threads row-panel items are spread over
+    pub threads: usize,
+    scratch: Vec<Mutex<PanelScratch>>,
 }
 
-impl Default for StreamingMatvec {
-    fn default() -> Self {
-        StreamingMatvec::new(16)
-    }
-}
-
-impl StreamingMatvec {
-    pub fn new(panel_rows: usize) -> StreamingMatvec {
-        StreamingMatvec {
-            codes_buf: Vec::new(),
-            panel: Vec::new(),
-            zf: Vec::new(),
-            rans_scratch: Vec::new(),
+impl StreamingMatmul {
+    pub fn new(panel_rows: usize, threads: usize) -> StreamingMatmul {
+        let threads = threads.max(1);
+        StreamingMatmul {
             panel_rows: panel_rows.max(1),
+            threads,
+            scratch: (0..threads).map(|_| Mutex::new(PanelScratch::default())).collect(),
         }
     }
 
     /// Effective panel rows for one group: `panel_rows`, except rANS
     /// payloads whose chunk rows align — there the panel snaps to whole
     /// chunks so every chunk is decoded (and charged) exactly once per
-    /// matvec. This is also the working-set bound `peak_panel_elems`
+    /// batch. This is also the working-set bound `peak_panel_elems`
     /// reports: chunk-granular decode cannot go below one chunk.
-    fn effective_panel_rows(&self, g: &crate::quant::traits::QuantizedGroup) -> usize {
+    fn effective_panel_rows(&self, g: &QuantizedGroup) -> usize {
         let (m, n) = (g.rows, g.cols.max(1));
         match &g.codes {
             crate::quant::traits::CodePayload::Rans(rc) if rc.chunk_len % n == 0 => {
@@ -88,7 +137,247 @@ impl StreamingMatvec {
         }
     }
 
-    /// y += decode(qt) · x, streaming panel_rows rows of the (m × n) stored
+    /// Y = decode(qt) applied to the batch: `y[b] += decode(qt) · x[b]` for
+    /// every batch row b. `x` is (B × n_in), `y` is (B × m); `y` is
+    /// overwritten. Each group-panel is decoded once for the whole batch;
+    /// panels are processed on `self.threads` workers with per-thread
+    /// scratch and stats merged into `stats` after the join. The result is
+    /// bit-identical across batch sizes and thread counts.
+    pub fn matmul(&self, qt: &QuantizedTensor, x: &Mat, y: &mut Mat, stats: &mut DecodeStats) {
+        let batch = x.rows;
+        assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);
+        assert_eq!((y.rows, y.cols), (batch, qt.rows), "{}: bad output shape", qt.name);
+        y.data.fill(0.0);
+        stats.act_bytes += (x.data.len() + y.data.len()) * 4;
+
+        // one work item per row-panel (whole group for non-streaming
+        // side-info families); the item list is independent of the thread
+        // count, so per-item stats sum to the same totals either way
+        let mut items: Vec<PanelItem> = Vec::new();
+        for (gi, (_, _, g)) in qt.groups.iter().enumerate() {
+            if !supports_streaming(&g.side) {
+                items.push(PanelItem { gi, r: 0, rows: g.rows });
+                continue;
+            }
+            let pr = self.effective_panel_rows(g);
+            let mut r = 0usize;
+            while r < g.rows {
+                let rows = pr.min(g.rows - r);
+                items.push(PanelItem { gi, r, rows });
+                r += rows;
+            }
+        }
+
+        // expand each group's rANS decode table once per batch (not per
+        // panel, not per vector) and share it across workers
+        let tables: Vec<Option<DecodeTable>> = qt
+            .groups
+            .iter()
+            .map(|(_, _, g)| match &g.codes {
+                crate::quant::traits::CodePayload::Rans(rc) => Some(rc.hist.decode_table()),
+                _ => None,
+            })
+            .collect();
+
+        let slabs = parallel_map(self.threads, &items, |idx, item| {
+            let (_, c0, g) = &qt.groups[item.gi];
+            let mut scratch = self.acquire_scratch(idx);
+            let mut st = DecodeStats::default();
+            let slab = panel_slab(
+                g,
+                *c0,
+                item,
+                tables[item.gi].as_ref(),
+                x,
+                &mut scratch,
+                &mut st,
+            );
+            // side info is charged once per group per batch: on its first panel
+            if item.r == 0 {
+                st.side_bytes += g.side_bytes();
+            }
+            (slab, st)
+        })
+        .unwrap_or_else(|(i, msg)| panic!("streaming matmul worker panicked on item {i}: {msg}"));
+
+        // merge: slabs land in item order regardless of which worker ran
+        // them, so accumulation order (and hence the float result) is
+        // deterministic
+        for (item, (slab, st)) in items.iter().zip(&slabs) {
+            let r0 = qt.groups[item.gi].0;
+            for b in 0..batch {
+                let dst = &mut y.row_mut(b)[r0 + item.r..r0 + item.r + item.rows];
+                let src = &slab[b * item.rows..(b + 1) * item.rows];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+            stats.merge(st);
+        }
+    }
+
+    /// Grab a scratch slab: prefer an uncontended one, fall back to
+    /// blocking on the slot keyed by the item index. Pool size == threads,
+    /// so with ≤ threads concurrent workers a free slab always exists.
+    fn acquire_scratch(&self, idx: usize) -> std::sync::MutexGuard<'_, PanelScratch> {
+        for s in &self.scratch {
+            if let Ok(guard) = s.try_lock() {
+                return guard;
+            }
+        }
+        self.scratch[idx % self.scratch.len()]
+            .lock()
+            .expect("scratch mutex poisoned")
+    }
+
+    /// Peak decoded-weights working set in elements — the quantity the
+    /// paper claims drops >10× vs layer-at-once decode. Streaming groups
+    /// are bounded by one panel (rANS panels snap to whole chunks, so the
+    /// bound reflects the buffers actually allocated); lookup/stateful
+    /// families that cannot stream count their full group.
+    pub fn peak_panel_elems(&self, qt: &QuantizedTensor) -> usize {
+        qt.groups
+            .iter()
+            .map(|(_, _, g)| {
+                if supports_streaming(&g.side) {
+                    self.effective_panel_rows(g) * g.cols
+                } else {
+                    g.rows * g.cols
+                }
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Decode one panel of `g` and return its partial product slab
+/// (batch × rows, b-major): `slab[b][i] = Σ_c panel[i][c] · x[b][c0 + c]`.
+fn panel_slab(
+    g: &QuantizedGroup,
+    c0: usize,
+    item: &PanelItem,
+    table: Option<&DecodeTable>,
+    x: &Mat,
+    scratch: &mut PanelScratch,
+    stats: &mut DecodeStats,
+) -> Vec<f32> {
+    let (n, batch) = (g.cols, x.rows);
+    let rows = item.rows;
+    let mut slab = vec![0.0f32; batch * rows];
+
+    if !supports_streaming(&g.side) {
+        // lookup/stateful methods (codebook, trellis, binary) cannot decode
+        // from an arbitrary offset: dequantize the whole group — exactly
+        // the operational cost the paper charges AQLM-style methods in
+        // Table 4.
+        debug_assert_eq!((item.r, rows), (0, g.rows));
+        let dense = g.dequantize();
+        stats.code_bytes += g.codes.payload_bytes();
+        stats.weights_decoded += rows * n;
+        stats.peak_decoded = stats.peak_decoded.max(rows * n);
+        for b in 0..batch {
+            let xr = &x.row(b)[c0..c0 + n];
+            for i in 0..rows {
+                let row = dense.row(i);
+                let mut acc = 0.0f32;
+                for (a, v) in row.iter().zip(xr.iter()) {
+                    acc += a * v;
+                }
+                slab[b * rows + i] = acc;
+            }
+        }
+        stats.macs += batch * rows * n;
+        return slab;
+    }
+
+    let count = rows * n;
+    scratch.codes_buf.resize(count, 0);
+    scratch.panel.resize(count, 0.0);
+    match (&g.codes, table) {
+        (crate::quant::traits::CodePayload::Rans(rc), Some(t)) => rc.decode_range_with(
+            item.r * n,
+            &mut scratch.codes_buf[..count],
+            t,
+            &mut scratch.rans_scratch,
+        ),
+        _ => g.codes.unpack_range_into(item.r * n, &mut scratch.codes_buf[..count]),
+    }
+    stats.code_bytes += g.codes.range_payload_bytes(item.r * n, count);
+    if let SideInfo::Lattice { d, g: gmat, mu, scale } = &g.side {
+        // §Perf fast path: blocked GEMM (B×d)@(d×d) + vectorized μ-law
+        // expand instead of per-block scalar loops. The accumulation order
+        // matches the scalar `dequantize` exactly, so the decoded panel is
+        // bit-identical to the dense oracle.
+        let d = *d;
+        scratch.zf.resize(count, 0.0);
+        for (zf, &c) in scratch.zf.iter_mut().zip(&scratch.codes_buf[..count]) {
+            *zf = c as f32 + 0.5;
+        }
+        let zb = Mat::from_vec(count / d, d, scratch.zf[..count].to_vec());
+        let gm = Mat::from_vec(d, d, gmat.clone());
+        let mut vb = Mat::zeros(count / d, d);
+        crate::linalg::matrix::matmul_into(&zb, &gm.transpose(), &mut vb);
+        let comp = MuLaw::new(*mu);
+        comp.inverse_slice(&mut vb.data);
+        for (o, v) in scratch.panel[..count].iter_mut().zip(&vb.data) {
+            *o = scale * v;
+        }
+    } else {
+        decode_codes(
+            &g.side,
+            g.codes.bits(),
+            &scratch.codes_buf[..count],
+            &mut scratch.panel[..count],
+        );
+    }
+    stats.weights_decoded += count;
+    stats.peak_decoded = stats.peak_decoded.max(count);
+
+    // slab[b] = panel · x[b], decoded weights reused across the whole batch
+    for b in 0..batch {
+        let xr = &x.row(b)[c0..c0 + n];
+        for i in 0..rows {
+            let row = &scratch.panel[i * n..(i + 1) * n];
+            let mut acc = 0.0f32;
+            for (a, v) in row.iter().zip(xr.iter()) {
+                acc += a * v;
+            }
+            slab[b * rows + i] = acc;
+        }
+    }
+    stats.macs += batch * count;
+    slab
+}
+
+/// Single-vector streaming matvec: the B = 1, single-thread convenience
+/// wrapper over [`StreamingMatmul`] (same decode core, same stats model).
+pub struct StreamingMatvec {
+    inner: StreamingMatmul,
+    xbuf: Mat,
+    ybuf: Mat,
+}
+
+impl Default for StreamingMatvec {
+    fn default() -> Self {
+        StreamingMatvec::new(16)
+    }
+}
+
+impl StreamingMatvec {
+    pub fn new(panel_rows: usize) -> StreamingMatvec {
+        StreamingMatvec {
+            inner: StreamingMatmul::new(panel_rows, 1),
+            xbuf: Mat::zeros(1, 0),
+            ybuf: Mat::zeros(1, 0),
+        }
+    }
+
+    /// Rows per streamed panel.
+    pub fn panel_rows(&self) -> usize {
+        self.inner.panel_rows
+    }
+
+    /// y = decode(qt) · x, streaming panel_rows rows of the (m × n) stored
     /// tensor at a time. x has length n (input dim), y has length m.
     pub fn matvec(
         &mut self,
@@ -97,119 +386,21 @@ impl StreamingMatvec {
         y: &mut [f32],
         stats: &mut DecodeStats,
     ) {
-        assert_eq!(x.len(), qt.cols, "{}: x len {} != cols {}", qt.name, x.len(), qt.cols);
-        assert_eq!(y.len(), qt.rows);
-        y.fill(0.0);
-        stats.act_bytes += (x.len() + y.len()) * 4;
-        for (r0, c0, g) in &qt.groups {
-            self.group_matvec_into(g, &x[*c0..*c0 + g.cols], &mut y[*r0..*r0 + g.rows], stats);
+        if self.xbuf.cols != x.len() {
+            self.xbuf = Mat::zeros(1, x.len());
         }
+        if self.ybuf.cols != y.len() {
+            self.ybuf = Mat::zeros(1, y.len());
+        }
+        self.xbuf.data.copy_from_slice(x);
+        self.inner.matmul(qt, &self.xbuf, &mut self.ybuf, stats);
+        y.copy_from_slice(&self.ybuf.data);
     }
 
-    /// Accumulate one group's contribution: y_rows += decode(g) · x_cols.
-    fn group_matvec_into(
-        &mut self,
-        g: &crate::quant::traits::QuantizedGroup,
-        x: &[f32],
-        y: &mut [f32],
-        stats: &mut DecodeStats,
-    ) {
-        let (m, n) = (g.rows, g.cols);
-        stats.side_bytes += g.side_bytes();
-        if !supports_streaming(&g.side) {
-            // lookup/stateful methods (codebook, trellis, binary) cannot
-            // decode from an arbitrary offset: dequantize the whole group —
-            // exactly the operational cost the paper charges AQLM-style
-            // methods in Table 4.
-            let dense = g.dequantize();
-            stats.code_bytes += g.codes.payload_bytes();
-            stats.weights_decoded += m * n;
-            for i in 0..m {
-                let row = dense.row(i);
-                let mut acc = 0.0f32;
-                for (a, b) in row.iter().zip(x.iter()) {
-                    acc += a * b;
-                }
-                y[i] += acc;
-            }
-            stats.macs += m * n;
-            return;
-        }
-        let pr = self.effective_panel_rows(g);
-        self.codes_buf.resize(pr * n, 0);
-        self.panel.resize(pr * n, 0.0);
-        // expand the rANS decode table once per group, not once per panel
-        let rans_table = match &g.codes {
-            crate::quant::traits::CodePayload::Rans(rc) => Some(rc.hist.decode_table()),
-            _ => None,
-        };
-
-        let mut r = 0usize;
-        while r < m {
-            let rows = pr.min(m - r);
-            let count = rows * n;
-            match (&g.codes, &rans_table) {
-                (crate::quant::traits::CodePayload::Rans(rc), Some(table)) => rc
-                    .decode_range_with(
-                        r * n,
-                        &mut self.codes_buf[..count],
-                        table,
-                        &mut self.rans_scratch,
-                    ),
-                _ => g.codes.unpack_range_into(r * n, &mut self.codes_buf[..count]),
-            }
-            stats.code_bytes += g.codes.range_payload_bytes(r * n, count);
-            if let SideInfo::Lattice { d, g: gmat, mu, scale } = &g.side {
-                // §Perf fast path: blocked GEMM (B×d)@(d×d) + vectorized
-                // μ-law expand instead of per-block scalar loops.
-                let d = *d;
-                self.zf.resize(count, 0.0);
-                for (zf, &c) in self.zf.iter_mut().zip(&self.codes_buf[..count]) {
-                    *zf = c as f32 + 0.5;
-                }
-                let zb = Mat::from_vec(count / d, d, self.zf[..count].to_vec());
-                let gm = Mat::from_vec(d, d, gmat.clone());
-                let mut vb = Mat::zeros(count / d, d);
-                crate::linalg::matrix::matmul_into(&zb, &gm.transpose(), &mut vb);
-                let comp = MuLaw::new(*mu);
-                comp.inverse_slice(&mut vb.data);
-                for (o, v) in self.panel[..count].iter_mut().zip(&vb.data) {
-                    *o = scale * v;
-                }
-            } else {
-                decode_codes(
-                    &g.side,
-                    g.codes.bits(),
-                    &self.codes_buf[..count],
-                    &mut self.panel[..count],
-                );
-            }
-            stats.weights_decoded += count;
-            // y[r..r+rows] += panel · x
-            for i in 0..rows {
-                let row = &self.panel[i * n..(i + 1) * n];
-                let mut acc = 0.0f32;
-                for (a, b) in row.iter().zip(x.iter()) {
-                    acc += a * b;
-                }
-                y[r + i] += acc;
-            }
-            stats.macs += count;
-            r += rows;
-        }
-    }
-
-    /// Peak decoded-weights working set in elements (panel size) — the
-    /// quantity the paper claims drops >10× vs layer-at-once decode. For
-    /// rANS groups the panel snaps to whole chunks (chunk-granular decode
-    /// can't go below one chunk), so the bound reflects the buffers
-    /// actually allocated.
+    /// Peak decoded-weights working set — see
+    /// [`StreamingMatmul::peak_panel_elems`].
     pub fn peak_panel_elems(&self, qt: &QuantizedTensor) -> usize {
-        qt.groups
-            .iter()
-            .map(|(_, _, g)| self.effective_panel_rows(g) * g.cols)
-            .max()
-            .unwrap_or(0)
+        self.inner.peak_panel_elems(qt)
     }
 }
 
@@ -260,8 +451,6 @@ fn decode_codes(side: &SideInfo, bits: u8, codes: &[i32], out: &mut [f32]) {
             let lo = code_range(bits).0;
             // NB: for codebook methods `codes` are block indices (one per
             // dim-length block); callers pass rows in block units.
-            let blocks = codes.len();
-            let _ = blocks;
             for (b, &c) in codes.iter().enumerate() {
                 let idx = (c - lo) as usize;
                 out[b * dim..(b + 1) * dim].copy_from_slice(&centers[idx * dim..(idx + 1) * dim]);
@@ -282,7 +471,8 @@ fn decode_codes(side: &SideInfo, bits: u8, codes: &[i32], out: &mut [f32]) {
         }
         SideInfo::Binary { .. } => {
             // binary decode needs row indices for per-row scales; handled by
-            // dequantize() — the streaming bench does not cover binary.
+            // dequantize() — the streaming path never reaches here because
+            // supports_streaming() routes binary to the dense fallback.
             unimplemented!("binary methods are not on the streaming path");
         }
     }
@@ -292,8 +482,8 @@ fn decode_codes(side: &SideInfo, bits: u8, codes: &[i32], out: &mut [f32]) {
 /// - Lattice/Uniform/RotatedLattice stream exactly.
 /// - Codebook streams in block units (the caller must align panels).
 /// - Trellis decode is stateful from position 0, so `unpack_range_into`
-///   cannot start mid-stream; StreamingMatvec therefore uses panel_rows
-///   covering whole groups for TCQ (see `supports_streaming`).
+///   cannot start mid-stream; the engine therefore decodes whole groups
+///   for TCQ/binary/codebook (see `supports_streaming`).
 pub fn supports_streaming(side: &SideInfo) -> bool {
     !matches!(side, SideInfo::Trellis { .. } | SideInfo::Binary { .. } | SideInfo::Codebook { .. })
 }
@@ -330,6 +520,115 @@ mod tests {
         (wt, QuantizedTensor { name: "t".into(), rows: 32, cols: 64, groups })
     }
 
+    /// Dense dequantize + matmul oracle with the engine's accumulation
+    /// structure (per-group sequential dots, groups merged in order) — the
+    /// reference the streaming path must match *bit-exactly*.
+    fn oracle_matmul(qt: &QuantizedTensor, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(x.rows, qt.rows);
+        for (r0, c0, g) in &qt.groups {
+            let dense = g.dequantize();
+            for b in 0..x.rows {
+                let xr = &x.row(b)[*c0..*c0 + g.cols];
+                for i in 0..g.rows {
+                    let row = dense.row(i);
+                    let mut acc = 0.0f32;
+                    for (a, v) in row.iter().zip(xr.iter()) {
+                        acc += a * v;
+                    }
+                    *y.at_mut(b, r0 + i) += acc;
+                }
+            }
+        }
+        y
+    }
+
+    /// Re-encode every group payload with rANS (`rows_per_chunk` rows per
+    /// chunk) — lossless, so all decode paths must agree bit-for-bit.
+    fn to_entropy_tensor(qt: &QuantizedTensor, rows_per_chunk: usize) -> QuantizedTensor {
+        let mut out = qt.clone();
+        for (_, _, g) in &mut out.groups {
+            g.codes = g.codes.to_entropy(g.cols * rows_per_chunk.max(1), 4);
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_matmul_equals_dense_oracle_bitexact() {
+        // fixed + rANS payloads × batch sizes × thread counts × a panel
+        // size (5) that leaves a ragged 2-row tail on the 32-row groups
+        for method in ["rtn", "glvq"] {
+            let (_, qt) = quantized_tensor(method, 3);
+            for payload in ["fixed", "rans"] {
+                let qt = if payload == "rans" { to_entropy_tensor(&qt, 5) } else { qt.clone() };
+                for &batch in &[1usize, 3, 16] {
+                    let mut rng = Rng::new(4);
+                    let x = Mat::random_normal(batch, 64, 1.0, &mut rng);
+                    let want = oracle_matmul(&qt, &x);
+                    for &threads in &[1usize, 4] {
+                        let sm = StreamingMatmul::new(5, threads);
+                        let mut y = Mat::zeros(batch, 32);
+                        let mut stats = DecodeStats::default();
+                        sm.matmul(&qt, &x, &mut y, &mut stats);
+                        assert_eq!(
+                            y.data, want.data,
+                            "{method}/{payload} batch={batch} threads={threads} not bit-exact"
+                        );
+                        assert_eq!(stats.macs, batch * 32 * 64);
+                        assert!(stats.code_bytes > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merged_multithread_stats_equal_single_thread() {
+        for method in ["rtn", "glvq"] {
+            let (_, qt) = quantized_tensor(method, 9);
+            let qte = to_entropy_tensor(&qt, 8);
+            for t in [&qt, &qte] {
+                let mut rng = Rng::new(10);
+                let x = Mat::random_normal(7, 64, 1.0, &mut rng);
+                let mut y1 = Mat::zeros(7, 32);
+                let mut y4 = Mat::zeros(7, 32);
+                let mut s1 = DecodeStats::default();
+                let mut s4 = DecodeStats::default();
+                StreamingMatmul::new(8, 1).matmul(t, &x, &mut y1, &mut s1);
+                StreamingMatmul::new(8, 4).matmul(t, &x, &mut y4, &mut s4);
+                assert_eq!(s1, s4, "{method}: merged stats drifted across thread counts");
+                assert_eq!(y1.data, y4.data);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_decode_exactly_once() {
+        // batch-16 matmul decodes (and charges) each panel once; 16
+        // separate matvecs decode it 16 times — same math, 16× the decode
+        // traffic. Row b of the batched result equals the b-th matvec
+        // bit-exactly.
+        let (_, qt) = quantized_tensor("glvq", 6);
+        let qte = to_entropy_tensor(&qt, 8);
+        let mut rng = Rng::new(12);
+        let x = Mat::random_normal(16, 64, 1.0, &mut rng);
+
+        let sm = StreamingMatmul::new(8, 2);
+        let mut yb = Mat::zeros(16, 32);
+        let mut sb = DecodeStats::default();
+        sm.matmul(&qte, &x, &mut yb, &mut sb);
+
+        let mut mv = StreamingMatvec::new(8);
+        let mut sv = DecodeStats::default();
+        for b in 0..16 {
+            let mut y = vec![0.0f32; 32];
+            mv.matvec(&qte, x.row(b), &mut y, &mut sv);
+            assert_eq!(y, yb.row(b), "batch row {b} diverged from matvec");
+        }
+        assert_eq!(sv.code_bytes, 16 * sb.code_bytes, "decode not amortized across batch");
+        assert_eq!(sv.weights_decoded, 16 * sb.weights_decoded);
+        assert_eq!(sv.macs, sb.macs);
+    }
+
     #[test]
     fn streaming_matvec_equals_dense_dequantize_matvec() {
         for method in ["rtn", "glvq"] {
@@ -347,16 +646,6 @@ mod tests {
             }
             assert!(stats.code_bytes > 0 && stats.macs == 32 * 64);
         }
-    }
-
-    /// Re-encode every group payload with rANS (`rows_per_chunk` rows per
-    /// chunk) — lossless, so all decode paths must agree bit-for-bit.
-    fn to_entropy_tensor(qt: &QuantizedTensor, rows_per_chunk: usize) -> QuantizedTensor {
-        let mut out = qt.clone();
-        for (_, _, g) in &mut out.groups {
-            g.codes = g.codes.to_entropy(g.cols * rows_per_chunk.max(1), 4);
-        }
-        out
     }
 
     #[test]
@@ -431,6 +720,24 @@ mod tests {
         // 4 rows × 32-col group = 128 elems vs full 32×64 = 2048 → 16×
         assert_eq!(sm.peak_panel_elems(&qt), 4 * 32);
         assert!(sm.peak_panel_elems(&qt) * 10 <= qt.rows * qt.cols);
+    }
+
+    #[test]
+    fn peak_decoded_stat_respects_panel_bound() {
+        // fixed-width payloads: the decode buffer never exceeds
+        // panel_rows × group cols, no matter the batch or thread count
+        let (_, qt) = quantized_tensor("rtn", 5);
+        let sm = StreamingMatmul::new(4, 4);
+        let mut rng = Rng::new(13);
+        let x = Mat::random_normal(16, 64, 1.0, &mut rng);
+        let mut y = Mat::zeros(16, 32);
+        let mut stats = DecodeStats::default();
+        sm.matmul(&qt, &x, &mut y, &mut stats);
+        assert!(stats.peak_decoded > 0);
+        assert!(stats.peak_decoded <= sm.panel_rows * qt.cols);
+        assert_eq!(stats.peak_decoded, sm.peak_panel_elems(&qt));
+        // the paper's claim: far below whole-layer decode
+        assert!(stats.peak_decoded * 10 <= qt.rows * qt.cols);
     }
 
     #[test]

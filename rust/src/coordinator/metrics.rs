@@ -1,7 +1,12 @@
 //! Serving metrics: counters + a fixed-capacity reservoir histogram giving
-//! p50/p95/p99 latencies and throughput for the server and Table-4 bench.
+//! p50/p95/p99 latencies and throughput for the server and Table-4 bench,
+//! plus the cumulative streaming-decode traffic
+//! ([`crate::coordinator::decode_stream::DecodeStats`]) when the backend
+//! executes from compressed weights.
 
 use std::time::Instant;
+
+use crate::coordinator::decode_stream::DecodeStats;
 
 /// Streaming latency histogram (reservoir of raw samples; exact quantiles
 /// for ≤ capacity samples, uniform subsample beyond).
@@ -66,6 +71,9 @@ pub struct ServerMetrics {
     pub tokens_out: usize,
     pub batches: usize,
     pub latency: LatencyHist,
+    /// cumulative streaming-decode traffic, when the backend serves from
+    /// compressed weights (None for dense/PJRT backends)
+    pub decode: Option<DecodeStats>,
 }
 
 impl Default for ServerMetrics {
@@ -76,6 +84,7 @@ impl Default for ServerMetrics {
             tokens_out: 0,
             batches: 0,
             latency: LatencyHist::new(4096),
+            decode: None,
         }
     }
 }
@@ -91,7 +100,7 @@ impl ServerMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} tokens={} batches={} tok/s={:.1} p50={:.1}ms p95={:.1}ms p99={:.1}ms",
             self.requests,
             self.tokens_out,
@@ -100,7 +109,15 @@ impl ServerMetrics {
             self.latency.quantile(0.5),
             self.latency.quantile(0.95),
             self.latency.quantile(0.99),
-        )
+        );
+        if let Some(d) = &self.decode {
+            out.push_str(&format!(
+                " decoded={:.2}MB peak_panel={}elems",
+                d.total_bytes() as f64 / 1e6,
+                d.peak_decoded
+            ));
+        }
+        out
     }
 }
 

@@ -1,12 +1,20 @@
 //! L3 coordinator: the runtime system around the quantizers.
 //!
 //! - [`scheduler`] — thread-pool work queue with deterministic reduction
-//!   (drives the quantization pipeline),
-//! - [`decode_stream`] — the paper's §3.4 on-the-fly decoding: materialize a
-//!   handful of sub-blocks, matvec, release (peak-memory bound),
-//! - [`server`] — batched LM request loop (generate/score) over the PJRT
-//!   logits program with latency/throughput metrics,
-//! - [`metrics`] — counters + streaming histograms for the above.
+//!   (drives both the quantization pipeline and the streaming decode
+//!   engine),
+//! - [`decode_stream`] — the paper's §3.4 on-the-fly decoding as a
+//!   batched, multi-threaded serving engine
+//!   ([`decode_stream::StreamingMatmul`]): decode a panel once per batch,
+//!   matmul, release (peak-memory bound),
+//! - [`server`] — batched LM request loop (generate/score) with lockstep
+//!   batch stepping, over dense weights, a compressed `.glvq` container
+//!   ([`server::StreamingNativeBackend`]), or the PJRT logits program,
+//! - [`metrics`] — counters + streaming histograms + decode traffic for
+//!   the above.
+//!
+//! See `ARCHITECTURE.md` at the repo root for how these fit the crate's
+//! overall data flow.
 
 pub mod decode_stream;
 pub mod metrics;

@@ -1,11 +1,14 @@
-//! Work scheduler for the quantization service: a scoped thread pool with
-//! an atomic work queue and deterministic result placement.
+//! Work scheduler: a scoped thread pool with an atomic work queue and
+//! deterministic result placement, shared by the quantization pipeline and
+//! the streaming decode engine.
 //!
-//! Group quantization is embarrassingly parallel (groups are independent
-//! given their calibration slice), but results must assemble in group order
-//! regardless of completion order — `parallel_map` guarantees exactly that:
-//! output[i] is f(items[i]) no matter which worker ran it. Worker panics are
-//! surfaced as an Err carrying the index (failure injection is tested).
+//! Group quantization and per-batch panel decode are both embarrassingly
+//! parallel, but results must assemble in item order regardless of
+//! completion order — [`parallel_map`] guarantees exactly that:
+//! `output[i]` is `f(items[i])` no matter which worker ran it. That is what
+//! makes [`crate::coordinator::decode_stream::StreamingMatmul`] bit-
+//! deterministic across thread counts. Worker panics are surfaced as an
+//! Err carrying the index (failure injection is tested).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -1,17 +1,25 @@
 //! Batched LM serving loop: the L3 request path over the quantized model.
 //!
-//! A worker thread owns the model backend (native forward or PJRT logits
-//! artifact), drains the request queue into bounded batches, and answers
-//! generate/score requests; [`super::metrics::ServerMetrics`] tracks
-//! latency/throughput (the Table-4 runtime story at serving granularity).
+//! A worker thread owns the model backend (native forward, streamed
+//! compressed-weights forward, or PJRT logits artifact), drains the
+//! request queue into bounded batches, and steps all requests of a batch
+//! in **lockstep**: every active generate/score sequence contributes one
+//! prefix to a single [`LmBackend::logits_last_batch`] call per step, so a
+//! batched backend runs one forward (and, for
+//! [`StreamingNativeBackend`], one streaming decode of each weight panel)
+//! for the whole batch. [`super::metrics::ServerMetrics`] tracks
+//! latency/throughput and, for streamed backends, cumulative decode
+//! traffic (the Table-4 runtime story at serving granularity).
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::eval::native_fwd;
+use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use crate::eval::native_fwd::{self, StreamedLinear};
 use crate::model::ModelConfig;
+use crate::quant::format::QuantizedModel;
 use crate::runtime::exec::LogitsExec;
 use crate::runtime::Engine;
 use crate::tensor::TensorStore;
@@ -23,11 +31,49 @@ use super::metrics::ServerMetrics;
 /// Send), so [`start`] takes a factory closure.
 pub trait LmBackend {
     fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Last-position logits for several prefixes at once. The default
+    /// loops [`LmBackend::logits_last`]; batched backends override this to
+    /// run one forward for the whole batch.
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        prefixes.iter().map(|t| self.logits_last(t)).collect()
+    }
+
     fn seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
+
+    /// Cumulative streaming-decode statistics, if this backend executes
+    /// from compressed weights (None for dense/PJRT backends).
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        None
+    }
 }
 
-/// Native-forward backend (no artifacts needed).
+/// Pad each prefix to `seq_len` (keeping its tail) and return the flat
+/// (B·T) token buffer plus the last valid position of each row.
+fn pad_prefixes(seq_len: usize, prefixes: &[&[i32]]) -> (Vec<i32>, Vec<usize>) {
+    let mut flat = Vec::with_capacity(seq_len * prefixes.len());
+    let mut last = Vec::with_capacity(prefixes.len());
+    for tokens in prefixes {
+        let keep = tokens.len().min(seq_len);
+        let mut row = tokens[tokens.len() - keep..].to_vec();
+        last.push(keep.max(1) - 1);
+        row.resize(seq_len, 0);
+        flat.extend_from_slice(&row);
+    }
+    (flat, last)
+}
+
+/// Pull each row's last-position logits out of a flat (B·T × V) matrix —
+/// the gather shared by every native backend.
+fn gather_last_rows(logits: &crate::linalg::Mat, seq_len: usize, last: &[usize]) -> Vec<Vec<f32>> {
+    last.iter()
+        .enumerate()
+        .map(|(b, &l)| logits.row(b * seq_len + l).to_vec())
+        .collect()
+}
+
+/// Native-forward backend over dense weights (no artifacts needed).
 pub struct NativeBackend {
     pub cfg: ModelConfig,
     pub store: TensorStore,
@@ -35,13 +81,14 @@ pub struct NativeBackend {
 
 impl LmBackend for NativeBackend {
     fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
         let t = self.cfg.seq_len;
-        let keep = tokens.len().min(t);
-        let mut x = tokens[tokens.len() - keep..].to_vec();
-        let last = keep.max(1) - 1;
-        x.resize(t, 0);
-        let logits = native_fwd::forward(&self.cfg, &self.store, &x, 1, None)?;
-        Ok(logits.row(last).to_vec())
+        let (flat, last) = pad_prefixes(t, prefixes);
+        let logits = native_fwd::forward(&self.cfg, &self.store, &flat, prefixes.len(), None)?;
+        Ok(gather_last_rows(&logits, t, &last))
     }
 
     fn seq_len(&self) -> usize {
@@ -50,6 +97,58 @@ impl LmBackend for NativeBackend {
 
     fn vocab(&self) -> usize {
         self.cfg.vocab
+    }
+}
+
+/// Native-forward backend that executes every quantized linear **directly
+/// from the compressed container** through the batched streaming engine —
+/// no layer is ever fully dequantized (peak decoded working set is one
+/// panel, tracked in [`DecodeStats::peak_decoded`]). Non-quantized
+/// parameters (embeddings, norm gains) come from `store`.
+pub struct StreamingNativeBackend {
+    pub cfg: ModelConfig,
+    pub store: TensorStore,
+    pub qm: QuantizedModel,
+    pub engine: StreamingMatmul,
+    pub stats: DecodeStats,
+}
+
+impl LmBackend for StreamingNativeBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        let t = self.cfg.seq_len;
+        let (flat, last) = pad_prefixes(t, prefixes);
+        let mut lin = StreamedLinear {
+            qm: &self.qm,
+            store: &self.store,
+            engine: &self.engine,
+            stats: DecodeStats::default(),
+        };
+        let logits = native_fwd::forward_with(
+            &self.cfg,
+            &self.store,
+            &mut lin,
+            &flat,
+            prefixes.len(),
+            None,
+        )?;
+        self.stats.merge(&lin.stats);
+        Ok(gather_last_rows(&logits, t, &last))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        Some(self.stats)
     }
 }
 
@@ -178,68 +277,143 @@ where
                 }
             }
             metrics.batches += 1;
-            for job in batch {
-                let response = handle(&mut *backend, &job.request, &mut metrics);
+            let requests: Vec<Request> = batch.iter().map(|j| j.request.clone()).collect();
+            let responses = handle_batch(&mut *backend, &requests, &mut metrics);
+            for (job, response) in batch.into_iter().zip(responses) {
                 metrics.requests += 1;
                 metrics
                     .latency
                     .record(job.submitted.elapsed().as_secs_f64() * 1e3);
                 let _ = job.reply.send(response);
             }
+            metrics.decode = backend.decode_stats();
         }
+        metrics.decode = backend.decode_stats();
         metrics
     });
     ServerHandle { tx, join: Some(join) }
 }
 
-fn handle(backend: &mut dyn LmBackend, request: &Request, metrics: &mut ServerMetrics) -> Response {
-    match request {
-        Request::Generate { prompt, max_new } => {
-            let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
-            let start = tokens.len();
-            for _ in 0..*max_new {
-                let logits = match backend.logits_last(&tokens) {
-                    Ok(l) => l,
-                    Err(e) => return Response::Error { message: e.to_string() },
-                };
-                let next = logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap_or(0);
-                tokens.push(next);
-                metrics.tokens_out += 1;
-            }
-            let text: Vec<u8> = tokens[start..].iter().map(|&t| t.clamp(0, 255) as u8).collect();
-            Response::Generated { text }
-        }
-        Request::Score { prompt, continuation } => {
-            let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
-            let mut total = 0.0f64;
-            for &b in continuation {
-                let logits = match backend.logits_last(&tokens) {
-                    Ok(l) => l,
-                    Err(e) => return Response::Error { message: e.to_string() },
-                };
-                let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-                let lse: f32 = logits.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
-                total += (logits[b as usize] - lse) as f64;
-                tokens.push(b as i32);
-                metrics.tokens_out += 1;
-            }
-            Response::Scored { logprob: total }
+/// Per-request lockstep state: both kinds only ever need last-position
+/// logits of their current prefix, so generates and scores share batches.
+enum SeqState {
+    Gen { tokens: Vec<i32>, start: usize, max_new: usize },
+    Score { tokens: Vec<i32>, continuation: Vec<u8>, pos: usize, logprob: f64 },
+    Failed { message: String },
+}
+
+impl SeqState {
+    fn active(&self) -> bool {
+        match self {
+            SeqState::Gen { tokens, start, max_new } => tokens.len() - start < *max_new,
+            SeqState::Score { continuation, pos, .. } => *pos < continuation.len(),
+            SeqState::Failed { .. } => false,
         }
     }
+}
+
+/// Answer one drained batch: every step gathers the prefixes of all still-
+/// active requests into a single `logits_last_batch` call, then advances
+/// each by one token. Deterministic and equivalent to serving the requests
+/// one at a time (the native forward treats batch rows independently).
+fn handle_batch(
+    backend: &mut dyn LmBackend,
+    requests: &[Request],
+    metrics: &mut ServerMetrics,
+) -> Vec<Response> {
+    let mut states: Vec<SeqState> = requests
+        .iter()
+        .map(|r| match r {
+            Request::Generate { prompt, max_new } => {
+                let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+                let start = tokens.len();
+                SeqState::Gen { tokens, start, max_new: *max_new }
+            }
+            Request::Score { prompt, continuation } => SeqState::Score {
+                tokens: prompt.iter().map(|&b| b as i32).collect(),
+                continuation: continuation.clone(),
+                pos: 0,
+                logprob: 0.0,
+            },
+        })
+        .collect();
+
+    loop {
+        let active: Vec<usize> = (0..states.len()).filter(|&i| states[i].active()).collect();
+        if active.is_empty() {
+            break;
+        }
+        let prefixes: Vec<&[i32]> = active
+            .iter()
+            .map(|&i| match &states[i] {
+                SeqState::Gen { tokens, .. } | SeqState::Score { tokens, .. } => {
+                    tokens.as_slice()
+                }
+                SeqState::Failed { .. } => unreachable!("failed sequences are inactive"),
+            })
+            .collect();
+        let stepped = backend.logits_last_batch(&prefixes);
+        drop(prefixes); // release the &states borrows before mutating below
+        let all_logits = match stepped {
+            Ok(l) => l,
+            Err(e) => {
+                let message = e.to_string();
+                for &i in &active {
+                    states[i] = SeqState::Failed { message: message.clone() };
+                }
+                break;
+            }
+        };
+        for (&i, logits) in active.iter().zip(&all_logits) {
+            match &mut states[i] {
+                SeqState::Gen { tokens, .. } => {
+                    let next = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap_or(0);
+                    tokens.push(next);
+                    metrics.tokens_out += 1;
+                }
+                SeqState::Score { tokens, continuation, pos, logprob } => {
+                    let b = continuation[*pos];
+                    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                    let lse: f32 =
+                        logits.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+                    *logprob += (logits[b as usize] - lse) as f64;
+                    tokens.push(b as i32);
+                    *pos += 1;
+                    metrics.tokens_out += 1;
+                }
+                SeqState::Failed { .. } => unreachable!("failed sequences are inactive"),
+            }
+        }
+    }
+
+    states
+        .into_iter()
+        .map(|s| match s {
+            SeqState::Gen { tokens, start, .. } => Response::Generated {
+                text: tokens[start..].iter().map(|&t| t.clamp(0, 255) as u8).collect(),
+            },
+            SeqState::Score { logprob, .. } => Response::Scored { logprob },
+            SeqState::Failed { message } => Response::Error { message },
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::eval::native_fwd::CalibCapture;
+    use crate::glvq::pipeline::{quantize_model, PipelineOpts};
     use crate::model::{init_params, ModelConfig};
+    use crate::util::rng::Rng;
 
-    fn tiny_backend() -> Result<Box<dyn LmBackend>> {
-        let cfg = ModelConfig {
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
             name: "t",
             vocab: 256,
             d_model: 32,
@@ -249,9 +423,36 @@ mod tests {
             seq_len: 32,
             batch_train: 2,
             batch_eval: 2,
-        };
+        }
+    }
+
+    fn tiny_backend() -> Result<Box<dyn LmBackend>> {
+        let cfg = tiny_cfg();
         let store = init_params(&cfg, 0);
         Ok(Box::new(NativeBackend { cfg, store }))
+    }
+
+    /// Quantize the tiny model with RTN and wrap it in the compressed-
+    /// weights streaming backend.
+    fn tiny_streaming_backend(threads: usize) -> Result<Box<dyn LmBackend>> {
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+        let mut cap = CalibCapture::new(16, 0);
+        native_fwd::forward(&cfg, &store, &toks, 2, Some(&mut cap))?;
+        let calib = cap.into_calib_set();
+        let mut opts = PipelineOpts::default();
+        opts.target_bits = 3.0;
+        opts.bit_allocation = false;
+        let (qm, _) = quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts)?;
+        Ok(Box::new(StreamingNativeBackend {
+            cfg,
+            store,
+            qm,
+            engine: StreamingMatmul::new(8, threads),
+            stats: DecodeStats::default(),
+        }))
     }
 
     #[test]
@@ -273,6 +474,7 @@ mod tests {
         assert_eq!(metrics.requests, 2);
         assert_eq!(metrics.tokens_out, 7);
         assert!(metrics.latency.quantile(0.5) >= 0.0);
+        assert!(metrics.decode.is_none(), "dense backend reports no decode stats");
     }
 
     #[test]
@@ -311,5 +513,114 @@ mod tests {
         }
         h1.shutdown();
         h2.shutdown();
+    }
+
+    #[test]
+    fn batched_lockstep_equals_sequential() {
+        // the same mixed generate/score workload must produce identical
+        // answers whether it is served one request per batch or all at once
+        let requests = vec![
+            Request::Generate { prompt: b"the kama ".to_vec(), max_new: 4 },
+            Request::Score { prompt: b"the ".to_vec(), continuation: b"ka".to_vec() },
+            Request::Generate { prompt: b"Boku ".to_vec(), max_new: 2 },
+        ];
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut b1 = NativeBackend { cfg, store };
+        let mut m1 = ServerMetrics::default();
+        let sequential: Vec<Response> = requests
+            .iter()
+            .map(|r| handle_batch(&mut b1, std::slice::from_ref(r), &mut m1).remove(0))
+            .collect();
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut b2 = NativeBackend { cfg, store };
+        let mut m2 = ServerMetrics::default();
+        let batched = handle_batch(&mut b2, &requests, &mut m2);
+        assert_eq!(m1.tokens_out, m2.tokens_out);
+        for (a, b) in sequential.iter().zip(&batched) {
+            match (a, b) {
+                (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
+                    assert_eq!(ta, tb)
+                }
+                (Response::Scored { logprob: la }, Response::Scored { logprob: lb }) => {
+                    assert!((la - lb).abs() < 1e-9, "{la} vs {lb}")
+                }
+                other => panic!("mismatched kinds {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_backend_serves_without_full_dequantize() {
+        let handle = start(|| tiny_streaming_backend(2), ServerOpts { max_batch: 4 });
+        let receivers: Vec<_> = (0..4)
+            .map(|i| {
+                if i % 2 == 0 {
+                    handle.submit(Request::Generate {
+                        prompt: format!("req {i} ").into_bytes(),
+                        max_new: 3,
+                    })
+                } else {
+                    handle.submit(Request::Score {
+                        prompt: b"the ".to_vec(),
+                        continuation: b"ka".to_vec(),
+                    })
+                }
+            })
+            .collect();
+        for rx in receivers {
+            match rx.recv().unwrap() {
+                Response::Generated { text } => assert_eq!(text.len(), 3),
+                Response::Scored { logprob } => assert!(logprob.is_finite()),
+                Response::Error { message } => panic!("server error: {message}"),
+            }
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 4);
+        let stats = metrics.decode.expect("streaming backend reports decode stats");
+        assert!(stats.code_bytes > 0 && stats.weights_decoded > 0);
+        // the acceptance bound: peak decoded working set ≤ panel_rows × n_in
+        // (panel_rows = 8, max n_in = d_ff = 64), never a full layer
+        assert!(stats.peak_decoded <= 8 * 64, "peak {} elems", stats.peak_decoded);
+        assert!(stats.peak_decoded < 32 * 32, "full layer materialized");
+    }
+
+    #[test]
+    fn streaming_backend_matches_dense_generation() {
+        // compressed-weights serving must generate the same bytes as dense
+        // serving over the dequantized weights of the same container
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+        let mut cap = CalibCapture::new(16, 0);
+        native_fwd::forward(&cfg, &store, &toks, 2, Some(&mut cap)).unwrap();
+        let calib = cap.into_calib_set();
+        let mut opts = PipelineOpts::default();
+        opts.target_bits = 3.0;
+        opts.bit_allocation = false;
+        let (qm, _) =
+            quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).unwrap();
+        let dq = crate::glvq::pipeline::dequantized_store(&qm, &store);
+
+        let mut dense = NativeBackend { cfg, store: dq };
+        let mut streamed = StreamingNativeBackend {
+            cfg,
+            store,
+            qm,
+            engine: StreamingMatmul::new(8, 2),
+            stats: DecodeStats::default(),
+        };
+        let req = [Request::Generate { prompt: b"the kama ".to_vec(), max_new: 6 }];
+        let mut m = ServerMetrics::default();
+        let a = handle_batch(&mut dense, &req, &mut m).remove(0);
+        let b = handle_batch(&mut streamed, &req, &mut m).remove(0);
+        match (a, b) {
+            (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
+                assert_eq!(ta, tb, "streamed generation diverged from dense")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

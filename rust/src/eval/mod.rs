@@ -4,7 +4,11 @@
 //! The native forward mirrors `python/compile/model.py` operation-for-
 //! operation and is cross-checked against the ForwardLoss HLO artifact in
 //! rust/tests/pjrt_parity.rs — it exists so (a) per-layer activations can be
-//! captured for calibration and (b) evaluation runs even without artifacts.
+//! captured for calibration, (b) evaluation runs even without artifacts,
+//! and (c) serving can execute straight from compressed weights: the
+//! forward is generic over [`native_fwd::LinearOp`], whose
+//! [`native_fwd::StreamedLinear`] implementation drives every quantized
+//! linear through the batched streaming decode engine.
 
 pub mod native_fwd;
 pub mod perplexity;

@@ -1,14 +1,70 @@
 //! Pure-rust transformer forward — an exact mirror of model.py — plus
 //! per-layer activation capture for quantizer calibration.
+//!
+//! The forward is generic over how quantizable linear layers are applied
+//! ([`LinearOp`]): [`DenseLinear`] multiplies against dense weights from a
+//! [`TensorStore`] (the seed behaviour), while [`StreamedLinear`] runs
+//! each linear directly from a compressed [`QuantizedModel`] through the
+//! batched [`StreamingMatmul`] engine — the §3.4 serving mode in which no
+//! full dequantized layer is ever materialized.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use crate::linalg::Mat;
 use crate::model::ModelConfig;
+use crate::quant::format::QuantizedModel;
 use crate::tensor::TensorStore;
 use crate::util::rng::Rng;
+
+/// How a quantizable linear layer `x (rows × n_in) → y (rows × n_out)` is
+/// applied. Non-quantizable parameters (embeddings, norm gains) always come
+/// from the dense store.
+pub trait LinearOp {
+    fn apply(&mut self, name: &str, x: &Mat) -> Result<Mat>;
+}
+
+/// Dense weights from a [`TensorStore`] — the default path.
+pub struct DenseLinear<'a> {
+    pub store: &'a TensorStore,
+}
+
+impl LinearOp for DenseLinear<'_> {
+    fn apply(&mut self, name: &str, x: &Mat) -> Result<Mat> {
+        let w = self
+            .store
+            .get(name)
+            .with_context(|| format!("missing {name}"))?
+            .to_mat();
+        Ok(x.matmul(&w))
+    }
+}
+
+/// Compressed-weights execution: every quantized tensor is applied through
+/// the batched streaming engine (`y = x · Wᵀ_q`, decoded panel by panel);
+/// tensors absent from the container fall back to the dense store.
+/// `stats` accumulates decode traffic across all layers and calls.
+pub struct StreamedLinear<'a> {
+    pub qm: &'a QuantizedModel,
+    pub store: &'a TensorStore,
+    pub engine: &'a StreamingMatmul,
+    pub stats: DecodeStats,
+}
+
+impl LinearOp for StreamedLinear<'_> {
+    fn apply(&mut self, name: &str, x: &Mat) -> Result<Mat> {
+        match self.qm.get(name) {
+            Some(qt) => {
+                let mut y = Mat::zeros(x.rows, qt.rows);
+                self.engine.matmul(qt, x, &mut y, &mut self.stats);
+                Ok(y)
+            }
+            None => DenseLinear { store: self.store }.apply(name, x),
+        }
+    }
+}
 
 /// Captures the inputs of each quantizable matmul: tensor name → columns of
 /// activations (n_in × up-to-max_cols), subsampled reservoir-style.
@@ -104,11 +160,27 @@ fn softmax_rows(m: &mut Mat) {
     }
 }
 
-/// Forward pass over one (B × T) token batch. Returns logits (B·T × V).
-/// If `capture` is set, quantizable-matmul inputs are offered to it.
+/// Forward pass over one (B × T) token batch with dense weights. Returns
+/// logits (B·T × V). If `capture` is set, quantizable-matmul inputs are
+/// offered to it.
 pub fn forward(
     cfg: &ModelConfig,
     store: &TensorStore,
+    tokens: &[i32],
+    batch: usize,
+    capture: Option<&mut CalibCapture>,
+) -> Result<Mat> {
+    let mut lin = DenseLinear { store };
+    forward_with(cfg, store, &mut lin, tokens, batch, capture)
+}
+
+/// Forward pass with an explicit [`LinearOp`] for the quantizable linears
+/// (dense or streamed-from-compressed); embeddings and norm gains always
+/// read from `store`.
+pub fn forward_with(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
     tokens: &[i32],
     batch: usize,
     mut capture: Option<&mut CalibCapture>,
@@ -152,9 +224,9 @@ pub fn forward(
             cap.offer(&format!("{p}attn.wk"), &a);
             cap.offer(&format!("{p}attn.wv"), &a);
         }
-        let q = a.matmul(&get(&format!("{p}attn.wq"))?);
-        let k = a.matmul(&get(&format!("{p}attn.wk"))?);
-        let v = a.matmul(&get(&format!("{p}attn.wv"))?);
+        let q = lin.apply(&format!("{p}attn.wq"), &a)?;
+        let k = lin.apply(&format!("{p}attn.wk"), &a)?;
+        let v = lin.apply(&format!("{p}attn.wv"), &a)?;
         let mut att_out = Mat::zeros(batch * t_len, d);
         for b in 0..batch {
             for head in 0..nh {
@@ -194,7 +266,7 @@ pub fn forward(
         if let Some(cap) = capture.as_deref_mut() {
             cap.offer(&format!("{p}attn.wo"), &att_out);
         }
-        let proj = att_out.matmul(&get(&format!("{p}attn.wo"))?);
+        let proj = lin.apply(&format!("{p}attn.wo"), &att_out)?;
         for i in 0..h.data.len() {
             h.data[i] += proj.data[i];
         }
@@ -204,14 +276,14 @@ pub fn forward(
         if let Some(cap) = capture.as_deref_mut() {
             cap.offer(&format!("{p}mlp.w1"), &m);
         }
-        let mut hidden = m.matmul(&get(&format!("{p}mlp.w1"))?);
+        let mut hidden = lin.apply(&format!("{p}mlp.w1"), &m)?;
         for v in hidden.data.iter_mut() {
             *v = gelu_tanh(*v);
         }
         if let Some(cap) = capture.as_deref_mut() {
             cap.offer(&format!("{p}mlp.w2"), &hidden);
         }
-        let mlp_out = hidden.matmul(&get(&format!("{p}mlp.w2"))?);
+        let mlp_out = lin.apply(&format!("{p}mlp.w2"), &hidden)?;
         for i in 0..h.data.len() {
             h.data[i] += mlp_out.data[i];
         }
@@ -221,7 +293,7 @@ pub fn forward(
     if let Some(cap) = capture.as_deref_mut() {
         cap.offer("out", &hf);
     }
-    Ok(hf.matmul(&get("out")?))
+    lin.apply("out", &hf)
 }
 
 /// Total NLL over a batch (matches model.py::nll_sum).
@@ -356,6 +428,57 @@ mod tests {
         for (_, x) in calib.acts {
             assert_eq!(x.cols, 8);
         }
+    }
+
+    #[test]
+    fn streamed_forward_matches_dense_dequantized_forward() {
+        // the compressed-weights serving mode must produce the same logits
+        // as running dense over the dequantized store — without ever
+        // materializing more than one panel of decoded weights
+        let cfg = tiny();
+        let store = init_params(&cfg, 7);
+        let x = toks(&cfg, 2, 21);
+        let mut cap = CalibCapture::new(16, 0);
+        forward(&cfg, &store, &x, 2, Some(&mut cap)).unwrap();
+        let calib = cap.into_calib_set();
+        let mut opts = crate::glvq::pipeline::PipelineOpts::default();
+        opts.target_bits = 3.0;
+        opts.bit_allocation = false;
+        let (qm, _) = crate::glvq::pipeline::quantize_model(
+            &cfg.param_specs(),
+            &store,
+            &calib,
+            &crate::baselines::rtn::RtnQuantizer,
+            &opts,
+        )
+        .unwrap();
+
+        let dq = crate::glvq::pipeline::dequantized_store(&qm, &store);
+        let want = forward(&cfg, &dq, &x, 2, None).unwrap();
+
+        let engine = StreamingMatmul::new(8, 2);
+        let mut lin = StreamedLinear {
+            qm: &qm,
+            store: &store,
+            engine: &engine,
+            stats: DecodeStats::default(),
+        };
+        let got = forward_with(&cfg, &store, &mut lin, &x, 2, None).unwrap();
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // §3.4 bound: peak decoded working set ≤ one panel (panel_rows ×
+        // n_in), far below any full dequantized layer
+        let max_n_in = cfg.d_model.max(cfg.d_ff);
+        assert!(lin.stats.peak_decoded > 0 && lin.stats.code_bytes > 0);
+        assert!(lin.stats.peak_decoded <= engine.panel_rows * max_n_in);
+        let smallest_layer = cfg.d_model * cfg.d_model;
+        assert!(
+            lin.stats.peak_decoded < smallest_layer,
+            "streamed forward materialized a full layer ({} elems)",
+            lin.stats.peak_decoded
+        );
     }
 
     #[test]

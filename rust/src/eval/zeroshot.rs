@@ -93,7 +93,7 @@ fn pad_sequence(prompt: &[i32], continuation: &[i32], seq_len: usize) -> (Vec<i3
     (x, start)
 }
 
-/// Sum of log P(x[t] | x[<t]) for t in [start, start+len). `logits` is the
+/// Sum of `log P(x[t] | x[<t])` for t in `[start, start+len)`. `logits` is the
 /// flattened (seq × vocab) array.
 fn continuation_logprob(logits: &[f32], vocab: usize, x: &[i32], start: usize, len: usize) -> f64 {
     let mut total = 0.0f64;

@@ -17,7 +17,8 @@
 
 use anyhow::Result;
 
-use crate::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use crate::linalg::Mat;
 use crate::data::corpus::Mix;
 use crate::glvq::pipeline::PipelineOpts;
 use crate::info;
@@ -194,21 +195,23 @@ pub fn table4(ws: &mut Workspace) -> Result<String> {
     for method in methods {
         let (qm, dq) = ws.quantize(model, method, 2.0, None)?;
         let ppl = ws.ppl(model, &dq, Mix::Wiki)?.ppl;
-        // one "token" = streaming dequant-matvec through every quantized
-        // tensor (the dequant-GEMV workload of autoregressive decode)
-        let mut sm = StreamingMatvec::new(16);
+        // one "token" = one streaming decode-matmul pass through every
+        // quantized tensor (the dequant-GEMV workload of autoregressive
+        // decode), driven by the same batched engine the serving path uses
+        // (single thread, batch 1: the per-method apples-to-apples setting)
+        let sm = StreamingMatmul::new(16, 1);
         let reps = 20usize;
         let mut stats = DecodeStats::default();
-        let inputs: Vec<Vec<f32>> = qm
+        let inputs: Vec<Mat> = qm
             .tensors
             .iter()
-            .map(|qt| (0..qt.cols).map(|_| rng.normal_f32()).collect())
+            .map(|qt| Mat::random_normal(1, qt.cols, 1.0, &mut rng))
             .collect();
-        let mut outs: Vec<Vec<f32>> = qm.tensors.iter().map(|qt| vec![0.0; qt.rows]).collect();
+        let mut outs: Vec<Mat> = qm.tensors.iter().map(|qt| Mat::zeros(1, qt.rows)).collect();
         let t0 = std::time::Instant::now();
         for _ in 0..reps {
             for (i, qt) in qm.tensors.iter().enumerate() {
-                sm.matvec(qt, &inputs[i], &mut outs[i], &mut stats);
+                sm.matmul(qt, &inputs[i], &mut outs[i], &mut stats);
             }
         }
         let secs = t0.elapsed().as_secs_f64();

@@ -174,6 +174,14 @@ impl Workspace {
         Some((GlvqGroupQuantizer::new(cfg), bit_alloc))
     }
 
+    /// Cache key for a quantization request (shared by the two entry
+    /// points below so container-only and full requests reuse each other).
+    fn quant_key(model: &str, method: &str, bits: f64, opts: &Option<PipelineOpts>) -> String {
+        let gs = opts.as_ref().map_or(128, |o| o.group_size);
+        let entropy = opts.as_ref().is_some_and(|o| o.entropy);
+        format!("{model}:{method}:{bits}:{gs}:{entropy}")
+    }
+
     /// Quantize a trained model with a named method at a bit target.
     /// Method names: glvq-8d / glvq-16d / glvq-32d / glvq-*-u / any
     /// baselines::by_name key. Returns (container, dequantized store).
@@ -184,13 +192,65 @@ impl Workspace {
         bits: f64,
         opts_override: Option<PipelineOpts>,
     ) -> Result<(QuantizedModel, TensorStore)> {
-        let gs = opts_override.as_ref().map_or(128, |o| o.group_size);
-        let entropy = opts_override.as_ref().is_some_and(|o| o.entropy);
-        let key = format!("{model}:{method}:{bits}:{gs}:{entropy}");
+        let key = Self::quant_key(model, method, bits, &opts_override);
         if let Some(hit) = self.quant_cache.get(&key) {
             return Ok(hit.clone());
         }
         let t0 = std::time::Instant::now();
+        let (qm, report) = self.quantize_pipeline(model, method, bits, opts_override)?;
+        if report.tensors.is_empty() {
+            warnlog!("{method}: no tensors quantized");
+        }
+        let store = self.trained_default(model)?;
+        let dq = dequantized_store(&qm, &store);
+        info!(
+            "quantized {model} with {method}@{bits}b: avg_bits={:.3} err={:.2} ({:.1}s)",
+            qm.avg_bits(),
+            report.total_recon_error(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.quant_cache.insert(key, (qm.clone(), dq.clone()));
+        Ok((qm, dq))
+    }
+
+    /// Quantize to the compressed container **only** — the
+    /// `serve --streaming` path. Unlike [`Workspace::quantize`], no dense
+    /// dequantized copy of the model is built or cached, so peak memory
+    /// stays at weights-compressed + activations end to end.
+    pub fn quantize_container(
+        &mut self,
+        model: &str,
+        method: &str,
+        bits: f64,
+        opts_override: Option<PipelineOpts>,
+    ) -> Result<QuantizedModel> {
+        let key = Self::quant_key(model, method, bits, &opts_override);
+        if let Some((qm, _)) = self.quant_cache.get(&key) {
+            return Ok(qm.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let (qm, report) = self.quantize_pipeline(model, method, bits, opts_override)?;
+        if report.tensors.is_empty() {
+            warnlog!("{method}: no tensors quantized");
+        }
+        info!(
+            "quantized {model} with {method}@{bits}b (container only): avg_bits={:.3} err={:.2} ({:.1}s)",
+            qm.avg_bits(),
+            report.total_recon_error(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(qm)
+    }
+
+    /// Shared pipeline body: train/load, calibrate, dispatch to the named
+    /// quantizer. No caching, no dequantized store.
+    fn quantize_pipeline(
+        &mut self,
+        model: &str,
+        method: &str,
+        bits: f64,
+        opts_override: Option<PipelineOpts>,
+    ) -> Result<(QuantizedModel, crate::glvq::pipeline::PipelineReport)> {
         let cfg = self.model_cfg(model)?;
         let store = self.trained_default(model)?;
         let calib = self.calibration(model, 192)?;
@@ -237,18 +297,7 @@ impl Workspace {
             opts.bit_allocation = false; // baselines use uniform allocation
             quantize_model(&specs, &store, &calib, &*q, &opts)?
         };
-        if report.tensors.is_empty() {
-            warnlog!("{method}: no tensors quantized");
-        }
-        let dq = dequantized_store(&qm, &store);
-        info!(
-            "quantized {model} with {method}@{bits}b (gs={gs}): avg_bits={:.3} err={:.2} ({:.1}s)",
-            qm.avg_bits(),
-            report.total_recon_error(),
-            t0.elapsed().as_secs_f64()
-        );
-        self.quant_cache.insert(key, (qm.clone(), dq.clone()));
-        Ok((qm, dq))
+        Ok((qm, report))
     }
 
     /// Calibration with an explicit column budget (Table-11 sweep).

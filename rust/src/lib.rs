@@ -11,8 +11,15 @@
 //!   AOT-lowered to HLO text under `artifacts/`, loaded at runtime through
 //!   the PJRT C API ([`runtime`]).
 //!
+//! Serving runs directly from compressed weights: the batched
+//! multi-threaded [`coordinator::decode_stream::StreamingMatmul`] engine
+//! decodes each group-panel once per batch and never materializes a full
+//! dequantized layer.
+//!
 //! Layout follows DESIGN.md §4; every public item is documented and every
-//! module carries unit tests.
+//! module carries unit tests. The repo-root docs are the entry points:
+//! `ARCHITECTURE.md` (module map + paper-section index) and `FORMAT.md`
+//! (the byte-level `.glvq` container specification).
 
 pub mod util;
 pub mod linalg;

@@ -156,7 +156,7 @@ pub fn cholesky(a: &Mat) -> Result<Mat, DecompError> {
 }
 
 /// Modified Gram-Schmidt on the *columns* of B. Returns (B*, mu) where B*'s
-/// columns are orthogonal and mu[j][i] (j < i) are the projection
+/// columns are orthogonal and `mu[j][i]` (j < i) are the projection
 /// coefficients — exactly the quantities in the Appendix-A Babai bound.
 pub fn gram_schmidt(b: &Mat) -> (Mat, Mat) {
     let n = b.cols;

@@ -16,7 +16,11 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use glvq::config::GlvqConfig;
-use glvq::coordinator::server::{self, NativeBackend, Request, Response, ServerOpts};
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::coordinator::scheduler;
+use glvq::coordinator::server::{
+    self, NativeBackend, Request, Response, ServerOpts, StreamingNativeBackend,
+};
 use glvq::data::corpus::{Corpus, Mix};
 use glvq::exp::{tables, Workspace};
 use glvq::glvq::pipeline::PipelineOpts;
@@ -72,13 +76,19 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   quantize  --model s|m --method glvq-8d|rtn|gptq|... --bits B [--entropy] --out FILE
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
   eval      --model s|m --method M --bits B [--zeroshot]
-  serve     --model s|m [--quantized METHOD --bits B] (reads 'gen <prompt>' lines)
+  serve     --model s|m [--quantized METHOD --bits B] [--streaming]
+            [--threads N] [--panel-rows R] (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
   info      [--artifacts DIR] [--container FILE.glvq]
 
   --entropy    rANS entropy-code the packed lattice codes (.glvq v2):
                smaller files at the same nominal bits, decoded losslessly
                by the streaming runtime
+  --streaming  serve directly from the compressed container through the
+               batched StreamingMatmul engine: every linear layer decodes
+               panel-by-panel per batch, no full dequantized layer is ever
+               materialized (implies --quantized, default glvq-8d)
+  --threads    decode worker threads for --streaming (default: cores - 1)
   --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
 
 fn main() -> Result<()> {
@@ -173,19 +183,49 @@ fn main() -> Result<()> {
         "serve" => {
             let model = args.get("model", "s");
             let mut ws = Workspace::new(&artifacts, &dir)?;
-            let method = args.get("quantized", "none");
+            let streaming = args.flags.get("streaming").is_some_and(|v| v != "false");
+            let method = args.get("quantized", if streaming { "glvq-8d" } else { "none" });
             let bits = args.get_f64("bits", 2.0);
-            let store: TensorStore = if method == "none" {
-                ws.trained_default(&model)?
-            } else {
-                ws.quantize(&model, &method, bits, None)?.1
-            };
             let cfg = ws.model_cfg(&model)?;
-            let handle = server::start(
-                move || Ok(Box::new(NativeBackend { cfg, store }) as Box<_>),
-                ServerOpts::default(),
-            );
-            info!("serving model {model} (quantized={method}); type: gen <prompt> | score <p> | quit");
+            let handle = if streaming {
+                // serve straight from the compressed container: the batched
+                // streaming engine decodes each group-panel once per batch
+                let threads = args.get_usize("threads", scheduler::default_threads());
+                let panel_rows = args.get_usize("panel-rows", 16);
+                // container-only quantization: no dense dequantized copy is
+                // ever built, so the no-full-layer claim holds process-wide
+                let qm = ws.quantize_container(&model, &method, bits, None)?;
+                let store = ws.trained_default(&model)?;
+                info!(
+                    "streaming backend: {} tensors, {} decode threads, {} panel rows",
+                    qm.tensors.len(),
+                    threads,
+                    panel_rows
+                );
+                server::start(
+                    move || {
+                        Ok(Box::new(StreamingNativeBackend {
+                            cfg,
+                            store,
+                            qm,
+                            engine: StreamingMatmul::new(panel_rows, threads),
+                            stats: DecodeStats::default(),
+                        }) as Box<_>)
+                    },
+                    ServerOpts::default(),
+                )
+            } else {
+                let store: TensorStore = if method == "none" {
+                    ws.trained_default(&model)?
+                } else {
+                    ws.quantize(&model, &method, bits, None)?.1
+                };
+                server::start(
+                    move || Ok(Box::new(NativeBackend { cfg, store }) as Box<_>),
+                    ServerOpts::default(),
+                )
+            };
+            info!("serving model {model} (quantized={method}, streaming={streaming}); type: gen <prompt> | score <p> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             loop {

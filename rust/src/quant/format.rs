@@ -1,6 +1,10 @@
 //! `.glvq` container: the on-disk format for a fully quantized model.
 //!
-//! Layout (little-endian):
+//! **The normative byte-level specification is `FORMAT.md` at the repo
+//! root** (magic/version/tensor/group layouts, payload tag encoding,
+//! chunk framing, CRC coverage, v1↔v2 compatibility rules); its offsets
+//! are cross-checked against this implementation by
+//! `rust/tests/format_spec.rs`. Summary of the layout (little-endian):
 //!   magic "GLVQ" | u32 version (1 or 2)
 //!   u32 n_tensors
 //!   per tensor: name | u32 rows | u32 cols | u32 n_groups
@@ -492,7 +496,7 @@ impl QuantizedModel {
             .any(|t| t.groups.iter().any(|(_, _, g)| g.codes.is_entropy()))
     }
 
-    /// The container version [`save`](QuantizedModel::save) will emit.
+    /// The container version [`QuantizedModel::save`] will emit.
     pub fn container_version(&self) -> u32 {
         if self.has_entropy_payloads() {
             VERSION_V2

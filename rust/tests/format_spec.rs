@@ -1,0 +1,169 @@
+//! FORMAT.md cross-check: parse a `.glvq` container **by hand**, using
+//! only byte offsets and field layouts taken from the spec, and verify
+//! both that the fields hold the expected values and that the library
+//! round-trips the same file. If `quant/format.rs` and FORMAT.md ever
+//! disagree, this test fails.
+
+use std::path::PathBuf;
+
+use glvq::quant::format::{QuantizedModel, QuantizedTensor, VERSION_V1, VERSION_V2};
+use glvq::quant::pack::PackedCodes;
+use glvq::quant::traits::{QuantizedGroup, SideInfo};
+use glvq::tensor::crc32;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("glvq_spec_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("m.glvq")
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn f32_at(b: &[u8], off: usize) -> f32 {
+    f32::from_bits(u32_at(b, off))
+}
+
+/// The FORMAT.md "worked example": one tensor "t", one 4×4 2-bit RTN
+/// group with uniform side info.
+fn worked_example() -> QuantizedModel {
+    let codes: Vec<i32> = (0..16).map(|i| (i % 4) - 2).collect(); // 2-bit range
+    QuantizedModel {
+        tensors: vec![QuantizedTensor {
+            name: "t".into(),
+            rows: 4,
+            cols: 4,
+            groups: vec![(
+                0,
+                0,
+                QuantizedGroup {
+                    method: "rtn",
+                    bits: 2,
+                    rows: 4,
+                    cols: 4,
+                    codes: PackedCodes::pack(&codes, 2).into(),
+                    side: SideInfo::Uniform { scale: 0.5, zero: 0.125 },
+                },
+            )],
+        }],
+    }
+}
+
+#[test]
+fn v1_worked_example_offsets_match_format_md() {
+    let m = worked_example();
+    assert_eq!(m.container_version(), VERSION_V1);
+    let path = tmp("v1");
+    m.save(&path).unwrap();
+    let b = std::fs::read(&path).unwrap();
+
+    // top-level layout
+    assert_eq!(&b[0..4], b"GLVQ", "magic at offset 0");
+    assert_eq!(u32_at(&b, 4), VERSION_V1, "version at offset 4");
+    assert_eq!(u32_at(&b, 8), 1, "n_tensors at offset 8");
+
+    // tensor record at offset 12 (0x0C)
+    assert_eq!(u32_at(&b, 0x0C), 1, "name_len");
+    assert_eq!(b[0x10], b't', "name byte");
+    assert_eq!(u32_at(&b, 0x11), 4, "tensor rows");
+    assert_eq!(u32_at(&b, 0x15), 4, "tensor cols");
+    assert_eq!(u32_at(&b, 0x19), 1, "n_groups");
+
+    // group record at 0x1D
+    assert_eq!(b[0x1D], 2, "method_tag rtn");
+    assert_eq!(b[0x1E], 2, "group bits");
+    assert_eq!(u32_at(&b, 0x1F), 4, "group rows");
+    assert_eq!(u32_at(&b, 0x23), 4, "group cols");
+    assert_eq!(u32_at(&b, 0x27), 0, "row_offset");
+    assert_eq!(u32_at(&b, 0x2B), 0, "col_offset");
+
+    // v1 fixed payload (no tag byte) at 0x2F
+    assert_eq!(b[0x2F], 2, "payload bits");
+    assert_eq!(u32_at(&b, 0x30), 16, "payload n");
+    assert_eq!(u32_at(&b, 0x34), 4, "payload byte_len = ceil(16*2/8)");
+    // 4 packed-code bytes at 0x38..0x3C
+
+    // side info at 0x3C
+    assert_eq!(b[0x3C], 1, "side_tag uniform");
+    assert_eq!(f32_at(&b, 0x3D), 0.5, "uniform scale");
+    assert_eq!(f32_at(&b, 0x41), 0.125, "uniform zero");
+
+    // trailing CRC over [4, EOF-4)
+    assert_eq!(b.len(), 0x49, "total size from the spec");
+    let stored = u32_at(&b, b.len() - 4);
+    assert_eq!(stored, crc32(&b[4..b.len() - 4]), "CRC-32 coverage");
+
+    // and the library agrees with the hand parse
+    assert_eq!(QuantizedModel::load(&path).unwrap(), m);
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn v2_payload_tags_match_format_md() {
+    // same model, rANS-coded → v2; the group header layout is unchanged,
+    // the payload gains a tag byte and the rANS body of the spec
+    let mut m = worked_example();
+    let g = &mut m.tensors[0].groups[0].2;
+    g.codes = g.codes.to_entropy(8, 2); // chunk_len 8, 2 lanes → 2 chunks
+    assert_eq!(m.container_version(), VERSION_V2);
+    let path = tmp("v2");
+    m.save(&path).unwrap();
+    let b = std::fs::read(&path).unwrap();
+
+    assert_eq!(&b[0..4], b"GLVQ");
+    assert_eq!(u32_at(&b, 4), VERSION_V2, "version 2");
+    // header fields identical to v1 up to the payload...
+    assert_eq!(b[0x1D], 2, "method_tag");
+    assert_eq!(u32_at(&b, 0x27), 0, "row_offset");
+    // ...then the v2 payload tag byte
+    assert_eq!(b[0x2F], 1, "payload_tag = rans");
+    let mut off = 0x30;
+    assert_eq!(b[off], 2, "rans bits");
+    off += 1;
+    assert_eq!(u32_at(&b, off), 16, "rans n");
+    off += 4;
+    assert_eq!(u32_at(&b, off), 8, "rans chunk_len");
+    off += 4;
+    let lanes = b[off] as usize;
+    assert_eq!(lanes, 2, "rans lanes");
+    off += 1;
+    let n_syms = u32_at(&b, off) as usize;
+    off += 4;
+    assert_eq!(n_syms, (1 << 2) + 1, "alphabet = 2^bits + escape");
+    // 12-bit table: entries sum to 4096, all nonzero
+    let mut sum = 0u32;
+    for s in 0..n_syms {
+        let f = u16::from_le_bytes(b[off + 2 * s..off + 2 * s + 2].try_into().unwrap());
+        assert!(f > 0, "freq[{s}] must be >= 1");
+        sum += f as u32;
+    }
+    assert_eq!(sum, 4096, "freq table sums to PROB_SCALE");
+    off += 2 * n_syms;
+    let n_chunks = u32_at(&b, off) as usize;
+    off += 4;
+    assert_eq!(n_chunks, 2, "ceil(16/8) chunks");
+    for ci in 0..n_chunks {
+        off += 4 * lanes; // final rANS states
+        let stream_len = u32_at(&b, off) as usize;
+        off += 4 + stream_len;
+        let n_escapes = u32_at(&b, off) as usize;
+        off += 4 + 4 * n_escapes;
+        assert!(n_escapes <= 8, "chunk {ci} escape bound");
+    }
+    // side info follows immediately, then the CRC closes the file
+    assert_eq!(b[off], 1, "side_tag after last chunk");
+    assert_eq!(f32_at(&b, off + 1), 0.5, "uniform scale");
+    assert_eq!(off + 1 + 8 + 4, b.len(), "side body + CRC reach EOF");
+    let stored = u32_at(&b, b.len() - 4);
+    assert_eq!(stored, crc32(&b[4..b.len() - 4]), "CRC-32 coverage");
+
+    let loaded = QuantizedModel::load(&path).unwrap();
+    assert_eq!(loaded, m);
+    // v1→v2 re-encode is lossless: both decode to identical weights
+    assert_eq!(
+        loaded.tensors[0].dequantize().data,
+        worked_example().tensors[0].dequantize().data
+    );
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
