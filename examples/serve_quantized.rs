@@ -1,29 +1,34 @@
 //! **What it demonstrates:** serving directly from a compressed `.glvq`
-//! container — load (or build) a quantized model, sanity-check the batched
-//! multi-threaded streaming decoder against the decode-stats model, then
-//! serve a burst of mixed generate/score requests through
-//! `StreamingNativeBackend`, which runs every linear layer panel-by-panel
-//! from the compressed codes (no layer is ever fully dequantized).
+//! container *through the paged KV cache* — load (or build) a quantized
+//! model, drive the cache-aware streaming backend by hand to measure
+//! prefill vs decode throughput (decode steps are O(T) one-token
+//! incremental forwards instead of O(T²) full recomputes), then serve a
+//! burst of mixed generate/score requests through the lockstep server.
+//! Every linear layer still streams panel-by-panel from the compressed
+//! codes, and retired KV pages are themselves compressed with the grouped
+//! lattice quantizer (8-bit pages here).
 //!
-//! **Expected output** (values vary with hardware/seed): a "streaming
-//! decode" line reporting MB touched per token-batch and a peak panel far
-//! below the layer size, then a metrics line like
-//! `served 8 generates + 4 scores: requests=12 tokens=... tok/s=...
-//! decoded=...MB peak_panel=...elems`, and exit code 0.
+//! **Expected output** (values vary with hardware/seed): a
+//! "prefill ... tok/s" and a much larger "decode ... tok/s" line with the
+//! cache counters (pages in use / quantized, resident bytes), then a
+//! server metrics line like `served 8 generates + 4 scores: requests=12
+//! ... decoded=...MB ... kv_pages=...` and exit code 0.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_quantized
 //! [-- --model s]`  (needs trained checkpoints, i.e. a PJRT-enabled build)
 
-use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use std::time::Instant;
+
+use glvq::coordinator::decode_stream::StreamingMatmul;
 use glvq::coordinator::scheduler;
 use glvq::coordinator::server::{
-    self, Request, Response, ServerOpts, StreamingNativeBackend,
+    self, CachedNativeBackend, LmBackend, Request, Response, ServerOpts,
 };
+use glvq::eval::native_fwd::argmax_logit;
 use glvq::exp::Workspace;
 use glvq::info;
-use glvq::linalg::Mat;
+use glvq::kvcache::KvCacheOpts;
 use glvq::quant::format::QuantizedModel;
-use glvq::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     glvq::util::logging::set_level(glvq::util::logging::Level::Info);
@@ -46,39 +51,64 @@ fn main() -> anyhow::Result<()> {
         info!("wrote container {}", path.display());
         qm
     };
-
-    // streaming-decode sanity: one batch of 4 "tokens" through every
-    // layer; each group-panel is decoded exactly once for the whole batch
-    let threads = scheduler::default_threads();
-    let engine = StreamingMatmul::new(16, threads);
-    let mut stats = DecodeStats::default();
-    let mut rng = Rng::new(3);
-    for qt in &qm.tensors {
-        let x = Mat::random_normal(4, qt.cols, 1.0, &mut rng);
-        let mut y = Mat::zeros(4, qt.rows);
-        engine.matmul(qt, &x, &mut y, &mut stats);
-    }
-    info!(
-        "streaming decode: {} tensors on {} threads, {:.2} MB touched/batch, peak panel {} elems",
-        qm.tensors.len(),
-        threads,
-        stats.total_bytes() as f64 / 1e6,
-        qm.tensors.iter().map(|t| engine.peak_panel_elems(t)).max().unwrap_or(0)
-    );
-
-    // serve a burst of requests straight from the compressed weights: the
-    // server drains them into lockstep batches, so every decode is
-    // amortized across all concurrently-active sequences
     let cfg = ws.model_cfg(&model)?;
+    let threads = scheduler::default_threads();
+    let kv = KvCacheOpts { page_rows: 16, quantize: true, kv_bits: 8, ..Default::default() };
+
+    // ---- drive the cache-aware backend by hand: prefill vs decode ----
+    let mut backend = CachedNativeBackend::streaming(
+        cfg,
+        store.clone(),
+        qm.clone(),
+        StreamingMatmul::new(16, threads),
+        kv,
+    );
+    let batch = 4usize;
+    let gen = 32usize;
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|i| format!("the sentence {i} ").into_bytes().iter().map(|&b| b as i32).collect())
+        .collect();
+    let mut prefixes = prompts.clone();
+    let views: Vec<&[i32]> = prefixes.iter().map(|p| p.as_slice()).collect();
+    let t0 = Instant::now();
+    let first = backend.logits_last_batch(&views)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let prompt_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+    for (p, l) in prefixes.iter_mut().zip(&first) {
+        p.push(argmax_logit(l));
+    }
+    let t1 = Instant::now();
+    for _ in 1..gen {
+        let views: Vec<&[i32]> = prefixes.iter().map(|p| p.as_slice()).collect();
+        let logits = backend.logits_last_batch(&views)?;
+        for (p, l) in prefixes.iter_mut().zip(&logits) {
+            p.push(argmax_logit(l));
+        }
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    let stats = backend.cache_stats().expect("cache-aware backend reports kv stats");
+    info!(
+        "prefill {:.1} tok/s ({} prompt tokens), decode {:.1} tok/s ({} steps x {batch} seqs)",
+        prompt_tokens as f64 / prefill_s.max(1e-9),
+        prompt_tokens,
+        (batch * (gen - 1)) as f64 / decode_s.max(1e-9),
+        gen - 1
+    );
+    info!(
+        "kv cache: {} pages in use (peak {}), {} quantized, {:.1} KB resident, {:.2} MB decoded",
+        stats.pages_in_use,
+        stats.peak_pages,
+        stats.pages_quantized,
+        stats.bytes_in_use as f64 / 1e3,
+        stats.decoded_bytes as f64 / 1e6
+    );
+    backend.end_batch();
+
+    // ---- same backend kind behind the lockstep server ----
     let handle = server::start(
         move || {
-            Ok(Box::new(StreamingNativeBackend {
-                cfg,
-                store,
-                qm,
-                engine: StreamingMatmul::new(16, threads),
-                stats: DecodeStats::default(),
-            }) as Box<_>)
+            let engine = StreamingMatmul::new(16, threads);
+            Ok(Box::new(CachedNativeBackend::streaming(cfg, store, qm, engine, kv)) as Box<_>)
         },
         ServerOpts { max_batch: 8 },
     );

@@ -1,0 +1,175 @@
+//! Bench: KV-cache serving — prefill vs decode tokens/s and cache
+//! bytes/token over the {uncached, cached-f32, cached-q4} × batch
+//! {1, 4, 16} grid, all on the same tiny model and prompts.
+//!
+//! The uncached backend re-runs the full padded forward for every
+//! generated token (O(T²) per sequence); the cache-aware backend prefills
+//! once and then takes O(T) one-token lockstep steps. "cached-q4" retires
+//! full KV pages through the grouped lattice quantizer at 4 bits.
+//!
+//! Asserted acceptance (ISSUE 3): at batch 4 on a 256-token generation,
+//! cached-f32 decode reaches ≥ 3× the uncached tokens/s *and* generates
+//! bit-identical tokens. Off-assert cells use a shorter generation to
+//! keep the bench quick; each JSON record carries its `gen` length.
+//!
+//! Results are appended to `runs/bench/kvcache.json` so successive runs
+//! form a trajectory (`{"runs": [...]}`).
+//!
+//! Run: `cargo bench --bench bench_kvcache`
+
+use std::time::Instant;
+
+use glvq::coordinator::server::{CachedNativeBackend, LmBackend, NativeBackend};
+use glvq::eval::native_fwd::argmax_logit;
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+const PROMPT: usize = 8;
+const GEN_ASSERT: usize = 256; // batch-4 cells (the asserted ≥256-token run)
+const GEN_QUICK: usize = 64; // other cells
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kvbench",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 288,
+        batch_train: 4,
+        batch_eval: 4,
+    }
+}
+
+struct Cell {
+    prefill_ms: f64,
+    decode_tok_s: f64,
+    cache_bytes_per_tok: f64,
+    generated: Vec<Vec<i32>>,
+}
+
+/// Lockstep-generate `gen` tokens per sequence; the first call is the
+/// prefill (timed separately), the remaining `gen − 1` are decode steps.
+fn run_cell(backend: &mut dyn LmBackend, prompts: &[Vec<i32>], gen: usize) -> Cell {
+    let mut prefixes = prompts.to_vec();
+    let t0 = Instant::now();
+    let views: Vec<&[i32]> = prefixes.iter().map(|p| p.as_slice()).collect();
+    let first = backend.logits_last_batch(&views).expect("prefill failed");
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+    for (p, l) in prefixes.iter_mut().zip(&first) {
+        p.push(argmax_logit(l));
+    }
+    let t1 = Instant::now();
+    for _ in 1..gen {
+        let views: Vec<&[i32]> = prefixes.iter().map(|p| p.as_slice()).collect();
+        let logits = backend.logits_last_batch(&views).expect("decode step failed");
+        for (p, l) in prefixes.iter_mut().zip(&logits) {
+            p.push(argmax_logit(l));
+        }
+    }
+    let decode_secs = t1.elapsed().as_secs_f64().max(1e-9);
+    let cached_tokens: usize = prefixes.iter().map(|p| p.len()).sum();
+    let cache_bytes_per_tok = backend
+        .cache_stats()
+        .map(|s| s.bytes_in_use as f64 / cached_tokens as f64)
+        .unwrap_or(0.0);
+    backend.end_batch();
+    Cell {
+        prefill_ms,
+        decode_tok_s: (prompts.len() * (gen - 1)) as f64 / decode_secs,
+        cache_bytes_per_tok,
+        generated: prefixes
+            .iter()
+            .zip(prompts)
+            .map(|(p, q)| p[q.len()..].to_vec())
+            .collect(),
+    }
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let store = init_params(&cfg, 0);
+    println!(
+        "# kv-cache serving: d={} L={} seq={} — mode x batch grid, prompt {PROMPT}",
+        cfg.d_model, cfg.n_layer, cfg.seq_len
+    );
+    let kv_f32 = KvCacheOpts { page_rows: 16, ..Default::default() };
+    let kv_q4 =
+        KvCacheOpts { page_rows: 16, quantize: true, kv_bits: 4, ..Default::default() };
+    let mut entries: Vec<Json> = Vec::new();
+    let mut assert_cells: Vec<(String, f64, Vec<Vec<i32>>)> = Vec::new();
+
+    for &batch in &[1usize, 4, 16] {
+        let gen = if batch == 4 { GEN_ASSERT } else { GEN_QUICK };
+        let mut rng = Rng::new(100 + batch as u64);
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..PROMPT).map(|_| rng.below(256) as i32).collect())
+            .collect();
+        for mode in ["uncached", "cached-f32", "cached-q4"] {
+            let mut backend: Box<dyn LmBackend> = match mode {
+                "uncached" => Box::new(NativeBackend { cfg, store: store.clone() }),
+                "cached-f32" => Box::new(CachedNativeBackend::dense(cfg, store.clone(), kv_f32)),
+                _ => Box::new(CachedNativeBackend::dense(cfg, store.clone(), kv_q4)),
+            };
+            let cell = run_cell(&mut *backend, &prompts, gen);
+            println!(
+                "{mode:<11} b{batch:<3} gen {gen:<4} prefill {:>8.1} ms  decode {:>9.1} tok/s  kv {:>7.1} B/tok",
+                cell.prefill_ms, cell.decode_tok_s, cell.cache_bytes_per_tok
+            );
+            entries.push(Json::obj(vec![
+                ("mode", Json::str(mode)),
+                ("batch", Json::num(batch as f64)),
+                ("gen", Json::num(gen as f64)),
+                ("prefill_ms", Json::num(cell.prefill_ms)),
+                ("decode_tok_s", Json::num(cell.decode_tok_s)),
+                ("cache_bytes_per_tok", Json::num(cell.cache_bytes_per_tok)),
+            ]));
+            if batch == 4 {
+                assert_cells.push((mode.to_string(), cell.decode_tok_s, cell.generated));
+            }
+        }
+    }
+
+    // ---- acceptance: ≥ 3× decode speedup at batch 4, identical tokens ----
+    let uncached = assert_cells.iter().find(|c| c.0 == "uncached").expect("uncached cell");
+    let cached = assert_cells.iter().find(|c| c.0 == "cached-f32").expect("cached cell");
+    let speedup = cached.1 / uncached.1.max(1e-9);
+    println!("  cached-f32 vs uncached decode at batch 4: {speedup:.2}x tokens/s");
+    assert!(
+        cached.2 == uncached.2,
+        "f32-cached generation diverged from the uncached path"
+    );
+    assert!(
+        speedup >= 3.0,
+        "kv cache only {speedup:.2}x over full recompute at batch 4 (need >= 3x)"
+    );
+
+    // append this run to the bench JSON trajectory
+    let dir = std::path::Path::new("runs/bench");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("WARN cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join("kvcache.json");
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
+    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(Json::obj(vec![
+        ("unix_time", Json::num(stamp as f64)),
+        ("measurements", Json::Arr(entries)),
+    ]));
+    doc.set("runs", Json::Arr(runs));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("appended trajectory point to {}", path.display()),
+        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
+    }
+}

@@ -2,11 +2,14 @@
 //! p50/p95/p99 latencies and throughput for the server and Table-4 bench,
 //! plus the cumulative streaming-decode traffic
 //! ([`crate::coordinator::decode_stream::DecodeStats`]) when the backend
-//! executes from compressed weights.
+//! executes from compressed weights, and KV-cache occupancy/quantization
+//! counters ([`crate::kvcache::KvCacheStats`]) when it serves through the
+//! paged cache.
 
 use std::time::Instant;
 
 use crate::coordinator::decode_stream::DecodeStats;
+use crate::kvcache::KvCacheStats;
 
 /// Streaming latency histogram (reservoir of raw samples; exact quantiles
 /// for ≤ capacity samples, uniform subsample beyond).
@@ -74,6 +77,9 @@ pub struct ServerMetrics {
     /// cumulative streaming-decode traffic, when the backend serves from
     /// compressed weights (None for dense/PJRT backends)
     pub decode: Option<DecodeStats>,
+    /// KV-cache occupancy / quantization / decode counters, when the
+    /// backend serves through the paged cache (None otherwise)
+    pub kv_cache: Option<KvCacheStats>,
 }
 
 impl Default for ServerMetrics {
@@ -85,6 +91,7 @@ impl Default for ServerMetrics {
             batches: 0,
             latency: LatencyHist::new(4096),
             decode: None,
+            kv_cache: None,
         }
     }
 }
@@ -115,6 +122,15 @@ impl ServerMetrics {
                 " decoded={:.2}MB peak_panel={}elems",
                 d.total_bytes() as f64 / 1e6,
                 d.peak_decoded
+            ));
+        }
+        if let Some(c) = &self.kv_cache {
+            out.push_str(&format!(
+                " kv_pages={}(peak {}) kv_quantized={} kv_decoded={:.2}MB",
+                c.pages_in_use,
+                c.peak_pages,
+                c.pages_quantized,
+                c.decoded_bytes as f64 / 1e6
             ));
         }
         out
@@ -154,5 +170,22 @@ mod tests {
         let h = LatencyHist::new(8);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn report_includes_kv_cache_section_when_present() {
+        let mut m = ServerMetrics::default();
+        assert!(!m.report().contains("kv_pages"));
+        m.kv_cache = Some(KvCacheStats {
+            pages_in_use: 2,
+            peak_pages: 5,
+            pages_quantized: 3,
+            decoded_bytes: 1_000_000,
+            ..Default::default()
+        });
+        let r = m.report();
+        assert!(r.contains("kv_pages=2(peak 5)"), "{r}");
+        assert!(r.contains("kv_quantized=3"), "{r}");
+        assert!(r.contains("kv_decoded=1.00MB"), "{r}");
     }
 }

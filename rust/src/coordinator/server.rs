@@ -1,15 +1,19 @@
 //! Batched LM serving loop: the L3 request path over the quantized model.
 //!
 //! A worker thread owns the model backend (native forward, streamed
-//! compressed-weights forward, or PJRT logits artifact), drains the
-//! request queue into bounded batches, and steps all requests of a batch
-//! in **lockstep**: every active generate/score sequence contributes one
-//! prefix to a single [`LmBackend::logits_last_batch`] call per step, so a
-//! batched backend runs one forward (and, for
-//! [`StreamingNativeBackend`], one streaming decode of each weight panel)
-//! for the whole batch. [`super::metrics::ServerMetrics`] tracks
-//! latency/throughput and, for streamed backends, cumulative decode
-//! traffic (the Table-4 runtime story at serving granularity).
+//! compressed-weights forward, cache-aware forward, or PJRT logits
+//! artifact), drains the request queue into bounded batches, and steps all
+//! requests of a batch in **lockstep**: every active generate/score
+//! sequence contributes one prefix to a single
+//! [`LmBackend::logits_last_batch`] call per step, so a batched backend
+//! runs one forward (and, for [`StreamingNativeBackend`], one streaming
+//! decode of each weight panel) for the whole batch.
+//! [`CachedNativeBackend`] additionally turns those lockstep calls into
+//! *prefill once, then one-token steps* against a paged
+//! [`crate::kvcache::PagedKvCache`], dropping per-token cost from O(T²)
+//! to O(T). [`super::metrics::ServerMetrics`] tracks latency/throughput
+//! plus, per backend kind, cumulative weight-decode traffic and KV-cache
+//! occupancy/quantization counters.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -17,7 +21,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
-use crate::eval::native_fwd::{self, StreamedLinear};
+use crate::eval::native_fwd::{self, DenseLinear, LinearOp, StreamedLinear};
+use crate::kvcache::{KvCacheOpts, KvCacheStats, PagedKvCache, SeqId};
+use crate::linalg::Mat;
 use crate::model::ModelConfig;
 use crate::quant::format::QuantizedModel;
 use crate::runtime::exec::LogitsExec;
@@ -45,6 +51,17 @@ pub trait LmBackend {
     /// Cumulative streaming-decode statistics, if this backend executes
     /// from compressed weights (None for dense/PJRT backends).
     fn decode_stats(&self) -> Option<DecodeStats> {
+        None
+    }
+
+    /// Called by the lockstep loop when a drained batch fully completes;
+    /// cache-aware backends release per-sequence state here. No-op by
+    /// default.
+    fn end_batch(&mut self) {}
+
+    /// KV-cache counters, if this backend maintains a paged KV cache
+    /// (None for cacheless backends).
+    fn cache_stats(&self) -> Option<KvCacheStats> {
         None
     }
 }
@@ -149,6 +166,270 @@ impl LmBackend for StreamingNativeBackend {
 
     fn decode_stats(&self) -> Option<DecodeStats> {
         Some(self.stats)
+    }
+}
+
+/// One live cached sequence inside [`CachedNativeBackend`]: the tokens it
+/// has consumed so far plus its cache handle.
+struct LiveSeq {
+    tokens: Vec<i32>,
+    id: SeqId,
+}
+
+/// Cache-aware native backend: a paged (optionally GLVQ-quantized) KV
+/// cache makes decode O(T) per generated token instead of the O(T²)
+/// full-prefix recompute the cacheless backends pay.
+///
+/// The backend recognizes lockstep stepping through the unchanged
+/// [`LmBackend::logits_last_batch`] interface: a prefix that extends a
+/// live sequence by exactly one token becomes a batched
+/// `step_with_cache` (one incremental forward for all stepping
+/// sequences); anything else — first contact with a prompt, an empty
+/// prompt, or a prefix longer than `seq_len` (the sliding-window regime,
+/// where cached positions shift every step) — runs a fresh prefill.
+/// With f32 cache pages the produced logits are bit-identical to
+/// [`NativeBackend`] / [`StreamingNativeBackend`] over the same prefixes
+/// (`tests/kvcache_parity.rs`); quantized pages trade exactness for a
+/// smaller resident cache. [`LmBackend::end_batch`] evicts all live
+/// sequences, returning their pages to the shared arena.
+pub struct CachedNativeBackend {
+    cfg: ModelConfig,
+    store: TensorStore,
+    /// compressed container for streamed linears (None = dense weights)
+    qm: Option<QuantizedModel>,
+    engine: StreamingMatmul,
+    stats: DecodeStats,
+    cache: PagedKvCache,
+    live: Vec<LiveSeq>,
+}
+
+impl CachedNativeBackend {
+    /// Cache-aware backend over dense weights.
+    pub fn dense(cfg: ModelConfig, store: TensorStore, kv: KvCacheOpts) -> CachedNativeBackend {
+        CachedNativeBackend {
+            cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, kv),
+            cfg,
+            store,
+            qm: None,
+            engine: StreamingMatmul::new(16, 1),
+            stats: DecodeStats::default(),
+            live: Vec::new(),
+        }
+    }
+
+    /// Cache-aware backend executing every quantized linear straight from
+    /// the compressed container through the streaming engine.
+    pub fn streaming(
+        cfg: ModelConfig,
+        store: TensorStore,
+        qm: QuantizedModel,
+        engine: StreamingMatmul,
+        kv: KvCacheOpts,
+    ) -> CachedNativeBackend {
+        CachedNativeBackend {
+            cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, kv),
+            cfg,
+            store,
+            qm: Some(qm),
+            engine,
+            stats: DecodeStats::default(),
+            live: Vec::new(),
+        }
+    }
+
+    /// Run `f` with the right [`LinearOp`] for this backend's weight mode
+    /// (dense store or streamed compressed container), folding decode
+    /// stats back afterwards.
+    fn run_cached<F>(&mut self, f: F) -> Result<Mat>
+    where
+        F: FnOnce(&ModelConfig, &TensorStore, &mut dyn LinearOp, &mut PagedKvCache) -> Result<Mat>,
+    {
+        let cfg = self.cfg;
+        let mut dense = DenseLinear { store: &self.store };
+        let mut streamed = self.qm.as_ref().map(|qm| StreamedLinear {
+            qm,
+            store: &self.store,
+            engine: &self.engine,
+            stats: DecodeStats::default(),
+        });
+        let lin: &mut dyn LinearOp = match streamed.as_mut() {
+            Some(s) => s,
+            None => &mut dense,
+        };
+        let result = f(&cfg, &self.store, lin, &mut self.cache);
+        if let Some(s) = streamed {
+            self.stats.merge(&s.stats);
+        }
+        result
+    }
+
+    /// Prefill one window into a fresh cache sequence; returns the handle
+    /// and the last-position logits. The sequence is evicted on error.
+    fn prefill_one(&mut self, tokens: &[i32]) -> Result<(SeqId, Vec<f32>)> {
+        let sid = self.cache.new_seq();
+        let logits = self.run_cached(|cfg, store, lin, cache| {
+            native_fwd::prefill_with_cache(cfg, store, lin, cache, sid, tokens)
+        });
+        match logits {
+            Ok(l) => Ok((sid, l.row(l.rows - 1).to_vec())),
+            Err(e) => {
+                self.cache.evict(sid);
+                Err(e)
+            }
+        }
+    }
+}
+
+impl LmBackend for CachedNativeBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        let t_max = self.cfg.seq_len;
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; prefixes.len()];
+
+        // claim step-able sequences: each live sequence serves at most one
+        // prefix per call (identical concurrent prompts each get their own)
+        let mut claimed = vec![false; self.live.len()];
+        let mut dead = vec![false; self.live.len()];
+        let mut steps: Vec<(usize, usize)> = Vec::new();
+        let mut stepping = vec![false; prefixes.len()];
+        for (pi, p) in prefixes.iter().enumerate() {
+            let n = p.len();
+            if n == 0 {
+                continue;
+            }
+            let matched = self.live.iter().enumerate().find(|(li, s)| {
+                !claimed[*li] && s.tokens.len() + 1 == n && s.tokens[..] == p[..n - 1]
+            });
+            if let Some((li, _)) = matched {
+                claimed[li] = true;
+                if n > t_max {
+                    // this sequence just outgrew the position table: it can
+                    // never be stepped again (the window slides from now
+                    // on), so release its pages instead of leaking them
+                    // until end_batch
+                    dead[li] = true;
+                } else {
+                    steps.push((pi, li));
+                    stepping[pi] = true;
+                }
+            }
+        }
+        // evict and drop dead entries *now*, before any early return can
+        // leave a live entry pointing at a recycled SeqId, and so their
+        // pages are reusable by the prefills below; step indices are
+        // remapped into the compacted list
+        if dead.iter().any(|&d| d) {
+            let mut remap = vec![0usize; self.live.len()];
+            let mut kept = 0usize;
+            for (li, slot) in remap.iter_mut().enumerate() {
+                *slot = kept;
+                if dead[li] {
+                    let id = self.live[li].id;
+                    self.cache.evict(id);
+                } else {
+                    kept += 1;
+                }
+            }
+            let mut idx = 0;
+            self.live.retain(|_| {
+                let keep = !dead[idx];
+                idx += 1;
+                keep
+            });
+            for s in steps.iter_mut() {
+                s.1 = remap[s.1];
+            }
+        }
+
+        // everything unmatched (re-)prefills: first contact, empty prompt,
+        // or the sliding-window regime beyond seq_len
+        for (pi, p) in prefixes.iter().enumerate() {
+            if stepping[pi] {
+                continue;
+            }
+            let window: &[i32] = if p.is_empty() {
+                &[0]
+            } else if p.len() > t_max {
+                &p[p.len() - t_max..]
+            } else {
+                p
+            };
+            let (sid, logits) = self.prefill_one(window)?;
+            if p.is_empty() || p.len() > t_max {
+                // the cache cannot extend this prefix next step, so the
+                // window is transient — release its pages immediately
+                self.cache.evict(sid);
+            } else {
+                self.live.push(LiveSeq { tokens: p.to_vec(), id: sid });
+            }
+            out[pi] = Some(logits);
+        }
+
+        // one batched incremental forward advances all stepping sequences
+        if !steps.is_empty() {
+            let ids: Vec<SeqId> = steps.iter().map(|&(_, li)| self.live[li].id).collect();
+            let last: Vec<i32> =
+                steps.iter().map(|&(pi, _)| *prefixes[pi].last().unwrap()).collect();
+            let stepped = self.run_cached(|cfg, store, lin, cache| {
+                native_fwd::step_with_cache(cfg, store, lin, cache, &ids, &last)
+            });
+            let logits = match stepped {
+                Ok(l) => l,
+                Err(e) => {
+                    // a failed batched step (e.g. arena exhaustion part-way
+                    // through a layer) leaves the stepping sequences with
+                    // skewed per-layer row counts — evict and drop them so
+                    // a retry re-prefills instead of silently mixing
+                    // misaligned K/V
+                    let mut bad = vec![false; self.live.len()];
+                    for &(_, li) in &steps {
+                        bad[li] = true;
+                        let id = self.live[li].id;
+                        self.cache.evict(id);
+                    }
+                    let mut idx = 0;
+                    self.live.retain(|_| {
+                        let keep = !bad[idx];
+                        idx += 1;
+                        keep
+                    });
+                    return Err(e);
+                }
+            };
+            for (si, &(pi, li)) in steps.iter().enumerate() {
+                // the claim already verified tokens == prefix[..n-1], so
+                // advancing is a single O(1) push, not an O(T) clone
+                self.live[li].tokens.push(last[si]);
+                out[pi] = Some(logits.row(si).to_vec());
+            }
+        }
+
+        Ok(out.into_iter().map(|o| o.expect("every prefix answered")).collect())
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        self.qm.as_ref().map(|_| self.stats)
+    }
+
+    fn end_batch(&mut self) {
+        for s in self.live.drain(..) {
+            self.cache.evict(s.id);
+        }
+    }
+
+    fn cache_stats(&self) -> Option<KvCacheStats> {
+        Some(self.cache.stats())
     }
 }
 
@@ -287,8 +568,10 @@ where
                 let _ = job.reply.send(response);
             }
             metrics.decode = backend.decode_stats();
+            metrics.kv_cache = backend.cache_stats();
         }
         metrics.decode = backend.decode_stats();
+        metrics.kv_cache = backend.cache_stats();
         metrics
     });
     ServerHandle { tx, join: Some(join) }
@@ -367,13 +650,7 @@ fn handle_batch(
         for (&i, logits) in active.iter().zip(&all_logits) {
             match &mut states[i] {
                 SeqState::Gen { tokens, .. } => {
-                    let next = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i as i32)
-                        .unwrap_or(0);
-                    tokens.push(next);
+                    tokens.push(native_fwd::argmax_logit(logits));
                     metrics.tokens_out += 1;
                 }
                 SeqState::Score { tokens, continuation, pos, logprob } => {
@@ -390,6 +667,10 @@ fn handle_batch(
             }
         }
     }
+
+    // the drained batch is complete: let cache-aware backends release
+    // their per-sequence state (pages return to the shared arena)
+    backend.end_batch();
 
     states
         .into_iter()
@@ -584,6 +865,157 @@ mod tests {
         // (panel_rows = 8, max n_in = d_ff = 64), never a full layer
         assert!(stats.peak_decoded <= 8 * 64, "peak {} elems", stats.peak_decoded);
         assert!(stats.peak_decoded < 32 * 32, "full layer materialized");
+    }
+
+    #[test]
+    fn cached_backend_matches_uncached_lockstep_exactly() {
+        // the cache-aware backend must answer a mixed generate/score batch
+        // with the same bytes and logprobs as the cacheless backend — the
+        // f32 KV cache is a pure speedup, not an approximation
+        let requests = vec![
+            Request::Generate { prompt: b"the kama ".to_vec(), max_new: 5 },
+            Request::Score { prompt: b"the ".to_vec(), continuation: b"kam".to_vec() },
+            Request::Generate { prompt: b"the kama ".to_vec(), max_new: 5 }, // duplicate prompt
+            Request::Generate { prompt: Vec::new(), max_new: 3 },            // empty prompt
+        ];
+        let cfg = tiny_cfg();
+        let mut plain = NativeBackend { cfg, store: init_params(&cfg, 0) };
+        let kv = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let mut cached = CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv);
+        let mut m1 = ServerMetrics::default();
+        let mut m2 = ServerMetrics::default();
+        let a = handle_batch(&mut plain, &requests, &mut m1);
+        let b = handle_batch(&mut cached, &requests, &mut m2);
+        assert_eq!(m1.tokens_out, m2.tokens_out);
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (Response::Generated { text: tx }, Response::Generated { text: ty }) => {
+                    assert_eq!(tx, ty, "cached generation diverged")
+                }
+                (Response::Scored { logprob: lx }, Response::Scored { logprob: ly }) => {
+                    assert!((lx - ly).abs() < 1e-12, "{lx} vs {ly}")
+                }
+                other => panic!("mismatched kinds {other:?}"),
+            }
+        }
+        // end_batch ran inside handle_batch: all pages are back on the
+        // free list, but the peak shows the batch actually used the cache
+        let stats = cached.cache_stats().expect("cached backend reports stats");
+        assert_eq!(stats.pages_in_use, 0);
+        assert!(stats.peak_pages > 0);
+        assert!(stats.appended_rows > 0);
+        assert!(plain.decode_stats().is_none());
+    }
+
+    #[test]
+    fn cached_backend_slides_the_window_beyond_seq_len() {
+        // prefixes longer than seq_len fall back to windowed recompute and
+        // must still match the cacheless backend bit for bit
+        let cfg = tiny_cfg(); // seq_len 32
+        let mut plain = NativeBackend { cfg, store: init_params(&cfg, 0) };
+        let kv = KvCacheOpts { page_rows: 8, ..Default::default() };
+        let mut cached = CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv);
+        let req = [Request::Generate { prompt: b"a long running prompt ".to_vec(), max_new: 20 }];
+        let mut m = ServerMetrics::default();
+        let a = handle_batch(&mut plain, &req, &mut m).remove(0);
+        let b = handle_batch(&mut cached, &req, &mut m).remove(0);
+        match (a, b) {
+            (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
+                assert_eq!(ta.len(), 20);
+                assert_eq!(ta, tb, "windowed regime diverged")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cached_streaming_backend_matches_streaming_generation() {
+        // compressed weights + KV cache together must still generate the
+        // same bytes as the cacheless streaming backend
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+        let mut cap = CalibCapture::new(16, 0);
+        native_fwd::forward(&cfg, &store, &toks, 2, Some(&mut cap)).unwrap();
+        let calib = cap.into_calib_set();
+        let mut opts = PipelineOpts::default();
+        opts.target_bits = 3.0;
+        opts.bit_allocation = false;
+        let (qm, _) =
+            quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).unwrap();
+
+        let mut plain = StreamingNativeBackend {
+            cfg,
+            store: store.clone(),
+            qm: qm.clone(),
+            engine: StreamingMatmul::new(8, 2),
+            stats: DecodeStats::default(),
+        };
+        let kv = KvCacheOpts { page_rows: 8, ..Default::default() };
+        let mut cached =
+            CachedNativeBackend::streaming(cfg, store, qm, StreamingMatmul::new(8, 2), kv);
+        let req = [
+            Request::Generate { prompt: b"the kama ".to_vec(), max_new: 6 },
+            Request::Score { prompt: b"the ".to_vec(), continuation: b"ka".to_vec() },
+        ];
+        let mut m = ServerMetrics::default();
+        let a = handle_batch(&mut plain, &req, &mut m);
+        let b = handle_batch(&mut cached, &req, &mut m);
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (Response::Generated { text: tx }, Response::Generated { text: ty }) => {
+                    assert_eq!(tx, ty)
+                }
+                (Response::Scored { logprob: lx }, Response::Scored { logprob: ly }) => {
+                    assert!((lx - ly).abs() < 1e-12)
+                }
+                other => panic!("mismatched kinds {other:?}"),
+            }
+        }
+        let stats = cached.decode_stats().expect("streamed cached backend reports decode stats");
+        assert!(stats.code_bytes > 0 && stats.weights_decoded > 0);
+        assert!(cached.cache_stats().is_some());
+    }
+
+    #[test]
+    fn quantized_kv_serves_through_the_server() {
+        // end-to-end: quantized KV pages behind the full server loop —
+        // responses arrive, metrics expose quantization + decode counters
+        let cfg = tiny_cfg();
+        let kv = KvCacheOpts {
+            page_rows: 4,
+            quantize: true,
+            kv_bits: 8,
+            ..Default::default()
+        };
+        let handle = start(
+            move || {
+                let backend = CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv);
+                Ok(Box::new(backend) as Box<_>)
+            },
+            ServerOpts { max_batch: 4 },
+        );
+        let receivers: Vec<_> = (0..4)
+            .map(|i| {
+                handle.submit(Request::Generate {
+                    prompt: format!("req {i} ").into_bytes(),
+                    max_new: 8,
+                })
+            })
+            .collect();
+        for rx in receivers {
+            match rx.recv().unwrap() {
+                Response::Generated { text } => assert_eq!(text.len(), 8),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let metrics = handle.shutdown();
+        let stats = metrics.kv_cache.expect("cache-aware backend reports kv stats");
+        assert!(stats.pages_quantized > 0, "retired pages should be quantized");
+        assert!(stats.decoded_bytes > 0, "attention reads should decode pages");
+        assert!(stats.peak_pages > 0);
+        assert!(metrics.report().contains("kv_pages"));
     }
 
     #[test]

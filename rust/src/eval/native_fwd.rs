@@ -7,12 +7,19 @@
 //! each linear directly from a compressed [`QuantizedModel`] through the
 //! batched [`StreamingMatmul`] engine — the §3.4 serving mode in which no
 //! full dequantized layer is ever materialized.
+//!
+//! [`forward_incremental`] (with its [`prefill_with_cache`] /
+//! [`step_with_cache`] wrappers) is the KV-cache-aware variant: attention
+//! runs only for new positions against cached K/V pages
+//! ([`crate::kvcache::PagedKvCache`]), making decode O(T) per token while
+//! staying bit-identical to the full recompute on f32 pages.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use crate::kvcache::{Kv, PagedKvCache, SeqId};
 use crate::linalg::Mat;
 use crate::model::ModelConfig;
 use crate::quant::format::QuantizedModel;
@@ -145,18 +152,40 @@ fn gelu_tanh(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
+/// In-place softmax over one row. A fully-masked row (every entry −∞, so
+/// every exp underflows to 0 and the naive 0/0 would emit NaN) yields an
+/// all-zero row instead: attention treats it as "attend to nothing".
+///
+/// On any row with at least one finite entry this is bit-identical to the
+/// unguarded max-shifted softmax, and applying it to the causal prefix
+/// `[0, i]` of a `-1e9`-masked full row gives the same bits as applying
+/// it to the whole row: the masked exps underflow to exactly +0.0, which
+/// changes neither the max nor the sum. That identity is what lets the
+/// incremental KV-cache forward reproduce the full recompute exactly.
+fn softmax_slice(row: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if mx == f32::NEG_INFINITY {
+        // empty or fully-masked row
+        row.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    if sum == 0.0 {
+        row.fill(0.0);
+        return;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
 fn softmax_rows(m: &mut Mat) {
     for r in 0..m.rows {
-        let row = m.row_mut(r);
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - mx).exp();
-            sum += *v;
-        }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
+        softmax_slice(m.row_mut(r));
     }
 }
 
@@ -296,6 +325,193 @@ pub fn forward_with(
     lin.apply("out", &hf)
 }
 
+/// Cache-aware incremental forward: append `tokens.len() / seqs.len()`
+/// new tokens per sequence to the paged KV cache and return logits for
+/// exactly the new positions (`seqs.len()·n_new × V`, sequence-major).
+///
+/// Attention for a new position computes scores only against that
+/// sequence's cached K/V prefix (including the rows appended this call),
+/// so a one-token step costs O(T) instead of the O(T²) full recompute.
+/// With f32 cache pages the logits are **bit-identical** to
+/// [`forward_with`] over the same prefix (tested here and in
+/// `tests/kvcache_parity.rs`): every per-row op (rmsnorm, the blocked
+/// matmul, the causal softmax, the j-ascending V accumulation) is
+/// row-count-independent, and `softmax_slice` over the causal prefix
+/// equals the masked full-row softmax exactly. Quantized cache pages
+/// trade that for bounded reconstruction error (documented NLL tolerance
+/// in the parity test).
+///
+/// `tokens` is flat `(seqs.len() × n_new)`, row-major; every sequence
+/// advances by the same `n_new` (prefill calls pass one sequence with the
+/// whole prompt, lockstep decode passes many sequences with one token
+/// each). Errors if any sequence would exceed `cfg.seq_len` positions.
+pub fn forward_incremental(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    cache: &mut PagedKvCache,
+    seqs: &[SeqId],
+    tokens: &[i32],
+) -> Result<Mat> {
+    let batch = seqs.len();
+    anyhow::ensure!(batch > 0 && !tokens.is_empty(), "empty incremental batch");
+    anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible into {batch} sequences");
+    let n_new = tokens.len() / batch;
+    let d = cfg.d_model;
+    let get1 = |name: &str| -> Result<Vec<f32>> {
+        Ok(store
+            .get(name)
+            .with_context(|| format!("missing {name}"))?
+            .data
+            .clone())
+    };
+
+    // cache length of each sequence before this call = the absolute
+    // position of its first new token
+    let bases: Vec<usize> = seqs.iter().map(|&s| cache.rows(s, 0, Kv::K)).collect();
+    for (b, &base) in bases.iter().enumerate() {
+        anyhow::ensure!(
+            base + n_new <= cfg.seq_len,
+            "sequence {b} exceeds seq_len {} ({base} cached + {n_new} new)",
+            cfg.seq_len
+        );
+    }
+
+    let emb = store.get("emb").context("missing emb")?.to_mat();
+    let pos = store.get("pos").context("missing pos")?.to_mat();
+    let mut h = Mat::zeros(batch * n_new, d);
+    for b in 0..batch {
+        for r in 0..n_new {
+            let tok = tokens[b * n_new + r] as usize;
+            let p = bases[b] + r;
+            let dst = h.row_mut(b * n_new + r);
+            for j in 0..d {
+                dst[j] = emb.at(tok, j) + pos.at(p, j);
+            }
+        }
+    }
+
+    let (nh, dh) = (cfg.n_head, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for layer in 0..cfg.n_layer {
+        let pfx = format!("{layer:02}.");
+        // ---- attention (new rows only, K/V prefix from the cache) ----
+        let a = rmsnorm(&h, &get1(&format!("{pfx}attn.gain"))?);
+        let q = lin.apply(&format!("{pfx}attn.wq"), &a)?;
+        let k = lin.apply(&format!("{pfx}attn.wk"), &a)?;
+        let v = lin.apply(&format!("{pfx}attn.wv"), &a)?;
+        for (b, &sid) in seqs.iter().enumerate() {
+            for r in 0..n_new {
+                cache.append(sid, layer, Kv::K, k.row(b * n_new + r))?;
+                cache.append(sid, layer, Kv::V, v.row(b * n_new + r))?;
+            }
+        }
+        let mut att_out = Mat::zeros(batch * n_new, d);
+        for (b, &sid) in seqs.iter().enumerate() {
+            let base = bases[b];
+            let l_total = base + n_new;
+            // scores[(head·n_new + r)·l_total + j], causal: j ≤ base + r
+            let mut scores = vec![0.0f32; nh * n_new * l_total];
+            cache.visit(sid, layer, Kv::K, l_total, |pos0, kr| {
+                for (rr, krow) in kr.chunks_exact(d).enumerate() {
+                    let j = pos0 + rr;
+                    for head in 0..nh {
+                        let off = head * dh;
+                        let kh = &krow[off..off + dh];
+                        for r in 0..n_new {
+                            if j > base + r {
+                                continue;
+                            }
+                            let qh = &q.row(b * n_new + r)[off..off + dh];
+                            let mut s = 0.0f32;
+                            for e in 0..dh {
+                                s += qh[e] * kh[e];
+                            }
+                            scores[(head * n_new + r) * l_total + j] = s * scale;
+                        }
+                    }
+                }
+            });
+            for head in 0..nh {
+                for r in 0..n_new {
+                    let row0 = (head * n_new + r) * l_total;
+                    softmax_slice(&mut scores[row0..row0 + base + r + 1]);
+                }
+            }
+            cache.visit(sid, layer, Kv::V, l_total, |pos0, vr| {
+                for (rr, vrow) in vr.chunks_exact(d).enumerate() {
+                    let j = pos0 + rr;
+                    for head in 0..nh {
+                        let off = head * dh;
+                        let vh = &vrow[off..off + dh];
+                        for r in 0..n_new {
+                            if j > base + r {
+                                continue;
+                            }
+                            let w = scores[(head * n_new + r) * l_total + j];
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let dst = &mut att_out.row_mut(b * n_new + r)[off..off + dh];
+                            for e in 0..dh {
+                                dst[e] += w * vh[e];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        let proj = lin.apply(&format!("{pfx}attn.wo"), &att_out)?;
+        for i in 0..h.data.len() {
+            h.data[i] += proj.data[i];
+        }
+
+        // ---- mlp (position-wise, identical to the full pass) ----
+        let m = rmsnorm(&h, &get1(&format!("{pfx}mlp.gain"))?);
+        let mut hidden = lin.apply(&format!("{pfx}mlp.w1"), &m)?;
+        for vv in hidden.data.iter_mut() {
+            *vv = gelu_tanh(*vv);
+        }
+        let mlp_out = lin.apply(&format!("{pfx}mlp.w2"), &hidden)?;
+        for i in 0..h.data.len() {
+            h.data[i] += mlp_out.data[i];
+        }
+    }
+
+    let hf = rmsnorm(&h, &get1("final.gain")?);
+    lin.apply("out", &hf)
+}
+
+/// Prefill one sequence's prompt into the cache; returns logits for every
+/// prompt position (`tokens.len() × V`). Convenience wrapper over
+/// [`forward_incremental`].
+pub fn prefill_with_cache(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    cache: &mut PagedKvCache,
+    seq: SeqId,
+    tokens: &[i32],
+) -> Result<Mat> {
+    forward_incremental(cfg, store, lin, cache, std::slice::from_ref(&seq), tokens)
+}
+
+/// Advance every sequence by one token in lockstep; returns last-position
+/// logits per sequence (`seqs.len() × V`). Convenience wrapper over
+/// [`forward_incremental`].
+pub fn step_with_cache(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    cache: &mut PagedKvCache,
+    seqs: &[SeqId],
+    last_tokens: &[i32],
+) -> Result<Mat> {
+    assert_eq!(seqs.len(), last_tokens.len(), "one new token per sequence");
+    forward_incremental(cfg, store, lin, cache, seqs, last_tokens)
+}
+
 /// Total NLL over a batch (matches model.py::nll_sum).
 pub fn nll_sum(
     cfg: &ModelConfig,
@@ -306,6 +522,18 @@ pub fn nll_sum(
 ) -> Result<f64> {
     let logits = forward(cfg, store, x, batch, None)?;
     Ok(nll_from_logits(&logits, y))
+}
+
+/// Index of the largest logit (greedy decode), ties resolved to the last
+/// maximal index — the one sampling rule shared by the server's lockstep
+/// loop and every bench/example/test generation driver. Panics on NaN
+/// logits; returns 0 for an empty row.
+pub fn argmax_logit(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
 }
 
 /// NLL from precomputed logits (rows = positions, cols = vocab).
@@ -489,5 +717,154 @@ mod tests {
         let x: Vec<i32> = (0..cfg.seq_len).map(|_| rng.below(256) as i32).collect();
         let logits = forward(&cfg, &store, &x, 1, None).unwrap();
         assert_eq!(logits.rows, cfg.seq_len);
+    }
+
+    #[test]
+    fn softmax_guards_fully_masked_rows() {
+        let mut m = Mat::from_vec(
+            2,
+            3,
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, 0.0, 1.0, 2.0],
+        );
+        softmax_rows(&mut m);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0], "masked row must be zeros, not NaN");
+        let s: f32 = m.row(1).iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(m.data.iter().all(|v| !v.is_nan()));
+        // the -1e9 causal-mask convention still softmaxes normally
+        let mut c = Mat::from_vec(1, 3, vec![0.5, -1e9, -1e9]);
+        softmax_rows(&mut c);
+        assert_eq!(c.row(0), &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_prefix_equals_masked_full_row() {
+        // the identity the incremental forward relies on: softmax over the
+        // causal prefix == softmax over the -1e9-masked full row, bitwise
+        let mut rng = Rng::new(7);
+        for len in [1usize, 3, 7] {
+            let vals: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let mut full = vals.clone();
+            full.resize(10, -1e9);
+            softmax_slice(&mut full);
+            let mut prefix = vals;
+            softmax_slice(&mut prefix);
+            assert_eq!(&full[..len], &prefix[..]);
+            assert!(full[len..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn incremental_forward_is_bit_identical_to_full_recompute() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 5);
+        let mut rng = Rng::new(31);
+        let prompt: Vec<i32> = (0..10).map(|_| rng.below(256) as i32).collect();
+
+        let opts = crate::kvcache::KvCacheOpts { page_rows: 4, ..Default::default() };
+        let mut cache = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let sid = cache.new_seq();
+        let mut lin = DenseLinear { store: &store };
+        let pre = prefill_with_cache(&cfg, &store, &mut lin, &mut cache, sid, &prompt).unwrap();
+        assert_eq!((pre.rows, pre.cols), (10, cfg.vocab));
+
+        // full recompute over the padded prompt: rows 0..10 match bitwise
+        let mut padded = prompt.clone();
+        padded.resize(cfg.seq_len, 0);
+        let full = forward(&cfg, &store, &padded, 1, None).unwrap();
+        for t in 0..10 {
+            assert_eq!(pre.row(t), full.row(t), "prefill row {t} diverged");
+        }
+
+        // decode steps up to seq_len: each must equal the full recompute
+        let mut toks = prompt.clone();
+        while toks.len() < cfg.seq_len {
+            let next = rng.below(256) as i32;
+            let mut lin = DenseLinear { store: &store };
+            let step =
+                step_with_cache(&cfg, &store, &mut lin, &mut cache, &[sid], &[next]).unwrap();
+            toks.push(next);
+            let mut padded = toks.clone();
+            padded.resize(cfg.seq_len, 0);
+            let full = forward(&cfg, &store, &padded, 1, None).unwrap();
+            assert_eq!(
+                step.row(0),
+                full.row(toks.len() - 1),
+                "step at position {} diverged",
+                toks.len() - 1
+            );
+        }
+        // capacity is enforced once the model's position table runs out
+        let mut lin = DenseLinear { store: &store };
+        assert!(step_with_cache(&cfg, &store, &mut lin, &mut cache, &[sid], &[1]).is_err());
+    }
+
+    #[test]
+    fn batched_steps_match_per_sequence_steps() {
+        // lockstep batch-of-B one-token steps must equal stepping each
+        // sequence alone (per-row op independence)
+        let cfg = tiny();
+        let store = init_params(&cfg, 8);
+        let mut rng = Rng::new(41);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|i| (0..(4 + 3 * i)).map(|_| rng.below(256) as i32).collect())
+            .collect();
+        let opts = crate::kvcache::KvCacheOpts { page_rows: 4, ..Default::default() };
+
+        let mut cb = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let ids: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let sid = cb.new_seq();
+                let mut lin = DenseLinear { store: &store };
+                prefill_with_cache(&cfg, &store, &mut lin, &mut cb, sid, p).unwrap();
+                sid
+            })
+            .collect();
+        let next = [7i32, 11, 13];
+        let mut lin = DenseLinear { store: &store };
+        let batched = step_with_cache(&cfg, &store, &mut lin, &mut cb, &ids, &next).unwrap();
+
+        for (i, p) in prompts.iter().enumerate() {
+            let mut cs = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+            let sid = cs.new_seq();
+            let mut lin = DenseLinear { store: &store };
+            prefill_with_cache(&cfg, &store, &mut lin, &mut cs, sid, p).unwrap();
+            let solo =
+                step_with_cache(&cfg, &store, &mut lin, &mut cs, &[sid], &[next[i]]).unwrap();
+            assert_eq!(batched.row(i), solo.row(0), "sequence {i} diverged in batch");
+        }
+    }
+
+    #[test]
+    fn quantized_kv_stays_close_to_f32_kv() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 9);
+        let mut rng = Rng::new(51);
+        let prompt: Vec<i32> = (0..12).map(|_| rng.below(256) as i32).collect();
+        let run = |opts: crate::kvcache::KvCacheOpts| {
+            let mut cache = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+            let sid = cache.new_seq();
+            let mut lin = DenseLinear { store: &store };
+            let l = prefill_with_cache(&cfg, &store, &mut lin, &mut cache, sid, &prompt).unwrap();
+            (l, cache.stats())
+        };
+        let (f32_logits, f32_stats) = run(crate::kvcache::KvCacheOpts {
+            page_rows: 4,
+            ..Default::default()
+        });
+        let (q_logits, q_stats) = run(crate::kvcache::KvCacheOpts {
+            page_rows: 4,
+            quantize: true,
+            kv_bits: 8,
+            ..Default::default()
+        });
+        assert_eq!(f32_stats.pages_quantized, 0);
+        assert!(q_stats.pages_quantized > 0, "quantized run must retire pages");
+        assert!(q_stats.decoded_bytes > 0);
+        let last = f32_logits.rows - 1;
+        for (a, b) in q_logits.row(last).iter().zip(f32_logits.row(last)) {
+            assert!((a - b).abs() < 0.25, "8-bit KV drifted logits: {a} vs {b}");
+        }
     }
 }

@@ -1,0 +1,94 @@
+//! Paged, GLVQ-quantized KV-cache runtime — quantized *state*, not just
+//! quantized weights.
+//!
+//! A decode step without a KV cache re-runs attention over the whole
+//! prefix, so serving cost grows O(T²) per sequence. This subsystem makes
+//! decode O(T) and then applies the paper's own grouped-lattice machinery
+//! to the cached K/V tensors:
+//!
+//! - [`paged::PagedKvCache`] holds per-layer K/V rows in fixed-size block
+//!   pages drawn from one shared arena with a free-list allocator, so
+//!   batched lockstep sequences of different lengths share storage and
+//!   release it on eviction.
+//! - [`quantized::KvQuantizer`] compresses retired (full) pages with the
+//!   same lattice + μ-law companding chain the weight quantizer uses
+//!   (scaled-identity generation matrix, half-integer grid, kurtosis-driven
+//!   μ — see `quant::traits::SideInfo::Lattice`), optionally rANS
+//!   entropy-coded. Only the hot tail page of each page table stays f32;
+//!   attention reads decode quantized pages one at a time into a
+//!   cache-owned scratch, mirroring `coordinator::decode_stream`'s
+//!   bounded-working-set discipline.
+//! - `eval::native_fwd::forward_incremental` drives the cache: one-token
+//!   steps compute attention scores only for the new position against the
+//!   cached prefix, bit-identical to the full recompute when pages stay
+//!   f32 (tested in `tests/kvcache_parity.rs`).
+//!
+//! The serving integration lives in `coordinator::server::CachedNativeBackend`
+//! (prefill once, then batched one-token lockstep steps) and surfaces
+//! occupancy / quantization / decode-traffic counters through
+//! [`KvCacheStats`] into `coordinator::metrics::ServerMetrics`.
+
+pub mod paged;
+pub mod quantized;
+
+pub use paged::{Kv, PagedKvCache, SeqId};
+pub use quantized::KvQuantizer;
+
+/// KV-cache construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheOpts {
+    /// positions per page (the fixed block size of the arena)
+    pub page_rows: usize,
+    /// compress retired pages with the grouped lattice quantizer
+    pub quantize: bool,
+    /// code width for quantized pages (1..=8 bits per element)
+    pub kv_bits: u8,
+    /// lattice sub-block length d (falls back to 1 when the model width is
+    /// not divisible by it)
+    pub lattice_dim: usize,
+    /// rANS entropy-code the packed page codes (smaller resident bytes,
+    /// same decoded values)
+    pub entropy: bool,
+    /// hard arena capacity in pages; 0 = grow on demand
+    pub max_pages: usize,
+}
+
+impl Default for KvCacheOpts {
+    fn default() -> Self {
+        KvCacheOpts {
+            page_rows: 16,
+            quantize: false,
+            kv_bits: 4,
+            lattice_dim: 8,
+            entropy: false,
+            max_pages: 0,
+        }
+    }
+}
+
+/// Cache counters surfaced through `ServerMetrics` and the kvcache bench.
+///
+/// `pages_in_use` / `hot_pages` / `peak_pages` describe current occupancy;
+/// the remaining fields are cumulative over the cache's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvCacheStats {
+    /// pages currently allocated to some sequence (hot + quantized)
+    pub pages_in_use: usize,
+    /// high-water mark of `pages_in_use`
+    pub peak_pages: usize,
+    /// pages currently resident as raw f32 (the hot tails)
+    pub hot_pages: usize,
+    /// resident cache bytes right now: hot pages at f32 plus the
+    /// compressed payloads of live quantized pages
+    pub bytes_in_use: usize,
+    /// pages retired through the lattice quantizer (cumulative)
+    pub pages_quantized: usize,
+    /// K/V rows appended (cumulative)
+    pub appended_rows: usize,
+    /// f32 bytes materialized from quantized pages on attention reads
+    /// (cumulative)
+    pub decoded_bytes: usize,
+    /// compressed bytes (codes + side info) produced by page quantization
+    /// (cumulative)
+    pub quantized_payload_bytes: usize,
+}

@@ -1,0 +1,466 @@
+//! Paged KV storage: fixed-size block pages in one shared arena with a
+//! free-list allocator, plus per-sequence page tables.
+//!
+//! Every (sequence, layer, K|V) triple owns a page table: an ordered
+//! list of page ids covering positions `[0, rows)`. Appends write into the
+//! hot tail page; when a page fills it is *retired* — if quantization is
+//! enabled the page is compressed through [`super::KvQuantizer`] and its
+//! f32 buffer returns to a spare pool, so steady-state appends allocate
+//! nothing. Eviction returns a sequence's pages to the free list, which is
+//! how lockstep batches of different lengths share one arena.
+//!
+//! Reads go through [`PagedKvCache::visit`], which walks a table page by
+//! page in position order. Quantized pages decode into a cache-owned
+//! scratch one page at a time — the peak decoded working set is a single
+//! page, the same bounded-materialization discipline as
+//! `coordinator::decode_stream`.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::quant::traits::QuantizedGroup;
+
+use super::quantized::KvQuantizer;
+use super::{KvCacheOpts, KvCacheStats};
+
+/// Which of the two per-layer tensors a page table tracks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kv {
+    /// attention keys
+    K,
+    /// attention values
+    V,
+}
+
+impl Kv {
+    fn index(self) -> usize {
+        match self {
+            Kv::K => 0,
+            Kv::V => 1,
+        }
+    }
+}
+
+/// Opaque handle to one cached sequence (stable until [`PagedKvCache::evict`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqId(usize);
+
+/// One page's storage state.
+enum PageSlot {
+    /// unallocated (on the free list)
+    Free,
+    /// raw f32 rows (`page_rows × width`), the mutable hot form
+    Hot(Vec<f32>),
+    /// retired page compressed by the grouped lattice quantizer
+    Quantized(QuantizedGroup),
+}
+
+/// The shared page store: slots + free list + spare f32 buffers.
+struct PageArena {
+    page_rows: usize,
+    width: usize,
+    slots: Vec<PageSlot>,
+    free: Vec<usize>,
+    /// f32 buffers from retired/freed pages, reused by later allocs
+    spare: Vec<Vec<f32>>,
+    max_pages: usize,
+    hot_pages: usize,
+    live_quantized_bytes: usize,
+    peak_pages: usize,
+}
+
+impl PageArena {
+    fn new(page_rows: usize, width: usize, max_pages: usize) -> PageArena {
+        PageArena {
+            page_rows,
+            width,
+            slots: Vec::new(),
+            free: Vec::new(),
+            spare: Vec::new(),
+            max_pages,
+            hot_pages: 0,
+            live_quantized_bytes: 0,
+            peak_pages: 0,
+        }
+    }
+
+    fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    fn page_bytes(&self) -> usize {
+        self.page_rows * self.width * 4
+    }
+
+    /// Allocate a zeroed hot page: reuse a freed slot (and a spare buffer)
+    /// when possible, grow the arena otherwise.
+    fn alloc(&mut self) -> Result<usize> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                if self.max_pages > 0 && self.slots.len() >= self.max_pages {
+                    bail!("kv-cache arena exhausted ({} pages)", self.max_pages);
+                }
+                self.slots.push(PageSlot::Free);
+                self.slots.len() - 1
+            }
+        };
+        let buf = match self.spare.pop() {
+            Some(mut b) => {
+                b.fill(0.0);
+                b
+            }
+            None => vec![0.0f32; self.page_rows * self.width],
+        };
+        self.slots[id] = PageSlot::Hot(buf);
+        self.hot_pages += 1;
+        self.peak_pages = self.peak_pages.max(self.in_use());
+        Ok(id)
+    }
+
+    /// Return a page to the free list (its f32 buffer goes to the spare
+    /// pool; a quantized payload is dropped).
+    fn free(&mut self, id: usize) {
+        match std::mem::replace(&mut self.slots[id], PageSlot::Free) {
+            PageSlot::Hot(buf) => {
+                self.hot_pages -= 1;
+                self.spare.push(buf);
+            }
+            PageSlot::Quantized(g) => {
+                self.live_quantized_bytes -= g.codes.payload_bytes() + g.side_bytes();
+            }
+            PageSlot::Free => return,
+        }
+        self.free.push(id);
+    }
+}
+
+/// Ordered page list for one (sequence, layer, K|V) stream.
+#[derive(Default)]
+struct PageTable {
+    pages: Vec<usize>,
+    rows: usize,
+}
+
+struct SeqSlot {
+    /// index = `2·layer + Kv::index()`
+    tables: Vec<PageTable>,
+}
+
+/// The paged (optionally GLVQ-quantized) KV cache — see [`crate::kvcache`]
+/// for the runtime story.
+pub struct PagedKvCache {
+    opts: KvCacheOpts,
+    n_layer: usize,
+    width: usize,
+    arena: PageArena,
+    seqs: Vec<Option<SeqSlot>>,
+    quantizer: KvQuantizer,
+    /// per-cache decode scratch (one page), reused across reads
+    scratch: Mat,
+    pages_quantized: usize,
+    appended_rows: usize,
+    decoded_bytes: usize,
+    quantized_payload_bytes: usize,
+}
+
+impl PagedKvCache {
+    /// Create a cache for `n_layer` transformer layers of row width
+    /// `width` (= `d_model`).
+    pub fn new(n_layer: usize, width: usize, opts: KvCacheOpts) -> PagedKvCache {
+        assert!(width > 0, "kv cache width must be positive");
+        let opts = KvCacheOpts { page_rows: opts.page_rows.max(1), ..opts };
+        let quantizer = KvQuantizer {
+            bits: opts.kv_bits.clamp(1, 8),
+            lattice_dim: opts.lattice_dim.max(1),
+            entropy: opts.entropy,
+        };
+        PagedKvCache {
+            arena: PageArena::new(opts.page_rows, width, opts.max_pages),
+            scratch: Mat::zeros(opts.page_rows, width),
+            opts,
+            n_layer,
+            width,
+            seqs: Vec::new(),
+            quantizer,
+            pages_quantized: 0,
+            appended_rows: 0,
+            decoded_bytes: 0,
+            quantized_payload_bytes: 0,
+        }
+    }
+
+    /// Register a new (empty) sequence, reusing a vacated slot when one
+    /// exists.
+    pub fn new_seq(&mut self) -> SeqId {
+        let tables: Vec<PageTable> = (0..2 * self.n_layer).map(|_| PageTable::default()).collect();
+        match self.seqs.iter().position(|s| s.is_none()) {
+            Some(i) => {
+                self.seqs[i] = Some(SeqSlot { tables });
+                SeqId(i)
+            }
+            None => {
+                self.seqs.push(Some(SeqSlot { tables }));
+                SeqId(self.seqs.len() - 1)
+            }
+        }
+    }
+
+    /// Drop a sequence and return all of its pages to the free list.
+    pub fn evict(&mut self, seq: SeqId) {
+        if let Some(slot) = self.seqs.get_mut(seq.0).and_then(|s| s.take()) {
+            for t in slot.tables {
+                for pid in t.pages {
+                    self.arena.free(pid);
+                }
+            }
+        }
+    }
+
+    /// Cached positions for one (sequence, layer, K|V) stream.
+    pub fn rows(&self, seq: SeqId, layer: usize, which: Kv) -> usize {
+        self.seqs
+            .get(seq.0)
+            .and_then(|s| s.as_ref())
+            .map(|s| s.tables[2 * layer + which.index()].rows)
+            .unwrap_or(0)
+    }
+
+    /// Positions per page.
+    pub fn page_rows(&self) -> usize {
+        self.opts.page_rows
+    }
+
+    /// Row width (= `d_model`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Total slots ever allocated in the arena (free or not) — the arena's
+    /// high-water capacity.
+    pub fn arena_pages(&self) -> usize {
+        self.arena.slots.len()
+    }
+
+    /// Resident cache bytes right now: hot pages at f32 plus the
+    /// compressed payloads of live quantized pages.
+    pub fn bytes_in_use(&self) -> usize {
+        self.arena.hot_pages * self.arena.page_bytes() + self.arena.live_quantized_bytes
+    }
+
+    /// Current + cumulative counters (see [`KvCacheStats`]).
+    pub fn stats(&self) -> KvCacheStats {
+        KvCacheStats {
+            pages_in_use: self.arena.in_use(),
+            peak_pages: self.arena.peak_pages,
+            hot_pages: self.arena.hot_pages,
+            bytes_in_use: self.bytes_in_use(),
+            pages_quantized: self.pages_quantized,
+            appended_rows: self.appended_rows,
+            decoded_bytes: self.decoded_bytes,
+            quantized_payload_bytes: self.quantized_payload_bytes,
+        }
+    }
+
+    /// Append one position row. Fills the hot tail page, allocating a new
+    /// page on crossing a boundary; a page that becomes full is retired
+    /// (quantized) when the cache was built with `quantize = true`.
+    pub fn append(&mut self, seq: SeqId, layer: usize, which: Kv, row: &[f32]) -> Result<()> {
+        assert_eq!(row.len(), self.width, "kv row width mismatch");
+        let page_rows = self.opts.page_rows;
+        let ti = 2 * layer + which.index();
+        let rows = match self.seqs.get(seq.0).and_then(|s| s.as_ref()) {
+            Some(slot) => slot.tables[ti].rows,
+            None => bail!("append to unknown kv sequence {seq:?}"),
+        };
+        let off = rows % page_rows;
+        if off == 0 {
+            let pid = self.arena.alloc()?;
+            self.seqs[seq.0].as_mut().expect("sequence checked above").tables[ti].pages.push(pid);
+        }
+        let table = &mut self.seqs[seq.0].as_mut().expect("sequence checked above").tables[ti];
+        let pid = *table.pages.last().expect("tail page exists");
+        table.rows += 1;
+        match &mut self.arena.slots[pid] {
+            PageSlot::Hot(buf) => {
+                buf[off * self.width..(off + 1) * self.width].copy_from_slice(row)
+            }
+            _ => unreachable!("tail page must be hot"),
+        }
+        self.appended_rows += 1;
+        if off + 1 == page_rows && self.opts.quantize {
+            self.retire(pid);
+        }
+        Ok(())
+    }
+
+    /// Compress a full hot page through the lattice quantizer and recycle
+    /// its f32 buffer.
+    fn retire(&mut self, pid: usize) {
+        let buf = match std::mem::replace(&mut self.arena.slots[pid], PageSlot::Free) {
+            PageSlot::Hot(buf) => buf,
+            other => {
+                self.arena.slots[pid] = other;
+                return;
+            }
+        };
+        self.arena.hot_pages -= 1;
+        let group = self.quantizer.quantize_page(&buf, self.opts.page_rows, self.width);
+        let bytes = group.codes.payload_bytes() + group.side_bytes();
+        self.arena.spare.push(buf);
+        self.arena.slots[pid] = PageSlot::Quantized(group);
+        self.arena.live_quantized_bytes += bytes;
+        self.pages_quantized += 1;
+        self.quantized_payload_bytes += bytes;
+    }
+
+    /// Visit rows `[0, limit)` of one stream, page by page in position
+    /// order. `f(pos0, rows)` receives the absolute position of the first
+    /// row and a `(k × width)` row-major slice. Hot pages are passed
+    /// through by reference; quantized pages decode into the cache-owned
+    /// scratch first (one page at a time), charging
+    /// [`KvCacheStats::decoded_bytes`].
+    pub fn visit<F: FnMut(usize, &[f32])>(
+        &mut self,
+        seq: SeqId,
+        layer: usize,
+        which: Kv,
+        limit: usize,
+        mut f: F,
+    ) {
+        let page_rows = self.opts.page_rows;
+        let width = self.width;
+        let Some(slot) = self.seqs.get(seq.0).and_then(|s| s.as_ref()) else {
+            return;
+        };
+        let table = &slot.tables[2 * layer + which.index()];
+        let limit = limit.min(table.rows);
+        for (pi, &pid) in table.pages.iter().enumerate() {
+            let pos0 = pi * page_rows;
+            if pos0 >= limit {
+                break;
+            }
+            let take = page_rows.min(limit - pos0);
+            match &self.arena.slots[pid] {
+                PageSlot::Hot(buf) => f(pos0, &buf[..take * width]),
+                PageSlot::Quantized(g) => {
+                    g.dequantize_into(&mut self.scratch);
+                    self.decoded_bytes += take * width * 4;
+                    f(pos0, &self.scratch.data[..take * width]);
+                }
+                PageSlot::Free => unreachable!("page table points at a freed page"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_row(rng: &mut Rng, w: usize) -> Vec<f32> {
+        (0..w).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn append_visit_roundtrip_f32() {
+        let opts = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let mut c = PagedKvCache::new(2, 8, opts);
+        let s = c.new_seq();
+        let mut rng = Rng::new(1);
+        let mut want: Vec<f32> = Vec::new();
+        for _ in 0..11 {
+            let r = rand_row(&mut rng, 8);
+            c.append(s, 1, Kv::K, &r).unwrap();
+            want.extend_from_slice(&r);
+        }
+        assert_eq!(c.rows(s, 1, Kv::K), 11);
+        assert_eq!(c.rows(s, 1, Kv::V), 0);
+        assert_eq!(c.rows(s, 0, Kv::K), 0);
+        let mut got: Vec<f32> = Vec::new();
+        let mut next = 0usize;
+        c.visit(s, 1, Kv::K, 11, |pos0, rows| {
+            assert_eq!(pos0, next);
+            next += rows.len() / 8;
+            got.extend_from_slice(rows);
+        });
+        assert_eq!(next, 11);
+        assert_eq!(got, want, "f32 pages must round-trip exactly");
+    }
+
+    #[test]
+    fn visit_respects_the_limit() {
+        let opts = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 2, opts);
+        let s = c.new_seq();
+        for i in 0..10 {
+            c.append(s, 0, Kv::V, &[i as f32, -(i as f32)]).unwrap();
+        }
+        let mut seen = Vec::new();
+        c.visit(s, 0, Kv::V, 5, |pos0, rows| seen.push((pos0, rows.len() / 2)));
+        assert_eq!(seen, vec![(0, 4), (4, 1)]);
+        // limit beyond the stream clamps to the stored rows
+        let mut total = 0;
+        c.visit(s, 0, Kv::V, 99, |_, rows| total += rows.len() / 2);
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn eviction_returns_pages_to_the_free_list() {
+        let opts = KvCacheOpts { page_rows: 2, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 4, opts);
+        let a = c.new_seq();
+        let b = c.new_seq();
+        let r = vec![1.0f32; 4];
+        for _ in 0..6 {
+            c.append(a, 0, Kv::K, &r).unwrap();
+            c.append(b, 0, Kv::V, &r).unwrap();
+        }
+        assert_eq!(c.stats().pages_in_use, 6);
+        assert_eq!(c.stats().peak_pages, 6);
+        let capacity = c.arena_pages();
+        c.evict(a);
+        assert_eq!(c.stats().pages_in_use, 3);
+        // a fresh sequence reuses the freed pages without growing the arena
+        let d = c.new_seq();
+        for _ in 0..6 {
+            c.append(d, 0, Kv::K, &r).unwrap();
+        }
+        assert_eq!(c.arena_pages(), capacity, "free list not reused");
+        assert_eq!(c.stats().pages_in_use, 6);
+        assert!(c.bytes_in_use() > 0);
+    }
+
+    #[test]
+    fn arena_capacity_is_enforced() {
+        let opts = KvCacheOpts { page_rows: 2, max_pages: 2, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 4, opts);
+        let s = c.new_seq();
+        let r = vec![0.5f32; 4];
+        for _ in 0..2 {
+            c.append(s, 0, Kv::K, &r).unwrap();
+        }
+        for _ in 0..2 {
+            c.append(s, 0, Kv::V, &r).unwrap();
+        }
+        let err = c.append(s, 0, Kv::K, &r);
+        assert!(err.is_err(), "third page must exceed max_pages = 2");
+        // eviction frees capacity again
+        c.evict(s);
+        let s2 = c.new_seq();
+        assert!(c.append(s2, 0, Kv::K, &r).is_ok());
+    }
+
+    #[test]
+    fn unknown_sequence_is_rejected_and_empty_visit_is_noop() {
+        let mut c = PagedKvCache::new(1, 4, KvCacheOpts::default());
+        let s = c.new_seq();
+        c.evict(s);
+        assert!(c.append(s, 0, Kv::K, &[0.0; 4]).is_err());
+        let mut calls = 0;
+        c.visit(s, 0, Kv::K, 10, |_, _| calls += 1);
+        assert_eq!(calls, 0);
+        assert_eq!(c.rows(s, 0, Kv::K), 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Quantized-page backend: compress retired KV pages with the paper's own
+//! lattice + companding chain.
+//!
+//! A page is a `(page_rows × width)` f32 panel — exactly the shape of a
+//! weight group, so it reuses the weight path end to end: group
+//! normalization scale, kurtosis-driven μ-law companding
+//! (`compand::MuLaw`, Eq. 12), a scaled-identity generation matrix from
+//! `lattice::GenLattice`, encoding on the shifted half-integer grid
+//! (`z = clamp(round(F_μ(w/s)/α − ½))`, the same convention as
+//! `glvq::optimizer`), and `quant::pack` fixed-width payloads with
+//! optional rANS entropy coding. Decoding is *not* reimplemented: pages
+//! are stored as `quant::traits::QuantizedGroup` with
+//! `SideInfo::Lattice`, so `dequantize_into` — the decoder every other
+//! path in the crate uses and tests — reconstructs them.
+
+use crate::compand::MuLaw;
+use crate::entropy::stream::DEFAULT_LANES;
+use crate::lattice::GenLattice;
+use crate::quant::pack::{clamp_code, code_range, PackedCodes};
+use crate::quant::traits::{CodePayload, QuantizedGroup, SideInfo};
+
+/// Fast grouped-lattice page compressor (runs on the serving hot path, so
+/// the generation matrix is fixed to a scaled identity instead of being
+/// optimized per page — "GLVQ-lite", matching the fixed-lattice ablation).
+#[derive(Clone, Copy, Debug)]
+pub struct KvQuantizer {
+    /// code width per element (1..=8)
+    pub bits: u8,
+    /// lattice sub-block length d; falls back to 1 when it does not
+    /// divide the page width
+    pub lattice_dim: usize,
+    /// rANS entropy-code the packed codes (one chunk per page)
+    pub entropy: bool,
+}
+
+impl KvQuantizer {
+    /// Compress one full page (`rows × width`, row-major) into a
+    /// [`QuantizedGroup`] whose `dequantize` reproduces the page within
+    /// the lattice step (bounds pinned by the tests below).
+    pub fn quantize_page(&self, data: &[f32], rows: usize, width: usize) -> QuantizedGroup {
+        assert_eq!(data.len(), rows * width, "page shape mismatch");
+        let bits = self.bits.clamp(1, 8);
+        let d = if width % self.lattice_dim == 0 { self.lattice_dim } else { 1 };
+        // group normalization: bring the page into [-1, 1]
+        let scale = data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+        // kurtosis-driven companding init (Eq. 12)
+        let comp = MuLaw::init_from_kurtosis(data);
+        // scaled-identity lattice sized so the half-integer grid α(z+½)
+        // spans the companded range edge to edge
+        let (_, hi) = code_range(bits);
+        let alpha = 1.0 / (hi as f32 + 0.5);
+        let lat = GenLattice::scaled_identity(d, alpha);
+        // encode on the shifted grid (diagonal G ⇒ Babai rounding is an
+        // elementwise round): z = clamp(round(F_μ(w/s)/α − ½))
+        let codes: Vec<i32> = data
+            .iter()
+            .map(|&w| clamp_code(comp.forward(w / scale) / alpha - 0.5, bits))
+            .collect();
+        let packed = PackedCodes::pack(&codes, bits);
+        let payload: CodePayload = if self.entropy {
+            CodePayload::Fixed(packed).to_entropy(rows * width, DEFAULT_LANES)
+        } else {
+            packed.into()
+        };
+        QuantizedGroup {
+            method: "kv-glvq",
+            bits,
+            rows,
+            cols: width,
+            codes: payload,
+            side: SideInfo::Lattice { d, g: lat.g.data, mu: comp.mu, scale },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{Kv, KvCacheOpts, PagedKvCache};
+    use crate::util::rng::Rng;
+
+    fn page(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * scale).collect()
+    }
+
+    /// max and rms reconstruction error of one page round-trip, as a
+    /// fraction of the page's max-abs.
+    fn roundtrip_err(bits: u8, seed: u64) -> (f32, f32) {
+        let mut rng = Rng::new(seed);
+        let data = page(&mut rng, 16 * 32, 0.7);
+        let q = KvQuantizer { bits, lattice_dim: 8, entropy: false };
+        let g = q.quantize_page(&data, 16, 32);
+        let rec = g.dequantize();
+        let mx = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let mut worst = 0.0f32;
+        let mut sq = 0.0f64;
+        for (a, b) in data.iter().zip(&rec.data) {
+            let e = (a - b).abs();
+            worst = worst.max(e);
+            sq += (e as f64) * (e as f64);
+        }
+        let rms = (sq / data.len() as f64).sqrt() as f32;
+        (worst / mx, rms / mx)
+    }
+
+    #[test]
+    fn page_roundtrip_error_is_bounded() {
+        // 8-bit pages: the half-integer grid step is 1/127.5 in companded
+        // space; even after μ-law expansion the relative error stays tiny
+        let (max8, rms8) = roundtrip_err(8, 3);
+        assert!(max8 < 0.08, "8-bit max err {max8}");
+        assert!(rms8 < 0.02, "8-bit rms err {rms8}");
+        // 4-bit pages: coarser but still bounded well below the signal
+        let (max4, rms4) = roundtrip_err(4, 4);
+        assert!(max4 < 0.6, "4-bit max err {max4}");
+        assert!(rms4 < 0.12, "4-bit rms err {rms4}");
+        // more bits must not be worse
+        assert!(rms8 < rms4);
+    }
+
+    #[test]
+    fn entropy_payload_decodes_identically() {
+        let mut rng = Rng::new(7);
+        let data = page(&mut rng, 8 * 16, 0.3);
+        let fixed = KvQuantizer { bits: 4, lattice_dim: 8, entropy: false };
+        let rans = KvQuantizer { bits: 4, lattice_dim: 8, entropy: true };
+        let a = fixed.quantize_page(&data, 8, 16);
+        let b = rans.quantize_page(&data, 8, 16);
+        assert!(b.codes.is_entropy());
+        assert_eq!(
+            a.dequantize().data,
+            b.dequantize().data,
+            "rANS page payload must be lossless"
+        );
+    }
+
+    #[test]
+    fn width_not_divisible_by_lattice_dim_falls_back_to_d1() {
+        let mut rng = Rng::new(9);
+        let data = page(&mut rng, 4 * 10, 0.5);
+        let q = KvQuantizer { bits: 6, lattice_dim: 8, entropy: false };
+        let g = q.quantize_page(&data, 4, 10);
+        match &g.side {
+            SideInfo::Lattice { d, .. } => assert_eq!(*d, 1),
+            other => panic!("unexpected side info {other:?}"),
+        }
+        // still reconstructs
+        let rec = g.dequantize();
+        let mx = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in data.iter().zip(&rec.data) {
+            assert!((a - b).abs() < 0.2 * mx);
+        }
+    }
+
+    #[test]
+    fn cache_quantizes_retired_pages_and_keeps_hot_tail_f32() {
+        let opts = KvCacheOpts {
+            page_rows: 4,
+            quantize: true,
+            kv_bits: 8,
+            lattice_dim: 8,
+            ..Default::default()
+        };
+        let width = 32;
+        let mut c = PagedKvCache::new(1, width, opts);
+        let s = c.new_seq();
+        let mut rng = Rng::new(11);
+        let mut want: Vec<f32> = Vec::new();
+        for _ in 0..10 {
+            let r: Vec<f32> = (0..width).map(|_| rng.normal_f32()).collect();
+            c.append(s, 0, Kv::K, &r).unwrap();
+            want.extend_from_slice(&r);
+        }
+        let st = c.stats();
+        // 10 rows over 4-row pages: two full pages retired, one hot tail
+        assert_eq!(st.pages_quantized, 2);
+        assert_eq!(st.hot_pages, 1);
+        assert_eq!(st.pages_in_use, 3);
+        assert!(st.quantized_payload_bytes > 0);
+        // reads decode quantized pages (approximately) and pass the hot
+        // tail through exactly
+        let mut got: Vec<f32> = Vec::new();
+        c.visit(s, 0, Kv::K, 10, |_, rows| got.extend_from_slice(rows));
+        assert_eq!(got.len(), want.len());
+        let quantized_elems = 8 * width; // the two retired pages
+        let mx = want.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in want.iter().zip(&got).take(quantized_elems) {
+            assert!((a - b).abs() < 0.1 * mx, "quantized page drifted: {a} vs {b}");
+        }
+        assert_eq!(
+            &got[quantized_elems..],
+            &want[quantized_elems..],
+            "hot tail must stay bit-exact"
+        );
+        assert!(c.stats().decoded_bytes > 0);
+        // quantized pages shrink the resident footprint below all-f32
+        let f32_page_bytes = 4 * width * 4;
+        assert!(c.bytes_in_use() < 3 * f32_page_bytes);
+    }
+}

@@ -14,7 +14,9 @@
 //! Serving runs directly from compressed weights: the batched
 //! multi-threaded [`coordinator::decode_stream::StreamingMatmul`] engine
 //! decodes each group-panel once per batch and never materializes a full
-//! dequantized layer.
+//! dequantized layer. Decode steps are O(T) per token through the paged,
+//! optionally GLVQ-quantized KV cache in [`kvcache`] (prefill once, then
+//! incremental one-token attention against cached K/V).
 //!
 //! Layout follows DESIGN.md §4; every public item is documented and every
 //! module carries unit tests. The repo-root docs are the entry points:
@@ -28,6 +30,7 @@ pub mod lattice;
 pub mod compand;
 pub mod entropy;
 pub mod quant;
+pub mod kvcache;
 pub mod data;
 pub mod model;
 pub mod salience;

@@ -19,12 +19,14 @@ use glvq::config::GlvqConfig;
 use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use glvq::coordinator::scheduler;
 use glvq::coordinator::server::{
-    self, NativeBackend, Request, Response, ServerOpts, StreamingNativeBackend,
+    self, CachedNativeBackend, NativeBackend, Request, Response, ServerOpts,
+    StreamingNativeBackend,
 };
 use glvq::data::corpus::{Corpus, Mix};
 use glvq::exp::{tables, Workspace};
 use glvq::glvq::pipeline::PipelineOpts;
 use glvq::info;
+use glvq::kvcache::KvCacheOpts;
 use glvq::quant::format::QuantizedModel;
 use glvq::tensor::TensorStore;
 use glvq::util::logging;
@@ -77,7 +79,8 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
-            [--threads N] [--panel-rows R] (reads 'gen <prompt>' lines)
+            [--threads N] [--panel-rows R] [--kv-cache] [--kv-bits B]
+            [--kv-page R] (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
   info      [--artifacts DIR] [--container FILE.glvq]
 
@@ -89,6 +92,13 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                panel-by-panel per batch, no full dequantized layer is ever
                materialized (implies --quantized, default glvq-8d)
   --threads    decode worker threads for --streaming (default: cores - 1)
+  --kv-cache   serve through the paged KV cache: prefill once, then
+               O(T) one-token lockstep steps instead of O(T^2) full
+               recompute (composes with --streaming)
+  --kv-bits    quantize retired KV pages with the grouped lattice
+               quantizer at B bits (default 0 = keep all pages f32,
+               which is bit-identical to serving without the cache)
+  --kv-page    positions per KV page (default 16)
   --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
 
 fn main() -> Result<()> {
@@ -187,7 +197,52 @@ fn main() -> Result<()> {
             let method = args.get("quantized", if streaming { "glvq-8d" } else { "none" });
             let bits = args.get_f64("bits", 2.0);
             let cfg = ws.model_cfg(&model)?;
-            let handle = if streaming {
+            let kv_cache = args.flags.get("kv-cache").is_some_and(|v| v != "false");
+            let kv_bits = args.get_usize("kv-bits", 0);
+            let kv_page = args.get_usize("kv-page", 16);
+            let kv = KvCacheOpts {
+                page_rows: kv_page.max(1),
+                quantize: kv_bits > 0,
+                kv_bits: kv_bits.clamp(1, 8) as u8,
+                ..KvCacheOpts::default()
+            };
+            let handle = if kv_cache && streaming {
+                // compressed weights + paged KV cache: prefill once, then
+                // one-token steps, every linear streamed from the container
+                let threads = args.get_usize("threads", scheduler::default_threads());
+                let panel_rows = args.get_usize("panel-rows", 16);
+                let qm = ws.quantize_container(&model, &method, bits, None)?;
+                let store = ws.trained_default(&model)?;
+                info!(
+                    "cache-aware streaming backend: {} tensors, kv page {} rows, kv bits {}",
+                    qm.tensors.len(),
+                    kv.page_rows,
+                    if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
+                );
+                server::start(
+                    move || {
+                        let engine = StreamingMatmul::new(panel_rows, threads);
+                        let b = CachedNativeBackend::streaming(cfg, store, qm, engine, kv);
+                        Ok(Box::new(b) as Box<_>)
+                    },
+                    ServerOpts::default(),
+                )
+            } else if kv_cache {
+                let store: TensorStore = if method == "none" {
+                    ws.trained_default(&model)?
+                } else {
+                    ws.quantize(&model, &method, bits, None)?.1
+                };
+                info!(
+                    "cache-aware backend: kv page {} rows, kv bits {}",
+                    kv.page_rows,
+                    if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
+                );
+                server::start(
+                    move || Ok(Box::new(CachedNativeBackend::dense(cfg, store, kv)) as Box<_>),
+                    ServerOpts::default(),
+                )
+            } else if streaming {
                 // serve straight from the compressed container: the batched
                 // streaming engine decodes each group-panel once per batch
                 let threads = args.get_usize("threads", scheduler::default_threads());
@@ -225,7 +280,7 @@ fn main() -> Result<()> {
                     ServerOpts::default(),
                 )
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}); type: gen <prompt> | score <p> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, kv-cache={kv_cache}); type: gen <prompt> | score <p> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             loop {
