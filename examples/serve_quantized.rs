@@ -128,6 +128,7 @@ fn main() -> anyhow::Result<()> {
             Response::Generated { .. } => generated += 1,
             Response::Scored { .. } => scored += 1,
             Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Rejected { reason } => anyhow::bail!("server rejected: {reason}"),
         }
     }
     let metrics = handle.shutdown();

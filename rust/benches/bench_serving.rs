@@ -1,0 +1,312 @@
+//! Bench: continuous batching vs lockstep on a mixed-length
+//! Poisson-arrival workload (ISSUE 4 acceptance).
+//!
+//! Workload: interleaved groups of one *long* request (long prompt, long
+//! generation) and many *short* requests, submitted with seeded
+//! exponential inter-arrival gaps. All cells serve the identical request
+//! stream through the same cache-aware **streaming** backend (compressed
+//! weights: every step call pays one whole-model panel-decode, so
+//! scheduling efficiency — fewer, fuller step batches — is what moves
+//! aggregate tokens/s):
+//!
+//! - `lockstep-b1`    — sequential reference (one request per batch)
+//! - `lockstep-b16`   — the old drain-and-run loop at batch budget 16:
+//!                      every drained batch convoys behind its longest
+//!                      member while later arrivals wait
+//! - `continuous-b16` — the `serving::ContinuousScheduler` at the same
+//!                      budget: shorts join/leave mid-flight, longs
+//!                      overlap each other
+//! - `continuous-preempt` — continuous over a page-capped KV arena that
+//!                      forces spill/resume mid-run
+//!
+//! Asserted acceptance: `continuous-b16` reaches **≥ 1.5× aggregate
+//! tokens/s** over `lockstep-b16` (full mode), every cell's per-request
+//! outputs are **bit-identical** to the sequential reference (f32 KV +
+//! batch-invariant streaming decode), and the preemption-forced cell
+//! completes with correct resumes. p50/p95 time-to-first-token and
+//! queue-wait come from the server-side histograms.
+//!
+//! Results append to `runs/bench/serving.json` (`{"runs": [...]}`).
+//! `GLVQ_BENCH_SMOKE=1` runs a miniature workload for CI: same parity
+//! and preemption checks, speedup reported but not asserted.
+//!
+//! Run: `cargo bench --bench bench_serving`
+
+use std::time::{Duration, Instant};
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::coordinator::decode_stream::StreamingMatmul;
+use glvq::coordinator::server::{
+    self, CachedNativeBackend, Request, Response, ServerHandle, ServerOpts,
+};
+use glvq::eval::native_fwd::{self, CalibCapture};
+use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::quant::format::QuantizedModel;
+use glvq::tensor::TensorStore;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "servbench",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 160,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+struct Workload {
+    requests: Vec<Request>,
+    /// inter-arrival gap before each request, microseconds
+    gaps_us: Vec<u64>,
+    total_new: usize,
+}
+
+/// Interleaved long/short request stream with seeded Poisson arrivals.
+fn build_workload(groups: usize, shorts: usize, long_gen: usize, short_gen: usize) -> Workload {
+    let long_prompt = long_gen / 2;
+    let mut rng = Rng::new(4242);
+    let mut requests = Vec::new();
+    let mut gaps_us = Vec::new();
+    let mut total_new = 0usize;
+    let mean_us = if smoke() { 0.0 } else { 300.0 };
+    for g in 0..groups {
+        let mut push = |req: Request, rng: &mut Rng| {
+            let u = (rng.below(1_000_000) as f64 + 1.0) / 1_000_001.0;
+            gaps_us.push((-u.ln() * mean_us) as u64);
+            requests.push(req);
+        };
+        let lp: Vec<u8> = (0..long_prompt).map(|i| ((g * 37 + i * 11) % 251) as u8).collect();
+        push(Request::Generate { prompt: lp, max_new: long_gen }, &mut rng);
+        total_new += long_gen;
+        for s in 0..shorts {
+            let sp: Vec<u8> = (0..6).map(|i| ((g * 53 + s * 17 + i * 7) % 251) as u8).collect();
+            push(Request::Generate { prompt: sp, max_new: short_gen }, &mut rng);
+            total_new += short_gen;
+        }
+    }
+    Workload { requests, gaps_us, total_new }
+}
+
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+/// Quantize the bench model once; every cell serves from clones of the
+/// same container. rANS-entropy payloads make every step call pay a real
+/// panel-decode cost — the regime where scheduling efficiency (fewer,
+/// fuller step batches) dominates aggregate throughput.
+fn quantized_parts(cfg: &ModelConfig) -> (TensorStore, QuantizedModel) {
+    let store = init_params(cfg, 0);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+    let mut cap = CalibCapture::new(16, 0);
+    native_fwd::forward(cfg, &store, &toks, 2, Some(&mut cap)).expect("calibration forward");
+    let calib = cap.into_calib_set();
+    let mut opts = PipelineOpts::default();
+    opts.target_bits = 3.0;
+    opts.bit_allocation = false;
+    opts.entropy = true;
+    let (qm, _) =
+        quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).expect("quantize");
+    (store, qm)
+}
+
+struct CellResult {
+    tok_s: f64,
+    wall_ms: f64,
+    ttft_p50: f64,
+    ttft_p95: f64,
+    queue_p50: f64,
+    preemptions: usize,
+    resumes: usize,
+    sched_steps: usize,
+    outputs: Vec<Vec<u8>>,
+}
+
+/// Submit the workload with its arrival gaps, wait for every response,
+/// and fold in the server-side histograms.
+fn run_cell(handle: ServerHandle, wl: &Workload) -> CellResult {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(wl.requests.len());
+    for (req, &gap) in wl.requests.iter().zip(&wl.gaps_us) {
+        if gap > 0 {
+            std::thread::sleep(Duration::from_micros(gap));
+        }
+        rxs.push(handle.submit(req.clone()));
+    }
+    let mut outputs = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        match rx.recv().expect("server dropped reply") {
+            Response::Generated { text } => outputs.push(text),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = handle.shutdown();
+    CellResult {
+        tok_s: wl.total_new as f64 / wall.max(1e-9),
+        wall_ms: wall * 1e3,
+        ttft_p50: metrics.ttft.quantile(0.5),
+        ttft_p95: metrics.ttft.quantile(0.95),
+        queue_p50: metrics.queue_wait.quantile(0.5),
+        preemptions: metrics.preemptions,
+        resumes: metrics.resumes,
+        sched_steps: metrics.sched_steps,
+        outputs,
+    }
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let (groups, shorts, long_gen, short_gen) =
+        if smoke() { (2, 7, 24, 4) } else { (4, 15, 96, 8) };
+    let wl = build_workload(groups, shorts, long_gen, short_gen);
+    let (store, qm) = quantized_parts(&cfg);
+    println!(
+        "# serving: d={} L={} seq={} — {} requests ({} long × {} tok, {} short × {} tok), {}",
+        cfg.d_model,
+        cfg.n_layer,
+        cfg.seq_len,
+        wl.requests.len(),
+        groups,
+        long_gen,
+        groups * shorts,
+        short_gen,
+        if smoke() { "smoke" } else { "full" },
+    );
+
+    let kv = KvCacheOpts { page_rows: 16, ..Default::default() };
+    // page-capped arena for the preemption cell: one long sequence fits,
+    // two cannot coexist with the short traffic
+    let long_rows = long_gen / 2 + long_gen - 1;
+    let per_long = 2 * cfg.n_layer * long_rows.div_ceil(kv.page_rows);
+    let kv_capped = KvCacheOpts { max_pages: per_long + per_long / 2, ..kv };
+    let mk = |kv: KvCacheOpts| {
+        let cfg = cfg;
+        let store = store.clone();
+        let qm = qm.clone();
+        move || -> anyhow::Result<CachedNativeBackend> {
+            // single decode thread: deterministic cost per call, and the
+            // whole-model decode price is paid once per *step batch* —
+            // exactly what the lockstep/continuous comparison measures
+            let engine = StreamingMatmul::new(16, 1);
+            Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+        }
+    };
+    let mk_box = |kv: KvCacheOpts| {
+        let f = mk(kv);
+        move || f().map(|b| Box::new(b) as Box<dyn server::LmBackend>)
+    };
+
+    let copts = glvq::serving::ContinuousOpts {
+        max_batch: 16,
+        prefill_chunk: 16,
+        ..Default::default()
+    };
+    let cells: Vec<(&str, CellResult)> = vec![
+        (
+            "lockstep-b1",
+            run_cell(server::start(mk_box(kv), ServerOpts { max_batch: 1 }), &wl),
+        ),
+        (
+            "lockstep-b16",
+            run_cell(server::start(mk_box(kv), ServerOpts { max_batch: 16 }), &wl),
+        ),
+        ("continuous-b16", run_cell(server::start_continuous(mk(kv), copts), &wl)),
+        (
+            "continuous-preempt",
+            run_cell(server::start_continuous(mk(kv_capped), copts), &wl),
+        ),
+    ];
+
+    let mut entries: Vec<Json> = Vec::new();
+    for (mode, cell) in &cells {
+        println!(
+            "{mode:<19} {:>8.1} tok/s  wall {:>8.1} ms  ttft p50 {:>7.2} ms  p95 {:>7.2} ms  queue p50 {:>7.2} ms  steps {:>5}  preempt {}/{}",
+            cell.tok_s,
+            cell.wall_ms,
+            cell.ttft_p50,
+            cell.ttft_p95,
+            cell.queue_p50,
+            cell.sched_steps,
+            cell.preemptions,
+            cell.resumes,
+        );
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("requests", Json::num(wl.requests.len() as f64)),
+            ("tokens", Json::num(wl.total_new as f64)),
+            ("tok_s", Json::num(cell.tok_s)),
+            ("wall_ms", Json::num(cell.wall_ms)),
+            ("ttft_p50_ms", Json::num(cell.ttft_p50)),
+            ("ttft_p95_ms", Json::num(cell.ttft_p95)),
+            ("queue_p50_ms", Json::num(cell.queue_p50)),
+            ("sched_steps", Json::num(cell.sched_steps as f64)),
+            ("preemptions", Json::num(cell.preemptions as f64)),
+            ("resumes", Json::num(cell.resumes as f64)),
+        ]));
+    }
+
+    // ---- acceptance ----
+    let by = |m: &str| &cells.iter().find(|c| c.0 == m).expect("cell").1;
+    let sequential = by("lockstep-b1");
+    for (mode, cell) in &cells {
+        assert_eq!(
+            cell.outputs, sequential.outputs,
+            "{mode}: outputs diverged from sequential execution"
+        );
+    }
+    let preempt = by("continuous-preempt");
+    assert!(
+        preempt.preemptions >= 1 && preempt.resumes >= 1,
+        "page-capped cell must preempt and resume (got {}/{})",
+        preempt.preemptions,
+        preempt.resumes
+    );
+    let speedup = by("continuous-b16").tok_s / by("lockstep-b16").tok_s.max(1e-9);
+    println!("  continuous vs lockstep at batch budget 16: {speedup:.2}x aggregate tok/s");
+    if smoke() {
+        println!("  (smoke mode: speedup not asserted)");
+    } else {
+        assert!(
+            speedup >= 1.5,
+            "continuous batching only {speedup:.2}x over lockstep (need >= 1.5x)"
+        );
+    }
+
+    // append this run to the bench JSON trajectory
+    let dir = std::path::Path::new("runs/bench");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("WARN cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join("serving.json");
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
+    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(Json::obj(vec![
+        ("unix_time", Json::num(stamp as f64)),
+        ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
+        ("speedup_vs_lockstep", Json::num(speedup)),
+        ("measurements", Json::Arr(entries)),
+    ]));
+    doc.set("runs", Json::Arr(runs));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("appended trajectory point to {}", path.display()),
+        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
+    }
+}

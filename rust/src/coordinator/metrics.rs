@@ -1,6 +1,7 @@
-//! Serving metrics: counters + a fixed-capacity reservoir histogram giving
-//! p50/p95/p99 latencies and throughput for the server and Table-4 bench,
-//! plus the cumulative streaming-decode traffic
+//! Serving metrics: counters + fixed-capacity reservoir histograms giving
+//! p50/p95/p99 latencies, queue wait, time-to-first-token and
+//! step-batch occupancy for the server (lockstep and continuous modes)
+//! and the serving benches, plus the cumulative streaming-decode traffic
 //! ([`crate::coordinator::decode_stream::DecodeStats`]) when the backend
 //! executes from compressed weights, and KV-cache occupancy/quantization
 //! counters ([`crate::kvcache::KvCacheStats`]) when it serves through the
@@ -73,7 +74,28 @@ pub struct ServerMetrics {
     pub requests: usize,
     pub tokens_out: usize,
     pub batches: usize,
+    /// end-to-end request latency (submit → response), ms
     pub latency: LatencyHist,
+    /// submit → admission wait, ms (lockstep: submit → batch drain)
+    pub queue_wait: LatencyHist,
+    /// submit → first emitted/scored token, ms — the latency continuous
+    /// batching exists to protect
+    pub ttft: LatencyHist,
+    /// sequences per scheduler step (continuous mode) — quantiles show
+    /// how full the step batches ran
+    pub seqs_per_step: LatencyHist,
+    /// continuous-scheduler iterations executed
+    pub sched_steps: usize,
+    /// prefill chunks fed (continuous mode chunked prefill)
+    pub prefill_chunks: usize,
+    /// prompt tokens fed through prefill chunks
+    pub prefill_tokens: usize,
+    /// sequences spilled out of the KV arena under page pressure
+    pub preemptions: usize,
+    /// preempted sequences resumed
+    pub resumes: usize,
+    /// requests refused with structured backpressure
+    pub rejections: usize,
     /// cumulative streaming-decode traffic, when the backend serves from
     /// compressed weights (None for dense/PJRT backends)
     pub decode: Option<DecodeStats>,
@@ -90,6 +112,15 @@ impl Default for ServerMetrics {
             tokens_out: 0,
             batches: 0,
             latency: LatencyHist::new(4096),
+            queue_wait: LatencyHist::new(4096),
+            ttft: LatencyHist::new(4096),
+            seqs_per_step: LatencyHist::new(4096),
+            sched_steps: 0,
+            prefill_chunks: 0,
+            prefill_tokens: 0,
+            preemptions: 0,
+            resumes: 0,
+            rejections: 0,
             decode: None,
             kv_cache: None,
         }
@@ -117,6 +148,25 @@ impl ServerMetrics {
             self.latency.quantile(0.95),
             self.latency.quantile(0.99),
         );
+        if self.ttft.count() > 0 {
+            out.push_str(&format!(
+                " ttft_p50={:.1}ms ttft_p95={:.1}ms queue_p50={:.1}ms",
+                self.ttft.quantile(0.5),
+                self.ttft.quantile(0.95),
+                self.queue_wait.quantile(0.5),
+            ));
+        }
+        if self.sched_steps > 0 {
+            out.push_str(&format!(
+                " steps={} seqs/step_p50={:.1} prefill_chunks={} preempt={} resume={} rejected={}",
+                self.sched_steps,
+                self.seqs_per_step.quantile(0.5),
+                self.prefill_chunks,
+                self.preemptions,
+                self.resumes,
+                self.rejections,
+            ));
+        }
         if let Some(d) = &self.decode {
             out.push_str(&format!(
                 " decoded={:.2}MB peak_panel={}elems",
@@ -170,6 +220,27 @@ mod tests {
         let h = LatencyHist::new(8);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn report_includes_scheduler_section_when_present() {
+        let mut m = ServerMetrics::default();
+        assert!(!m.report().contains("steps="), "no scheduler section when idle");
+        assert!(!m.report().contains("ttft_p50"), "no ttft section before first token");
+        m.ttft.record(12.0);
+        m.queue_wait.record(1.5);
+        m.sched_steps = 7;
+        m.seqs_per_step.record(3.0);
+        m.prefill_chunks = 4;
+        m.preemptions = 2;
+        m.resumes = 2;
+        m.rejections = 1;
+        let r = m.report();
+        assert!(r.contains("ttft_p50=12.0ms"), "{r}");
+        assert!(r.contains("steps=7"), "{r}");
+        assert!(r.contains("preempt=2"), "{r}");
+        assert!(r.contains("resume=2"), "{r}");
+        assert!(r.contains("rejected=1"), "{r}");
     }
 
     #[test]

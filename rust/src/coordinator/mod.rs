@@ -9,9 +9,12 @@
 //!   matmul, release (peak-memory bound),
 //! - [`server`] — batched LM request loop (generate/score) with lockstep
 //!   batch stepping, over dense weights, a compressed `.glvq` container
-//!   ([`server::StreamingNativeBackend`]), or the PJRT logits program,
-//! - [`metrics`] — counters + streaming histograms + decode traffic for
-//!   the above.
+//!   ([`server::StreamingNativeBackend`]), or the PJRT logits program;
+//!   [`server::start_continuous`] runs the same request surface through
+//!   the continuous-batching scheduler in [`crate::serving`],
+//! - [`metrics`] — counters + streaming histograms (latency, queue wait,
+//!   time-to-first-token, step-batch occupancy) + decode traffic for the
+//!   above.
 //!
 //! See `ARCHITECTURE.md` at the repo root for how these fit the crate's
 //! overall data flow.

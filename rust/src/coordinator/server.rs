@@ -14,7 +14,17 @@
 //! to O(T). [`super::metrics::ServerMetrics`] tracks latency/throughput
 //! plus, per backend kind, cumulative weight-decode traffic and KV-cache
 //! occupancy/quantization counters.
+//!
+//! [`start_continuous`] runs the same request channel through the
+//! continuous-batching scheduler instead
+//! ([`crate::serving::ContinuousScheduler`]): sequences join and leave
+//! the step batch per token, long prompts prefill in chunks, and the
+//! scheduler preempts/resumes sequences against KV-page pressure.
+//! [`CachedNativeBackend`] exposes the per-sequence
+//! step/retire/preempt/resume hooks that mode schedules through (its
+//! [`SeqBackend`] impl).
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -22,12 +32,13 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use crate::eval::native_fwd::{self, DenseLinear, LinearOp, StreamedLinear};
-use crate::kvcache::{KvCacheOpts, KvCacheStats, PagedKvCache, SeqId};
+use crate::kvcache::{KvCacheOpts, KvCacheStats, PagedKvCache, SeqId, SpilledSeq};
 use crate::linalg::Mat;
 use crate::model::ModelConfig;
 use crate::quant::format::QuantizedModel;
 use crate::runtime::exec::LogitsExec;
 use crate::runtime::Engine;
+use crate::serving::{ContinuousOpts, ContinuousScheduler, SeqBackend};
 use crate::tensor::TensorStore;
 
 use super::metrics::ServerMetrics;
@@ -433,6 +444,60 @@ impl LmBackend for CachedNativeBackend {
     }
 }
 
+/// The continuous scheduler's per-sequence hooks: the lockstep loop
+/// drives this backend through the all-or-nothing `logits_last_batch`
+/// recognition, while `serving::ContinuousScheduler` owns sequence
+/// identity explicitly and schedules through these.
+impl SeqBackend for CachedNativeBackend {
+    fn ctx_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn begin_seq(&mut self) -> SeqId {
+        self.cache.new_seq()
+    }
+
+    fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
+        let seqs: Vec<SeqId> = items.iter().map(|it| it.0).collect();
+        let toks: Vec<&[i32]> = items.iter().map(|it| it.1).collect();
+        self.run_cached(|cfg, store, lin, cache| {
+            native_fwd::forward_ragged(cfg, store, lin, cache, &seqs, &toks)
+        })
+    }
+
+    fn retire_seq(&mut self, sid: SeqId) {
+        self.cache.evict(sid);
+    }
+
+    fn preempt_seq(&mut self, sid: SeqId, quantize: bool) -> Result<SpilledSeq> {
+        self.cache.spill(sid, quantize)
+    }
+
+    fn resume_seq(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq> {
+        self.cache.restore(sp)
+    }
+
+    fn free_pages(&self) -> Option<usize> {
+        self.cache.free_pages()
+    }
+
+    fn page_capacity(&self) -> Option<usize> {
+        self.cache.page_capacity()
+    }
+
+    fn pages_for(&self, rows: usize, n_new: usize) -> usize {
+        self.cache.pages_needed(rows, n_new)
+    }
+
+    fn kv_stats(&self) -> Option<KvCacheStats> {
+        Some(self.cache.stats())
+    }
+
+    fn stream_stats(&self) -> Option<DecodeStats> {
+        self.qm.as_ref().map(|_| self.stats)
+    }
+}
+
 /// PJRT backend over the logits artifact.
 pub struct PjrtBackend {
     exec: LogitsExec,
@@ -482,7 +547,13 @@ pub enum Request {
 pub enum Response {
     Generated { text: Vec<u8> },
     Scored { logprob: f64 },
+    /// The request was accepted but failed while running.
     Error { message: String },
+    /// The request was refused at admission (continuous mode): the
+    /// `reason` is the rendered [`crate::serving::Backpressure`] —
+    /// bounded-queue overflow, token-budget overflow, context overflow,
+    /// or a KV footprint the arena can never hold. Shed load or retry.
+    Rejected { reason: String },
 }
 
 struct Job {
@@ -558,8 +629,16 @@ where
                 }
             }
             metrics.batches += 1;
-            let requests: Vec<Request> = batch.iter().map(|j| j.request.clone()).collect();
-            let responses = handle_batch(&mut *backend, &requests, &mut metrics);
+            for job in &batch {
+                metrics
+                    .queue_wait
+                    .record(job.submitted.elapsed().as_secs_f64() * 1e3);
+            }
+            // borrow the payloads: a drained batch steps against the jobs
+            // it came from, so nothing needs the prompt bytes cloned
+            let requests: Vec<&Request> = batch.iter().map(|j| &j.request).collect();
+            let submitted: Vec<Instant> = batch.iter().map(|j| j.submitted).collect();
+            let responses = handle_batch(&mut *backend, &requests, &submitted, &mut metrics);
             for (job, response) in batch.into_iter().zip(responses) {
                 metrics.requests += 1;
                 metrics
@@ -575,6 +654,77 @@ where
         metrics
     });
     ServerHandle { tx, join: Some(join) }
+}
+
+/// Start the **continuous-batching** serving loop on its own thread: the
+/// same [`ServerHandle`] interface as [`start`], but requests feed the
+/// admission-controlled queue of a [`ContinuousScheduler`] instead of
+/// lockstep batches — sequences join and leave the step batch per token,
+/// long prompts prefill in `prefill_chunk`-token slices, finished
+/// sequences free their KV pages immediately, and page pressure preempts
+/// (quantize-to-spill) rather than erroring. Requests the scheduler
+/// refuses come back as [`Response::Rejected`] with the structured
+/// backpressure reason.
+///
+/// Requires a cache-aware backend: continuous scheduling *is* paged-KV
+/// bookkeeping, so `make_backend` returns a concrete
+/// [`CachedNativeBackend`] (dense or streamed-compressed weights).
+pub fn start_continuous<F>(make_backend: F, opts: ContinuousOpts) -> ServerHandle
+where
+    F: FnOnce() -> Result<CachedNativeBackend> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Job>();
+    let join = std::thread::spawn(move || {
+        let backend = make_backend().expect("backend construction failed");
+        let mut sched = ContinuousScheduler::new(backend, opts);
+        let mut replies: BTreeMap<u64, mpsc::Sender<Response>> = BTreeMap::new();
+        let mut open = true;
+        while open || sched.has_work() {
+            // pull in everything that has arrived; block only when idle
+            if sched.has_work() {
+                loop {
+                    match rx.try_recv() {
+                        Ok(job) => submit_job(&mut sched, &mut replies, job),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                sched.step();
+            } else {
+                match rx.recv() {
+                    Ok(job) => submit_job(&mut sched, &mut replies, job),
+                    Err(_) => open = false,
+                }
+            }
+            for (rid, response) in sched.drain_finished() {
+                if let Some(reply) = replies.remove(&rid) {
+                    let _ = reply.send(response);
+                }
+            }
+        }
+        sched.into_metrics()
+    });
+    ServerHandle { tx, join: Some(join) }
+}
+
+/// Feed one job into the scheduler, answering immediately-refused
+/// requests with their structured backpressure reason.
+fn submit_job(
+    sched: &mut ContinuousScheduler<CachedNativeBackend>,
+    replies: &mut BTreeMap<u64, mpsc::Sender<Response>>,
+    job: Job,
+) {
+    match sched.submit(job.request, job.submitted) {
+        Ok(rid) => {
+            replies.insert(rid, job.reply);
+        }
+        Err(bp) => {
+            let _ = job.reply.send(Response::Rejected { reason: bp.to_string() });
+        }
+    }
 }
 
 /// Per-request lockstep state: both kinds only ever need last-position
@@ -599,14 +749,19 @@ impl SeqState {
 /// active requests into a single `logits_last_batch` call, then advances
 /// each by one token. Deterministic and equivalent to serving the requests
 /// one at a time (the native forward treats batch rows independently).
+/// Requests are borrowed — the lockstep loop never clones prompt bytes —
+/// and `submitted` (parallel to `requests`) feeds the time-to-first-token
+/// histogram.
 fn handle_batch(
     backend: &mut dyn LmBackend,
-    requests: &[Request],
+    requests: &[&Request],
+    submitted: &[Instant],
     metrics: &mut ServerMetrics,
 ) -> Vec<Response> {
+    debug_assert_eq!(requests.len(), submitted.len());
     let mut states: Vec<SeqState> = requests
         .iter()
-        .map(|r| match r {
+        .map(|&r| match r {
             Request::Generate { prompt, max_new } => {
                 let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
                 let start = tokens.len();
@@ -620,6 +775,7 @@ fn handle_batch(
             },
         })
         .collect();
+    let mut saw_first = vec![false; states.len()];
 
     loop {
         let active: Vec<usize> = (0..states.len()).filter(|&i| states[i].active()).collect();
@@ -648,6 +804,10 @@ fn handle_batch(
             }
         };
         for (&i, logits) in active.iter().zip(&all_logits) {
+            if !saw_first[i] {
+                saw_first[i] = true;
+                metrics.ttft.record(submitted[i].elapsed().as_secs_f64() * 1e3);
+            }
             match &mut states[i] {
                 SeqState::Gen { tokens, .. } => {
                     tokens.push(native_fwd::argmax_logit(logits));
@@ -711,6 +871,18 @@ mod tests {
         let cfg = tiny_cfg();
         let store = init_params(&cfg, 0);
         Ok(Box::new(NativeBackend { cfg, store }))
+    }
+
+    /// Drive one lockstep batch over owned requests (the tests' shorthand
+    /// for the borrow-based [`handle_batch`]).
+    fn run_batch(
+        backend: &mut dyn LmBackend,
+        requests: &[Request],
+        metrics: &mut ServerMetrics,
+    ) -> Vec<Response> {
+        let refs: Vec<&Request> = requests.iter().collect();
+        let submitted = vec![Instant::now(); requests.len()];
+        handle_batch(backend, &refs, &submitted, metrics)
     }
 
     /// Quantize the tiny model with RTN and wrap it in the compressed-
@@ -811,13 +983,13 @@ mod tests {
         let mut m1 = ServerMetrics::default();
         let sequential: Vec<Response> = requests
             .iter()
-            .map(|r| handle_batch(&mut b1, std::slice::from_ref(r), &mut m1).remove(0))
+            .map(|r| run_batch(&mut b1, std::slice::from_ref(r), &mut m1).remove(0))
             .collect();
         let cfg = tiny_cfg();
         let store = init_params(&cfg, 0);
         let mut b2 = NativeBackend { cfg, store };
         let mut m2 = ServerMetrics::default();
-        let batched = handle_batch(&mut b2, &requests, &mut m2);
+        let batched = run_batch(&mut b2, &requests, &mut m2);
         assert_eq!(m1.tokens_out, m2.tokens_out);
         for (a, b) in sequential.iter().zip(&batched) {
             match (a, b) {
@@ -854,7 +1026,7 @@ mod tests {
             match rx.recv().unwrap() {
                 Response::Generated { text } => assert_eq!(text.len(), 3),
                 Response::Scored { logprob } => assert!(logprob.is_finite()),
-                Response::Error { message } => panic!("server error: {message}"),
+                other => panic!("unexpected {other:?}"),
             }
         }
         let metrics = handle.shutdown();
@@ -884,8 +1056,8 @@ mod tests {
         let mut cached = CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv);
         let mut m1 = ServerMetrics::default();
         let mut m2 = ServerMetrics::default();
-        let a = handle_batch(&mut plain, &requests, &mut m1);
-        let b = handle_batch(&mut cached, &requests, &mut m2);
+        let a = run_batch(&mut plain, &requests, &mut m1);
+        let b = run_batch(&mut cached, &requests, &mut m2);
         assert_eq!(m1.tokens_out, m2.tokens_out);
         for (x, y) in a.iter().zip(&b) {
             match (x, y) {
@@ -917,8 +1089,8 @@ mod tests {
         let mut cached = CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv);
         let req = [Request::Generate { prompt: b"a long running prompt ".to_vec(), max_new: 20 }];
         let mut m = ServerMetrics::default();
-        let a = handle_batch(&mut plain, &req, &mut m).remove(0);
-        let b = handle_batch(&mut cached, &req, &mut m).remove(0);
+        let a = run_batch(&mut plain, &req, &mut m).remove(0);
+        let b = run_batch(&mut cached, &req, &mut m).remove(0);
         match (a, b) {
             (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
                 assert_eq!(ta.len(), 20);
@@ -960,8 +1132,8 @@ mod tests {
             Request::Score { prompt: b"the ".to_vec(), continuation: b"ka".to_vec() },
         ];
         let mut m = ServerMetrics::default();
-        let a = handle_batch(&mut plain, &req, &mut m);
-        let b = handle_batch(&mut cached, &req, &mut m);
+        let a = run_batch(&mut plain, &req, &mut m);
+        let b = run_batch(&mut cached, &req, &mut m);
         for (x, y) in a.iter().zip(&b) {
             match (x, y) {
                 (Response::Generated { text: tx }, Response::Generated { text: ty }) => {
@@ -1019,6 +1191,70 @@ mod tests {
     }
 
     #[test]
+    fn continuous_server_roundtrip_mixed_requests() {
+        // the continuous path behind the unchanged ServerHandle surface:
+        // mixed generate/score traffic all answered, scheduler metrics on
+        let cfg = tiny_cfg();
+        let kv = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let handle = start_continuous(
+            move || Ok(CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv)),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            if i % 3 == 2 {
+                rxs.push(handle.submit(Request::Score {
+                    prompt: b"the ".to_vec(),
+                    continuation: b"ka".to_vec(),
+                }));
+            } else {
+                rxs.push(handle.submit(Request::Generate {
+                    prompt: format!("req {i} ").into_bytes(),
+                    max_new: 5,
+                }));
+            }
+        }
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Response::Generated { text } => assert_eq!(text.len(), 5),
+                Response::Scored { logprob } => assert!(logprob.is_finite()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 6);
+        assert!(metrics.sched_steps > 0, "continuous mode counts scheduler steps");
+        assert_eq!(metrics.ttft.count(), 6);
+        assert!(metrics.kv_cache.is_some());
+    }
+
+    #[test]
+    fn continuous_server_rejects_with_structured_backpressure() {
+        let cfg = tiny_cfg(); // seq_len 32
+        let kv = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let handle = start_continuous(
+            move || Ok(CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv)),
+            ContinuousOpts::default(),
+        );
+        // prompt + max_new exceeds the model context → structured refusal
+        match handle.call(Request::Generate { prompt: vec![b'x'; 30], max_new: 10 }).unwrap() {
+            Response::Rejected { reason } => assert!(reason.contains("context"), "{reason}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match handle.call(Request::Generate { prompt: Vec::new(), max_new: 3 }).unwrap() {
+            Response::Rejected { reason } => assert!(reason.contains("prompt"), "{reason}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // a feasible request still succeeds on the same handle
+        match handle.call(Request::Generate { prompt: b"ok ".to_vec(), max_new: 3 }).unwrap() {
+            Response::Generated { text } => assert_eq!(text.len(), 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 1, "rejected requests never reach the model");
+    }
+
+    #[test]
     fn streaming_backend_matches_dense_generation() {
         // compressed-weights serving must generate the same bytes as dense
         // serving over the dequantized weights of the same container
@@ -1046,8 +1282,8 @@ mod tests {
         };
         let req = [Request::Generate { prompt: b"the kama ".to_vec(), max_new: 6 }];
         let mut m = ServerMetrics::default();
-        let a = handle_batch(&mut dense, &req, &mut m).remove(0);
-        let b = handle_batch(&mut streamed, &req, &mut m).remove(0);
+        let a = run_batch(&mut dense, &req, &mut m).remove(0);
+        let b = run_batch(&mut streamed, &req, &mut m).remove(0);
         match (a, b) {
             (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
                 assert_eq!(ta, tb, "streamed generation diverged from dense")

@@ -8,11 +8,15 @@
 //! batched [`StreamingMatmul`] engine — the §3.4 serving mode in which no
 //! full dequantized layer is ever materialized.
 //!
-//! [`forward_incremental`] (with its [`prefill_with_cache`] /
-//! [`step_with_cache`] wrappers) is the KV-cache-aware variant: attention
-//! runs only for new positions against cached K/V pages
-//! ([`crate::kvcache::PagedKvCache`]), making decode O(T) per token while
-//! staying bit-identical to the full recompute on f32 pages.
+//! [`forward_ragged`] (with its [`forward_incremental`] /
+//! [`prefill_with_cache`] / [`step_with_cache`] wrappers) is the
+//! KV-cache-aware variant: attention runs only for new positions against
+//! cached K/V pages ([`crate::kvcache::PagedKvCache`]), making decode
+//! O(T) per token while staying bit-identical to the full recompute on
+//! f32 pages. Being *ragged* — each sequence in a call advances by its
+//! own token count — it is also the continuous-batching primitive: one
+//! step batch can mix a long prompt's prefill chunk with one-token decode
+//! steps of unrelated sequences (`serving::ContinuousScheduler`).
 
 use std::collections::BTreeMap;
 
@@ -345,6 +349,8 @@ pub fn forward_with(
 /// advances by the same `n_new` (prefill calls pass one sequence with the
 /// whole prompt, lockstep decode passes many sequences with one token
 /// each). Errors if any sequence would exceed `cfg.seq_len` positions.
+/// Thin wrapper over [`forward_ragged`], which additionally allows a
+/// different token count per sequence.
 pub fn forward_incremental(
     cfg: &ModelConfig,
     store: &TensorStore,
@@ -357,6 +363,48 @@ pub fn forward_incremental(
     anyhow::ensure!(batch > 0 && !tokens.is_empty(), "empty incremental batch");
     anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible into {batch} sequences");
     let n_new = tokens.len() / batch;
+    let slices: Vec<&[i32]> = tokens.chunks_exact(n_new).collect();
+    forward_ragged(cfg, store, lin, cache, seqs, &slices)
+}
+
+/// Variable-membership cache-aware forward — the continuous-batching
+/// primitive: each sequence in `seqs` advances by its **own** number of
+/// new tokens (`tokens[b]`, non-empty), so one call can mix a prefill
+/// chunk of one request with one-token decode steps of others. Returns
+/// logits for exactly the new positions, sequence-major
+/// (`Σ tokens[b].len() × V`; sequence `b`'s rows start at
+/// `Σ_{b'<b} tokens[b'].len()`).
+///
+/// Every per-row operation (rmsnorm, the linears, the causal softmax over
+/// each row's own prefix, the j-ascending V accumulation) is independent
+/// of which other rows share the call, so the logits are **bit-identical**
+/// to any other chunking of the same token streams — one big prefill, a
+/// chain of one-token steps, or any ragged mix (tested below and in
+/// `tests/continuous_parity.rs`). Errors if any sequence would exceed
+/// `cfg.seq_len` positions.
+pub fn forward_ragged(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    cache: &mut PagedKvCache,
+    seqs: &[SeqId],
+    tokens: &[&[i32]],
+) -> Result<Mat> {
+    let batch = seqs.len();
+    anyhow::ensure!(batch > 0, "empty ragged batch");
+    anyhow::ensure!(tokens.len() == batch, "one token slice per sequence");
+    anyhow::ensure!(
+        tokens.iter().all(|t| !t.is_empty()),
+        "every sequence must advance by at least one token"
+    );
+    let counts: Vec<usize> = tokens.iter().map(|t| t.len()).collect();
+    // row offset of each sequence's first new position in the flat output
+    let mut offs = Vec::with_capacity(batch);
+    let mut total = 0usize;
+    for &c in &counts {
+        offs.push(total);
+        total += c;
+    }
     let d = cfg.d_model;
     let get1 = |name: &str| -> Result<Vec<f32>> {
         Ok(store
@@ -371,20 +419,21 @@ pub fn forward_incremental(
     let bases: Vec<usize> = seqs.iter().map(|&s| cache.rows(s, 0, Kv::K)).collect();
     for (b, &base) in bases.iter().enumerate() {
         anyhow::ensure!(
-            base + n_new <= cfg.seq_len,
-            "sequence {b} exceeds seq_len {} ({base} cached + {n_new} new)",
-            cfg.seq_len
+            base + counts[b] <= cfg.seq_len,
+            "sequence {b} exceeds seq_len {} ({base} cached + {} new)",
+            cfg.seq_len,
+            counts[b]
         );
     }
 
     let emb = store.get("emb").context("missing emb")?.to_mat();
     let pos = store.get("pos").context("missing pos")?.to_mat();
-    let mut h = Mat::zeros(batch * n_new, d);
+    let mut h = Mat::zeros(total, d);
     for b in 0..batch {
-        for r in 0..n_new {
-            let tok = tokens[b * n_new + r] as usize;
+        for r in 0..counts[b] {
+            let tok = tokens[b][r] as usize;
             let p = bases[b] + r;
-            let dst = h.row_mut(b * n_new + r);
+            let dst = h.row_mut(offs[b] + r);
             for j in 0..d {
                 dst[j] = emb.at(tok, j) + pos.at(p, j);
             }
@@ -402,14 +451,16 @@ pub fn forward_incremental(
         let k = lin.apply(&format!("{pfx}attn.wk"), &a)?;
         let v = lin.apply(&format!("{pfx}attn.wv"), &a)?;
         for (b, &sid) in seqs.iter().enumerate() {
-            for r in 0..n_new {
-                cache.append(sid, layer, Kv::K, k.row(b * n_new + r))?;
-                cache.append(sid, layer, Kv::V, v.row(b * n_new + r))?;
+            for r in 0..counts[b] {
+                cache.append(sid, layer, Kv::K, k.row(offs[b] + r))?;
+                cache.append(sid, layer, Kv::V, v.row(offs[b] + r))?;
             }
         }
-        let mut att_out = Mat::zeros(batch * n_new, d);
+        let mut att_out = Mat::zeros(total, d);
         for (b, &sid) in seqs.iter().enumerate() {
             let base = bases[b];
+            let n_new = counts[b];
+            let row0 = offs[b];
             let l_total = base + n_new;
             // scores[(head·n_new + r)·l_total + j], causal: j ≤ base + r
             let mut scores = vec![0.0f32; nh * n_new * l_total];
@@ -423,7 +474,7 @@ pub fn forward_incremental(
                             if j > base + r {
                                 continue;
                             }
-                            let qh = &q.row(b * n_new + r)[off..off + dh];
+                            let qh = &q.row(row0 + r)[off..off + dh];
                             let mut s = 0.0f32;
                             for e in 0..dh {
                                 s += qh[e] * kh[e];
@@ -435,8 +486,8 @@ pub fn forward_incremental(
             });
             for head in 0..nh {
                 for r in 0..n_new {
-                    let row0 = (head * n_new + r) * l_total;
-                    softmax_slice(&mut scores[row0..row0 + base + r + 1]);
+                    let srow0 = (head * n_new + r) * l_total;
+                    softmax_slice(&mut scores[srow0..srow0 + base + r + 1]);
                 }
             }
             cache.visit(sid, layer, Kv::V, l_total, |pos0, vr| {
@@ -453,7 +504,7 @@ pub fn forward_incremental(
                             if w == 0.0 {
                                 continue;
                             }
-                            let dst = &mut att_out.row_mut(b * n_new + r)[off..off + dh];
+                            let dst = &mut att_out.row_mut(row0 + r)[off..off + dh];
                             for e in 0..dh {
                                 dst[e] += w * vh[e];
                             }
@@ -834,6 +885,113 @@ mod tests {
                 step_with_cache(&cfg, &store, &mut lin, &mut cs, &[sid], &[next[i]]).unwrap();
             assert_eq!(batched.row(i), solo.row(0), "sequence {i} diverged in batch");
         }
+    }
+
+    #[test]
+    fn ragged_chunked_prefill_is_bit_identical_to_one_shot_prefill() {
+        // feeding a prompt in uneven chunks must reproduce the one-shot
+        // prefill logits bitwise at every position — the property chunked
+        // prefill rests on
+        let cfg = tiny();
+        let store = init_params(&cfg, 12);
+        let mut rng = Rng::new(77);
+        let prompt: Vec<i32> = (0..13).map(|_| rng.below(256) as i32).collect();
+        let opts = crate::kvcache::KvCacheOpts { page_rows: 4, ..Default::default() };
+
+        let mut c1 = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let s1 = c1.new_seq();
+        let mut lin = DenseLinear { store: &store };
+        let want = prefill_with_cache(&cfg, &store, &mut lin, &mut c1, s1, &prompt).unwrap();
+
+        let mut c2 = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let s2 = c2.new_seq();
+        let mut got_rows: Vec<Vec<f32>> = Vec::new();
+        let mut fed = 0usize;
+        for take in [3usize, 1, 5, 4] {
+            let chunk = &prompt[fed..fed + take];
+            let mut lin = DenseLinear { store: &store };
+            let part = forward_ragged(&cfg, &store, &mut lin, &mut c2, &[s2], &[chunk]).unwrap();
+            assert_eq!(part.rows, take);
+            for r in 0..take {
+                got_rows.push(part.row(r).to_vec());
+            }
+            fed += take;
+        }
+        assert_eq!(fed, prompt.len());
+        for (t, row) in got_rows.iter().enumerate() {
+            assert_eq!(row.as_slice(), want.row(t), "chunked prefill diverged at position {t}");
+        }
+    }
+
+    #[test]
+    fn ragged_mixed_chunk_and_decode_matches_separate_calls() {
+        // one ragged call carrying {a prefill chunk, two one-token decode
+        // steps} must equal running each sequence in its own call — the
+        // variable-membership step batch is exactly as exact as lockstep
+        let cfg = tiny();
+        let store = init_params(&cfg, 13);
+        let mut rng = Rng::new(88);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|i| (0..(3 + 2 * i)).map(|_| rng.below(256) as i32).collect())
+            .collect();
+        let chunk: Vec<i32> = (0..6).map(|_| rng.below(256) as i32).collect();
+        let opts = crate::kvcache::KvCacheOpts { page_rows: 4, ..Default::default() };
+
+        // reference: every sequence advanced in its own call
+        let mut cs = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let ids: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let sid = cs.new_seq();
+                let mut lin = DenseLinear { store: &store };
+                prefill_with_cache(&cfg, &store, &mut lin, &mut cs, sid, p).unwrap();
+                sid
+            })
+            .collect();
+        let mut lin = DenseLinear { store: &store };
+        let solo0 =
+            forward_ragged(&cfg, &store, &mut lin, &mut cs, &[ids[0]], &[&chunk]).unwrap();
+        let mut lin = DenseLinear { store: &store };
+        let solo1 = forward_ragged(&cfg, &store, &mut lin, &mut cs, &[ids[1]], &[&[7][..]])
+            .unwrap();
+        let mut lin = DenseLinear { store: &store };
+        let solo2 = forward_ragged(&cfg, &store, &mut lin, &mut cs, &[ids[2]], &[&[11][..]])
+            .unwrap();
+
+        // one fused variable-membership batch over fresh caches
+        let mut cb = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let idb: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let sid = cb.new_seq();
+                let mut lin = DenseLinear { store: &store };
+                prefill_with_cache(&cfg, &store, &mut lin, &mut cb, sid, p).unwrap();
+                sid
+            })
+            .collect();
+        let mut lin = DenseLinear { store: &store };
+        let toks: Vec<&[i32]> = vec![&chunk[..], &[7][..], &[11][..]];
+        let fused = forward_ragged(&cfg, &store, &mut lin, &mut cb, &idb, &toks).unwrap();
+        assert_eq!(fused.rows, chunk.len() + 2);
+        for r in 0..chunk.len() {
+            assert_eq!(fused.row(r), solo0.row(r), "chunk row {r} diverged in fused batch");
+        }
+        assert_eq!(fused.row(chunk.len()), solo1.row(0), "decode step 1 diverged");
+        assert_eq!(fused.row(chunk.len() + 1), solo2.row(0), "decode step 2 diverged");
+    }
+
+    #[test]
+    fn ragged_rejects_malformed_batches() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 14);
+        let opts = crate::kvcache::KvCacheOpts { page_rows: 4, ..Default::default() };
+        let mut c = crate::kvcache::PagedKvCache::new(cfg.n_layer, cfg.d_model, opts);
+        let s = c.new_seq();
+        let mut lin = DenseLinear { store: &store };
+        let empty: &[i32] = &[];
+        assert!(forward_ragged(&cfg, &store, &mut lin, &mut c, &[s], &[empty]).is_err());
+        assert!(forward_ragged(&cfg, &store, &mut lin, &mut c, &[], &[]).is_err());
+        assert!(forward_ragged(&cfg, &store, &mut lin, &mut c, &[s], &[]).is_err());
     }
 
     #[test]

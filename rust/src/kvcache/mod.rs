@@ -22,6 +22,12 @@
 //!   steps compute attention scores only for the new position against the
 //!   cached prefix, bit-identical to the full recompute when pages stay
 //!   f32 (tested in `tests/kvcache_parity.rs`).
+//! - [`paged::PagedKvCache::spill`] / [`paged::PagedKvCache::restore`]
+//!   move a whole sequence out of (and back into) the arena for scheduler
+//!   preemption: bit-exact when pages stay f32, or compressed on the way
+//!   out (*quantize-to-spill*) so a parked sequence costs a fraction of
+//!   its hot footprint. [`paged::PagedKvCache::free_pages`] and the page
+//!   watermark give admission control a direct occupancy signal.
 //!
 //! The serving integration lives in `coordinator::server::CachedNativeBackend`
 //! (prefill once, then batched one-token lockstep steps) and surfaces
@@ -31,7 +37,7 @@
 pub mod paged;
 pub mod quantized;
 
-pub use paged::{Kv, PagedKvCache, SeqId};
+pub use paged::{Kv, PagedKvCache, SeqId, SpilledSeq};
 pub use quantized::KvQuantizer;
 
 /// KV-cache construction options.
@@ -91,4 +97,10 @@ pub struct KvCacheStats {
     /// compressed bytes (codes + side info) produced by page quantization
     /// (cumulative)
     pub quantized_payload_bytes: usize,
+    /// pages moved out of the arena by sequence preemption (cumulative) —
+    /// see [`PagedKvCache::spill`]
+    pub pages_spilled: usize,
+    /// spilled pages moved back into the arena on resume (cumulative) —
+    /// see [`PagedKvCache::restore`]
+    pub pages_restored: usize,
 }

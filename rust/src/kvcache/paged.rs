@@ -92,19 +92,25 @@ impl PageArena {
         self.page_rows * self.width * 4
     }
 
-    /// Allocate a zeroed hot page: reuse a freed slot (and a spare buffer)
-    /// when possible, grow the arena otherwise.
-    fn alloc(&mut self) -> Result<usize> {
-        let id = match self.free.pop() {
-            Some(id) => id,
+    /// Claim an empty slot id: reuse a freed slot when possible, grow the
+    /// arena otherwise (respecting `max_pages`).
+    fn slot_id(&mut self) -> Result<usize> {
+        match self.free.pop() {
+            Some(id) => Ok(id),
             None => {
                 if self.max_pages > 0 && self.slots.len() >= self.max_pages {
                     bail!("kv-cache arena exhausted ({} pages)", self.max_pages);
                 }
                 self.slots.push(PageSlot::Free);
-                self.slots.len() - 1
+                Ok(self.slots.len() - 1)
             }
-        };
+        }
+    }
+
+    /// Allocate a zeroed hot page: reuse a freed slot (and a spare buffer)
+    /// when possible, grow the arena otherwise.
+    fn alloc(&mut self) -> Result<usize> {
+        let id = self.slot_id()?;
         let buf = match self.spare.pop() {
             Some(mut b) => {
                 b.fill(0.0);
@@ -114,6 +120,25 @@ impl PageArena {
         };
         self.slots[id] = PageSlot::Hot(buf);
         self.hot_pages += 1;
+        self.peak_pages = self.peak_pages.max(self.in_use());
+        Ok(id)
+    }
+
+    /// Install an existing f32 buffer (a spilled page coming home) into a
+    /// fresh slot without zeroing it.
+    fn adopt_hot(&mut self, buf: Vec<f32>) -> Result<usize> {
+        let id = self.slot_id()?;
+        self.slots[id] = PageSlot::Hot(buf);
+        self.hot_pages += 1;
+        self.peak_pages = self.peak_pages.max(self.in_use());
+        Ok(id)
+    }
+
+    /// Install an already-compressed page into a fresh slot.
+    fn adopt_quantized(&mut self, g: QuantizedGroup) -> Result<usize> {
+        let id = self.slot_id()?;
+        self.live_quantized_bytes += g.codes.payload_bytes() + g.side_bytes();
+        self.slots[id] = PageSlot::Quantized(g);
         self.peak_pages = self.peak_pages.max(self.in_use());
         Ok(id)
     }
@@ -147,6 +172,57 @@ struct SeqSlot {
     tables: Vec<PageTable>,
 }
 
+/// One page moved out of the arena by [`PagedKvCache::spill`].
+#[derive(Debug)]
+enum SpilledPage {
+    /// bit-exact f32 rows (`page_rows × width`)
+    Raw(Vec<f32>),
+    /// lattice-compressed payload: pages that were already retired keep
+    /// theirs; hot pages are compressed on spill when quantization is
+    /// requested (quantize-to-spill)
+    Coded(QuantizedGroup),
+}
+
+/// A preempted sequence's complete KV state, self-contained outside the
+/// arena: every page of every (layer, K|V) stream plus the row counts
+/// needed to rebuild the page tables. Produced by [`PagedKvCache::spill`],
+/// consumed by [`PagedKvCache::restore`]. Holding one of these costs no
+/// arena pages — that is the point: the scheduler parks low-priority
+/// sequences here when the arena runs dry and resumes them later.
+#[derive(Debug)]
+pub struct SpilledSeq {
+    /// per-(layer, K|V) stream in `2·layer + Kv::index()` order
+    tables: Vec<(Vec<SpilledPage>, usize)>,
+    /// arena pages this sequence occupied (and needs again to resume)
+    pages: usize,
+}
+
+impl SpilledSeq {
+    /// Arena pages [`PagedKvCache::restore`] will need.
+    pub fn pages(&self) -> usize {
+        self.pages
+    }
+
+    /// Cached positions per stream (every stream of a spilled sequence
+    /// holds the same number of rows).
+    pub fn rows(&self) -> usize {
+        self.tables.first().map(|t| t.1).unwrap_or(0)
+    }
+
+    /// Resident bytes of the spilled payload: f32 pages at full width,
+    /// compressed pages at codes + side info.
+    pub fn bytes(&self) -> usize {
+        self.tables
+            .iter()
+            .flat_map(|(pages, _)| pages.iter())
+            .map(|p| match p {
+                SpilledPage::Raw(buf) => buf.len() * 4,
+                SpilledPage::Coded(g) => g.codes.payload_bytes() + g.side_bytes(),
+            })
+            .sum()
+    }
+}
+
 /// The paged (optionally GLVQ-quantized) KV cache — see [`crate::kvcache`]
 /// for the runtime story.
 pub struct PagedKvCache {
@@ -162,6 +238,8 @@ pub struct PagedKvCache {
     appended_rows: usize,
     decoded_bytes: usize,
     quantized_payload_bytes: usize,
+    pages_spilled: usize,
+    pages_restored: usize,
 }
 
 impl PagedKvCache {
@@ -187,6 +265,8 @@ impl PagedKvCache {
             appended_rows: 0,
             decoded_bytes: 0,
             quantized_payload_bytes: 0,
+            pages_spilled: 0,
+            pages_restored: 0,
         }
     }
 
@@ -259,7 +339,152 @@ impl PagedKvCache {
             appended_rows: self.appended_rows,
             decoded_bytes: self.decoded_bytes,
             quantized_payload_bytes: self.quantized_payload_bytes,
+            pages_spilled: self.pages_spilled,
+            pages_restored: self.pages_restored,
         }
+    }
+
+    /// Pages still allocatable before the arena cap is hit: free-list
+    /// slots plus untapped growth headroom. `None` when the arena is
+    /// unbounded (`max_pages == 0`). This is the scheduler's admission
+    /// signal — occupancy read directly, not inferred from counters.
+    pub fn free_pages(&self) -> Option<usize> {
+        if self.opts.max_pages == 0 {
+            None
+        } else {
+            Some(
+                self.arena.free.len()
+                    + self.opts.max_pages.saturating_sub(self.arena.slots.len()),
+            )
+        }
+    }
+
+    /// Hard arena capacity in pages (`None` = unbounded).
+    pub fn page_capacity(&self) -> Option<usize> {
+        if self.opts.max_pages == 0 {
+            None
+        } else {
+            Some(self.opts.max_pages)
+        }
+    }
+
+    /// High-water mark of pages simultaneously in use over the cache's
+    /// lifetime.
+    pub fn high_watermark(&self) -> usize {
+        self.arena.peak_pages
+    }
+
+    /// Extra arena pages required to append `n_new` rows to **every**
+    /// (layer, K|V) stream of a sequence currently holding `rows` rows —
+    /// exact, because the incremental forward appends the same number of
+    /// rows to all `2·n_layer` streams of a sequence.
+    pub fn pages_needed(&self, rows: usize, n_new: usize) -> usize {
+        let pr = self.opts.page_rows;
+        2 * self.n_layer * ((rows + n_new).div_ceil(pr) - rows.div_ceil(pr))
+    }
+
+    /// Preempt a sequence: move every one of its pages out of the arena
+    /// into a self-contained [`SpilledSeq`] and return all of its slots to
+    /// the free list. Already-quantized pages keep their compressed
+    /// payload; hot f32 pages are either moved out verbatim
+    /// (`quantize = false`, bit-exact on [`PagedKvCache::restore`]) or
+    /// compressed through the lattice quantizer on the way out
+    /// (`quantize = true`, quantize-to-spill — smaller parked footprint at
+    /// the documented KV reconstruction tolerance).
+    pub fn spill(&mut self, seq: SeqId, quantize: bool) -> Result<SpilledSeq> {
+        let slot = match self.seqs.get_mut(seq.0).and_then(|s| s.take()) {
+            Some(slot) => slot,
+            None => bail!("spill of unknown kv sequence {seq:?}"),
+        };
+        let mut tables = Vec::with_capacity(slot.tables.len());
+        let mut pages = 0usize;
+        for t in slot.tables {
+            let mut spilled = Vec::with_capacity(t.pages.len());
+            for pid in t.pages {
+                pages += 1;
+                match std::mem::replace(&mut self.arena.slots[pid], PageSlot::Free) {
+                    PageSlot::Hot(buf) => {
+                        self.arena.hot_pages -= 1;
+                        if quantize {
+                            let g = self.quantizer.quantize_page(
+                                &buf,
+                                self.opts.page_rows,
+                                self.width,
+                            );
+                            self.pages_quantized += 1;
+                            self.quantized_payload_bytes +=
+                                g.codes.payload_bytes() + g.side_bytes();
+                            self.arena.spare.push(buf);
+                            spilled.push(SpilledPage::Coded(g));
+                        } else {
+                            spilled.push(SpilledPage::Raw(buf));
+                        }
+                    }
+                    PageSlot::Quantized(g) => {
+                        self.arena.live_quantized_bytes -=
+                            g.codes.payload_bytes() + g.side_bytes();
+                        spilled.push(SpilledPage::Coded(g));
+                    }
+                    PageSlot::Free => unreachable!("page table points at a freed page"),
+                }
+                self.arena.free.push(pid);
+            }
+            tables.push((spilled, t.rows));
+        }
+        self.pages_spilled += pages;
+        Ok(SpilledSeq { tables, pages })
+    }
+
+    /// Resume a spilled sequence: re-allocate its pages and rebuild its
+    /// page tables under a fresh [`SeqId`]. Full compressed pages re-enter
+    /// the arena still compressed (no decode cost); the partial tail page
+    /// of each stream must accept future appends, so it comes back hot —
+    /// decoded from its payload if it was spilled compressed. Capacity is
+    /// checked up front: when the arena lacks the pages, the **untouched**
+    /// [`SpilledSeq`] comes back in `Err`, so the caller retries after
+    /// more evictions — a failed resume never destroys the parked KV
+    /// state (it is the sequence's only copy).
+    #[allow(clippy::result_large_err)]
+    pub fn restore(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq> {
+        if let Some(free) = self.free_pages() {
+            if sp.pages > free {
+                return Err(sp);
+            }
+        }
+        let pr = self.opts.page_rows;
+        let sid = self.new_seq();
+        let pages = sp.pages;
+        for (ti, (spilled, rows)) in sp.tables.into_iter().enumerate() {
+            let n = spilled.len();
+            for (i, page) in spilled.into_iter().enumerate() {
+                let tail_partial = i + 1 == n && rows % pr != 0;
+                // the capacity precheck reserves every slot these calls
+                // claim, so allocation cannot fail below
+                let pid = match page {
+                    SpilledPage::Raw(buf) => {
+                        self.arena.adopt_hot(buf).expect("precheck reserved pages")
+                    }
+                    SpilledPage::Coded(g) if !tail_partial => {
+                        self.arena.adopt_quantized(g).expect("precheck reserved pages")
+                    }
+                    SpilledPage::Coded(g) => {
+                        // appendable tail: decode back to a hot f32 page
+                        let pid = self.arena.alloc().expect("precheck reserved pages");
+                        g.dequantize_into(&mut self.scratch);
+                        self.decoded_bytes += pr * self.width * 4;
+                        match &mut self.arena.slots[pid] {
+                            PageSlot::Hot(buf) => buf.copy_from_slice(&self.scratch.data),
+                            _ => unreachable!("alloc returns a hot page"),
+                        }
+                        pid
+                    }
+                };
+                self.seqs[sid.0].as_mut().expect("fresh sequence").tables[ti].pages.push(pid);
+            }
+            self.seqs[sid.0].as_mut().expect("fresh sequence").tables[ti].rows = rows;
+        }
+        self.pages_restored += pages;
+        Ok(sid)
     }
 
     /// Append one position row. Fills the hot tail page, allocating a new
@@ -450,6 +675,152 @@ mod tests {
         c.evict(s);
         let s2 = c.new_seq();
         assert!(c.append(s2, 0, Kv::K, &r).is_ok());
+    }
+
+    #[test]
+    fn free_pages_and_watermark_track_occupancy() {
+        // bounded arena: free_pages counts free slots + growth headroom,
+        // the watermark tracks the all-time peak — the scheduler reads
+        // admission capacity directly instead of inferring it from stats
+        let opts = KvCacheOpts { page_rows: 2, max_pages: 6, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 4, opts);
+        assert_eq!(c.free_pages(), Some(6));
+        assert_eq!(c.page_capacity(), Some(6));
+        assert_eq!(c.high_watermark(), 0);
+        let s = c.new_seq();
+        let r = vec![1.0f32; 4];
+        for _ in 0..4 {
+            c.append(s, 0, Kv::K, &r).unwrap(); // 2 pages
+        }
+        assert_eq!(c.free_pages(), Some(4));
+        assert_eq!(c.high_watermark(), 2);
+        c.evict(s);
+        assert_eq!(c.free_pages(), Some(6), "eviction returns capacity");
+        assert_eq!(c.high_watermark(), 2, "watermark is a high-water mark");
+        // unbounded arena reports None (grow on demand)
+        let unbounded = PagedKvCache::new(1, 4, KvCacheOpts::default());
+        assert_eq!(unbounded.free_pages(), None);
+        assert_eq!(unbounded.page_capacity(), None);
+    }
+
+    #[test]
+    fn pages_needed_is_exact_across_boundaries() {
+        let opts = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let c = PagedKvCache::new(2, 8, opts); // 2 layers -> 4 streams
+        assert_eq!(c.pages_needed(0, 1), 4, "first row opens one page per stream");
+        assert_eq!(c.pages_needed(1, 1), 0, "mid-page appends are free");
+        assert_eq!(c.pages_needed(4, 1), 4, "boundary crossing opens new pages");
+        assert_eq!(c.pages_needed(2, 7), 8, "chunk spanning two boundaries");
+        assert_eq!(c.pages_needed(3, 0), 0);
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_is_bit_exact_without_quantization() {
+        let opts = KvCacheOpts { page_rows: 4, max_pages: 8, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 8, opts);
+        let s = c.new_seq();
+        let mut rng = Rng::new(3);
+        let mut want_k: Vec<f32> = Vec::new();
+        let mut want_v: Vec<f32> = Vec::new();
+        for _ in 0..10 {
+            let rk = rand_row(&mut rng, 8);
+            let rv = rand_row(&mut rng, 8);
+            c.append(s, 0, Kv::K, &rk).unwrap();
+            c.append(s, 0, Kv::V, &rv).unwrap();
+            want_k.extend_from_slice(&rk);
+            want_v.extend_from_slice(&rv);
+        }
+        assert_eq!(c.stats().pages_in_use, 6);
+        let sp = c.spill(s, false).unwrap();
+        assert_eq!(sp.pages(), 6);
+        assert_eq!(sp.rows(), 10);
+        assert!(sp.bytes() > 0);
+        assert_eq!(c.stats().pages_in_use, 0, "spill frees every arena page");
+        assert_eq!(c.stats().pages_spilled, 6);
+        // the old handle is dead
+        assert!(c.append(s, 0, Kv::K, &[0.0; 8]).is_err());
+
+        let s2 = c.restore(sp).unwrap();
+        assert_eq!(c.rows(s2, 0, Kv::K), 10);
+        assert_eq!(c.stats().pages_restored, 6);
+        let mut got = Vec::new();
+        c.visit(s2, 0, Kv::K, 10, |_, rows| got.extend_from_slice(rows));
+        assert_eq!(got, want_k, "f32 spill must restore K bit-exactly");
+        got.clear();
+        c.visit(s2, 0, Kv::V, 10, |_, rows| got.extend_from_slice(rows));
+        assert_eq!(got, want_v, "f32 spill must restore V bit-exactly");
+        // restored sequence keeps appending where it left off
+        c.append(s2, 0, Kv::K, &[0.5; 8]).unwrap();
+        assert_eq!(c.rows(s2, 0, Kv::K), 11);
+    }
+
+    #[test]
+    fn quantized_spill_shrinks_and_restores_within_tolerance() {
+        // wide pages so the per-page lattice side info (2d²+4 bytes) is
+        // small next to the codes — the regime quantize-to-spill targets
+        let opts = KvCacheOpts { page_rows: 8, kv_bits: 8, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 32, opts);
+        let s = c.new_seq();
+        let mut rng = Rng::new(5);
+        let mut want: Vec<f32> = Vec::new();
+        for _ in 0..12 {
+            let r = rand_row(&mut rng, 32);
+            c.append(s, 0, Kv::K, &r).unwrap();
+            want.extend_from_slice(&r);
+        }
+        let raw = c.spill(s, false).unwrap();
+        let raw_bytes = raw.bytes();
+        let s1 = c.restore(raw).unwrap();
+        let sp = c.spill(s1, true).unwrap();
+        assert!(
+            sp.bytes() < raw_bytes / 2,
+            "8-bit quantize-to-spill should at least halve the parked bytes ({} vs {raw_bytes})",
+            sp.bytes()
+        );
+        let s2 = c.restore(sp).unwrap();
+        let mut got = Vec::new();
+        c.visit(s2, 0, Kv::K, 12, |_, rows| got.extend_from_slice(rows));
+        let mx = want.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 0.1 * mx, "quantized spill drifted: {a} vs {b}");
+        }
+        // the restored tail is hot again and accepts appends
+        c.append(s2, 0, Kv::K, &[0.25; 32]).unwrap();
+        assert_eq!(c.rows(s2, 0, Kv::K), 13);
+        assert!(c.stats().pages_quantized > 0);
+    }
+
+    #[test]
+    fn restore_refuses_when_arena_is_full_and_leaves_it_untouched() {
+        let opts = KvCacheOpts { page_rows: 2, max_pages: 4, ..Default::default() };
+        let mut c = PagedKvCache::new(1, 4, opts);
+        let a = c.new_seq();
+        let r = vec![1.0f32; 4];
+        for _ in 0..2 {
+            c.append(a, 0, Kv::K, &r).unwrap();
+            c.append(a, 0, Kv::V, &r).unwrap();
+        }
+        let sp = c.spill(a, false).unwrap();
+        assert_eq!(sp.pages(), 2);
+        // another sequence grabs most of the arena
+        let b = c.new_seq();
+        for _ in 0..4 {
+            c.append(b, 0, Kv::K, &r).unwrap();
+        }
+        assert_eq!(c.free_pages(), Some(2));
+        c.append(b, 0, Kv::V, &r).unwrap();
+        assert_eq!(c.free_pages(), Some(1));
+        let sp = match c.restore(sp) {
+            Err(sp) => sp,
+            Ok(_) => panic!("restore must refuse without enough free pages"),
+        };
+        assert_eq!(c.stats().pages_in_use, 3, "failed restore must not leak pages");
+        assert_eq!(c.rows(b, 0, Kv::K), 8, "existing sequences untouched");
+        // the refusal handed the state back intact: evict and retry
+        assert_eq!(sp.pages(), 2);
+        c.evict(b);
+        let s2 = c.restore(sp).unwrap();
+        assert_eq!(c.rows(s2, 0, Kv::K), 2, "retry after eviction restores the rows");
     }
 
     #[test]

@@ -16,7 +16,11 @@
 //! decodes each group-panel once per batch and never materializes a full
 //! dequantized layer. Decode steps are O(T) per token through the paged,
 //! optionally GLVQ-quantized KV cache in [`kvcache`] (prefill once, then
-//! incremental one-token attention against cached K/V).
+//! incremental one-token attention against cached K/V). Under heavy mixed
+//! traffic the [`serving`] continuous-batching scheduler replaces the
+//! lockstep batch boundary: admission-controlled queueing, chunked
+//! prefill, per-token batch membership, and KV-page preemption with
+//! quantize-to-spill.
 //!
 //! Layout follows DESIGN.md §4; every public item is documented and every
 //! module carries unit tests. The repo-root docs are the entry points:
@@ -38,6 +42,7 @@ pub mod glvq;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod serving;
 pub mod eval;
 pub mod exp;
 pub mod bench_support;

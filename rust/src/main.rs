@@ -22,6 +22,7 @@ use glvq::coordinator::server::{
     self, CachedNativeBackend, NativeBackend, Request, Response, ServerOpts,
     StreamingNativeBackend,
 };
+use glvq::serving::ContinuousOpts;
 use glvq::data::corpus::{Corpus, Mix};
 use glvq::exp::{tables, Workspace};
 use glvq::glvq::pipeline::PipelineOpts;
@@ -80,7 +81,9 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
             [--threads N] [--panel-rows R] [--kv-cache] [--kv-bits B]
-            [--kv-page R] (reads 'gen <prompt>' lines)
+            [--kv-page R] [--kv-max-pages N] [--continuous]
+            [--max-batch B] [--prefill-chunk C] [--max-tokens-in-flight T]
+            [--max-queue Q] (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
   info      [--artifacts DIR] [--container FILE.glvq]
 
@@ -99,6 +102,21 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                quantizer at B bits (default 0 = keep all pages f32,
                which is bit-identical to serving without the cache)
   --kv-page    positions per KV page (default 16)
+  --kv-max-pages  hard KV arena capacity in pages (default 0 = grow on
+               demand); a bounded arena is what makes --continuous
+               preemption observable
+  --continuous continuous batching instead of lockstep (implies
+               --kv-cache): requests join/leave the step batch per token,
+               long prompts prefill in --prefill-chunk slices, finished
+               sequences free KV pages immediately, and page pressure
+               preempts the newest sequence (quantize-to-spill when
+               --kv-bits is set) instead of failing; infeasible or
+               over-budget requests are refused with a structured
+               backpressure error
+  --max-batch  sequences in flight under --continuous (default 16)
+  --prefill-chunk      prompt tokens fed per scheduler step (default 32)
+  --max-tokens-in-flight  token budget over admitted requests (default 4096)
+  --max-queue  bounded admission-queue depth (default 256)
   --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
 
 fn main() -> Result<()> {
@@ -197,16 +215,60 @@ fn main() -> Result<()> {
             let method = args.get("quantized", if streaming { "glvq-8d" } else { "none" });
             let bits = args.get_f64("bits", 2.0);
             let cfg = ws.model_cfg(&model)?;
-            let kv_cache = args.flags.get("kv-cache").is_some_and(|v| v != "false");
+            let continuous = args.flags.get("continuous").is_some_and(|v| v != "false");
+            let kv_cache =
+                continuous || args.flags.get("kv-cache").is_some_and(|v| v != "false");
             let kv_bits = args.get_usize("kv-bits", 0);
             let kv_page = args.get_usize("kv-page", 16);
             let kv = KvCacheOpts {
                 page_rows: kv_page.max(1),
                 quantize: kv_bits > 0,
                 kv_bits: kv_bits.clamp(1, 8) as u8,
+                max_pages: args.get_usize("kv-max-pages", 0),
                 ..KvCacheOpts::default()
             };
-            let handle = if kv_cache && streaming {
+            let handle = if continuous {
+                // continuous batching over the cache-aware backend: the
+                // scheduler owns admission, chunked prefill and preemption
+                let copts = ContinuousOpts {
+                    max_batch: args.get_usize("max-batch", 16),
+                    prefill_chunk: args.get_usize("prefill-chunk", 32),
+                    max_queue: args.get_usize("max-queue", 256),
+                    max_tokens_in_flight: args.get_usize("max-tokens-in-flight", 4096),
+                    quantize_spill: kv.quantize,
+                };
+                info!(
+                    "continuous scheduler: max_batch {}, prefill chunk {}, budget {} tokens, kv page {} rows, kv bits {}",
+                    copts.max_batch,
+                    copts.prefill_chunk,
+                    copts.max_tokens_in_flight,
+                    kv.page_rows,
+                    if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
+                );
+                if streaming {
+                    let threads = args.get_usize("threads", scheduler::default_threads());
+                    let panel_rows = args.get_usize("panel-rows", 16);
+                    let qm = ws.quantize_container(&model, &method, bits, None)?;
+                    let store = ws.trained_default(&model)?;
+                    server::start_continuous(
+                        move || {
+                            let engine = StreamingMatmul::new(panel_rows, threads);
+                            Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+                        },
+                        copts,
+                    )
+                } else {
+                    let store: TensorStore = if method == "none" {
+                        ws.trained_default(&model)?
+                    } else {
+                        ws.quantize(&model, &method, bits, None)?.1
+                    };
+                    server::start_continuous(
+                        move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
+                        copts,
+                    )
+                }
+            } else if kv_cache && streaming {
                 // compressed weights + paged KV cache: prefill once, then
                 // one-token steps, every linear streamed from the container
                 let threads = args.get_usize("threads", scheduler::default_threads());
@@ -280,7 +342,7 @@ fn main() -> Result<()> {
                     ServerOpts::default(),
                 )
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, kv-cache={kv_cache}); type: gen <prompt> | score <p> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, kv-cache={kv_cache}, continuous={continuous}); type: gen <prompt> | score <p> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             loop {
@@ -309,6 +371,7 @@ fn main() -> Result<()> {
                     }
                     Response::Scored { logprob } => println!("→ logprob {logprob:.3}"),
                     Response::Error { message } => println!("error: {message}"),
+                    Response::Rejected { reason } => println!("rejected: {reason}"),
                 }
             }
             let metrics = handle.shutdown();

@@ -1,0 +1,43 @@
+//! Continuous-batching scheduler: admission control, chunked prefill, and
+//! KV-page preemption on top of the paged cache.
+//!
+//! The lockstep loop in [`crate::coordinator::server`] drains a batch and
+//! runs it to completion before admitting anything else, so one long
+//! generation stalls every short request behind it. This subsystem
+//! replaces that with *continuous batching*: a fresh step batch is formed
+//! every iteration, sequences join and leave per token, and the paged KV
+//! arena — not the batch boundary — is the unit of resource accounting.
+//!
+//! - [`queue::RequestQueue`] is the admission-controlled front door:
+//!   bounded depth, a token budget over everything in flight, and
+//!   structural checks (context fit, non-empty prompt). Refusals are
+//!   structured [`queue::Backpressure`] errors, surfaced to clients as
+//!   `Response::Rejected` — load shedding a client can reason about.
+//! - [`scheduler::ContinuousScheduler`] owns the loop: each
+//!   [`scheduler::ContinuousScheduler::step`] retires finished sequences
+//!   (freeing their KV pages immediately), resumes preempted sequences,
+//!   admits queued requests the moment pages and token budget allow, and
+//!   runs **one ragged forward** (`eval::native_fwd::forward_ragged`)
+//!   mixing one-token decode steps with bounded *prefill chunks* — long
+//!   prompts are fed `prefill_chunk` tokens per step, so a prefill never
+//!   monopolizes a step.
+//! - **Preemption**: when the arena runs out of pages, the
+//!   lowest-priority (most recently admitted) sequence is parked via
+//!   [`crate::kvcache::PagedKvCache::spill`] — *quantize-to-spill*
+//!   compresses its pages through the existing `KvQuantizer` instead of
+//!   dropping and recomputing them — and resumed when pages free up.
+//!   With f32 pages, preempt + resume is bit-exact
+//!   (`tests/continuous_parity.rs`).
+//!
+//! The scheduler is generic over [`scheduler::SeqBackend`] — implemented
+//! by `coordinator::server::CachedNativeBackend` (dense or
+//! streamed-compressed weights) and by a mock in the unit tests.
+//! `coordinator::server::start_continuous` runs it on the server thread
+//! behind the unchanged `ServerHandle::submit` interface;
+//! `glvq serve --continuous` exposes it on the CLI.
+
+pub mod queue;
+pub mod scheduler;
+
+pub use queue::{Backpressure, QueueOpts, RequestQueue};
+pub use scheduler::{ContinuousOpts, ContinuousScheduler, SeqBackend};

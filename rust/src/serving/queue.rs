@@ -1,0 +1,273 @@
+//! Admission-controlled request queue — the continuous scheduler's front
+//! door.
+//!
+//! Requests that can *never* run (prompt + output exceeding the model
+//! context, empty prompts, a single request bigger than the whole
+//! in-flight token budget) and requests arriving while the bounded queue
+//! is full are refused **at submission** with a structured
+//! [`Backpressure`] error instead of being dropped or queued forever —
+//! the client sees exactly why and can shed or retry. Everything else
+//! waits in FIFO order; the scheduler pops entries as token budget and KV
+//! pages free up.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::time::Instant;
+
+use crate::coordinator::server::Request;
+
+/// Why a request was refused at the door. Carried to clients as
+/// `Response::Rejected { reason }`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// The bounded queue is at capacity: retry later or shed load.
+    QueueFull {
+        /// requests currently waiting
+        depth: usize,
+        /// configured queue bound
+        limit: usize,
+    },
+    /// This request alone exceeds the in-flight token budget — it could
+    /// never be admitted, even against an idle server.
+    BudgetExceeded {
+        /// tokens the request needs (prompt + output)
+        need: usize,
+        /// configured `max_tokens_in_flight`
+        budget: usize,
+    },
+    /// Prompt + requested output cannot fit the model context.
+    ContextOverflow {
+        /// tokens the request needs (prompt + output)
+        need: usize,
+        /// model context length
+        seq_len: usize,
+    },
+    /// Continuous mode schedules against cached prompt positions and
+    /// requires a non-empty prompt.
+    EmptyPrompt,
+    /// The request's KV footprint exceeds the whole page arena — it could
+    /// never run to completion, even alone.
+    ArenaTooSmall {
+        /// pages the request would eventually hold
+        need_pages: usize,
+        /// hard arena capacity
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Backpressure::QueueFull { depth, limit } => {
+                write!(f, "queue full ({depth}/{limit} requests waiting)")
+            }
+            Backpressure::BudgetExceeded { need, budget } => {
+                write!(f, "request needs {need} tokens, in-flight budget is {budget}")
+            }
+            Backpressure::ContextOverflow { need, seq_len } => {
+                write!(f, "request needs {need} tokens, model context is {seq_len}")
+            }
+            Backpressure::EmptyPrompt => {
+                write!(f, "continuous mode requires a non-empty prompt")
+            }
+            Backpressure::ArenaTooSmall { need_pages, capacity } => {
+                write!(f, "request needs {need_pages} kv pages, arena capacity is {capacity}")
+            }
+        }
+    }
+}
+
+/// Tokens a request will occupy end to end: prompt plus everything it
+/// emits (generated tokens) or forces (scored continuation). This is the
+/// unit of the in-flight budget and of context-fit checks.
+pub fn token_need(request: &Request) -> usize {
+    match request {
+        Request::Generate { prompt, max_new } => prompt.len() + max_new,
+        Request::Score { prompt, continuation } => prompt.len() + continuation.len(),
+    }
+}
+
+/// Queue construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueOpts {
+    /// max requests waiting for admission before [`Backpressure::QueueFull`]
+    pub max_depth: usize,
+    /// token budget across all admitted (running + preempted) requests;
+    /// also the per-request ceiling (see [`Backpressure::BudgetExceeded`])
+    pub max_tokens_in_flight: usize,
+}
+
+impl Default for QueueOpts {
+    fn default() -> Self {
+        QueueOpts { max_depth: 256, max_tokens_in_flight: 4096 }
+    }
+}
+
+/// One admitted-but-not-yet-running request.
+pub struct Queued {
+    /// scheduler-assigned request id (stable through the response)
+    pub id: u64,
+    pub request: Request,
+    /// submission time, for queue-wait and time-to-first-token metrics
+    pub submitted: Instant,
+    /// cached [`token_need`] of `request`
+    pub need: usize,
+}
+
+/// Bounded FIFO of requests that passed the structural admission checks.
+pub struct RequestQueue {
+    opts: QueueOpts,
+    pending: VecDeque<Queued>,
+    next_id: u64,
+}
+
+impl RequestQueue {
+    pub fn new(opts: QueueOpts) -> RequestQueue {
+        RequestQueue { opts, pending: VecDeque::new(), next_id: 0 }
+    }
+
+    /// Requests currently waiting.
+    pub fn depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// The configured limits.
+    pub fn opts(&self) -> QueueOpts {
+        self.opts
+    }
+
+    /// Admit a request to the waiting line, or refuse it with the exact
+    /// reason. `seq_len` is the model context the request must fit.
+    pub fn push(
+        &mut self,
+        request: Request,
+        submitted: Instant,
+        seq_len: usize,
+    ) -> Result<u64, Backpressure> {
+        let prompt_len = match &request {
+            Request::Generate { prompt, .. } | Request::Score { prompt, .. } => prompt.len(),
+        };
+        if prompt_len == 0 {
+            return Err(Backpressure::EmptyPrompt);
+        }
+        let need = token_need(&request);
+        // a request's final token is never fed into the cache (a Gen's
+        // last sample and a Score's last continuation token only need
+        // logits at the position before them), so it fits iff its other
+        // `need - 1` tokens fit the position table — the same bound the
+        // lockstep loop enforces implicitly
+        if need > seq_len + 1 {
+            return Err(Backpressure::ContextOverflow { need, seq_len });
+        }
+        if need > self.opts.max_tokens_in_flight {
+            return Err(Backpressure::BudgetExceeded {
+                need,
+                budget: self.opts.max_tokens_in_flight,
+            });
+        }
+        if self.pending.len() >= self.opts.max_depth {
+            return Err(Backpressure::QueueFull {
+                depth: self.pending.len(),
+                limit: self.opts.max_depth,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back(Queued { id, request, submitted, need });
+        Ok(id)
+    }
+
+    /// Reserve the next request id without queueing anything — used for
+    /// requests answered at submission (e.g. `max_new == 0`).
+    pub fn reserve_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// The request next in line, if any.
+    pub fn front(&self) -> Option<&Queued> {
+        self.pending.front()
+    }
+
+    /// Pop the request next in line.
+    pub fn pop(&mut self) -> Option<Queued> {
+        self.pending.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(prompt: usize, max_new: usize) -> Request {
+        Request::Generate { prompt: vec![b'a'; prompt], max_new }
+    }
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut q = RequestQueue::new(QueueOpts::default());
+        let a = q.push(gen(3, 4), Instant::now(), 64).unwrap();
+        let b = q.push(gen(5, 2), Instant::now(), 64).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(q.depth(), 2);
+        let first = q.pop().unwrap();
+        assert_eq!(first.id, a);
+        assert_eq!(first.need, 7);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn structural_rejections() {
+        let mut q = RequestQueue::new(QueueOpts { max_depth: 8, max_tokens_in_flight: 32 });
+        // empty prompt
+        assert_eq!(q.push(gen(0, 4), Instant::now(), 64), Err(Backpressure::EmptyPrompt));
+        // context overflow: prompt + output > seq_len
+        assert_eq!(
+            q.push(gen(30, 40), Instant::now(), 64),
+            Err(Backpressure::ContextOverflow { need: 70, seq_len: 64 })
+        );
+        // single request above the whole in-flight budget
+        assert_eq!(
+            q.push(gen(30, 10), Instant::now(), 64),
+            Err(Backpressure::BudgetExceeded { need: 40, budget: 32 })
+        );
+        // score requests account prompt + continuation
+        let score = Request::Score { prompt: vec![b'a'; 3], continuation: vec![b'b'; 4] };
+        assert_eq!(token_need(&score), 7);
+        assert!(q.push(score, Instant::now(), 64).is_ok());
+        assert_eq!(q.depth(), 1, "rejected requests never enter the queue");
+    }
+
+    #[test]
+    fn bounded_depth_backpressure() {
+        let mut q = RequestQueue::new(QueueOpts { max_depth: 2, max_tokens_in_flight: 1024 });
+        q.push(gen(2, 2), Instant::now(), 64).unwrap();
+        q.push(gen(2, 2), Instant::now(), 64).unwrap();
+        let err = q.push(gen(2, 2), Instant::now(), 64).unwrap_err();
+        assert_eq!(err, Backpressure::QueueFull { depth: 2, limit: 2 });
+        assert!(err.to_string().contains("queue full"));
+        // popping frees a slot
+        q.pop().unwrap();
+        assert!(q.push(gen(2, 2), Instant::now(), 64).is_ok());
+    }
+
+    #[test]
+    fn backpressure_messages_are_structured() {
+        let cases: Vec<(Backpressure, &str)> = vec![
+            (Backpressure::QueueFull { depth: 9, limit: 9 }, "9/9"),
+            (Backpressure::BudgetExceeded { need: 10, budget: 5 }, "budget is 5"),
+            (Backpressure::ContextOverflow { need: 99, seq_len: 64 }, "context is 64"),
+            (Backpressure::EmptyPrompt, "non-empty prompt"),
+            (Backpressure::ArenaTooSmall { need_pages: 40, capacity: 16 }, "capacity is 16"),
+        ];
+        for (bp, frag) in cases {
+            assert!(bp.to_string().contains(frag), "{bp} missing {frag}");
+        }
+    }
+}

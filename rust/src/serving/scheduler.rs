@@ -1,0 +1,941 @@
+//! The continuous-batching scheduler: one ragged step batch per
+//! iteration, sequences joining and leaving per token.
+//!
+//! Each [`ContinuousScheduler::step`] does, in order:
+//!
+//! 1. **sweep** — drop sequences finished/failed last iteration (their KV
+//!    pages were already freed the moment they retired);
+//! 2. **resume** — restore preempted sequences, highest priority first,
+//!    as soon as the arena has their pages back;
+//! 3. **admit** — pop queued requests into the running set while the seq
+//!    budget (`max_batch`), the token budget (`max_tokens_in_flight`) and
+//!    the free-page watermark allow — requests join mid-flight, never
+//!    waiting for a batch boundary;
+//! 4. **plan** — every decoding sequence contributes its one-token step;
+//!    prompts still being fed contribute chunks from a shared
+//!    `prefill_chunk`-token budget, so a long prefill is interleaved with
+//!    decode steps instead of monopolizing them;
+//! 5. **preempt** — if the planned appends need more pages than the arena
+//!    has free, the lowest-priority (most recently admitted) sequences
+//!    are spilled (quantize-to-spill) until the step fits;
+//! 6. **run** — one `forward_ragged` call for the whole step batch, then
+//!    sample/score from the returned rows; finished sequences retire and
+//!    free their pages immediately.
+//!
+//! The scheduler is deterministic: the same submission sequence produces
+//! the same step batches, and because every per-row operation of the
+//! ragged forward is independent of batch composition, the same *outputs*
+//! as serving each request alone (`tests/continuous_parity.rs`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::decode_stream::DecodeStats;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::server::{Request, Response};
+use crate::eval::native_fwd::argmax_logit;
+use crate::kvcache::{KvCacheStats, SeqId, SpilledSeq};
+use crate::linalg::Mat;
+
+use super::queue::{Backpressure, QueueOpts, RequestQueue};
+
+/// What the scheduler needs from a model backend: per-sequence lifecycle
+/// hooks over a paged KV cache plus one ragged forward per step batch.
+/// Implemented by `coordinator::server::CachedNativeBackend` (dense or
+/// streamed-compressed weights) and by a mock in the unit tests below.
+pub trait SeqBackend {
+    /// Model context length (positions per sequence). (Named apart from
+    /// `LmBackend::seq_len` so a backend can implement both traits.)
+    fn ctx_len(&self) -> usize;
+
+    /// Register a fresh cache sequence.
+    fn begin_seq(&mut self) -> SeqId;
+
+    /// Advance every `(sequence, new-tokens)` pair in one forward; logits
+    /// for all new positions, sequence-major (`Σ nᵦ × V`).
+    fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat>;
+
+    /// Drop a sequence, returning its pages to the arena immediately.
+    fn retire_seq(&mut self, sid: SeqId);
+
+    /// Park a sequence outside the arena (`quantize` = compress pages on
+    /// the way out).
+    fn preempt_seq(&mut self, sid: SeqId, quantize: bool) -> Result<SpilledSeq>;
+
+    /// Bring a parked sequence back under a fresh id. When the arena
+    /// still lacks the pages, the **untouched** state comes back in
+    /// `Err` — a failed resume never destroys a parked sequence; the
+    /// scheduler re-parks it and retries later.
+    fn resume_seq(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq>;
+
+    /// Pages still allocatable (`None` = unbounded arena).
+    fn free_pages(&self) -> Option<usize>;
+
+    /// Hard arena capacity (`None` = unbounded).
+    fn page_capacity(&self) -> Option<usize>;
+
+    /// Exact pages needed to append `n_new` rows to a sequence holding
+    /// `rows` rows.
+    fn pages_for(&self, rows: usize, n_new: usize) -> usize;
+
+    /// KV-cache counters, if the backend maintains a paged cache.
+    fn kv_stats(&self) -> Option<KvCacheStats>;
+
+    /// Streaming-decode counters, if the backend serves from compressed
+    /// weights.
+    fn stream_stats(&self) -> Option<DecodeStats>;
+}
+
+/// Continuous-scheduler configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ContinuousOpts {
+    /// max sequences in flight (running + preempted) — the step-batch
+    /// budget
+    pub max_batch: usize,
+    /// prefill tokens fed per step, shared across all prefilling
+    /// sequences in priority order
+    pub prefill_chunk: usize,
+    /// bounded admission-queue depth
+    pub max_queue: usize,
+    /// token budget (prompt + output) across everything admitted
+    pub max_tokens_in_flight: usize,
+    /// compress preempted pages through the KV quantizer
+    /// (quantize-to-spill) instead of parking them as f32
+    pub quantize_spill: bool,
+}
+
+impl Default for ContinuousOpts {
+    fn default() -> Self {
+        ContinuousOpts {
+            max_batch: 16,
+            prefill_chunk: 32,
+            max_queue: 256,
+            max_tokens_in_flight: 4096,
+            quantize_spill: false,
+        }
+    }
+}
+
+/// Request kind plus its scoring/sampling state.
+enum Kind {
+    Gen { prompt_len: usize, max_new: usize },
+    Score { prompt_len: usize, logprob: f64 },
+}
+
+/// Where a running sequence's KV state lives right now.
+enum CacheSlot {
+    /// resident in the arena
+    Active(SeqId),
+    /// preempted: parked outside the arena, waiting to resume
+    Spilled(SpilledSeq),
+    /// retired/failed (swept next step) or mid-transition
+    Parked,
+}
+
+/// One admitted request: its token stream, feed progress, and cache slot.
+struct RunSeq {
+    rid: u64,
+    kind: Kind,
+    /// full intended prefix: prompt, then generated tokens (Gen) or the
+    /// forced continuation (Score)
+    tokens: Vec<i32>,
+    /// tokens fed into the cache so far
+    fed: usize,
+    slot: CacheSlot,
+    /// token-budget charge (held until retirement)
+    need: usize,
+    submitted: Instant,
+    first_token: bool,
+    dead: bool,
+}
+
+impl RunSeq {
+    /// Tokens that ever need feeding: a Gen feeds everything it samples
+    /// (each sampled token seeds the next step); a Score never feeds the
+    /// final continuation token (its logprob comes from the position
+    /// before it).
+    fn feed_end(&self) -> usize {
+        match self.kind {
+            Kind::Gen { .. } => self.tokens.len(),
+            Kind::Score { .. } => self.tokens.len() - 1,
+        }
+    }
+}
+
+fn elapsed_ms(from: Instant) -> f64 {
+    from.elapsed().as_secs_f64() * 1e3
+}
+
+/// The continuous-batching engine (see module docs for the step anatomy).
+pub struct ContinuousScheduler<B: SeqBackend> {
+    backend: B,
+    queue: RequestQueue,
+    /// priority order: index 0 = oldest admission = highest priority
+    running: Vec<RunSeq>,
+    finished: Vec<(u64, Response)>,
+    metrics: ServerMetrics,
+    opts: ContinuousOpts,
+    tokens_in_flight: usize,
+}
+
+impl<B: SeqBackend> ContinuousScheduler<B> {
+    pub fn new(backend: B, opts: ContinuousOpts) -> ContinuousScheduler<B> {
+        let opts = ContinuousOpts {
+            max_batch: opts.max_batch.max(1),
+            prefill_chunk: opts.prefill_chunk.max(1),
+            ..opts
+        };
+        let queue = RequestQueue::new(QueueOpts {
+            max_depth: opts.max_queue,
+            max_tokens_in_flight: opts.max_tokens_in_flight,
+        });
+        ContinuousScheduler {
+            backend,
+            queue,
+            running: Vec::new(),
+            finished: Vec::new(),
+            metrics: ServerMetrics::default(),
+            opts,
+            tokens_in_flight: 0,
+        }
+    }
+
+    /// Submit a request. Structurally infeasible requests are refused with
+    /// the exact [`Backpressure`] reason; trivially-complete requests
+    /// (`max_new == 0`, empty continuation) are answered without touching
+    /// the model. Returns the request id whose response will appear in
+    /// [`ContinuousScheduler::drain_finished`].
+    pub fn submit(&mut self, request: Request, submitted: Instant) -> Result<u64, Backpressure> {
+        match &request {
+            Request::Generate { prompt, max_new } if *max_new == 0 && !prompt.is_empty() => {
+                let id = self.queue.reserve_id();
+                self.metrics.requests += 1;
+                self.finished.push((id, Response::Generated { text: Vec::new() }));
+                return Ok(id);
+            }
+            Request::Score { prompt, continuation }
+                if continuation.is_empty() && !prompt.is_empty() =>
+            {
+                let id = self.queue.reserve_id();
+                self.metrics.requests += 1;
+                self.finished.push((id, Response::Scored { logprob: 0.0 }));
+                return Ok(id);
+            }
+            _ => {}
+        }
+        let res = self.queue.push(request, submitted, self.backend.ctx_len());
+        if res.is_err() {
+            self.metrics.rejections += 1;
+        }
+        res
+    }
+
+    /// True while anything is queued, running, or waiting to be drained.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty()
+            || self.running.iter().any(|s| !s.dead)
+            || !self.finished.is_empty()
+    }
+
+    /// Responses completed since the last drain, as `(request id,
+    /// response)` pairs in completion order.
+    pub fn drain_finished(&mut self) -> Vec<(u64, Response)> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Requests waiting for admission.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Sequences admitted and not yet retired (running + preempted).
+    pub fn in_flight(&self) -> usize {
+        self.running.iter().filter(|s| !s.dead).count()
+    }
+
+    /// Final metrics (backend counters folded in).
+    pub fn into_metrics(mut self) -> ServerMetrics {
+        self.refresh_stats();
+        self.metrics
+    }
+
+    /// One scheduler iteration; returns the number of sequences stepped.
+    pub fn step(&mut self) -> usize {
+        self.sweep_dead();
+        self.resume_preempted();
+        self.admit();
+        let items = self.plan_items();
+        let items = self.preempt_for_pages(items);
+        if items.is_empty() {
+            self.refresh_stats();
+            return 0;
+        }
+        self.metrics.sched_steps += 1;
+        self.metrics.seqs_per_step.record(items.len() as f64);
+        for &(i, take) in &items {
+            // a surviving item is a prefill chunk iff its sequence still
+            // has more than one pending token (the plan-time criterion,
+            // re-evaluated here so dropped/shrunk items are not counted)
+            let s = &self.running[i];
+            if s.feed_end() - s.fed > 1 {
+                self.metrics.prefill_chunks += 1;
+                self.metrics.prefill_tokens += take;
+            }
+        }
+        let calls: Vec<(SeqId, &[i32])> = items
+            .iter()
+            .map(|&(i, take)| {
+                let s = &self.running[i];
+                let sid = match s.slot {
+                    CacheSlot::Active(sid) => sid,
+                    _ => unreachable!("planned item must be active"),
+                };
+                (sid, &s.tokens[s.fed..s.fed + take])
+            })
+            .collect();
+        let stepped = self.backend.step_ragged(&calls);
+        drop(calls);
+        match stepped {
+            Ok(logits) => {
+                self.apply_logits(&items, &logits);
+                self.refresh_stats();
+                items.len()
+            }
+            Err(e) => {
+                // a failed ragged step (e.g. an arena race this scheduler
+                // mis-estimated) leaves its members with skewed per-layer
+                // rows: evict them so nothing serves misaligned K/V
+                let message = e.to_string();
+                for &(i, _) in &items {
+                    self.fail_seq(i, &message);
+                }
+                self.refresh_stats();
+                0
+            }
+        }
+    }
+
+    // ---- step phases ----
+
+    fn sweep_dead(&mut self) {
+        self.running.retain(|s| !s.dead);
+    }
+
+    /// Resume preempted sequences in priority order. Strict order — if the
+    /// highest-priority parked sequence does not fit yet, younger ones
+    /// wait behind it rather than starving it.
+    fn resume_preempted(&mut self) {
+        for i in 0..self.running.len() {
+            if self.running[i].dead {
+                continue;
+            }
+            let pages = match &self.running[i].slot {
+                CacheSlot::Spilled(sp) => sp.pages(),
+                _ => continue,
+            };
+            if let Some(free) = self.backend.free_pages() {
+                if pages > free {
+                    break;
+                }
+            }
+            let slot = std::mem::replace(&mut self.running[i].slot, CacheSlot::Parked);
+            let CacheSlot::Spilled(sp) = slot else {
+                unreachable!("checked above");
+            };
+            match self.backend.resume_seq(sp) {
+                Ok(sid) => {
+                    self.running[i].slot = CacheSlot::Active(sid);
+                    self.metrics.resumes += 1;
+                }
+                Err(sp) => {
+                    // the free-page reading and the restore disagreed —
+                    // re-park untouched and stop resuming this step
+                    self.running[i].slot = CacheSlot::Spilled(sp);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Admit queued requests while the seq budget, token budget and page
+    /// watermark allow. Requests whose KV footprint can never fit the
+    /// arena are rejected here (the queue cannot know the page geometry).
+    fn admit(&mut self) {
+        loop {
+            if self.in_flight() >= self.opts.max_batch {
+                return;
+            }
+            let (need, max_rows) = match self.queue.front() {
+                Some(q) => (q.need, q.need.saturating_sub(1).max(1)),
+                None => return,
+            };
+            if self.tokens_in_flight + need > self.opts.max_tokens_in_flight {
+                return;
+            }
+            if let Some(cap) = self.backend.page_capacity() {
+                let need_pages = self.backend.pages_for(0, max_rows);
+                if need_pages > cap {
+                    // rejections never count as served requests, whether
+                    // refused at submit() or deferred to admission
+                    let q = self.queue.pop().expect("front checked");
+                    let bp = Backpressure::ArenaTooSmall { need_pages, capacity: cap };
+                    self.metrics.rejections += 1;
+                    self.finished.push((q.id, Response::Rejected { reason: bp.to_string() }));
+                    continue;
+                }
+            }
+            if let Some(free) = self.backend.free_pages() {
+                // headroom gate: admitting straight into a dry arena would
+                // only churn spills — wait until the first chunk fits
+                let first = self.opts.prefill_chunk.min(max_rows);
+                if self.backend.pages_for(0, first) > free {
+                    return;
+                }
+            }
+            let q = self.queue.pop().expect("front checked");
+            self.metrics.queue_wait.record(elapsed_ms(q.submitted));
+            let sid = self.backend.begin_seq();
+            let (kind, tokens) = match q.request {
+                Request::Generate { prompt, max_new } => {
+                    let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+                    (Kind::Gen { prompt_len: tokens.len(), max_new }, tokens)
+                }
+                Request::Score { prompt, continuation } => {
+                    let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+                    let prompt_len = tokens.len();
+                    tokens.extend(continuation.iter().map(|&b| b as i32));
+                    (Kind::Score { prompt_len, logprob: 0.0 }, tokens)
+                }
+            };
+            self.tokens_in_flight += q.need;
+            self.running.push(RunSeq {
+                rid: q.id,
+                kind,
+                tokens,
+                fed: 0,
+                slot: CacheSlot::Active(sid),
+                need: q.need,
+                submitted: q.submitted,
+                first_token: false,
+                dead: false,
+            });
+        }
+    }
+
+    /// Form the step batch: `(running index, tokens to feed)` pairs.
+    /// Decode steps (one pending token) always join; prompts still being
+    /// fed draw chunks from a shared `prefill_chunk` budget in priority
+    /// order.
+    fn plan_items(&self) -> Vec<(usize, usize)> {
+        let mut items = Vec::new();
+        let mut prefill_budget = self.opts.prefill_chunk;
+        for (i, s) in self.running.iter().enumerate() {
+            if s.dead || !matches!(s.slot, CacheSlot::Active(_)) {
+                continue;
+            }
+            let pend = s.feed_end().saturating_sub(s.fed);
+            if pend == 0 {
+                continue;
+            }
+            if pend == 1 {
+                items.push((i, 1));
+            } else if prefill_budget > 0 {
+                let take = pend.min(prefill_budget);
+                prefill_budget -= take;
+                items.push((i, take));
+            }
+        }
+        items
+    }
+
+    /// Make the planned step fit the arena: spill the lowest-priority
+    /// active sequences (newest admissions first) until the appends fit,
+    /// shrinking the last surviving chunk if even a lone sequence cannot
+    /// feed its full chunk.
+    fn preempt_for_pages(&mut self, mut items: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+        if self.backend.page_capacity().is_none() {
+            return items;
+        }
+        loop {
+            if items.is_empty() {
+                return items;
+            }
+            let free = self.backend.free_pages().unwrap_or(usize::MAX);
+            let needed: usize = items
+                .iter()
+                .map(|&(i, take)| self.backend.pages_for(self.running[i].fed, take))
+                .sum();
+            if needed <= free {
+                return items;
+            }
+            let victim = self
+                .running
+                .iter()
+                .rposition(|s| !s.dead && matches!(s.slot, CacheSlot::Active(_)));
+            match victim {
+                Some(v) if v != items[0].0 => {
+                    self.preempt_one(v);
+                    items.retain(|&(i, _)| i != v);
+                }
+                _ => {
+                    // only the top sequence is left: shrink its chunk to
+                    // whatever the arena can take this step
+                    let (i, take) = items[0];
+                    let rows = self.running[i].fed;
+                    let mut fit = 0usize;
+                    for t in (1..=take).rev() {
+                        if self.backend.pages_for(rows, t) <= free {
+                            fit = t;
+                            break;
+                        }
+                    }
+                    if fit > 0 {
+                        items[0] = (i, fit);
+                    } else {
+                        // the arena cannot hold even one more token of the
+                        // only runnable sequence
+                        self.fail_seq(i, "kv arena too small for a single step");
+                        items.clear();
+                    }
+                    return items;
+                }
+            }
+        }
+    }
+
+    fn preempt_one(&mut self, i: usize) {
+        let slot = std::mem::replace(&mut self.running[i].slot, CacheSlot::Parked);
+        match slot {
+            CacheSlot::Active(sid) => {
+                match self.backend.preempt_seq(sid, self.opts.quantize_spill) {
+                    Ok(sp) => {
+                        self.running[i].slot = CacheSlot::Spilled(sp);
+                        self.metrics.preemptions += 1;
+                    }
+                    Err(e) => self.fail_seq(i, &format!("kv spill failed: {e}")),
+                }
+            }
+            other => self.running[i].slot = other,
+        }
+    }
+
+    /// Advance every stepped sequence from its logits rows: sample the
+    /// next token (Gen) or accumulate forced-token logprobs (Score), and
+    /// retire whatever completed.
+    fn apply_logits(&mut self, items: &[(usize, usize)], logits: &Mat) {
+        let mut done: Vec<usize> = Vec::new();
+        let mut row0 = 0usize;
+        for &(i, take) in items {
+            let s = &mut self.running[i];
+            let fed_before = s.fed;
+            s.fed += take;
+            match &mut s.kind {
+                Kind::Gen { prompt_len, max_new } => {
+                    if s.fed == s.tokens.len() {
+                        // the prefix is fully fed: the last row predicts the
+                        // next token
+                        let t = argmax_logit(logits.row(row0 + take - 1));
+                        if !s.first_token {
+                            s.first_token = true;
+                            self.metrics.ttft.record(elapsed_ms(s.submitted));
+                        }
+                        s.tokens.push(t);
+                        self.metrics.tokens_out += 1;
+                        if s.tokens.len() - *prompt_len >= *max_new {
+                            done.push(i);
+                        }
+                    }
+                }
+                Kind::Score { prompt_len, logprob } => {
+                    for r in 0..take {
+                        let p = fed_before + r; // absolute position of this row
+                        if p + 1 < *prompt_len {
+                            continue; // still inside the prompt
+                        }
+                        let row = logits.row(row0 + r);
+                        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                        let lse: f32 =
+                            row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+                        let tok = s.tokens[p + 1] as usize;
+                        *logprob += (row[tok] - lse) as f64;
+                        self.metrics.tokens_out += 1;
+                        if !s.first_token {
+                            s.first_token = true;
+                            self.metrics.ttft.record(elapsed_ms(s.submitted));
+                        }
+                    }
+                    if s.fed == s.tokens.len() - 1 {
+                        done.push(i);
+                    }
+                }
+            }
+            row0 += take;
+        }
+        for i in done {
+            self.finish_seq(i);
+        }
+    }
+
+    /// Retire a completed sequence: free its pages now, deliver its
+    /// response, release its token budget. Removal from `running` happens
+    /// at the next sweep so in-step indices stay valid.
+    fn finish_seq(&mut self, i: usize) {
+        if self.running[i].dead {
+            return;
+        }
+        let slot = std::mem::replace(&mut self.running[i].slot, CacheSlot::Parked);
+        if let CacheSlot::Active(sid) = slot {
+            self.backend.retire_seq(sid);
+        }
+        let s = &mut self.running[i];
+        s.dead = true;
+        self.tokens_in_flight -= s.need;
+        let resp = match &s.kind {
+            Kind::Gen { prompt_len, .. } => Response::Generated {
+                text: s.tokens[*prompt_len..].iter().map(|&t| t.clamp(0, 255) as u8).collect(),
+            },
+            Kind::Score { logprob, .. } => Response::Scored { logprob: *logprob },
+        };
+        self.metrics.requests += 1;
+        self.metrics.latency.record(elapsed_ms(s.submitted));
+        self.finished.push((s.rid, resp));
+    }
+
+    /// Fail a sequence with a structured error response (freeing its
+    /// pages and budget like a normal retirement).
+    fn fail_seq(&mut self, i: usize, message: &str) {
+        if self.running[i].dead {
+            return;
+        }
+        let slot = std::mem::replace(&mut self.running[i].slot, CacheSlot::Parked);
+        if let CacheSlot::Active(sid) = slot {
+            self.backend.retire_seq(sid);
+        }
+        let s = &mut self.running[i];
+        s.dead = true;
+        self.tokens_in_flight -= s.need;
+        self.metrics.requests += 1;
+        self.metrics.latency.record(elapsed_ms(s.submitted));
+        self.finished.push((s.rid, Response::Error { message: message.to_string() }));
+    }
+
+    fn refresh_stats(&mut self) {
+        self.metrics.kv_cache = self.backend.kv_stats();
+        self.metrics.decode = self.backend.stream_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{Kv, KvCacheOpts, PagedKvCache};
+
+    /// Model-free backend over a *real* paged cache (so page pressure,
+    /// spill and restore are the genuine article): the next token after
+    /// `t` is always `(t + 1) % 256`, encoded as a one-hot logit row.
+    struct MockBackend {
+        seq_len: usize,
+        cache: PagedKvCache,
+    }
+
+    const MOCK_W: usize = 4;
+
+    impl MockBackend {
+        fn new(seq_len: usize, page_rows: usize, max_pages: usize) -> MockBackend {
+            let opts = KvCacheOpts { page_rows, max_pages, ..Default::default() };
+            MockBackend { seq_len, cache: PagedKvCache::new(1, MOCK_W, opts) }
+        }
+    }
+
+    impl SeqBackend for MockBackend {
+        fn ctx_len(&self) -> usize {
+            self.seq_len
+        }
+
+        fn begin_seq(&mut self) -> SeqId {
+            self.cache.new_seq()
+        }
+
+        fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
+            let total: usize = items.iter().map(|it| it.1.len()).sum();
+            let mut out = Mat::zeros(total, 256);
+            let mut row = 0usize;
+            for &(sid, toks) in items {
+                for &t in toks {
+                    self.cache.append(sid, 0, Kv::K, &[t as f32; MOCK_W])?;
+                    self.cache.append(sid, 0, Kv::V, &[0.0; MOCK_W])?;
+                    *out.at_mut(row, ((t as usize) + 1) % 256) = 5.0;
+                    row += 1;
+                }
+            }
+            Ok(out)
+        }
+
+        fn retire_seq(&mut self, sid: SeqId) {
+            self.cache.evict(sid);
+        }
+
+        fn preempt_seq(&mut self, sid: SeqId, quantize: bool) -> Result<SpilledSeq> {
+            self.cache.spill(sid, quantize)
+        }
+
+        fn resume_seq(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq> {
+            self.cache.restore(sp)
+        }
+
+        fn free_pages(&self) -> Option<usize> {
+            self.cache.free_pages()
+        }
+
+        fn page_capacity(&self) -> Option<usize> {
+            self.cache.page_capacity()
+        }
+
+        fn pages_for(&self, rows: usize, n_new: usize) -> usize {
+            self.cache.pages_needed(rows, n_new)
+        }
+
+        fn kv_stats(&self) -> Option<KvCacheStats> {
+            Some(self.cache.stats())
+        }
+
+        fn stream_stats(&self) -> Option<DecodeStats> {
+            None
+        }
+    }
+
+    fn run_to_completion<B: SeqBackend>(
+        sched: &mut ContinuousScheduler<B>,
+        max_steps: usize,
+    ) -> Vec<(u64, Response)> {
+        let mut out = Vec::new();
+        for _ in 0..max_steps {
+            if !sched.has_work() {
+                break;
+            }
+            sched.step();
+            out.extend(sched.drain_finished());
+        }
+        assert!(!sched.has_work(), "scheduler did not converge in {max_steps} steps");
+        out
+    }
+
+    /// Expected mock generation: bytes counting up from the prompt tail.
+    fn counting_text(last: u8, n: usize) -> Vec<u8> {
+        (1..=n).map(|k| ((last as usize + k) % 256) as u8).collect()
+    }
+
+    #[test]
+    fn short_requests_finish_while_a_long_one_is_running() {
+        // THE continuous-batching property: a short request admitted after
+        // a long one completes long before it — no lockstep convoy
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 4, 0),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let now = Instant::now();
+        let long = sched
+            .submit(Request::Generate { prompt: vec![10; 3], max_new: 40 }, now)
+            .unwrap();
+        let short = sched
+            .submit(Request::Generate { prompt: vec![99; 2], max_new: 3 }, now)
+            .unwrap();
+        let mut order = Vec::new();
+        for _ in 0..200 {
+            if !sched.has_work() {
+                break;
+            }
+            sched.step();
+            for (rid, resp) in sched.drain_finished() {
+                order.push((rid, resp));
+            }
+        }
+        assert_eq!(order.len(), 2);
+        assert_eq!(order[0].0, short, "short request must finish first");
+        assert_eq!(order[1].0, long);
+        match &order[0].1 {
+            Response::Generated { text } => assert_eq!(text, &counting_text(99, 3)),
+            other => panic!("unexpected {other:?}"),
+        }
+        match &order[1].1 {
+            Response::Generated { text } => assert_eq!(text, &counting_text(10, 40)),
+            other => panic!("unexpected {other:?}"),
+        }
+        let m = sched.metrics();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.tokens_out, 43);
+        assert_eq!(m.ttft.count(), 2);
+        assert!(m.sched_steps >= 40, "long request runs one decode per step");
+        // both sequences shared step batches
+        assert!(m.seqs_per_step.quantile(1.0) >= 2.0);
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        // prompt of 20 with a 4-token chunk budget: the prefill takes ≥ 5
+        // steps, and a decoding sequence keeps stepping throughout
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 4, 0),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let now = Instant::now();
+        let quick = sched
+            .submit(Request::Generate { prompt: vec![7; 2], max_new: 8 }, now)
+            .unwrap();
+        let chunky = sched
+            .submit(Request::Generate { prompt: vec![50; 20], max_new: 2 }, now)
+            .unwrap();
+        let done = run_to_completion(&mut sched, 100);
+        assert_eq!(done.len(), 2);
+        let m = sched.metrics();
+        assert!(
+            m.prefill_chunks >= 5,
+            "20-token prompt at chunk 4 needs >= 5 chunks, got {}",
+            m.prefill_chunks
+        );
+        assert!(m.prefill_tokens >= 20, "the whole prompt is fed through chunks");
+        for (rid, resp) in &done {
+            match resp {
+                Response::Generated { text } if *rid == quick => {
+                    assert_eq!(text, &counting_text(7, 8))
+                }
+                Response::Generated { text } if *rid == chunky => {
+                    assert_eq!(text, &counting_text(50, 2))
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn token_budget_defers_admission() {
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 4, 0),
+            ContinuousOpts { max_tokens_in_flight: 12, ..Default::default() },
+        );
+        let now = Instant::now();
+        // 10 tokens in flight — the second request (8 tokens) must wait
+        sched.submit(Request::Generate { prompt: vec![1; 4], max_new: 6 }, now).unwrap();
+        sched.submit(Request::Generate { prompt: vec![2; 4], max_new: 4 }, now).unwrap();
+        sched.step();
+        assert_eq!(sched.in_flight(), 1, "budget admits only the first request");
+        assert_eq!(sched.queue_depth(), 1);
+        let done = run_to_completion(&mut sched, 100);
+        assert_eq!(done.len(), 2, "deferred request completes after budget frees");
+        assert!(sched.metrics().queue_wait.count() >= 2);
+    }
+
+    #[test]
+    fn page_pressure_preempts_and_resumes() {
+        // arena of 16 pages (page_rows 2, 2 streams): each sequence peaks
+        // at 16 pages, so two of them cannot coexist — the younger one
+        // must spill and still finish correctly after resuming
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 2, 16),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let now = Instant::now();
+        let a = sched.submit(Request::Generate { prompt: vec![5; 4], max_new: 12 }, now).unwrap();
+        let b = sched.submit(Request::Generate { prompt: vec![9; 4], max_new: 12 }, now).unwrap();
+        let done = run_to_completion(&mut sched, 300);
+        assert_eq!(done.len(), 2);
+        for (rid, resp) in &done {
+            assert!(*rid == a || *rid == b);
+            let last = if *rid == a { 5 } else { 9 };
+            match resp {
+                Response::Generated { text } => assert_eq!(text, &counting_text(last, 12)),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let m = sched.metrics();
+        assert!(m.preemptions >= 1, "tight arena must force a preemption");
+        assert!(m.resumes >= 1, "preempted sequence must resume");
+        let kv = m.kv_cache.expect("mock reports cache stats");
+        assert!(kv.pages_spilled > 0 && kv.pages_restored > 0);
+        assert_eq!(kv.pages_in_use, 0, "retirement returns every page");
+    }
+
+    #[test]
+    fn infeasible_requests_are_rejected_with_structure() {
+        let mut sched =
+            ContinuousScheduler::new(MockBackend::new(64, 2, 6), ContinuousOpts::default());
+        let now = Instant::now();
+        // context overflow at the door
+        let err = sched
+            .submit(Request::Generate { prompt: vec![1; 60], max_new: 30 }, now)
+            .unwrap_err();
+        assert!(matches!(err, Backpressure::ContextOverflow { .. }));
+        // empty prompt at the door
+        let err = sched
+            .submit(Request::Generate { prompt: Vec::new(), max_new: 4 }, now)
+            .unwrap_err();
+        assert_eq!(err, Backpressure::EmptyPrompt);
+        // arena too small: needs more pages than the whole arena — deferred
+        // rejection with a structured response
+        let rid = sched
+            .submit(Request::Generate { prompt: vec![1; 10], max_new: 20 }, now)
+            .unwrap();
+        sched.step();
+        let done = sched.drain_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, rid);
+        match &done[0].1 {
+            Response::Rejected { reason } => {
+                assert!(reason.contains("kv pages"), "{reason}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(sched.metrics().rejections, 3);
+    }
+
+    #[test]
+    fn trivial_requests_answer_without_stepping() {
+        let mut sched =
+            ContinuousScheduler::new(MockBackend::new(64, 4, 0), ContinuousOpts::default());
+        let now = Instant::now();
+        let a = sched.submit(Request::Generate { prompt: vec![3; 2], max_new: 0 }, now).unwrap();
+        let b = sched
+            .submit(Request::Score { prompt: vec![3; 2], continuation: Vec::new() }, now)
+            .unwrap();
+        let done = sched.drain_finished();
+        assert_eq!(done.len(), 2);
+        assert!(matches!(
+            done.iter().find(|d| d.0 == a).map(|d| &d.1),
+            Some(Response::Generated { .. })
+        ));
+        assert!(matches!(
+            done.iter().find(|d| d.0 == b).map(|d| &d.1),
+            Some(Response::Scored { .. })
+        ));
+        assert!(!sched.has_work());
+    }
+
+    #[test]
+    fn score_requests_accumulate_over_chunks() {
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 4, 0),
+            ContinuousOpts { prefill_chunk: 3, ..Default::default() },
+        );
+        let now = Instant::now();
+        // continuation that exactly follows the mock's counting rule: each
+        // forced token is the argmax, so its logprob is the one-hot lse gap
+        let prompt = vec![20u8; 5];
+        let continuation: Vec<u8> = counting_text(20, 4);
+        let rid = sched.submit(Request::Score { prompt, continuation }, now).unwrap();
+        let done = run_to_completion(&mut sched, 50);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, rid);
+        let Response::Scored { logprob } = &done[0].1 else {
+            panic!("expected score, got {:?}", done[0].1);
+        };
+        // per-token logprob of the one-hot row: 5 - ln(e^5 + 255)
+        let per = 5.0 - ((5f64).exp() + 255.0).ln();
+        assert!((logprob - 4.0 * per).abs() < 1e-4, "{logprob} vs {}", 4.0 * per);
+        assert_eq!(sched.metrics().tokens_out, 4);
+    }
+}
