@@ -23,6 +23,7 @@ use glvq::coordinator::server::{CachedNativeBackend, LmBackend, NativeBackend};
 use glvq::eval::native_fwd::argmax_logit;
 use glvq::kvcache::KvCacheOpts;
 use glvq::model::{init_params, ModelConfig};
+use glvq::bench_support::append_trajectory;
 use glvq::util::json::Json;
 use glvq::util::rng::Rng;
 
@@ -147,29 +148,5 @@ fn main() {
         "kv cache only {speedup:.2}x over full recompute at batch 4 (need >= 3x)"
     );
 
-    // append this run to the bench JSON trajectory
-    let dir = std::path::Path::new("runs/bench");
-    if let Err(e) = std::fs::create_dir_all(dir) {
-        eprintln!("WARN cannot create {}: {e}", dir.display());
-        return;
-    }
-    let path = dir.join("kvcache.json");
-    let mut doc = std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
-    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    runs.push(Json::obj(vec![
-        ("unix_time", Json::num(stamp as f64)),
-        ("measurements", Json::Arr(entries)),
-    ]));
-    doc.set("runs", Json::Arr(runs));
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("appended trajectory point to {}", path.display()),
-        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
-    }
+    append_trajectory("kvcache", vec![("measurements", Json::Arr(entries))]);
 }

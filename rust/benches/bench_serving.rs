@@ -45,6 +45,7 @@ use glvq::kvcache::KvCacheOpts;
 use glvq::model::{init_params, ModelConfig};
 use glvq::quant::format::QuantizedModel;
 use glvq::tensor::TensorStore;
+use glvq::bench_support::append_trajectory;
 use glvq::util::json::Json;
 use glvq::util::rng::Rng;
 
@@ -282,31 +283,12 @@ fn main() {
         );
     }
 
-    // append this run to the bench JSON trajectory
-    let dir = std::path::Path::new("runs/bench");
-    if let Err(e) = std::fs::create_dir_all(dir) {
-        eprintln!("WARN cannot create {}: {e}", dir.display());
-        return;
-    }
-    let path = dir.join("serving.json");
-    let mut doc = std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
-    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    runs.push(Json::obj(vec![
-        ("unix_time", Json::num(stamp as f64)),
-        ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
-        ("speedup_vs_lockstep", Json::num(speedup)),
-        ("measurements", Json::Arr(entries)),
-    ]));
-    doc.set("runs", Json::Arr(runs));
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("appended trajectory point to {}", path.display()),
-        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
-    }
+    append_trajectory(
+        "serving",
+        vec![
+            ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
+            ("speedup_vs_lockstep", Json::num(speedup)),
+            ("measurements", Json::Arr(entries)),
+        ],
+    );
 }

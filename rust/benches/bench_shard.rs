@@ -1,0 +1,196 @@
+//! Bench: tensor-parallel sharded serving vs the PR-2 single-shard
+//! streaming path, at **equal total core count** (ISSUE 5 acceptance).
+//!
+//! Workload: batch-1 greedy decode from a compressed (rANS-entropy)
+//! container behind the paged KV cache, so after the untimed prefill
+//! every timed token costs exactly one whole-model panel-decode — the
+//! thing sharding accelerates. The single-engine path spawns its worker
+//! threads and re-expands every rANS decode table **per linear call**,
+//! while the shard executor's persistent workers keep scratch and
+//! tables alive across the whole generation.
+//!
+//! Cells (all serving the identical prompt, outputs asserted
+//! byte-identical):
+//!
+//! - `streaming-4t`  — `CachedNativeBackend::streaming`, one
+//!                     `StreamingMatmul` engine, 4 threads (the PR-2
+//!                     single-shard streaming path at 4 cores)
+//! - `sharded-1x1`   — shard executor, 1 shard (overhead floor)
+//! - `sharded-4x1`   — 4 shard workers × 1 thread = 4 cores
+//!
+//! Asserted acceptance (full mode): `sharded-4x1` reaches **≥ 1.5×**
+//! the batch-1 decode tokens/s of `streaming-4t`, with identical tokens.
+//! `GLVQ_BENCH_SMOKE=1` runs a miniature generation for CI: parity still
+//! asserted, speedup reported but not asserted.
+//!
+//! Results append to `runs/bench/shard.json` (`{"runs": [...]}`).
+//!
+//! Run: `cargo bench --bench bench_shard`
+
+use std::time::Instant;
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::bench_support::append_trajectory;
+use glvq::coordinator::decode_stream::StreamingMatmul;
+use glvq::coordinator::server::{CachedNativeBackend, LmBackend};
+use glvq::eval::native_fwd::{self, CalibCapture};
+use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::quant::format::QuantizedModel;
+use glvq::shard::{imbalance, ShardOpts};
+use glvq::tensor::TensorStore;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "shardbench",
+        vocab: 256,
+        d_model: 64,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 128,
+        seq_len: 96,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+/// Quantize the bench model once with rANS-entropy payloads; every cell
+/// serves clones of the same container.
+fn quantized_parts(cfg: &ModelConfig) -> (TensorStore, QuantizedModel) {
+    let store = init_params(cfg, 0);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+    let mut cap = CalibCapture::new(16, 0);
+    native_fwd::forward(cfg, &store, &toks, 2, Some(&mut cap)).expect("calibration forward");
+    let calib = cap.into_calib_set();
+    let mut opts = PipelineOpts::default();
+    opts.target_bits = 3.0;
+    opts.bit_allocation = false;
+    opts.entropy = true;
+    // 16-wide column groups → every tensor splits into ≥4 group-aligned
+    // cells, so a 4-way shard plan actually spreads each linear
+    opts.group_size = 16;
+    let (qm, _) =
+        quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).expect("quantize");
+    (store, qm)
+}
+
+struct Cell {
+    tok_s: f64,
+    tokens: Vec<u8>,
+    imbalance: f64,
+}
+
+/// Greedy batch-1 decode: untimed prefill + first token, then `gen`
+/// timed one-token steps (each a whole-model panel decode through the
+/// backend's engine).
+fn run_cell(backend: &mut dyn LmBackend, prompt: &[u8], gen: usize) -> (f64, Vec<u8>) {
+    let mut toks: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+    let start = toks.len();
+    // untimed: prefill the prompt into the KV cache (also primes shard
+    // decode tables and scratch) and emit the first token
+    let first = backend.logits_last(&toks).expect("prefill forward");
+    toks.push(native_fwd::argmax_logit(&first));
+    let t0 = Instant::now();
+    for _ in 0..gen {
+        let logits = backend.logits_last(&toks).expect("decode step failed");
+        toks.push(native_fwd::argmax_logit(&logits));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (
+        gen as f64 / secs.max(1e-12),
+        toks[start..].iter().map(|&t| t.clamp(0, 255) as u8).collect(),
+    )
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let gen = if smoke() { 8 } else { 48 };
+    let prompt = b"the kama sutra of rust ";
+    let (store, qm) = quantized_parts(&cfg);
+    println!(
+        "# sharded vs single-engine streaming: d={} L={} — batch-1 decode, {} tokens, {}",
+        cfg.d_model,
+        cfg.n_layer,
+        gen,
+        if smoke() { "smoke" } else { "full" },
+    );
+
+    let kv = KvCacheOpts { page_rows: 16, ..Default::default() };
+    let mut cells: Vec<(&str, Cell)> = Vec::new();
+
+    {
+        let mut b = CachedNativeBackend::streaming(
+            cfg,
+            store.clone(),
+            qm.clone(),
+            StreamingMatmul::new(16, 4),
+            kv,
+        );
+        let (tok_s, tokens) = run_cell(&mut b, prompt, gen);
+        cells.push(("streaming-4t", Cell { tok_s, tokens, imbalance: 0.0 }));
+    }
+    for &shards in &[1usize, 4] {
+        let name = if shards == 1 { "sharded-1x1" } else { "sharded-4x1" };
+        let mut b = CachedNativeBackend::sharded(
+            cfg,
+            store.clone(),
+            qm.clone(),
+            ShardOpts { shards, panel_rows: 16, threads_per_shard: 1 },
+            kv,
+        );
+        let (tok_s, tokens) = run_cell(&mut b, prompt, gen);
+        let imb = b.shard_stats().map(|s| imbalance(&s)).unwrap_or(0.0);
+        cells.push((name, Cell { tok_s, tokens, imbalance: imb }));
+    }
+
+    let mut entries: Vec<Json> = Vec::new();
+    for (mode, cell) in &cells {
+        println!(
+            "{mode:<14} {:>9.1} tok/s   shard imbalance {:.2}x",
+            cell.tok_s, cell.imbalance
+        );
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("gen_tokens", Json::num(gen as f64)),
+            ("tok_s", Json::num(cell.tok_s)),
+            ("shard_imbalance", Json::num(cell.imbalance)),
+        ]));
+    }
+
+    // ---- acceptance ----
+    let by = |m: &str| &cells.iter().find(|c| c.0 == m).expect("cell").1;
+    let baseline = by("streaming-4t");
+    for (mode, cell) in &cells {
+        assert_eq!(
+            cell.tokens, baseline.tokens,
+            "{mode}: generated tokens diverged from the streaming path"
+        );
+    }
+    let speedup = by("sharded-4x1").tok_s / baseline.tok_s.max(1e-12);
+    println!("  sharded 4x1 vs streaming 4-thread (equal cores): {speedup:.2}x decode tok/s");
+    if smoke() {
+        println!("  (smoke mode: speedup not asserted)");
+    } else {
+        assert!(
+            speedup >= 1.5,
+            "sharded execution only {speedup:.2}x over single-shard streaming (need >= 1.5x)"
+        );
+    }
+
+    append_trajectory(
+        "shard",
+        vec![
+            ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
+            ("speedup_vs_streaming", Json::num(speedup)),
+            ("measurements", Json::Arr(entries)),
+        ],
+    );
+}

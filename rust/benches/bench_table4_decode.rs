@@ -1,13 +1,14 @@
 //! Bench: streaming dequant-matvec throughput per method — Table 4's TOK/s
 //! and MEM-BW columns at micro scale. One iteration = one "token" through a
-//! quantized (1024×1024) layer (8 column groups of 128).
+//! quantized (1024×1024) layer (8 column groups of 128), driven as the
+//! batch-1 case of the shared `StreamingMatmul` serving engine.
 //!
 //! Run: `cargo bench --bench bench_table4_decode`
 
 use glvq::baselines;
 use glvq::bench_support::Bencher;
 use glvq::config::GlvqConfig;
-use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use glvq::glvq::optimizer::GlvqGroupQuantizer;
 use glvq::linalg::Mat;
 use glvq::quant::format::QuantizedTensor;
@@ -43,15 +44,13 @@ fn main() {
     };
     for method in ["rtn", "gptq", "kmeans_vq", "quip_lite", "tcq", "glvq-8d", "glvq-32d"] {
         let qt = build(method, 2);
-        let mut sm = StreamingMatvec::new(16);
-        let mut y = vec![0.0f32; 1024];
+        let sm = StreamingMatmul::new(16, 1);
         let mut stats = DecodeStats::default();
-        sm.matvec(&qt, &x, &mut y, &mut stats); // prime + capture stats
+        sm.matvec(&qt, &x, &mut stats); // prime + capture stats
         let bytes = stats.total_bytes() as f64;
         let r = b.run(&format!("decode-matvec/{method}"), bytes, || {
             let mut s = DecodeStats::default();
-            sm.matvec(&qt, &x, &mut y, &mut s);
-            std::hint::black_box(&y);
+            std::hint::black_box(sm.matvec(&qt, &x, &mut s));
         });
         println!("{}   ({:.3} MB/token)", r.report(), bytes / 1e6);
     }

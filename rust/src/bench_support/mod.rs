@@ -1,8 +1,12 @@
 //! Micro-benchmark harness (criterion is not in the vendored crate set):
-//! warmup + timed iterations with mean / p50 / p95 and a throughput helper.
+//! warmup + timed iterations with mean / p50 / p95 and a throughput
+//! helper, plus the shared `runs/bench/*.json` trajectory writer
+//! ([`append_trajectory`]) every bench appends its measurements through.
 //! Used by `benches/*.rs` (cargo bench targets with `harness = false`).
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -93,9 +97,60 @@ impl Bencher {
     }
 }
 
+/// Append one run to the `runs/bench/<stem>.json` trajectory
+/// (`{"runs": [...]}` — one entry per invocation, so successive runs
+/// form a per-commit performance history; CI uploads the files as a
+/// workflow artifact). A `unix_time` stamp is added automatically;
+/// `fields` carries the run's payload (conventionally a
+/// `"measurements"` array plus any top-line numbers worth trending).
+/// Best-effort: IO problems warn on stderr instead of failing the bench.
+pub fn append_trajectory(stem: &str, fields: Vec<(&str, Json)>) {
+    let dir = std::path::Path::new("runs/bench");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("WARN cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join(format!("{stem}.json"));
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::obj(vec![("runs", Json::arr(Vec::new()))]));
+    let mut runs: Vec<Json> = doc.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut run = vec![("unix_time", Json::num(stamp as f64))];
+    run.extend(fields);
+    runs.push(Json::obj(run));
+    doc.set("runs", Json::Arr(runs));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("appended trajectory point to {}", path.display()),
+        Err(e) => eprintln!("WARN cannot write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn trajectory_appends_runs() {
+        // unique stem so parallel test runs never collide; cwd-relative
+        // like the real benches
+        let stem = format!("selftest_{}", std::process::id());
+        let path = std::path::Path::new("runs/bench").join(format!("{stem}.json"));
+        std::fs::remove_file(&path).ok();
+        append_trajectory(&stem, vec![("speedup", Json::num(2.0))]);
+        append_trajectory(&stem, vec![("measurements", Json::arr(vec![Json::num(1.0)]))]);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = doc.get("runs").as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("speedup").as_f64(), Some(2.0));
+        assert!(runs[0].get("unix_time").as_f64().unwrap() > 0.0);
+        assert_eq!(runs[1].get("measurements").as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
 
     #[test]
     fn measures_a_known_sleep() {

@@ -13,9 +13,16 @@
 //! with its own scratch buffers and [`DecodeStats`], merged after the
 //! join. Output is bit-identical for every batch size and thread count.
 //!
-//! [`StreamingMatvec`] is the single-vector convenience wrapper (B = 1,
-//! one thread) used by the Table-4 micro benches. Correctness oracle for
-//! both: per-group dense dequantize + matmul (tested for exact equality).
+//! The decode core is exposed in panel granularity for the
+//! tensor-parallel shard executor ([`crate::shard`]):
+//! [`StreamingMatmul::panel_slabs`] decodes any subset of a tensor's
+//! groups into per-panel partial-product slabs, and [`merge_slabs`] folds
+//! slabs into the output in the one canonical (group, panel) order — the
+//! same order `matmul` itself uses — so any partition of the group set
+//! across shard workers reassembles to the **bit-identical** result.
+//! Single-vector decode is just the batch-1 case of `matmul` (the old
+//! `StreamingMatvec` wrapper is gone; the Table-4 micro benches drive the
+//! shared engine with a 1-row batch).
 //!
 //! [`DecodeStats`] tracks exact bytes-touched so Table 4's MEM BW column
 //! can be reproduced as a bytes-moved model, plus the peak decoded
@@ -95,6 +102,62 @@ struct PanelItem {
     rows: usize,
 }
 
+/// One decoded panel's partial product over a batch:
+/// `data[b·rows + i] = Σ_c ŵ[r+i][c] · x[b][c0 + c]` for the panel's
+/// group. Produced by [`StreamingMatmul::panel_slabs`], consumed by
+/// [`merge_slabs`] — the unit of work the shard executor ships between
+/// workers and the coordinator.
+#[derive(Clone, Debug)]
+pub struct PanelSlab {
+    /// index into `qt.groups`
+    pub gi: usize,
+    /// first row of this panel within its group
+    pub r: usize,
+    /// rows in this panel
+    pub rows: usize,
+    /// (batch × rows) partial products, b-major
+    pub data: Vec<f32>,
+}
+
+/// Expand the rANS decode tables for the listed groups of `qt` (one
+/// table per entropy-coded group, `None` elsewhere). The returned vector
+/// is full-length (`qt.groups.len()`), indexable by group index, so a
+/// shard worker can build tables for only the groups it owns, once, and
+/// reuse them across every batch.
+pub fn decode_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<Option<DecodeTable>> {
+    let mut tables: Vec<Option<DecodeTable>> = (0..qt.groups.len()).map(|_| None).collect();
+    for &gi in groups {
+        if let crate::quant::traits::CodePayload::Rans(rc) = &qt.groups[gi].2.codes {
+            tables[gi] = Some(rc.hist.decode_table());
+        }
+    }
+    tables
+}
+
+/// Fold panel slabs into `y` (`y` pre-zeroed by the caller). Slabs must
+/// arrive in the canonical (group index, panel row) ascending order —
+/// the order [`StreamingMatmul::matmul`] itself accumulates in — which
+/// makes the float result identical no matter how the slabs were
+/// produced: one engine, many threads, or many shard workers.
+pub fn merge_slabs(qt: &QuantizedTensor, slabs: &[PanelSlab], y: &mut Mat) {
+    let batch = y.rows;
+    debug_assert!(
+        slabs.windows(2).all(|w| (w[0].gi, w[0].r) < (w[1].gi, w[1].r)),
+        "slabs not in canonical (group, panel) order"
+    );
+    for s in slabs {
+        let r0 = qt.groups[s.gi].0;
+        debug_assert_eq!(s.data.len(), batch * s.rows);
+        for b in 0..batch {
+            let dst = &mut y.row_mut(b)[r0 + s.r..r0 + s.r + s.rows];
+            let src = &s.data[b * s.rows..(b + 1) * s.rows];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += v;
+            }
+        }
+    }
+}
+
 /// Batched multi-threaded streaming decode-matmul engine.
 ///
 /// Holds one scratch slab per worker thread behind a mutex pool; `matmul`
@@ -145,16 +208,49 @@ impl StreamingMatmul {
     /// bit-identical across batch sizes and thread counts.
     pub fn matmul(&self, qt: &QuantizedTensor, x: &Mat, y: &mut Mat, stats: &mut DecodeStats) {
         let batch = x.rows;
-        assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);
         assert_eq!((y.rows, y.cols), (batch, qt.rows), "{}: bad output shape", qt.name);
         y.data.fill(0.0);
         stats.act_bytes += (x.data.len() + y.data.len()) * 4;
 
+        // expand each group's rANS decode table once per batch (not per
+        // panel, not per vector) and share it across workers
+        let all: Vec<usize> = (0..qt.groups.len()).collect();
+        let tables = decode_tables(qt, &all);
+        let slabs = self.panel_slabs(qt, &all, &tables, x, stats);
+        // slabs land in canonical item order regardless of which worker
+        // ran them, so accumulation order (and hence the float result) is
+        // deterministic
+        merge_slabs(qt, &slabs, y);
+    }
+
+    /// Decode-matmul a **subset** of `qt`'s groups against the batch,
+    /// returning one partial-product slab per row-panel in canonical
+    /// (group index, panel row) order. `tables` is the full-length decode
+    /// table vector from [`decode_tables`] (the caller owns it so shard
+    /// workers can build their groups' tables once and reuse them across
+    /// batches). Per-item [`DecodeStats`] are merged into `stats`; the
+    /// activation traffic (`act_bytes`) is *not* charged here — the
+    /// caller that owns x/y charges it once per call, so stats stay
+    /// identical however the groups are partitioned.
+    ///
+    /// This is the shard executor's work unit: `matmul` is exactly
+    /// `panel_slabs` over all groups followed by [`merge_slabs`].
+    pub fn panel_slabs(
+        &self,
+        qt: &QuantizedTensor,
+        groups: &[usize],
+        tables: &[Option<DecodeTable>],
+        x: &Mat,
+        stats: &mut DecodeStats,
+    ) -> Vec<PanelSlab> {
+        assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);
+        assert_eq!(tables.len(), qt.groups.len(), "{}: bad table vector", qt.name);
         // one work item per row-panel (whole group for non-streaming
         // side-info families); the item list is independent of the thread
         // count, so per-item stats sum to the same totals either way
         let mut items: Vec<PanelItem> = Vec::new();
-        for (gi, (_, _, g)) in qt.groups.iter().enumerate() {
+        for &gi in groups {
+            let g = &qt.groups[gi].2;
             if !supports_streaming(&g.side) {
                 items.push(PanelItem { gi, r: 0, rows: g.rows });
                 continue;
@@ -167,17 +263,6 @@ impl StreamingMatmul {
                 r += rows;
             }
         }
-
-        // expand each group's rANS decode table once per batch (not per
-        // panel, not per vector) and share it across workers
-        let tables: Vec<Option<DecodeTable>> = qt
-            .groups
-            .iter()
-            .map(|(_, _, g)| match &g.codes {
-                crate::quant::traits::CodePayload::Rans(rc) => Some(rc.hist.decode_table()),
-                _ => None,
-            })
-            .collect();
 
         let slabs = parallel_map(self.threads, &items, |idx, item| {
             let (_, c0, g) = &qt.groups[item.gi];
@@ -200,20 +285,26 @@ impl StreamingMatmul {
         })
         .unwrap_or_else(|(i, msg)| panic!("streaming matmul worker panicked on item {i}: {msg}"));
 
-        // merge: slabs land in item order regardless of which worker ran
-        // them, so accumulation order (and hence the float result) is
-        // deterministic
-        for (item, (slab, st)) in items.iter().zip(&slabs) {
-            let r0 = qt.groups[item.gi].0;
-            for b in 0..batch {
-                let dst = &mut y.row_mut(b)[r0 + item.r..r0 + item.r + item.rows];
-                let src = &slab[b * item.rows..(b + 1) * item.rows];
-                for (d, s) in dst.iter_mut().zip(src) {
-                    *d += s;
-                }
-            }
-            stats.merge(st);
-        }
+        items
+            .iter()
+            .zip(slabs)
+            .map(|(item, (data, st))| {
+                stats.merge(&st);
+                PanelSlab { gi: item.gi, r: item.r, rows: item.rows, data }
+            })
+            .collect()
+    }
+
+    /// Single-vector convenience: `y = decode(qt) · x` as the batch-1
+    /// case of [`StreamingMatmul::matmul`] — same decode core, same
+    /// stats accounting (what the deleted `StreamingMatvec` wrapper
+    /// used to provide). Used by the Table-4 micro benches and the
+    /// roundtrip tests.
+    pub fn matvec(&self, qt: &QuantizedTensor, x: &[f32], stats: &mut DecodeStats) -> Vec<f32> {
+        let xm = Mat::from_vec(1, x.len(), x.to_vec());
+        let mut y = Mat::zeros(1, qt.rows);
+        self.matmul(qt, &xm, &mut y, stats);
+        y.data
     }
 
     /// Grab a scratch slab: prefer an uncontended one, fall back to
@@ -347,61 +438,6 @@ fn panel_slab(
     }
     stats.macs += batch * count;
     slab
-}
-
-/// Single-vector streaming matvec: the B = 1, single-thread convenience
-/// wrapper over [`StreamingMatmul`] (same decode core, same stats model).
-pub struct StreamingMatvec {
-    inner: StreamingMatmul,
-    xbuf: Mat,
-    ybuf: Mat,
-}
-
-impl Default for StreamingMatvec {
-    fn default() -> Self {
-        StreamingMatvec::new(16)
-    }
-}
-
-impl StreamingMatvec {
-    pub fn new(panel_rows: usize) -> StreamingMatvec {
-        StreamingMatvec {
-            inner: StreamingMatmul::new(panel_rows, 1),
-            xbuf: Mat::zeros(1, 0),
-            ybuf: Mat::zeros(1, 0),
-        }
-    }
-
-    /// Rows per streamed panel.
-    pub fn panel_rows(&self) -> usize {
-        self.inner.panel_rows
-    }
-
-    /// y = decode(qt) · x, streaming panel_rows rows of the (m × n) stored
-    /// tensor at a time. x has length n (input dim), y has length m.
-    pub fn matvec(
-        &mut self,
-        qt: &QuantizedTensor,
-        x: &[f32],
-        y: &mut [f32],
-        stats: &mut DecodeStats,
-    ) {
-        if self.xbuf.cols != x.len() {
-            self.xbuf = Mat::zeros(1, x.len());
-        }
-        if self.ybuf.cols != y.len() {
-            self.ybuf = Mat::zeros(1, y.len());
-        }
-        self.xbuf.data.copy_from_slice(x);
-        self.inner.matmul(qt, &self.xbuf, &mut self.ybuf, stats);
-        y.copy_from_slice(&self.ybuf.data);
-    }
-
-    /// Peak decoded-weights working set — see
-    /// [`StreamingMatmul::peak_panel_elems`].
-    pub fn peak_panel_elems(&self, qt: &QuantizedTensor) -> usize {
-        self.inner.peak_panel_elems(qt)
-    }
 }
 
 /// Decode a run of codes into weights for any side-info family. The
@@ -604,9 +640,9 @@ mod tests {
     #[test]
     fn batch_amortizes_decode_exactly_once() {
         // batch-16 matmul decodes (and charges) each panel once; 16
-        // separate matvecs decode it 16 times — same math, 16× the decode
-        // traffic. Row b of the batched result equals the b-th matvec
-        // bit-exactly.
+        // separate batch-1 calls decode it 16 times — same math, 16× the
+        // decode traffic. Row b of the batched result equals the b-th
+        // batch-1 call bit-exactly.
         let (_, qt) = quantized_tensor("glvq", 6);
         let qte = to_entropy_tensor(&qt, 8);
         let mut rng = Rng::new(12);
@@ -617,12 +653,11 @@ mod tests {
         let mut sb = DecodeStats::default();
         sm.matmul(&qte, &x, &mut yb, &mut sb);
 
-        let mut mv = StreamingMatvec::new(8);
+        let mv = StreamingMatmul::new(8, 1);
         let mut sv = DecodeStats::default();
         for b in 0..16 {
-            let mut y = vec![0.0f32; 32];
-            mv.matvec(&qte, x.row(b), &mut y, &mut sv);
-            assert_eq!(y, yb.row(b), "batch row {b} diverged from matvec");
+            let y = mv.matvec(&qte, x.row(b), &mut sv);
+            assert_eq!(y, yb.row(b), "batch row {b} diverged from batch-1 call");
         }
         assert_eq!(sv.code_bytes, 16 * sb.code_bytes, "decode not amortized across batch");
         assert_eq!(sv.weights_decoded, 16 * sb.weights_decoded);
@@ -630,17 +665,16 @@ mod tests {
     }
 
     #[test]
-    fn streaming_matvec_equals_dense_dequantize_matvec() {
+    fn streaming_batch1_equals_dense_dequantize_matvec() {
         for method in ["rtn", "glvq"] {
             let (_, qt) = quantized_tensor(method, 3);
             let mut rng = Rng::new(4);
             let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
             let dense = qt.dequantize();
             let want = dense.matvec(&x);
-            let mut sm = StreamingMatvec::new(8);
-            let mut y = vec![0.0f32; 32];
+            let sm = StreamingMatmul::new(8, 1);
             let mut stats = DecodeStats::default();
-            sm.matvec(&qt, &x, &mut y, &mut stats);
+            let y = sm.matvec(&qt, &x, &mut stats);
             for (a, b) in y.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-4, "{method}: {a} vs {b}");
             }
@@ -649,7 +683,7 @@ mod tests {
     }
 
     #[test]
-    fn streaming_matvec_matches_oracle_on_entropy_payloads() {
+    fn streaming_batch1_matches_oracle_on_entropy_payloads() {
         for method in ["rtn", "glvq"] {
             let (_, qt) = quantized_tensor(method, 7);
             let dense = qt.dequantize();
@@ -661,10 +695,9 @@ mod tests {
                 let qte = to_entropy_tensor(&qt, rows_per_chunk);
                 // lossless re-encode: dequantize is bit-identical
                 assert_eq!(qte.dequantize().data, dense.data);
-                let mut sm = StreamingMatvec::new(8);
-                let mut y = vec![0.0f32; 32];
+                let sm = StreamingMatmul::new(8, 1);
                 let mut stats = DecodeStats::default();
-                sm.matvec(&qte, &x, &mut y, &mut stats);
+                let y = sm.matvec(&qte, &x, &mut stats);
                 for (a, b) in y.iter().zip(&want) {
                     assert!(
                         (a - b).abs() < 1e-4,
@@ -698,11 +731,10 @@ mod tests {
             cols: 64,
             groups: vec![(0, 0, qge)],
         };
-        let mut sm = StreamingMatvec::new(8);
-        let mut y = vec![0.0f32; 64];
+        let sm = StreamingMatmul::new(8, 1);
         let mut stats = DecodeStats::default();
         let x = vec![1.0f32; 64];
-        sm.matvec(&qt, &x, &mut y, &mut stats);
+        sm.matvec(&qt, &x, &mut stats);
         assert!(
             stats.code_bytes < fixed_bytes / 4,
             "compressed traffic {} vs fixed {}",
@@ -716,10 +748,50 @@ mod tests {
     #[test]
     fn panel_size_bounds_peak_memory() {
         let (_, qt) = quantized_tensor("rtn", 5);
-        let sm = StreamingMatvec::new(4);
+        let sm = StreamingMatmul::new(4, 1);
         // 4 rows × 32-col group = 128 elems vs full 32×64 = 2048 → 16×
         assert_eq!(sm.peak_panel_elems(&qt), 4 * 32);
         assert!(sm.peak_panel_elems(&qt) * 10 <= qt.rows * qt.cols);
+    }
+
+    #[test]
+    fn subset_slabs_merge_to_full_matmul_bitexact() {
+        // the shard executor's core identity: decoding disjoint group
+        // subsets on separate engines and merging the slabs in canonical
+        // order reproduces the one-engine matmul bit-for-bit (fixed and
+        // rANS payloads), and the summed stats match
+        for payload in ["fixed", "rans"] {
+            let (_, qt) = quantized_tensor("glvq", 11);
+            let qt = if payload == "rans" { to_entropy_tensor(&qt, 5) } else { qt };
+            let mut rng = Rng::new(14);
+            let x = Mat::random_normal(3, 64, 1.0, &mut rng);
+
+            let mut want = Mat::zeros(3, 32);
+            let mut s_full = DecodeStats::default();
+            StreamingMatmul::new(5, 2).matmul(&qt, &x, &mut want, &mut s_full);
+
+            // two "shards": one per group, each with its own engine+tables
+            let e0 = StreamingMatmul::new(5, 1);
+            let e1 = StreamingMatmul::new(5, 1);
+            let t0 = decode_tables(&qt, &[0]);
+            let t1 = decode_tables(&qt, &[1]);
+            let mut s0 = DecodeStats::default();
+            let mut s1 = DecodeStats::default();
+            let mut slabs = e0.panel_slabs(&qt, &[0], &t0, &x, &mut s0);
+            slabs.extend(e1.panel_slabs(&qt, &[1], &t1, &x, &mut s1));
+            slabs.sort_by_key(|s| (s.gi, s.r));
+            let mut got = Mat::zeros(3, 32);
+            merge_slabs(&qt, &slabs, &mut got);
+            assert_eq!(got.data, want.data, "{payload}: sharded merge not bit-exact");
+
+            // stats: the coordinator charges act_bytes once; everything
+            // else sums across shards exactly
+            let mut s_sum = DecodeStats::default();
+            s_sum.merge(&s0);
+            s_sum.merge(&s1);
+            s_sum.act_bytes += (x.data.len() + want.data.len()) * 4;
+            assert_eq!(s_sum, s_full, "{payload}: shard stats drifted");
+        }
     }
 
     #[test]
@@ -743,11 +815,10 @@ mod tests {
     #[test]
     fn stats_account_for_code_traffic() {
         let (_, qt) = quantized_tensor("rtn", 6);
-        let mut sm = StreamingMatvec::new(16);
-        let mut y = vec![0.0f32; 32];
+        let sm = StreamingMatmul::new(16, 1);
         let mut stats = DecodeStats::default();
         let x = vec![1.0f32; 64];
-        sm.matvec(&qt, &x, &mut y, &mut stats);
+        sm.matvec(&qt, &x, &mut stats);
         // 2-bit codes over 2048 weights = 512 bytes
         assert_eq!(stats.code_bytes, 2048 * 2 / 8);
         assert_eq!(stats.weights_decoded, 2048);

@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use crate::coordinator::decode_stream::DecodeStats;
 use crate::kvcache::KvCacheStats;
+use crate::shard::{imbalance, ShardStat};
 
 /// Streaming latency histogram (reservoir of raw samples; exact quantiles
 /// for ≤ capacity samples, uniform subsample beyond).
@@ -102,6 +103,9 @@ pub struct ServerMetrics {
     /// KV-cache occupancy / quantization / decode counters, when the
     /// backend serves through the paged cache (None otherwise)
     pub kv_cache: Option<KvCacheStats>,
+    /// per-shard decode/busy counters, when the backend executes
+    /// tensor-parallel over the shard executor (None otherwise)
+    pub shards: Option<Vec<ShardStat>>,
 }
 
 impl Default for ServerMetrics {
@@ -123,6 +127,7 @@ impl Default for ServerMetrics {
             rejections: 0,
             decode: None,
             kv_cache: None,
+            shards: None,
         }
     }
 }
@@ -183,6 +188,15 @@ impl ServerMetrics {
                 c.decoded_bytes as f64 / 1e6
             ));
         }
+        if let Some(s) = &self.shards {
+            let decoded: usize = s.iter().map(|p| p.total_bytes).sum();
+            out.push_str(&format!(
+                " shards={} shard_imbalance={:.2}x shard_decoded={:.2}MB",
+                s.len(),
+                imbalance(s),
+                decoded as f64 / 1e6
+            ));
+        }
         out
     }
 }
@@ -241,6 +255,20 @@ mod tests {
         assert!(r.contains("preempt=2"), "{r}");
         assert!(r.contains("resume=2"), "{r}");
         assert!(r.contains("rejected=1"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_shard_section_when_present() {
+        let mut m = ServerMetrics::default();
+        assert!(!m.report().contains("shards="));
+        m.shards = Some(vec![
+            ShardStat { busy_ns: 300, total_bytes: 1_500_000, ..Default::default() },
+            ShardStat { busy_ns: 100, total_bytes: 500_000, ..Default::default() },
+        ]);
+        let r = m.report();
+        assert!(r.contains("shards=2"), "{r}");
+        assert!(r.contains("shard_imbalance=1.50x"), "{r}");
+        assert!(r.contains("shard_decoded=2.00MB"), "{r}");
     }
 
     #[test]

@@ -40,6 +40,26 @@ where
 {
     let n = items.len();
     let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        // inline fast path: no thread spawn, same ordering and panic
+        // contract — this is what lets a persistent single-thread shard
+        // worker decode without paying a scoped-spawn per call
+        let mut out = Vec::with_capacity(n);
+        for (i, item) in items.iter().enumerate() {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item))) {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<panic>".into());
+                    return Err((i, msg));
+                }
+            }
+        }
+        return Ok(out);
+    }
     let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
     let failure: Mutex<Option<(usize, String)>> = Mutex::new(None);
     let next = AtomicUsize::new(0);

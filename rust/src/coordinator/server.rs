@@ -39,6 +39,7 @@ use crate::quant::format::QuantizedModel;
 use crate::runtime::exec::LogitsExec;
 use crate::runtime::Engine;
 use crate::serving::{ContinuousOpts, ContinuousScheduler, SeqBackend};
+use crate::shard::{ShardOpts, ShardStat, ShardedLinear, ShardedMatmul};
 use crate::tensor::TensorStore;
 
 use super::metrics::ServerMetrics;
@@ -73,6 +74,12 @@ pub trait LmBackend {
     /// KV-cache counters, if this backend maintains a paged KV cache
     /// (None for cacheless backends).
     fn cache_stats(&self) -> Option<KvCacheStats> {
+        None
+    }
+
+    /// Per-shard decode counters, if this backend executes tensor-parallel
+    /// over a [`ShardedMatmul`] (None otherwise).
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
         None
     }
 }
@@ -180,6 +187,76 @@ impl LmBackend for StreamingNativeBackend {
     }
 }
 
+/// Native-forward backend executing every quantized linear
+/// **tensor-parallel** across the persistent shard workers of a
+/// [`ShardedMatmul`] — the sharded counterpart of
+/// [`StreamingNativeBackend`], bit-identical to it at any shard count
+/// (`tests/shard_parity.rs`).
+pub struct ShardedNativeBackend {
+    pub cfg: ModelConfig,
+    pub store: TensorStore,
+    pub exec: ShardedMatmul,
+    pub stats: DecodeStats,
+}
+
+impl ShardedNativeBackend {
+    pub fn new(
+        cfg: ModelConfig,
+        store: TensorStore,
+        qm: QuantizedModel,
+        opts: ShardOpts,
+    ) -> ShardedNativeBackend {
+        ShardedNativeBackend {
+            cfg,
+            store,
+            exec: ShardedMatmul::new(std::sync::Arc::new(qm), opts),
+            stats: DecodeStats::default(),
+        }
+    }
+}
+
+impl LmBackend for ShardedNativeBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        let t = self.cfg.seq_len;
+        let (flat, last) = pad_prefixes(t, prefixes);
+        let mut lin = ShardedLinear {
+            exec: &self.exec,
+            store: &self.store,
+            stats: DecodeStats::default(),
+        };
+        let logits = native_fwd::forward_with(
+            &self.cfg,
+            &self.store,
+            &mut lin,
+            &flat,
+            prefixes.len(),
+            None,
+        )?;
+        self.stats.merge(&lin.stats);
+        Ok(gather_last_rows(&logits, t, &last))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        Some(self.stats)
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        Some(self.exec.shard_stats())
+    }
+}
+
 /// One live cached sequence inside [`CachedNativeBackend`]: the tokens it
 /// has consumed so far plus its cache handle.
 struct LiveSeq {
@@ -206,12 +283,18 @@ struct LiveSeq {
 pub struct CachedNativeBackend {
     cfg: ModelConfig,
     store: TensorStore,
-    /// compressed container for streamed linears (None = dense weights)
-    qm: Option<QuantizedModel>,
-    engine: StreamingMatmul,
+    weights: WeightMode,
     stats: DecodeStats,
     cache: PagedKvCache,
     live: Vec<LiveSeq>,
+}
+
+/// How [`CachedNativeBackend`] applies its quantizable linears: dense
+/// store, one streaming engine, or the tensor-parallel shard executor.
+enum WeightMode {
+    Dense,
+    Streamed { qm: QuantizedModel, engine: StreamingMatmul },
+    Sharded { exec: ShardedMatmul },
 }
 
 impl CachedNativeBackend {
@@ -221,8 +304,7 @@ impl CachedNativeBackend {
             cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, kv),
             cfg,
             store,
-            qm: None,
-            engine: StreamingMatmul::new(16, 1),
+            weights: WeightMode::Dense,
             stats: DecodeStats::default(),
             live: Vec::new(),
         }
@@ -241,37 +323,83 @@ impl CachedNativeBackend {
             cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, kv),
             cfg,
             store,
-            qm: Some(qm),
-            engine,
+            weights: WeightMode::Streamed { qm, engine },
+            stats: DecodeStats::default(),
+            live: Vec::new(),
+        }
+    }
+
+    /// Cache-aware backend executing every quantized linear
+    /// **tensor-parallel** across persistent shard workers — bit-identical
+    /// to [`CachedNativeBackend::streaming`] at any shard count.
+    pub fn sharded(
+        cfg: ModelConfig,
+        store: TensorStore,
+        qm: QuantizedModel,
+        opts: ShardOpts,
+        kv: KvCacheOpts,
+    ) -> CachedNativeBackend {
+        CachedNativeBackend {
+            cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, kv),
+            cfg,
+            store,
+            weights: WeightMode::Sharded {
+                exec: ShardedMatmul::new(std::sync::Arc::new(qm), opts),
+            },
             stats: DecodeStats::default(),
             live: Vec::new(),
         }
     }
 
     /// Run `f` with the right [`LinearOp`] for this backend's weight mode
-    /// (dense store or streamed compressed container), folding decode
-    /// stats back afterwards.
+    /// (dense store, streamed compressed container, or sharded executor),
+    /// folding decode stats back afterwards.
     fn run_cached<F>(&mut self, f: F) -> Result<Mat>
     where
         F: FnOnce(&ModelConfig, &TensorStore, &mut dyn LinearOp, &mut PagedKvCache) -> Result<Mat>,
     {
         let cfg = self.cfg;
-        let mut dense = DenseLinear { store: &self.store };
-        let mut streamed = self.qm.as_ref().map(|qm| StreamedLinear {
-            qm,
-            store: &self.store,
-            engine: &self.engine,
-            stats: DecodeStats::default(),
-        });
-        let lin: &mut dyn LinearOp = match streamed.as_mut() {
-            Some(s) => s,
-            None => &mut dense,
-        };
-        let result = f(&cfg, &self.store, lin, &mut self.cache);
-        if let Some(s) = streamed {
-            self.stats.merge(&s.stats);
+        match &self.weights {
+            WeightMode::Dense => {
+                let mut lin = DenseLinear { store: &self.store };
+                f(&cfg, &self.store, &mut lin, &mut self.cache)
+            }
+            WeightMode::Streamed { qm, engine } => {
+                let mut lin = StreamedLinear {
+                    qm,
+                    store: &self.store,
+                    engine,
+                    stats: DecodeStats::default(),
+                };
+                let result = f(&cfg, &self.store, &mut lin, &mut self.cache);
+                self.stats.merge(&lin.stats);
+                result
+            }
+            WeightMode::Sharded { exec } => {
+                let mut lin = ShardedLinear {
+                    exec,
+                    store: &self.store,
+                    stats: DecodeStats::default(),
+                };
+                let result = f(&cfg, &self.store, &mut lin, &mut self.cache);
+                self.stats.merge(&lin.stats);
+                result
+            }
         }
-        result
+    }
+
+    /// Per-shard decode counters when running sharded.
+    fn shard_stats_inner(&self) -> Option<Vec<ShardStat>> {
+        match &self.weights {
+            WeightMode::Sharded { exec } => Some(exec.shard_stats()),
+            _ => None,
+        }
+    }
+
+    /// True when this backend decodes from a compressed container
+    /// (streamed or sharded).
+    fn serves_compressed(&self) -> bool {
+        !matches!(self.weights, WeightMode::Dense)
     }
 
     /// Prefill one window into a fresh cache sequence; returns the handle
@@ -430,7 +558,7 @@ impl LmBackend for CachedNativeBackend {
     }
 
     fn decode_stats(&self) -> Option<DecodeStats> {
-        self.qm.as_ref().map(|_| self.stats)
+        self.serves_compressed().then_some(self.stats)
     }
 
     fn end_batch(&mut self) {
@@ -441,6 +569,10 @@ impl LmBackend for CachedNativeBackend {
 
     fn cache_stats(&self) -> Option<KvCacheStats> {
         Some(self.cache.stats())
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        self.shard_stats_inner()
     }
 }
 
@@ -494,7 +626,11 @@ impl SeqBackend for CachedNativeBackend {
     }
 
     fn stream_stats(&self) -> Option<DecodeStats> {
-        self.qm.as_ref().map(|_| self.stats)
+        self.serves_compressed().then_some(self.stats)
+    }
+
+    fn sharded_stats(&self) -> Option<Vec<ShardStat>> {
+        self.shard_stats_inner()
     }
 }
 
@@ -646,11 +782,12 @@ where
                     .record(job.submitted.elapsed().as_secs_f64() * 1e3);
                 let _ = job.reply.send(response);
             }
-            metrics.decode = backend.decode_stats();
-            metrics.kv_cache = backend.cache_stats();
         }
+        // metrics are only observable at shutdown (the join below), so
+        // the backend counters are snapshotted once here, not per batch
         metrics.decode = backend.decode_stats();
         metrics.kv_cache = backend.cache_stats();
+        metrics.shards = backend.shard_stats();
         metrics
     });
     ServerHandle { tx, join: Some(join) }
@@ -1252,6 +1389,69 @@ mod tests {
         }
         let metrics = handle.shutdown();
         assert_eq!(metrics.requests, 1, "rejected requests never reach the model");
+    }
+
+    #[test]
+    fn sharded_backends_match_streaming_bitwise() {
+        // the sharded executor behind both lockstep backends must produce
+        // byte-identical generations and logprobs to the single-engine
+        // streaming path — tensor parallelism is a pure speedup
+        let cfg = tiny_cfg();
+        let store = init_params(&cfg, 0);
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+        let mut cap = CalibCapture::new(16, 0);
+        native_fwd::forward(&cfg, &store, &toks, 2, Some(&mut cap)).unwrap();
+        let calib = cap.into_calib_set();
+        let mut opts = PipelineOpts::default();
+        opts.target_bits = 3.0;
+        opts.bit_allocation = false;
+        let (qm, _) =
+            quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).unwrap();
+
+        let req = [
+            Request::Generate { prompt: b"the kama ".to_vec(), max_new: 6 },
+            Request::Score { prompt: b"the ".to_vec(), continuation: b"ka".to_vec() },
+        ];
+        let mut m = ServerMetrics::default();
+
+        let mut streamed = StreamingNativeBackend {
+            cfg,
+            store: store.clone(),
+            qm: qm.clone(),
+            engine: StreamingMatmul::new(8, 2),
+            stats: DecodeStats::default(),
+        };
+        let want = run_batch(&mut streamed, &req, &mut m);
+
+        let sopts = ShardOpts { shards: 2, panel_rows: 8, threads_per_shard: 1 };
+        let mut sharded =
+            ShardedNativeBackend::new(cfg, store.clone(), qm.clone(), sopts);
+        let got = run_batch(&mut sharded, &req, &mut m);
+
+        let kv = KvCacheOpts { page_rows: 8, ..Default::default() };
+        let mut cached =
+            CachedNativeBackend::sharded(cfg, store, qm, sopts, kv);
+        let got_cached = run_batch(&mut cached, &req, &mut m);
+
+        for other in [&got, &got_cached] {
+            for (x, y) in want.iter().zip(other.iter()) {
+                match (x, y) {
+                    (Response::Generated { text: tx }, Response::Generated { text: ty }) => {
+                        assert_eq!(tx, ty, "sharded generation diverged")
+                    }
+                    (Response::Scored { logprob: lx }, Response::Scored { logprob: ly }) => {
+                        assert!((lx - ly).abs() < 1e-12, "{lx} vs {ly}")
+                    }
+                    pair => panic!("mismatched kinds {pair:?}"),
+                }
+            }
+        }
+        let per = sharded.shard_stats().expect("sharded backend reports shard stats");
+        assert_eq!(per.len(), 2);
+        assert!(per.iter().any(|p| p.jobs > 0));
+        assert!(cached.shard_stats().is_some());
+        assert!(cached.decode_stats().is_some());
     }
 
     #[test]

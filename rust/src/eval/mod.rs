@@ -9,7 +9,12 @@
 //! forward is generic over [`native_fwd::LinearOp`], whose
 //! [`native_fwd::StreamedLinear`] implementation drives every quantized
 //! linear through the batched streaming decode engine.
+//!
+//! The forward itself is expressed as a layer plan ([`plan::ModelPlan`]):
+//! every variant (full, incremental, ragged) walks the same plan
+//! structure and differs only in its attention core — see [`plan::walk`].
 
 pub mod native_fwd;
+pub mod plan;
 pub mod perplexity;
 pub mod zeroshot;

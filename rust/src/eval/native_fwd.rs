@@ -1,12 +1,19 @@
 //! Pure-rust transformer forward — an exact mirror of model.py — plus
 //! per-layer activation capture for quantizer calibration.
 //!
+//! Every forward variant here walks one explicit layer plan
+//! ([`crate::eval::plan::ModelPlan`] via [`crate::eval::plan::walk`])
+//! instead of a hand-inlined per-variant loop; the variants differ only
+//! in the attention core they plug into the walk.
+//!
 //! The forward is generic over how quantizable linear layers are applied
 //! ([`LinearOp`]): [`DenseLinear`] multiplies against dense weights from a
 //! [`TensorStore`] (the seed behaviour), while [`StreamedLinear`] runs
 //! each linear directly from a compressed [`QuantizedModel`] through the
 //! batched [`StreamingMatmul`] engine — the §3.4 serving mode in which no
-//! full dequantized layer is ever materialized.
+//! full dequantized layer is ever materialized — and
+//! [`crate::shard::ShardedLinear`] spreads it over the tensor-parallel
+//! shard executor.
 //!
 //! [`forward_ragged`] (with its [`forward_incremental`] /
 //! [`prefill_with_cache`] / [`step_with_cache`] wrappers) is the
@@ -99,7 +106,7 @@ impl CalibCapture {
     /// Offer all rows of `acts` (rows = samples, cols = n_in) as candidate
     /// calibration columns for `name` (reservoir sampling keeps a uniform
     /// subsample across the whole eval stream).
-    fn offer(&mut self, name: &str, acts: &Mat) {
+    pub(crate) fn offer(&mut self, name: &str, acts: &Mat) {
         let entry = self.cols.entry(name.to_string()).or_default();
         let seen = self.seen.entry(name.to_string()).or_insert(0);
         for r in 0..acts.rows {
@@ -136,7 +143,7 @@ impl CalibCapture {
     }
 }
 
-fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
+pub(crate) fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
     let mut out = x.clone();
     let d = x.cols;
     for r in 0..x.rows {
@@ -150,7 +157,7 @@ fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
     out
 }
 
-fn gelu_tanh(x: f32) -> f32 {
+pub(crate) fn gelu_tanh(x: f32) -> f32 {
     // jax.nn.gelu(approximate=True)
     const C: f32 = 0.7978845608028654; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
@@ -210,25 +217,22 @@ pub fn forward(
 /// Forward pass with an explicit [`LinearOp`] for the quantizable linears
 /// (dense or streamed-from-compressed); embeddings and norm gains always
 /// read from `store`.
+///
+/// Implemented as a [`crate::eval::plan::ModelPlan`] walk whose attention
+/// core computes dense causal scores over the in-call (B × T) batch — the
+/// same plan structure the incremental/ragged forwards walk.
 pub fn forward_with(
     cfg: &ModelConfig,
     store: &TensorStore,
     lin: &mut dyn LinearOp,
     tokens: &[i32],
     batch: usize,
-    mut capture: Option<&mut CalibCapture>,
+    capture: Option<&mut CalibCapture>,
 ) -> Result<Mat> {
     let (t_len, d) = (cfg.seq_len, cfg.d_model);
     assert_eq!(tokens.len(), batch * t_len);
     let get = |name: &str| -> Result<Mat> {
         Ok(store.get(name).with_context(|| format!("missing {name}"))?.to_mat())
-    };
-    let get1 = |name: &str| -> Result<Vec<f32>> {
-        Ok(store
-            .get(name)
-            .with_context(|| format!("missing {name}"))?
-            .data
-            .clone())
     };
 
     let emb = get("emb")?;
@@ -248,18 +252,8 @@ pub fn forward_with(
     let (nh, dh) = (cfg.n_head, cfg.d_head());
     let scale = 1.0 / (dh as f32).sqrt();
 
-    for layer in 0..cfg.n_layer {
-        let p = format!("{layer:02}.");
-        // ---- attention ----
-        let a = rmsnorm(&h, &get1(&format!("{p}attn.gain"))?);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.offer(&format!("{p}attn.wq"), &a);
-            cap.offer(&format!("{p}attn.wk"), &a);
-            cap.offer(&format!("{p}attn.wv"), &a);
-        }
-        let q = lin.apply(&format!("{p}attn.wq"), &a)?;
-        let k = lin.apply(&format!("{p}attn.wk"), &a)?;
-        let v = lin.apply(&format!("{p}attn.wv"), &a)?;
+    let model_plan = crate::eval::plan::ModelPlan::of(cfg);
+    crate::eval::plan::walk(&model_plan, store, lin, &mut h, capture, |_, q, k, v| {
         let mut att_out = Mat::zeros(batch * t_len, d);
         for b in 0..batch {
             for head in 0..nh {
@@ -296,37 +290,8 @@ pub fn forward_with(
                 }
             }
         }
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.offer(&format!("{p}attn.wo"), &att_out);
-        }
-        let proj = lin.apply(&format!("{p}attn.wo"), &att_out)?;
-        for i in 0..h.data.len() {
-            h.data[i] += proj.data[i];
-        }
-
-        // ---- mlp ----
-        let m = rmsnorm(&h, &get1(&format!("{p}mlp.gain"))?);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.offer(&format!("{p}mlp.w1"), &m);
-        }
-        let mut hidden = lin.apply(&format!("{p}mlp.w1"), &m)?;
-        for v in hidden.data.iter_mut() {
-            *v = gelu_tanh(*v);
-        }
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.offer(&format!("{p}mlp.w2"), &hidden);
-        }
-        let mlp_out = lin.apply(&format!("{p}mlp.w2"), &hidden)?;
-        for i in 0..h.data.len() {
-            h.data[i] += mlp_out.data[i];
-        }
-    }
-
-    let hf = rmsnorm(&h, &get1("final.gain")?);
-    if let Some(cap) = capture.as_deref_mut() {
-        cap.offer("out", &hf);
-    }
-    lin.apply("out", &hf)
+        Ok(att_out)
+    })
 }
 
 /// Cache-aware incremental forward: append `tokens.len() / seqs.len()`
@@ -406,13 +371,6 @@ pub fn forward_ragged(
         total += c;
     }
     let d = cfg.d_model;
-    let get1 = |name: &str| -> Result<Vec<f32>> {
-        Ok(store
-            .get(name)
-            .with_context(|| format!("missing {name}"))?
-            .data
-            .clone())
-    };
 
     // cache length of each sequence before this call = the absolute
     // position of its first new token
@@ -443,13 +401,11 @@ pub fn forward_ragged(
     let (nh, dh) = (cfg.n_head, cfg.d_head());
     let scale = 1.0 / (dh as f32).sqrt();
 
-    for layer in 0..cfg.n_layer {
-        let pfx = format!("{layer:02}.");
-        // ---- attention (new rows only, K/V prefix from the cache) ----
-        let a = rmsnorm(&h, &get1(&format!("{pfx}attn.gain"))?);
-        let q = lin.apply(&format!("{pfx}attn.wq"), &a)?;
-        let k = lin.apply(&format!("{pfx}attn.wk"), &a)?;
-        let v = lin.apply(&format!("{pfx}attn.wv"), &a)?;
+    // same plan structure as the full forward; only the attention core
+    // differs: new rows only, K/V prefix read back from the cache
+    let model_plan = crate::eval::plan::ModelPlan::of(cfg);
+    crate::eval::plan::walk(&model_plan, store, lin, &mut h, None, |lp, q, k, v| {
+        let layer = lp.index;
         for (b, &sid) in seqs.iter().enumerate() {
             for r in 0..counts[b] {
                 cache.append(sid, layer, Kv::K, k.row(offs[b] + r))?;
@@ -513,25 +469,8 @@ pub fn forward_ragged(
                 }
             });
         }
-        let proj = lin.apply(&format!("{pfx}attn.wo"), &att_out)?;
-        for i in 0..h.data.len() {
-            h.data[i] += proj.data[i];
-        }
-
-        // ---- mlp (position-wise, identical to the full pass) ----
-        let m = rmsnorm(&h, &get1(&format!("{pfx}mlp.gain"))?);
-        let mut hidden = lin.apply(&format!("{pfx}mlp.w1"), &m)?;
-        for vv in hidden.data.iter_mut() {
-            *vv = gelu_tanh(*vv);
-        }
-        let mlp_out = lin.apply(&format!("{pfx}mlp.w2"), &hidden)?;
-        for i in 0..h.data.len() {
-            h.data[i] += mlp_out.data[i];
-        }
-    }
-
-    let hf = rmsnorm(&h, &get1("final.gain")?);
-    lin.apply("out", &hf)
+        Ok(att_out)
+    })
 }
 
 /// Prefill one sequence's prompt into the cache; returns logits for every

@@ -1,0 +1,211 @@
+//! Layer-plan execution: the transformer forward as an explicit plan of
+//! [`LinearOp`] nodes instead of a hand-inlined loop.
+//!
+//! A [`ModelPlan`] is the static execution graph of one model: for every
+//! transformer layer, a [`LayerPlan`] naming the norm gains and the seven
+//! quantizable linears (`wq`/`wk`/`wv`/`wo`, `w1`/`w2`, and the shared
+//! `out` head at the end). [`walk`] is the single interpreter of that
+//! structure: it runs rmsnorm → q/k/v linears → *attend* → output
+//! projection → residual → mlp for every layer, in exactly the operation
+//! order the hand-written forwards used, so the refactor is bit-identical
+//! to the pre-plan code (asserted by the existing `native_fwd` parity
+//! tests).
+//!
+//! What varies between the full forward ([`super::native_fwd::forward_with`])
+//! and the cache-aware ragged forward
+//! ([`super::native_fwd::forward_ragged`]) is **only the attention core**
+//! — dense causal scores over the in-call batch vs. scores against cached
+//! K/V pages — so `walk` takes it as a closure over the freshly computed
+//! `(q, k, v)` activations. Everything else (which linears run, in which
+//! order, where calibration capture hooks, where residuals add) lives in
+//! one place.
+//!
+//! The plan is also the sharding unit: `shard::ShardPlan` partitions the
+//! `QuantizedTensor` behind every linear node along its group boundaries,
+//! and the plan walk stays unchanged — only the [`LinearOp`] behind
+//! `apply` switches from single-engine streaming to the sharded executor.
+
+use anyhow::{Context, Result};
+
+use crate::eval::native_fwd::{gelu_tanh, rmsnorm, CalibCapture, LinearOp};
+use crate::linalg::Mat;
+use crate::model::ModelConfig;
+use crate::tensor::TensorStore;
+
+/// One transformer layer's node names: the two norm gains plus the six
+/// quantizable linears, in execution order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// layer index (0-based)
+    pub index: usize,
+    pub attn_gain: String,
+    pub wq: String,
+    pub wk: String,
+    pub wv: String,
+    pub wo: String,
+    pub mlp_gain: String,
+    pub w1: String,
+    pub w2: String,
+}
+
+/// The whole model as a plan: per-layer nodes plus the final norm and the
+/// output head.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPlan {
+    pub layers: Vec<LayerPlan>,
+    pub final_gain: String,
+    pub out: String,
+}
+
+impl ModelPlan {
+    /// Build the plan for a model configuration. Node names match
+    /// [`ModelConfig::param_specs`] exactly (tested below), so the same
+    /// plan addresses dense stores and quantized containers.
+    pub fn of(cfg: &ModelConfig) -> ModelPlan {
+        let layers = (0..cfg.n_layer)
+            .map(|i| {
+                let p = format!("{i:02}.");
+                LayerPlan {
+                    index: i,
+                    attn_gain: format!("{p}attn.gain"),
+                    wq: format!("{p}attn.wq"),
+                    wk: format!("{p}attn.wk"),
+                    wv: format!("{p}attn.wv"),
+                    wo: format!("{p}attn.wo"),
+                    mlp_gain: format!("{p}mlp.gain"),
+                    w1: format!("{p}mlp.w1"),
+                    w2: format!("{p}mlp.w2"),
+                }
+            })
+            .collect();
+        ModelPlan { layers, final_gain: "final.gain".into(), out: "out".into() }
+    }
+
+    /// Every quantizable linear node the plan applies, in execution order.
+    pub fn linear_names(&self) -> Vec<&str> {
+        let mut names = Vec::with_capacity(self.layers.len() * 6 + 1);
+        for l in &self.layers {
+            names.extend([
+                l.wq.as_str(),
+                l.wk.as_str(),
+                l.wv.as_str(),
+                l.wo.as_str(),
+                l.w1.as_str(),
+                l.w2.as_str(),
+            ]);
+        }
+        names.push(self.out.as_str());
+        names
+    }
+}
+
+/// Walk the plan over a residual-stream matrix `h` (rows × d_model),
+/// applying every linear through `lin` and delegating the attention core
+/// to `attend(layer, q, k, v) -> att_out`. Returns the output-head
+/// logits. `h` is mutated in place (residual stream).
+///
+/// The operation order — rmsnorm, q/k/v, attend, wo, residual add,
+/// rmsnorm, w1, gelu, w2, residual add, final rmsnorm, out — is exactly
+/// the order of the original hand-inlined forwards, element-for-element,
+/// which is what keeps the plan walk bit-identical to them.
+pub fn walk<A>(
+    plan: &ModelPlan,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    h: &mut Mat,
+    mut capture: Option<&mut CalibCapture>,
+    mut attend: A,
+) -> Result<Mat>
+where
+    A: FnMut(&LayerPlan, &Mat, &Mat, &Mat) -> Result<Mat>,
+{
+    let gain = |name: &str| -> Result<Vec<f32>> {
+        Ok(store
+            .get(name)
+            .with_context(|| format!("missing {name}"))?
+            .data
+            .clone())
+    };
+    for layer in &plan.layers {
+        // ---- attention ----
+        let a = rmsnorm(h, &gain(&layer.attn_gain)?);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&layer.wq, &a);
+            cap.offer(&layer.wk, &a);
+            cap.offer(&layer.wv, &a);
+        }
+        let q = lin.apply(&layer.wq, &a)?;
+        let k = lin.apply(&layer.wk, &a)?;
+        let v = lin.apply(&layer.wv, &a)?;
+        let att_out = attend(layer, &q, &k, &v)?;
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&layer.wo, &att_out);
+        }
+        let proj = lin.apply(&layer.wo, &att_out)?;
+        for i in 0..h.data.len() {
+            h.data[i] += proj.data[i];
+        }
+
+        // ---- mlp ----
+        let m = rmsnorm(h, &gain(&layer.mlp_gain)?);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&layer.w1, &m);
+        }
+        let mut hidden = lin.apply(&layer.w1, &m)?;
+        for x in hidden.data.iter_mut() {
+            *x = gelu_tanh(*x);
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.offer(&layer.w2, &hidden);
+        }
+        let mlp_out = lin.apply(&layer.w2, &hidden)?;
+        for i in 0..h.data.len() {
+            h.data[i] += mlp_out.data[i];
+        }
+    }
+
+    let hf = rmsnorm(h, &gain(&plan.final_gain)?);
+    if let Some(cap) = capture.as_deref_mut() {
+        cap.offer(&plan.out, &hf);
+    }
+    lin.apply(&plan.out, &hf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CONFIG_S;
+
+    #[test]
+    fn plan_names_match_param_specs() {
+        let cfg = CONFIG_S;
+        let plan = ModelPlan::of(&cfg);
+        assert_eq!(plan.layers.len(), cfg.n_layer);
+        // every quantizable spec appears as exactly one linear node
+        let mut want = cfg.quantizable_names();
+        let mut got: Vec<String> =
+            plan.linear_names().iter().map(|s| s.to_string()).collect();
+        want.sort();
+        got.sort();
+        assert_eq!(got, want);
+        // norm gains are addressed too
+        let specs = cfg.param_specs();
+        for l in &plan.layers {
+            for gain in [&l.attn_gain, &l.mlp_gain] {
+                assert!(specs.iter().any(|s| &s.name == gain), "missing {gain}");
+            }
+        }
+        assert!(specs.iter().any(|s| s.name == plan.final_gain));
+    }
+
+    #[test]
+    fn linear_names_follow_execution_order() {
+        let cfg = CONFIG_S;
+        let plan = ModelPlan::of(&cfg);
+        let names = plan.linear_names();
+        assert_eq!(names.len(), cfg.n_layer * 6 + 1);
+        assert_eq!(names[0], "00.attn.wq");
+        assert_eq!(names[5], "00.mlp.w2");
+        assert_eq!(*names.last().unwrap(), "out");
+    }
+}

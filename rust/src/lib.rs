@@ -14,7 +14,10 @@
 //! Serving runs directly from compressed weights: the batched
 //! multi-threaded [`coordinator::decode_stream::StreamingMatmul`] engine
 //! decodes each group-panel once per batch and never materializes a full
-//! dequantized layer. Decode steps are O(T) per token through the paged,
+//! dequantized layer; the [`shard`] subsystem spreads that decode over
+//! persistent tensor-parallel workers partitioned along quantized group
+//! boundaries, bit-identical to single-shard execution at any shard
+//! count. Decode steps are O(T) per token through the paged,
 //! optionally GLVQ-quantized KV cache in [`kvcache`] (prefill once, then
 //! incremental one-token attention against cached K/V). Under heavy mixed
 //! traffic the [`serving`] continuous-batching scheduler replaces the
@@ -43,6 +46,7 @@ pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
 pub mod serving;
+pub mod shard;
 pub mod eval;
 pub mod exp;
 pub mod bench_support;

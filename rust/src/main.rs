@@ -29,6 +29,7 @@ use glvq::glvq::pipeline::PipelineOpts;
 use glvq::info;
 use glvq::kvcache::KvCacheOpts;
 use glvq::quant::format::QuantizedModel;
+use glvq::shard::ShardOpts;
 use glvq::tensor::TensorStore;
 use glvq::util::logging;
 
@@ -80,8 +81,8 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
-            [--threads N] [--panel-rows R] [--kv-cache] [--kv-bits B]
-            [--kv-page R] [--kv-max-pages N] [--continuous]
+            [--shards N] [--threads N] [--panel-rows R] [--kv-cache]
+            [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--continuous]
             [--max-batch B] [--prefill-chunk C] [--max-tokens-in-flight T]
             [--max-queue Q] (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
@@ -94,7 +95,15 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                batched StreamingMatmul engine: every linear layer decodes
                panel-by-panel per batch, no full dequantized layer is ever
                materialized (implies --quantized, default glvq-8d)
-  --threads    decode worker threads for --streaming (default: cores - 1)
+  --threads    decode worker threads for --streaming (default: cores - 1);
+               with --shards, split across the shard workers (rounded up,
+               so N shards get ceil(threads/N) decode threads each)
+  --shards     tensor-parallel sharded execution: N persistent workers,
+               each owning a group-aligned partition of every quantized
+               tensor (its own decode scratch + rANS tables); outputs are
+               bit-identical to single-shard serving at any shard count
+               (implies serving from the compressed container, default
+               glvq-8d; composes with --kv-cache and --continuous)
   --kv-cache   serve through the paged KV cache: prefill once, then
                O(T) one-token lockstep steps instead of O(T^2) full
                recompute (composes with --streaming)
@@ -212,7 +221,11 @@ fn main() -> Result<()> {
             let model = args.get("model", "s");
             let mut ws = Workspace::new(&artifacts, &dir)?;
             let streaming = args.flags.get("streaming").is_some_and(|v| v != "false");
-            let method = args.get("quantized", if streaming { "glvq-8d" } else { "none" });
+            let shards = args.get_usize("shards", 0);
+            let method = args.get(
+                "quantized",
+                if streaming || shards > 0 { "glvq-8d" } else { "none" },
+            );
             let bits = args.get_f64("bits", 2.0);
             let cfg = ws.model_cfg(&model)?;
             let continuous = args.flags.get("continuous").is_some_and(|v| v != "false");
@@ -226,6 +239,18 @@ fn main() -> Result<()> {
                 kv_bits: kv_bits.clamp(1, 8) as u8,
                 max_pages: args.get_usize("kv-max-pages", 0),
                 ..KvCacheOpts::default()
+            };
+            // --shards N: total --threads split across the persistent
+            // shard workers, at least one decode thread each; rounded up
+            // so a non-dividing thread count never idles requested cores
+            // (shards=3 --threads 8 → 3 threads per worker, not 2)
+            let shard_opts = |shards: usize, args: &Args| -> ShardOpts {
+                let threads = args.get_usize("threads", scheduler::default_threads());
+                ShardOpts {
+                    shards,
+                    panel_rows: args.get_usize("panel-rows", 16),
+                    threads_per_shard: threads.div_ceil(shards.max(1)).max(1),
+                }
             };
             let handle = if continuous {
                 // continuous batching over the cache-aware backend: the
@@ -245,7 +270,21 @@ fn main() -> Result<()> {
                     kv.page_rows,
                     if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
                 );
-                if streaming {
+                if shards > 0 {
+                    // sharded + continuous: the scheduler's ragged steps
+                    // run tensor-parallel across the shard workers
+                    let sopts = shard_opts(shards, &args);
+                    let qm = ws.quantize_container(&model, &method, bits, None)?;
+                    let store = ws.trained_default(&model)?;
+                    info!(
+                        "sharded continuous backend: {} shards x {} threads",
+                        sopts.shards, sopts.threads_per_shard
+                    );
+                    server::start_continuous(
+                        move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
+                        copts,
+                    )
+                } else if streaming {
                     let threads = args.get_usize("threads", scheduler::default_threads());
                     let panel_rows = args.get_usize("panel-rows", 16);
                     let qm = ws.quantize_container(&model, &method, bits, None)?;
@@ -268,6 +307,22 @@ fn main() -> Result<()> {
                         copts,
                     )
                 }
+            } else if kv_cache && shards > 0 {
+                // sharded lockstep over the paged KV cache
+                let sopts = shard_opts(shards, &args);
+                let qm = ws.quantize_container(&model, &method, bits, None)?;
+                let store = ws.trained_default(&model)?;
+                info!(
+                    "sharded cache-aware backend: {} shards x {} threads, kv page {} rows",
+                    sopts.shards, sopts.threads_per_shard, kv.page_rows
+                );
+                server::start(
+                    move || {
+                        let b = CachedNativeBackend::sharded(cfg, store, qm, sopts, kv);
+                        Ok(Box::new(b) as Box<_>)
+                    },
+                    ServerOpts::default(),
+                )
             } else if kv_cache && streaming {
                 // compressed weights + paged KV cache: prefill once, then
                 // one-token steps, every linear streamed from the container
@@ -302,6 +357,24 @@ fn main() -> Result<()> {
                 );
                 server::start(
                     move || Ok(Box::new(CachedNativeBackend::dense(cfg, store, kv)) as Box<_>),
+                    ServerOpts::default(),
+                )
+            } else if shards > 0 {
+                // cacheless sharded lockstep: every forward tensor-parallel
+                let sopts = shard_opts(shards, &args);
+                let qm = ws.quantize_container(&model, &method, bits, None)?;
+                let store = ws.trained_default(&model)?;
+                info!(
+                    "sharded backend: {} tensors over {} shards x {} threads",
+                    qm.tensors.len(),
+                    sopts.shards,
+                    sopts.threads_per_shard
+                );
+                server::start(
+                    move || {
+                        let b = server::ShardedNativeBackend::new(cfg, store, qm, sopts);
+                        Ok(Box::new(b) as Box<_>)
+                    },
                     ServerOpts::default(),
                 )
             } else if streaming {
@@ -342,7 +415,7 @@ fn main() -> Result<()> {
                     ServerOpts::default(),
                 )
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, kv-cache={kv_cache}, continuous={continuous}); type: gen <prompt> | score <p> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, continuous={continuous}); type: gen <prompt> | score <p> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             loop {

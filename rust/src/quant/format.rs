@@ -130,6 +130,131 @@ impl QuantizedTensor {
     pub fn avg_bits(&self) -> f64 {
         self.payload_bits() as f64 / (self.rows * self.cols) as f64
     }
+
+    // ---- group-aligned slicing (the tensor-parallel sharding unit) ----
+    //
+    // A quantized tensor partitions losslessly along its group grid: a
+    // slice taken at group boundaries carries whole `QuantizedGroup`s —
+    // codes, side info, rANS chunks — untouched, so slicing never splits
+    // a lattice group or an entropy-coded chunk, and `concat_cols` /
+    // `concat_rows` reassembles the original tensor bit-for-bit
+    // (property-tested below across every `SideInfo` family). This is
+    // what makes grouped-lattice weights a natural sharding unit: the
+    // shard planner (`crate::shard`) picks its partition from
+    // `col_split_points` / `row_split_points`.
+
+    /// Column positions where the tensor can be split without cutting
+    /// through any group: ascending, always including 0 and `cols`.
+    pub fn col_split_points(&self) -> Vec<usize> {
+        let mut pts: Vec<usize> = vec![0, self.cols];
+        for (_, c0, g) in &self.groups {
+            pts.push(*c0);
+            pts.push(c0 + g.cols);
+        }
+        pts.sort_unstable();
+        pts.dedup();
+        pts.retain(|&c| {
+            self.groups.iter().all(|(_, c0, g)| c <= *c0 || c >= c0 + g.cols)
+        });
+        pts
+    }
+
+    /// Row positions where the tensor can be split without cutting
+    /// through any group: ascending, always including 0 and `rows`.
+    pub fn row_split_points(&self) -> Vec<usize> {
+        let mut pts: Vec<usize> = vec![0, self.rows];
+        for (r0, _, g) in &self.groups {
+            pts.push(*r0);
+            pts.push(r0 + g.rows);
+        }
+        pts.sort_unstable();
+        pts.dedup();
+        pts.retain(|&r| {
+            self.groups.iter().all(|(r0, _, g)| r <= *r0 || r >= r0 + g.rows)
+        });
+        pts
+    }
+
+    /// Slice the column range `[c0, c1)`. Every group must lie entirely
+    /// inside or outside the range — a straddling group is an error, so a
+    /// slice can never split a lattice group or rANS chunk. Offsets are
+    /// rebased to the slice.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Result<QuantizedTensor> {
+        anyhow::ensure!(c0 < c1 && c1 <= self.cols, "{}: bad column range [{c0}, {c1})", self.name);
+        let mut groups = Vec::new();
+        for (r0, gc0, g) in &self.groups {
+            let (lo, hi) = (*gc0, gc0 + g.cols);
+            if hi <= c0 || lo >= c1 {
+                continue;
+            }
+            anyhow::ensure!(
+                lo >= c0 && hi <= c1,
+                "{}: column split [{c0}, {c1}) cuts through group at cols [{lo}, {hi})",
+                self.name
+            );
+            groups.push((*r0, lo - c0, g.clone()));
+        }
+        Ok(QuantizedTensor { name: self.name.clone(), rows: self.rows, cols: c1 - c0, groups })
+    }
+
+    /// Slice the row range `[r0, r1)` — the row-axis dual of
+    /// [`QuantizedTensor::slice_cols`].
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Result<QuantizedTensor> {
+        anyhow::ensure!(r0 < r1 && r1 <= self.rows, "{}: bad row range [{r0}, {r1})", self.name);
+        let mut groups = Vec::new();
+        for (gr0, c0, g) in &self.groups {
+            let (lo, hi) = (*gr0, gr0 + g.rows);
+            if hi <= r0 || lo >= r1 {
+                continue;
+            }
+            anyhow::ensure!(
+                lo >= r0 && hi <= r1,
+                "{}: row split [{r0}, {r1}) cuts through group at rows [{lo}, {hi})",
+                self.name
+            );
+            groups.push((lo - r0, *c0, g.clone()));
+        }
+        Ok(QuantizedTensor { name: self.name.clone(), rows: r1 - r0, cols: self.cols, groups })
+    }
+
+    /// Reassemble column slices (in order) into one tensor. Inverse of
+    /// slicing at [`QuantizedTensor::col_split_points`]: offsets are
+    /// rebased back, group order within each part is preserved, and the
+    /// result compares equal to the original tensor bit-for-bit.
+    pub fn concat_cols(parts: &[QuantizedTensor]) -> Result<QuantizedTensor> {
+        anyhow::ensure!(!parts.is_empty(), "concat_cols of zero tensors");
+        let rows = parts[0].rows;
+        let mut groups = Vec::new();
+        let mut cols = 0usize;
+        for p in parts {
+            anyhow::ensure!(p.rows == rows, "{}: row count mismatch in concat_cols", p.name);
+            for (r0, c0, g) in &p.groups {
+                groups.push((*r0, c0 + cols, g.clone()));
+            }
+            cols += p.cols;
+        }
+        // canonical group order: column-major panels, as the pipeline emits
+        groups.sort_by_key(|(r0, c0, _)| (*c0, *r0));
+        Ok(QuantizedTensor { name: parts[0].name.clone(), rows, cols, groups })
+    }
+
+    /// Reassemble row slices (in order) into one tensor — the row-axis
+    /// dual of [`QuantizedTensor::concat_cols`].
+    pub fn concat_rows(parts: &[QuantizedTensor]) -> Result<QuantizedTensor> {
+        anyhow::ensure!(!parts.is_empty(), "concat_rows of zero tensors");
+        let cols = parts[0].cols;
+        let mut groups = Vec::new();
+        let mut rows = 0usize;
+        for p in parts {
+            anyhow::ensure!(p.cols == cols, "{}: col count mismatch in concat_rows", p.name);
+            for (r0, c0, g) in &p.groups {
+                groups.push((r0 + rows, *c0, g.clone()));
+            }
+            rows += p.rows;
+        }
+        groups.sort_by_key(|(r0, c0, _)| (*c0, *r0));
+        Ok(QuantizedTensor { name: parts[0].name.clone(), rows, cols, groups })
+    }
 }
 
 /// A complete quantized model container.
@@ -853,5 +978,167 @@ mod tests {
         assert_eq!(payload, 2 * 64 * 2 / 8);
         assert_eq!(side, (2 * 64 + 4) + 4);
         assert_eq!(m.fixed_payload_bytes(), payload);
+    }
+
+    /// One 8×8 group of every side-info family (all code payloads valid
+    /// for their family's decode), laid out as six column panels.
+    fn all_families_tensor() -> QuantizedTensor {
+        let (lo, hi) = code_range(2);
+        let codes2: Vec<i32> = (0..64).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        let codes1: Vec<i32> = (0..64).map(|i| (i % 2) - 1).collect();
+        let mk = |method: &'static str, bits: u8, codes: &[i32], side: SideInfo| QuantizedGroup {
+            method,
+            bits,
+            rows: 8,
+            cols: 8,
+            codes: PackedCodes::pack(codes, bits).into(),
+            side,
+        };
+        let groups: Vec<(usize, usize, QuantizedGroup)> = vec![
+            mk("rtn", 2, &codes2, SideInfo::Uniform { scale: 0.05, zero: 0.01 }),
+            mk(
+                "glvq",
+                2,
+                &codes2,
+                SideInfo::Lattice {
+                    d: 8,
+                    g: (0..64).map(|i| i as f32 * 0.01).collect(),
+                    mu: 40.0,
+                    scale: 0.6,
+                },
+            ),
+            mk(
+                "quip_lite",
+                2,
+                &codes2,
+                SideInfo::RotatedLattice { d: 8, scale: 0.3, sign_seed: 17 },
+            ),
+            {
+                // codebook: one code per dim-2 block → 32 stored codes
+                let (clo, _) = code_range(1);
+                let idx: Vec<i32> = (0..32).map(|i| (i % 2) + clo).collect();
+                QuantizedGroup {
+                    method: "kmeans_vq",
+                    bits: 1,
+                    rows: 8,
+                    cols: 8,
+                    codes: PackedCodes::pack(&idx, 1).into(),
+                    side: SideInfo::Codebook { dim: 2, centers: vec![0.1, 0.2, -0.3, -0.4] },
+                }
+            },
+            mk(
+                "tcq",
+                2,
+                &codes2,
+                SideInfo::Trellis { levels: (0..8).map(|i| i as f32 * 0.1 - 0.4).collect(), states: 4 },
+            ),
+            mk(
+                "binary",
+                1,
+                &codes1,
+                SideInfo::Binary {
+                    row_scales: (0..8).map(|i| 0.1 + i as f32 * 0.01).collect(),
+                    residual_scales: Some((0..8).map(|i| 0.05 + i as f32 * 0.01).collect()),
+                },
+            ),
+        ]
+        .into_iter()
+        .enumerate()
+        .map(|(i, g)| (0usize, i * 8, g))
+        .collect();
+        QuantizedTensor { name: "fam".into(), rows: 8, cols: 48, groups }
+    }
+
+    #[test]
+    fn split_points_are_group_boundaries() {
+        let t = all_families_tensor();
+        assert_eq!(t.col_split_points(), vec![0, 8, 16, 24, 32, 40, 48]);
+        // all groups span the full row extent → only trivial row splits
+        assert_eq!(t.row_split_points(), vec![0, 8]);
+    }
+
+    #[test]
+    fn group_aligned_slice_concat_is_bitwise_identity_all_families() {
+        // the sharding invariant: slicing at ANY group-aligned partition
+        // and concatenating reconstructs the original tensor bitwise —
+        // for every side-info family and for fixed and rANS payloads
+        let mut variants = vec![all_families_tensor()];
+        {
+            // entropy-code the streaming-family payloads (chunk = 2 rows)
+            let mut t = all_families_tensor();
+            for (_, _, g) in &mut t.groups {
+                if matches!(
+                    g.side,
+                    SideInfo::Uniform { .. }
+                        | SideInfo::Lattice { .. }
+                        | SideInfo::RotatedLattice { .. }
+                ) {
+                    g.codes = g.codes.to_entropy(g.cols * 2, 4);
+                }
+            }
+            variants.push(t);
+        }
+        for t in &variants {
+            let pts = t.col_split_points();
+            // every contiguous partition spanned by adjacent split points
+            for take in [1usize, 2, 3, 6] {
+                let mut parts = Vec::new();
+                let mut i = 0;
+                while i + 1 < pts.len() {
+                    let j = (i + take).min(pts.len() - 1);
+                    parts.push(t.slice_cols(pts[i], pts[j]).unwrap());
+                    i = j;
+                }
+                let back = QuantizedTensor::concat_cols(&parts).unwrap();
+                assert_eq!(&back, t, "take={take}: slice→concat not bitwise identity");
+                assert_eq!(back.dequantize().data, t.dequantize().data);
+            }
+        }
+    }
+
+    #[test]
+    fn row_slice_concat_roundtrips_on_a_grid() {
+        // a 2×2 grid of groups slices on both axes
+        let (lo, hi) = code_range(2);
+        let codes: Vec<i32> = (0..64).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        let mk = |scale: f32| QuantizedGroup {
+            method: "rtn",
+            bits: 2,
+            rows: 8,
+            cols: 8,
+            codes: PackedCodes::pack(&codes, 2).into(),
+            side: SideInfo::Uniform { scale, zero: 0.0 },
+        };
+        let t = QuantizedTensor {
+            name: "grid".into(),
+            rows: 16,
+            cols: 16,
+            // canonical (c0, r0) order
+            groups: vec![(0, 0, mk(0.1)), (8, 0, mk(0.2)), (0, 8, mk(0.3)), (8, 8, mk(0.4))],
+        };
+        assert_eq!(t.row_split_points(), vec![0, 8, 16]);
+        assert_eq!(t.col_split_points(), vec![0, 8, 16]);
+        let top = t.slice_rows(0, 8).unwrap();
+        let bot = t.slice_rows(8, 16).unwrap();
+        assert_eq!(QuantizedTensor::concat_rows(&[top, bot]).unwrap(), t);
+        let left = t.slice_cols(0, 8).unwrap();
+        let right = t.slice_cols(8, 16).unwrap();
+        assert_eq!(QuantizedTensor::concat_cols(&[left, right]).unwrap(), t);
+    }
+
+    #[test]
+    fn straddling_slices_are_refused() {
+        let t = all_families_tensor();
+        // mid-group column cut would split a lattice group → hard error
+        assert!(t.slice_cols(0, 4).is_err());
+        assert!(t.slice_cols(4, 48).is_err());
+        assert!(t.slice_cols(0, 0).is_err());
+        assert!(t.slice_cols(0, 49).is_err());
+        // group-aligned cuts succeed and carry whole groups
+        let s = t.slice_cols(8, 24).unwrap();
+        assert_eq!((s.rows, s.cols), (8, 16));
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].1, 0);
+        assert_eq!(s.groups[1].1, 8);
     }
 }

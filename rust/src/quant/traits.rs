@@ -443,6 +443,78 @@ mod tests {
     }
 
     #[test]
+    fn payload_range_decode_edges_agree_across_variants() {
+        // unpack_range_into on both payload variants, at every boundary
+        // class a shard slice can land on: chunk starts/ends, the last
+        // (partial) chunk, single symbols, and the full span
+        let mut rng = crate::util::rng::Rng::new(33);
+        let bits = 3u8;
+        let (lo, hi) = crate::quant::pack::code_range(bits);
+        // 250 codes, chunk_len 64 → chunks [0,64),[64,128),[128,192),[192,250)
+        let codes: Vec<i32> = (0..250)
+            .map(|_| (rng.below((hi - lo + 1) as usize) as i32) + lo)
+            .collect();
+        let fixed: CodePayload = PackedCodes::pack(&codes, bits).into();
+        let rans = fixed.to_entropy(64, 4);
+        assert!(rans.is_entropy());
+        let spans: &[(usize, usize)] = &[
+            (0, 64),    // exactly chunk 0
+            (64, 64),   // exactly chunk 1
+            (0, 128),   // two whole chunks
+            (63, 2),    // straddles a chunk boundary
+            (192, 58),  // exactly the last partial chunk
+            (191, 59),  // straddles into the last partial chunk
+            (249, 1),   // final symbol
+            (0, 250),   // everything
+            (10, 0),    // empty
+        ];
+        for &(start, len) in spans {
+            let mut a = vec![0i32; len];
+            let mut b = vec![0i32; len];
+            fixed.unpack_range_into(start, &mut a);
+            rans.unpack_range_into(start, &mut b);
+            assert_eq!(a, &codes[start..start + len], "fixed span ({start},{len})");
+            assert_eq!(b, &codes[start..start + len], "rans span ({start},{len})");
+        }
+    }
+
+    #[test]
+    fn range_payload_bytes_edges() {
+        let codes: Vec<i32> = (0..250).map(|i| (i % 3) - 1).collect();
+        let fixed: CodePayload = PackedCodes::pack(&codes, 3).into();
+        // fixed payloads are bit-granular
+        assert_eq!(fixed.range_payload_bytes(0, 0), 0);
+        assert_eq!(fixed.range_payload_bytes(0, 8), 3);
+        assert_eq!(fixed.range_payload_bytes(100, 1), 1);
+        assert_eq!(fixed.range_payload_bytes(0, 250), fixed.payload_bytes());
+
+        let rans = fixed.to_entropy(64, 4);
+        let rc = match &rans {
+            CodePayload::Rans(rc) => rc,
+            _ => unreachable!(),
+        };
+        // chunk-granular: a window inside chunk 1 charges chunk 1 only
+        assert_eq!(rans.range_payload_bytes(64, 64), rc.chunks[1].payload_bytes());
+        assert_eq!(rans.range_payload_bytes(70, 10), rc.chunks[1].payload_bytes());
+        // the frequency table is charged with chunk 0
+        assert_eq!(
+            rans.range_payload_bytes(0, 1),
+            rc.chunks[0].payload_bytes() + rc.hist.table_bytes()
+        );
+        // a boundary-straddling window charges both covering chunks
+        assert_eq!(
+            rans.range_payload_bytes(63, 2),
+            rc.chunks[0].payload_bytes() + rc.chunks[1].payload_bytes() + rc.hist.table_bytes()
+        );
+        // the last partial chunk charges exactly itself
+        assert_eq!(rans.range_payload_bytes(192, 58), rc.chunks[3].payload_bytes());
+        assert_eq!(rans.range_payload_bytes(249, 1), rc.chunks[3].payload_bytes());
+        // the whole span charges the whole payload, empty charges nothing
+        assert_eq!(rans.range_payload_bytes(0, 250), rans.payload_bytes());
+        assert_eq!(rans.range_payload_bytes(200, 0), 0);
+    }
+
+    #[test]
     fn recon_error_zero_for_exact_reconstruction() {
         let mut rng = crate::util::rng::Rng::new(2);
         let w = Mat::random_normal(4, 6, 0.1, &mut rng);

@@ -85,6 +85,14 @@ pub trait SeqBackend {
     /// Streaming-decode counters, if the backend serves from compressed
     /// weights.
     fn stream_stats(&self) -> Option<DecodeStats>;
+
+    /// Per-shard decode counters, if the backend runs tensor-parallel
+    /// over the shard executor. (Named apart from
+    /// `LmBackend::shard_stats` so a backend can implement both traits
+    /// without ambiguity.)
+    fn sharded_stats(&self) -> Option<Vec<crate::shard::ShardStat>> {
+        None
+    }
 }
 
 /// Continuous-scheduler configuration.
@@ -627,6 +635,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
     fn refresh_stats(&mut self) {
         self.metrics.kv_cache = self.backend.kv_stats();
         self.metrics.decode = self.backend.stream_stats();
+        self.metrics.shards = self.backend.sharded_stats();
     }
 }
 

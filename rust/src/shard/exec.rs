@@ -1,0 +1,435 @@
+//! Tensor-parallel sharded execution of quantized linears.
+//!
+//! [`ShardedMatmul`] owns N **persistent** worker threads, one per shard.
+//! Each worker holds, for the lifetime of the executor:
+//!
+//! - its shard's group assignment from the [`super::ShardPlan`];
+//! - its own decode scratch (a single-thread [`StreamingMatmul`] whose
+//!   `parallel_map` runs inline — no per-call thread spawn);
+//! - its own expanded rANS decode tables, built **once** per tensor on
+//!   first touch and reused for every subsequent batch (the single-engine
+//!   path rebuilds them every call).
+//!
+//! A `matmul` call broadcasts the activation batch to every worker,
+//! gathers their per-panel partial-product slabs, and reduces them in
+//! the canonical (group, panel) order of
+//! [`crate::coordinator::decode_stream::merge_slabs`]. For an output-dim
+//! (row) partition the shard slabs occupy disjoint output rows and the
+//! reduce is a concat; for an input-dim (column) partition it is an
+//! ordered segment sum. Because the order depends only on the tensor's
+//! group grid — never on the shard count — the result is **bit-identical**
+//! to [`StreamingMatmul::matmul`] on one engine, for any shard count
+//! (`tests/shard_parity.rs`).
+//!
+//! [`ShardedLinear`] plugs the executor into the layer-plan walk
+//! ([`crate::eval::plan::walk`]) as a [`LinearOp`], which is all the
+//! serving backends need to run every forward tensor-parallel.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::decode_stream::{
+    decode_tables, merge_slabs, DecodeStats, PanelSlab, StreamingMatmul,
+};
+use crate::entropy::histogram::DecodeTable;
+use crate::eval::native_fwd::{DenseLinear, LinearOp};
+use crate::linalg::Mat;
+use crate::quant::format::QuantizedModel;
+use crate::tensor::TensorStore;
+
+use super::plan::ShardPlan;
+
+/// Sharded-execution options.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardOpts {
+    /// number of persistent shard workers
+    pub shards: usize,
+    /// rows per streamed decode panel (as [`StreamingMatmul`])
+    pub panel_rows: usize,
+    /// decode threads *inside* each shard worker (1 = inline decode; the
+    /// CLI maps `--threads T --shards N` to `T / N`, so total thread
+    /// count composes)
+    pub threads_per_shard: usize,
+}
+
+impl Default for ShardOpts {
+    fn default() -> Self {
+        ShardOpts { shards: 2, panel_rows: 16, threads_per_shard: 1 }
+    }
+}
+
+/// Per-shard cumulative counters, surfaced through `ServerMetrics` for
+/// the imbalance report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStat {
+    /// matmul jobs this shard has executed
+    pub jobs: usize,
+    /// code payload bytes decoded (true stored bytes)
+    pub code_bytes: usize,
+    /// total decode traffic (code + side info; activations are charged
+    /// once by the coordinator, not per shard)
+    pub total_bytes: usize,
+    /// decoded weight elements produced
+    pub weights_decoded: usize,
+    /// wall time this shard spent decoding, nanoseconds
+    pub busy_ns: u64,
+}
+
+/// Busy-time imbalance across shards: max/mean (1.0 = perfectly even,
+/// 0.0 when no work ran).
+pub fn imbalance(stats: &[ShardStat]) -> f64 {
+    if stats.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = stats.iter().map(|s| s.busy_ns).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mean = total as f64 / stats.len() as f64;
+    let max = stats.iter().map(|s| s.busy_ns).max().unwrap_or(0) as f64;
+    max / mean
+}
+
+enum Job {
+    Matmul { tensor: usize, x: Arc<Mat>, reply: mpsc::Sender<ShardReply> },
+    Stop,
+}
+
+struct ShardReply {
+    shard: usize,
+    slabs: Vec<PanelSlab>,
+    stats: DecodeStats,
+    busy_ns: u64,
+}
+
+/// The persistent worker body: owns this shard's scratch + decode-table
+/// cache, answers matmul jobs until `Stop`.
+fn worker_loop(
+    shard: usize,
+    qm: Arc<QuantizedModel>,
+    plan: Arc<ShardPlan>,
+    engine: StreamingMatmul,
+    rx: mpsc::Receiver<Job>,
+) {
+    // decode tables per tensor, expanded once for the owned groups only
+    let mut tables: Vec<Option<Vec<Option<DecodeTable>>>> =
+        (0..qm.tensors.len()).map(|_| None).collect();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Matmul { tensor, x, reply } => {
+                let t0 = Instant::now();
+                let qt = &qm.tensors[tensor];
+                let owned = &plan.tensors[tensor].owners[shard];
+                if tables[tensor].is_none() {
+                    tables[tensor] = Some(decode_tables(qt, owned));
+                }
+                let tb = tables[tensor].as_ref().expect("tables just built");
+                let mut stats = DecodeStats::default();
+                let slabs = engine.panel_slabs(qt, owned, tb, &x, &mut stats);
+                let busy_ns = t0.elapsed().as_nanos() as u64;
+                // a dropped receiver just means the coordinator gave up on
+                // this call; the worker stays alive for the next job
+                let _ = reply.send(ShardReply { shard, slabs, stats, busy_ns });
+            }
+            Job::Stop => break,
+        }
+    }
+}
+
+/// Tensor-parallel decode-matmul executor over a shared quantized
+/// container (see module docs). `matmul` is `&self`, so one executor can
+/// be shared across layers and serving steps; shutdown is automatic on
+/// drop.
+pub struct ShardedMatmul {
+    qm: Arc<QuantizedModel>,
+    plan: Arc<ShardPlan>,
+    opts: ShardOpts,
+    index: BTreeMap<String, usize>,
+    senders: Vec<mpsc::Sender<Job>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    stats: Mutex<Vec<ShardStat>>,
+}
+
+impl ShardedMatmul {
+    /// Plan the container and start the persistent shard workers.
+    pub fn new(qm: Arc<QuantizedModel>, opts: ShardOpts) -> ShardedMatmul {
+        let opts = ShardOpts {
+            shards: opts.shards.max(1),
+            panel_rows: opts.panel_rows.max(1),
+            threads_per_shard: opts.threads_per_shard.max(1),
+        };
+        let plan = Arc::new(ShardPlan::build(&qm, opts.shards));
+        let index: BTreeMap<String, usize> =
+            qm.tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        let mut senders = Vec::with_capacity(opts.shards);
+        let mut joins = Vec::with_capacity(opts.shards);
+        for shard in 0..opts.shards {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let qm_c = Arc::clone(&qm);
+            let plan_c = Arc::clone(&plan);
+            let engine = StreamingMatmul::new(opts.panel_rows, opts.threads_per_shard);
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("glvq-shard-{shard}"))
+                    .spawn(move || worker_loop(shard, qm_c, plan_c, engine, rx))
+                    .expect("spawn shard worker"),
+            );
+            senders.push(tx);
+        }
+        ShardedMatmul {
+            qm,
+            plan,
+            opts,
+            index,
+            senders,
+            joins,
+            stats: Mutex::new(vec![ShardStat::default(); opts.shards]),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.opts.shards
+    }
+
+    pub fn opts(&self) -> ShardOpts {
+        self.opts
+    }
+
+    /// The shared container this executor serves from.
+    pub fn model(&self) -> &QuantizedModel {
+        &self.qm
+    }
+
+    /// The group partition the workers execute.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Container index of a tensor by name, if present.
+    pub fn tensor_index(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Per-shard cumulative counters (cheap copy).
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.stats.lock().expect("shard stats poisoned").clone()
+    }
+
+    /// `y = x · decode(tensor)ᵀ` executed across all shard workers.
+    /// Output and [`DecodeStats`] are bit-identical to
+    /// [`StreamingMatmul::matmul`] over the same tensor (tested), at any
+    /// shard count.
+    pub fn matmul(&self, tensor: usize, x: &Mat, y: &mut Mat, stats: &mut DecodeStats) {
+        let qt = &self.qm.tensors[tensor];
+        let batch = x.rows;
+        assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);
+        assert_eq!((y.rows, y.cols), (batch, qt.rows), "{}: bad output shape", qt.name);
+        y.data.fill(0.0);
+        stats.act_bytes += (x.data.len() + y.data.len()) * 4;
+
+        // broadcast the batch, gather one reply per shard
+        let xa = Arc::new(x.clone());
+        let (tx, rx) = mpsc::channel::<ShardReply>();
+        for s in &self.senders {
+            s.send(Job::Matmul { tensor, x: Arc::clone(&xa), reply: tx.clone() })
+                .expect("shard worker hung up");
+        }
+        drop(tx);
+        let mut replies: Vec<ShardReply> = rx.iter().collect();
+        assert_eq!(replies.len(), self.opts.shards, "{}: lost a shard reply", qt.name);
+        replies.sort_by_key(|r| r.shard);
+
+        {
+            let mut per = self.stats.lock().expect("shard stats poisoned");
+            for r in &replies {
+                stats.merge(&r.stats);
+                let p = &mut per[r.shard];
+                p.jobs += 1;
+                p.code_bytes += r.stats.code_bytes;
+                p.total_bytes += r.stats.code_bytes + r.stats.side_bytes;
+                p.weights_decoded += r.stats.weights_decoded;
+                p.busy_ns += r.busy_ns;
+            }
+        }
+
+        // deterministic reduce: every shard's slabs fold in the canonical
+        // (group, panel) order, independent of the shard partition
+        let mut slabs: Vec<PanelSlab> =
+            replies.into_iter().flat_map(|r| r.slabs).collect();
+        slabs.sort_by_key(|s| (s.gi, s.r));
+        merge_slabs(qt, &slabs, y);
+    }
+}
+
+impl Drop for ShardedMatmul {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(Job::Stop);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// [`LinearOp`] over the sharded executor: quantized tensors run
+/// tensor-parallel, anything absent from the container falls back to the
+/// dense store — the drop-in sharded counterpart of
+/// [`crate::eval::native_fwd::StreamedLinear`].
+pub struct ShardedLinear<'a> {
+    pub exec: &'a ShardedMatmul,
+    pub store: &'a TensorStore,
+    pub stats: DecodeStats,
+}
+
+impl LinearOp for ShardedLinear<'_> {
+    fn apply(&mut self, name: &str, x: &Mat) -> Result<Mat> {
+        match self.exec.tensor_index(name) {
+            Some(ti) => {
+                let mut y = Mat::zeros(x.rows, self.exec.model().tensors[ti].rows);
+                self.exec.matmul(ti, x, &mut y, &mut self.stats);
+                Ok(y)
+            }
+            None => DenseLinear { store: self.store }.apply(name, x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::RtnQuantizer;
+    use crate::config::GlvqConfig;
+    use crate::glvq::optimizer::GlvqGroupQuantizer;
+    use crate::quant::format::QuantizedTensor;
+    use crate::quant::traits::GroupQuantizer;
+    use crate::util::rng::Rng;
+
+    fn quantized_model(method: &str, seed: u64, entropy: bool) -> QuantizedModel {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Vec::new();
+        for (ti, (rows, cols)) in [(32usize, 64usize), (48, 32)].iter().enumerate() {
+            let wt = Mat::random_normal(*rows, *cols, 0.05, &mut rng);
+            let x = Mat::random_normal(32, 16, 1.0, &mut rng);
+            let mut groups = Vec::new();
+            for gi in 0..cols / 32 {
+                let panel = wt.slice(0, *rows, gi * 32, (gi + 1) * 32);
+                let mut qg = match method {
+                    "glvq" => {
+                        let mut cfg = GlvqConfig::default();
+                        cfg.lattice_dim = 8;
+                        cfg.group_size = 32;
+                        cfg.iters = 3;
+                        GlvqGroupQuantizer::new(cfg).quantize(&panel, &x, 2)
+                    }
+                    _ => RtnQuantizer.quantize(&panel, &x, 2),
+                };
+                if entropy {
+                    qg.codes = qg.codes.to_entropy(qg.cols * 4, 4);
+                }
+                groups.push((0usize, gi * 32, qg));
+            }
+            tensors.push(QuantizedTensor {
+                name: format!("t{ti}"),
+                rows: *rows,
+                cols: *cols,
+                groups,
+            });
+        }
+        QuantizedModel { tensors }
+    }
+
+    #[test]
+    fn sharded_matmul_is_bit_identical_to_single_engine_any_shard_count() {
+        for entropy in [false, true] {
+            for method in ["rtn", "glvq"] {
+                let qm = quantized_model(method, 5, entropy);
+                let reference = StreamingMatmul::new(8, 2);
+                for shards in [1usize, 2, 4] {
+                    let exec = ShardedMatmul::new(
+                        Arc::new(qm.clone()),
+                        ShardOpts { shards, panel_rows: 8, threads_per_shard: 1 },
+                    );
+                    for (ti, qt) in qm.tensors.iter().enumerate() {
+                        let mut rng = Rng::new(7 + ti as u64);
+                        for batch in [1usize, 3] {
+                            let x = Mat::random_normal(batch, qt.cols, 1.0, &mut rng);
+                            let mut want = Mat::zeros(batch, qt.rows);
+                            let mut sw = DecodeStats::default();
+                            reference.matmul(qt, &x, &mut want, &mut sw);
+                            let mut got = Mat::zeros(batch, qt.rows);
+                            let mut sg = DecodeStats::default();
+                            exec.matmul(ti, &x, &mut got, &mut sg);
+                            assert_eq!(
+                                got.data, want.data,
+                                "{method} entropy={entropy} shards={shards} t{ti} b{batch}"
+                            );
+                            assert_eq!(sg, sw, "stats drifted at shards={shards}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_stats_accumulate_and_balance() {
+        let qm = quantized_model("rtn", 9, true);
+        let exec = ShardedMatmul::new(
+            Arc::new(qm.clone()),
+            ShardOpts { shards: 2, panel_rows: 8, threads_per_shard: 1 },
+        );
+        let mut rng = Rng::new(11);
+        let x = Mat::random_normal(2, qm.tensors[0].cols, 1.0, &mut rng);
+        let mut y = Mat::zeros(2, qm.tensors[0].rows);
+        let mut st = DecodeStats::default();
+        for _ in 0..3 {
+            exec.matmul(0, &x, &mut y, &mut st);
+        }
+        let per = exec.shard_stats();
+        assert_eq!(per.len(), 2);
+        for (i, p) in per.iter().enumerate() {
+            assert_eq!(p.jobs, 3, "shard {i}");
+            assert!(p.weights_decoded > 0, "shard {i} decoded nothing");
+        }
+        // both shards own one of the two equal groups → equal decode work
+        assert_eq!(per[0].weights_decoded, per[1].weights_decoded);
+        let imb = imbalance(&per);
+        assert!(imb >= 1.0, "imbalance {imb}");
+        // per-shard code bytes sum to the engine-level total
+        assert_eq!(
+            per.iter().map(|p| p.code_bytes).sum::<usize>(),
+            st.code_bytes
+        );
+    }
+
+    #[test]
+    fn sharded_linear_falls_back_to_dense_for_unquantized_names() {
+        use crate::model::{init_params, CONFIG_S};
+        let cfg = CONFIG_S;
+        let store = init_params(&cfg, 3);
+        let qm = quantized_model("rtn", 13, false);
+        let exec = ShardedMatmul::new(Arc::new(qm), ShardOpts::default());
+        let mut lin = ShardedLinear { exec: &exec, store: &store, stats: DecodeStats::default() };
+        // "emb" is not in the container → dense fallback must serve it
+        let mut rng = Rng::new(4);
+        let x = Mat::random_normal(2, cfg.vocab, 1.0, &mut rng);
+        let y = lin.apply("emb", &x).unwrap();
+        assert_eq!((y.rows, y.cols), (2, cfg.d_model));
+    }
+
+    #[test]
+    fn imbalance_of_empty_and_even() {
+        assert_eq!(imbalance(&[]), 0.0);
+        let even = vec![ShardStat { busy_ns: 100, ..Default::default() }; 4];
+        assert!((imbalance(&even) - 1.0).abs() < 1e-12);
+        let skew = vec![
+            ShardStat { busy_ns: 300, ..Default::default() },
+            ShardStat { busy_ns: 100, ..Default::default() },
+        ];
+        assert!((imbalance(&skew) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,31 @@
+//! Tensor-parallel sharded execution over quantized group boundaries.
+//!
+//! The paper's decode reduces to independent per-group matrix-vector
+//! products, which means a [`crate::quant::format::QuantizedTensor`]
+//! partitions **losslessly** along its group grid — grouped-lattice
+//! weights are a natural sharding unit in a way dense checkpoints are
+//! not. This subsystem turns that into an execution strategy:
+//!
+//! - [`plan`] assigns whole groups to shards along group-aligned
+//!   boundaries (`QuantizedTensor::{col,row}_split_points`), balanced by
+//!   true stored payload bytes — never splitting a lattice group or an
+//!   rANS chunk;
+//! - [`exec`] runs N persistent worker threads, each owning its shard's
+//!   decode scratch and rANS decode tables, and reduces their partial
+//!   products deterministically (concat for output-dim splits, canonical
+//!   ordered sum for input-dim splits) so sharded output is
+//!   **bit-identical** to the single-engine path at any shard count.
+//!
+//! Serving plugs in through [`ShardedLinear`] (a
+//! [`crate::eval::native_fwd::LinearOp`]): the layer-plan walk is
+//! unchanged, only the operator behind each linear node switches. The
+//! CLI exposes it as `glvq serve --shards N` (composing with
+//! `--threads`, `--kv-cache` and `--continuous`); `tests/shard_parity.rs`
+//! holds the bit-identity proofs and `benches/bench_shard.rs` the
+//! speedup acceptance.
+
+pub mod exec;
+pub mod plan;
+
+pub use exec::{imbalance, ShardOpts, ShardStat, ShardedLinear, ShardedMatmul};
+pub use plan::{ShardPlan, SplitAxis, TensorShardPlan};

@@ -1,0 +1,276 @@
+//! Shard planning: partition every quantized tensor along its group
+//! boundaries into per-shard ownership lists.
+//!
+//! The unit of assignment is the [`crate::quant::traits::QuantizedGroup`]
+//! — never a slice of one — so a shard's payload is always a set of
+//! whole lattice groups / rANS chunk streams
+//! ([`crate::quant::format::QuantizedTensor::col_split_points`] is the
+//! boundary lattice the planner picks from). For the pipeline's standard
+//! layout (full-row column groups) the partition follows the **input
+//! dimension** (row-parallel in Megatron terms: every shard computes a
+//! full-width partial output that the coordinator reduces); tensors
+//! grouped along rows partition the **output dimension** (column-parallel:
+//! shard outputs occupy disjoint rows and the reduce degenerates to a
+//! concat). Either way the reduce runs in the canonical (group, panel)
+//! order of [`crate::coordinator::decode_stream::merge_slabs`], so the
+//! result is bit-identical to the single-engine path at any shard count.
+//!
+//! Assignment is deterministic: contiguous cell runs balanced by true
+//! stored payload bytes (compressed size for entropy payloads), so a
+//! tensor whose groups compress unevenly still spreads decode work
+//! evenly.
+
+use crate::quant::format::{QuantizedModel, QuantizedTensor};
+
+/// Which axis a tensor's partition follows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitAxis {
+    /// column (input-dim) split: shards produce overlapping-support
+    /// partials that the coordinator sums in canonical group order
+    Cols,
+    /// row (output-dim) split: shard outputs occupy disjoint output rows;
+    /// the reduce is a concat
+    Rows,
+    /// no non-trivial group-aligned boundary on either axis: groups are
+    /// assigned directly (still whole groups, still canonical-order
+    /// reduce)
+    Groups,
+}
+
+/// One tensor's shard assignment.
+#[derive(Clone, Debug)]
+pub struct TensorShardPlan {
+    /// group indices owned by each shard (ascending within a shard);
+    /// disjoint and jointly complete over `qt.groups`
+    pub owners: Vec<Vec<usize>>,
+    /// payload bytes each shard owns (the balance target)
+    pub owned_bytes: Vec<usize>,
+    pub axis: SplitAxis,
+}
+
+/// The whole model's shard assignment, one entry per tensor of the
+/// container it was built from.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub shards: usize,
+    pub tensors: Vec<TensorShardPlan>,
+}
+
+/// Split `weights` into `shards` contiguous runs with near-equal sums:
+/// run `k` ends at the smallest prefix reaching `total·(k+1)/shards`.
+/// Deterministic; later runs may be empty when cells are few or skewed.
+fn balanced_contiguous(weights: &[usize], shards: usize) -> Vec<(usize, usize)> {
+    let total: usize = weights.iter().sum();
+    let n = weights.len();
+    let mut runs = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for k in 0..shards {
+        let target = (total as u128 * (k as u128 + 1) / shards as u128) as usize;
+        let mut end = start;
+        while end < n && (acc < target || target == 0) {
+            // leave at least one cell per remaining shard when possible
+            if n - end <= shards - 1 - k {
+                break;
+            }
+            acc += weights[end];
+            end += 1;
+            if acc >= target {
+                break;
+            }
+        }
+        if k == shards - 1 {
+            end = n;
+        }
+        runs.push((start, end));
+        start = end;
+    }
+    runs
+}
+
+impl TensorShardPlan {
+    /// Partition one tensor. Cells are the spans between adjacent
+    /// group-aligned split points on the chosen axis; each cell's groups
+    /// stay together, and cells are distributed as contiguous balanced
+    /// runs.
+    pub fn build(qt: &QuantizedTensor, shards: usize) -> TensorShardPlan {
+        let shards = shards.max(1);
+        let col_pts = qt.col_split_points();
+        let row_pts = qt.row_split_points();
+        let (axis, cells): (SplitAxis, Vec<Vec<usize>>) = if col_pts.len() > 2 {
+            (SplitAxis::Cols, cells_on_axis(qt, &col_pts, |(_, c0, _)| *c0))
+        } else if row_pts.len() > 2 {
+            (SplitAxis::Rows, cells_on_axis(qt, &row_pts, |(r0, _, _)| *r0))
+        } else {
+            (SplitAxis::Groups, (0..qt.groups.len()).map(|gi| vec![gi]).collect())
+        };
+        let weights: Vec<usize> = cells
+            .iter()
+            .map(|c| c.iter().map(|&gi| qt.groups[gi].2.codes.payload_bytes()).sum())
+            .collect();
+        let runs = balanced_contiguous(&weights, shards);
+        let mut owners = Vec::with_capacity(shards);
+        let mut owned_bytes = Vec::with_capacity(shards);
+        for &(a, b) in &runs {
+            let mut groups: Vec<usize> = cells[a..b].iter().flatten().copied().collect();
+            groups.sort_unstable();
+            owned_bytes.push(groups.iter().map(|&gi| qt.groups[gi].2.codes.payload_bytes()).sum());
+            owners.push(groups);
+        }
+        TensorShardPlan { owners, owned_bytes, axis }
+    }
+}
+
+/// Group indices per cell, cells ordered by the axis split points.
+fn cells_on_axis<F>(qt: &QuantizedTensor, pts: &[usize], key: F) -> Vec<Vec<usize>>
+where
+    F: Fn(&(usize, usize, crate::quant::traits::QuantizedGroup)) -> usize,
+{
+    let mut cells: Vec<Vec<usize>> = vec![Vec::new(); pts.len() - 1];
+    for (gi, g) in qt.groups.iter().enumerate() {
+        let k = key(g);
+        // the cell whose [pts[i], pts[i+1]) span contains the group start
+        let ci = match pts.binary_search(&k) {
+            Ok(i) => i.min(pts.len() - 2),
+            Err(i) => i - 1,
+        };
+        cells[ci].push(gi);
+    }
+    cells
+}
+
+impl ShardPlan {
+    /// Plan every tensor of a container for `shards`-way execution.
+    pub fn build(qm: &QuantizedModel, shards: usize) -> ShardPlan {
+        ShardPlan {
+            shards: shards.max(1),
+            tensors: qm.tensors.iter().map(|t| TensorShardPlan::build(t, shards.max(1))).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{code_range, PackedCodes};
+    use crate::quant::traits::{QuantizedGroup, SideInfo};
+
+    fn column_tensor(n_groups: usize) -> QuantizedTensor {
+        let (lo, hi) = code_range(2);
+        let codes: Vec<i32> = (0..64).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        let groups = (0..n_groups)
+            .map(|gi| {
+                (
+                    0usize,
+                    gi * 8,
+                    QuantizedGroup {
+                        method: "rtn",
+                        bits: 2,
+                        rows: 8,
+                        cols: 8,
+                        codes: PackedCodes::pack(&codes, 2).into(),
+                        side: SideInfo::Uniform { scale: 0.1, zero: 0.0 },
+                    },
+                )
+            })
+            .collect();
+        QuantizedTensor { name: "t".into(), rows: 8, cols: n_groups * 8, groups }
+    }
+
+    #[test]
+    fn owners_are_disjoint_and_complete() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            let qt = column_tensor(6);
+            let plan = TensorShardPlan::build(&qt, shards);
+            assert_eq!(plan.owners.len(), shards);
+            assert_eq!(plan.axis, SplitAxis::Cols);
+            let mut all: Vec<usize> = plan.owners.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..6).collect::<Vec<_>>(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn balance_tracks_payload_bytes() {
+        let qt = column_tensor(8);
+        let plan = TensorShardPlan::build(&qt, 4);
+        // equal-size groups, 4 shards → 2 groups each
+        for (s, o) in plan.owners.iter().enumerate() {
+            assert_eq!(o.len(), 2, "shard {s} owns {o:?}");
+        }
+        let total: usize = plan.owned_bytes.iter().sum();
+        assert_eq!(total, qt.payload_bytes());
+    }
+
+    #[test]
+    fn more_shards_than_cells_leaves_spare_shards_empty() {
+        let qt = column_tensor(2);
+        let plan = TensorShardPlan::build(&qt, 4);
+        let owned: usize = plan.owners.iter().map(|o| o.len()).sum();
+        assert_eq!(owned, 2);
+        assert!(plan.owners.iter().filter(|o| o.is_empty()).count() >= 2);
+    }
+
+    #[test]
+    fn single_full_width_group_falls_back_to_group_axis() {
+        let (lo, hi) = code_range(2);
+        let codes: Vec<i32> = (0..64).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        let qt = QuantizedTensor {
+            name: "one".into(),
+            rows: 8,
+            cols: 8,
+            groups: vec![(
+                0,
+                0,
+                QuantizedGroup {
+                    method: "rtn",
+                    bits: 2,
+                    rows: 8,
+                    cols: 8,
+                    codes: PackedCodes::pack(&codes, 2).into(),
+                    side: SideInfo::Uniform { scale: 0.1, zero: 0.0 },
+                },
+            )],
+        };
+        let plan = TensorShardPlan::build(&qt, 3);
+        assert_eq!(plan.axis, SplitAxis::Groups);
+        assert_eq!(plan.owners.iter().map(|o| o.len()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn row_grouped_tensor_splits_rows() {
+        let (lo, hi) = code_range(2);
+        let codes: Vec<i32> = (0..64).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        let mk = || QuantizedGroup {
+            method: "rtn",
+            bits: 2,
+            rows: 8,
+            cols: 8,
+            codes: PackedCodes::pack(&codes, 2).into(),
+            side: SideInfo::Uniform { scale: 0.1, zero: 0.0 },
+        };
+        let qt = QuantizedTensor {
+            name: "rows".into(),
+            rows: 16,
+            cols: 8,
+            groups: vec![(0, 0, mk()), (8, 0, mk())],
+        };
+        let plan = TensorShardPlan::build(&qt, 2);
+        assert_eq!(plan.axis, SplitAxis::Rows);
+        assert_eq!(plan.owners[0], vec![0]);
+        assert_eq!(plan.owners[1], vec![1]);
+    }
+
+    #[test]
+    fn balanced_contiguous_is_deterministic_and_covers() {
+        let w = [5usize, 1, 1, 1, 5, 1, 1, 1];
+        let runs = balanced_contiguous(&w, 3);
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].0, 0);
+        assert_eq!(runs.last().unwrap().1, w.len());
+        for pair in runs.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0, "runs not contiguous");
+        }
+        assert_eq!(runs, balanced_contiguous(&w, 3));
+    }
+}

@@ -4,7 +4,7 @@
 
 use glvq::baselines;
 use glvq::config::GlvqConfig;
-use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatvec};
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use glvq::eval::native_fwd;
 use glvq::glvq::optimizer::GlvqGroupQuantizer;
 use glvq::glvq::pipeline::{dequantized_store, quantize_model, CalibSet, PipelineOpts};
@@ -107,13 +107,14 @@ fn streaming_decoder_agrees_with_dense_on_full_model() {
     let opts = PipelineOpts { group_size: 64, target_bits: 2.0, bit_allocation: false, threads: 2, ..Default::default() };
     let (qm, _) = quantize_model(&specs, &store, &calib, &glvq, &opts).unwrap();
 
-    let mut sm = StreamingMatvec::new(8);
+    let sm = StreamingMatmul::new(8, 1);
     let mut rng = Rng::new(6);
     for qt in &qm.tensors {
         let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
-        let mut y = vec![0.0f32; qt.rows];
         let mut stats = DecodeStats::default();
-        sm.matvec(qt, &x, &mut y, &mut stats);
+        // single-vector decode is the batch-1 case of the shared engine
+        // (the old `StreamingMatvec` wrapper is gone)
+        let y = sm.matvec(qt, &x, &mut stats);
         let want = qt.dequantize().matvec(&x);
         for (a, b) in y.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4, "{}: {a} vs {b}", qt.name);
@@ -213,16 +214,15 @@ fn entropy_container_v2_roundtrips_and_streams_exactly() {
 
     // lossless vs the fixed-width container, and actually smaller on
     // heavy-tailed codes
-    let mut sm = StreamingMatvec::new(8);
+    let sm = StreamingMatmul::new(8, 1);
     let mut rng = Rng::new(24);
     for (qt, qtf) in loaded.tensors.iter().zip(&qm_fixed.tensors) {
         let dense = qt.dequantize();
         assert_eq!(dense.data, qtf.dequantize().data, "{}", qt.name);
         let x: Vec<f32> = (0..qt.cols).map(|_| rng.normal_f32()).collect();
         let want = dense.matvec(&x);
-        let mut y = vec![0.0f32; qt.rows];
         let mut stats = DecodeStats::default();
-        sm.matvec(qt, &x, &mut y, &mut stats);
+        let y = sm.matvec(qt, &x, &mut stats);
         for (a, b) in y.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4, "{}: {a} vs {b}", qt.name);
         }
