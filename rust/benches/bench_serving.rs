@@ -26,7 +26,18 @@
 //! completes with correct resumes. p50/p95 time-to-first-token and
 //! queue-wait come from the server-side histograms.
 //!
-//! Results append to `runs/bench/serving.json` (`{"runs": [...]}`).
+//! A fifth cell (`continuous-traced`) reruns the continuous workload with
+//! span tracing on, and writes two observability artifacts:
+//! `runs/bench/serving_trace.json` (Chrome trace-event JSON — scheduler
+//! phases, panel decodes and per-request timeline tracks, loadable in
+//! Perfetto) and `runs/bench/serving_metrics.prom` (Prometheus text of
+//! the final metrics snapshot). Full-mode observability acceptance: the
+//! scheduler phase spans account for **≥ 90%** of `sched_step` wall time,
+//! and the measured cost of *disabled* span guards stays **< 2%** of the
+//! per-token serving cost.
+//!
+//! Results append to `runs/bench/serving.json` (`{"runs": [...]}`),
+//! including the full structured metrics snapshot of the traced cell.
 //! `GLVQ_BENCH_SMOKE=1` runs a miniature workload for CI: same parity
 //! and preemption checks, speedup reported but not asserted.
 //!
@@ -43,6 +54,7 @@ use glvq::eval::native_fwd::{self, CalibCapture};
 use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
 use glvq::kvcache::KvCacheOpts;
 use glvq::model::{init_params, ModelConfig};
+use glvq::obs::{self, span, MetricsSnapshot, RequestTimeline};
 use glvq::quant::format::QuantizedModel;
 use glvq::tensor::TensorStore;
 use glvq::bench_support::append_trajectory;
@@ -130,6 +142,8 @@ struct CellResult {
     resumes: usize,
     sched_steps: usize,
     outputs: Vec<Vec<u8>>,
+    snapshot: MetricsSnapshot,
+    timelines: Vec<RequestTimeline>,
 }
 
 /// Submit the workload with its arrival gaps, wait for every response,
@@ -152,6 +166,7 @@ fn run_cell(handle: ServerHandle, wl: &Workload) -> CellResult {
     }
     let wall = t0.elapsed().as_secs_f64();
     let metrics = handle.shutdown();
+    let snapshot = metrics.snapshot();
     CellResult {
         tok_s: wl.total_new as f64 / wall.max(1e-9),
         wall_ms: wall * 1e3,
@@ -162,6 +177,8 @@ fn run_cell(handle: ServerHandle, wl: &Workload) -> CellResult {
         resumes: metrics.resumes,
         sched_steps: metrics.sched_steps,
         outputs,
+        snapshot,
+        timelines: metrics.timelines,
     }
 }
 
@@ -283,11 +300,119 @@ fn main() {
         );
     }
 
+    // ---- traced cell: the observability acceptance ----
+    // rerun the continuous workload with span tracing on, then turn the
+    // collected spans into the two exported artifacts
+    span::set_enabled(true);
+    let traced = run_cell(server::start_continuous(mk(kv), copts), &wl);
+    span::set_enabled(false);
+    let spans = span::drain();
+    assert_eq!(
+        traced.outputs, sequential.outputs,
+        "continuous-traced: outputs diverged from sequential execution"
+    );
+    span::validate_nesting(&spans).expect("span tree is well-nested");
+
+    let stages = span::summarize(&spans);
+    let total_of = |name: &str| {
+        stages.iter().find(|s| s.name == name).map(|s| s.total_ms).unwrap_or(0.0)
+    };
+    let sched_total = total_of("sched_step");
+    let phases =
+        ["sweep", "resume", "admit", "plan", "preempt", "exec", "apply_logits", "refresh"];
+    let attributed: f64 = phases.iter().map(|n| total_of(n)).sum();
+    let frac = attributed / sched_total.max(1e-9);
+    println!(
+        "continuous-traced   {:>8.1} tok/s  {} spans; sched_step {:.1} ms, phases {:.1} ms ({:.0}% attributed)",
+        traced.tok_s,
+        spans.len(),
+        sched_total,
+        attributed,
+        frac * 100.0
+    );
+    println!("{}", span::render_summary(&stages));
+    assert!(sched_total > 0.0, "traced run recorded no sched_step spans");
+    if !smoke() {
+        assert!(
+            frac >= 0.90,
+            "phase spans attribute only {:.1}% of sched_step wall time (need >= 90%)",
+            frac * 100.0
+        );
+    }
+
+    // the snapshot carries every counter the report line exposes
+    for name in [
+        "requests_total",
+        "tokens_out_total",
+        "batches_total",
+        "tokens_per_sec",
+        "request_latency_ms",
+        "ttft_ms",
+        "queue_wait_ms",
+        "sched_steps_total",
+        "prefill_chunks_total",
+        "decoded_bytes_total",
+        "kv_pages_in_use",
+    ] {
+        assert!(traced.snapshot.has(name), "snapshot missing metric {name}");
+    }
+
+    std::fs::create_dir_all("runs/bench").expect("create runs/bench");
+    let trace = obs::chrome_trace_json(&spans, &traced.timelines);
+    let trace_text = trace.to_string();
+    // self-check both artifacts before writing: the trace round-trips
+    // through the JSON parser, the Prometheus text through the validator
+    let parsed = Json::parse(&trace_text).expect("trace JSON parses");
+    let n_events = parsed.get("traceEvents").as_arr().map_or(0, |a| a.len());
+    assert!(n_events > 0, "empty trace export");
+    let prom = traced.snapshot.to_prometheus();
+    glvq::obs::registry::validate_prometheus(&prom).expect("prometheus exposition valid");
+    std::fs::write("runs/bench/serving_trace.json", &trace_text).expect("write trace");
+    std::fs::write("runs/bench/serving_metrics.prom", &prom).expect("write metrics");
+    println!(
+        "  wrote runs/bench/serving_trace.json ({n_events} events) and runs/bench/serving_metrics.prom"
+    );
+
+    // ---- disabled-guard overhead: tracing off must be ~free ----
+    let reps: u64 = if smoke() { 200_000 } else { 2_000_000 };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _g = glvq::span!("overhead_probe");
+    }
+    let ns_per_guard = t0.elapsed().as_nanos() as f64 / reps as f64;
+    // guards fired per generated token, measured on the traced run itself
+    let guards_per_token = spans.len() as f64 / wl.total_new.max(1) as f64;
+    let per_token_ns = 1e9 / by("continuous-b16").tok_s.max(1e-9);
+    let overhead = ns_per_guard * guards_per_token / per_token_ns;
+    println!(
+        "  disabled guards: {ns_per_guard:.1} ns/guard x {guards_per_token:.1} guards/token = {:.3}% of per-token cost",
+        overhead * 100.0
+    );
+    if !smoke() {
+        assert!(
+            overhead < 0.02,
+            "disabled tracing costs {:.2}% of per-token time (need < 2%)",
+            overhead * 100.0
+        );
+    }
+
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("continuous-traced")),
+        ("tok_s", Json::num(traced.tok_s)),
+        ("wall_ms", Json::num(traced.wall_ms)),
+        ("spans", Json::num(spans.len() as f64)),
+        ("sched_step_ms", Json::num(sched_total)),
+        ("phase_attribution", Json::num(frac)),
+        ("metrics", traced.snapshot.to_json()),
+    ]));
+
     append_trajectory(
         "serving",
         vec![
             ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
             ("speedup_vs_lockstep", Json::num(speedup)),
+            ("span_attribution", Json::num(frac)),
+            ("disabled_guard_overhead", Json::num(overhead)),
             ("measurements", Json::Arr(entries)),
         ],
     );

@@ -125,6 +125,7 @@ pub struct PanelSlab {
 /// shard worker can build tables for only the groups it owns, once, and
 /// reuse them across every batch.
 pub fn decode_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<Option<DecodeTable>> {
+    let _sp = crate::span!("rans_tables");
     let mut tables: Vec<Option<DecodeTable>> = (0..qt.groups.len()).map(|_| None).collect();
     for &gi in groups {
         if let crate::quant::traits::CodePayload::Rans(rc) = &qt.groups[gi].2.codes {
@@ -140,6 +141,7 @@ pub fn decode_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<Option<Decod
 /// makes the float result identical no matter how the slabs were
 /// produced: one engine, many threads, or many shard workers.
 pub fn merge_slabs(qt: &QuantizedTensor, slabs: &[PanelSlab], y: &mut Mat) {
+    let _sp = crate::span!("merge_slabs");
     let batch = y.rows;
     debug_assert!(
         slabs.windows(2).all(|w| (w[0].gi, w[0].r) < (w[1].gi, w[1].r)),
@@ -207,6 +209,7 @@ impl StreamingMatmul {
     /// scratch and stats merged into `stats` after the join. The result is
     /// bit-identical across batch sizes and thread counts.
     pub fn matmul(&self, qt: &QuantizedTensor, x: &Mat, y: &mut Mat, stats: &mut DecodeStats) {
+        let _sp = crate::span!("decode_matmul");
         let batch = x.rows;
         assert_eq!((y.rows, y.cols), (batch, qt.rows), "{}: bad output shape", qt.name);
         y.data.fill(0.0);
@@ -265,6 +268,9 @@ impl StreamingMatmul {
         }
 
         let slabs = parallel_map(self.threads, &items, |idx, item| {
+            // one span per row-panel on the worker's own thread track;
+            // inert (a single atomic load) when tracing is off
+            let _sp = crate::span!("panel_decode");
             let (_, c0, g) = &qt.groups[item.gi];
             let mut scratch = self.acquire_scratch(idx);
             let mut st = DecodeStats::default();

@@ -6,41 +6,66 @@
 //! executes from compressed weights, and KV-cache occupancy/quantization
 //! counters ([`crate::kvcache::KvCacheStats`]) when it serves through the
 //! paged cache.
+//!
+//! [`ServerMetrics::snapshot`] freezes everything into an
+//! [`crate::obs::MetricsSnapshot`], the one source for all three export
+//! formats: the human [`ServerMetrics::report`] line (rendered by
+//! [`human_line`]), structured JSON, and Prometheus text exposition.
 
 use std::time::Instant;
 
 use crate::coordinator::decode_stream::DecodeStats;
 use crate::kvcache::KvCacheStats;
+use crate::obs::{Mark, MetricsSnapshot, Registry, RequestTimeline};
 use crate::shard::{imbalance, ShardStat};
 
-/// Streaming latency histogram (reservoir of raw samples; exact quantiles
-/// for ≤ capacity samples, uniform subsample beyond).
+/// Streaming latency histogram: a fixed-capacity uniform reservoir kept
+/// sorted by insertion (exact quantiles for ≤ capacity samples, uniform
+/// subsample beyond), plus a running sum/count over the *full* stream so
+/// [`LatencyHist::mean`] is exact regardless of reservoir eviction.
+/// Quantile reads are O(1) indexed lookups — no per-call clone or sort.
 #[derive(Clone, Debug)]
 pub struct LatencyHist {
+    /// reservoir, maintained in ascending order
     samples: Vec<f64>,
     capacity: usize,
     seen: usize,
+    /// sum over every recorded value, not just the surviving reservoir
+    sum: f64,
     rng_state: u64,
 }
 
 impl LatencyHist {
     pub fn new(capacity: usize) -> LatencyHist {
-        LatencyHist { samples: Vec::with_capacity(capacity), capacity, seen: 0, rng_state: 0x9E37 }
+        LatencyHist {
+            samples: Vec::with_capacity(capacity),
+            capacity,
+            seen: 0,
+            sum: 0.0,
+            rng_state: 0x9E37,
+        }
     }
 
     pub fn record(&mut self, value_ms: f64) {
         self.seen += 1;
+        self.sum += value_ms;
         if self.samples.len() < self.capacity {
-            self.samples.push(value_ms);
+            let pos = self.samples.partition_point(|&x| x < value_ms);
+            self.samples.insert(pos, value_ms);
         } else {
-            // reservoir replacement
+            // Reservoir eviction: admit with probability capacity/seen,
+            // evicting a uniformly random resident — the same stationary
+            // distribution as algorithm-R slot replacement, expressed on
+            // the sorted reservoir.
             self.rng_state = self
                 .rng_state
                 .wrapping_mul(6364136223846793005)
                 .wrapping_add(1442695040888963407);
             let j = (self.rng_state >> 33) as usize % self.seen;
             if j < self.capacity {
-                self.samples[j] = value_ms;
+                self.samples.remove(j);
+                let pos = self.samples.partition_point(|&x| x < value_ms);
+                self.samples.insert(pos, value_ms);
             }
         }
     }
@@ -49,23 +74,55 @@ impl LatencyHist {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-        v[pos]
+        let pos = (q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[pos]
     }
 
     pub fn count(&self) -> usize {
         self.seen
     }
 
+    /// Exact mean of the full stream (running sum / count), unaffected by
+    /// which samples survive the reservoir.
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             0.0
         } else {
-            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+            self.sum / self.seen as f64
         }
     }
+
+    /// Sum over the full stream.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Register a histogram as a summary metric: p50/p95/p99 plus the full
+/// stream sum and count.
+fn register_hist(reg: &mut Registry, name: &str, h: &LatencyHist) {
+    reg.summary(
+        name,
+        vec![(0.5, h.quantile(0.5)), (0.95, h.quantile(0.95)), (0.99, h.quantile(0.99))],
+        h.sum(),
+        h.count() as u64,
+    );
+}
+
+/// Register a raw value list as a summary metric (used for per-request
+/// timeline attributions). No-op when empty.
+fn register_dist(reg: &mut Registry, name: &str, vals: &mut Vec<f64>) {
+    if vals.is_empty() {
+        return;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |q: f64| vals[(q * (vals.len() - 1) as f64).round() as usize];
+    reg.summary(
+        name,
+        vec![(0.5, q(0.5)), (0.95, q(0.95))],
+        vals.iter().sum(),
+        vals.len() as u64,
+    );
 }
 
 /// Aggregated server metrics.
@@ -106,6 +163,10 @@ pub struct ServerMetrics {
     /// per-shard decode/busy counters, when the backend executes
     /// tensor-parallel over the shard executor (None otherwise)
     pub shards: Option<Vec<ShardStat>>,
+    /// per-request lifecycle timelines recorded by the continuous
+    /// scheduler (empty in lockstep mode) — source of the
+    /// `request_{queue,prefill,decode}_ms` attribution summaries
+    pub timelines: Vec<RequestTimeline>,
 }
 
 impl Default for ServerMetrics {
@@ -128,6 +189,7 @@ impl Default for ServerMetrics {
             decode: None,
             kv_cache: None,
             shards: None,
+            timelines: Vec::new(),
         }
     }
 }
@@ -142,63 +204,147 @@ impl ServerMetrics {
         }
     }
 
-    pub fn report(&self) -> String {
-        let mut out = format!(
-            "requests={} tokens={} batches={} tok/s={:.1} p50={:.1}ms p95={:.1}ms p99={:.1}ms",
-            self.requests,
-            self.tokens_out,
-            self.batches,
-            self.tokens_per_sec(),
-            self.latency.quantile(0.5),
-            self.latency.quantile(0.95),
-            self.latency.quantile(0.99),
-        );
-        if self.ttft.count() > 0 {
-            out.push_str(&format!(
-                " ttft_p50={:.1}ms ttft_p95={:.1}ms queue_p50={:.1}ms",
-                self.ttft.quantile(0.5),
-                self.ttft.quantile(0.95),
-                self.queue_wait.quantile(0.5),
-            ));
-        }
-        if self.sched_steps > 0 {
-            out.push_str(&format!(
-                " steps={} seqs/step_p50={:.1} prefill_chunks={} preempt={} resume={} rejected={}",
-                self.sched_steps,
-                self.seqs_per_step.quantile(0.5),
-                self.prefill_chunks,
-                self.preemptions,
-                self.resumes,
-                self.rejections,
-            ));
-        }
+    /// Freeze every counter, histogram and subsystem stat into a typed
+    /// [`MetricsSnapshot`]. Everything `report()` prints is derived from
+    /// this snapshot, so the human line, the JSON export and the
+    /// Prometheus exposition can never disagree.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut reg = Registry::new();
+        reg.counter("requests_total", self.requests as u64);
+        reg.counter("tokens_out_total", self.tokens_out as u64);
+        reg.counter("batches_total", self.batches as u64);
+        reg.gauge("uptime_seconds", self.started.elapsed().as_secs_f64());
+        reg.gauge("tokens_per_sec", self.tokens_per_sec());
+        register_hist(&mut reg, "request_latency_ms", &self.latency);
+        register_hist(&mut reg, "queue_wait_ms", &self.queue_wait);
+        register_hist(&mut reg, "ttft_ms", &self.ttft);
+        register_hist(&mut reg, "seqs_per_step", &self.seqs_per_step);
+        reg.counter("sched_steps_total", self.sched_steps as u64);
+        reg.counter("prefill_chunks_total", self.prefill_chunks as u64);
+        reg.counter("prefill_tokens_total", self.prefill_tokens as u64);
+        reg.counter("preemptions_total", self.preemptions as u64);
+        reg.counter("resumes_total", self.resumes as u64);
+        reg.counter("rejections_total", self.rejections as u64);
         if let Some(d) = &self.decode {
-            out.push_str(&format!(
-                " decoded={:.2}MB peak_panel={}elems",
-                d.total_bytes() as f64 / 1e6,
-                d.peak_decoded
-            ));
+            reg.counter("decoded_bytes_total", d.total_bytes() as u64);
+            reg.counter("decode_code_bytes_total", d.code_bytes as u64);
+            reg.counter("decode_side_bytes_total", d.side_bytes as u64);
+            reg.counter("decode_act_bytes_total", d.act_bytes as u64);
+            reg.counter("decode_weights_total", d.weights_decoded as u64);
+            reg.counter("decode_macs_total", d.macs as u64);
+            reg.gauge("peak_panel_elems", d.peak_decoded as f64);
         }
         if let Some(c) = &self.kv_cache {
-            out.push_str(&format!(
-                " kv_pages={}(peak {}) kv_quantized={} kv_decoded={:.2}MB",
-                c.pages_in_use,
-                c.peak_pages,
-                c.pages_quantized,
-                c.decoded_bytes as f64 / 1e6
-            ));
+            reg.gauge("kv_pages_in_use", c.pages_in_use as f64);
+            reg.gauge("kv_peak_pages", c.peak_pages as f64);
+            reg.gauge("kv_hot_pages", c.hot_pages as f64);
+            reg.gauge("kv_bytes_in_use", c.bytes_in_use as f64);
+            reg.counter("kv_pages_quantized_total", c.pages_quantized as u64);
+            reg.counter("kv_appended_rows_total", c.appended_rows as u64);
+            reg.counter("kv_decoded_bytes_total", c.decoded_bytes as u64);
+            reg.counter("kv_quantized_payload_bytes_total", c.quantized_payload_bytes as u64);
+            reg.counter("kv_pages_spilled_total", c.pages_spilled as u64);
+            reg.counter("kv_pages_restored_total", c.pages_restored as u64);
         }
         if let Some(s) = &self.shards {
-            let decoded: usize = s.iter().map(|p| p.total_bytes).sum();
-            out.push_str(&format!(
-                " shards={} shard_imbalance={:.2}x shard_decoded={:.2}MB",
-                s.len(),
-                imbalance(s),
-                decoded as f64 / 1e6
-            ));
+            reg.gauge("shard_count", s.len() as f64);
+            reg.gauge("shard_imbalance", imbalance(s));
+            reg.counter(
+                "shard_decoded_bytes_total",
+                s.iter().map(|p| p.total_bytes).sum::<usize>() as u64,
+            );
+            reg.counter("shard_jobs_total", s.iter().map(|p| p.jobs).sum::<usize>() as u64);
+            reg.counter("shard_busy_ns_total", s.iter().map(|p| p.busy_ns).sum::<u64>());
         }
-        out
+        if !self.timelines.is_empty() {
+            let mut queue: Vec<f64> = Vec::with_capacity(self.timelines.len());
+            let mut prefill: Vec<f64> = Vec::with_capacity(self.timelines.len());
+            let mut decode: Vec<f64> = Vec::with_capacity(self.timelines.len());
+            let mut preempted = 0u64;
+            for t in &self.timelines {
+                let b = t.breakdown();
+                queue.push(b.queue_ns as f64 / 1e6);
+                prefill.push(b.prefill_ns as f64 / 1e6);
+                decode.push(b.decode_ns as f64 / 1e6);
+                if t.count(Mark::Preempt) > 0 {
+                    preempted += 1;
+                }
+            }
+            register_dist(&mut reg, "request_queue_ms", &mut queue);
+            register_dist(&mut reg, "request_prefill_ms", &mut prefill);
+            register_dist(&mut reg, "request_decode_ms", &mut decode);
+            reg.counter("timelines_recorded_total", self.timelines.len() as u64);
+            reg.counter("timelines_preempted_total", preempted);
+        }
+        reg.finish()
     }
+
+    /// One-line human summary — rendered from [`ServerMetrics::snapshot`]
+    /// via [`human_line`].
+    pub fn report(&self) -> String {
+        human_line(&self.snapshot())
+    }
+}
+
+/// Render the canonical one-line human report from a metrics snapshot.
+/// Section presence mirrors which subsystems registered: the scheduler
+/// section appears once steps ran, decode/KV/shard sections appear when
+/// those backends reported.
+pub fn human_line(snap: &MetricsSnapshot) -> String {
+    let mut out = format!(
+        "requests={} tokens={} batches={} tok/s={:.1} p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+        snap.counter("requests_total"),
+        snap.counter("tokens_out_total"),
+        snap.counter("batches_total"),
+        snap.gauge("tokens_per_sec"),
+        snap.quantile("request_latency_ms", 0.5),
+        snap.quantile("request_latency_ms", 0.95),
+        snap.quantile("request_latency_ms", 0.99),
+    );
+    if snap.summary_count("ttft_ms") > 0 {
+        out.push_str(&format!(
+            " ttft_p50={:.1}ms ttft_p95={:.1}ms queue_p50={:.1}ms",
+            snap.quantile("ttft_ms", 0.5),
+            snap.quantile("ttft_ms", 0.95),
+            snap.quantile("queue_wait_ms", 0.5),
+        ));
+    }
+    if snap.counter("sched_steps_total") > 0 {
+        out.push_str(&format!(
+            " steps={} seqs/step_p50={:.1} prefill_chunks={} preempt={} resume={} rejected={}",
+            snap.counter("sched_steps_total"),
+            snap.quantile("seqs_per_step", 0.5),
+            snap.counter("prefill_chunks_total"),
+            snap.counter("preemptions_total"),
+            snap.counter("resumes_total"),
+            snap.counter("rejections_total"),
+        ));
+    }
+    if snap.has("peak_panel_elems") {
+        out.push_str(&format!(
+            " decoded={:.2}MB peak_panel={}elems",
+            snap.counter("decoded_bytes_total") as f64 / 1e6,
+            snap.gauge("peak_panel_elems"),
+        ));
+    }
+    if snap.has("kv_pages_in_use") {
+        out.push_str(&format!(
+            " kv_pages={}(peak {}) kv_quantized={} kv_decoded={:.2}MB",
+            snap.gauge("kv_pages_in_use"),
+            snap.gauge("kv_peak_pages"),
+            snap.counter("kv_pages_quantized_total"),
+            snap.counter("kv_decoded_bytes_total") as f64 / 1e6,
+        ));
+    }
+    if snap.has("shard_count") {
+        out.push_str(&format!(
+            " shards={} shard_imbalance={:.2}x shard_decoded={:.2}MB",
+            snap.gauge("shard_count"),
+            snap.gauge("shard_imbalance"),
+            snap.counter("shard_decoded_bytes_total") as f64 / 1e6,
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -234,6 +380,41 @@ mod tests {
         let h = LatencyHist::new(8);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    #[test]
+    fn quantile_is_stable_across_repeated_calls() {
+        // recorded out of order, far beyond capacity, then interleaved reads
+        let mut h = LatencyHist::new(32);
+        for i in 0..500 {
+            h.record(((i * 7919) % 1000) as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        for _ in 0..10 {
+            assert_eq!(h.quantile(0.95), p95);
+            assert_eq!(h.quantile(0.5), p50);
+            assert_eq!(h.quantile(0.99), p99);
+        }
+        // the reservoir is genuinely sorted: quantiles are monotone in q
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn mean_is_exact_for_skewed_stream_beyond_capacity() {
+        // tiny reservoir, heavily skewed stream: 999 cheap requests and
+        // one catastrophic one. The reservoir almost certainly loses the
+        // outlier; the running sum must not.
+        let mut h = LatencyHist::new(8);
+        for _ in 0..999 {
+            h.record(1.0);
+        }
+        h.record(1001.0);
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 2.0).abs() < 1e-9, "mean={}", h.mean());
+        assert!((h.sum() - 2000.0).abs() < 1e-9);
     }
 
     #[test]
@@ -286,5 +467,72 @@ mod tests {
         assert!(r.contains("kv_pages=2(peak 5)"), "{r}");
         assert!(r.contains("kv_quantized=3"), "{r}");
         assert!(r.contains("kv_decoded=1.00MB"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_carries_every_report_counter() {
+        let mut m = ServerMetrics::default();
+        m.requests = 3;
+        m.tokens_out = 41;
+        m.batches = 2;
+        m.latency.record(10.0);
+        m.ttft.record(12.0);
+        m.queue_wait.record(1.5);
+        m.sched_steps = 7;
+        m.seqs_per_step.record(3.0);
+        m.prefill_chunks = 4;
+        m.prefill_tokens = 90;
+        m.preemptions = 2;
+        m.resumes = 2;
+        m.rejections = 1;
+        m.decode = Some(DecodeStats { code_bytes: 100, peak_decoded: 64, ..Default::default() });
+        m.kv_cache = Some(KvCacheStats { pages_in_use: 2, peak_pages: 5, ..Default::default() });
+        m.shards = Some(vec![ShardStat { busy_ns: 10, total_bytes: 50, ..Default::default() }]);
+        let mut t = RequestTimeline::new(0);
+        t.mark(Mark::Admit);
+        t.mark(Mark::FirstToken);
+        t.mark(Mark::Finish);
+        m.timelines.push(t);
+
+        let snap = m.snapshot();
+        // every counter the human line exposes is present in the snapshot
+        for name in [
+            "requests_total",
+            "tokens_out_total",
+            "batches_total",
+            "sched_steps_total",
+            "prefill_chunks_total",
+            "preemptions_total",
+            "resumes_total",
+            "rejections_total",
+            "decoded_bytes_total",
+            "kv_pages_quantized_total",
+            "kv_decoded_bytes_total",
+            "shard_decoded_bytes_total",
+            "timelines_recorded_total",
+        ] {
+            assert!(snap.has(name), "snapshot missing {name}");
+        }
+        for name in
+            ["tokens_per_sec", "peak_panel_elems", "kv_pages_in_use", "kv_peak_pages", "shard_count"]
+        {
+            assert!(snap.has(name), "snapshot missing gauge {name}");
+        }
+        for name in ["request_latency_ms", "ttft_ms", "queue_wait_ms", "seqs_per_step"] {
+            assert!(snap.has(name), "snapshot missing summary {name}");
+        }
+        assert_eq!(snap.counter("requests_total"), 3);
+        assert_eq!(snap.summary_count("ttft_ms"), 1);
+        assert!(snap.has("request_queue_ms"), "timeline attribution summary");
+        // the human line renders from the snapshot alone
+        let line = human_line(&snap);
+        assert!(line.starts_with("requests=3 tokens=41 batches=2"), "{line}");
+        assert!(line.contains("steps=7"), "{line}");
+        assert!(line.contains("kv_pages=2(peak 5)"), "{line}");
+        assert!(line.contains("shards=1"), "{line}");
+        // and both structured exports accept it
+        let json = snap.to_json();
+        assert_eq!(crate::util::json::Json::parse(&json.to_string()).unwrap(), json);
+        crate::obs::registry::validate_prometheus(&snap.to_prometheus()).unwrap();
     }
 }

@@ -35,6 +35,7 @@ use crate::eval::native_fwd::{self, DenseLinear, LinearOp, StreamedLinear};
 use crate::kvcache::{KvCacheOpts, KvCacheStats, PagedKvCache, SeqId, SpilledSeq};
 use crate::linalg::Mat;
 use crate::model::ModelConfig;
+use crate::obs::{Mark, RequestTimeline};
 use crate::quant::format::QuantizedModel;
 use crate::runtime::exec::LogitsExec;
 use crate::runtime::Engine;
@@ -696,6 +697,10 @@ struct Job {
     request: Request,
     reply: mpsc::Sender<Response>,
     submitted: Instant,
+    /// when present, the request's recorded [`RequestTimeline`] is sent
+    /// here just before the response — the observability side-channel of
+    /// [`ServerHandle::submit_timed`]
+    timeline_reply: Option<mpsc::Sender<RequestTimeline>>,
 }
 
 /// Handle used by clients to submit requests.
@@ -708,8 +713,35 @@ impl ServerHandle {
     /// Submit a request; returns the response receiver.
     pub fn submit(&self, request: Request) -> mpsc::Receiver<Response> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Job { request, reply, submitted: Instant::now() });
+        let _ = self.tx.send(Job {
+            request,
+            reply,
+            submitted: Instant::now(),
+            timeline_reply: None,
+        });
         rx
+    }
+
+    /// Submit a request and additionally receive its recorded
+    /// [`RequestTimeline`] — the submit → admit → prefill → first-token →
+    /// decode → finish lifecycle with queue/prefill/decode attribution
+    /// ([`crate::obs::Breakdown`]). The timeline is sent just before the
+    /// response, so once the response arrives the timeline receiver never
+    /// blocks. Requests rejected at admission in continuous mode get a
+    /// minimal timeline (submit → finish, all queue time, rid 0).
+    pub fn submit_timed(
+        &self,
+        request: Request,
+    ) -> (mpsc::Receiver<Response>, mpsc::Receiver<RequestTimeline>) {
+        let (reply, rx) = mpsc::channel();
+        let (ttx, trx) = mpsc::channel();
+        let _ = self.tx.send(Job {
+            request,
+            reply,
+            submitted: Instant::now(),
+            timeline_reply: Some(ttx),
+        });
+        (rx, trx)
     }
 
     /// Convenience: submit and wait.
@@ -751,6 +783,7 @@ where
     let join = std::thread::spawn(move || {
         let mut backend = make_backend().expect("backend construction failed");
         let mut metrics = ServerMetrics::default();
+        let mut next_rid: u64 = 0;
         loop {
             // block for the first job, then drain up to max_batch
             let first = match rx.recv() {
@@ -774,12 +807,38 @@ where
             // it came from, so nothing needs the prompt bytes cloned
             let requests: Vec<&Request> = batch.iter().map(|j| &j.request).collect();
             let submitted: Vec<Instant> = batch.iter().map(|j| j.submitted).collect();
-            let responses = handle_batch(&mut *backend, &requests, &submitted, &mut metrics);
-            for (job, response) in batch.into_iter().zip(responses) {
+            // lockstep has no admission control or chunked prefill, so its
+            // timelines carry only queue (submit → drain) vs in-batch time
+            let mut timelines: Vec<RequestTimeline> = batch
+                .iter()
+                .map(|job| {
+                    next_rid += 1;
+                    let base_ns = crate::obs::span::now_ns()
+                        .saturating_sub(job.submitted.elapsed().as_nanos() as u64);
+                    let mut t = RequestTimeline::with_base(next_rid, base_ns);
+                    t.mark(Mark::Admit);
+                    t
+                })
+                .collect();
+            let responses = {
+                let _sp = crate::span!("lockstep_batch");
+                handle_batch(&mut *backend, &requests, &submitted, &mut metrics)
+            };
+            for ((job, response), mut timeline) in
+                batch.into_iter().zip(responses).zip(timelines.drain(..))
+            {
                 metrics.requests += 1;
                 metrics
                     .latency
                     .record(job.submitted.elapsed().as_secs_f64() * 1e3);
+                timeline.mark(Mark::Finish);
+                if let Some(ttx) = job.timeline_reply {
+                    let _ = ttx.send(timeline.clone());
+                }
+                const MAX_TIMELINES: usize = 16_384;
+                if metrics.timelines.len() < MAX_TIMELINES {
+                    metrics.timelines.push(timeline);
+                }
                 let _ = job.reply.send(response);
             }
         }
@@ -815,13 +874,14 @@ where
         let backend = make_backend().expect("backend construction failed");
         let mut sched = ContinuousScheduler::new(backend, opts);
         let mut replies: BTreeMap<u64, mpsc::Sender<Response>> = BTreeMap::new();
+        let mut timeline_txs: BTreeMap<u64, mpsc::Sender<RequestTimeline>> = BTreeMap::new();
         let mut open = true;
         while open || sched.has_work() {
             // pull in everything that has arrived; block only when idle
             if sched.has_work() {
                 loop {
                     match rx.try_recv() {
-                        Ok(job) => submit_job(&mut sched, &mut replies, job),
+                        Ok(job) => submit_job(&mut sched, &mut replies, &mut timeline_txs, job),
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
                             open = false;
@@ -832,11 +892,18 @@ where
                 sched.step();
             } else {
                 match rx.recv() {
-                    Ok(job) => submit_job(&mut sched, &mut replies, job),
+                    Ok(job) => submit_job(&mut sched, &mut replies, &mut timeline_txs, job),
                     Err(_) => open = false,
                 }
             }
             for (rid, response) in sched.drain_finished() {
+                // timeline first: once the response arrives at a
+                // submit_timed caller, the timeline is already queued
+                if let Some(ttx) = timeline_txs.remove(&rid) {
+                    if let Some(t) = sched.timeline_for(rid) {
+                        let _ = ttx.send(t);
+                    }
+                }
                 if let Some(reply) = replies.remove(&rid) {
                     let _ = reply.send(response);
                 }
@@ -852,13 +919,26 @@ where
 fn submit_job(
     sched: &mut ContinuousScheduler<CachedNativeBackend>,
     replies: &mut BTreeMap<u64, mpsc::Sender<Response>>,
+    timeline_txs: &mut BTreeMap<u64, mpsc::Sender<RequestTimeline>>,
     job: Job,
 ) {
     match sched.submit(job.request, job.submitted) {
         Ok(rid) => {
             replies.insert(rid, job.reply);
+            if let Some(ttx) = job.timeline_reply {
+                timeline_txs.insert(rid, ttx);
+            }
         }
         Err(bp) => {
+            if let Some(ttx) = job.timeline_reply {
+                // refused before admission: the whole lifetime is queue
+                // time and the request never got a scheduler id
+                let base_ns = crate::obs::span::now_ns()
+                    .saturating_sub(job.submitted.elapsed().as_nanos() as u64);
+                let mut t = RequestTimeline::with_base(0, base_ns);
+                t.mark(Mark::Finish);
+                let _ = ttx.send(t);
+            }
             let _ = job.reply.send(Response::Rejected { reason: bp.to_string() });
         }
     }
@@ -1389,6 +1469,58 @@ mod tests {
         }
         let metrics = handle.shutdown();
         assert_eq!(metrics.requests, 1, "rejected requests never reach the model");
+    }
+
+    #[test]
+    fn timed_submission_returns_continuous_timeline() {
+        let cfg = tiny_cfg();
+        let kv = KvCacheOpts { page_rows: 4, ..Default::default() };
+        let handle = start_continuous(
+            move || Ok(CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv)),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let (rx, trx) =
+            handle.submit_timed(Request::Generate { prompt: b"the kama ".to_vec(), max_new: 4 });
+        match rx.recv().unwrap() {
+            Response::Generated { text } => assert_eq!(text.len(), 4),
+            other => panic!("unexpected {other:?}"),
+        }
+        let t = trx.recv().unwrap();
+        assert_eq!(t.count(Mark::Finish), 1);
+        assert_eq!(t.count(Mark::Admit), 1);
+        assert!(t.count(Mark::DecodeStep) >= 1);
+        let b = t.breakdown();
+        assert_eq!(b.queue_ns + b.prefill_ns + b.decode_ns, b.total_ns);
+
+        // an admission-refused request still answers the timeline channel
+        let (rx, trx) =
+            handle.submit_timed(Request::Generate { prompt: vec![b'x'; 30], max_new: 10 });
+        match rx.recv().unwrap() {
+            Response::Rejected { .. } => {}
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        let t = trx.recv().unwrap();
+        assert_eq!(t.count(Mark::Admit), 0, "never admitted");
+        assert_eq!(t.count(Mark::Finish), 1);
+
+        let metrics = handle.shutdown();
+        assert!(!metrics.timelines.is_empty(), "shutdown metrics retain timelines");
+    }
+
+    #[test]
+    fn timed_submission_returns_lockstep_timeline() {
+        let handle = start(tiny_backend, ServerOpts::default());
+        let (rx, trx) =
+            handle.submit_timed(Request::Generate { prompt: b"abc".to_vec(), max_new: 2 });
+        match rx.recv().unwrap() {
+            Response::Generated { text } => assert_eq!(text.len(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        let t = trx.recv().unwrap();
+        assert_eq!(t.count(Mark::Admit), 1);
+        assert_eq!(t.count(Mark::Finish), 1);
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.timelines.len(), 1);
     }
 
     #[test]

@@ -91,6 +91,7 @@ impl CodeHistogram {
 
     /// Expand to the 4096-entry slot → symbol decode table.
     pub fn decode_table(&self) -> DecodeTable {
+        let _sp = crate::span!("rans_table_expand");
         let starts = self.starts();
         let mut slots = vec![0u16; PROB_SCALE as usize];
         for (sym, (&st, &f)) in starts.iter().zip(&self.freqs).enumerate() {

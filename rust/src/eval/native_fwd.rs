@@ -355,6 +355,7 @@ pub fn forward_ragged(
     seqs: &[SeqId],
     tokens: &[&[i32]],
 ) -> Result<Mat> {
+    let _sp = crate::span!("forward_ragged");
     let batch = seqs.len();
     anyhow::ensure!(batch > 0, "empty ragged batch");
     anyhow::ensure!(tokens.len() == batch, "one token slice per sequence");

@@ -392,6 +392,7 @@ impl PagedKvCache {
     /// (`quantize = true`, quantize-to-spill — smaller parked footprint at
     /// the documented KV reconstruction tolerance).
     pub fn spill(&mut self, seq: SeqId, quantize: bool) -> Result<SpilledSeq> {
+        let _sp = crate::span!("kv_spill");
         let slot = match self.seqs.get_mut(seq.0).and_then(|s| s.take()) {
             Some(slot) => slot,
             None => bail!("spill of unknown kv sequence {seq:?}"),
@@ -446,6 +447,7 @@ impl PagedKvCache {
     /// state (it is the sequence's only copy).
     #[allow(clippy::result_large_err)]
     pub fn restore(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq> {
+        let _sp = crate::span!("kv_restore");
         if let Some(free) = self.free_pages() {
             if sp.pages > free {
                 return Err(sp);

@@ -38,6 +38,7 @@ impl KvQuantizer {
     /// [`QuantizedGroup`] whose `dequantize` reproduces the page within
     /// the lattice step (bounds pinned by the tests below).
     pub fn quantize_page(&self, data: &[f32], rows: usize, width: usize) -> QuantizedGroup {
+        let _sp = crate::span!("kv_quantize_page");
         assert_eq!(data.len(), rows * width, "page shape mismatch");
         let bits = self.bits.clamp(1, 8);
         let d = if width % self.lattice_dim == 0 { self.lattice_dim } else { 1 };

@@ -31,6 +31,7 @@
 //! (the byte-level `.glvq` container specification).
 
 pub mod util;
+pub mod obs;
 pub mod linalg;
 pub mod tensor;
 pub mod lattice;

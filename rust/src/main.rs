@@ -84,7 +84,8 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
             [--shards N] [--threads N] [--panel-rows R] [--kv-cache]
             [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--continuous]
             [--max-batch B] [--prefill-chunk C] [--max-tokens-in-flight T]
-            [--max-queue Q] (reads 'gen <prompt>' lines)
+            [--max-queue Q] [--metrics-out FILE] [--trace-out FILE]
+            (reads 'gen <prompt>' lines)
   exp       table1..table13 | all  [--dir runs]
   info      [--artifacts DIR] [--container FILE.glvq]
 
@@ -126,6 +127,14 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   --prefill-chunk      prompt tokens fed per scheduler step (default 32)
   --max-tokens-in-flight  token budget over admitted requests (default 4096)
   --max-queue  bounded admission-queue depth (default 256)
+  --metrics-out  at shutdown, write the final metrics snapshot as
+               Prometheus text exposition to FILE (counters, gauges and
+               latency summaries — everything the report line shows)
+  --trace-out  enable span tracing for the whole run and write a Chrome
+               trace-event JSON to FILE at shutdown (load in Perfetto /
+               chrome://tracing): per-thread span bars for scheduler
+               phases, panel decodes, shard workers and KV operations,
+               plus one virtual track per request timeline
   --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
 
 fn main() -> Result<()> {
@@ -219,6 +228,13 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let model = args.get("model", "s");
+            let trace_out = args.flags.get("trace-out").cloned();
+            let metrics_out = args.flags.get("metrics-out").cloned();
+            if trace_out.is_some() {
+                // must be on before the worker thread spawns so every span
+                // from the first request onwards is captured
+                glvq::obs::span::set_enabled(true);
+            }
             let mut ws = Workspace::new(&artifacts, &dir)?;
             let streaming = args.flags.get("streaming").is_some_and(|v| v != "false");
             let shards = args.get_usize("shards", 0);
@@ -449,6 +465,17 @@ fn main() -> Result<()> {
             }
             let metrics = handle.shutdown();
             info!("{}", metrics.report());
+            if let Some(path) = metrics_out {
+                std::fs::write(&path, metrics.snapshot().to_prometheus())?;
+                info!("wrote metrics snapshot to {path}");
+            }
+            if let Some(path) = trace_out {
+                glvq::obs::span::set_enabled(false);
+                let spans = glvq::obs::span::drain();
+                let trace = glvq::obs::chrome_trace_json(&spans, &metrics.timelines);
+                std::fs::write(&path, trace.to_string())?;
+                info!("wrote {} spans + {} request timelines to {path}", spans.len(), metrics.timelines.len());
+            }
         }
         "exp" => {
             let id = args

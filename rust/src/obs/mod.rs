@@ -1,0 +1,92 @@
+//! Unified telemetry: span tracing, metrics registry, per-request
+//! timelines.
+//!
+//! Three pillars, one subsystem (ARCHITECTURE.md §Observability):
+//!
+//! - [`span`] — RAII tracing spans over per-thread stacks. Instrumented
+//!   through the stack: continuous-scheduler step phases
+//!   (`serving::scheduler`), streaming panel decode and rANS table builds
+//!   (`coordinator::decode_stream`, `entropy::stream`), shard worker jobs
+//!   (`shard::exec`), KV-cache quantize/spill/restore (`kvcache::paged`),
+//!   and the model forward (`eval::native_fwd`). Disabled tracing costs
+//!   one atomic load per site.
+//! - [`registry`] — typed counters/gauges/summaries frozen into a
+//!   [`MetricsSnapshot`] that renders as the human `report()` line,
+//!   structured JSON, or Prometheus text — all from the same data.
+//! - [`timeline`] — per-request lifecycle stamps giving TTFT attribution
+//!   (queue vs prefill vs decode) per request, not just in aggregate.
+//!
+//! [`chrome_trace_json`] fuses drained spans and request timelines into
+//! one Chrome trace-event document (load in `chrome://tracing` or
+//! Perfetto); `glvq serve --trace-out` and the serving bench write it.
+
+pub mod registry;
+pub mod span;
+pub mod timeline;
+
+pub use registry::{MetricValue, MetricsSnapshot, Registry};
+pub use span::{FinishedSpan, SpanGuard, StageStat};
+pub use timeline::{Breakdown, Mark, RequestTimeline};
+
+use crate::util::json::Json;
+
+/// Open a tracing span; the span closes when the returned guard drops.
+///
+/// ```
+/// fn stage() {
+///     let _sp = glvq::span!("stage");
+///     // ... traced work ...
+/// }
+/// ```
+///
+/// Bind the guard to a named `_`-prefixed variable — a bare `let _ =`
+/// would drop it immediately. When tracing is disabled
+/// ([`obs::span::set_enabled`](span::set_enabled)) the cost is one atomic
+/// load.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::span::guard($name)
+    };
+}
+
+/// Assemble a complete Chrome trace-event JSON document from drained
+/// spans and per-request timelines. Spans appear under their recording
+/// thread's track; each request gets a named virtual track.
+pub fn chrome_trace_json(spans: &[FinishedSpan], timelines: &[RequestTimeline]) -> Json {
+    let mut events: Vec<Json> = spans.iter().map(span::trace_event).collect();
+    events.extend(timeline::trace_events(timelines));
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_trace_document_shape() {
+        let spans = vec![FinishedSpan {
+            name: "stage",
+            tid: 1,
+            start_ns: 1_000,
+            dur_ns: 5_000,
+            self_ns: 5_000,
+            depth: 0,
+        }];
+        let mut tl = RequestTimeline::new(3);
+        tl.mark(Mark::Finish);
+        let doc = chrome_trace_json(&spans, &[tl]);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed, doc);
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        assert!(events.len() >= 2);
+        let first = &events[0];
+        assert_eq!(first.get("ph").as_str(), Some("X"));
+        assert_eq!(first.get("name").as_str(), Some("stage"));
+        assert_eq!(first.get("ts").as_f64(), Some(1.0));
+        assert_eq!(first.get("dur").as_f64(), Some(5.0));
+    }
+}

@@ -1,0 +1,324 @@
+//! Typed metrics registry and its snapshot/export formats.
+//!
+//! Subsystems (server backends, the continuous scheduler, the KV cache,
+//! shard workers) register named counters, gauges and summaries into a
+//! [`Registry`]; `finish()` freezes it into a [`MetricsSnapshot`] that
+//! exports three ways:
+//!
+//! - [`MetricsSnapshot::to_json`] — structured JSON through
+//!   [`crate::util::json`], merged into bench trajectories so serving runs
+//!   and benches share one schema (see FORMAT.md §metrics JSON);
+//! - [`MetricsSnapshot::to_prometheus`] — Prometheus text exposition
+//!   (`# TYPE` + samples, summaries with `quantile` labels and
+//!   `_sum`/`_count`), written by `glvq serve --metrics-out`;
+//! - the human one-line `report()` string, rendered by
+//!   `coordinator::metrics::ServerMetrics` from the same snapshot so all
+//!   three views can never disagree.
+//!
+//! Names are snake_case and already Prometheus-safe; the text exposition
+//! prefixes them with `glvq_`. Registration order is preserved in every
+//! export.
+
+use crate::util::json::Json;
+
+/// A single metric observation frozen into a snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// monotonically accumulated count (events, tokens, bytes)
+    Counter(u64),
+    /// instantaneous level (occupancy, ratios, rates)
+    Gauge(f64),
+    /// distribution digest: selected quantiles plus stream sum and count
+    Summary { quantiles: Vec<(f64, f64)>, sum: f64, count: u64 },
+}
+
+/// Builder: subsystems push named metrics, `finish()` yields the snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.entries.push((name.to_string(), MetricValue::Counter(value)));
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.entries.push((name.to_string(), MetricValue::Gauge(value)));
+    }
+
+    /// Register a distribution summary. `quantiles` are `(q, value)` pairs
+    /// with `q` in [0, 1]; `sum`/`count` describe the full stream.
+    pub fn summary(&mut self, name: &str, quantiles: Vec<(f64, f64)>, sum: f64, count: u64) {
+        self.entries.push((name.to_string(), MetricValue::Summary { quantiles, sum, count }));
+    }
+
+    pub fn finish(self) -> MetricsSnapshot {
+        MetricsSnapshot { entries: self.entries }
+    }
+}
+
+/// Immutable point-in-time view of every registered metric.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    entries: Vec<(String, MetricValue)>,
+}
+
+/// Render an f64 the way `util::json` does: integral values without a
+/// decimal point. Keeps Prometheus samples and JSON numerals consistent.
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn entries(&self) -> &[(String, MetricValue)] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+
+    /// Counter value, 0 when absent or a different type.
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.get(name) {
+            Some(MetricValue::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Gauge value, 0.0 when absent or a different type.
+    pub fn gauge(&self, name: &str) -> f64 {
+        match self.get(name) {
+            Some(MetricValue::Gauge(g)) => *g,
+            _ => 0.0,
+        }
+    }
+
+    /// Value of the summary quantile nearest `q` (0.0 when absent).
+    pub fn quantile(&self, name: &str, q: f64) -> f64 {
+        match self.get(name) {
+            Some(MetricValue::Summary { quantiles, .. }) if !quantiles.is_empty() => {
+                let mut best = quantiles[0];
+                for &(qq, v) in quantiles {
+                    if (qq - q).abs() < (best.0 - q).abs() {
+                        best = (qq, v);
+                    }
+                }
+                best.1
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Stream count of a summary (0 when absent).
+    pub fn summary_count(&self, name: &str) -> u64 {
+        match self.get(name) {
+            Some(MetricValue::Summary { count, .. }) => *count,
+            _ => 0,
+        }
+    }
+
+    /// Stream sum of a summary (0.0 when absent).
+    pub fn summary_sum(&self, name: &str) -> f64 {
+        match self.get(name) {
+            Some(MetricValue::Summary { sum, .. }) => *sum,
+            _ => 0.0,
+        }
+    }
+
+    /// Structured JSON export: counters and gauges as numbers, summaries
+    /// as `{count, sum, q50, q95, ...}` objects. Key order is the
+    /// serializer's (sorted); registration order is not part of the schema.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj(vec![]);
+        for (name, v) in &self.entries {
+            let jv = match v {
+                MetricValue::Counter(c) => Json::num(*c as f64),
+                MetricValue::Gauge(g) => Json::num(*g),
+                MetricValue::Summary { quantiles, sum, count } => {
+                    let mut o = Json::obj(vec![
+                        ("count", Json::num(*count as f64)),
+                        ("sum", Json::num(*sum)),
+                    ]);
+                    for (q, qv) in quantiles {
+                        o.set(&format!("q{}", fmt_f64(q * 100.0)), Json::num(*qv));
+                    }
+                    o
+                }
+            };
+            root.set(name, jv);
+        }
+        root
+    }
+
+    /// Prometheus text exposition: one `# TYPE` line per metric followed
+    /// by its samples; summaries expand to `quantile`-labelled samples
+    /// plus `_sum` and `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.entries {
+            let n = format!("glvq_{name}");
+            match v {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", fmt_f64(*g)));
+                }
+                MetricValue::Summary { quantiles, sum, count } => {
+                    out.push_str(&format!("# TYPE {n} summary\n"));
+                    for (q, qv) in quantiles {
+                        out.push_str(&format!(
+                            "{n}{{quantile=\"{}\"}} {}\n",
+                            fmt_f64(*q),
+                            fmt_f64(*qv)
+                        ));
+                    }
+                    out.push_str(&format!("{n}_sum {}\n{n}_count {count}\n", fmt_f64(*sum)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Structural check of a Prometheus text exposition: every `# TYPE` line
+/// names a valid type, every sample line parses as `name[{labels}] value`,
+/// and every sample belongs to a declared metric family (allowing the
+/// summary `_sum`/`_count` suffixes). Used by the export golden tests and
+/// the CI artifact check.
+pub fn validate_prometheus(text: &str) -> Result<(), String> {
+    use std::collections::BTreeSet;
+    let mut declared: BTreeSet<String> = BTreeSet::new();
+    for (i, line) in text.lines().enumerate() {
+        let err = |msg: &str| Err(format!("line {}: {msg}: {line:?}", i + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.first() == Some(&"TYPE") {
+                if parts.len() != 3 {
+                    return err("malformed # TYPE line");
+                }
+                let ok =
+                    matches!(parts[2], "counter" | "gauge" | "summary" | "histogram" | "untyped");
+                if !ok {
+                    return err("unknown metric type");
+                }
+                declared.insert(parts[1].to_string());
+            }
+            continue; // other comments (# HELP ...) are fine
+        }
+        let (name_part, value_part) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return err("sample line missing value"),
+        };
+        if value_part.parse::<f64>().is_err() {
+            return err("sample value is not a number");
+        }
+        let base = match name_part.split_once('{') {
+            Some((b, labels)) => {
+                if !labels.ends_with('}') {
+                    return err("unterminated label set");
+                }
+                b
+            }
+            None => name_part,
+        };
+        if base.is_empty()
+            || !base
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || base.chars().next().unwrap().is_ascii_digit()
+        {
+            return err("invalid metric name");
+        }
+        let family = base
+            .strip_suffix("_sum")
+            .filter(|f| declared.contains(*f))
+            .or_else(|| base.strip_suffix("_count").filter(|f| declared.contains(*f)))
+            .unwrap_or(base);
+        if !declared.contains(family) {
+            return err("sample without a preceding # TYPE declaration");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsSnapshot {
+        let mut r = Registry::new();
+        r.counter("requests_total", 7);
+        r.gauge("tokens_per_sec", 123.5);
+        r.summary(
+            "request_latency_ms",
+            vec![(0.5, 12.0), (0.95, 20.25), (0.99, 31.0)],
+            140.5,
+            7,
+        );
+        r.finish()
+    }
+
+    #[test]
+    fn lookups_by_name_and_type() {
+        let s = sample();
+        assert_eq!(s.counter("requests_total"), 7);
+        assert_eq!(s.gauge("tokens_per_sec"), 123.5);
+        assert_eq!(s.quantile("request_latency_ms", 0.95), 20.25);
+        assert_eq!(s.summary_count("request_latency_ms"), 7);
+        assert_eq!(s.summary_sum("request_latency_ms"), 140.5);
+        assert_eq!(s.counter("missing"), 0);
+        assert!(!s.has("missing"));
+        assert_eq!(s.entries().len(), 3);
+    }
+
+    #[test]
+    fn json_export_round_trips_through_util_json() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.get("requests_total").as_f64(), Some(7.0));
+        assert_eq!(
+            parsed.get("request_latency_ms").get("q95").as_f64(),
+            Some(20.25)
+        );
+        assert_eq!(parsed.get("request_latency_ms").get("count").as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn prometheus_export_is_well_formed() {
+        let text = sample().to_prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("# TYPE glvq_requests_total counter\n"));
+        assert!(text.contains("glvq_requests_total 7\n"));
+        assert!(text.contains("# TYPE glvq_request_latency_ms summary\n"));
+        assert!(text.contains("glvq_request_latency_ms{quantile=\"0.5\"} 12\n"));
+        assert!(text.contains("glvq_request_latency_ms_sum 140.5\n"));
+        assert!(text.contains("glvq_request_latency_ms_count 7\n"));
+    }
+
+    #[test]
+    fn prometheus_validator_rejects_malformed_text() {
+        assert!(validate_prometheus("# TYPE glvq_x banana\nglvq_x 1\n").is_err());
+        assert!(validate_prometheus("glvq_unregistered 1\n").is_err());
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x notanumber\n").is_err());
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x\n").is_err());
+    }
+}

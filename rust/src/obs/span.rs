@@ -1,0 +1,393 @@
+//! Allocation-frugal RAII span tracing.
+//!
+//! A span is opened with the [`crate::span!`] macro and closed when the
+//! returned guard drops. Spans nest through a per-thread frame stack, so a
+//! guard must be dropped in LIFO order on the thread that opened it (the
+//! natural behaviour of `let _g = crate::span!("stage");` scoping). Each
+//! finished span records wall duration *and* self time (duration minus the
+//! time spent inside child spans), which is what makes the aggregate
+//! attribution in [`summarize`] meaningful: a parent whose children cover
+//! its interval has near-zero self time.
+//!
+//! Cost discipline:
+//!
+//! - Tracing is off by default. A disabled `crate::span!` is one relaxed
+//!   atomic load returning an inert guard — cheap enough to leave in the
+//!   scheduler's per-step hot path (the serving bench asserts this).
+//! - An enabled span does no heap allocation on open (the frame stack
+//!   reuses its backing storage) and one `Vec` push on close into a buffer
+//!   owned by the recording thread.
+//!
+//! Buffers from every thread — including worker threads that have since
+//! exited — are collected by [`drain`], which returns the finished spans
+//! ordered per thread. Timestamps are nanoseconds since a process-global
+//! monotonic epoch shared with [`crate::obs::timeline`], so scheduler
+//! spans and per-request timelines land on one common time axis in the
+//! Chrome trace export ([`crate::obs::chrome_trace_json`]).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on or off process-wide. Guards opened while
+/// disabled stay inert even if recording is enabled before they drop.
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the epoch before the first span so timestamps stay small.
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span recording currently enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-global monotonic trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One closed span, as recorded by a dropped guard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FinishedSpan {
+    /// static stage label passed to `crate::span!`
+    pub name: &'static str,
+    /// recording thread (small dense ids assigned per thread, not OS tids)
+    pub tid: u64,
+    /// open timestamp, ns since the trace epoch
+    pub start_ns: u64,
+    /// wall duration, ns
+    pub dur_ns: u64,
+    /// duration minus time covered by child spans, ns
+    pub self_ns: u64,
+    /// nesting depth at open time (0 = top level on its thread)
+    pub depth: u32,
+}
+
+struct Frame {
+    name: &'static str,
+    start_ns: u64,
+    child_ns: u64,
+}
+
+#[derive(Default)]
+struct ThreadBuf {
+    spans: Mutex<Vec<FinishedSpan>>,
+}
+
+fn buf_registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct ThreadState {
+    tid: u64,
+    stack: Vec<Frame>,
+    buf: Arc<ThreadBuf>,
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TLS: RefCell<Option<ThreadState>> = const { RefCell::new(None) };
+}
+
+fn with_state<R>(f: impl FnOnce(&mut ThreadState) -> R) -> R {
+    TLS.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let st = slot.get_or_insert_with(|| {
+            let buf = Arc::new(ThreadBuf::default());
+            buf_registry().lock().unwrap().push(buf.clone());
+            ThreadState {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                stack: Vec::with_capacity(8),
+                buf,
+            }
+        });
+        f(st)
+    })
+}
+
+/// RAII guard returned by [`guard`] / the `crate::span!` macro. Closes the
+/// span on drop. Must drop on the opening thread, in LIFO order.
+pub struct SpanGuard {
+    active: bool,
+}
+
+/// Open a span named `name`. Prefer the `crate::span!` macro at call
+/// sites. When tracing is disabled this is one atomic load.
+#[inline]
+pub fn guard(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: false };
+    }
+    let start_ns = now_ns();
+    with_state(|st| st.stack.push(Frame { name, start_ns, child_ns: 0 }));
+    SpanGuard { active: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end_ns = now_ns();
+        with_state(|st| {
+            let Some(f) = st.stack.pop() else { return };
+            let dur_ns = end_ns.saturating_sub(f.start_ns);
+            let self_ns = dur_ns.saturating_sub(f.child_ns);
+            if let Some(parent) = st.stack.last_mut() {
+                parent.child_ns += dur_ns;
+            }
+            let span = FinishedSpan {
+                name: f.name,
+                tid: st.tid,
+                start_ns: f.start_ns,
+                dur_ns,
+                self_ns,
+                depth: st.stack.len() as u32,
+            };
+            st.buf.spans.lock().unwrap().push(span);
+        });
+    }
+}
+
+/// Take every finished span recorded so far, across all threads (live and
+/// exited), sorted by `(tid, start_ns)` with parents before their
+/// children. Buffers of exited threads are released.
+pub fn drain() -> Vec<FinishedSpan> {
+    let mut out = Vec::new();
+    {
+        let mut reg = buf_registry().lock().unwrap();
+        reg.retain(|buf| {
+            out.append(&mut buf.spans.lock().unwrap());
+            // strong_count 1 means the owning thread's TLS is gone
+            Arc::strong_count(buf) > 1
+        });
+    }
+    out.sort_by_key(|s| (s.tid, s.start_ns, std::cmp::Reverse(s.dur_ns)));
+    out
+}
+
+/// Per-stage aggregate over a set of finished spans.
+#[derive(Clone, Debug)]
+pub struct StageStat {
+    pub name: &'static str,
+    pub count: usize,
+    pub total_ms: f64,
+    pub self_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Aggregate spans by stage name: count, total, self time and duration
+/// quantiles, sorted by descending total time.
+pub fn summarize(spans: &[FinishedSpan]) -> Vec<StageStat> {
+    use std::collections::BTreeMap;
+    let mut by_name: BTreeMap<&'static str, Vec<u64>> = BTreeMap::new();
+    let mut self_by_name: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for s in spans {
+        by_name.entry(s.name).or_default().push(s.dur_ns);
+        *self_by_name.entry(s.name).or_default() += s.self_ns;
+    }
+    let mut out = Vec::with_capacity(by_name.len());
+    for (name, mut durs) in by_name {
+        durs.sort_unstable();
+        let q = |q: f64| durs[(q * (durs.len() - 1) as f64).round() as usize] as f64 / 1e6;
+        out.push(StageStat {
+            name,
+            count: durs.len(),
+            total_ms: durs.iter().sum::<u64>() as f64 / 1e6,
+            self_ms: self_by_name[name] as f64 / 1e6,
+            p50_ms: q(0.5),
+            p95_ms: q(0.95),
+        });
+    }
+    out.sort_by(|a, b| b.total_ms.partial_cmp(&a.total_ms).unwrap());
+    out
+}
+
+/// Render stage aggregates as an aligned text table (one line per stage).
+pub fn render_summary(stats: &[StageStat]) -> String {
+    let mut out = String::from(
+        "stage                       count   total_ms    self_ms     p50_ms     p95_ms\n",
+    );
+    for s in stats {
+        out.push_str(&format!(
+            "{:<26} {:>6} {:>10.2} {:>10.2} {:>10.3} {:>10.3}\n",
+            s.name, s.count, s.total_ms, s.self_ms, s.p50_ms, s.p95_ms
+        ));
+    }
+    out
+}
+
+/// One Chrome trace-event (`ph:"X"` complete event) for a finished span.
+pub fn trace_event(s: &FinishedSpan) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(s.name)),
+        ("cat", Json::str("glvq")),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(s.tid as f64)),
+        ("ts", Json::num(s.start_ns as f64 / 1e3)),
+        ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+        (
+            "args",
+            Json::obj(vec![
+                ("self_us", Json::num(s.self_ns as f64 / 1e3)),
+                ("depth", Json::num(s.depth as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Check that spans form a proper forest per thread: on each thread,
+/// every span is either disjoint from or fully contained in an earlier
+/// still-open span, and its recorded depth matches the nesting level.
+/// Input must be `drain()`-ordered. Used by the export golden tests.
+pub fn validate_nesting(spans: &[FinishedSpan]) -> Result<(), String> {
+    // (tid, end_ns) stack of currently-open ancestors
+    let mut open: Vec<(u64, u64)> = Vec::new();
+    for s in spans {
+        let end = s.start_ns + s.dur_ns;
+        while let Some(&(tid, anc_end)) = open.last() {
+            if tid != s.tid || s.start_ns >= anc_end {
+                open.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(_, anc_end)) = open.last() {
+            if end > anc_end {
+                return Err(format!(
+                    "span {} [{}, {}) overlaps ancestor ending at {}",
+                    s.name, s.start_ns, end, anc_end
+                ));
+            }
+        }
+        if s.depth as usize != open.len() {
+            return Err(format!(
+                "span {} recorded depth {} but has {} open ancestors",
+                s.name,
+                s.depth,
+                open.len()
+            ));
+        }
+        if s.self_ns > s.dur_ns {
+            return Err(format!("span {} self_ns exceeds dur_ns", s.name));
+        }
+        open.push((s.tid, end));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Spans and drain() are process-global; serialize the tests that
+    // enable recording so one test's drain cannot swallow another's spans.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn spin_ns(ns: u64) {
+        let t0 = now_ns();
+        while now_ns() - t0 < ns {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn disabled_guard_records_nothing() {
+        let _l = test_lock();
+        set_enabled(false);
+        {
+            let _g = crate::span!("never");
+        }
+        assert!(!drain().iter().any(|s| s.name == "never"));
+    }
+
+    #[test]
+    fn nesting_and_self_time_attribution() {
+        let _l = test_lock();
+        set_enabled(true);
+        {
+            let _p = crate::span!("span_test_parent");
+            spin_ns(200_000);
+            {
+                let _c = crate::span!("span_test_child");
+                spin_ns(200_000);
+            }
+        }
+        set_enabled(false);
+        let spans = drain();
+        let parent = spans.iter().find(|s| s.name == "span_test_parent").unwrap();
+        let child = spans.iter().find(|s| s.name == "span_test_child").unwrap();
+        assert_eq!(parent.tid, child.tid);
+        assert!(child.start_ns >= parent.start_ns);
+        assert!(child.start_ns + child.dur_ns <= parent.start_ns + parent.dur_ns);
+        assert_eq!(child.depth, parent.depth + 1);
+        // parent self time excludes the child's interval
+        assert_eq!(parent.self_ns, parent.dur_ns - child.dur_ns);
+        assert!(parent.self_ns >= 150_000, "self_ns={}", parent.self_ns);
+    }
+
+    #[test]
+    fn drain_collects_spans_from_exited_threads() {
+        let _l = test_lock();
+        set_enabled(true);
+        std::thread::spawn(|| {
+            let _g = crate::span!("span_test_worker");
+        })
+        .join()
+        .unwrap();
+        set_enabled(false);
+        let spans = drain();
+        assert!(spans.iter().any(|s| s.name == "span_test_worker"));
+    }
+
+    #[test]
+    fn summarize_counts_and_totals() {
+        let spans = vec![
+            FinishedSpan { name: "a", tid: 1, start_ns: 0, dur_ns: 10, self_ns: 4, depth: 0 },
+            FinishedSpan { name: "b", tid: 1, start_ns: 2, dur_ns: 6, self_ns: 6, depth: 1 },
+            FinishedSpan { name: "a", tid: 2, start_ns: 0, dur_ns: 30, self_ns: 30, depth: 0 },
+        ];
+        let stats = summarize(&spans);
+        let a = stats.iter().find(|s| s.name == "a").unwrap();
+        assert_eq!(a.count, 2);
+        assert!((a.total_ms - 40e-6).abs() < 1e-12);
+        assert!((a.self_ms - 34e-6).abs() < 1e-12);
+        assert!(!render_summary(&stats).is_empty());
+    }
+
+    #[test]
+    fn validate_nesting_rejects_overlap() {
+        let bad = vec![
+            FinishedSpan { name: "a", tid: 1, start_ns: 0, dur_ns: 10, self_ns: 10, depth: 0 },
+            FinishedSpan { name: "b", tid: 1, start_ns: 5, dur_ns: 10, self_ns: 10, depth: 1 },
+        ];
+        assert!(validate_nesting(&bad).is_err());
+        let good = vec![
+            FinishedSpan { name: "a", tid: 1, start_ns: 0, dur_ns: 10, self_ns: 4, depth: 0 },
+            FinishedSpan { name: "b", tid: 1, start_ns: 2, dur_ns: 6, self_ns: 6, depth: 1 },
+            FinishedSpan { name: "c", tid: 2, start_ns: 1, dur_ns: 3, self_ns: 3, depth: 0 },
+        ];
+        assert!(validate_nesting(&good).is_ok());
+    }
+}

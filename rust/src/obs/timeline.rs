@@ -1,0 +1,335 @@
+//! Per-request timelines: submit → admit → prefill → first token →
+//! decode steps → preempt/resume → finish.
+//!
+//! The continuous scheduler stamps one [`RequestTimeline`] per request at
+//! each lifecycle transition. Timestamps are nanoseconds relative to the
+//! request's own submit instant, with the submit instant itself anchored
+//! on the process-global trace epoch ([`crate::obs::span::now_ns`]) — so
+//! timelines compose with scheduler spans on one time axis in the Chrome
+//! trace export, each request rendered as its own virtual track.
+//!
+//! [`RequestTimeline::breakdown`] splits time-to-first-token into its
+//! queue / prefill components (and the remainder into decode), which is
+//! what turns a single opaque TTFT histogram into an attribution: *where*
+//! did the p95 request wait?
+
+use crate::obs::span::now_ns;
+use crate::util::json::Json;
+
+/// Lifecycle transition stamped into a timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mark {
+    /// request entered the scheduler queue (always at offset 0)
+    Submit,
+    /// admission control moved it into the running set
+    Admit,
+    /// one chunk of prompt prefill was fed
+    PrefillChunk,
+    /// first output token emitted / first score chunk accumulated
+    FirstToken,
+    /// one decode step advanced this request
+    DecodeStep,
+    /// KV pages spilled out of the arena under page pressure
+    Preempt,
+    /// spilled request restored into the arena
+    Resume,
+    /// response sent (success or failure)
+    Finish,
+}
+
+impl Mark {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mark::Submit => "submit",
+            Mark::Admit => "admit",
+            Mark::PrefillChunk => "prefill_chunk",
+            Mark::FirstToken => "first_token",
+            Mark::DecodeStep => "decode_step",
+            Mark::Preempt => "preempt",
+            Mark::Resume => "resume",
+            Mark::Finish => "finish",
+        }
+    }
+}
+
+/// Queue/prefill/decode attribution derived from a timeline (all ns).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Breakdown {
+    /// submit → admission
+    pub queue_ns: u64,
+    /// admission → first token
+    pub prefill_ns: u64,
+    /// first token → finish
+    pub decode_ns: u64,
+    /// submit → finish
+    pub total_ns: u64,
+}
+
+/// Events are capped per request so a pathological run cannot grow a
+/// timeline without bound; `Finish` is always recorded.
+const MAX_EVENTS: usize = 4096;
+
+/// One request's recorded lifecycle.
+#[derive(Clone, Debug)]
+pub struct RequestTimeline {
+    /// scheduler request id
+    pub rid: u64,
+    /// submit instant, ns since the process trace epoch
+    pub base_ns: u64,
+    events: Vec<(Mark, u64)>,
+    truncated: usize,
+}
+
+impl Default for RequestTimeline {
+    /// Empty placeholder (no events) — what `mem::take` leaves behind when
+    /// a finished timeline moves into the metrics. Never exported.
+    fn default() -> RequestTimeline {
+        RequestTimeline { rid: 0, base_ns: 0, events: Vec::new(), truncated: 0 }
+    }
+}
+
+impl RequestTimeline {
+    /// Start a timeline at the request's submit instant.
+    pub fn new(rid: u64) -> RequestTimeline {
+        Self::with_base(rid, now_ns())
+    }
+
+    /// Start a timeline whose submit instant is `base_ns` on the trace
+    /// epoch — used when the submit instant predates timeline creation
+    /// (e.g. the scheduler builds the timeline at admission from the
+    /// queued request's recorded submit time).
+    pub fn with_base(rid: u64, base_ns: u64) -> RequestTimeline {
+        RequestTimeline { rid, base_ns, events: vec![(Mark::Submit, 0)], truncated: 0 }
+    }
+
+    /// Stamp `m` at the current instant.
+    pub fn mark(&mut self, m: Mark) {
+        if self.events.len() >= MAX_EVENTS && m != Mark::Finish {
+            self.truncated += 1;
+            return;
+        }
+        self.events.push((m, now_ns().saturating_sub(self.base_ns)));
+    }
+
+    /// All recorded `(mark, ns_since_submit)` events, in stamp order.
+    pub fn events(&self) -> &[(Mark, u64)] {
+        &self.events
+    }
+
+    /// Events dropped by the per-request cap.
+    pub fn truncated(&self) -> usize {
+        self.truncated
+    }
+
+    /// Offset of the first occurrence of `m`, if stamped.
+    pub fn first(&self, m: Mark) -> Option<u64> {
+        self.events.iter().find(|(e, _)| *e == m).map(|(_, t)| *t)
+    }
+
+    /// Number of occurrences of `m`.
+    pub fn count(&self, m: Mark) -> usize {
+        self.events.iter().filter(|(e, _)| *e == m).count()
+    }
+
+    /// Split the request's wall time into queue / prefill / decode.
+    /// Requests that never reached a stage attribute the remainder to the
+    /// last stage they did reach.
+    pub fn breakdown(&self) -> Breakdown {
+        let total_ns = self
+            .first(Mark::Finish)
+            .or_else(|| self.events.last().map(|(_, t)| *t))
+            .unwrap_or(0);
+        let admit = self.first(Mark::Admit).unwrap_or(total_ns).min(total_ns);
+        // Clamp into [admit, total] so the three parts always sum to
+        // exactly total, even on degenerate mark orders.
+        let first_tok = self.first(Mark::FirstToken).unwrap_or(total_ns).clamp(admit, total_ns);
+        Breakdown {
+            queue_ns: admit,
+            prefill_ns: first_tok - admit,
+            decode_ns: total_ns - first_tok,
+            total_ns,
+        }
+    }
+
+    /// JSON form: rid, absolute base, breakdown and the raw event list.
+    pub fn to_json(&self) -> Json {
+        let b = self.breakdown();
+        Json::obj(vec![
+            ("rid", Json::num(self.rid as f64)),
+            ("base_us", Json::num(self.base_ns as f64 / 1e3)),
+            ("queue_ms", Json::num(b.queue_ns as f64 / 1e6)),
+            ("prefill_ms", Json::num(b.prefill_ns as f64 / 1e6)),
+            ("decode_ms", Json::num(b.decode_ns as f64 / 1e6)),
+            ("total_ms", Json::num(b.total_ns as f64 / 1e6)),
+            ("decode_steps", Json::num(self.count(Mark::DecodeStep) as f64)),
+            ("preemptions", Json::num(self.count(Mark::Preempt) as f64)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|(m, t)| {
+                    Json::obj(vec![
+                        ("mark", Json::str(m.name())),
+                        ("ms", Json::num(*t as f64 / 1e6)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Virtual-track base so request tracks sort after real thread tracks in
+/// trace viewers.
+const REQ_TID_BASE: u64 = 1_000_000;
+
+/// Chrome trace events for a set of request timelines: one named virtual
+/// track per request carrying `queue`/`prefill`/`decode` phase bars and
+/// instant markers for preempt/resume.
+pub fn trace_events(timelines: &[RequestTimeline]) -> Vec<Json> {
+    let mut out = Vec::new();
+    for t in timelines {
+        let tid = REQ_TID_BASE + t.rid;
+        let tidj = || Json::num(tid as f64);
+        out.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", tidj()),
+            ("args", Json::obj(vec![("name", Json::str(&format!("req-{}", t.rid)))])),
+        ]));
+        let b = t.breakdown();
+        let base_us = t.base_ns as f64 / 1e3;
+        let phases = [
+            ("queue", 0u64, b.queue_ns),
+            ("prefill", b.queue_ns, b.prefill_ns),
+            ("decode", b.queue_ns + b.prefill_ns, b.decode_ns),
+        ];
+        for (name, off_ns, dur_ns) in phases {
+            if dur_ns == 0 {
+                continue;
+            }
+            out.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", tidj()),
+                ("ts", Json::num(base_us + off_ns as f64 / 1e3)),
+                ("dur", Json::num(dur_ns as f64 / 1e3)),
+            ]));
+        }
+        for (m, off_ns) in t.events() {
+            if !matches!(*m, Mark::Preempt | Mark::Resume) {
+                continue;
+            }
+            out.push(Json::obj(vec![
+                ("name", Json::str(m.name())),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::num(1.0)),
+                ("tid", tidj()),
+                ("ts", Json::num(base_us + *off_ns as f64 / 1e3)),
+            ]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manual(rid: u64, marks: &[(Mark, u64)]) -> RequestTimeline {
+        let mut t = RequestTimeline::new(rid);
+        t.events = vec![(Mark::Submit, 0)];
+        t.events.extend_from_slice(marks);
+        t
+    }
+
+    #[test]
+    fn breakdown_attributes_queue_prefill_decode() {
+        let t = manual(
+            1,
+            &[
+                (Mark::Admit, 10),
+                (Mark::PrefillChunk, 12),
+                (Mark::FirstToken, 30),
+                (Mark::DecodeStep, 40),
+                (Mark::Finish, 100),
+            ],
+        );
+        let b = t.breakdown();
+        assert_eq!(b, Breakdown { queue_ns: 10, prefill_ns: 20, decode_ns: 70, total_ns: 100 });
+        assert_eq!(t.count(Mark::DecodeStep), 1);
+        assert_eq!(t.first(Mark::Admit), Some(10));
+    }
+
+    #[test]
+    fn breakdown_handles_requests_that_never_started() {
+        // rejected before admission: everything is queue time
+        let t = manual(2, &[(Mark::Finish, 50)]);
+        let b = t.breakdown();
+        assert_eq!(b, Breakdown { queue_ns: 50, prefill_ns: 0, decode_ns: 0, total_ns: 50 });
+    }
+
+    #[test]
+    fn breakdown_parts_sum_to_total_on_degenerate_orders() {
+        // Marks stamped out of lifecycle order (FirstToken before Admit,
+        // marks after Finish) must still split exactly.
+        let t = manual(
+            4,
+            &[(Mark::FirstToken, 30), (Mark::Finish, 58), (Mark::Admit, 60)],
+        );
+        let b = t.breakdown();
+        assert_eq!(b.queue_ns + b.prefill_ns + b.decode_ns, b.total_ns);
+        assert_eq!(b.total_ns, 58);
+    }
+
+    #[test]
+    fn mark_caps_events_but_always_records_finish() {
+        let mut t = RequestTimeline::new(3);
+        for _ in 0..(MAX_EVENTS * 2) {
+            t.mark(Mark::DecodeStep);
+        }
+        t.mark(Mark::Finish);
+        assert!(t.events().len() <= MAX_EVENTS + 1);
+        assert!(t.truncated() > 0);
+        assert_eq!(t.count(Mark::Finish), 1);
+    }
+
+    #[test]
+    fn trace_events_emit_named_track_and_phases() {
+        let t = manual(
+            7,
+            &[
+                (Mark::Admit, 10),
+                (Mark::FirstToken, 30),
+                (Mark::Preempt, 35),
+                (Mark::Resume, 60),
+                (Mark::Finish, 100),
+            ],
+        );
+        let evs = trace_events(&[t]);
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").as_str()).collect();
+        assert!(names.contains(&"thread_name"));
+        assert!(names.contains(&"queue"));
+        assert!(names.contains(&"prefill"));
+        assert!(names.contains(&"decode"));
+        assert!(names.contains(&"preempt"));
+        assert!(names.contains(&"resume"));
+        // all events sit on the request's virtual track
+        for e in &evs {
+            assert_eq!(e.get("tid").as_f64(), Some((REQ_TID_BASE + 7) as f64));
+        }
+    }
+
+    #[test]
+    fn timeline_json_round_trips() {
+        let t = manual(5, &[(Mark::Admit, 10), (Mark::FirstToken, 30), (Mark::Finish, 90)]);
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.get("rid").as_f64(), Some(5.0));
+        assert_eq!(parsed.get("decode_steps").as_f64(), Some(0.0));
+    }
+}

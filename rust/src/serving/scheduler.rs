@@ -37,6 +37,7 @@ use crate::coordinator::server::{Request, Response};
 use crate::eval::native_fwd::argmax_logit;
 use crate::kvcache::{KvCacheStats, SeqId, SpilledSeq};
 use crate::linalg::Mat;
+use crate::obs::{span, Mark, RequestTimeline};
 
 use super::queue::{Backpressure, QueueOpts, RequestQueue};
 
@@ -156,6 +157,9 @@ struct RunSeq {
     submitted: Instant,
     first_token: bool,
     dead: bool,
+    /// lifecycle stamps (admit, prefill chunks, first token, decode
+    /// steps, preempt/resume) — moved into the metrics at retirement
+    timeline: RequestTimeline,
 }
 
 impl RunSeq {
@@ -219,6 +223,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             Request::Generate { prompt, max_new } if *max_new == 0 && !prompt.is_empty() => {
                 let id = self.queue.reserve_id();
                 self.metrics.requests += 1;
+                self.push_timeline(Self::trivial_timeline(id));
                 self.finished.push((id, Response::Generated { text: Vec::new() }));
                 return Ok(id);
             }
@@ -227,6 +232,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             {
                 let id = self.queue.reserve_id();
                 self.metrics.requests += 1;
+                self.push_timeline(Self::trivial_timeline(id));
                 self.finished.push((id, Response::Scored { logprob: 0.0 }));
                 return Ok(id);
             }
@@ -256,6 +262,13 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
         &self.metrics
     }
 
+    /// The recorded timeline of a finished request, if still retained
+    /// (the per-run timeline buffer is capped). Scans newest-first so a
+    /// reused id resolves to its latest lifecycle.
+    pub fn timeline_for(&self, rid: u64) -> Option<RequestTimeline> {
+        self.metrics.timelines.iter().rev().find(|t| t.rid == rid).cloned()
+    }
+
     /// Requests waiting for admission.
     pub fn queue_depth(&self) -> usize {
         self.queue.depth()
@@ -273,12 +286,34 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
     }
 
     /// One scheduler iteration; returns the number of sequences stepped.
+    ///
+    /// Every phase runs under a tracing span (`sweep`/`resume`/`admit`/
+    /// `plan`/`preempt`/`exec`/`apply_logits`/`refresh`, all children of
+    /// `sched_step`), so an enabled trace attributes scheduler wall time
+    /// across the pipeline. Disabled tracing costs one atomic load per
+    /// span site.
     pub fn step(&mut self) -> usize {
-        self.sweep_dead();
-        self.resume_preempted();
-        self.admit();
-        let items = self.plan_items();
-        let items = self.preempt_for_pages(items);
+        let _step = crate::span!("sched_step");
+        {
+            let _sp = crate::span!("sweep");
+            self.sweep_dead();
+        }
+        {
+            let _sp = crate::span!("resume");
+            self.resume_preempted();
+        }
+        {
+            let _sp = crate::span!("admit");
+            self.admit();
+        }
+        let items = {
+            let _sp = crate::span!("plan");
+            self.plan_items()
+        };
+        let items = {
+            let _sp = crate::span!("preempt");
+            self.preempt_for_pages(items)
+        };
         if items.is_empty() {
             self.refresh_stats();
             return 0;
@@ -293,6 +328,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             if s.feed_end() - s.fed > 1 {
                 self.metrics.prefill_chunks += 1;
                 self.metrics.prefill_tokens += take;
+                self.running[i].timeline.mark(Mark::PrefillChunk);
             }
         }
         let calls: Vec<(SeqId, &[i32])> = items
@@ -306,11 +342,17 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                 (sid, &s.tokens[s.fed..s.fed + take])
             })
             .collect();
-        let stepped = self.backend.step_ragged(&calls);
+        let stepped = {
+            let _sp = crate::span!("exec");
+            self.backend.step_ragged(&calls)
+        };
         drop(calls);
         match stepped {
             Ok(logits) => {
-                self.apply_logits(&items, &logits);
+                {
+                    let _sp = crate::span!("apply_logits");
+                    self.apply_logits(&items, &logits);
+                }
                 self.refresh_stats();
                 items.len()
             }
@@ -359,6 +401,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                 Ok(sid) => {
                     self.running[i].slot = CacheSlot::Active(sid);
                     self.metrics.resumes += 1;
+                    self.running[i].timeline.mark(Mark::Resume);
                 }
                 Err(sp) => {
                     // the free-page reading and the restore disagreed —
@@ -407,6 +450,12 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             }
             let q = self.queue.pop().expect("front checked");
             self.metrics.queue_wait.record(elapsed_ms(q.submitted));
+            // anchor the timeline at the recorded submit instant so queue
+            // time is attributed even though the timeline is built here
+            let base_ns =
+                span::now_ns().saturating_sub(q.submitted.elapsed().as_nanos() as u64);
+            let mut timeline = RequestTimeline::with_base(q.id, base_ns);
+            timeline.mark(Mark::Admit);
             let sid = self.backend.begin_seq();
             let (kind, tokens) = match q.request {
                 Request::Generate { prompt, max_new } => {
@@ -431,6 +480,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                 submitted: q.submitted,
                 first_token: false,
                 dead: false,
+                timeline,
             });
         }
     }
@@ -524,6 +574,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                     Ok(sp) => {
                         self.running[i].slot = CacheSlot::Spilled(sp);
                         self.metrics.preemptions += 1;
+                        self.running[i].timeline.mark(Mark::Preempt);
                     }
                     Err(e) => self.fail_seq(i, &format!("kv spill failed: {e}")),
                 }
@@ -551,8 +602,10 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                         if !s.first_token {
                             s.first_token = true;
                             self.metrics.ttft.record(elapsed_ms(s.submitted));
+                            s.timeline.mark(Mark::FirstToken);
                         }
                         s.tokens.push(t);
+                        s.timeline.mark(Mark::DecodeStep);
                         self.metrics.tokens_out += 1;
                         if s.tokens.len() - *prompt_len >= *max_new {
                             done.push(i);
@@ -575,6 +628,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                         if !s.first_token {
                             s.first_token = true;
                             self.metrics.ttft.record(elapsed_ms(s.submitted));
+                            s.timeline.mark(Mark::FirstToken);
                         }
                     }
                     if s.fed == s.tokens.len() - 1 {
@@ -611,7 +665,11 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
         };
         self.metrics.requests += 1;
         self.metrics.latency.record(elapsed_ms(s.submitted));
-        self.finished.push((s.rid, resp));
+        s.timeline.mark(Mark::Finish);
+        let timeline = std::mem::take(&mut s.timeline);
+        let rid = s.rid;
+        self.push_timeline(timeline);
+        self.finished.push((rid, resp));
     }
 
     /// Fail a sequence with a structured error response (freeing its
@@ -629,13 +687,34 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
         self.tokens_in_flight -= s.need;
         self.metrics.requests += 1;
         self.metrics.latency.record(elapsed_ms(s.submitted));
-        self.finished.push((s.rid, Response::Error { message: message.to_string() }));
+        s.timeline.mark(Mark::Finish);
+        let timeline = std::mem::take(&mut s.timeline);
+        let rid = s.rid;
+        self.push_timeline(timeline);
+        self.finished.push((rid, Response::Error { message: message.to_string() }));
     }
 
     fn refresh_stats(&mut self) {
+        let _sp = crate::span!("refresh");
         self.metrics.kv_cache = self.backend.kv_stats();
         self.metrics.decode = self.backend.stream_stats();
         self.metrics.shards = self.backend.sharded_stats();
+    }
+
+    /// Timeline for a request answered inline at submit (no admission).
+    fn trivial_timeline(rid: u64) -> RequestTimeline {
+        let mut tl = RequestTimeline::new(rid);
+        tl.mark(Mark::Finish);
+        tl
+    }
+
+    /// Retain a finished request's timeline, bounded so a very long run
+    /// cannot grow the metrics without limit.
+    fn push_timeline(&mut self, timeline: RequestTimeline) {
+        const MAX_TIMELINES: usize = 16_384;
+        if self.metrics.timelines.len() < MAX_TIMELINES {
+            self.metrics.timelines.push(timeline);
+        }
     }
 }
 
@@ -922,6 +1001,67 @@ mod tests {
             Some(Response::Scored { .. })
         ));
         assert!(!sched.has_work());
+    }
+
+    #[test]
+    fn timelines_record_request_lifecycle() {
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 4, 0),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let now = Instant::now();
+        let rid =
+            sched.submit(Request::Generate { prompt: vec![8; 10], max_new: 3 }, now).unwrap();
+        let done = run_to_completion(&mut sched, 100);
+        assert_eq!(done.len(), 1);
+        let m = sched.metrics();
+        assert_eq!(m.timelines.len(), 1);
+        let t = &m.timelines[0];
+        assert_eq!(t.rid, rid);
+        assert_eq!(t.count(Mark::Admit), 1);
+        assert!(
+            t.count(Mark::PrefillChunk) >= 2,
+            "10-token prompt at chunk 4 feeds over several chunks, got {}",
+            t.count(Mark::PrefillChunk)
+        );
+        assert_eq!(t.count(Mark::FirstToken), 1);
+        assert_eq!(t.count(Mark::DecodeStep), 3, "one decode stamp per emitted token");
+        assert_eq!(t.count(Mark::Finish), 1);
+        // stamps are monotone and the breakdown is total-preserving
+        assert!(t.first(Mark::Admit) <= t.first(Mark::FirstToken));
+        assert!(t.first(Mark::FirstToken) <= t.first(Mark::Finish));
+        let b = t.breakdown();
+        assert_eq!(b.queue_ns + b.prefill_ns + b.decode_ns, b.total_ns);
+        // the snapshot surfaces the timeline attribution summaries
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("timelines_recorded_total"), 1);
+        assert!(snap.has("request_prefill_ms"));
+    }
+
+    #[test]
+    fn trivial_and_preempted_requests_still_get_timelines() {
+        // preemption scenario (same shape as page_pressure test)
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::new(256, 2, 16),
+            ContinuousOpts { prefill_chunk: 4, ..Default::default() },
+        );
+        let now = Instant::now();
+        sched.submit(Request::Generate { prompt: vec![5; 4], max_new: 12 }, now).unwrap();
+        sched.submit(Request::Generate { prompt: vec![9; 4], max_new: 12 }, now).unwrap();
+        let trivial =
+            sched.submit(Request::Generate { prompt: vec![1; 2], max_new: 0 }, now).unwrap();
+        let done = run_to_completion(&mut sched, 300);
+        assert_eq!(done.len(), 3);
+        let m = sched.metrics();
+        assert_eq!(m.timelines.len(), 3);
+        let preempted: usize =
+            m.timelines.iter().map(|t| t.count(Mark::Preempt)).sum();
+        let resumed: usize = m.timelines.iter().map(|t| t.count(Mark::Resume)).sum();
+        assert!(preempted >= 1, "tight arena stamps a preempt mark");
+        assert!(resumed >= 1, "resume is stamped too");
+        let tv = m.timelines.iter().find(|t| t.rid == trivial).unwrap();
+        assert_eq!(tv.count(Mark::Finish), 1);
+        assert_eq!(tv.count(Mark::Admit), 0, "trivial requests never admit");
     }
 
     #[test]

@@ -120,6 +120,9 @@ fn worker_loop(
     while let Ok(job) = rx.recv() {
         match job {
             Job::Matmul { tensor, x, reply } => {
+                // the span brackets the same region busy_ns measures, so
+                // shard-busy trace bars line up with the imbalance report
+                let _sp = crate::span!("shard_busy");
                 let t0 = Instant::now();
                 let qt = &qm.tensors[tensor];
                 let owned = &plan.tensors[tensor].owners[shard];
@@ -223,6 +226,7 @@ impl ShardedMatmul {
     /// [`StreamingMatmul::matmul`] over the same tensor (tested), at any
     /// shard count.
     pub fn matmul(&self, tensor: usize, x: &Mat, y: &mut Mat, stats: &mut DecodeStats) {
+        let _sp = crate::span!("shard_matmul");
         let qt = &self.qm.tensors[tensor];
         let batch = x.rows;
         assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);

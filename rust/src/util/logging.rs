@@ -2,9 +2,13 @@
 //!
 //! Level is process-global, set once from the CLI (`-v`, `-q`, or
 //! `GLVQ_LOG=debug`). Deliberately tiny: no formatting machinery beyond
-//! `format!`, no timestamps on quiet levels.
+//! `format!`, no timestamps on quiet levels. Debug-level lines can carry
+//! a monotonic elapsed-time prefix ([`set_timestamps`], or
+//! `GLVQ_LOG_TS=1`), and every emitted line can be routed through a
+//! capture hook ([`set_hook`]) so tests can assert on log output.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
@@ -16,19 +20,53 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
+static TIMESTAMPS: AtomicBool = AtomicBool::new(false);
+
+/// Capture hook: receives `(level, formatted_line)` for every line that
+/// passes the level filter, *instead of* stderr.
+pub type LogHook = Arc<dyn Fn(Level, &str) + Send + Sync>;
+
+fn hook_slot() -> &'static Mutex<Option<LogHook>> {
+    static HOOK: OnceLock<Mutex<Option<LogHook>>> = OnceLock::new();
+    HOOK.get_or_init(|| Mutex::new(None))
+}
 
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Prefix Debug-level lines with monotonic elapsed seconds since the
+/// first log call (`[DEBUG +1.234s]`).
+pub fn set_timestamps(on: bool) {
+    TIMESTAMPS.store(on, Ordering::Relaxed);
+}
+
+/// Install (`Some`) or remove (`None`) the capture hook. While installed,
+/// log lines go to the hook instead of stderr — used by tests to capture
+/// output.
+pub fn set_hook(hook: Option<LogHook>) {
+    *hook_slot().lock().unwrap() = hook;
+}
+
+/// Configure the level from `GLVQ_LOG` (error|warn|info|debug). Unknown
+/// values leave the level unchanged and emit a warning, rather than
+/// silently mapping to Info. `GLVQ_LOG_TS=1` additionally enables
+/// Debug-level elapsed timestamps.
 pub fn level_from_env() {
     if let Ok(v) = std::env::var("GLVQ_LOG") {
-        set_level(match v.as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            _ => Level::Info,
-        });
+        match v.as_str() {
+            "error" => set_level(Level::Error),
+            "warn" => set_level(Level::Warn),
+            "info" => set_level(Level::Info),
+            "debug" => set_level(Level::Debug),
+            other => log(
+                Level::Warn,
+                &format!("unknown GLVQ_LOG value {other:?} (expected error|warn|info|debug); keeping current level"),
+            ),
+        }
+    }
+    if let Ok(v) = std::env::var("GLVQ_LOG_TS") {
+        set_timestamps(v != "0" && !v.is_empty());
     }
 }
 
@@ -36,15 +74,30 @@ pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+fn log_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
 pub fn log(l: Level, msg: &str) {
-    if enabled(l) {
-        let tag = match l {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-        };
-        eprintln!("[{tag}] {msg}");
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    let line = if l == Level::Debug && TIMESTAMPS.load(Ordering::Relaxed) {
+        format!("[{tag} +{:.3}s] {msg}", log_epoch().elapsed().as_secs_f64())
+    } else {
+        format!("[{tag}] {msg}")
+    };
+    let hook = hook_slot().lock().unwrap().clone();
+    match hook {
+        Some(h) => h(l, &line),
+        None => eprintln!("{line}"),
     }
 }
 
@@ -89,8 +142,16 @@ impl Drop for Timer {
 mod tests {
     use super::*;
 
+    // Level, timestamps and the hook are process-global; serialize the
+    // tests that mutate them so parallel test threads don't interleave.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn level_ordering() {
+        let _l = test_lock();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
@@ -103,5 +164,84 @@ mod tests {
         let t = Timer::new("t");
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn hook_captures_formatted_lines() {
+        let _l = test_lock();
+        let captured: Arc<Mutex<Vec<(Level, String)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = captured.clone();
+        set_hook(Some(Arc::new(move |l, line: &str| {
+            sink.lock().unwrap().push((l, line.to_string()));
+        })));
+        log(Level::Warn, "hook-test-alpha");
+        log(Level::Error, "hook-test-beta");
+        set_hook(None);
+        // the hook is process-global and tests run in parallel: filter to
+        // this test's own lines instead of asserting on totals
+        let got = captured.lock().unwrap();
+        assert!(got
+            .iter()
+            .any(|(l, s)| *l == Level::Warn && s == "[WARN ] hook-test-alpha"));
+        assert!(got
+            .iter()
+            .any(|(l, s)| *l == Level::Error && s == "[ERROR] hook-test-beta"));
+    }
+
+    #[test]
+    fn debug_timestamps_prefix_elapsed_seconds() {
+        let _l = test_lock();
+        let captured: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = captured.clone();
+        set_hook(Some(Arc::new(move |_, line: &str| {
+            sink.lock().unwrap().push(line.to_string());
+        })));
+        set_level(Level::Debug);
+        set_timestamps(true);
+        log(Level::Debug, "ts-test-line");
+        // timestamps apply to Debug lines only
+        log(Level::Info, "ts-test-info");
+        set_timestamps(false);
+        set_level(Level::Info);
+        set_hook(None);
+        let got = captured.lock().unwrap();
+        let dbg = got.iter().find(|s| s.ends_with("ts-test-line")).unwrap();
+        assert!(dbg.starts_with("[DEBUG +"), "{dbg}");
+        assert!(dbg.contains("s] "), "{dbg}");
+        let info = got.iter().find(|s| s.ends_with("ts-test-info")).unwrap();
+        assert!(info.starts_with("[INFO ] "), "{info}");
+    }
+
+    #[test]
+    fn unknown_env_value_warns_and_keeps_level() {
+        let _l = test_lock();
+        let before = LEVEL.load(Ordering::Relaxed);
+        let captured: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = captured.clone();
+        set_hook(Some(Arc::new(move |_, line: &str| {
+            sink.lock().unwrap().push(line.to_string());
+        })));
+        std::env::set_var("GLVQ_LOG", "verbose");
+        level_from_env();
+        std::env::remove_var("GLVQ_LOG");
+        set_hook(None);
+        assert_eq!(LEVEL.load(Ordering::Relaxed), before, "unknown value must not change level");
+        let got = captured.lock().unwrap();
+        assert!(
+            got.iter().any(|s| s.contains("unknown GLVQ_LOG value \"verbose\"")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn known_env_values_set_the_level() {
+        let _l = test_lock();
+        let before = LEVEL.load(Ordering::Relaxed);
+        std::env::set_var("GLVQ_LOG", "warn");
+        level_from_env();
+        std::env::remove_var("GLVQ_LOG");
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        LEVEL.store(before, Ordering::Relaxed);
     }
 }

@@ -1,0 +1,184 @@
+//! Golden-shape tests for the observability exports: the Chrome
+//! trace-event JSON, the Prometheus text exposition, and the structured
+//! metrics JSON must keep the exact shapes external tooling depends on
+//! (Perfetto / chrome://tracing for traces, any Prometheus scraper for
+//! metrics). These tests pin the contract end to end: real spans recorded
+//! across real threads, a real scheduler-shaped metrics snapshot, every
+//! export parsed back through `util::json` and the Prometheus validator.
+
+use std::sync::Mutex;
+
+use glvq::coordinator::metrics::ServerMetrics;
+use glvq::obs::span;
+use glvq::obs::{chrome_trace_json, Mark, RequestTimeline};
+use glvq::util::json::Json;
+
+/// Span state is process-global; serialize the tests that enable/drain.
+fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn spin_ns(ns: u64) {
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+/// Record a small multi-thread span forest: a nested stack on the main
+/// thread plus one worker thread with its own root.
+fn record_spans() -> Vec<span::FinishedSpan> {
+    let _ = span::drain();
+    span::set_enabled(true);
+    {
+        let _root = glvq::span!("golden_root");
+        spin_ns(50_000);
+        {
+            let _child = glvq::span!("golden_child");
+            spin_ns(50_000);
+        }
+        {
+            let _child = glvq::span!("golden_child");
+            spin_ns(50_000);
+        }
+    }
+    std::thread::spawn(|| {
+        let _w = glvq::span!("golden_worker");
+        spin_ns(50_000);
+    })
+    .join()
+    .expect("worker thread");
+    span::set_enabled(false);
+    span::drain()
+}
+
+fn sample_timeline() -> RequestTimeline {
+    // spins keep every phase strictly positive so trace_events cannot
+    // legitimately drop a zero-duration bar
+    let mut t = RequestTimeline::with_base(3, 1_000);
+    t.mark(Mark::Admit);
+    spin_ns(10_000);
+    t.mark(Mark::PrefillChunk);
+    t.mark(Mark::FirstToken);
+    spin_ns(10_000);
+    t.mark(Mark::DecodeStep);
+    t.mark(Mark::Finish);
+    t
+}
+
+/// A metrics value shaped like a real continuous-mode run.
+fn sample_metrics() -> ServerMetrics {
+    let mut m = ServerMetrics::default();
+    m.requests = 4;
+    m.tokens_out = 40;
+    m.batches = 2;
+    m.sched_steps = 12;
+    m.prefill_chunks = 5;
+    for v in [1.5, 2.5, 9.0, 4.0] {
+        m.latency.record(v);
+        m.ttft.record(v * 0.5);
+        m.queue_wait.record(v * 0.25);
+    }
+    m.timelines.push(sample_timeline());
+    m
+}
+
+#[test]
+fn chrome_trace_export_has_the_golden_shape() {
+    let _l = test_lock();
+    let spans = record_spans();
+    assert!(spans.len() >= 4, "expected 4 recorded spans, got {}", spans.len());
+    span::validate_nesting(&spans).expect("recorded spans are well-nested");
+
+    let trace = chrome_trace_json(&spans, &[sample_timeline()]);
+    let parsed = Json::parse(&trace.to_string()).expect("trace JSON parses");
+
+    // golden top-level shape
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    // every event carries the mandatory trace-event fields
+    for e in events {
+        assert!(e.get("name").as_str().is_some(), "event without name: {}", e.to_string());
+        let ph = e.get("ph").as_str().expect("event phase");
+        assert!(["X", "M", "i"].contains(&ph), "unexpected phase {ph}");
+        assert_eq!(e.get("pid").as_f64(), Some(1.0));
+        assert!(e.get("tid").as_f64().is_some());
+        match ph {
+            "X" => {
+                assert!(e.get("ts").as_f64().is_some());
+                assert!(e.get("dur").as_f64().unwrap_or(-1.0) >= 0.0);
+            }
+            "i" => assert_eq!(e.get("s").as_str(), Some("t")),
+            _ => {}
+        }
+    }
+
+    // span events and timeline phases both made it in
+    let names: Vec<&str> = events.iter().filter_map(|e| e.get("name").as_str()).collect();
+    for want in ["golden_root", "golden_child", "golden_worker", "queue", "prefill", "decode"] {
+        assert!(names.contains(&want), "missing event {want}");
+    }
+
+    // the worker span sits on a different track than the main-thread stack
+    let tid_of = |name: &str| {
+        events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some(name))
+            .and_then(|e| e.get("tid").as_f64())
+            .expect("tid")
+    };
+    assert_ne!(tid_of("golden_root"), tid_of("golden_worker"));
+}
+
+#[test]
+fn prometheus_export_has_the_golden_shape() {
+    let _l = test_lock();
+    let m = sample_metrics();
+    let snap = m.snapshot();
+    let prom = snap.to_prometheus();
+    glvq::obs::registry::validate_prometheus(&prom).expect("valid exposition");
+
+    // golden structural facts scrapers rely on
+    assert!(prom.contains("# TYPE glvq_requests_total counter"), "{prom}");
+    assert!(prom.contains("glvq_requests_total 4"), "{prom}");
+    assert!(prom.contains("# TYPE glvq_request_latency_ms summary"), "{prom}");
+    assert!(prom.contains("glvq_request_latency_ms{quantile=\"0.5\"}"), "{prom}");
+    assert!(prom.contains("glvq_request_latency_ms_count 4"), "{prom}");
+    assert!(prom.contains("glvq_request_latency_ms_sum"), "{prom}");
+    assert!(prom.contains("# TYPE glvq_uptime_seconds gauge"), "{prom}");
+    // timelines flow into the queue/prefill/decode attribution summaries
+    assert!(prom.contains("glvq_timelines_recorded_total 1"), "{prom}");
+    assert!(prom.contains("glvq_request_prefill_ms"), "{prom}");
+
+    // tampered text must be rejected
+    let broken = prom.replace("# TYPE glvq_requests_total counter", "# TYPE glvq_requests_total");
+    assert!(glvq::obs::registry::validate_prometheus(&broken).is_err());
+}
+
+#[test]
+fn metrics_json_round_trips_through_util_json() {
+    let _l = test_lock();
+    let m = sample_metrics();
+    let snap = m.snapshot();
+    let j = snap.to_json();
+    let text = j.to_string();
+    let parsed = Json::parse(&text).expect("snapshot JSON parses");
+    assert_eq!(parsed, j, "snapshot JSON must round-trip bit-exactly");
+
+    // counters surface as plain numbers, summaries as q50/q95/q99 objects
+    assert_eq!(parsed.get("requests_total").as_f64(), Some(4.0));
+    assert_eq!(parsed.get("tokens_out_total").as_f64(), Some(40.0));
+    let lat = parsed.get("request_latency_ms");
+    assert_eq!(lat.get("count").as_f64(), Some(4.0));
+    assert!(lat.get("q50").as_f64().is_some());
+    assert!(lat.get("q95").as_f64().is_some());
+    assert_eq!(lat.get("sum").as_f64(), Some(17.0));
+
+    // the human report line and the snapshot agree on the headline counters
+    let line = glvq::coordinator::metrics::human_line(&snap);
+    assert!(line.starts_with("requests=4 tokens=40 batches=2"), "{line}");
+    assert!(line.contains("steps=12"), "{line}");
+}
