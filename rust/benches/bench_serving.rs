@@ -36,6 +36,14 @@
 //! and the measured cost of *disabled* span guards stays **< 2%** of the
 //! per-token serving cost.
 //!
+//! A final **chat** pair (`chat-unshared` / `chat-shared`) drives
+//! multi-turn sessions that all share one long system prompt through the
+//! session API, with and without radix prefix sharing: outputs must be
+//! bit-identical (f32 sharing is exact), the shared cell must prefill
+//! strictly fewer tokens, and in full mode its prefill tok/s must beat
+//! the unshared cell measurably. The shared cell's prefix hit rate, CoW
+//! splits and shared-page counts land in the JSON trajectory.
+//!
 //! Results append to `runs/bench/serving.json` (`{"runs": [...]}`),
 //! including the full structured metrics snapshot of the traced cell.
 //! `GLVQ_BENCH_SMOKE=1` runs a miniature workload for CI: same parity
@@ -396,6 +404,110 @@ fn main() {
         );
     }
 
+    // ---- chat cells: multi-turn sessions over one shared system prompt ----
+    // every session replays the same long system prompt; with prefix
+    // sharing the backend claims it (and each session's own transcript)
+    // from the radix index instead of re-prefilling, so the same logical
+    // prompt volume is served in less wall time
+    let (n_sessions, n_turns, sys_len, turn_gen) =
+        if smoke() { (3, 2, 48, 4) } else { (8, 3, 96, 8) };
+    let system: Vec<u8> = (0..sys_len).map(|i| ((i * 13 + 7) % 251) as u8).collect();
+    let run_chat = |handle: ServerHandle| {
+        let t0 = Instant::now();
+        let mut outputs = Vec::new();
+        let mut logical = 0usize;
+        for s in 0..n_sessions {
+            let sid = handle.begin_session(&system);
+            let mut transcript = sys_len;
+            for t in 0..n_turns {
+                let user: Vec<u8> =
+                    (0..4).map(|i| ((s * 31 + t * 17 + i * 5) % 251) as u8).collect();
+                transcript += user.len();
+                logical += transcript; // the turn's full prompt length
+                match handle.continue_session(sid, &user, turn_gen).expect("session turn") {
+                    Response::Generated { text } => {
+                        transcript += text.len();
+                        outputs.push(text);
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+            handle.end_session(sid);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        (outputs, wall, handle.shutdown(), logical)
+    };
+    let kv_share = KvCacheOpts { prefix_share: true, ..kv };
+    let (chat_plain, wall_plain, m_plain, logical) =
+        run_chat(server::start_continuous(mk(kv), copts));
+    let (chat_shared, wall_shared, m_shared, _) =
+        run_chat(server::start_continuous(mk(kv_share), copts));
+    assert_eq!(chat_plain, chat_shared, "prefix sharing changed chat outputs");
+    assert!(
+        m_shared.prefix_hits + 1 >= n_sessions * n_turns,
+        "every turn after the first must claim a shared prefix (hits {})",
+        m_shared.prefix_hits
+    );
+    assert!(
+        m_shared.prefill_tokens < m_plain.prefill_tokens,
+        "sharing must prefill strictly fewer tokens ({} vs {})",
+        m_shared.prefill_tokens,
+        m_plain.prefill_tokens
+    );
+    let chat_kv = m_shared.kv_cache.expect("shared chat cell reports kv stats");
+    let hit_rate = chat_kv.prefix_hits as f64 / chat_kv.prefix_lookups.max(1) as f64;
+    let prefill_plain_tok_s = logical as f64 / wall_plain.max(1e-9);
+    let prefill_shared_tok_s = logical as f64 / wall_shared.max(1e-9);
+    let chat_speedup = prefill_shared_tok_s / prefill_plain_tok_s.max(1e-9);
+    println!(
+        "chat-unshared       {:>8.1} prefill tok/s  wall {:>8.1} ms  prefilled {} of {} prompt tokens",
+        prefill_plain_tok_s,
+        wall_plain * 1e3,
+        m_plain.prefill_tokens,
+        logical,
+    );
+    println!(
+        "chat-shared         {:>8.1} prefill tok/s  wall {:>8.1} ms  prefilled {} of {} prompt tokens  hit rate {:.2}  claimed {} tok  cow {}  shared pages {}",
+        prefill_shared_tok_s,
+        wall_shared * 1e3,
+        m_shared.prefill_tokens,
+        logical,
+        hit_rate,
+        m_shared.prefix_tokens,
+        chat_kv.cow_splits,
+        chat_kv.shared_pages,
+    );
+    println!("  chat prefill speedup with prefix sharing: {chat_speedup:.2}x");
+    if !smoke() {
+        assert!(
+            chat_speedup >= 1.2,
+            "prefix sharing only {chat_speedup:.2}x prefill tok/s (need >= 1.2x)"
+        );
+    }
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("chat-unshared")),
+        ("sessions", Json::num(n_sessions as f64)),
+        ("turns", Json::num(n_turns as f64)),
+        ("prompt_tokens", Json::num(logical as f64)),
+        ("prefilled_tokens", Json::num(m_plain.prefill_tokens as f64)),
+        ("prefill_tok_s", Json::num(prefill_plain_tok_s)),
+        ("wall_ms", Json::num(wall_plain * 1e3)),
+    ]));
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("chat-shared")),
+        ("sessions", Json::num(n_sessions as f64)),
+        ("turns", Json::num(n_turns as f64)),
+        ("prompt_tokens", Json::num(logical as f64)),
+        ("prefilled_tokens", Json::num(m_shared.prefill_tokens as f64)),
+        ("prefill_tok_s", Json::num(prefill_shared_tok_s)),
+        ("wall_ms", Json::num(wall_shared * 1e3)),
+        ("prefix_hit_rate", Json::num(hit_rate)),
+        ("prefix_hits", Json::num(m_shared.prefix_hits as f64)),
+        ("prefix_tokens", Json::num(m_shared.prefix_tokens as f64)),
+        ("cow_splits", Json::num(chat_kv.cow_splits as f64)),
+        ("shared_pages", Json::num(chat_kv.shared_pages as f64)),
+    ]));
+
     entries.push(Json::obj(vec![
         ("mode", Json::str("continuous-traced")),
         ("tok_s", Json::num(traced.tok_s)),
@@ -411,6 +523,8 @@ fn main() {
         vec![
             ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
             ("speedup_vs_lockstep", Json::num(speedup)),
+            ("chat_prefill_speedup", Json::num(chat_speedup)),
+            ("chat_prefix_hit_rate", Json::num(hit_rate)),
             ("span_attribution", Json::num(frac)),
             ("disabled_guard_overhead", Json::num(overhead)),
             ("measurements", Json::Arr(entries)),

@@ -154,6 +154,12 @@ pub struct ServerMetrics {
     pub resumes: usize,
     /// requests refused with structured backpressure
     pub rejections: usize,
+    /// admitted requests that claimed a shared KV prefix instead of
+    /// re-prefilling it (prefix sharing on)
+    pub prefix_hits: usize,
+    /// prompt tokens satisfied from shared prefix pages — tokens the
+    /// prefill path never had to feed
+    pub prefix_tokens: usize,
     /// cumulative streaming-decode traffic, when the backend serves from
     /// compressed weights (None for dense/PJRT backends)
     pub decode: Option<DecodeStats>,
@@ -186,6 +192,8 @@ impl Default for ServerMetrics {
             preemptions: 0,
             resumes: 0,
             rejections: 0,
+            prefix_hits: 0,
+            prefix_tokens: 0,
             decode: None,
             kv_cache: None,
             shards: None,
@@ -225,6 +233,8 @@ impl ServerMetrics {
         reg.counter("preemptions_total", self.preemptions as u64);
         reg.counter("resumes_total", self.resumes as u64);
         reg.counter("rejections_total", self.rejections as u64);
+        reg.counter("prefix_hits_total", self.prefix_hits as u64);
+        reg.counter("prefix_tokens_total", self.prefix_tokens as u64);
         if let Some(d) = &self.decode {
             reg.counter("decoded_bytes_total", d.total_bytes() as u64);
             reg.counter("decode_code_bytes_total", d.code_bytes as u64);
@@ -245,6 +255,13 @@ impl ServerMetrics {
             reg.counter("kv_quantized_payload_bytes_total", c.quantized_payload_bytes as u64);
             reg.counter("kv_pages_spilled_total", c.pages_spilled as u64);
             reg.counter("kv_pages_restored_total", c.pages_restored as u64);
+            reg.gauge("kv_shared_pages", c.shared_pages as f64);
+            reg.gauge("kv_shared_nodes", c.shared_nodes as f64);
+            reg.counter("kv_prefix_lookups_total", c.prefix_lookups as u64);
+            reg.counter("kv_prefix_hits_total", c.prefix_hits as u64);
+            reg.counter("kv_prefix_hit_rows_total", c.prefix_hit_rows as u64);
+            reg.counter("kv_cow_splits_total", c.cow_splits as u64);
+            reg.counter("kv_prefix_evictions_total", c.prefix_evictions as u64);
         }
         if let Some(s) = &self.shards {
             reg.gauge("shard_count", s.len() as f64);
@@ -334,6 +351,18 @@ pub fn human_line(snap: &MetricsSnapshot) -> String {
             snap.gauge("kv_peak_pages"),
             snap.counter("kv_pages_quantized_total"),
             snap.counter("kv_decoded_bytes_total") as f64 / 1e6,
+        ));
+    }
+    if snap.counter("kv_prefix_lookups_total") > 0 {
+        let lookups = snap.counter("kv_prefix_lookups_total");
+        let hits = snap.counter("kv_prefix_hits_total");
+        out.push_str(&format!(
+            " prefix_hit_rate={:.2} prefix_rows={} shared_pages={} cow_splits={} prefix_evict={}",
+            hits as f64 / lookups as f64,
+            snap.counter("kv_prefix_hit_rows_total"),
+            snap.gauge("kv_shared_pages"),
+            snap.counter("kv_cow_splits_total"),
+            snap.counter("kv_prefix_evictions_total"),
         ));
     }
     if snap.has("shard_count") {

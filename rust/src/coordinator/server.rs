@@ -25,7 +25,8 @@
 //! [`SeqBackend`] impl).
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -405,10 +406,19 @@ impl CachedNativeBackend {
 
     /// Prefill one window into a fresh cache sequence; returns the handle
     /// and the last-position logits. The sequence is evicted on error.
+    ///
+    /// With prefix sharing on, the longest cached prefix of `tokens` is
+    /// claimed first and only the remainder runs through the forward —
+    /// bit-identical to the full prefill because `forward_ragged` is
+    /// invariant to how a prefix is chunked (`tests/kvcache_parity.rs`).
     fn prefill_one(&mut self, tokens: &[i32]) -> Result<(SeqId, Vec<f32>)> {
-        let sid = self.cache.new_seq();
+        let (sid, claimed) = self.cache.new_seq_shared(tokens, tokens.len().saturating_sub(1));
         let logits = self.run_cached(|cfg, store, lin, cache| {
-            native_fwd::prefill_with_cache(cfg, store, lin, cache, sid, tokens)
+            if claimed == 0 {
+                native_fwd::prefill_with_cache(cfg, store, lin, cache, sid, tokens)
+            } else {
+                native_fwd::forward_ragged(cfg, store, lin, cache, &[sid], &[&tokens[claimed..]])
+            }
         });
         match logits {
             Ok(l) => Ok((sid, l.row(l.rows - 1).to_vec())),
@@ -564,6 +574,10 @@ impl LmBackend for CachedNativeBackend {
 
     fn end_batch(&mut self) {
         for s in self.live.drain(..) {
+            // publish before evicting: the departing sequence's pages
+            // survive as a cold shared prefix the next batch (or the next
+            // session turn) claims instead of re-prefilling
+            self.cache.publish_prefix(s.id, &s.tokens);
             self.cache.evict(s.id);
         }
     }
@@ -588,6 +602,14 @@ impl SeqBackend for CachedNativeBackend {
 
     fn begin_seq(&mut self) -> SeqId {
         self.cache.new_seq()
+    }
+
+    fn begin_seq_prefixed(&mut self, tokens: &[i32], max_rows: usize) -> (SeqId, usize) {
+        self.cache.new_seq_shared(tokens, max_rows)
+    }
+
+    fn publish_seq(&mut self, sid: SeqId, tokens: &[i32]) {
+        self.cache.publish_prefix(sid, tokens);
     }
 
     fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
@@ -704,9 +726,19 @@ struct Job {
 }
 
 /// Handle used by clients to submit requests.
+///
+/// Also the home of **multi-turn sessions**: [`ServerHandle::begin_session`]
+/// opens a transcript, [`ServerHandle::continue_session`] replays it as the
+/// prompt prefix of each turn and folds the response back in. Sessions are
+/// a pure client-side protocol over [`Request::Generate`] — they work
+/// against both the lockstep and the continuous loop — and when the
+/// backend runs with [`KvCacheOpts::prefix_share`], every turn's replayed
+/// transcript is claimed from the shared KV prefix instead of re-prefilled.
 pub struct ServerHandle {
     tx: mpsc::Sender<Job>,
     join: Option<std::thread::JoinHandle<ServerMetrics>>,
+    sessions: Mutex<BTreeMap<u64, Vec<u8>>>,
+    next_session: AtomicU64,
 }
 
 impl ServerHandle {
@@ -747,6 +779,43 @@ impl ServerHandle {
     /// Convenience: submit and wait.
     pub fn call(&self, request: Request) -> Result<Response> {
         self.submit(request).recv().context("server dropped the reply")
+    }
+
+    /// Open a multi-turn session seeded with `system` (the shared system
+    /// prompt). Returns the session id for
+    /// [`ServerHandle::continue_session`].
+    pub fn begin_session(&self, system: &[u8]) -> u64 {
+        let sid = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.sessions.lock().expect("session store poisoned").insert(sid, system.to_vec());
+        sid
+    }
+
+    /// Run one session turn: append `user` to the transcript, generate up
+    /// to `max_new` bytes conditioned on the whole transcript, and fold
+    /// the generated bytes back in for the next turn. The transcript *is*
+    /// the prompt, so with prefix sharing on the backend claims every
+    /// previous turn's KV from the cache and prefills only the new bytes.
+    pub fn continue_session(&self, sid: u64, user: &[u8], max_new: usize) -> Result<Response> {
+        let prompt = {
+            let mut sessions = self.sessions.lock().expect("session store poisoned");
+            let t = sessions.get_mut(&sid).context("unknown session id")?;
+            t.extend_from_slice(user);
+            t.clone()
+        };
+        let resp = self.call(Request::Generate { prompt, max_new })?;
+        if let Response::Generated { text } = &resp {
+            let mut sessions = self.sessions.lock().expect("session store poisoned");
+            if let Some(t) = sessions.get_mut(&sid) {
+                t.extend_from_slice(text);
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Close a session, returning its final transcript (None for an
+    /// unknown id).
+    pub fn end_session(&self, sid: u64) -> Option<Vec<u8>> {
+        self.sessions.lock().expect("session store poisoned").remove(&sid)
     }
 
     /// Stop the worker and return final metrics.
@@ -849,7 +918,12 @@ where
         metrics.shards = backend.shard_stats();
         metrics
     });
-    ServerHandle { tx, join: Some(join) }
+    ServerHandle {
+        tx,
+        join: Some(join),
+        sessions: Mutex::new(BTreeMap::new()),
+        next_session: AtomicU64::new(1),
+    }
 }
 
 /// Start the **continuous-batching** serving loop on its own thread: the
@@ -911,7 +985,12 @@ where
         }
         sched.into_metrics()
     });
-    ServerHandle { tx, join: Some(join) }
+    ServerHandle {
+        tx,
+        join: Some(join),
+        sessions: Mutex::new(BTreeMap::new()),
+        next_session: AtomicU64::new(1),
+    }
 }
 
 /// Feed one job into the scheduler, answering immediately-refused
@@ -1405,6 +1484,48 @@ mod tests {
         assert!(stats.decoded_bytes > 0, "attention reads should decode pages");
         assert!(stats.peak_pages > 0);
         assert!(metrics.report().contains("kv_pages"));
+    }
+
+    #[test]
+    fn sessions_resume_their_transcript_and_share_the_prefix() {
+        // the same two-turn session against sharing-off and sharing-on
+        // backends: identical bytes (f32 sharing is exact), and the
+        // sharing run claims the transcript instead of re-prefilling it
+        let cfg = tiny_cfg();
+        let run = |kv: KvCacheOpts| {
+            let handle = start(
+                move || {
+                    Ok(Box::new(CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv))
+                        as Box<dyn LmBackend>)
+                },
+                ServerOpts::default(),
+            );
+            let sid = handle.begin_session(b"sys: ");
+            let mut texts = Vec::new();
+            for user in [b"aa".as_slice(), b"bb"] {
+                match handle.continue_session(sid, user, 3).unwrap() {
+                    Response::Generated { text } => texts.push(text),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            let transcript = handle.end_session(sid).expect("open session");
+            (texts, transcript, handle.shutdown())
+        };
+        let (t_off, tr_off, _) =
+            run(KvCacheOpts { page_rows: 4, ..Default::default() });
+        let (t_on, tr_on, m_on) =
+            run(KvCacheOpts { page_rows: 4, prefix_share: true, ..Default::default() });
+        assert_eq!(t_off, t_on, "prefix sharing must not change generated bytes");
+        assert_eq!(tr_off, tr_on);
+        // transcript = system + both user turns + both 3-byte responses
+        assert_eq!(tr_on.len(), 5 + 2 + 3 + 2 + 3);
+        let kv = m_on.kv_cache.expect("cached backend reports kv stats");
+        assert!(kv.prefix_hits >= 1, "turn 2 claims turn 1's published prefix");
+        assert!(kv.prefix_hit_rows >= 5, "system + first turn rows come from the cache");
+        assert!(kv.shared_nodes >= 2, "the final transcript stays published");
+        let snap = m_on.snapshot();
+        assert!(snap.counter("kv_prefix_hits_total") >= 1);
+        assert!(m_on.report().contains("prefix_hit_rate"));
     }
 
     #[test]

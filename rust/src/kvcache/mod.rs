@@ -28,6 +28,15 @@
 //!   out (*quantize-to-spill*) so a parked sequence costs a fraction of
 //!   its hot footprint. [`paged::PagedKvCache::free_pages`] and the page
 //!   watermark give admission control a direct occupancy signal.
+//! - With [`KvCacheOpts::prefix_share`], arena pages are refcounted and a
+//!   radix index over token prefixes lets new sequences **claim** the
+//!   longest cached prefix of their prompt instead of re-prefilling it
+//!   ([`paged::PagedKvCache::new_seq_shared`] /
+//!   [`paged::PagedKvCache::publish_prefix`]): full-page matches attach
+//!   by reference, mid-page divergences copy-on-write split, departed
+//!   prefixes stay resident cold (LRU-evicted only under page pressure)
+//!   and optionally retire through the lattice quantizer while cold
+//!   (quantize-on-share).
 //!
 //! The serving integration lives in `coordinator::server::CachedNativeBackend`
 //! (prefill once, then batched one-token lockstep steps) and surfaces
@@ -35,6 +44,7 @@
 //! [`KvCacheStats`] into `coordinator::metrics::ServerMetrics`.
 
 pub mod paged;
+mod prefix;
 pub mod quantized;
 
 pub use paged::{Kv, PagedKvCache, SeqId, SpilledSeq};
@@ -57,6 +67,14 @@ pub struct KvCacheOpts {
     pub entropy: bool,
     /// hard arena capacity in pages; 0 = grow on demand
     pub max_pages: usize,
+    /// refcount pages and share token prefixes through the radix index
+    /// (claim on registration, publish on completion)
+    pub prefix_share: bool,
+    /// re-encode cold shared prefix pages through the lattice quantizer
+    /// once their last live sequence departs (quantize-on-share); later
+    /// claims decode the `SideInfo::Lattice` representation, trading the
+    /// bit-exact guarantee for a smaller resident cold cache
+    pub quantize_shared: bool,
 }
 
 impl Default for KvCacheOpts {
@@ -68,6 +86,8 @@ impl Default for KvCacheOpts {
             lattice_dim: 8,
             entropy: false,
             max_pages: 0,
+            prefix_share: false,
+            quantize_shared: false,
         }
     }
 }
@@ -103,4 +123,21 @@ pub struct KvCacheStats {
     /// spilled pages moved back into the arena on resume (cumulative) —
     /// see [`PagedKvCache::restore`]
     pub pages_restored: usize,
+    /// arena pages currently referenced by the prefix index (cold or
+    /// attached to live sequences)
+    pub shared_pages: usize,
+    /// prefix-index nodes currently resident
+    pub shared_nodes: usize,
+    /// shared-prefix lookups attempted (one per shared registration,
+    /// cumulative)
+    pub prefix_lookups: usize,
+    /// lookups that claimed at least one cached row (cumulative)
+    pub prefix_hits: usize,
+    /// K/V positions claimed from shared pages instead of re-prefilled
+    /// (cumulative)
+    pub prefix_hit_rows: usize,
+    /// copy-on-write splits at mid-page divergences (cumulative)
+    pub cow_splits: usize,
+    /// cold prefix nodes evicted under page pressure (cumulative)
+    pub prefix_evictions: usize,
 }

@@ -14,12 +14,22 @@
 //! scratch one page at a time — the peak decoded working set is a single
 //! page, the same bounded-materialization discipline as
 //! `coordinator::decode_stream`.
+//!
+//! With `prefix_share` on, pages are **refcounted** and a radix index
+//! over token prefixes ([`super::prefix`]) lets a new sequence claim the
+//! longest cached prefix of its prompt instead of re-prefilling it:
+//! full-page matches attach by reference, a mid-page divergence
+//! copy-on-write splits the matched rows into fresh exclusive pages, and
+//! prefixes whose last sequence departed stay resident as a *cold* cache
+//! — evicted LRU only under page pressure, optionally re-encoded through
+//! the lattice quantizer (quantize-on-share) while they wait.
 
 use anyhow::{bail, Result};
 
 use crate::linalg::Mat;
 use crate::quant::traits::QuantizedGroup;
 
+use super::prefix::PrefixIndex;
 use super::quantized::KvQuantizer;
 use super::{KvCacheOpts, KvCacheStats};
 
@@ -60,6 +70,9 @@ struct PageArena {
     page_rows: usize,
     width: usize,
     slots: Vec<PageSlot>,
+    /// per-slot reference count: one per page-table entry plus one when
+    /// the prefix index holds the page; 0 for free slots
+    refs: Vec<u32>,
     free: Vec<usize>,
     /// f32 buffers from retired/freed pages, reused by later allocs
     spare: Vec<Vec<f32>>,
@@ -75,6 +88,7 @@ impl PageArena {
             page_rows,
             width,
             slots: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             spare: Vec::new(),
             max_pages,
@@ -102,6 +116,7 @@ impl PageArena {
                     bail!("kv-cache arena exhausted ({} pages)", self.max_pages);
                 }
                 self.slots.push(PageSlot::Free);
+                self.refs.push(0);
                 Ok(self.slots.len() - 1)
             }
         }
@@ -119,6 +134,7 @@ impl PageArena {
             None => vec![0.0f32; self.page_rows * self.width],
         };
         self.slots[id] = PageSlot::Hot(buf);
+        self.refs[id] = 1;
         self.hot_pages += 1;
         self.peak_pages = self.peak_pages.max(self.in_use());
         Ok(id)
@@ -129,6 +145,7 @@ impl PageArena {
     fn adopt_hot(&mut self, buf: Vec<f32>) -> Result<usize> {
         let id = self.slot_id()?;
         self.slots[id] = PageSlot::Hot(buf);
+        self.refs[id] = 1;
         self.hot_pages += 1;
         self.peak_pages = self.peak_pages.max(self.in_use());
         Ok(id)
@@ -139,13 +156,35 @@ impl PageArena {
         let id = self.slot_id()?;
         self.live_quantized_bytes += g.codes.payload_bytes() + g.side_bytes();
         self.slots[id] = PageSlot::Quantized(g);
+        self.refs[id] = 1;
         self.peak_pages = self.peak_pages.max(self.in_use());
         Ok(id)
     }
 
+    /// Take one more reference on an allocated page (a sequence or the
+    /// prefix index starting to share it).
+    fn inc_ref(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "inc_ref of an unallocated page");
+        self.refs[id] += 1;
+    }
+
+    /// Drop one reference; the slot is only released once the **last**
+    /// reference goes — a finished sequence decrements shared pages, it
+    /// does not free them. Returns true when the page was freed.
+    fn dec_ref(&mut self, id: usize) -> bool {
+        debug_assert!(self.refs[id] > 0, "dec_ref of an unreferenced page");
+        self.refs[id] = self.refs[id].saturating_sub(1);
+        if self.refs[id] > 0 {
+            return false;
+        }
+        self.release(id);
+        true
+    }
+
     /// Return a page to the free list (its f32 buffer goes to the spare
-    /// pool; a quantized payload is dropped).
-    fn free(&mut self, id: usize) {
+    /// pool; a quantized payload is dropped). Only called at refcount
+    /// zero.
+    fn release(&mut self, id: usize) {
         match std::mem::replace(&mut self.slots[id], PageSlot::Free) {
             PageSlot::Hot(buf) => {
                 self.hot_pages -= 1;
@@ -170,6 +209,9 @@ struct PageTable {
 struct SeqSlot {
     /// index = `2·layer + Kv::index()`
     tables: Vec<PageTable>,
+    /// prefix-index nodes this sequence is attached to (claimed at
+    /// registration or recorded when its pages were published)
+    claimed: Vec<usize>,
 }
 
 /// One page moved out of the arena by [`PagedKvCache::spill`].
@@ -232,6 +274,7 @@ pub struct PagedKvCache {
     arena: PageArena,
     seqs: Vec<Option<SeqSlot>>,
     quantizer: KvQuantizer,
+    prefix: PrefixIndex,
     /// per-cache decode scratch (one page), reused across reads
     scratch: Mat,
     pages_quantized: usize,
@@ -261,6 +304,7 @@ impl PagedKvCache {
             width,
             seqs: Vec::new(),
             quantizer,
+            prefix: PrefixIndex::new(),
             pages_quantized: 0,
             appended_rows: 0,
             decoded_bytes: 0,
@@ -274,26 +318,249 @@ impl PagedKvCache {
     /// exists.
     pub fn new_seq(&mut self) -> SeqId {
         let tables: Vec<PageTable> = (0..2 * self.n_layer).map(|_| PageTable::default()).collect();
+        let slot = SeqSlot { tables, claimed: Vec::new() };
         match self.seqs.iter().position(|s| s.is_none()) {
             Some(i) => {
-                self.seqs[i] = Some(SeqSlot { tables });
+                self.seqs[i] = Some(slot);
                 SeqId(i)
             }
             None => {
-                self.seqs.push(Some(SeqSlot { tables }));
+                self.seqs.push(Some(slot));
                 SeqId(self.seqs.len() - 1)
             }
         }
     }
 
-    /// Drop a sequence and return all of its pages to the free list.
+    /// Register a new sequence that **claims** the longest shared prefix
+    /// of `tokens` from the radix index, up to `max_rows` positions.
+    /// Matched full pages attach by reference (refcounted, zero copy);
+    /// when the match ends mid-page — the prompt diverges inside a shared
+    /// page, or `max_rows` caps the claim — the matched rows are
+    /// copy-on-write split into fresh exclusive pages, so a shared page
+    /// is never mutated. Returns the handle and the positions claimed;
+    /// the caller prefills only `tokens[claimed..]`. Pass
+    /// `tokens.len() - 1` as `max_rows` when logits for the final prompt
+    /// position are still needed (at least one token must run forward).
+    pub fn new_seq_shared(&mut self, tokens: &[i32], max_rows: usize) -> (SeqId, usize) {
+        let sid = self.new_seq();
+        if !self.opts.prefix_share {
+            return (sid, 0);
+        }
+        let _sp = crate::span!("kv_prefix_claim");
+        let pr = self.opts.page_rows;
+        let cap = tokens.len().min(max_rows);
+        self.prefix.lookups += 1;
+        let mut parent: Option<usize> = None;
+        let mut rows = 0usize;
+        while rows + pr <= cap {
+            let Some(ni) = self.prefix.find_child(parent, &tokens[rows..rows + pr]) else {
+                break;
+            };
+            let pages = self.prefix.node(ni).pages.clone();
+            for (ti, &pid) in pages.iter().enumerate() {
+                self.arena.inc_ref(pid);
+                let t = &mut self.seqs[sid.0].as_mut().expect("fresh sequence").tables[ti];
+                t.pages.push(pid);
+                t.rows += pr;
+            }
+            self.prefix.attach(ni);
+            self.seqs[sid.0].as_mut().expect("fresh sequence").claimed.push(ni);
+            rows += pr;
+            parent = Some(ni);
+        }
+        // divergence (or the cap) inside the next page: CoW-split the
+        // matched rows out of the shared page
+        if rows < cap {
+            if let Some((ni, m)) = self.prefix.best_partial(parent, &tokens[rows..cap]) {
+                if self.cow_claim(sid, ni, m) {
+                    self.prefix.cow_splits += 1;
+                    self.prefix.touch(ni);
+                    rows += m;
+                }
+            }
+        }
+        if rows > 0 {
+            self.prefix.hits += 1;
+            self.prefix.hit_rows += rows;
+        }
+        (sid, rows)
+    }
+
+    /// Copy the first `m` rows of every stream page of node `ni` into
+    /// fresh exclusive pages appended to `sid`'s tables. The shared pages
+    /// are read, never written. Claims nothing (false) when the arena
+    /// cannot hold the `2·n_layer` new pages.
+    fn cow_claim(&mut self, sid: SeqId, ni: usize, m: usize) -> bool {
+        let pr = self.opts.page_rows;
+        let need = 2 * self.n_layer;
+        self.ensure_free(need);
+        if let Some(free) = self.arena_free_now() {
+            if free < need {
+                return false;
+            }
+        }
+        let pages = self.prefix.node(ni).pages.clone();
+        let mut copies: Vec<Vec<f32>> = Vec::with_capacity(pages.len());
+        for &pid in &pages {
+            let mut buf = vec![0.0f32; pr * self.width];
+            match &self.arena.slots[pid] {
+                PageSlot::Hot(src) => {
+                    buf[..m * self.width].copy_from_slice(&src[..m * self.width]);
+                }
+                PageSlot::Quantized(g) => {
+                    g.dequantize_into(&mut self.scratch);
+                    self.decoded_bytes += m * self.width * 4;
+                    buf[..m * self.width].copy_from_slice(&self.scratch.data[..m * self.width]);
+                }
+                PageSlot::Free => unreachable!("prefix node points at a freed page"),
+            }
+            copies.push(buf);
+        }
+        for (ti, buf) in copies.into_iter().enumerate() {
+            let pid = self.arena.adopt_hot(buf).expect("capacity checked above");
+            let t = &mut self.seqs[sid.0].as_mut().expect("sequence exists").tables[ti];
+            t.pages.push(pid);
+            t.rows += m;
+        }
+        true
+    }
+
+    /// Publish the full pages of `tokens[..rows]` into the radix index so
+    /// later sequences can claim them. Pages whose token range is already
+    /// indexed are deduplicated — the sequence's private copies are
+    /// swapped for the shared ones and freed. Idempotent, and a no-op
+    /// unless the cache was built with `prefix_share`.
+    pub fn publish_prefix(&mut self, seq: SeqId, tokens: &[i32]) {
+        if !self.opts.prefix_share {
+            return;
+        }
+        let _sp = crate::span!("kv_prefix_publish");
+        let pr = self.opts.page_rows;
+        let streams = 2 * self.n_layer;
+        let Some(rows) = self.seqs.get(seq.0).and_then(|s| s.as_ref()).map(|s| s.tables[0].rows)
+        else {
+            return;
+        };
+        let full = tokens.len().min(rows) / pr;
+        let mut parent: Option<usize> = None;
+        for d in 0..full {
+            let key = &tokens[d * pr..(d + 1) * pr];
+            let mine: Vec<usize> = (0..streams)
+                .map(|ti| self.seqs[seq.0].as_ref().expect("sequence checked").tables[ti].pages[d])
+                .collect();
+            let ni = match self.prefix.find_child(parent, key) {
+                Some(ni) => {
+                    let shared = self.prefix.node(ni).pages.clone();
+                    if shared != mine {
+                        // dedup: retarget the tables at the shared pages
+                        // and free the private duplicates
+                        for (ti, (&spid, &mpid)) in shared.iter().zip(&mine).enumerate() {
+                            self.arena.inc_ref(spid);
+                            self.seqs[seq.0].as_mut().expect("sequence checked").tables[ti]
+                                .pages[d] = spid;
+                            self.arena.dec_ref(mpid);
+                        }
+                    }
+                    ni
+                }
+                None => {
+                    for &pid in &mine {
+                        self.arena.inc_ref(pid);
+                    }
+                    self.prefix.insert(parent, key.to_vec(), mine)
+                }
+            };
+            let slot = self.seqs[seq.0].as_mut().expect("sequence checked");
+            if slot.claimed.contains(&ni) {
+                self.prefix.touch(ni);
+            } else {
+                slot.claimed.push(ni);
+                self.prefix.attach(ni);
+            }
+            parent = Some(ni);
+        }
+    }
+
+    /// Drop a sequence; shared pages are decremented (freed only when
+    /// the last reference goes), and prefix nodes that went cold are
+    /// optionally re-encoded through the quantizer (quantize-on-share).
     pub fn evict(&mut self, seq: SeqId) {
         if let Some(slot) = self.seqs.get_mut(seq.0).and_then(|s| s.take()) {
             for t in slot.tables {
                 for pid in t.pages {
-                    self.arena.free(pid);
+                    self.arena.dec_ref(pid);
                 }
             }
+            self.release_claims(slot.claimed);
+        }
+    }
+
+    /// Drop a departing sequence's node attachments; a node whose last
+    /// sequence left stays resident as a cold prefix, compressed through
+    /// the lattice quantizer when `quantize_shared` is on — its pages are
+    /// exclusively the index's at that point, so re-encoding cannot
+    /// perturb any live reader.
+    fn release_claims(&mut self, claimed: Vec<usize>) {
+        for ni in claimed {
+            if self.prefix.detach(ni) && self.opts.quantize_shared {
+                let pages = self.prefix.node(ni).pages.clone();
+                for pid in pages {
+                    self.retire(pid);
+                }
+            }
+        }
+    }
+
+    /// Evict cold (refcount-zero) shared prefix pages, least recently
+    /// used first, until at least `want` pages are allocatable. The cold
+    /// cache is opportunistic: it never shrinks schedulable capacity.
+    fn ensure_free(&mut self, want: usize) {
+        if self.opts.max_pages == 0 {
+            return;
+        }
+        while self.arena.free.len() + self.opts.max_pages.saturating_sub(self.arena.slots.len())
+            < want
+        {
+            if self.evict_cold_leaf().is_none() {
+                return;
+            }
+        }
+    }
+
+    /// Remove the least-recently-used cold leaf node and free its pages;
+    /// returns how many pages were reclaimed.
+    fn evict_cold_leaf(&mut self) -> Option<usize> {
+        let ni = self.prefix.cold_lru_leaf()?;
+        let node = self.prefix.remove(ni);
+        let n = node.pages.len();
+        for pid in node.pages {
+            self.arena.dec_ref(pid);
+        }
+        self.prefix.evictions += 1;
+        Some(n)
+    }
+
+    /// Drop every cold shared prefix (pages held only by the index),
+    /// returning the number of arena pages reclaimed. Exposed for tests
+    /// and operational cache flushes.
+    pub fn drop_cold_prefixes(&mut self) -> usize {
+        let mut freed = 0;
+        while let Some(n) = self.evict_cold_leaf() {
+            freed += n;
+        }
+        freed
+    }
+
+    /// Allocatable pages before reclaiming any cold prefix (`None` =
+    /// unbounded arena).
+    fn arena_free_now(&self) -> Option<usize> {
+        if self.opts.max_pages == 0 {
+            None
+        } else {
+            Some(
+                self.arena.free.len()
+                    + self.opts.max_pages.saturating_sub(self.arena.slots.len()),
+            )
         }
     }
 
@@ -341,22 +608,24 @@ impl PagedKvCache {
             quantized_payload_bytes: self.quantized_payload_bytes,
             pages_spilled: self.pages_spilled,
             pages_restored: self.pages_restored,
+            shared_pages: self.prefix.shared_pages(),
+            shared_nodes: self.prefix.node_count(),
+            prefix_lookups: self.prefix.lookups,
+            prefix_hits: self.prefix.hits,
+            prefix_hit_rows: self.prefix.hit_rows,
+            cow_splits: self.prefix.cow_splits,
+            prefix_evictions: self.prefix.evictions,
         }
     }
 
     /// Pages still allocatable before the arena cap is hit: free-list
-    /// slots plus untapped growth headroom. `None` when the arena is
-    /// unbounded (`max_pages == 0`). This is the scheduler's admission
-    /// signal — occupancy read directly, not inferred from counters.
+    /// slots plus untapped growth headroom, **plus** cold shared prefix
+    /// pages (held only by the radix index), which are reclaimed LRU on
+    /// demand. `None` when the arena is unbounded (`max_pages == 0`).
+    /// This is the scheduler's admission signal — occupancy read
+    /// directly, not inferred from counters.
     pub fn free_pages(&self) -> Option<usize> {
-        if self.opts.max_pages == 0 {
-            None
-        } else {
-            Some(
-                self.arena.free.len()
-                    + self.opts.max_pages.saturating_sub(self.arena.slots.len()),
-            )
-        }
+        self.arena_free_now().map(|free| free + self.prefix.cold_pages())
     }
 
     /// Hard arena capacity in pages (`None` = unbounded).
@@ -403,6 +672,34 @@ impl PagedKvCache {
             let mut spilled = Vec::with_capacity(t.pages.len());
             for pid in t.pages {
                 pages += 1;
+                if self.arena.refs[pid] > 1 {
+                    // shared with the prefix index or another sequence:
+                    // snapshot a copy and drop only this sequence's
+                    // reference — the resident page is never freed or
+                    // re-encoded out from under its other readers
+                    let page = match &self.arena.slots[pid] {
+                        PageSlot::Hot(buf) => {
+                            if quantize {
+                                let g = self.quantizer.quantize_page(
+                                    buf,
+                                    self.opts.page_rows,
+                                    self.width,
+                                );
+                                self.pages_quantized += 1;
+                                self.quantized_payload_bytes +=
+                                    g.codes.payload_bytes() + g.side_bytes();
+                                SpilledPage::Coded(g)
+                            } else {
+                                SpilledPage::Raw(buf.clone())
+                            }
+                        }
+                        PageSlot::Quantized(g) => SpilledPage::Coded(g.clone()),
+                        PageSlot::Free => unreachable!("page table points at a freed page"),
+                    };
+                    self.arena.dec_ref(pid);
+                    spilled.push(page);
+                    continue;
+                }
                 match std::mem::replace(&mut self.arena.slots[pid], PageSlot::Free) {
                     PageSlot::Hot(buf) => {
                         self.arena.hot_pages -= 1;
@@ -428,10 +725,12 @@ impl PagedKvCache {
                     }
                     PageSlot::Free => unreachable!("page table points at a freed page"),
                 }
+                self.arena.refs[pid] = 0;
                 self.arena.free.push(pid);
             }
             tables.push((spilled, t.rows));
         }
+        self.release_claims(slot.claimed);
         self.pages_spilled += pages;
         Ok(SpilledSeq { tables, pages })
     }
@@ -453,6 +752,9 @@ impl PagedKvCache {
                 return Err(sp);
             }
         }
+        // the precheck counted cold shared pages as allocatable; make
+        // them actually free before the infallible adopt calls below
+        self.ensure_free(sp.pages);
         let pr = self.opts.page_rows;
         let sid = self.new_seq();
         let pages = sp.pages;
@@ -502,6 +804,7 @@ impl PagedKvCache {
         };
         let off = rows % page_rows;
         if off == 0 {
+            self.ensure_free(1);
             let pid = self.arena.alloc()?;
             self.seqs[seq.0].as_mut().expect("sequence checked above").tables[ti].pages.push(pid);
         }
@@ -579,6 +882,82 @@ impl PagedKvCache {
             }
         }
     }
+
+    /// Structural audit for the property-test layer: every arena
+    /// refcount equals the number of live page-table references plus
+    /// index references, no refcount-zero page is reachable or still
+    /// allocated, the free list is duplicate-free and complete, and node
+    /// liveness matches the sequences' claim lists. Returns a
+    /// description of the first violation.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let n = self.arena.slots.len();
+        let mut want = vec![0u32; n];
+        for s in self.seqs.iter().flatten() {
+            for t in &s.tables {
+                for &pid in &t.pages {
+                    want[pid] += 1;
+                }
+            }
+        }
+        let mut live = vec![0u32; self.prefix.capacity()];
+        for s in self.seqs.iter().flatten() {
+            for &ni in &s.claimed {
+                live[ni] += 1;
+            }
+        }
+        for (ni, node) in self.prefix.iter() {
+            if node.live != live[ni] {
+                return Err(format!(
+                    "node {ni}: live {} != {} claiming sequences",
+                    node.live, live[ni]
+                ));
+            }
+            for &pid in &node.pages {
+                want[pid] += 1;
+            }
+        }
+        for (pid, &w) in want.iter().enumerate() {
+            if self.arena.refs[pid] != w {
+                return Err(format!(
+                    "page {pid}: refcount {} != {} references",
+                    self.arena.refs[pid], w
+                ));
+            }
+            let is_free = matches!(self.arena.slots[pid], PageSlot::Free);
+            if w == 0 && !is_free {
+                return Err(format!("page {pid}: refcount zero but still allocated"));
+            }
+            if w > 0 && is_free {
+                return Err(format!("page {pid}: referenced but freed"));
+            }
+        }
+        let mut seen = vec![false; n];
+        for &pid in &self.arena.free {
+            if seen[pid] {
+                return Err(format!("page {pid}: on the free list twice"));
+            }
+            seen[pid] = true;
+            if !matches!(self.arena.slots[pid], PageSlot::Free) {
+                return Err(format!("page {pid}: on the free list but not free"));
+            }
+            if self.arena.refs[pid] != 0 {
+                return Err(format!(
+                    "page {pid}: on the free list with refcount {}",
+                    self.arena.refs[pid]
+                ));
+            }
+        }
+        let free_slots =
+            (0..n).filter(|&p| matches!(self.arena.slots[p], PageSlot::Free)).count();
+        if free_slots != self.arena.free.len() {
+            return Err(format!(
+                "{free_slots} free slots but {} free-list entries",
+                self.arena.free.len()
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -588,6 +967,25 @@ mod tests {
 
     fn rand_row(rng: &mut Rng, w: usize) -> Vec<f32> {
         (0..w).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn share_opts(page_rows: usize, max_pages: usize) -> KvCacheOpts {
+        KvCacheOpts { page_rows, prefix_share: true, max_pages, ..Default::default() }
+    }
+
+    /// Append `n` position rows (deterministic content, distinct per
+    /// stream and position) to **every** (layer, K|V) stream.
+    fn fill_all(c: &mut PagedKvCache, s: SeqId, n_layer: usize, w: usize, start: usize, n: usize) {
+        for p in start..start + n {
+            for l in 0..n_layer {
+                for which in [Kv::K, Kv::V] {
+                    let tag = (2 * l + which.index()) as f32;
+                    let row: Vec<f32> =
+                        (0..w).map(|j| p as f32 + 0.25 * tag + 0.01 * j as f32).collect();
+                    c.append(s, l, which, &row).unwrap();
+                }
+            }
+        }
     }
 
     #[test]
@@ -835,5 +1233,179 @@ mod tests {
         c.visit(s, 0, Kv::K, 10, |_, _| calls += 1);
         assert_eq!(calls, 0);
         assert_eq!(c.rows(s, 0, Kv::K), 0);
+    }
+
+    #[test]
+    fn shared_prefix_claim_attaches_published_pages() {
+        let mut c = PagedKvCache::new(2, 4, share_opts(2, 0));
+        let a = c.new_seq();
+        fill_all(&mut c, a, 2, 4, 0, 6); // 3 full pages per stream
+        let toks: Vec<i32> = (0..6).collect();
+        c.publish_prefix(a, &toks);
+        c.check_invariants().unwrap();
+        let before = c.stats().pages_in_use;
+        // a second sequence with the same prompt claims every full page
+        let (b, claimed) = c.new_seq_shared(&toks, toks.len());
+        assert_eq!(claimed, 6);
+        assert_eq!(c.rows(b, 1, Kv::V), 6);
+        assert_eq!(c.stats().pages_in_use, before, "a full claim allocates nothing");
+        assert_eq!(c.stats().prefix_hits, 1);
+        assert_eq!(c.stats().prefix_hit_rows, 6);
+        let mut got = Vec::new();
+        c.visit(b, 0, Kv::K, 6, |_, rows| got.extend_from_slice(rows));
+        let mut want = Vec::new();
+        c.visit(a, 0, Kv::K, 6, |_, rows| want.extend_from_slice(rows));
+        assert_eq!(got, want, "claimed pages read back bit-exactly");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finished_sequences_decrement_shared_pages_instead_of_freeing() {
+        // regression: eviction used to return every table page to the
+        // free list unconditionally — with two sequences sharing prefix
+        // pages, the first eviction corrupted the survivor's reads and
+        // the second double-freed the pages
+        let mut c = PagedKvCache::new(1, 4, share_opts(2, 0));
+        let a = c.new_seq();
+        fill_all(&mut c, a, 1, 4, 0, 4);
+        let toks: Vec<i32> = (0..4).collect();
+        c.publish_prefix(a, &toks);
+        let (b, claimed) = c.new_seq_shared(&toks, 4);
+        assert_eq!(claimed, 4);
+        c.evict(a);
+        // b still reads the shared pages after a's eviction
+        let mut rows_seen = 0;
+        c.visit(b, 0, Kv::K, 4, |_, r| rows_seen += r.len() / 4);
+        assert_eq!(rows_seen, 4);
+        c.check_invariants().unwrap();
+        c.evict(b);
+        c.check_invariants().unwrap();
+        // the prefix stays resident (cold) exactly once; flushing frees
+        // each page a single time
+        assert_eq!(c.stats().shared_pages, 4);
+        assert_eq!(c.stats().pages_in_use, 4);
+        let freed = c.drop_cold_prefixes();
+        assert_eq!(freed, 4);
+        assert_eq!(c.stats().pages_in_use, 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_split_copies_and_never_mutates_the_shared_page() {
+        let mut c = PagedKvCache::new(1, 4, share_opts(4, 0));
+        let a = c.new_seq();
+        fill_all(&mut c, a, 1, 4, 0, 4); // exactly one full page per stream
+        let toks: Vec<i32> = vec![1, 2, 3, 4];
+        c.publish_prefix(a, &toks);
+        let mut shared_before = Vec::new();
+        c.visit(a, 0, Kv::K, 4, |_, r| shared_before.extend_from_slice(r));
+        // b diverges at the third token: CoW-claims the 2 matching rows
+        let div = vec![1, 2, 9, 9];
+        let (b, claimed) = c.new_seq_shared(&div, 4);
+        assert_eq!(claimed, 2);
+        assert_eq!(c.stats().cow_splits, 1);
+        // b's copy holds the matched rows and keeps growing independently
+        fill_all(&mut c, b, 1, 4, 90, 2);
+        let mut b_rows = Vec::new();
+        c.visit(b, 0, Kv::K, 4, |_, r| b_rows.extend_from_slice(r));
+        assert_eq!(&b_rows[..2 * 4], &shared_before[..2 * 4]);
+        assert_ne!(&b_rows[2 * 4..], &shared_before[2 * 4..]);
+        // the shared page itself is untouched
+        let mut shared_after = Vec::new();
+        c.visit(a, 0, Kv::K, 4, |_, r| shared_after.extend_from_slice(r));
+        assert_eq!(shared_after, shared_before);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cold_prefixes_are_reclaimed_under_page_pressure() {
+        // arena of 4 pages holding one cold shared prefix (2 pages)
+        let mut c = PagedKvCache::new(1, 4, share_opts(2, 4));
+        let a = c.new_seq();
+        fill_all(&mut c, a, 1, 4, 0, 2); // one full page per stream
+        let toks: Vec<i32> = vec![7, 8];
+        c.publish_prefix(a, &toks);
+        c.evict(a); // the prefix goes cold but stays resident
+        assert_eq!(c.stats().pages_in_use, 2);
+        assert_eq!(c.free_pages(), Some(4), "cold pages count as allocatable");
+        // a new sequence needs the whole arena: the cold prefix is evicted
+        let b = c.new_seq();
+        fill_all(&mut c, b, 1, 4, 0, 4);
+        assert_eq!(c.stats().prefix_evictions, 1);
+        assert_eq!(c.stats().shared_pages, 0);
+        assert_eq!(c.stats().pages_in_use, 4);
+        c.check_invariants().unwrap();
+        // evict-then-reinsert round-trips: publish again, claim again
+        let toks2: Vec<i32> = (0..4).collect();
+        c.publish_prefix(b, &toks2);
+        let (d, claimed) = c.new_seq_shared(&toks2, 4);
+        assert_eq!(claimed, 4);
+        assert_eq!(c.rows(d, 0, Kv::K), 4);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quantize_on_share_retires_cold_prefix_pages() {
+        let opts = KvCacheOpts {
+            page_rows: 8,
+            prefix_share: true,
+            quantize_shared: true,
+            kv_bits: 8,
+            ..Default::default()
+        };
+        let mut c = PagedKvCache::new(1, 32, opts);
+        let a = c.new_seq();
+        let mut rng = Rng::new(9);
+        let mut want: Vec<f32> = Vec::new();
+        for _ in 0..8 {
+            let rk = rand_row(&mut rng, 32);
+            let rv = rand_row(&mut rng, 32);
+            c.append(a, 0, Kv::K, &rk).unwrap();
+            c.append(a, 0, Kv::V, &rv).unwrap();
+            want.extend_from_slice(&rk);
+        }
+        let toks: Vec<i32> = (0..8).collect();
+        c.publish_prefix(a, &toks);
+        assert_eq!(c.stats().pages_quantized, 0, "pages stay hot while a reader is live");
+        c.evict(a);
+        assert_eq!(c.stats().pages_quantized, 2, "cold shared pages retire via the quantizer");
+        // a later claim decodes the lattice representation within tolerance
+        let (b, claimed) = c.new_seq_shared(&toks, 8);
+        assert_eq!(claimed, 8);
+        let mut got = Vec::new();
+        c.visit(b, 0, Kv::K, 8, |_, r| got.extend_from_slice(r));
+        let mx = want.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+        for (x, y) in want.iter().zip(&got) {
+            assert!((x - y).abs() < 0.1 * mx, "quantized shared page drifted: {x} vs {y}");
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn spill_of_a_shared_sequence_copies_instead_of_freeing() {
+        let mut c = PagedKvCache::new(1, 4, share_opts(2, 0));
+        let a = c.new_seq();
+        fill_all(&mut c, a, 1, 4, 0, 4);
+        let toks: Vec<i32> = (0..4).collect();
+        c.publish_prefix(a, &toks);
+        let (b, claimed) = c.new_seq_shared(&toks, 4);
+        assert_eq!(claimed, 4);
+        let pages_before = c.stats().pages_in_use;
+        // spilling b snapshots the shared pages; a and the index keep
+        // reading the originals
+        let sp = c.spill(b, false).unwrap();
+        assert_eq!(sp.pages(), 4);
+        assert_eq!(c.stats().pages_in_use, pages_before, "shared pages stay resident");
+        let mut rows_seen = 0;
+        c.visit(a, 0, Kv::K, 4, |_, r| rows_seen += r.len() / 4);
+        assert_eq!(rows_seen, 4);
+        c.check_invariants().unwrap();
+        // the restored copy is independent and bit-exact
+        let b2 = c.restore(sp).unwrap();
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        c.visit(b2, 0, Kv::V, 4, |_, r| got.extend_from_slice(r));
+        c.visit(a, 0, Kv::V, 4, |_, r| want.extend_from_slice(r));
+        assert_eq!(got, want);
+        c.check_invariants().unwrap();
     }
 }

@@ -1,0 +1,211 @@
+//! Radix index over token prefixes → shared arena pages.
+//!
+//! Each node covers exactly one page worth of tokens (`page_rows`) and
+//! records the arena page ids holding that token range's K/V rows for
+//! every (layer, K|V) stream. A path from a root to a node therefore
+//! spells out a token prefix whose cached state can be claimed by a new
+//! sequence instead of re-prefilled — the vLLM-style radix cache, here
+//! over GLVQ-quantizable pages.
+//!
+//! The index owns **no** storage and performs **no** refcounting itself:
+//! it stores page ids and per-node bookkeeping (`live` attachment counts
+//! and LRU stamps), while [`super::paged::PagedKvCache`] moves the arena
+//! refcounts in lockstep. Keeping the structure pure makes the
+//! refcounting invariants auditable in one place
+//! (`PagedKvCache::check_invariants`).
+//!
+//! Liveness is hierarchical by construction: sequences attach to every
+//! node along their claimed path, so a node with live descendants is
+//! itself live. Cold (live == 0) nodes are the only eviction candidates,
+//! peeled leaf-first in LRU order.
+
+/// One radix node: a page-aligned token range and its shared pages.
+pub(super) struct PrefixNode {
+    /// exactly `page_rows` tokens extending the parent's prefix
+    pub key: Vec<i32>,
+    /// arena page ids, stream-major (`2·layer + Kv::index()`)
+    pub pages: Vec<usize>,
+    /// child node ids (keys are distinct among siblings)
+    pub children: Vec<usize>,
+    /// `None` for a root node
+    pub parent: Option<usize>,
+    /// live sequences currently attached to this node's pages
+    pub live: u32,
+    /// logical LRU stamp (monotone tick, not wall time)
+    pub last_used: u64,
+}
+
+/// The prefix index: a slab of nodes plus counters surfaced through
+/// `KvCacheStats`.
+pub(super) struct PrefixIndex {
+    nodes: Vec<Option<PrefixNode>>,
+    vacant: Vec<usize>,
+    roots: Vec<usize>,
+    tick: u64,
+    /// prefix lookups attempted (one per shared sequence registration)
+    pub lookups: usize,
+    /// lookups that claimed at least one row
+    pub hits: usize,
+    /// rows claimed from shared pages (cumulative)
+    pub hit_rows: usize,
+    /// copy-on-write splits of a mid-page divergence (cumulative)
+    pub cow_splits: usize,
+    /// cold nodes evicted under page pressure (cumulative)
+    pub evictions: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: Vec::new(),
+            vacant: Vec::new(),
+            roots: Vec::new(),
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            hit_rows: 0,
+            cow_splits: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn node(&self, ni: usize) -> &PrefixNode {
+        self.nodes[ni].as_ref().expect("live prefix node")
+    }
+
+    fn node_mut(&mut self, ni: usize) -> &mut PrefixNode {
+        self.nodes[ni].as_mut().expect("live prefix node")
+    }
+
+    fn child_ids(&self, parent: Option<usize>) -> &[usize] {
+        match parent {
+            Some(p) => &self.node(p).children,
+            None => &self.roots,
+        }
+    }
+
+    /// Exact-key child lookup under `parent` (`None` = the roots).
+    pub fn find_child(&self, parent: Option<usize>, key: &[i32]) -> Option<usize> {
+        self.child_ids(parent).iter().copied().find(|&ni| self.node(ni).key == key)
+    }
+
+    /// Child of `parent` sharing the longest non-empty common prefix with
+    /// `want`, for the copy-on-write split at a mid-page divergence.
+    /// Returns `(node, common_len)`; `common_len ≤ want.len()`.
+    pub fn best_partial(&self, parent: Option<usize>, want: &[i32]) -> Option<(usize, usize)> {
+        let mut best = None;
+        let mut best_m = 0usize;
+        for &ni in self.child_ids(parent) {
+            let key = &self.node(ni).key;
+            let m = key.iter().zip(want).take_while(|(a, b)| a == b).count();
+            if m > best_m {
+                best = Some((ni, m));
+                best_m = m;
+            }
+        }
+        best
+    }
+
+    /// Insert a new node under `parent`. The caller has already taken the
+    /// index's reference on every page.
+    pub fn insert(&mut self, parent: Option<usize>, key: Vec<i32>, pages: Vec<usize>) -> usize {
+        self.tick += 1;
+        let node = PrefixNode {
+            key,
+            pages,
+            children: Vec::new(),
+            parent,
+            live: 0,
+            last_used: self.tick,
+        };
+        let ni = match self.vacant.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        match parent {
+            Some(p) => self.node_mut(p).children.push(ni),
+            None => self.roots.push(ni),
+        }
+        ni
+    }
+
+    /// Detach a childless node from the tree and return it — the caller
+    /// drops the index's page references.
+    pub fn remove(&mut self, ni: usize) -> PrefixNode {
+        let node = self.nodes[ni].take().expect("live prefix node");
+        debug_assert!(node.children.is_empty(), "removing an interior prefix node");
+        match node.parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != ni),
+            None => self.roots.retain(|&c| c != ni),
+        }
+        self.vacant.push(ni);
+        node
+    }
+
+    /// Record one live sequence attaching to this node.
+    pub fn attach(&mut self, ni: usize) {
+        self.tick += 1;
+        let t = self.tick;
+        let n = self.node_mut(ni);
+        n.live += 1;
+        n.last_used = t;
+    }
+
+    /// Drop one live attachment; true when the node went cold.
+    pub fn detach(&mut self, ni: usize) -> bool {
+        self.tick += 1;
+        let t = self.tick;
+        let n = self.node_mut(ni);
+        debug_assert!(n.live > 0, "detach of a cold prefix node");
+        n.live = n.live.saturating_sub(1);
+        n.last_used = t;
+        n.live == 0
+    }
+
+    /// Refresh a node's LRU stamp without attaching.
+    pub fn touch(&mut self, ni: usize) {
+        self.tick += 1;
+        let t = self.tick;
+        self.node_mut(ni).last_used = t;
+    }
+
+    /// Least-recently-used cold leaf — the only legal eviction victim.
+    /// Cold interior nodes become leaves once their subtree is peeled.
+    pub fn cold_lru_leaf(&self) -> Option<usize> {
+        self.iter()
+            .filter(|(_, n)| n.live == 0 && n.children.is_empty())
+            .min_by_key(|(_, n)| n.last_used)
+            .map(|(ni, _)| ni)
+    }
+
+    /// Arena pages held only by the index — reclaimable on demand, so
+    /// they count as allocatable capacity for admission control.
+    pub fn cold_pages(&self) -> usize {
+        self.iter().filter(|(_, n)| n.live == 0).map(|(_, n)| n.pages.len()).sum()
+    }
+
+    /// Arena pages currently referenced by the index (cold or live).
+    pub fn shared_pages(&self) -> usize {
+        self.iter().map(|(_, n)| n.pages.len()).sum()
+    }
+
+    /// Live node count.
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    /// Slab capacity (for parallel bookkeeping arrays in audits).
+    pub fn capacity(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &PrefixNode)> {
+        self.nodes.iter().enumerate().filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+    }
+}

@@ -82,10 +82,12 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
             [--shards N] [--threads N] [--panel-rows R] [--kv-cache]
-            [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--continuous]
-            [--max-batch B] [--prefill-chunk C] [--max-tokens-in-flight T]
-            [--max-queue Q] [--metrics-out FILE] [--trace-out FILE]
-            (reads 'gen <prompt>' lines)
+            [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--prefix-share]
+            [--continuous] [--max-batch B] [--prefill-chunk C]
+            [--max-tokens-in-flight T] [--max-queue Q]
+            [--metrics-out FILE] [--trace-out FILE]
+            (reads 'gen <prompt>' | 'score <p>' | 'session <system>' |
+             'say <user>' lines)
   exp       table1..table13 | all  [--dir runs]
   info      [--artifacts DIR] [--container FILE.glvq]
 
@@ -115,6 +117,14 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   --kv-max-pages  hard KV arena capacity in pages (default 0 = grow on
                demand); a bounded arena is what makes --continuous
                preemption observable
+  --prefix-share  radix prefix sharing over the paged arena (implies
+               --kv-cache): new requests claim the longest cached token
+               prefix instead of re-prefilling it, divergences copy-on-
+               write split, departed prefixes stay resident cold until
+               page pressure evicts them LRU — multi-turn 'session' /
+               'say' lines resume their transcript's KV this way; with
+               --kv-bits set, cold shared prefixes are re-encoded through
+               the lattice quantizer (quantize-on-share)
   --continuous continuous batching instead of lockstep (implies
                --kv-cache): requests join/leave the step batch per token,
                long prompts prefill in --prefill-chunk slices, finished
@@ -245,8 +255,10 @@ fn main() -> Result<()> {
             let bits = args.get_f64("bits", 2.0);
             let cfg = ws.model_cfg(&model)?;
             let continuous = args.flags.get("continuous").is_some_and(|v| v != "false");
-            let kv_cache =
-                continuous || args.flags.get("kv-cache").is_some_and(|v| v != "false");
+            let prefix_share = args.flags.get("prefix-share").is_some_and(|v| v != "false");
+            let kv_cache = continuous
+                || prefix_share
+                || args.flags.get("kv-cache").is_some_and(|v| v != "false");
             let kv_bits = args.get_usize("kv-bits", 0);
             let kv_page = args.get_usize("kv-page", 16);
             let kv = KvCacheOpts {
@@ -254,6 +266,8 @@ fn main() -> Result<()> {
                 quantize: kv_bits > 0,
                 kv_bits: kv_bits.clamp(1, 8) as u8,
                 max_pages: args.get_usize("kv-max-pages", 0),
+                prefix_share,
+                quantize_shared: prefix_share && kv_bits > 0,
                 ..KvCacheOpts::default()
             };
             // --shards N: total --threads split across the persistent
@@ -431,9 +445,10 @@ fn main() -> Result<()> {
                     ServerOpts::default(),
                 )
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, continuous={continuous}); type: gen <prompt> | score <p> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
+            let mut session: Option<u64> = None;
             loop {
                 line.clear();
                 if stdin.read_line(&mut line)? == 0 {
@@ -450,6 +465,25 @@ fn main() -> Result<()> {
                         prompt: p.as_bytes().to_vec(),
                         continuation: b". the".to_vec(),
                     })?
+                } else if let Some(p) = line.strip_prefix("session ") {
+                    // open a multi-turn session seeded with the system
+                    // prompt; following 'say' lines resume its transcript
+                    // (and, with --prefix-share, its cached KV prefix)
+                    if let Some(old) = session.take() {
+                        handle.end_session(old);
+                    }
+                    let sid = handle.begin_session(p.as_bytes());
+                    session = Some(sid);
+                    println!("session {sid} open");
+                    continue;
+                } else if let Some(p) = line.strip_prefix("say ") {
+                    match session {
+                        Some(sid) => handle.continue_session(sid, p.as_bytes(), 48)?,
+                        None => {
+                            println!("no open session (start one with: session <system prompt>)");
+                            continue;
+                        }
+                    }
                 } else {
                     println!("unknown command");
                     continue;

@@ -53,6 +53,24 @@ pub trait SeqBackend {
     /// Register a fresh cache sequence.
     fn begin_seq(&mut self) -> SeqId;
 
+    /// Register a fresh cache sequence, claiming the longest cached
+    /// prefix of `tokens` (capped at `max_rows`) when the backend shares
+    /// prefixes. Returns the sequence plus the number of leading tokens
+    /// whose K/V rows are already cached — the scheduler starts feeding
+    /// at that offset. Backends without sharing claim nothing.
+    fn begin_seq_prefixed(&mut self, tokens: &[i32], max_rows: usize) -> (SeqId, usize) {
+        let _ = (tokens, max_rows);
+        (self.begin_seq(), 0)
+    }
+
+    /// Publish a sequence's fed `tokens` into the shared-prefix index so
+    /// later admissions can claim them (no-op without sharing).
+    /// Idempotent: re-publishing a longer prefix of the same stream only
+    /// extends the shared path.
+    fn publish_seq(&mut self, sid: SeqId, tokens: &[i32]) {
+        let _ = (sid, tokens);
+    }
+
     /// Advance every `(sequence, new-tokens)` pair in one forward; logits
     /// for all new positions, sequence-major (`Σ nᵦ × V`).
     fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat>;
@@ -456,7 +474,6 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                 span::now_ns().saturating_sub(q.submitted.elapsed().as_nanos() as u64);
             let mut timeline = RequestTimeline::with_base(q.id, base_ns);
             timeline.mark(Mark::Admit);
-            let sid = self.backend.begin_seq();
             let (kind, tokens) = match q.request {
                 Request::Generate { prompt, max_new } => {
                     let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
@@ -469,12 +486,24 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                     (Kind::Score { prompt_len, logprob: 0.0 }, tokens)
                 }
             };
+            // claim cap: at least one token must still be fed to produce
+            // logits, and a Score needs every row from prompt_len-1 on
+            // fed live (claimed rows produce no logits)
+            let cap = match &kind {
+                Kind::Gen { .. } => tokens.len().saturating_sub(1),
+                Kind::Score { prompt_len, .. } => prompt_len.saturating_sub(1),
+            };
+            let (sid, claimed) = self.backend.begin_seq_prefixed(&tokens, cap);
+            if claimed > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_tokens += claimed;
+            }
             self.tokens_in_flight += q.need;
             self.running.push(RunSeq {
                 rid: q.id,
                 kind,
                 tokens,
-                fed: 0,
+                fed: claimed,
                 slot: CacheSlot::Active(sid),
                 need: q.need,
                 submitted: q.submitted,
@@ -588,6 +617,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
     /// retire whatever completed.
     fn apply_logits(&mut self, items: &[(usize, usize)], logits: &Mat) {
         let mut done: Vec<usize> = Vec::new();
+        let mut publish_prompt: Vec<usize> = Vec::new();
         let mut row0 = 0usize;
         for &(i, take) in items {
             let s = &mut self.running[i];
@@ -603,6 +633,10 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                             s.first_token = true;
                             self.metrics.ttft.record(elapsed_ms(s.submitted));
                             s.timeline.mark(Mark::FirstToken);
+                            // the whole prompt is cached now: publish it
+                            // so concurrent admissions can claim it while
+                            // this sequence is still decoding
+                            publish_prompt.push(i);
                         }
                         s.tokens.push(t);
                         s.timeline.mark(Mark::DecodeStep);
@@ -638,6 +672,13 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             }
             row0 += take;
         }
+        for i in publish_prompt {
+            let (sid, p) = match (&self.running[i].kind, &self.running[i].slot) {
+                (Kind::Gen { prompt_len, .. }, CacheSlot::Active(sid)) => (*sid, *prompt_len),
+                _ => continue,
+            };
+            self.backend.publish_seq(sid, &self.running[i].tokens[..p]);
+        }
         for i in done {
             self.finish_seq(i);
         }
@@ -652,6 +693,11 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
         }
         let slot = std::mem::replace(&mut self.running[i].slot, CacheSlot::Parked);
         if let CacheSlot::Active(sid) = slot {
+            // publish the fed prefix before retiring so the departing
+            // sequence's pages survive as a (cold) shared prefix instead
+            // of being freed — a follow-up turn claims them back
+            let fed = self.running[i].fed;
+            self.backend.publish_seq(sid, &self.running[i].tokens[..fed]);
             self.backend.retire_seq(sid);
         }
         let s = &mut self.running[i];
@@ -738,6 +784,12 @@ mod tests {
             let opts = KvCacheOpts { page_rows, max_pages, ..Default::default() };
             MockBackend { seq_len, cache: PagedKvCache::new(1, MOCK_W, opts) }
         }
+
+        fn shared(seq_len: usize, page_rows: usize, max_pages: usize) -> MockBackend {
+            let opts =
+                KvCacheOpts { page_rows, max_pages, prefix_share: true, ..Default::default() };
+            MockBackend { seq_len, cache: PagedKvCache::new(1, MOCK_W, opts) }
+        }
     }
 
     impl SeqBackend for MockBackend {
@@ -747,6 +799,14 @@ mod tests {
 
         fn begin_seq(&mut self) -> SeqId {
             self.cache.new_seq()
+        }
+
+        fn begin_seq_prefixed(&mut self, tokens: &[i32], max_rows: usize) -> (SeqId, usize) {
+            self.cache.new_seq_shared(tokens, max_rows)
+        }
+
+        fn publish_seq(&mut self, sid: SeqId, tokens: &[i32]) {
+            self.cache.publish_prefix(sid, tokens);
         }
 
         fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
@@ -1062,6 +1122,41 @@ mod tests {
         let tv = m.timelines.iter().find(|t| t.rid == trivial).unwrap();
         assert_eq!(tv.count(Mark::Finish), 1);
         assert_eq!(tv.count(Mark::Admit), 0, "trivial requests never admit");
+    }
+
+    #[test]
+    fn shared_prefix_admission_skips_cached_prompt_tokens() {
+        // same prompt twice, sequentially: the second admission claims
+        // the prefix the first one published at retirement and feeds only
+        // the final prompt token — identical output, almost no prefill
+        let mut sched = ContinuousScheduler::new(
+            MockBackend::shared(256, 4, 0),
+            ContinuousOpts { prefill_chunk: 16, ..Default::default() },
+        );
+        let now = Instant::now();
+        let prompt = vec![42u8; 12];
+        sched.submit(Request::Generate { prompt: prompt.clone(), max_new: 2 }, now).unwrap();
+        let done = run_to_completion(&mut sched, 100);
+        assert_eq!(done.len(), 1);
+        let first_prefill = sched.metrics().prefill_tokens;
+        assert_eq!(first_prefill, 12, "cold cache prefills the whole prompt");
+        sched.submit(Request::Generate { prompt, max_new: 2 }, now).unwrap();
+        let done = run_to_completion(&mut sched, 100);
+        assert_eq!(done.len(), 1);
+        match &done[0].1 {
+            Response::Generated { text } => assert_eq!(text, &counting_text(42, 2)),
+            other => panic!("unexpected {other:?}"),
+        }
+        let m = sched.metrics();
+        assert_eq!(m.prefix_hits, 1, "second admission hits the shared prefix");
+        assert_eq!(m.prefix_tokens, 11, "claim caps at prompt_len - 1");
+        assert_eq!(
+            m.prefill_tokens, first_prefill,
+            "the claimed admission feeds one pending token — no prefill chunk at all"
+        );
+        let kv = m.kv_cache.expect("mock reports cache stats");
+        assert!(kv.prefix_hits >= 1 && kv.prefix_hit_rows >= 11);
+        assert!(kv.cow_splits >= 1, "the 3-token tail of the cap splits mid-page");
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Prefix-sharing cache runtime: property + differential layer (ISSUE 7).
+//!
+//! 1. **Refcount soundness under arbitrary interleavings** — random
+//!    sequences of claim / append / publish / evict / spill / restore /
+//!    cold-flush ops against a small arena, with the cache's structural
+//!    audit ([`PagedKvCache::check_invariants`]) run after every op:
+//!    every arena refcount equals the number of live references, no
+//!    refcount-zero page is reachable, the free list is exact.
+//! 2. **Evict-then-reinsert round-trips** — a dropped cold prefix is no
+//!    longer claimable, republishing the same tokens rebuilds it, and a
+//!    later claim matches it fully again.
+//! 3. **Copy-on-write never mutates a shared page** — a claim that
+//!    diverges mid-page leaves the publisher's rows bit-identical, and
+//!    the claimer's shared rows equal the publisher's exactly.
+//! 4. **Differential serving** — a seeded multi-turn chat workload
+//!    (interleaved begin / continue / finish plus concurrent bursts that
+//!    put preemption pressure on a bounded arena) produces byte-identical
+//!    responses with prefix sharing off and on, while the sharing run
+//!    prefills strictly fewer tokens; the saved tokens are exactly the
+//!    claimed ones.
+
+use glvq::coordinator::metrics::ServerMetrics;
+use glvq::coordinator::server::{start_continuous, CachedNativeBackend, Request, Response};
+use glvq::kvcache::{Kv, KvCacheOpts, PagedKvCache, SeqId, SpilledSeq};
+use glvq::model::{init_params, ModelConfig};
+use glvq::serving::ContinuousOpts;
+use glvq::util::proptest::proptest;
+use glvq::util::rng::Rng;
+
+fn share_opts(page_rows: usize, max_pages: usize) -> KvCacheOpts {
+    KvCacheOpts { page_rows, prefix_share: true, max_pages, ..Default::default() }
+}
+
+/// Append rows for `tokens[start..]` to every (layer, K|V) stream. Row
+/// content is a pure function of (token, position, stream), so two
+/// sequences that agree on a token prefix hold bit-identical rows there —
+/// the same determinism the real forward provides.
+fn fill_rows(c: &mut PagedKvCache, s: SeqId, n_layer: usize, tokens: &[i32], start: usize) {
+    let w = c.width();
+    for (p, &t) in tokens.iter().enumerate().skip(start) {
+        for l in 0..n_layer {
+            for which in [Kv::K, Kv::V] {
+                let stream = (2 * l + usize::from(matches!(which, Kv::V))) as f32;
+                let row: Vec<f32> = (0..w)
+                    .map(|j| t as f32 + 0.25 * stream + 0.01 * p as f32 + 0.001 * j as f32)
+                    .collect();
+                c.append(s, l, which, &row).unwrap();
+            }
+        }
+    }
+}
+
+/// Concatenated contents of rows `[0, rows)` of every stream of `s`.
+fn snap(c: &mut PagedKvCache, s: SeqId, n_layer: usize, rows: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for l in 0..n_layer {
+        for which in [Kv::K, Kv::V] {
+            let mut v = Vec::new();
+            c.visit(s, l, which, rows, |_, chunk| v.extend_from_slice(chunk));
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[test]
+fn refcounts_and_free_lists_survive_random_op_interleavings() {
+    proptest(256, |rig| {
+        let pr = *rig.choice(&[2usize, 3, 4]);
+        let n_layer = rig.usize_in(1, 2);
+        let max_pages = *rig.choice(&[0usize, 24, 48]);
+        let opts = KvCacheOpts {
+            quantize: rig.bool(),
+            quantize_shared: rig.bool(),
+            ..share_opts(pr, max_pages)
+        };
+        let mut c = PagedKvCache::new(n_layer, 4, opts);
+        // two prompt families with a shared head, so claims, mid-page
+        // divergences and dedup publishes all actually occur
+        let base: Vec<i32> = (0..16).map(|i| (i % 5) as i32).collect();
+        let alt: Vec<i32> = {
+            let mut v = base.clone();
+            for (i, t) in v.iter_mut().enumerate().skip(6) {
+                *t = (i % 3 + 5) as i32;
+            }
+            v
+        };
+        let mut live: Vec<(SeqId, Vec<i32>)> = Vec::new();
+        let mut parked: Vec<(SpilledSeq, Vec<i32>)> = Vec::new();
+        for op in 0..10 {
+            match rig.usize_in(0, 5) {
+                0 | 1 => {
+                    // begin: claim the longest shared prefix, prefill the
+                    // rest — shedding the admission when the arena is full
+                    let src = if rig.bool() { &base } else { &alt };
+                    let len = rig.usize_in(1, 16);
+                    let mut tokens = src[..len].to_vec();
+                    if rig.bool() {
+                        let i = rig.usize_in(0, len - 1);
+                        tokens[i] += 11;
+                    }
+                    let cap = if rig.bool() { len } else { len - 1 };
+                    let (sid, claimed) = c.new_seq_shared(&tokens, cap);
+                    let need = c.pages_needed(claimed, len - claimed);
+                    if c.free_pages().is_some_and(|f| f < need) {
+                        c.evict(sid);
+                    } else {
+                        fill_rows(&mut c, sid, n_layer, &tokens, claimed);
+                        live.push((sid, tokens));
+                    }
+                }
+                2 => {
+                    // publish mid-flight (idempotent; dedups duplicates)
+                    if !live.is_empty() {
+                        let i = rig.usize_in(0, live.len() - 1);
+                        let (sid, tokens) = (live[i].0, live[i].1.clone());
+                        c.publish_prefix(sid, &tokens);
+                    }
+                }
+                3 => {
+                    // finish: usually publish, then drop
+                    if !live.is_empty() {
+                        let i = rig.usize_in(0, live.len() - 1);
+                        let (sid, tokens) = live.swap_remove(i);
+                        if rig.bool() {
+                            c.publish_prefix(sid, &tokens);
+                        }
+                        c.evict(sid);
+                    }
+                }
+                4 => {
+                    // preempt: park the sequence outside the arena
+                    if !live.is_empty() {
+                        let i = rig.usize_in(0, live.len() - 1);
+                        let (sid, tokens) = live.swap_remove(i);
+                        let sp = c.spill(sid, rig.bool()).unwrap();
+                        parked.push((sp, tokens));
+                    }
+                }
+                _ => {
+                    // resume a parked sequence, or flush the cold set
+                    if let Some((sp, tokens)) = parked.pop() {
+                        match c.restore(sp) {
+                            Ok(sid) => live.push((sid, tokens)),
+                            // capacity-refused: parked state comes back
+                            Err(sp) => parked.push((sp, tokens)),
+                        }
+                    } else {
+                        c.drop_cold_prefixes();
+                    }
+                }
+            }
+            if let Err(e) = c.check_invariants() {
+                panic!("case {}: after op {op}: {e}", rig.case);
+            }
+        }
+        for (sid, _) in live.drain(..) {
+            c.evict(sid);
+        }
+        parked.clear();
+        c.drop_cold_prefixes();
+        c.check_invariants().unwrap();
+        assert_eq!(c.stats().pages_in_use, 0, "case {}: pages leaked", rig.case);
+    });
+}
+
+#[test]
+fn evicted_prefixes_reinsert_and_claim_cleanly() {
+    proptest(256, |rig| {
+        let pr = rig.usize_in(2, 4);
+        let n_layer = rig.usize_in(1, 2);
+        let mut c = PagedKvCache::new(n_layer, 4, share_opts(pr, 0));
+        let len = pr * rig.usize_in(1, 3);
+        let tokens: Vec<i32> = (0..len).map(|_| rig.usize_in(0, 7) as i32).collect();
+        let (a, ca) = c.new_seq_shared(&tokens, len);
+        assert_eq!(ca, 0, "case {}: empty index cannot match", rig.case);
+        fill_rows(&mut c, a, n_layer, &tokens, 0);
+        c.publish_prefix(a, &tokens);
+        c.evict(a);
+        c.check_invariants().unwrap();
+        assert!(c.stats().shared_nodes > 0);
+        let freed = c.drop_cold_prefixes();
+        assert_eq!(freed, 2 * n_layer * (len / pr), "case {}: cold flush size", rig.case);
+        assert_eq!(c.stats().pages_in_use, 0);
+        assert_eq!(c.stats().shared_nodes, 0);
+        c.check_invariants().unwrap();
+        // reinsert: the evicted prefix is gone, republishing the same
+        // tokens rebuilds it, and a later claim matches it fully
+        let (b, cb) = c.new_seq_shared(&tokens, len);
+        assert_eq!(cb, 0, "case {}: evicted prefix must not be claimable", rig.case);
+        fill_rows(&mut c, b, n_layer, &tokens, 0);
+        c.publish_prefix(b, &tokens);
+        c.check_invariants().unwrap();
+        let (d, cd) = c.new_seq_shared(&tokens, len);
+        assert_eq!(cd, len, "case {}: reinserted prefix claims fully", rig.case);
+        c.check_invariants().unwrap();
+        c.evict(d);
+        c.evict(b);
+        c.drop_cold_prefixes();
+        assert_eq!(c.stats().pages_in_use, 0);
+        c.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn cow_split_never_mutates_the_shared_pages() {
+    proptest(256, |rig| {
+        let pr = rig.usize_in(2, 4);
+        let n_layer = rig.usize_in(1, 2);
+        let mut c = PagedKvCache::new(n_layer, 4, share_opts(pr, 0));
+        let la = 3 * pr;
+        let ta: Vec<i32> = (0..la).map(|_| rig.usize_in(0, 7) as i32).collect();
+        let (a, _) = c.new_seq_shared(&ta, la);
+        fill_rows(&mut c, a, n_layer, &ta, 0);
+        c.publish_prefix(a, &ta);
+        let before = snap(&mut c, a, n_layer, la);
+        // a prompt that diverges mid-page: inside full page k, offset off
+        let k = rig.usize_in(0, 2);
+        let off = rig.usize_in(1, pr - 1);
+        let d = k * pr + off;
+        let mut tb = ta[..d].to_vec();
+        tb.push(ta[d] + 8);
+        for _ in 0..rig.usize_in(0, pr) {
+            tb.push(rig.usize_in(0, 7) as i32);
+        }
+        let (b, claimed) = c.new_seq_shared(&tb, tb.len());
+        assert_eq!(claimed, d, "case {}: claim stops exactly at the divergence", rig.case);
+        assert_eq!(c.stats().cow_splits, 1, "case {}: divergence CoW-splits", rig.case);
+        c.check_invariants().unwrap();
+        fill_rows(&mut c, b, n_layer, &tb, claimed);
+        // the shared pages were read, never written
+        assert_eq!(snap(&mut c, a, n_layer, la), before, "case {}: A mutated", rig.case);
+        // and the claimer's shared rows equal the publisher's exactly
+        assert_eq!(
+            snap(&mut c, b, n_layer, d),
+            snap(&mut c, a, n_layer, d),
+            "case {}: claimed rows diverge from the publisher",
+            rig.case
+        );
+        c.evict(b);
+        assert_eq!(snap(&mut c, a, n_layer, la), before, "case {}: evict(B) hit A", rig.case);
+        c.check_invariants().unwrap();
+        c.evict(a);
+        c.drop_cold_prefixes();
+        assert_eq!(c.stats().pages_in_use, 0);
+        c.check_invariants().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// differential serving: shared vs unshared must be byte-identical
+// ---------------------------------------------------------------------
+
+fn chat_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 96,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+const SYSTEM: &[u8] = b"system: answer briefly. ";
+
+/// Drive the seeded chat workload against a continuous server built over
+/// `kv`: three session slots with interleaved begin / continue / finish,
+/// plus concurrent generate bursts whose footprint exceeds the bounded
+/// arena (preemption pressure). Returns every response body, every closed
+/// transcript, the server metrics, and the number of warm turns (turn ≥ 2
+/// of a session — a continue whose full previous transcript was already
+/// published, so the sharing run must claim it).
+fn run_chat(kv: KvCacheOpts) -> (Vec<Vec<u8>>, Vec<Vec<u8>>, ServerMetrics, usize) {
+    let cfg = chat_cfg();
+    let handle = start_continuous(
+        move || Ok(CachedNativeBackend::dense(cfg, init_params(&cfg, 0), kv)),
+        ContinuousOpts { max_batch: 8, prefill_chunk: 8, ..Default::default() },
+    );
+    let mut rng = Rng::new(20260808);
+    // (session id, transcript length, turns taken)
+    let mut slots: Vec<Option<(u64, usize, usize)>> = vec![None; 3];
+    let mut texts: Vec<Vec<u8>> = Vec::new();
+    let mut transcripts: Vec<Vec<u8>> = Vec::new();
+    let mut warm_turns = 0usize;
+    for _ in 0..24 {
+        let si = rng.below(slots.len());
+        match slots[si] {
+            None => {
+                let sid = handle.begin_session(SYSTEM);
+                slots[si] = Some((sid, SYSTEM.len(), 0));
+            }
+            Some((sid, tlen, turns)) => {
+                // keep prompt + max_new inside the model context
+                if tlen > 80 || rng.below(5) == 0 {
+                    transcripts.push(handle.end_session(sid).expect("open session"));
+                    slots[si] = None;
+                } else if rng.below(4) == 0 {
+                    // concurrent burst sharing the system prompt: enough
+                    // in-flight pages to force preemption on the bounded
+                    // arena, answered deterministically regardless
+                    let mut rxs = Vec::new();
+                    for _ in 0..5 {
+                        let mut prompt = SYSTEM.to_vec();
+                        for _ in 0..3 {
+                            prompt.push(rng.below(256) as u8);
+                        }
+                        rxs.push(handle.submit(Request::Generate { prompt, max_new: 3 }));
+                    }
+                    for rx in rxs {
+                        match rx.recv().unwrap() {
+                            Response::Generated { text } => texts.push(text),
+                            other => panic!("burst refused: {other:?}"),
+                        }
+                    }
+                } else {
+                    let user: Vec<u8> = (0..2).map(|_| rng.below(256) as u8).collect();
+                    let max_new = 1 + rng.below(3);
+                    match handle.continue_session(sid, &user, max_new).unwrap() {
+                        Response::Generated { text } => {
+                            slots[si] = Some((sid, tlen + user.len() + text.len(), turns + 1));
+                            if turns >= 1 {
+                                warm_turns += 1;
+                            }
+                            texts.push(text);
+                        }
+                        other => panic!("turn refused: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+    for slot in slots.iter_mut() {
+        if let Some((sid, _, _)) = slot.take() {
+            transcripts.push(handle.end_session(sid).expect("open session"));
+        }
+    }
+    (texts, transcripts, handle.shutdown(), warm_turns)
+}
+
+#[test]
+fn shared_serving_is_byte_identical_and_prefills_strictly_less() {
+    let kv = KvCacheOpts { page_rows: 4, max_pages: 96, ..Default::default() };
+    let (t_off, tr_off, m_off, _) = run_chat(kv);
+    let (t_on, tr_on, m_on, warm) = run_chat(KvCacheOpts { prefix_share: true, ..kv });
+
+    assert_eq!(t_off, t_on, "prefix sharing must not change any response byte");
+    assert_eq!(tr_off, tr_on, "prefix sharing must not change any transcript");
+    assert!(!t_on.is_empty() && !tr_on.is_empty(), "workload degenerated");
+
+    // sharing off: the counters stay dark
+    assert_eq!(m_off.prefix_hits, 0);
+    assert_eq!(m_off.prefix_tokens, 0);
+
+    // sharing on: every warm turn claims its published transcript, the
+    // prefill path feeds strictly fewer tokens, and the books balance —
+    // saved prefill tokens are exactly the claimed ones
+    assert!(warm >= 2, "seed produced too few warm turns ({warm})");
+    assert!(m_on.prefix_hits >= warm, "hits {} < warm turns {warm}", m_on.prefix_hits);
+    assert!(
+        m_on.prefill_tokens < m_off.prefill_tokens,
+        "sharing prefilled {} tokens, unshared {}",
+        m_on.prefill_tokens,
+        m_off.prefill_tokens
+    );
+    // the books balance: the prefill gap is the claimed tokens, up to
+    // one token of chunk-accounting slack per request (a feed with a
+    // single pending token is a decode step, not a prefill chunk, and
+    // where that boundary lands differs between the two runs)
+    let gap = m_off.prefill_tokens - m_on.prefill_tokens;
+    let slack = t_on.len();
+    assert!(
+        gap + slack >= m_on.prefix_tokens && gap <= m_on.prefix_tokens + slack,
+        "prefill gap {gap} vs claimed {} (slack {slack})",
+        m_on.prefix_tokens
+    );
+
+    let stats = m_on.kv_cache.expect("cached backend reports kv stats");
+    assert!(stats.prefix_hits >= warm);
+    assert!(stats.prefix_hit_rows >= m_on.prefix_tokens);
+    assert!(stats.shared_nodes >= 1, "published prefixes stay resident");
+}
