@@ -1,0 +1,309 @@
+//! Bench: self-speculative decoding from the GLVQ container (ISSUE 8
+//! acceptance).
+//!
+//! All cells serve the same entropy-coded 3-bit streaming container (the
+//! regime where every target step pays a real rANS panel-decode), and
+//! the speculative cells draft through the in-memory fixed-rate 2-bit
+//! view of the same weights:
+//!
+//! - **batch-1** — a sequential greedy decode loop driven straight over
+//!   the [`SeqBackend`] surface: `target-only` vs `speculate-{2,4,8}`.
+//!   The speculative speedup lives or dies here: one ragged target
+//!   forward verifies k drafted tokens, and every accepted token is a
+//!   target forward that never ran.
+//! - **continuous** — the same comparison through the continuous
+//!   scheduler under a concurrent request burst (`target-only` vs
+//!   `speculate-4`), where verify batching across sequences shares the
+//!   per-step whole-model decode.
+//!
+//! Asserted acceptance: every speculative cell's outputs are
+//! **bit-identical** to target-only decode (greedy acceptance is exact —
+//! asserted in smoke mode too), and in full mode the best batch-1
+//! speculative cell reaches **≥ 1.2×** target-only tokens/s. The
+//! per-cell accept rate is the paper tie-in: it measures how faithfully
+//! the 2-bit lattice view tracks the variable-rate target, so the
+//! `accept_rate` trajectory key doubles as a draft-quality metric.
+//!
+//! Results append to `runs/bench/spec.json` (`{"runs": [...]}`), with
+//! headline `accept_rate` and `spec_decode_speedup` keys plus a
+//! per-cell measurement array. `GLVQ_BENCH_SMOKE=1` runs a miniature
+//! workload for CI: parity and counter checks, speedup reported but not
+//! asserted.
+//!
+//! Run: `cargo bench --bench bench_spec`
+
+use std::time::Instant;
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::bench_support::append_trajectory;
+use glvq::coordinator::decode_stream::StreamingMatmul;
+use glvq::coordinator::server::{self, CachedNativeBackend, Request, Response, ServerHandle};
+use glvq::eval::native_fwd::{self, CalibCapture};
+use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::quant::format::QuantizedModel;
+use glvq::serving::{ContinuousOpts, SeqBackend};
+use glvq::spec::SpeculativeBackend;
+use glvq::tensor::TensorStore;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "specbench",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 160,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+/// Quantize the bench model once into an entropy-coded container; every
+/// cell serves from clones of the same parts.
+fn quantized_parts(cfg: &ModelConfig) -> (TensorStore, QuantizedModel) {
+    let store = init_params(cfg, 0);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+    let mut cap = CalibCapture::new(16, 0);
+    native_fwd::forward(cfg, &store, &toks, 2, Some(&mut cap)).expect("calibration forward");
+    let calib = cap.into_calib_set();
+    let mut opts = PipelineOpts::default();
+    opts.target_bits = 3.0;
+    opts.bit_allocation = false;
+    opts.entropy = true;
+    let (qm, _) =
+        quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).expect("quantize");
+    (store, qm)
+}
+
+/// Last-maximal argmax, matching the serving loops' tie-breaking.
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// Sequential batch-1 greedy decode over the raw [`SeqBackend`] surface:
+/// `n_new` tokens per prompt, timed over the whole loop.
+fn greedy_cell<B: SeqBackend>(
+    b: &mut B,
+    prompts: &[Vec<i32>],
+    n_new: usize,
+) -> (Vec<Vec<i32>>, f64) {
+    let t0 = Instant::now();
+    let mut outs = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let sid = b.begin_seq();
+        let m = b.step_ragged(&[(sid, &p[..])]).expect("prefill");
+        let mut last = argmax(m.row(m.rows - 1));
+        let mut out = vec![last];
+        for _ in 1..n_new {
+            let m = b.step_ragged(&[(sid, std::slice::from_ref(&last))]).expect("decode step");
+            last = argmax(m.row(m.rows - 1));
+            out.push(last);
+        }
+        b.retire_seq(sid);
+        outs.push(out);
+    }
+    (outs, t0.elapsed().as_secs_f64())
+}
+
+/// Submit the concurrent burst, wait for every reply, return the
+/// response bytes, the wall time, and the final server metrics.
+fn continuous_cell(
+    handle: ServerHandle,
+    prompts: &[Vec<u8>],
+    n_new: usize,
+) -> (Vec<Vec<u8>>, f64, glvq::coordinator::metrics::ServerMetrics) {
+    let t0 = Instant::now();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| handle.submit(Request::Generate { prompt: p.clone(), max_new: n_new }))
+        .collect();
+    let mut outs = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        match rx.recv().expect("server dropped reply") {
+            Response::Generated { text } => outs.push(text),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (outs, wall, handle.shutdown())
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let (n_prompts, n_new, burst, burst_new) =
+        if smoke() { (2, 8, 4, 6) } else { (4, 64, 8, 32) };
+    let (store, qm) = quantized_parts(&cfg);
+    let kv = KvCacheOpts { page_rows: 16, ..Default::default() };
+    let mk = || {
+        let engine = StreamingMatmul::new(16, 1);
+        CachedNativeBackend::streaming(cfg, store.clone(), qm.clone(), engine, kv)
+    };
+    println!(
+        "# spec: d={} L={} seq={} — {} prompts x {} tok batch-1, burst {} x {} tok, {}",
+        cfg.d_model,
+        cfg.n_layer,
+        cfg.seq_len,
+        n_prompts,
+        n_new,
+        burst,
+        burst_new,
+        if smoke() { "smoke" } else { "full" },
+    );
+
+    let prompts: Vec<Vec<i32>> = (0..n_prompts)
+        .map(|p| (0..12).map(|i| ((p * 37 + i * 11) % 251) as i32).collect())
+        .collect();
+    let total = (n_prompts * n_new) as f64;
+
+    // ---- batch-1 cells ----
+    let mut base = mk();
+    let (ref_outs, ref_wall) = greedy_cell(&mut base, &prompts, n_new);
+    let base_tok_s = total / ref_wall.max(1e-9);
+    println!("target-only         {base_tok_s:>8.1} tok/s  wall {:>8.1} ms", ref_wall * 1e3);
+
+    let mut entries: Vec<Json> = Vec::new();
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("target-only")),
+        ("tokens", Json::num(total)),
+        ("tok_s", Json::num(base_tok_s)),
+        ("wall_ms", Json::num(ref_wall * 1e3)),
+    ]));
+
+    let mut best_speedup = 0.0f64;
+    let mut headline_accept = 0.0f64;
+    let mut headline_speedup = 0.0f64;
+    for k in [2usize, 4, 8] {
+        let mut spec = SpeculativeBackend::new(mk(), k).expect("draft view builds");
+        let draft_bytes = spec.draft_view().total_bytes();
+        let (outs, wall) = greedy_cell(&mut spec, &prompts, n_new);
+        assert_eq!(outs, ref_outs, "speculate-{k}: outputs diverged from target-only");
+        let s = spec.spec_counters();
+        assert!(s.rounds > 0 && s.drafted > 0, "speculate-{k}: no drafting happened");
+        let tok_s = total / wall.max(1e-9);
+        let speedup = tok_s / base_tok_s.max(1e-9);
+        let accept = s.accept_rate();
+        println!(
+            "speculate-{k}         {tok_s:>8.1} tok/s  wall {:>8.1} ms  {speedup:.2}x  accept {accept:.2}  ({} drafted, {} rollback rows, draft view {} B)",
+            wall * 1e3,
+            s.drafted,
+            s.rollback_rows,
+            draft_bytes,
+        );
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(&format!("speculate-{k}"))),
+            ("k", Json::num(k as f64)),
+            ("tokens", Json::num(total)),
+            ("tok_s", Json::num(tok_s)),
+            ("wall_ms", Json::num(wall * 1e3)),
+            ("speedup", Json::num(speedup)),
+            ("accept_rate", Json::num(accept)),
+            ("drafted", Json::num(s.drafted as f64)),
+            ("accepted", Json::num(s.accepted as f64)),
+            ("rounds", Json::num(s.rounds as f64)),
+            ("verify_calls", Json::num(s.verify_calls as f64)),
+            ("rollback_rows", Json::num(s.rollback_rows as f64)),
+            ("draft_bytes", Json::num(draft_bytes as f64)),
+        ]));
+        best_speedup = best_speedup.max(speedup);
+        if k == 4 {
+            headline_accept = accept;
+            headline_speedup = speedup;
+        }
+    }
+    println!("  best batch-1 speculative speedup: {best_speedup:.2}x");
+    if smoke() {
+        println!("  (smoke mode: speedup not asserted)");
+    } else {
+        assert!(
+            best_speedup >= 1.2,
+            "speculative decode only {best_speedup:.2}x over target-only at batch 1 (need >= 1.2x)"
+        );
+    }
+
+    // ---- continuous cells ----
+    let burst_prompts: Vec<Vec<u8>> = (0..burst)
+        .map(|p| (0..10).map(|i| ((p * 53 + i * 17) % 251) as u8).collect())
+        .collect();
+    let copts = ContinuousOpts { max_batch: 8, prefill_chunk: 16, ..Default::default() };
+    let burst_total = (burst * burst_new) as f64;
+    let mk_plain = {
+        let (cfg, store, qm) = (cfg, store.clone(), qm.clone());
+        move || {
+            let engine = StreamingMatmul::new(16, 1);
+            Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+        }
+    };
+    let mk_spec = {
+        let (cfg, store, qm) = (cfg, store.clone(), qm.clone());
+        move || {
+            let engine = StreamingMatmul::new(16, 1);
+            SpeculativeBackend::new(
+                CachedNativeBackend::streaming(cfg, store, qm, engine, kv),
+                4,
+            )
+        }
+    };
+    let (cont_ref, wall_plain, m_plain) =
+        continuous_cell(server::start_continuous(mk_plain, copts), &burst_prompts, burst_new);
+    let (cont_spec, wall_spec, m_spec) =
+        continuous_cell(server::start_continuous(mk_spec, copts), &burst_prompts, burst_new);
+    assert_eq!(cont_spec, cont_ref, "continuous speculate-4: outputs diverged");
+    assert!(m_plain.spec.is_none(), "plain continuous cell must not report spec counters");
+    let cs = m_spec.spec.expect("speculative continuous cell reports counters");
+    assert!(cs.rounds > 0 && cs.accepted <= cs.drafted);
+    let cont_plain_tok_s = burst_total / wall_plain.max(1e-9);
+    let cont_spec_tok_s = burst_total / wall_spec.max(1e-9);
+    let cont_speedup = cont_spec_tok_s / cont_plain_tok_s.max(1e-9);
+    println!(
+        "continuous          {cont_plain_tok_s:>8.1} tok/s  wall {:>8.1} ms",
+        wall_plain * 1e3
+    );
+    println!(
+        "continuous-spec-4   {cont_spec_tok_s:>8.1} tok/s  wall {:>8.1} ms  {cont_speedup:.2}x  accept {:.2}",
+        wall_spec * 1e3,
+        cs.accept_rate(),
+    );
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("continuous")),
+        ("tokens", Json::num(burst_total)),
+        ("tok_s", Json::num(cont_plain_tok_s)),
+        ("wall_ms", Json::num(wall_plain * 1e3)),
+    ]));
+    entries.push(Json::obj(vec![
+        ("mode", Json::str("continuous-spec-4")),
+        ("k", Json::num(4.0)),
+        ("tokens", Json::num(burst_total)),
+        ("tok_s", Json::num(cont_spec_tok_s)),
+        ("wall_ms", Json::num(wall_spec * 1e3)),
+        ("speedup", Json::num(cont_speedup)),
+        ("accept_rate", Json::num(cs.accept_rate())),
+        ("drafted", Json::num(cs.drafted as f64)),
+        ("accepted", Json::num(cs.accepted as f64)),
+    ]));
+
+    append_trajectory(
+        "spec",
+        vec![
+            ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
+            ("accept_rate", Json::num(headline_accept)),
+            ("spec_decode_speedup", Json::num(headline_speedup)),
+            ("best_batch1_speedup", Json::num(best_speedup)),
+            ("continuous_speedup", Json::num(cont_speedup)),
+            ("measurements", Json::Arr(entries)),
+        ],
+    );
+}

@@ -419,13 +419,21 @@ fn panel_slab(
         for (o, v) in scratch.panel[..count].iter_mut().zip(&vb.data) {
             *o = scale * v;
         }
-    } else {
-        decode_codes(
-            &g.side,
-            g.codes.bits(),
-            &scratch.codes_buf[..count],
-            &mut scratch.panel[..count],
-        );
+    } else if decode_codes(
+        &g.side,
+        g.codes.bits(),
+        &scratch.codes_buf[..count],
+        &mut scratch.panel[..count],
+    )
+    .is_err()
+    {
+        // A family the streaming decoder cannot serve was misrouted onto
+        // the panel path (`supports_streaming` normally sends it to the
+        // whole-group branch above). Degrade to a whole-group decode of
+        // this panel's rows instead of aborting the serving thread.
+        let dense = g.dequantize();
+        let lo = item.r * n;
+        scratch.panel[..count].copy_from_slice(&dense.data[lo..lo + count]);
     }
     stats.weights_decoded += count;
     stats.peak_decoded = stats.peak_decoded.max(count);
@@ -446,10 +454,41 @@ fn panel_slab(
     slab
 }
 
-/// Decode a run of codes into weights for any side-info family. The
-/// per-family math matches `QuantizedGroup::dequantize` exactly (tested).
-/// `codes` holds whole rows, row-major, row length divisible by d/dim.
-fn decode_codes(side: &SideInfo, bits: u8, codes: &[i32], out: &mut [f32]) {
+/// Structured error for a decode request the streaming path cannot
+/// serve: the group's side-info family needs whole-group context (e.g.
+/// per-row scales, trellis state from position 0) that a mid-stream
+/// panel does not carry. Callers degrade to `QuantizedGroup::dequantize`
+/// instead of aborting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnstreamableDecode {
+    /// side-info family name of the misrouted group
+    pub family: &'static str,
+}
+
+impl std::fmt::Display for UnstreamableDecode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} decode is not on the streaming path (needs whole-group dequantize)",
+            self.family
+        )
+    }
+}
+
+impl std::error::Error for UnstreamableDecode {}
+
+/// Decode a run of codes into weights for any streaming side-info family.
+/// The per-family math matches `QuantizedGroup::dequantize` exactly
+/// (tested). `codes` holds whole rows, row-major, row length divisible by
+/// d/dim. A family that cannot decode from an arbitrary offset returns
+/// [`UnstreamableDecode`] so the caller can fall back to a whole-group
+/// decode.
+fn decode_codes(
+    side: &SideInfo,
+    bits: u8,
+    codes: &[i32],
+    out: &mut [f32],
+) -> std::result::Result<(), UnstreamableDecode> {
     match side {
         SideInfo::Uniform { scale, zero } => {
             for (o, &c) in out.iter_mut().zip(codes) {
@@ -513,11 +552,13 @@ fn decode_codes(side: &SideInfo, bits: u8, codes: &[i32], out: &mut [f32]) {
         }
         SideInfo::Binary { .. } => {
             // binary decode needs row indices for per-row scales; handled by
-            // dequantize() — the streaming path never reaches here because
-            // supports_streaming() routes binary to the dense fallback.
-            unimplemented!("binary methods are not on the streaming path");
+            // dequantize() — supports_streaming() routes binary to the dense
+            // fallback, so reaching here means a misrouted op. Degrade via a
+            // structured error instead of aborting the serving thread.
+            return Err(UnstreamableDecode { family: "binary" });
         }
     }
+    Ok(())
 }
 
 /// Streaming decoder caveats per method (documented behaviour):
@@ -841,5 +882,49 @@ mod tests {
             scale: 1.0
         }));
         assert!(!supports_streaming(&SideInfo::Trellis { levels: vec![0.0; 8], states: 4 }));
+    }
+
+    #[test]
+    fn misrouted_binary_decode_is_a_structured_error_not_a_panic() {
+        let side = SideInfo::Binary {
+            row_scales: (0..8).map(|i| 0.1 + 0.01 * i as f32).collect(),
+            residual_scales: None,
+        };
+        let mut out = vec![0.0f32; 16];
+        let err = decode_codes(&side, 1, &[0i32; 16], &mut out).unwrap_err();
+        assert_eq!(err.family, "binary");
+        assert!(err.to_string().contains("streaming path"), "{err}");
+        // streaming families still decode through the same entry point
+        decode_codes(&SideInfo::Uniform { scale: 0.5, zero: 0.25 }, 2, &[1, -1], &mut out[..2])
+            .unwrap();
+        assert_eq!(&out[..2], &[0.75, -0.25]);
+    }
+
+    #[test]
+    fn binary_groups_serve_through_the_whole_group_fallback() {
+        // a binary group on the serving path must route through the dense
+        // fallback (never the panel decoder) and match the oracle bit-exactly
+        let codes: Vec<i32> = (0..64).map(|i| (i % 2) - 1).collect();
+        let qg = crate::quant::traits::QuantizedGroup {
+            method: "binary",
+            bits: 1,
+            rows: 8,
+            cols: 8,
+            codes: crate::quant::pack::PackedCodes::pack(&codes, 1).into(),
+            side: SideInfo::Binary {
+                row_scales: (0..8).map(|i| 0.1 + 0.01 * i as f32).collect(),
+                residual_scales: None,
+            },
+        };
+        let qt = QuantizedTensor { name: "bin".into(), rows: 8, cols: 8, groups: vec![(0, 0, qg)] };
+        let mut rng = Rng::new(21);
+        let x = Mat::random_normal(3, 8, 1.0, &mut rng);
+        let want = oracle_matmul(&qt, &x);
+        let sm = StreamingMatmul::new(4, 1);
+        let mut y = Mat::zeros(3, 8);
+        let mut stats = DecodeStats::default();
+        sm.matmul(&qt, &x, &mut y, &mut stats);
+        assert_eq!(y.data, want.data, "binary fallback not bit-exact");
+        assert!(stats.code_bytes > 0);
     }
 }

@@ -18,6 +18,7 @@ use crate::coordinator::decode_stream::DecodeStats;
 use crate::kvcache::KvCacheStats;
 use crate::obs::{Mark, MetricsSnapshot, Registry, RequestTimeline};
 use crate::shard::{imbalance, ShardStat};
+use crate::spec::SpecStats;
 
 /// Streaming latency histogram: a fixed-capacity uniform reservoir kept
 /// sorted by insertion (exact quantiles for ≤ capacity samples, uniform
@@ -169,6 +170,9 @@ pub struct ServerMetrics {
     /// per-shard decode/busy counters, when the backend executes
     /// tensor-parallel over the shard executor (None otherwise)
     pub shards: Option<Vec<ShardStat>>,
+    /// draft/verify counters, when the backend decodes speculatively
+    /// (None otherwise) — source of the `accept_rate` report section
+    pub spec: Option<SpecStats>,
     /// per-request lifecycle timelines recorded by the continuous
     /// scheduler (empty in lockstep mode) — source of the
     /// `request_{queue,prefill,decode}_ms` attribution summaries
@@ -197,6 +201,7 @@ impl Default for ServerMetrics {
             decode: None,
             kv_cache: None,
             shards: None,
+            spec: None,
             timelines: Vec::new(),
         }
     }
@@ -262,6 +267,14 @@ impl ServerMetrics {
             reg.counter("kv_prefix_hit_rows_total", c.prefix_hit_rows as u64);
             reg.counter("kv_cow_splits_total", c.cow_splits as u64);
             reg.counter("kv_prefix_evictions_total", c.prefix_evictions as u64);
+        }
+        if let Some(s) = &self.spec {
+            reg.counter("spec_drafted_total", s.drafted);
+            reg.counter("spec_accepted_total", s.accepted);
+            reg.counter("spec_rounds_total", s.rounds);
+            reg.counter("spec_verify_calls_total", s.verify_calls);
+            reg.counter("spec_rollback_rows_total", s.rollback_rows);
+            reg.gauge("spec_accept_rate", s.accept_rate());
         }
         if let Some(s) = &self.shards {
             reg.gauge("shard_count", s.len() as f64);
@@ -363,6 +376,16 @@ pub fn human_line(snap: &MetricsSnapshot) -> String {
             snap.gauge("kv_shared_pages"),
             snap.counter("kv_cow_splits_total"),
             snap.counter("kv_prefix_evictions_total"),
+        ));
+    }
+    if snap.counter("spec_drafted_total") > 0 {
+        out.push_str(&format!(
+            " accept_rate={:.2} drafted={} accepted={} spec_rounds={} rollback_rows={}",
+            snap.gauge("spec_accept_rate"),
+            snap.counter("spec_drafted_total"),
+            snap.counter("spec_accepted_total"),
+            snap.counter("spec_rounds_total"),
+            snap.counter("spec_rollback_rows_total"),
         ));
     }
     if snap.has("shard_count") {
@@ -499,6 +522,25 @@ mod tests {
     }
 
     #[test]
+    fn report_includes_spec_section_when_present() {
+        let mut m = ServerMetrics::default();
+        assert!(!m.report().contains("accept_rate="), "no spec section for plain backends");
+        m.spec = Some(SpecStats {
+            drafted: 10,
+            accepted: 5,
+            rounds: 3,
+            verify_calls: 3,
+            rollback_rows: 5,
+        });
+        let r = m.report();
+        assert!(r.contains("accept_rate=0.50"), "{r}");
+        assert!(r.contains("drafted=10"), "{r}");
+        assert!(r.contains("accepted=5"), "{r}");
+        assert!(r.contains("spec_rounds=3"), "{r}");
+        assert!(r.contains("rollback_rows=5"), "{r}");
+    }
+
+    #[test]
     fn snapshot_carries_every_report_counter() {
         let mut m = ServerMetrics::default();
         m.requests = 3;
@@ -517,6 +559,13 @@ mod tests {
         m.decode = Some(DecodeStats { code_bytes: 100, peak_decoded: 64, ..Default::default() });
         m.kv_cache = Some(KvCacheStats { pages_in_use: 2, peak_pages: 5, ..Default::default() });
         m.shards = Some(vec![ShardStat { busy_ns: 10, total_bytes: 50, ..Default::default() }]);
+        m.spec = Some(SpecStats {
+            drafted: 8,
+            accepted: 6,
+            rounds: 2,
+            verify_calls: 2,
+            rollback_rows: 2,
+        });
         let mut t = RequestTimeline::new(0);
         t.mark(Mark::Admit);
         t.mark(Mark::FirstToken);
@@ -538,13 +587,23 @@ mod tests {
             "kv_pages_quantized_total",
             "kv_decoded_bytes_total",
             "shard_decoded_bytes_total",
+            "spec_drafted_total",
+            "spec_accepted_total",
+            "spec_rounds_total",
+            "spec_verify_calls_total",
+            "spec_rollback_rows_total",
             "timelines_recorded_total",
         ] {
             assert!(snap.has(name), "snapshot missing {name}");
         }
-        for name in
-            ["tokens_per_sec", "peak_panel_elems", "kv_pages_in_use", "kv_peak_pages", "shard_count"]
-        {
+        for name in [
+            "tokens_per_sec",
+            "peak_panel_elems",
+            "kv_pages_in_use",
+            "kv_peak_pages",
+            "shard_count",
+            "spec_accept_rate",
+        ] {
             assert!(snap.has(name), "snapshot missing gauge {name}");
         }
         for name in ["request_latency_ms", "ttft_ms", "queue_wait_ms", "seqs_per_step"] {
@@ -559,6 +618,7 @@ mod tests {
         assert!(line.contains("steps=7"), "{line}");
         assert!(line.contains("kv_pages=2(peak 5)"), "{line}");
         assert!(line.contains("shards=1"), "{line}");
+        assert!(line.contains("accept_rate=0.75"), "{line}");
         // and both structured exports accept it
         let json = snap.to_json();
         assert_eq!(crate::util::json::Json::parse(&json.to_string()).unwrap(), json);

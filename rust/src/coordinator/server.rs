@@ -84,6 +84,12 @@ pub trait LmBackend {
     fn shard_stats(&self) -> Option<Vec<ShardStat>> {
         None
     }
+
+    /// Draft/verify counters, if this backend decodes speculatively
+    /// (None for plain backends).
+    fn spec_stats(&self) -> Option<crate::spec::SpecStats> {
+        None
+    }
 }
 
 /// Pad each prefix to `seq_len` (keeping its tail) and return the flat
@@ -427,6 +433,25 @@ impl CachedNativeBackend {
                 Err(e)
             }
         }
+    }
+
+    /// Model configuration (for the speculative wrapper's draft view).
+    pub(crate) fn config(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    /// The full dense tensor store this backend was built from. Every
+    /// weight mode keeps it (streamed/sharded modes still read the
+    /// non-quantizable embeddings and gains from it), so the speculative
+    /// wrapper can always re-quantize a draft view from here.
+    pub(crate) fn tensor_store(&self) -> &TensorStore {
+        &self.store
+    }
+
+    /// Roll the target KV sequence back to `rows` positions — the
+    /// speculative wrapper's rejection path.
+    pub(crate) fn truncate(&mut self, sid: SeqId, rows: usize) -> Result<()> {
+        self.cache.truncate_seq(sid, rows)
     }
 }
 
@@ -916,6 +941,7 @@ where
         metrics.decode = backend.decode_stats();
         metrics.kv_cache = backend.cache_stats();
         metrics.shards = backend.shard_stats();
+        metrics.spec = backend.spec_stats();
         metrics
     });
     ServerHandle {
@@ -937,11 +963,13 @@ where
 /// backpressure reason.
 ///
 /// Requires a cache-aware backend: continuous scheduling *is* paged-KV
-/// bookkeeping, so `make_backend` returns a concrete
-/// [`CachedNativeBackend`] (dense or streamed-compressed weights).
-pub fn start_continuous<F>(make_backend: F, opts: ContinuousOpts) -> ServerHandle
+/// bookkeeping, so `make_backend` returns a [`SeqBackend`] — typically a
+/// [`CachedNativeBackend`] (dense or streamed-compressed weights), or a
+/// [`crate::spec::SpeculativeBackend`] wrapping one.
+pub fn start_continuous<B, F>(make_backend: F, opts: ContinuousOpts) -> ServerHandle
 where
-    F: FnOnce() -> Result<CachedNativeBackend> + Send + 'static,
+    B: SeqBackend + Send + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
 {
     let (tx, rx) = mpsc::channel::<Job>();
     let join = std::thread::spawn(move || {
@@ -995,8 +1023,8 @@ where
 
 /// Feed one job into the scheduler, answering immediately-refused
 /// requests with their structured backpressure reason.
-fn submit_job(
-    sched: &mut ContinuousScheduler<CachedNativeBackend>,
+fn submit_job<B: SeqBackend>(
+    sched: &mut ContinuousScheduler<B>,
     replies: &mut BTreeMap<u64, mpsc::Sender<Response>>,
     timeline_txs: &mut BTreeMap<u64, mpsc::Sender<RequestTimeline>>,
     job: Job,

@@ -55,6 +55,15 @@ impl Kv {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SeqId(usize);
 
+impl SeqId {
+    /// Dense slot index of this handle — usable as a key into caller-side
+    /// per-sequence side tables. Slot indices are reused only after the
+    /// sequence is evicted, mirroring the cache's own slot reuse.
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
 /// One page's storage state.
 enum PageSlot {
     /// unallocated (on the free list)
@@ -237,12 +246,27 @@ pub struct SpilledSeq {
     tables: Vec<(Vec<SpilledPage>, usize)>,
     /// arena pages this sequence occupied (and needs again to resume)
     pages: usize,
+    /// caller-owned correlation tag (0 until [`SpilledSeq::set_tag`])
+    tag: u64,
 }
 
 impl SpilledSeq {
     /// Arena pages [`PagedKvCache::restore`] will need.
     pub fn pages(&self) -> usize {
         self.pages
+    }
+
+    /// Caller-owned correlation tag (0 until [`SpilledSeq::set_tag`]).
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Attach a caller-owned correlation tag. The tag rides through
+    /// spill → park → restore untouched, so a wrapping backend (e.g. the
+    /// speculative decoder) can re-associate its own parked side state
+    /// when the sequence comes back under a fresh [`SeqId`].
+    pub fn set_tag(&mut self, tag: u64) {
+        self.tag = tag;
     }
 
     /// Cached positions per stream (every stream of a spilled sequence
@@ -732,7 +756,7 @@ impl PagedKvCache {
         }
         self.release_claims(slot.claimed);
         self.pages_spilled += pages;
-        Ok(SpilledSeq { tables, pages })
+        Ok(SpilledSeq { tables, pages, tag: 0 })
     }
 
     /// Resume a spilled sequence: re-allocate its pages and rebuild its
@@ -789,6 +813,95 @@ impl PagedKvCache {
         }
         self.pages_restored += pages;
         Ok(sid)
+    }
+
+    /// Roll a sequence back to its first `rows` positions — the
+    /// speculative decoder's rejection path. Page-granular trim that
+    /// composes with prefix sharing: pages wholly past the new length
+    /// drop **one** reference each, so a page shared with the radix
+    /// index or another sequence is never freed or written by rollback —
+    /// only this sequence's view of it goes. A partial tail page must
+    /// accept future appends again, so it ends hot *and* exclusive: a
+    /// shared tail is copy-on-write split into a fresh page (the shared
+    /// original stays untouched), and an exclusively-owned retired tail
+    /// decodes back to f32 in place. `rows` may equal the current length
+    /// (no-op) but never exceed it.
+    pub fn truncate_seq(&mut self, seq: SeqId, rows: usize) -> Result<()> {
+        let _sp = crate::span!("kv_truncate");
+        let cur = match self.seqs.get(seq.0).and_then(|s| s.as_ref()) {
+            Some(slot) => slot.tables[0].rows,
+            None => bail!("truncate of unknown kv sequence {seq:?}"),
+        };
+        if rows > cur {
+            bail!("truncate_seq to {rows} rows but sequence holds only {cur}");
+        }
+        if rows == cur {
+            return Ok(());
+        }
+        let pr = self.opts.page_rows;
+        let keep = rows.div_ceil(pr);
+        let tail = rows % pr;
+        for ti in 0..2 * self.n_layer {
+            // drop whole pages past the new length: one reference each,
+            // never a write — a shared page survives for its other readers
+            let dropped = {
+                let t = &mut self.seqs[seq.0].as_mut().expect("sequence checked above").tables[ti];
+                t.rows = rows;
+                t.pages.split_off(keep)
+            };
+            for pid in dropped {
+                self.arena.dec_ref(pid);
+            }
+            if tail == 0 {
+                continue;
+            }
+            // rejected positions beyond `tail` inside the kept page stay
+            // as stale storage; `rows` bounds every read and the next
+            // append overwrites them in order
+            let pid =
+                self.seqs[seq.0].as_ref().expect("sequence checked above").tables[ti].pages
+                    [keep - 1];
+            if self.arena.refs[pid] > 1 {
+                // shared tail: CoW-split the surviving rows out, exactly
+                // like a mid-page prefix claim
+                let mut buf = vec![0.0f32; pr * self.width];
+                match &self.arena.slots[pid] {
+                    PageSlot::Hot(src) => {
+                        buf[..tail * self.width].copy_from_slice(&src[..tail * self.width]);
+                    }
+                    PageSlot::Quantized(g) => {
+                        g.dequantize_into(&mut self.scratch);
+                        self.decoded_bytes += tail * self.width * 4;
+                        buf[..tail * self.width]
+                            .copy_from_slice(&self.scratch.data[..tail * self.width]);
+                    }
+                    PageSlot::Free => unreachable!("page table points at a freed page"),
+                }
+                self.ensure_free(1);
+                let npid = self.arena.adopt_hot(buf)?;
+                self.seqs[seq.0].as_mut().expect("sequence checked above").tables[ti].pages
+                    [keep - 1] = npid;
+                self.arena.dec_ref(pid);
+            } else if matches!(self.arena.slots[pid], PageSlot::Quantized(_)) {
+                // exclusively-owned retired tail: decode back to an
+                // appendable hot page in the same slot
+                let g = match std::mem::replace(&mut self.arena.slots[pid], PageSlot::Free) {
+                    PageSlot::Quantized(g) => g,
+                    _ => unreachable!("matched quantized above"),
+                };
+                self.arena.live_quantized_bytes -= g.codes.payload_bytes() + g.side_bytes();
+                g.dequantize_into(&mut self.scratch);
+                self.decoded_bytes += pr * self.width * 4;
+                let mut buf = match self.arena.spare.pop() {
+                    Some(b) => b,
+                    None => vec![0.0f32; pr * self.width],
+                };
+                buf.copy_from_slice(&self.scratch.data);
+                self.arena.slots[pid] = PageSlot::Hot(buf);
+                self.arena.hot_pages += 1;
+            }
+        }
+        Ok(())
     }
 
     /// Append one position row. Fills the hot tail page, allocating a new

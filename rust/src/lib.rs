@@ -48,6 +48,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod serving;
 pub mod shard;
+pub mod spec;
 pub mod eval;
 pub mod exp;
 pub mod bench_support;

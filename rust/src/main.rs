@@ -30,6 +30,7 @@ use glvq::info;
 use glvq::kvcache::KvCacheOpts;
 use glvq::quant::format::QuantizedModel;
 use glvq::shard::ShardOpts;
+use glvq::spec::SpeculativeBackend;
 use glvq::tensor::TensorStore;
 use glvq::util::logging;
 
@@ -84,7 +85,7 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
             [--shards N] [--threads N] [--panel-rows R] [--kv-cache]
             [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--prefix-share]
             [--continuous] [--max-batch B] [--prefill-chunk C]
-            [--max-tokens-in-flight T] [--max-queue Q]
+            [--max-tokens-in-flight T] [--max-queue Q] [--speculate K]
             [--metrics-out FILE] [--trace-out FILE]
             (reads 'gen <prompt>' | 'score <p>' | 'session <system>' |
              'say <user>' lines)
@@ -133,6 +134,14 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                --kv-bits is set) instead of failing; infeasible or
                over-budget requests are refused with a structured
                backpressure error
+  --speculate  self-speculative decoding (implies --kv-cache): re-encode
+               the loaded weights into a fixed-rate 2-bit draft view,
+               draft K tokens per round through it, verify all K in one
+               ragged target forward, roll rejected KV rows back
+               page-granularly; greedy output stays bit-identical to
+               K=0 and the report gains an accept_rate section
+               (composes with --streaming, --shards, --continuous,
+               --prefix-share; default 0 = off)
   --max-batch  sequences in flight under --continuous (default 16)
   --prefill-chunk      prompt tokens fed per scheduler step (default 32)
   --max-tokens-in-flight  token budget over admitted requests (default 4096)
@@ -146,6 +155,39 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                phases, panel decodes, shard workers and KV operations,
                plus one virtual track per request timeline
   --container  inspect a .glvq file: per-tensor fixed-vs-entropy bytes";
+
+/// Hand a cache-aware backend to the continuous scheduler, wrapped in
+/// the self-speculative draft/verify loop when `--speculate K` is set.
+fn start_continuous_maybe_spec<F>(
+    make: F,
+    copts: ContinuousOpts,
+    spec_k: usize,
+) -> server::ServerHandle
+where
+    F: FnOnce() -> Result<CachedNativeBackend> + Send + 'static,
+{
+    if spec_k > 0 {
+        server::start_continuous(move || SpeculativeBackend::new(make()?, spec_k), copts)
+    } else {
+        server::start_continuous(make, copts)
+    }
+}
+
+/// Same choice for the lockstep server: the backend (speculative or
+/// plain) is boxed behind `LmBackend`.
+fn start_lockstep_maybe_spec<F>(make: F, spec_k: usize) -> server::ServerHandle
+where
+    F: FnOnce() -> Result<CachedNativeBackend> + Send + 'static,
+{
+    if spec_k > 0 {
+        server::start(
+            move || Ok(Box::new(SpeculativeBackend::new(make()?, spec_k)?) as Box<_>),
+            ServerOpts::default(),
+        )
+    } else {
+        server::start(move || Ok(Box::new(make()?) as Box<_>), ServerOpts::default())
+    }
+}
 
 fn main() -> Result<()> {
     logging::level_from_env();
@@ -256,8 +298,13 @@ fn main() -> Result<()> {
             let cfg = ws.model_cfg(&model)?;
             let continuous = args.flags.get("continuous").is_some_and(|v| v != "false");
             let prefix_share = args.flags.get("prefix-share").is_some_and(|v| v != "false");
+            // --speculate K drafts through the 2-bit view and rolls
+            // rejects back through the paged cache, so it implies
+            // --kv-cache just like --prefix-share does
+            let spec_k = args.get_usize("speculate", 0);
             let kv_cache = continuous
                 || prefix_share
+                || spec_k > 0
                 || args.flags.get("kv-cache").is_some_and(|v| v != "false");
             let kv_bits = args.get_usize("kv-bits", 0);
             let kv_page = args.get_usize("kv-page", 16);
@@ -310,21 +357,23 @@ fn main() -> Result<()> {
                         "sharded continuous backend: {} shards x {} threads",
                         sopts.shards, sopts.threads_per_shard
                     );
-                    server::start_continuous(
+                    start_continuous_maybe_spec(
                         move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
                         copts,
+                        spec_k,
                     )
                 } else if streaming {
                     let threads = args.get_usize("threads", scheduler::default_threads());
                     let panel_rows = args.get_usize("panel-rows", 16);
                     let qm = ws.quantize_container(&model, &method, bits, None)?;
                     let store = ws.trained_default(&model)?;
-                    server::start_continuous(
+                    start_continuous_maybe_spec(
                         move || {
                             let engine = StreamingMatmul::new(panel_rows, threads);
                             Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
                         },
                         copts,
+                        spec_k,
                     )
                 } else {
                     let store: TensorStore = if method == "none" {
@@ -332,9 +381,10 @@ fn main() -> Result<()> {
                     } else {
                         ws.quantize(&model, &method, bits, None)?.1
                     };
-                    server::start_continuous(
+                    start_continuous_maybe_spec(
                         move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
                         copts,
+                        spec_k,
                     )
                 }
             } else if kv_cache && shards > 0 {
@@ -346,12 +396,9 @@ fn main() -> Result<()> {
                     "sharded cache-aware backend: {} shards x {} threads, kv page {} rows",
                     sopts.shards, sopts.threads_per_shard, kv.page_rows
                 );
-                server::start(
-                    move || {
-                        let b = CachedNativeBackend::sharded(cfg, store, qm, sopts, kv);
-                        Ok(Box::new(b) as Box<_>)
-                    },
-                    ServerOpts::default(),
+                start_lockstep_maybe_spec(
+                    move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
+                    spec_k,
                 )
             } else if kv_cache && streaming {
                 // compressed weights + paged KV cache: prefill once, then
@@ -366,13 +413,12 @@ fn main() -> Result<()> {
                     kv.page_rows,
                     if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
                 );
-                server::start(
+                start_lockstep_maybe_spec(
                     move || {
                         let engine = StreamingMatmul::new(panel_rows, threads);
-                        let b = CachedNativeBackend::streaming(cfg, store, qm, engine, kv);
-                        Ok(Box::new(b) as Box<_>)
+                        Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
                     },
-                    ServerOpts::default(),
+                    spec_k,
                 )
             } else if kv_cache {
                 let store: TensorStore = if method == "none" {
@@ -385,9 +431,9 @@ fn main() -> Result<()> {
                     kv.page_rows,
                     if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
                 );
-                server::start(
-                    move || Ok(Box::new(CachedNativeBackend::dense(cfg, store, kv)) as Box<_>),
-                    ServerOpts::default(),
+                start_lockstep_maybe_spec(
+                    move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
+                    spec_k,
                 )
             } else if shards > 0 {
                 // cacheless sharded lockstep: every forward tensor-parallel
@@ -445,7 +491,7 @@ fn main() -> Result<()> {
                     ServerOpts::default(),
                 )
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}, speculate={spec_k}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             let mut session: Option<u64> = None;
@@ -553,6 +599,22 @@ fn main() -> Result<()> {
                 println!(
                     "total: stored {payload} B vs fixed {fixed} B ({:.1}% saved), side {side} B",
                     100.0 * (1.0 - payload as f64 / fixed.max(1) as f64)
+                );
+                // serve-time cost of `serve --speculate`: the in-memory
+                // 2-bit draft view re-encoded from this container (never
+                // part of the file itself)
+                let draft = glvq::spec::draft_view_of_container(&qm);
+                let weights: usize = qm.tensors.iter().map(|t| t.rows * t.cols).sum();
+                let eff_bits =
+                    (payload + side + draft.total_bytes()) as f64 * 8.0 / weights.max(1) as f64;
+                println!(
+                    "draft view (serve --speculate): +{} B overhead ({} payload + {} side) at {} bits fixed; effective {:.3} bits/weight incl. draft (container alone {:.3})",
+                    draft.total_bytes(),
+                    draft.payload_bytes,
+                    draft.side_bytes,
+                    glvq::spec::DRAFT_BITS,
+                    eff_bits,
+                    (payload + side) as f64 * 8.0 / weights.max(1) as f64
                 );
                 return Ok(());
             }

@@ -112,6 +112,13 @@ pub trait SeqBackend {
     fn sharded_stats(&self) -> Option<Vec<crate::shard::ShardStat>> {
         None
     }
+
+    /// Draft/verify counters, if the backend decodes speculatively.
+    /// (Named apart from `LmBackend::spec_stats` for the same reason as
+    /// [`SeqBackend::sharded_stats`].)
+    fn speculative_stats(&self) -> Option<crate::spec::SpecStats> {
+        None
+    }
 }
 
 /// Continuous-scheduler configuration.
@@ -745,6 +752,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
         self.metrics.kv_cache = self.backend.kv_stats();
         self.metrics.decode = self.backend.stream_stats();
         self.metrics.shards = self.backend.sharded_stats();
+        self.metrics.spec = self.backend.speculative_stats();
     }
 
     /// Timeline for a request answered inline at submit (no admission).

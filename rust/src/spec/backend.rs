@@ -1,0 +1,752 @@
+//! Draft/verify serving backend: speculative decode behind the standard
+//! serving traits.
+//!
+//! [`SpeculativeBackend`] wraps a [`CachedNativeBackend`] (the *target*)
+//! plus a 2-bit [`DraftView`] of the same weights. A decode step runs as
+//! a **round**:
+//!
+//! 1. `spec_draft` — sync the draft's own KV stream to the sequence
+//!    history, then greedily draft `k` tokens through the draft view
+//!    (cheap: 2-bit streamed decode, one token at a time).
+//! 2. `spec_verify` — feed the step token plus all `k` drafted tokens to
+//!    the target in **one** ragged forward. `forward_ragged` yields one
+//!    logits row per fed token and is bit-identical under any chunking,
+//!    so row *i* is exactly what a token-at-a-time target decode would
+//!    have produced.
+//! 3. `spec_rollback` — accept the longest prefix of drafted tokens
+//!    whose target argmax matches the draft's choice, and
+//!    [`crate::kvcache::PagedKvCache::truncate_seq`] the rejected rows
+//!    back off both caches. Accepted rows are *queued*: subsequent
+//!    1-token steps that feed the queued token are answered from the
+//!    queue with no forward at all — that amortization is the speedup.
+//!
+//! Greedy argmax acceptance makes the whole scheme exact: every logits
+//! row the caller sees is a target row, so generated text is
+//! bit-identical to target-only decode (`tests/spec_parity.rs`). A fed
+//! token that does *not* match the queue (a Score continuation, or any
+//! non-greedy caller) invalidates the queued tail and rolls the caches
+//! back — degradation, never divergence.
+//!
+//! Preemption composes: before the target sequence is spilled, queued
+//! (uncommitted) rows are rolled back so the parked pages hold exactly
+//! the tokens the scheduler fed; the sequence history is parked under a
+//! [`crate::kvcache::SpilledSeq`] tag and re-attached on resume, and the
+//! draft KV stream is simply dropped and lazily rebuilt (it is derived
+//! state, like the draft weights themselves).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use crate::coordinator::server::{CachedNativeBackend, LmBackend};
+use crate::eval::native_fwd::{self, argmax_logit, StreamedLinear};
+use crate::kvcache::{KvCacheOpts, KvCacheStats, PagedKvCache, SeqId, SpilledSeq};
+use crate::linalg::Mat;
+use crate::serving::SeqBackend;
+use crate::shard::ShardStat;
+
+use super::draft::{build_draft_view, DraftView};
+use super::SpecStats;
+
+/// Per-sequence speculative state, indexed by the target [`SeqId`] slot.
+struct SpecSeq {
+    /// this sequence's stream in the draft KV cache
+    draft_sid: SeqId,
+    /// tokens the caller has fed (and the target cache has committed,
+    /// beyond the queued tail)
+    history: Vec<i32>,
+    /// committed rows in the draft KV cache (≤ `history.len()` between
+    /// rounds, `history.len() + k_eff` right after a draft phase)
+    draft_rows: usize,
+    /// verified-but-not-yet-requested tokens, oldest first
+    queued_tokens: VecDeque<i32>,
+    /// the target logits row answering each queued token
+    queued_rows: VecDeque<Vec<f32>>,
+}
+
+/// Lockstep recognition entry (mirrors the wrapped backend's own).
+struct LiveSeq {
+    tokens: Vec<i32>,
+    id: SeqId,
+}
+
+/// How each step item is answered (planned in phase 0 of a step).
+enum Plan {
+    /// answered from the verified queue — no forward rows at all
+    Queue(Vec<f32>),
+    /// fed to the target: `expand` tokens, of which the trailing `k_eff`
+    /// are drafted (0 = plain passthrough, e.g. a prefill chunk)
+    Forward { expand: Vec<i32>, k_eff: usize },
+}
+
+/// Speculative decoding wrapper around a [`CachedNativeBackend`].
+/// Implements both [`LmBackend`] (lockstep loop) and [`SeqBackend`]
+/// (continuous loop); `glvq serve --speculate k` constructs one.
+pub struct SpeculativeBackend {
+    target: CachedNativeBackend,
+    k: usize,
+    draft: DraftView,
+    draft_engine: StreamingMatmul,
+    draft_cache: PagedKvCache,
+    draft_stats: DecodeStats,
+    states: Vec<Option<SpecSeq>>,
+    /// histories of preempted sequences, keyed by the spill tag
+    parked: BTreeMap<u64, Vec<i32>>,
+    next_tag: u64,
+    stats: SpecStats,
+    live: Vec<LiveSeq>,
+}
+
+impl SpeculativeBackend {
+    /// Wrap `target`, building the 2-bit draft view from its tensor
+    /// store. `k` is the number of tokens drafted per round (clamped to
+    /// at least 1). The draft keeps its own unbounded f32 KV cache —
+    /// derived state that preemption drops and rebuilds.
+    pub fn new(target: CachedNativeBackend, k: usize) -> Result<SpeculativeBackend> {
+        let cfg = target.config();
+        let draft = build_draft_view(&cfg, target.tensor_store())?;
+        Ok(SpeculativeBackend {
+            draft,
+            draft_engine: StreamingMatmul::new(16, 1),
+            draft_cache: PagedKvCache::new(cfg.n_layer, cfg.d_model, KvCacheOpts::default()),
+            draft_stats: DecodeStats::default(),
+            states: Vec::new(),
+            parked: BTreeMap::new(),
+            next_tag: 1,
+            stats: SpecStats::default(),
+            live: Vec::new(),
+            k: k.max(1),
+            target,
+        })
+    }
+
+    /// Cumulative draft/verify counters.
+    pub fn spec_counters(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// The draft view (for size reporting).
+    pub fn draft_view(&self) -> &DraftView {
+        &self.draft
+    }
+
+    fn insert_state(&mut self, sid: SeqId, st: SpecSeq) {
+        let i = sid.index();
+        if self.states.len() <= i {
+            self.states.resize_with(i + 1, || None);
+        }
+        self.states[i] = Some(st);
+    }
+
+    /// One ragged forward through the **draft** view: streamed 2-bit
+    /// weights over the shared tensor store, into the draft's KV cache.
+    fn draft_forward(&mut self, sid: SeqId, tokens: &[i32]) -> Result<Mat> {
+        let cfg = self.target.config();
+        let store = self.target.tensor_store();
+        let mut lin = StreamedLinear {
+            qm: &self.draft.model,
+            store,
+            engine: &self.draft_engine,
+            stats: DecodeStats::default(),
+        };
+        let out = native_fwd::forward_ragged(
+            &cfg,
+            store,
+            &mut lin,
+            &mut self.draft_cache,
+            &[sid],
+            &[tokens],
+        );
+        self.draft_stats.merge(&lin.stats);
+        out
+    }
+
+    /// The speculative step: answer queue hits without a forward, expand
+    /// decode steps into draft+verify rounds, pass prefill chunks
+    /// through, and return exactly one logits row per fed token (the
+    /// scheduler's `step_ragged` contract).
+    fn step_spec(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
+        let cfg = self.target.config();
+        let seq_len = cfg.seq_len;
+        let vocab = cfg.vocab;
+
+        // ---- phase 0: classify items; settle queues ----
+        // `budget` bounds drafted-row appends by the pages actually free
+        // right now, so a round never overcommits an arena the scheduler
+        // only budgeted one token for. Queue-mismatch rollbacks below
+        // only *free* pages, so the snapshot is conservative.
+        let mut budget = self.target.free_pages();
+        let mut plans: Vec<Plan> = Vec::with_capacity(items.len());
+        for (sid, fed) in items {
+            let si = sid.index();
+            let st = self.states[si].as_mut().expect("stepped sequence has speculative state");
+            if !st.queued_tokens.is_empty() {
+                if fed.len() == 1 && st.queued_tokens.front() == Some(&fed[0]) {
+                    st.queued_tokens.pop_front();
+                    let row = st.queued_rows.pop_front().expect("queued rows parallel tokens");
+                    st.history.push(fed[0]);
+                    plans.push(Plan::Queue(row));
+                    continue;
+                }
+                // non-greedy feed: the verified tail is for a path not
+                // taken — drop it and roll both caches back to history
+                let n_q = st.queued_tokens.len();
+                st.queued_tokens.clear();
+                st.queued_rows.clear();
+                let base = st.history.len();
+                let draft_sid = st.draft_sid;
+                let dr = st.draft_rows.min(base);
+                let roll_draft = dr < st.draft_rows;
+                st.draft_rows = dr;
+                {
+                    let _sp = crate::span!("spec_rollback");
+                    self.target.truncate(*sid, base)?;
+                    if roll_draft {
+                        self.draft_cache.truncate_seq(draft_sid, dr)?;
+                    }
+                }
+                self.stats.rollback_rows += n_q as u64;
+            }
+            let st = self.states[si].as_ref().expect("still present");
+            let base = st.history.len();
+            if fed.len() != 1 {
+                // prefill chunk (or re-fed window): pass through as-is
+                if let Some(b) = budget.as_mut() {
+                    *b = b.saturating_sub(self.target.pages_for(base, fed.len()));
+                }
+                plans.push(Plan::Forward { expand: fed.to_vec(), k_eff: 0 });
+                continue;
+            }
+            // decode step: plan a round, clamped by context and pages
+            let mut k_eff = self.k.min(seq_len.saturating_sub(base + 1));
+            if let Some(b) = budget.as_mut() {
+                while k_eff > 0 && self.target.pages_for(base, 1 + k_eff) > *b {
+                    k_eff -= 1;
+                }
+                *b = b.saturating_sub(self.target.pages_for(base, 1 + k_eff));
+            }
+            plans.push(Plan::Forward { expand: vec![fed[0]], k_eff });
+        }
+
+        // ---- phase 1: draft k tokens per round through the 2-bit view ----
+        for (idx, (sid, _)) in items.iter().enumerate() {
+            let k_eff = match &plans[idx] {
+                Plan::Forward { k_eff, .. } if *k_eff > 0 => *k_eff,
+                _ => continue,
+            };
+            let _sp = crate::span!("spec_draft");
+            let (draft_sid, feed) = {
+                let st = self.states[sid.index()].as_ref().expect("present");
+                // lazy sync: everything the draft stream is missing, plus
+                // the step token itself
+                let mut feed = st.history[st.draft_rows..].to_vec();
+                if let Plan::Forward { expand, .. } = &plans[idx] {
+                    feed.push(expand[0]);
+                }
+                (st.draft_sid, feed)
+            };
+            let logits = self.draft_forward(draft_sid, &feed)?;
+            let mut d = argmax_logit(logits.row(logits.rows - 1));
+            let mut drafted = vec![d];
+            for _ in 1..k_eff {
+                let lg = self.draft_forward(draft_sid, &[d])?;
+                d = argmax_logit(lg.row(lg.rows - 1));
+                drafted.push(d);
+            }
+            let st = self.states[sid.index()].as_mut().expect("present");
+            st.draft_rows = st.history.len() + k_eff;
+            if let Plan::Forward { expand, .. } = &mut plans[idx] {
+                expand.extend_from_slice(&drafted);
+            }
+        }
+
+        // ---- phase 2: one ragged target forward verifies everything ----
+        let any_round =
+            plans.iter().any(|p| matches!(p, Plan::Forward { k_eff, .. } if *k_eff > 0));
+        let fwd: Vec<(SeqId, &[i32])> = items
+            .iter()
+            .zip(&plans)
+            .filter_map(|((sid, _), plan)| match plan {
+                Plan::Forward { expand, .. } => Some((*sid, expand.as_slice())),
+                Plan::Queue(_) => None,
+            })
+            .collect();
+        let out = if fwd.is_empty() {
+            None
+        } else {
+            let _sp = any_round.then(|| crate::span!("spec_verify"));
+            let m = self.target.step_ragged(&fwd)?;
+            if any_round {
+                self.stats.verify_calls += 1;
+            }
+            Some(m)
+        };
+
+        // ---- phase 3: accept, roll back rejects, assemble the result ----
+        let total: usize = items.iter().map(|(_, fed)| fed.len()).sum();
+        let mut result = Mat::zeros(total, vocab);
+        let mut src = 0usize;
+        let mut dst = 0usize;
+        for (idx, (sid, fed)) in items.iter().enumerate() {
+            match &plans[idx] {
+                Plan::Queue(row) => {
+                    result.data[dst * vocab..(dst + 1) * vocab].copy_from_slice(row);
+                    dst += 1;
+                }
+                Plan::Forward { expand, k_eff } => {
+                    let out = out.as_ref().expect("forward ran for forward plans");
+                    if *k_eff == 0 {
+                        for r in 0..expand.len() {
+                            result.data[(dst + r) * vocab..(dst + r + 1) * vocab]
+                                .copy_from_slice(out.row(src + r));
+                        }
+                        let st = self.states[sid.index()].as_mut().expect("present");
+                        st.history.extend_from_slice(fed);
+                        src += expand.len();
+                        dst += fed.len();
+                        continue;
+                    }
+                    // accept the longest prefix where the target's greedy
+                    // choice equals the drafted token — row src+i answers
+                    // expand[i], so acceptance is exact argmax parity
+                    let mut a = 0usize;
+                    while a < *k_eff && argmax_logit(out.row(src + a)) == expand[a + 1] {
+                        a += 1;
+                    }
+                    let (base, draft_sid, old_dr) = {
+                        let st = self.states[sid.index()].as_ref().expect("present");
+                        (st.history.len(), st.draft_sid, st.draft_rows)
+                    };
+                    let keep = base + 1 + a;
+                    let dr = old_dr.min(keep);
+                    if a < *k_eff {
+                        let _sp = crate::span!("spec_rollback");
+                        self.target.truncate(*sid, keep)?;
+                        if dr < old_dr {
+                            self.draft_cache.truncate_seq(draft_sid, dr)?;
+                        }
+                    }
+                    self.stats.rounds += 1;
+                    self.stats.drafted += *k_eff as u64;
+                    self.stats.accepted += a as u64;
+                    self.stats.rollback_rows += (*k_eff - a) as u64;
+                    let st = self.states[sid.index()].as_mut().expect("present");
+                    st.draft_rows = dr;
+                    st.history.push(expand[0]);
+                    for i in 1..=a {
+                        st.queued_tokens.push_back(expand[i]);
+                        st.queued_rows.push_back(out.row(src + i).to_vec());
+                    }
+                    result.data[dst * vocab..(dst + 1) * vocab].copy_from_slice(out.row(src));
+                    src += 1 + k_eff;
+                    dst += 1;
+                }
+            }
+        }
+        Ok(result)
+    }
+}
+
+impl SeqBackend for SpeculativeBackend {
+    fn ctx_len(&self) -> usize {
+        self.target.ctx_len()
+    }
+
+    fn begin_seq(&mut self) -> SeqId {
+        let sid = self.target.begin_seq();
+        let draft_sid = self.draft_cache.new_seq();
+        self.insert_state(
+            sid,
+            SpecSeq {
+                draft_sid,
+                history: Vec::new(),
+                draft_rows: 0,
+                queued_tokens: VecDeque::new(),
+                queued_rows: VecDeque::new(),
+            },
+        );
+        sid
+    }
+
+    fn begin_seq_prefixed(&mut self, tokens: &[i32], max_rows: usize) -> (SeqId, usize) {
+        let (sid, claimed) = self.target.begin_seq_prefixed(tokens, max_rows);
+        let draft_sid = self.draft_cache.new_seq();
+        self.insert_state(
+            sid,
+            SpecSeq {
+                draft_sid,
+                // claimed rows are committed history the caller will
+                // never feed; the draft stream syncs to them lazily
+                history: tokens[..claimed].to_vec(),
+                draft_rows: 0,
+                queued_tokens: VecDeque::new(),
+                queued_rows: VecDeque::new(),
+            },
+        );
+        (sid, claimed)
+    }
+
+    fn publish_seq(&mut self, sid: SeqId, tokens: &[i32]) {
+        self.target.publish_seq(sid, tokens);
+    }
+
+    fn step_ragged(&mut self, items: &[(SeqId, &[i32])]) -> Result<Mat> {
+        self.step_spec(items)
+    }
+
+    fn retire_seq(&mut self, sid: SeqId) {
+        if let Some(st) = self.states.get_mut(sid.index()).and_then(|s| s.take()) {
+            self.draft_cache.evict(st.draft_sid);
+        }
+        self.target.retire_seq(sid);
+    }
+
+    fn preempt_seq(&mut self, sid: SeqId, quantize: bool) -> Result<SpilledSeq> {
+        // the spilled pages must hold exactly the tokens the scheduler
+        // fed, so the queued (verified-but-unrequested) tail rolls back
+        // before the spill; it is re-drafted cheaply after resume
+        let (base, n_q) = {
+            let st =
+                self.states[sid.index()].as_mut().expect("preempted sequence has state");
+            let n_q = st.queued_tokens.len();
+            st.queued_tokens.clear();
+            st.queued_rows.clear();
+            (st.history.len(), n_q)
+        };
+        if n_q > 0 {
+            let _sp = crate::span!("spec_rollback");
+            self.target.truncate(sid, base)?;
+            self.stats.rollback_rows += n_q as u64;
+        }
+        let mut sp = self.target.preempt_seq(sid, quantize)?;
+        let st = self.states[sid.index()].take().expect("state present");
+        self.draft_cache.evict(st.draft_sid);
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        sp.set_tag(tag);
+        self.parked.insert(tag, st.history);
+        Ok(sp)
+    }
+
+    fn resume_seq(&mut self, sp: SpilledSeq) -> std::result::Result<SeqId, SpilledSeq> {
+        let tag = sp.tag();
+        match self.target.resume_seq(sp) {
+            Ok(sid) => {
+                let history = self.parked.remove(&tag).unwrap_or_default();
+                let draft_sid = self.draft_cache.new_seq();
+                self.insert_state(
+                    sid,
+                    SpecSeq {
+                        draft_sid,
+                        history,
+                        draft_rows: 0,
+                        queued_tokens: VecDeque::new(),
+                        queued_rows: VecDeque::new(),
+                    },
+                );
+                Ok(sid)
+            }
+            // the parked history stays for the scheduler's retry
+            Err(sp) => Err(sp),
+        }
+    }
+
+    fn free_pages(&self) -> Option<usize> {
+        self.target.free_pages()
+    }
+
+    fn page_capacity(&self) -> Option<usize> {
+        self.target.page_capacity()
+    }
+
+    fn pages_for(&self, rows: usize, n_new: usize) -> usize {
+        self.target.pages_for(rows, n_new)
+    }
+
+    fn kv_stats(&self) -> Option<KvCacheStats> {
+        self.target.kv_stats()
+    }
+
+    fn stream_stats(&self) -> Option<DecodeStats> {
+        // the draft always streams its 2-bit view, even over a dense
+        // target — fold both decode streams into one report
+        let mut s = self.target.stream_stats().unwrap_or_default();
+        s.merge(&self.draft_stats);
+        Some(s)
+    }
+
+    fn sharded_stats(&self) -> Option<Vec<ShardStat>> {
+        self.target.sharded_stats()
+    }
+
+    fn speculative_stats(&self) -> Option<SpecStats> {
+        Some(self.stats)
+    }
+}
+
+impl LmBackend for SpeculativeBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    /// Lockstep recognition, mirroring the wrapped backend's: an
+    /// extend-by-one prefix becomes a speculative decode step, anything
+    /// else (re-)prefills a window — all through [`Self::step_spec`], so
+    /// lockstep serving drafts exactly like continuous serving.
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        let t_max = self.target.config().seq_len;
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; prefixes.len()];
+
+        let mut claimed = vec![false; self.live.len()];
+        let mut dead = vec![false; self.live.len()];
+        let mut steps: Vec<(usize, usize)> = Vec::new();
+        let mut stepping = vec![false; prefixes.len()];
+        for (pi, p) in prefixes.iter().enumerate() {
+            let n = p.len();
+            if n == 0 {
+                continue;
+            }
+            let matched = self.live.iter().enumerate().find(|(li, s)| {
+                !claimed[*li] && s.tokens.len() + 1 == n && s.tokens[..] == p[..n - 1]
+            });
+            if let Some((li, _)) = matched {
+                claimed[li] = true;
+                if n > t_max {
+                    // outgrew the position table — sliding-window regime
+                    dead[li] = true;
+                } else {
+                    steps.push((pi, li));
+                    stepping[pi] = true;
+                }
+            }
+        }
+        if dead.iter().any(|&d| d) {
+            let mut remap = vec![0usize; self.live.len()];
+            let mut kept = 0usize;
+            let mut to_retire = Vec::new();
+            for (li, slot) in remap.iter_mut().enumerate() {
+                *slot = kept;
+                if dead[li] {
+                    to_retire.push(self.live[li].id);
+                } else {
+                    kept += 1;
+                }
+            }
+            for id in to_retire {
+                self.retire_seq(id);
+            }
+            let mut idx = 0;
+            self.live.retain(|_| {
+                let keep = !dead[idx];
+                idx += 1;
+                keep
+            });
+            for s in steps.iter_mut() {
+                s.1 = remap[s.1];
+            }
+        }
+
+        // unmatched prefixes (re-)prefill through the speculative step
+        for (pi, p) in prefixes.iter().enumerate() {
+            if stepping[pi] {
+                continue;
+            }
+            let window: &[i32] = if p.is_empty() {
+                &[0]
+            } else if p.len() > t_max {
+                &p[p.len() - t_max..]
+            } else {
+                p
+            };
+            let (sid, claimed_rows) =
+                self.begin_seq_prefixed(window, window.len().saturating_sub(1));
+            let fed = &window[claimed_rows..];
+            let logits = match self.step_spec(&[(sid, fed)]) {
+                Ok(l) => l.row(l.rows - 1).to_vec(),
+                Err(e) => {
+                    self.retire_seq(sid);
+                    return Err(e);
+                }
+            };
+            if p.is_empty() || p.len() > t_max {
+                // transient window: the cache cannot extend it next step
+                self.retire_seq(sid);
+            } else {
+                self.live.push(LiveSeq { tokens: p.to_vec(), id: sid });
+            }
+            out[pi] = Some(logits);
+        }
+
+        // one speculative step batch advances all recognized sequences
+        if !steps.is_empty() {
+            let last: Vec<i32> =
+                steps.iter().map(|&(pi, _)| *prefixes[pi].last().unwrap()).collect();
+            let items: Vec<(SeqId, &[i32])> = steps
+                .iter()
+                .enumerate()
+                .map(|(si, &(_, li))| (self.live[li].id, std::slice::from_ref(&last[si])))
+                .collect();
+            let logits = match self.step_spec(&items) {
+                Ok(l) => l,
+                Err(e) => {
+                    // a failed step leaves skewed per-layer rows: evict
+                    // the stepping sequences so a retry re-prefills
+                    let mut bad = vec![false; self.live.len()];
+                    let mut ids = Vec::new();
+                    for &(_, li) in &steps {
+                        bad[li] = true;
+                        ids.push(self.live[li].id);
+                    }
+                    for id in ids {
+                        self.retire_seq(id);
+                    }
+                    let mut idx = 0;
+                    self.live.retain(|_| {
+                        let keep = !bad[idx];
+                        idx += 1;
+                        keep
+                    });
+                    return Err(e);
+                }
+            };
+            for (si, &(pi, li)) in steps.iter().enumerate() {
+                self.live[li].tokens.push(last[si]);
+                out[pi] = Some(logits.row(si).to_vec());
+            }
+        }
+
+        Ok(out.into_iter().map(|o| o.expect("every prefix answered")).collect())
+    }
+
+    fn seq_len(&self) -> usize {
+        self.target.config().seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.target.config().vocab
+    }
+
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        self.stream_stats()
+    }
+
+    fn end_batch(&mut self) {
+        let live = std::mem::take(&mut self.live);
+        for s in live {
+            self.publish_seq(s.id, &s.tokens);
+            self.retire_seq(s.id);
+        }
+    }
+
+    fn cache_stats(&self) -> Option<KvCacheStats> {
+        self.target.cache_stats()
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        self.target.shard_stats()
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, ModelConfig};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "spec-test",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 1,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 32,
+            batch_train: 2,
+            batch_eval: 2,
+        }
+    }
+
+    fn dense_backend(cfg: &ModelConfig) -> CachedNativeBackend {
+        CachedNativeBackend::dense(*cfg, init_params(cfg, 0), KvCacheOpts::default())
+    }
+
+    /// Greedy continuation through plain SeqBackend stepping.
+    fn greedy<B: SeqBackend>(backend: &mut B, prompt: &[i32], n_new: usize) -> Vec<i32> {
+        let sid = backend.begin_seq();
+        let first = backend.step_ragged(&[(sid, prompt)]).unwrap();
+        let mut toks = vec![argmax_logit(first.row(first.rows - 1))];
+        for _ in 1..n_new {
+            let t = *toks.last().unwrap();
+            let lg = backend.step_ragged(&[(sid, &[t])]).unwrap();
+            toks.push(argmax_logit(lg.row(lg.rows - 1)));
+        }
+        backend.retire_seq(sid);
+        toks
+    }
+
+    #[test]
+    fn speculative_greedy_decode_matches_target_only() {
+        let cfg = tiny_cfg();
+        let prompt: Vec<i32> = vec![5, 9, 2, 14];
+        let want = greedy(&mut dense_backend(&cfg), &prompt, 12);
+        for k in [1usize, 2, 4, 8] {
+            let mut spec = SpeculativeBackend::new(dense_backend(&cfg), k).unwrap();
+            let got = greedy(&mut spec, &prompt, 12);
+            assert_eq!(got, want, "speculative (k={k}) diverged from target-only");
+            let s = spec.spec_counters();
+            assert!(s.rounds > 0, "k={k} never ran a round");
+            assert!(s.drafted >= s.accepted);
+        }
+    }
+
+    #[test]
+    fn queue_mismatch_rolls_back_and_recovers() {
+        let cfg = tiny_cfg();
+        let mut spec = SpeculativeBackend::new(dense_backend(&cfg), 4).unwrap();
+        let sid = spec.begin_seq();
+        let first = spec.step_ragged(&[(sid, &[1, 2, 3][..])]).unwrap();
+        let g1 = argmax_logit(first.row(first.rows - 1));
+        // step the greedy token (fills the queue), then deliberately feed
+        // a non-greedy token: the queued tail must roll back, and the
+        // row must still equal the target's
+        let r1 = spec.step_ragged(&[(sid, &[g1][..])]).unwrap();
+        let wrong = (argmax_logit(r1.row(0)) + 1) % cfg.vocab as i32;
+        let r2 = spec.step_ragged(&[(sid, &[wrong][..])]).unwrap();
+        spec.retire_seq(sid);
+
+        let mut target = dense_backend(&cfg);
+        let tid = target.begin_seq();
+        target.step_ragged(&[(tid, &[1, 2, 3][..])]).unwrap();
+        let t1 = target.step_ragged(&[(tid, &[g1][..])]).unwrap();
+        let t2 = target.step_ragged(&[(tid, &[wrong][..])]).unwrap();
+        target.retire_seq(tid);
+        assert_eq!(r1.row(0), t1.row(0));
+        assert_eq!(r2.row(0), t2.row(0));
+    }
+
+    #[test]
+    fn lockstep_interface_matches_wrapped_backend() {
+        let cfg = tiny_cfg();
+        let mut plain = dense_backend(&cfg);
+        let mut spec = SpeculativeBackend::new(dense_backend(&cfg), 4).unwrap();
+        let mut a: Vec<i32> = vec![7, 3];
+        let mut b = a.clone();
+        for _ in 0..10 {
+            let ra = plain.logits_last(&a).unwrap();
+            let rb = LmBackend::logits_last(&mut spec, &b).unwrap();
+            let ta = argmax_logit(&ra);
+            let tb = argmax_logit(&rb);
+            assert_eq!(ta, tb);
+            a.push(ta);
+            b.push(tb);
+        }
+        plain.end_batch();
+        LmBackend::end_batch(&mut spec);
+        assert_eq!(a, b);
+    }
+}

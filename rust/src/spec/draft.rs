@@ -1,0 +1,185 @@
+//! Draft-view builder: a second, much smaller quantized view of the
+//! *same* weights.
+//!
+//! The target container stores per-group variable-rate codes; the draft
+//! is a fixed-rate 2-bit re-quantization of whatever weights are already
+//! loaded, built at serve time in one pass. It reuses the KV cache's
+//! page recipe ([`crate::kvcache::KvQuantizer`]: mu-law companding into a
+//! scaled-identity lattice) and stores the result as ordinary
+//! [`QuantizedGroup`]s inside a [`QuantizedModel`], so the streaming
+//! decode engine serves it with zero new decode paths — the draft is
+//! just another container as far as `StreamingMatmul` is concerned.
+//!
+//! The view is derived state: it is never serialized (its groups carry
+//! the `"kv-glvq"` method tag, which the on-disk format does not map),
+//! and `glvq info --container` reports its bytes as *overhead* on top of
+//! the stored container, with the effective bits/weight including it.
+
+use anyhow::{Context, Result};
+
+use crate::kvcache::KvQuantizer;
+use crate::linalg::Mat;
+use crate::model::ModelConfig;
+use crate::quant::format::{QuantizedModel, QuantizedTensor};
+use crate::tensor::TensorStore;
+
+/// Fixed code width of the draft view. 2 bits is the smallest rate at
+/// which greedy draft argmaxes still track the target often enough to
+/// pay for themselves (the accept-rate trajectory in `bench_spec`
+/// watches exactly this).
+pub const DRAFT_BITS: u8 = 2;
+
+/// Rows per draft group: one group spans the full input width, so a
+/// streamed panel decode touches exactly one side-info record.
+const DRAFT_GROUP_ROWS: usize = 32;
+
+/// A fixed-rate low-bit view of the target weights, plus its size
+/// accounting for the `info` report.
+pub struct DraftView {
+    /// the draft weights, keyed by the same tensor names as the target
+    pub model: QuantizedModel,
+    /// stored code bytes of the draft view
+    pub payload_bytes: usize,
+    /// side-info bytes (scales, companding, lattice bases)
+    pub side_bytes: usize,
+}
+
+impl DraftView {
+    /// Total in-memory overhead of keeping the draft alongside the
+    /// target (codes + side info).
+    pub fn total_bytes(&self) -> usize {
+        self.payload_bytes + self.side_bytes
+    }
+}
+
+/// Cut one streaming-orientation matrix into [`DRAFT_GROUP_ROWS`]-row
+/// fixed-rate groups.
+fn quantize_mat(quant: &KvQuantizer, name: String, w: &Mat) -> QuantizedTensor {
+    let mut groups = Vec::new();
+    let mut r0 = 0;
+    while r0 < w.rows {
+        let rows = DRAFT_GROUP_ROWS.min(w.rows - r0);
+        let chunk = &w.data[r0 * w.cols..(r0 + rows) * w.cols];
+        groups.push((r0, 0, quant.quantize_page(chunk, rows, w.cols)));
+        r0 += rows;
+    }
+    QuantizedTensor { name, rows: w.rows, cols: w.cols, groups }
+}
+
+/// Re-quantize every quantizable parameter of `store` into the 2-bit
+/// draft view. Weights are transposed into the streaming-matmul
+/// orientation (rows = output features) and cut into
+/// [`DRAFT_GROUP_ROWS`]-row groups, exactly the shape
+/// `StreamingMatmul` panels over.
+pub fn build_draft_view(cfg: &ModelConfig, store: &TensorStore) -> Result<DraftView> {
+    let _sp = crate::span!("spec_build_draft");
+    let quant = KvQuantizer { bits: DRAFT_BITS, lattice_dim: 8, entropy: false };
+    let mut tensors = Vec::new();
+    for spec in cfg.param_specs() {
+        if !spec.quantizable {
+            continue;
+        }
+        let w = store
+            .get(&spec.name)
+            .with_context(|| format!("draft view: missing tensor {}", spec.name))?
+            .to_mat();
+        // store layout is (n_in × n_out); quantized tensors hold Wᵀ so a
+        // row-panel decode yields contiguous output features
+        let wt = w.transpose();
+        tensors.push(quantize_mat(&quant, spec.name, &wt));
+    }
+    let model = QuantizedModel { tensors };
+    let (payload_bytes, side_bytes) = model.size_bytes();
+    Ok(DraftView { model, payload_bytes, side_bytes })
+}
+
+/// Build the draft view straight from a loaded container — what `glvq
+/// info --container` uses to report the serve-time overhead of
+/// `--speculate` without needing the original checkpoint. Each stored
+/// tensor (already in streaming orientation) is dequantized and
+/// re-encoded at [`DRAFT_BITS`].
+pub fn draft_view_of_container(qm: &QuantizedModel) -> DraftView {
+    let _sp = crate::span!("spec_build_draft");
+    let quant = KvQuantizer { bits: DRAFT_BITS, lattice_dim: 8, entropy: false };
+    let tensors = qm
+        .tensors
+        .iter()
+        .map(|t| quantize_mat(&quant, t.name.clone(), &t.dequantize()))
+        .collect();
+    let model = QuantizedModel { tensors };
+    let (payload_bytes, side_bytes) = model.size_bytes();
+    DraftView { model, payload_bytes, side_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, CONFIG_S};
+
+    #[test]
+    fn draft_covers_every_quantizable_tensor_at_two_bits() {
+        let cfg = CONFIG_S;
+        let store = init_params(&cfg, 7);
+        let draft = build_draft_view(&cfg, &store).unwrap();
+        let names = cfg.quantizable_names();
+        assert_eq!(draft.model.tensors.len(), names.len());
+        for name in &names {
+            let qt = draft.model.get(name).expect("tensor present in draft");
+            for (_, _, g) in &qt.groups {
+                assert_eq!(g.bits, DRAFT_BITS);
+            }
+            // orientation: rows = output features of the transposed weight
+            let spec = cfg
+                .param_specs()
+                .into_iter()
+                .find(|s| &s.name == name)
+                .unwrap();
+            assert_eq!(qt.rows, spec.shape[1]);
+            assert_eq!(qt.cols, spec.shape[0]);
+        }
+        assert!(draft.payload_bytes > 0);
+        assert!(draft.side_bytes > 0);
+        // a 2-bit view must come in way under the f32 weights
+        let dense_bytes: usize = names
+            .iter()
+            .map(|n| {
+                let t = draft.model.get(n).unwrap();
+                t.rows * t.cols * 4
+            })
+            .sum();
+        assert!(draft.total_bytes() < dense_bytes / 4);
+    }
+
+    #[test]
+    fn container_draft_matches_store_draft_shapes() {
+        let cfg = CONFIG_S;
+        let store = init_params(&cfg, 11);
+        let d1 = build_draft_view(&cfg, &store).unwrap();
+        // re-encoding any container (here: the draft itself) keeps the
+        // tensor inventory and streaming orientation
+        let d2 = draft_view_of_container(&d1.model);
+        assert_eq!(d2.model.tensors.len(), d1.model.tensors.len());
+        for (a, b) in d1.model.tensors.iter().zip(&d2.model.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+        assert!(d2.total_bytes() > 0);
+    }
+
+    #[test]
+    fn draft_dequantizes_within_lattice_step() {
+        let cfg = CONFIG_S;
+        let store = init_params(&cfg, 3);
+        let draft = build_draft_view(&cfg, &store).unwrap();
+        let w = store.get("out").unwrap().to_mat().transpose();
+        let dq = draft.model.get("out").unwrap().dequantize();
+        assert_eq!(dq.rows, w.rows);
+        assert_eq!(dq.cols, w.cols);
+        // coarse but bounded: 2-bit mu-law reconstruction stays within
+        // the page max-abs (sanity that orientation and scaling line up)
+        let maxabs = w.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in w.data.iter().zip(dq.data.iter()) {
+            assert!((a - b).abs() <= maxabs, "reconstruction blew past the page scale");
+        }
+    }
+}

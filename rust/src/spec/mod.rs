@@ -1,0 +1,93 @@
+//! Self-speculative decoding from the variable-rate GLVQ container.
+//!
+//! The paper's rate/accuracy trade-off gives multiple views of the *same*
+//! weights at different bit-rates. This subsystem cashes that in for
+//! wall-clock speed: [`draft::build_draft_view`] re-quantizes the already
+//! loaded target weights into a tiny fixed-rate 2-bit lattice view (the
+//! same scaled-identity-lattice recipe the KV cache uses to retire cold
+//! pages), and [`SpeculativeBackend`] drafts `k` tokens greedily through
+//! that view, then verifies all of them in **one** ragged target forward
+//! — `forward_ragged` is exactly the verify primitive, because it
+//! produces one logits row per fed token.
+//!
+//! Acceptance is exact, not approximate: generation is greedy
+//! (`argmax_logit`), so a drafted token is accepted iff the target's
+//! argmax at the same position produces the *identical* token id.
+//! Accepted output is therefore bit-identical to target-only decode
+//! (`tests/spec_parity.rs`), and the accepted-token rate becomes a
+//! quality metric tying back to the paper's rate/accuracy trade-off:
+//! a draft view that tracks the target closely accepts more.
+//!
+//! Rejected positions roll back through
+//! [`crate::kvcache::PagedKvCache::truncate_seq`] — a page-granular trim
+//! that composes with prefix sharing (a shared page is never freed or
+//! written by rollback, only this sequence's reference to it goes).
+//!
+//! The wrapper implements both serving traits
+//! ([`crate::serving::SeqBackend`] and
+//! [`crate::coordinator::server::LmBackend`]), so the lockstep *and*
+//! continuous loops run it unchanged; `glvq serve --speculate k` switches
+//! it on. The draft/verify/rollback phases run under `spec_draft` /
+//! `spec_verify` / `spec_rollback` tracing spans, and [`SpecStats`]
+//! surfaces the accept rate in the server report.
+
+pub mod backend;
+pub mod draft;
+
+pub use backend::SpeculativeBackend;
+pub use draft::{build_draft_view, draft_view_of_container, DraftView, DRAFT_BITS};
+
+/// Cumulative draft/verify counters for the speculative decode loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// tokens proposed by the draft view
+    pub drafted: u64,
+    /// drafted tokens the target verified (greedy-argmax equality)
+    pub accepted: u64,
+    /// draft→verify rounds run
+    pub rounds: u64,
+    /// batched target verify forwards issued
+    pub verify_calls: u64,
+    /// KV rows rolled back off rejected draft positions
+    pub rollback_rows: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// has been drafted yet).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Fold another counter snapshot into this one.
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rounds += other.rounds;
+        self.verify_calls += other.verify_calls;
+        self.rollback_rows += other.rollback_rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_rate_handles_empty_and_partial() {
+        let mut s = SpecStats::default();
+        assert_eq!(s.accept_rate(), 0.0);
+        s.drafted = 8;
+        s.accepted = 6;
+        assert!((s.accept_rate() - 0.75).abs() < 1e-12);
+        let mut t = SpecStats { drafted: 2, accepted: 2, rounds: 1, ..Default::default() };
+        t.merge(&s);
+        assert_eq!(t.drafted, 10);
+        assert_eq!(t.accepted, 8);
+        assert_eq!(t.rounds, 1);
+    }
+}

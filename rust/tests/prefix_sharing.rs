@@ -88,7 +88,7 @@ fn refcounts_and_free_lists_survive_random_op_interleavings() {
         let mut live: Vec<(SeqId, Vec<i32>)> = Vec::new();
         let mut parked: Vec<(SpilledSeq, Vec<i32>)> = Vec::new();
         for op in 0..10 {
-            match rig.usize_in(0, 5) {
+            match rig.usize_in(0, 6) {
                 0 | 1 => {
                     // begin: claim the longest shared prefix, prefill the
                     // rest — shedding the admission when the arena is full
@@ -135,6 +135,21 @@ fn refcounts_and_free_lists_survive_random_op_interleavings() {
                         let (sid, tokens) = live.swap_remove(i);
                         let sp = c.spill(sid, rig.bool()).unwrap();
                         parked.push((sp, tokens));
+                    }
+                }
+                5 => {
+                    // truncate: the speculative decoder's rejection path —
+                    // roll a live sequence back to an arbitrary length,
+                    // possibly into its claimed shared prefix. A shared
+                    // partial tail CoW-splits (one fresh page per stream),
+                    // so skip when the bounded arena can't cover that.
+                    let room = !c.free_pages().is_some_and(|f| f < 2 * n_layer);
+                    if !live.is_empty() && room {
+                        let i = rig.usize_in(0, live.len() - 1);
+                        let keep = rig.usize_in(0, live[i].1.len());
+                        c.truncate_seq(live[i].0, keep).unwrap();
+                        // mirror the trim so later publishes stay honest
+                        live[i].1.truncate(keep);
                     }
                 }
                 _ => {
@@ -243,6 +258,60 @@ fn cow_split_never_mutates_the_shared_pages() {
         c.evict(a);
         c.drop_cold_prefixes();
         assert_eq!(c.stats().pages_in_use, 0);
+        c.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn truncate_rolls_back_without_touching_shared_pages() {
+    proptest(256, |rig| {
+        let pr = rig.usize_in(2, 4);
+        let n_layer = rig.usize_in(1, 2);
+        let mut c = PagedKvCache::new(n_layer, 4, share_opts(pr, 0));
+        let la = 3 * pr;
+        let ta: Vec<i32> = (0..la).map(|_| rig.usize_in(0, 7) as i32).collect();
+        let (a, _) = c.new_seq_shared(&ta, la);
+        fill_rows(&mut c, a, n_layer, &ta, 0);
+        c.publish_prefix(a, &ta);
+        let before = snap(&mut c, a, n_layer, la);
+        // B claims the whole published prefix, drafts a few speculative
+        // rows past it, then a rejection rolls it back to `keep` — which
+        // may land anywhere, including mid-page inside the shared claim
+        let mut tb = ta.clone();
+        for _ in 0..rig.usize_in(1, pr) {
+            tb.push(rig.usize_in(0, 7) as i32);
+        }
+        let (b, claimed) = c.new_seq_shared(&tb, la);
+        assert_eq!(claimed, la, "case {}: full prefix must claim", rig.case);
+        fill_rows(&mut c, b, n_layer, &tb, claimed);
+        let keep = rig.usize_in(0, tb.len());
+        c.truncate_seq(b, keep).unwrap();
+        c.check_invariants().unwrap();
+        // the publisher's rows are bit-identical no matter where the cut
+        // landed: rollback drops references, it never writes shared pages
+        assert_eq!(snap(&mut c, a, n_layer, la), before, "case {}: truncate(B) hit A", rig.case);
+        // B's surviving shared rows still equal the publisher's
+        let shared_keep = keep.min(la);
+        assert_eq!(
+            snap(&mut c, b, n_layer, shared_keep),
+            snap(&mut c, a, n_layer, shared_keep),
+            "case {}: B's kept rows diverged",
+            rig.case
+        );
+        // the truncated tail page is appendable again: regrow B to full
+        // length and it matches a from-scratch fill exactly
+        fill_rows(&mut c, b, n_layer, &tb, keep);
+        assert_eq!(
+            snap(&mut c, b, n_layer, la),
+            before,
+            "case {}: regrown rows diverge from the publisher",
+            rig.case
+        );
+        assert_eq!(snap(&mut c, a, n_layer, la), before, "case {}: regrow hit A", rig.case);
+        c.evict(b);
+        c.evict(a);
+        c.drop_cold_prefixes();
+        assert_eq!(c.stats().pages_in_use, 0, "case {}: pages leaked", rig.case);
         c.check_invariants().unwrap();
     });
 }
