@@ -1,0 +1,310 @@
+//! Bench: cluster scale-out on the mixed Poisson-arrival serving
+//! workload (ISSUE 9 acceptance).
+//!
+//! Every cell serves the identical request stream from clones of the same
+//! 3-bit rANS container, through the [`Router`] front end, at a matched
+//! total decode-thread budget of 2 cores — so the cells compare *where*
+//! the parallelism goes, not how much hardware it gets:
+//!
+//! - `replicas-1`          — one continuous streaming replica, 2 decode
+//!                           threads (the single-engine baseline)
+//! - `replicas-2`          — two continuous replicas × 1 thread behind
+//!                           least-outstanding placement: true engine-level
+//!                           concurrency, scheduler and all
+//! - `replicas-1-shards-2` — one continuous replica whose decode runs
+//!                           tensor-parallel over 2 shard workers
+//! - `pipeline-2`          — one lockstep engine whose layer walk runs as
+//!                           2 pipeline stages ([`PipelinedBackend`])
+//!
+//! Asserted acceptance: every cell's per-request outputs are
+//! **bit-identical** to the single-replica cell (scale-out never changes
+//! semantics), and in full mode `replicas-2` reaches **≥ 1.5× aggregate
+//! tokens/s** over `replicas-1` — replica concurrency beats decode-thread
+//! concurrency on this scheduler-bound workload. p95 time-to-first-token
+//! comes from the per-request timelines the router relays back.
+//!
+//! Results append to `runs/bench/cluster.json` (`{"runs": [...]}`) with
+//! trajectory keys `cluster_agg_toks`, `cluster_p95_ttft_ms` and
+//! `cluster_scaleup`. `GLVQ_BENCH_SMOKE=1` runs a miniature workload for
+//! CI: same parity checks, scaleup reported but not asserted.
+//!
+//! Run: `cargo bench --bench bench_cluster`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::cluster::{
+    PipeOpts, PipelineExec, PipelinePlan, PipelineWeights, PipelinedBackend, Router, RouterOpts,
+};
+use glvq::coordinator::decode_stream::StreamingMatmul;
+use glvq::coordinator::server::{self, CachedNativeBackend, Request, Response, ServerOpts};
+use glvq::eval::native_fwd::{self, CalibCapture};
+use glvq::eval::plan::ModelPlan;
+use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::obs::Mark;
+use glvq::quant::format::QuantizedModel;
+use glvq::shard::ShardOpts;
+use glvq::tensor::TensorStore;
+use glvq::bench_support::append_trajectory;
+use glvq::util::json::Json;
+use glvq::util::rng::Rng;
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "clusterbench",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 160,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+struct Workload {
+    requests: Vec<Request>,
+    /// inter-arrival gap before each request, microseconds
+    gaps_us: Vec<u64>,
+    total_new: usize,
+}
+
+/// Interleaved long/short request stream with seeded Poisson arrivals —
+/// the `bench_serving` workload shape, reused so cluster numbers sit next
+/// to the single-engine serving numbers.
+fn build_workload(groups: usize, shorts: usize, long_gen: usize, short_gen: usize) -> Workload {
+    let long_prompt = long_gen / 2;
+    let mut rng = Rng::new(4242);
+    let mut requests = Vec::new();
+    let mut gaps_us = Vec::new();
+    let mut total_new = 0usize;
+    let mean_us = if smoke() { 0.0 } else { 300.0 };
+    for g in 0..groups {
+        let mut push = |req: Request, rng: &mut Rng| {
+            let u = (rng.below(1_000_000) as f64 + 1.0) / 1_000_001.0;
+            gaps_us.push((-u.ln() * mean_us) as u64);
+            requests.push(req);
+        };
+        let lp: Vec<u8> = (0..long_prompt).map(|i| ((g * 37 + i * 11) % 251) as u8).collect();
+        push(Request::Generate { prompt: lp, max_new: long_gen }, &mut rng);
+        total_new += long_gen;
+        for s in 0..shorts {
+            let sp: Vec<u8> = (0..6).map(|i| ((g * 53 + s * 17 + i * 7) % 251) as u8).collect();
+            push(Request::Generate { prompt: sp, max_new: short_gen }, &mut rng);
+            total_new += short_gen;
+        }
+    }
+    Workload { requests, gaps_us, total_new }
+}
+
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+/// Quantize the bench model once; every replica in every cell serves from
+/// clones of the same container, so routing is transparent by
+/// construction.
+fn quantized_parts(cfg: &ModelConfig) -> (TensorStore, QuantizedModel) {
+    let store = init_params(cfg, 0);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+    let mut cap = CalibCapture::new(16, 0);
+    native_fwd::forward(cfg, &store, &toks, 2, Some(&mut cap)).expect("calibration forward");
+    let calib = cap.into_calib_set();
+    let opts = PipelineOpts {
+        target_bits: 3.0,
+        bit_allocation: false,
+        entropy: true,
+        ..PipelineOpts::default()
+    };
+    let (qm, _) =
+        quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).expect("quantize");
+    (store, qm)
+}
+
+struct CellResult {
+    tok_s: f64,
+    wall_ms: f64,
+    ttft_p95_ms: f64,
+    outputs: Vec<Vec<u8>>,
+    routed: Vec<usize>,
+    report: String,
+}
+
+/// Submit the workload with its arrival gaps through the router, wait for
+/// every response, and fold in the relayed per-request timelines.
+fn run_cell(router: Router, wl: &Workload) -> CellResult {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(wl.requests.len());
+    for (req, &gap) in wl.requests.iter().zip(&wl.gaps_us) {
+        if gap > 0 {
+            std::thread::sleep(Duration::from_micros(gap));
+        }
+        rxs.push(router.submit_timed(req.clone()));
+    }
+    let mut outputs = Vec::with_capacity(rxs.len());
+    let mut ttfts: Vec<f64> = Vec::new();
+    for (rx, trx) in rxs {
+        match rx.recv().expect("cluster dropped reply") {
+            Response::Generated { text } => outputs.push(text),
+            other => panic!("unexpected response {other:?}"),
+        }
+        // the relay forwards the timeline before the response, so it is
+        // already here; continuous replicas mark FirstToken, the lockstep
+        // pipeline cell only Finish — use that as its TTFT stand-in
+        if let Ok(t) = trx.try_recv() {
+            if let Some(ns) = t.first(Mark::FirstToken).or_else(|| t.first(Mark::Finish)) {
+                ttfts.push(ns as f64 / 1e6);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = router.shutdown();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).expect("finite ttft"));
+    let p95 = if ttfts.is_empty() { 0.0 } else { ttfts[(ttfts.len() - 1) * 95 / 100] };
+    CellResult {
+        tok_s: wl.total_new as f64 / wall.max(1e-9),
+        wall_ms: wall * 1e3,
+        ttft_p95_ms: p95,
+        outputs,
+        routed: metrics.routed.clone(),
+        report: metrics.report(),
+    }
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let (groups, shorts, long_gen, short_gen) =
+        if smoke() { (2, 7, 24, 4) } else { (4, 15, 96, 8) };
+    let wl = build_workload(groups, shorts, long_gen, short_gen);
+    let (store, qm) = quantized_parts(&cfg);
+    println!(
+        "# cluster: d={} L={} seq={} — {} requests, {} tokens, {}",
+        cfg.d_model,
+        cfg.n_layer,
+        cfg.seq_len,
+        wl.requests.len(),
+        wl.total_new,
+        if smoke() { "smoke" } else { "full" },
+    );
+
+    let kv = KvCacheOpts { page_rows: 16, ..Default::default() };
+    let copts = glvq::serving::ContinuousOpts {
+        max_batch: 16,
+        prefill_chunk: 16,
+        ..Default::default()
+    };
+    // one continuous streaming replica with `threads` decode threads
+    let streaming_replica = |threads: usize| {
+        let store = store.clone();
+        let qm = qm.clone();
+        server::start_continuous(
+            move || -> anyhow::Result<CachedNativeBackend> {
+                let engine = StreamingMatmul::new(16, threads);
+                Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+            },
+            copts,
+        )
+    };
+    // one continuous replica whose decode is tensor-parallel (2 shards)
+    let sharded_replica = || {
+        let store = store.clone();
+        let qm = qm.clone();
+        let sopts = ShardOpts { shards: 2, panel_rows: 16, threads_per_shard: 1 };
+        server::start_continuous(
+            move || -> anyhow::Result<CachedNativeBackend> {
+                Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv))
+            },
+            copts,
+        )
+    };
+    // one lockstep engine running the layer walk as 2 pipeline stages
+    let qm_arc = Arc::new(qm.clone());
+    let pipelined_replica = || {
+        let store = store.clone();
+        let qm = Arc::clone(&qm_arc);
+        server::start(
+            move || {
+                let pplan = PipelinePlan::build(&ModelPlan::of(&cfg), &qm, 2);
+                let sopts = ShardOpts { shards: 1, panel_rows: 16, threads_per_shard: 1 };
+                let weights = PipelineWeights::Sharded { qm, opts: sopts };
+                let exec = PipelineExec::new(cfg, store, pplan, weights, PipeOpts::default());
+                Ok(Box::new(PipelinedBackend { exec }) as Box<dyn server::LmBackend>)
+            },
+            ServerOpts { max_batch: 16 },
+        )
+    };
+
+    let cells: Vec<(&str, CellResult)> = vec![
+        (
+            "replicas-1",
+            run_cell(Router::new(vec![streaming_replica(2)], RouterOpts::default()), &wl),
+        ),
+        (
+            "replicas-2",
+            run_cell(
+                Router::new(
+                    vec![streaming_replica(1), streaming_replica(1)],
+                    RouterOpts::default(),
+                ),
+                &wl,
+            ),
+        ),
+        (
+            "replicas-1-shards-2",
+            run_cell(Router::new(vec![sharded_replica()], RouterOpts::default()), &wl),
+        ),
+        (
+            "pipeline-2",
+            run_cell(Router::new(vec![pipelined_replica()], RouterOpts::default()), &wl),
+        ),
+    ];
+
+    let mut entries: Vec<Json> = Vec::new();
+    for (mode, cell) in &cells {
+        println!(
+            "{mode:<19} {:>8.1} tok/s  wall {:>8.1} ms  ttft p95 {:>7.2} ms  routed {:?}",
+            cell.tok_s, cell.wall_ms, cell.ttft_p95_ms, cell.routed,
+        );
+        println!("    {}", cell.report.replace('\n', "\n    "));
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("requests", Json::num(wl.requests.len() as f64)),
+            ("tokens", Json::num(wl.total_new as f64)),
+            ("tok_s", Json::num(cell.tok_s)),
+            ("wall_ms", Json::num(cell.wall_ms)),
+            ("ttft_p95_ms", Json::num(cell.ttft_p95_ms)),
+            ("replicas", Json::num(cell.routed.len() as f64)),
+        ]));
+    }
+
+    // ---- acceptance ----
+    let by = |m: &str| &cells.iter().find(|c| c.0 == m).expect("cell").1;
+    let reference = &by("replicas-1").outputs;
+    for (mode, cell) in &cells {
+        assert_eq!(&cell.outputs, reference, "{mode}: outputs diverged");
+    }
+    let scaleup = by("replicas-2").tok_s / by("replicas-1").tok_s.max(1e-9);
+    println!("  2 replicas vs 1 at matched cores: {scaleup:.2}x aggregate tok/s");
+    if smoke() {
+        println!("  (smoke mode: scaleup not asserted)");
+    } else {
+        assert!(scaleup >= 1.5, "2 replicas only {scaleup:.2}x over 1 (need >= 1.5x)");
+    }
+
+    let r2 = by("replicas-2");
+    append_trajectory(
+        "cluster",
+        vec![
+            ("smoke", Json::num(if smoke() { 1.0 } else { 0.0 })),
+            ("cluster_agg_toks", Json::num(r2.tok_s)),
+            ("cluster_p95_ttft_ms", Json::num(r2.ttft_p95_ms)),
+            ("cluster_scaleup", Json::num(scaleup)),
+            ("measurements", Json::Arr(entries)),
+        ],
+    );
+}

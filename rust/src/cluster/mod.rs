@@ -1,0 +1,30 @@
+//! Cluster scale-out: pipeline-parallel stage execution and replicated
+//! serving over the quantized container.
+//!
+//! Two independent axes, composable with each other and with tensor-
+//! parallel sharding ([`crate::shard`]):
+//!
+//! - [`pipeline`] cuts the [`crate::eval::plan::ModelPlan`] layer walk
+//!   into contiguous stages balanced by stored payload bytes and runs
+//!   them on persistent workers connected by bounded channels, streaming
+//!   micro-batched activations through — outputs stay bit-identical to
+//!   the single-engine walk at every stage count, because the stages
+//!   execute the *same* layer ops in the same order on the same values,
+//!   only on different threads. Each stage may own its own
+//!   [`crate::shard::ShardedMatmul`], giving a stages × shards grid.
+//! - [`router`] fronts R complete serving engines (lockstep or
+//!   continuous) with a placement policy, per-replica admission and
+//!   draining, and folds per-replica metrics into one labeled cluster
+//!   snapshot.
+//!
+//! The two compose by construction: a [`PipelinedBackend`] is just an
+//! [`crate::coordinator::server::LmBackend`], so a pipelined engine can
+//! be one replica behind a [`Router`].
+
+pub mod pipeline;
+pub mod router;
+
+pub use pipeline::{
+    PipeOpts, PipeStageStat, PipelineExec, PipelinePlan, PipelineWeights, PipelinedBackend,
+};
+pub use router::{ClusterMetrics, RoutePolicy, Router, RouterOpts};

@@ -1,0 +1,589 @@
+//! Pipeline-parallel stage execution over the layer plan.
+//!
+//! [`PipelinePlan`] cuts a [`ModelPlan`]'s layer walk into `P` contiguous
+//! stages, balanced by the **true stored payload bytes** of each layer's
+//! quantized linears (the same [`balanced_contiguous`] core the shard
+//! planner uses on group cells) — a layer is never split across stages.
+//! [`PipelineExec`] runs one persistent worker thread per stage,
+//! connected by bounded channels: a forward pass slices its (B × T)
+//! residual stream into whole-sequence micro-batches, streams them
+//! through the stage chain, and reassembles logits in submission order.
+//!
+//! **Bit-identity.** Stage `s` runs [`walk_layers`]`(lo_s..hi_s)` and the
+//! last stage adds [`finish_walk`] — by the plan module's contract this
+//! performs exactly the operations of a single-engine
+//! [`walk`](crate::eval::plan::walk), in exactly the same order, for any
+//! cut. Micro-batching along the batch dimension is exact too: every
+//! per-row op of the dense forward treats sequences independently, so
+//! logits are bit-identical to the unpipelined forward at every stage
+//! count × micro-batch size (`tests/cluster_parity.rs`).
+//!
+//! **Composition with tensor parallelism.** Each stage owns its own
+//! [`ShardedMatmul`] over the shared container
+//! ([`PipelineWeights::Sharded`]), so `--pipeline P --shards N` runs a
+//! P×N worker grid; with `shards = 1` the stage degenerates to the
+//! single streamed engine, bit-identically (shard parity).
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::decode_stream::DecodeStats;
+use crate::coordinator::server::{gather_last_rows, pad_prefixes, LmBackend};
+use crate::eval::native_fwd::{attend_dense, embed_full, DenseLinear, LinearOp};
+use crate::eval::plan::{finish_walk, walk_layers, ModelPlan};
+use crate::linalg::Mat;
+use crate::model::ModelConfig;
+use crate::quant::format::QuantizedModel;
+use crate::shard::{balanced_contiguous, ShardOpts, ShardStat, ShardedLinear, ShardedMatmul};
+use crate::tensor::TensorStore;
+
+/// A contiguous cut of the layer walk into pipeline stages: stage `s`
+/// executes layers `stages[s].0 .. stages[s].1`; the last stage also runs
+/// the final norm + output head.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelinePlan {
+    /// half-open layer ranges, contiguous and jointly complete; stages
+    /// may be empty when layers are fewer than stages
+    pub stages: Vec<(usize, usize)>,
+}
+
+impl PipelinePlan {
+    /// Cut `plan`'s layers into `stages` runs balanced by each layer's
+    /// stored payload bytes in `qm` (the sum over its six quantizable
+    /// linears; tensors absent from the container weigh nothing). A
+    /// container covering none of the plan's linears falls back to
+    /// layer-count balancing, so a dense serve still pipelines sensibly.
+    pub fn build(plan: &ModelPlan, qm: &QuantizedModel, stages: usize) -> PipelinePlan {
+        let mut weights = Vec::with_capacity(plan.layers.len());
+        for l in &plan.layers {
+            let names = [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2];
+            let bytes: usize =
+                names.iter().filter_map(|n| qm.get(n.as_str())).map(|t| t.payload_bytes()).sum();
+            weights.push(bytes);
+        }
+        if weights.iter().all(|&w| w == 0) {
+            return PipelinePlan::dense(plan.layers.len(), stages);
+        }
+        PipelinePlan { stages: balanced_contiguous(&weights, stages.max(1)) }
+    }
+
+    /// Layer-count-balanced cut (every layer weighs 1) — the dense-serve
+    /// plan, and the fallback when no layer has container payload.
+    pub fn dense(n_layer: usize, stages: usize) -> PipelinePlan {
+        PipelinePlan { stages: balanced_contiguous(&vec![1; n_layer], stages.max(1)) }
+    }
+
+    /// Number of stages (including empty ones).
+    pub fn stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+/// How pipeline stages apply their quantizable linears.
+#[derive(Clone)]
+pub enum PipelineWeights {
+    /// dense store weights (the seed forward)
+    Dense,
+    /// each stage owns a [`ShardedMatmul`] over the shared container —
+    /// `opts.shards = 1` is the single streamed engine, bit-identically
+    Sharded { qm: Arc<QuantizedModel>, opts: ShardOpts },
+}
+
+/// Pipeline execution options.
+#[derive(Clone, Copy, Debug)]
+pub struct PipeOpts {
+    /// sequences per micro-batch handed between stages (whole sequences
+    /// only — the batch dimension is the exact split axis)
+    pub micro_batch: usize,
+    /// bounded capacity of each inter-stage channel (how many in-flight
+    /// micro-batches a stage may run ahead)
+    pub channel_depth: usize,
+}
+
+impl Default for PipeOpts {
+    fn default() -> Self {
+        PipeOpts { micro_batch: 1, channel_depth: 2 }
+    }
+}
+
+/// Per-stage cumulative counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipeStageStat {
+    /// layers this stage executes
+    pub layers: usize,
+    /// micro-batches processed
+    pub micro_batches: usize,
+    /// residual-stream rows carried through the stage
+    pub rows: usize,
+    /// wall time spent executing (not waiting), nanoseconds
+    pub busy_ns: u64,
+    /// decode traffic of this stage's quantized linears (zero for dense)
+    pub decode: DecodeStats,
+}
+
+/// One activation hand-off travelling the stage chain. `Fail` carries the
+/// first error hit for a micro-batch; downstream stages forward it
+/// untouched, so the coordinator always receives one message per chunk.
+enum StageMsg {
+    Chunk { idx: usize, h: Mat },
+    Fail { idx: usize, message: String },
+}
+
+/// Where a stage sends its output: the next stage's bounded channel, or
+/// the coordinator's unbounded collection channel (unbounded so the last
+/// stage never blocks — the pipeline always drains).
+enum Next {
+    Stage(mpsc::SyncSender<StageMsg>),
+    Out(mpsc::Sender<StageMsg>),
+}
+
+impl Next {
+    /// Deliver downstream; false when the receiver is gone (shutdown).
+    fn send(&self, msg: StageMsg) -> bool {
+        match self {
+            Next::Stage(tx) => tx.send(msg).is_ok(),
+            Next::Out(tx) => tx.send(msg).is_ok(),
+        }
+    }
+}
+
+/// Execute one stage's slice of the plan over a micro-batch: layers
+/// `lo..hi`, plus the final norm + output head when this is the last
+/// stage. Returns the matrix to hand downstream (residual stream or
+/// logits).
+fn run_stage(
+    cfg: &ModelConfig,
+    plan: &ModelPlan,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    mut h: Mat,
+    lo: usize,
+    hi: usize,
+    is_last: bool,
+) -> Result<Mat> {
+    let batch = h.rows / cfg.seq_len;
+    walk_layers(
+        plan,
+        store,
+        lin,
+        &mut h,
+        None,
+        |_, q, k, v| Ok(attend_dense(cfg, batch, q, k, v)),
+        lo,
+        hi,
+    )?;
+    if is_last {
+        finish_walk(plan, store, lin, &h, None)
+    } else {
+        Ok(h)
+    }
+}
+
+/// Everything one stage worker owns, bundled for the thread spawn.
+struct StageCtx {
+    stage: usize,
+    range: (usize, usize),
+    is_last: bool,
+    cfg: ModelConfig,
+    store: Arc<TensorStore>,
+    weights: PipelineWeights,
+    next: Next,
+    stats: Arc<Mutex<Vec<PipeStageStat>>>,
+    shard_stats: Arc<Mutex<Vec<Vec<ShardStat>>>>,
+}
+
+fn sharded_lin<'a>(exec: &'a ShardedMatmul, store: &'a TensorStore) -> ShardedLinear<'a> {
+    ShardedLinear { exec, store, stats: DecodeStats::default() }
+}
+
+/// The persistent stage worker: owns this stage's linear operator (and
+/// shard executor, when sharded), answers micro-batches until its input
+/// channel closes, then closes its own output — shutdown cascades down
+/// the chain.
+fn stage_worker(ctx: StageCtx, rx: mpsc::Receiver<StageMsg>) {
+    let StageCtx { stage, range, is_last, cfg, store, weights, next, stats, shard_stats } = ctx;
+    let (lo, hi) = range;
+    let plan = ModelPlan::of(&cfg);
+    let exec = match &weights {
+        PipelineWeights::Dense => None,
+        PipelineWeights::Sharded { qm, opts } => Some(ShardedMatmul::new(Arc::clone(qm), *opts)),
+    };
+    while let Ok(msg) = rx.recv() {
+        let out = match msg {
+            StageMsg::Fail { idx, message } => StageMsg::Fail { idx, message },
+            StageMsg::Chunk { idx, h } => {
+                let _sp = crate::span!("pipe_stage");
+                let t0 = Instant::now();
+                let rows = h.rows;
+                let mut decode = DecodeStats::default();
+                let res = match &exec {
+                    Some(e) => {
+                        let mut lin = sharded_lin(e, &store);
+                        let r = run_stage(&cfg, &plan, &store, &mut lin, h, lo, hi, is_last);
+                        decode = lin.stats;
+                        r
+                    }
+                    None => {
+                        let mut lin = DenseLinear { store: &store };
+                        run_stage(&cfg, &plan, &store, &mut lin, h, lo, hi, is_last)
+                    }
+                };
+                let busy_ns = t0.elapsed().as_nanos() as u64;
+                {
+                    let mut all = stats.lock().expect("pipe stats poisoned");
+                    let s = &mut all[stage];
+                    s.layers = hi - lo;
+                    s.micro_batches += 1;
+                    s.rows += rows;
+                    s.busy_ns += busy_ns;
+                    s.decode.merge(&decode);
+                }
+                if let Some(e) = &exec {
+                    let mut per = shard_stats.lock().expect("pipe shard stats poisoned");
+                    per[stage] = e.shard_stats();
+                }
+                match res {
+                    Ok(m) => StageMsg::Chunk { idx, h: m },
+                    Err(err) => StageMsg::Fail { idx, message: format!("stage {stage}: {err:#}") },
+                }
+            }
+        };
+        if !next.send(out) {
+            break; // downstream gone: the executor is shutting down
+        }
+    }
+}
+
+/// Pipeline-parallel executor: P persistent stage workers over one model,
+/// each carrying its contiguous slice of the layer plan (see module
+/// docs). [`PipelineExec::forward`] is `&self`; one executor serves any
+/// number of forwards sequentially. Shutdown is automatic on drop.
+pub struct PipelineExec {
+    cfg: ModelConfig,
+    store: Arc<TensorStore>,
+    input: Option<mpsc::SyncSender<StageMsg>>,
+    out_rx: mpsc::Receiver<StageMsg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<Vec<PipeStageStat>>>,
+    shard_stats: Arc<Mutex<Vec<Vec<ShardStat>>>>,
+    micro_batch: usize,
+    sharded: bool,
+}
+
+impl PipelineExec {
+    /// Start the stage workers. Each worker builds its own plan-walk
+    /// state — and, when `weights` is sharded, its own [`ShardedMatmul`]
+    /// with private decode tables — inside its thread.
+    pub fn new(
+        cfg: ModelConfig,
+        store: TensorStore,
+        pplan: PipelinePlan,
+        weights: PipelineWeights,
+        opts: PipeOpts,
+    ) -> PipelineExec {
+        let n = pplan.stages.len();
+        assert!(n > 0, "pipeline plan has no stages");
+        let depth = opts.channel_depth.max(1);
+        let store = Arc::new(store);
+        let sharded = matches!(weights, PipelineWeights::Sharded { .. });
+        let stats = Arc::new(Mutex::new(vec![PipeStageStat::default(); n]));
+        let shard_stats = Arc::new(Mutex::new(vec![Vec::new(); n]));
+        let (in_tx, first_rx) = mpsc::sync_channel::<StageMsg>(depth);
+        let (out_tx, out_rx) = mpsc::channel::<StageMsg>();
+        let mut workers = Vec::with_capacity(n);
+        let mut stage_rx = Some(first_rx);
+        for (s, &range) in pplan.stages.iter().enumerate() {
+            let rx = stage_rx.take().expect("stage receiver present");
+            let is_last = s + 1 == n;
+            let next = if is_last {
+                Next::Out(out_tx.clone())
+            } else {
+                let (tx, nrx) = mpsc::sync_channel::<StageMsg>(depth);
+                stage_rx = Some(nrx);
+                Next::Stage(tx)
+            };
+            let ctx = StageCtx {
+                stage: s,
+                range,
+                is_last,
+                cfg,
+                store: Arc::clone(&store),
+                weights: weights.clone(),
+                next,
+                stats: Arc::clone(&stats),
+                shard_stats: Arc::clone(&shard_stats),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("glvq-pipe-{s}"))
+                    .spawn(move || stage_worker(ctx, rx))
+                    .expect("spawn pipeline stage worker"),
+            );
+        }
+        drop(out_tx);
+        PipelineExec {
+            cfg,
+            store,
+            input: Some(in_tx),
+            out_rx,
+            workers,
+            stats,
+            shard_stats,
+            micro_batch: opts.micro_batch.max(1),
+            sharded,
+        }
+    }
+
+    /// The model configuration the stages execute.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Number of pipeline stages.
+    pub fn stages(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Per-stage cumulative counters (cheap copy).
+    pub fn stage_stats(&self) -> Vec<PipeStageStat> {
+        self.stats.lock().expect("pipe stats poisoned").clone()
+    }
+
+    /// Per-stage shard counters when stages run tensor-parallel (None
+    /// for dense pipelines).
+    pub fn shard_stats(&self) -> Option<Vec<Vec<ShardStat>>> {
+        if !self.sharded {
+            return None;
+        }
+        Some(self.shard_stats.lock().expect("pipe shard stats poisoned").clone())
+    }
+
+    /// Total decode traffic across all stages (None for dense pipelines).
+    pub fn decode_stats(&self) -> Option<DecodeStats> {
+        if !self.sharded {
+            return None;
+        }
+        let mut total = DecodeStats::default();
+        for s in self.stage_stats() {
+            total.merge(&s.decode);
+        }
+        Some(total)
+    }
+
+    /// Full (B × T) forward through the stage chain: embed, stream
+    /// whole-sequence micro-batches through the pipeline, reassemble
+    /// logits (B·T × V) in submission order. Bit-identical to the
+    /// single-engine walk at every stage count and micro-batch size.
+    pub fn forward(&self, tokens: &[i32], batch: usize) -> Result<Mat> {
+        let t = self.cfg.seq_len;
+        ensure!(batch > 0, "empty pipeline batch");
+        ensure!(tokens.len() == batch * t, "tokens must be batch × seq_len");
+        let h = embed_full(&self.cfg, &self.store, tokens, batch)?;
+        let d = h.cols;
+        let mb = self.micro_batch;
+        let n_chunks = batch.div_ceil(mb);
+        let input = self.input.as_ref().expect("pipeline input open");
+        {
+            // sending everything before receiving never deadlocks: the
+            // out channel is unbounded, so the chain always drains
+            let _sp = crate::span!("pipe_handoff");
+            for idx in 0..n_chunks {
+                let (b0, b1) = (idx * mb, ((idx + 1) * mb).min(batch));
+                let (r0, r1) = (b0 * t, b1 * t);
+                let chunk = Mat::from_vec(r1 - r0, d, h.data[r0 * d..r1 * d].to_vec());
+                input
+                    .send(StageMsg::Chunk { idx, h: chunk })
+                    .map_err(|_| anyhow::anyhow!("pipeline stage worker terminated"))?;
+            }
+        }
+        let mut parts: Vec<Option<Mat>> = (0..n_chunks).map(|_| None).collect();
+        for _ in 0..n_chunks {
+            match self.out_rx.recv().context("pipeline output channel closed early")? {
+                StageMsg::Chunk { idx, h } => parts[idx] = Some(h),
+                StageMsg::Fail { idx, message } => {
+                    anyhow::bail!("pipeline micro-batch {idx} failed: {message}")
+                }
+            }
+        }
+        let mut data = Vec::with_capacity(batch * t * self.cfg.vocab);
+        let mut rows = 0usize;
+        let mut cols = 0usize;
+        for p in parts {
+            let m = p.expect("one output per micro-batch");
+            rows += m.rows;
+            cols = m.cols;
+            data.extend_from_slice(&m.data);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+}
+
+impl Drop for PipelineExec {
+    fn drop(&mut self) {
+        // closing the input cascades: each stage's recv errors, it drops
+        // its own sender, and the next stage follows
+        self.input.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// [`LmBackend`] over a pipeline executor — the lockstep serving backend
+/// for `serve --pipeline P`, slotting into [`ServerHandle`] exactly like
+/// the single-engine backends (and bit-identical to them).
+///
+/// [`ServerHandle`]: crate::coordinator::server::ServerHandle
+pub struct PipelinedBackend {
+    pub exec: PipelineExec,
+}
+
+impl LmBackend for PipelinedBackend {
+    fn logits_last(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.logits_last_batch(&[tokens])?.remove(0))
+    }
+
+    fn logits_last_batch(&mut self, prefixes: &[&[i32]]) -> Result<Vec<Vec<f32>>> {
+        let t = self.exec.config().seq_len;
+        let (flat, last) = pad_prefixes(t, prefixes);
+        let logits = self.exec.forward(&flat, prefixes.len())?;
+        Ok(gather_last_rows(&logits, t, &last))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.exec.config().seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.exec.config().vocab
+    }
+
+    fn decode_stats(&self) -> Option<DecodeStats> {
+        self.exec.decode_stats()
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        self.exec.shard_stats().map(|per| per.into_iter().flatten().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::native_fwd;
+    use crate::model::init_params;
+    use crate::quant::format::QuantizedTensor;
+    use crate::quant::pack::{code_range, PackedCodes};
+    use crate::quant::traits::{QuantizedGroup, SideInfo};
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch_train: 2,
+            batch_eval: 2,
+        }
+    }
+
+    fn toks(cfg: &ModelConfig, batch: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * cfg.seq_len).map(|_| rng.below(256) as i32).collect()
+    }
+
+    fn group_of(n_codes: usize) -> QuantizedGroup {
+        let (lo, hi) = code_range(2);
+        let codes: Vec<i32> = (0..n_codes as i32).map(|i| (i % (hi - lo + 1)) + lo).collect();
+        QuantizedGroup {
+            method: "rtn",
+            bits: 2,
+            rows: 8,
+            cols: n_codes / 8,
+            codes: PackedCodes::pack(&codes, 2).into(),
+            side: SideInfo::Uniform { scale: 0.1, zero: 0.0 },
+        }
+    }
+
+    fn qt(name: &str, n_groups: usize) -> QuantizedTensor {
+        let groups = (0..n_groups).map(|gi| (0usize, gi * 8, group_of(64))).collect();
+        QuantizedTensor { name: name.into(), rows: 8, cols: n_groups * 8, groups }
+    }
+
+    #[test]
+    fn dense_plan_balances_layer_counts() {
+        assert_eq!(PipelinePlan::dense(4, 2).stages, vec![(0, 2), (2, 4)]);
+        let p = PipelinePlan::dense(2, 4);
+        assert_eq!(p.stages(), 4);
+        assert_eq!(p.stages.first().unwrap().0, 0);
+        assert_eq!(p.stages.last().unwrap().1, 2);
+        for pair in p.stages.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0, "stages not contiguous");
+        }
+        assert_eq!(p.stages.iter().map(|&(a, b)| b - a).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn payload_balanced_plan_isolates_heavy_layers() {
+        let plan = ModelPlan::of(&tiny());
+        // layer 0 carries 3× the payload of layer 1 → a stage of its own
+        let qm = QuantizedModel { tensors: vec![qt("00.attn.wq", 3), qt("01.attn.wq", 1)] };
+        let p = PipelinePlan::build(&plan, &qm, 2);
+        assert_eq!(p.stages, vec![(0, 1), (1, 2)]);
+        // an empty container falls back to layer-count balancing
+        let empty = QuantizedModel { tensors: vec![] };
+        let fallback = PipelinePlan::build(&plan, &empty, 2);
+        assert_eq!(fallback.stages, PipelinePlan::dense(2, 2).stages);
+    }
+
+    #[test]
+    fn dense_pipeline_is_bit_identical_to_reference_forward() {
+        let cfg = tiny();
+        let store = init_params(&cfg, 3);
+        let x = toks(&cfg, 3, 11);
+        let want = native_fwd::forward(&cfg, &store, &x, 3, None).unwrap();
+        for stages in [1usize, 2, 4] {
+            for micro_batch in [1usize, 2] {
+                let exec = PipelineExec::new(
+                    cfg,
+                    store.clone(),
+                    PipelinePlan::dense(cfg.n_layer, stages),
+                    PipelineWeights::Dense,
+                    PipeOpts { micro_batch, channel_depth: 2 },
+                );
+                let got = exec.forward(&x, 3).unwrap();
+                assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+                assert_eq!(got.data, want.data, "stages={stages} mb={micro_batch}");
+                let st = exec.stage_stats();
+                assert_eq!(st.len(), stages);
+                // every stage saw every micro-batch: ceil(3 / mb) chunks
+                assert!(st.iter().all(|s| s.micro_batches == 3usize.div_ceil(micro_batch)));
+                assert!(exec.shard_stats().is_none() && exec.decode_stats().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn stage_failure_propagates_to_the_caller() {
+        let cfg = tiny();
+        let mut store = init_params(&cfg, 4);
+        store.entries.remove("final.gain"); // break only the last stage
+        let exec = PipelineExec::new(
+            cfg,
+            store,
+            PipelinePlan::dense(cfg.n_layer, 2),
+            PipelineWeights::Dense,
+            PipeOpts::default(),
+        );
+        let x = toks(&cfg, 2, 5);
+        let err = exec.forward(&x, 2).unwrap_err().to_string();
+        assert!(err.contains("failed"), "{err}");
+        assert!(err.contains("final.gain"), "{err}");
+    }
+}

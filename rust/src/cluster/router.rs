@@ -1,0 +1,618 @@
+//! Replicated-engine front end: a [`Router`] that owns R independent
+//! serving replicas (each a complete lockstep or continuous loop behind a
+//! [`ServerHandle`]) and places every request on one of them.
+//!
+//! The router adds *scale-out*, never *semantics*: replicas are full
+//! engines serving the same container, so any placement yields the same
+//! response the request would get from a single engine — policy only
+//! shifts latency and throughput. That makes the front end safe to grow
+//! and shrink: [`Router::drain`] fences a replica off from new placements
+//! while its in-flight requests finish (each replica's relay thread keeps
+//! forwarding replies after the intake closes, and [`Router::shutdown`]
+//! joins the relays before stopping the engines), so an admitted request
+//! is never dropped.
+//!
+//! Admission is two-level. The router's own per-replica outstanding cap
+//! ([`RouterOpts::max_outstanding`]) refuses before placement, rendering
+//! the same structured [`Backpressure`] reason the engines use (prefixed
+//! `router:` so callers can tell the levels apart); each replica's own
+//! queue/budget admission still applies after placement. At shutdown the
+//! per-replica [`ServerMetrics`] fold into one [`ClusterMetrics`] whose
+//! snapshot exports `{replica="N"}`-labeled series next to the cluster
+//! aggregates.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::server::{Request, Response, ServerHandle};
+use crate::obs::{Mark, MetricsSnapshot, Registry, RequestTimeline};
+use crate::serving::queue::token_need;
+use crate::serving::Backpressure;
+
+/// Placement policy for new requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// place on the eligible replica with the fewest outstanding tokens,
+    /// ties toward the lowest index — the default; long requests stop
+    /// stacking up behind each other
+    #[default]
+    LeastOutstanding,
+    /// strict rotation over the eligible replicas — a deterministic
+    /// spread, for tests and uniform-cost workloads
+    RoundRobin,
+}
+
+/// Router construction options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterOpts {
+    pub policy: RoutePolicy,
+    /// per-replica cap on requests in flight; 0 = unlimited. When every
+    /// replica is at its cap (or draining), requests are refused up front
+    /// with a `router:`-prefixed [`Backpressure::QueueFull`] reason.
+    pub max_outstanding: usize,
+}
+
+/// Shared per-replica routing state: bumped by the router at placement,
+/// released by the replica's relay thread as replies come back.
+#[derive(Default)]
+struct ReplicaState {
+    /// requests placed but not yet answered
+    outstanding_reqs: AtomicUsize,
+    /// [`token_need`] of everything outstanding — the load signal behind
+    /// [`RoutePolicy::LeastOutstanding`]
+    outstanding_tokens: AtomicUsize,
+    /// fenced off from new placements ([`Router::drain`])
+    draining: AtomicBool,
+    /// lifetime requests placed on this replica
+    routed: AtomicUsize,
+}
+
+/// One placed request a relay thread is waiting on.
+struct Pending {
+    rx: mpsc::Receiver<Response>,
+    reply: mpsc::Sender<Response>,
+    /// (replica-side timeline receiver, caller-side sender) when the
+    /// request came through [`Router::submit_timed`]
+    timeline: Option<(mpsc::Receiver<RequestTimeline>, mpsc::Sender<RequestTimeline>)>,
+    tokens: usize,
+}
+
+/// Forward one finished reply and release its routing accounting. The
+/// counters drop *before* the reply is sent, so a caller holding the
+/// response never observes stale outstanding counts.
+fn finish(p: Pending, response: Response, state: &ReplicaState) {
+    state.outstanding_reqs.fetch_sub(1, Ordering::Relaxed);
+    state.outstanding_tokens.fetch_sub(p.tokens, Ordering::Relaxed);
+    if let Some((trx, ttx)) = p.timeline {
+        // the engine sends the timeline just before the response, so it
+        // is already queued whenever the response has arrived
+        if let Ok(t) = trx.try_recv() {
+            let _ = ttx.send(t);
+        }
+    }
+    let _ = p.reply.send(response);
+}
+
+/// Per-replica relay: forwards replica replies back to their callers.
+/// Keeps draining in-flight requests after the router closes the intake,
+/// so every admitted request is answered before [`Router::shutdown`]
+/// joins the thread — the drain-never-drops guarantee.
+fn relay_loop(intake: mpsc::Receiver<Pending>, state: Arc<ReplicaState>) {
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut open = true;
+    loop {
+        if pending.is_empty() {
+            if !open {
+                break;
+            }
+            // idle: block until a request is placed or the router closes
+            match intake.recv() {
+                Ok(p) => pending.push(p),
+                Err(_) => break,
+            }
+        }
+        loop {
+            match intake.try_recv() {
+                Ok(p) => pending.push(p),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let mut progressed = false;
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].rx.try_recv() {
+                Ok(response) => {
+                    finish(pending.swap_remove(i), response, &state);
+                    progressed = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => i += 1,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    let message = "replica terminated before answering".to_string();
+                    finish(pending.swap_remove(i), Response::Error { message }, &state);
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed && !pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+/// Front-end router over R replica engines. Mirrors the [`ServerHandle`]
+/// client surface (`submit`/`submit_timed`/`call` plus multi-turn
+/// sessions), so callers swap a single engine for a cluster without
+/// changing shape.
+pub struct Router {
+    replicas: Vec<ServerHandle>,
+    /// per-replica intake to its relay thread; `None` once shutdown
+    /// closed it
+    intakes: Vec<Option<mpsc::Sender<Pending>>>,
+    relays: Vec<JoinHandle<()>>,
+    states: Vec<Arc<ReplicaState>>,
+    policy: RoutePolicy,
+    max_outstanding: usize,
+    rr_next: AtomicUsize,
+    rejections: AtomicUsize,
+    sessions: Mutex<BTreeMap<u64, Vec<u8>>>,
+    next_session: AtomicU64,
+}
+
+impl Router {
+    /// Take ownership of `replicas` (already-started serving loops — mix
+    /// of lockstep and continuous is allowed, though replicas should be
+    /// interchangeable engines for routing to be transparent).
+    pub fn new(replicas: Vec<ServerHandle>, opts: RouterOpts) -> Router {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        let n = replicas.len();
+        let states: Vec<Arc<ReplicaState>> =
+            (0..n).map(|_| Arc::new(ReplicaState::default())).collect();
+        let mut intakes = Vec::with_capacity(n);
+        let mut relays = Vec::with_capacity(n);
+        for (i, state) in states.iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Pending>();
+            let state = Arc::clone(state);
+            let relay = std::thread::Builder::new()
+                .name(format!("glvq-relay-{i}"))
+                .spawn(move || relay_loop(rx, state))
+                .expect("spawn relay thread");
+            intakes.push(Some(tx));
+            relays.push(relay);
+        }
+        Router {
+            replicas,
+            intakes,
+            relays,
+            states,
+            policy: opts.policy,
+            max_outstanding: opts.max_outstanding,
+            rr_next: AtomicUsize::new(0),
+            rejections: AtomicUsize::new(0),
+            sessions: Mutex::new(BTreeMap::new()),
+            next_session: AtomicU64::new(1),
+        }
+    }
+
+    /// Number of replicas behind the front end.
+    pub fn replicas(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Requests placed on `replica` and not yet answered.
+    pub fn outstanding(&self, replica: usize) -> usize {
+        self.states[replica].outstanding_reqs.load(Ordering::Relaxed)
+    }
+
+    /// Sum of outstanding requests across the cluster.
+    fn total_outstanding(&self) -> usize {
+        self.states.iter().map(|s| s.outstanding_reqs.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Fence `replica` off from new placements. In-flight requests keep
+    /// running to completion; new traffic routes to the other replicas
+    /// (or is refused when none remain).
+    pub fn drain(&self, replica: usize) {
+        self.states[replica].draining.store(true, Ordering::Relaxed);
+    }
+
+    /// Re-admit a drained replica to placement.
+    pub fn undrain(&self, replica: usize) {
+        self.states[replica].draining.store(false, Ordering::Relaxed);
+    }
+
+    /// Block until `replica` has no requests in flight (poll + sleep —
+    /// pair with [`Router::drain`] to take a replica out safely).
+    pub fn wait_drained(&self, replica: usize) {
+        while self.outstanding(replica) > 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Pick a replica for a new request, or `None` when every replica is
+    /// draining or at its outstanding cap.
+    fn place(&self) -> Option<usize> {
+        let mut eligible: Vec<usize> = Vec::new();
+        for (i, s) in self.states.iter().enumerate() {
+            let capped = self.max_outstanding != 0
+                && s.outstanding_reqs.load(Ordering::Relaxed) >= self.max_outstanding;
+            if !s.draining.load(Ordering::Relaxed) && !capped {
+                eligible.push(i);
+            }
+        }
+        if eligible.is_empty() {
+            return None;
+        }
+        let pick = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let n = self.rr_next.fetch_add(1, Ordering::Relaxed);
+                eligible[n % eligible.len()]
+            }
+            RoutePolicy::LeastOutstanding => {
+                let load = |i: usize| self.states[i].outstanding_tokens.load(Ordering::Relaxed);
+                *eligible.iter().min_by_key(|&&i| (load(i), i)).expect("eligible is non-empty")
+            }
+        };
+        Some(pick)
+    }
+
+    /// Route one request: place it, bump the accounting, hand the replica
+    /// reply channel to the relay. No eligible replica → refuse up front.
+    fn dispatch(
+        &self,
+        request: Request,
+        reply: mpsc::Sender<Response>,
+        timeline: Option<mpsc::Sender<RequestTimeline>>,
+    ) {
+        let _sp = crate::span!("route");
+        let need = token_need(&request);
+        let Some(i) = self.place() else {
+            self.rejections.fetch_add(1, Ordering::Relaxed);
+            let depth = self.total_outstanding();
+            let limit = self.max_outstanding * self.states.len();
+            let reason = Backpressure::QueueFull { depth, limit }.to_string();
+            if let Some(ttx) = timeline {
+                // refused before placement: minimal submit → finish
+                // timeline, mirroring engine-side admission refusals
+                let mut t = RequestTimeline::new(0);
+                t.mark(Mark::Finish);
+                let _ = ttx.send(t);
+            }
+            let _ = reply.send(Response::Rejected { reason: format!("router: {reason}") });
+            return;
+        };
+        let state = &self.states[i];
+        state.outstanding_reqs.fetch_add(1, Ordering::Relaxed);
+        state.outstanding_tokens.fetch_add(need, Ordering::Relaxed);
+        state.routed.fetch_add(1, Ordering::Relaxed);
+        let (rx, tl) = match timeline {
+            Some(ttx) => {
+                let (rx, trx) = self.replicas[i].submit_timed(request);
+                (rx, Some((trx, ttx)))
+            }
+            None => (self.replicas[i].submit(request), None),
+        };
+        let p = Pending { rx, reply, timeline: tl, tokens: need };
+        if let Some(tx) = &self.intakes[i] {
+            let _ = tx.send(p);
+        }
+    }
+
+    /// Submit a request to the cluster; returns the response receiver.
+    pub fn submit(&self, request: Request) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.dispatch(request, reply, None);
+        rx
+    }
+
+    /// Submit and additionally receive the request's recorded
+    /// [`RequestTimeline`], relayed from whichever replica served it.
+    /// Like [`ServerHandle::submit_timed`], the timeline arrives before
+    /// the response; router-refused requests get a minimal timeline.
+    pub fn submit_timed(
+        &self,
+        request: Request,
+    ) -> (mpsc::Receiver<Response>, mpsc::Receiver<RequestTimeline>) {
+        let (reply, rx) = mpsc::channel();
+        let (ttx, trx) = mpsc::channel();
+        self.dispatch(request, reply, Some(ttx));
+        (rx, trx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        self.submit(request).recv().context("cluster dropped the reply")
+    }
+
+    /// Open a multi-turn session seeded with `system`. Sessions live in
+    /// the router, not in any one replica: every turn replays the whole
+    /// transcript as its prompt, so turns may land on different replicas
+    /// (which serve the same container) without changing the answers.
+    pub fn begin_session(&self, system: &[u8]) -> u64 {
+        let sid = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.sessions.lock().expect("session store poisoned").insert(sid, system.to_vec());
+        sid
+    }
+
+    /// Run one session turn through the cluster: append `user`, generate
+    /// conditioned on the transcript, fold the reply back in.
+    pub fn continue_session(&self, sid: u64, user: &[u8], max_new: usize) -> Result<Response> {
+        let prompt = {
+            let mut sessions = self.sessions.lock().expect("session store poisoned");
+            let t = sessions.get_mut(&sid).context("unknown session id")?;
+            t.extend_from_slice(user);
+            t.clone()
+        };
+        let resp = self.call(Request::Generate { prompt, max_new })?;
+        if let Response::Generated { text } = &resp {
+            let mut sessions = self.sessions.lock().expect("session store poisoned");
+            if let Some(t) = sessions.get_mut(&sid) {
+                t.extend_from_slice(text);
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Close a session, returning its final transcript (None for an
+    /// unknown id).
+    pub fn end_session(&self, sid: u64) -> Option<Vec<u8>> {
+        self.sessions.lock().expect("session store poisoned").remove(&sid)
+    }
+
+    /// Stop the cluster: close the intakes, join the relays (which drain
+    /// every in-flight reply first), then shut each replica down and fold
+    /// the per-replica metrics into one [`ClusterMetrics`].
+    pub fn shutdown(mut self) -> ClusterMetrics {
+        for tx in &mut self.intakes {
+            tx.take();
+        }
+        for relay in self.relays.drain(..) {
+            relay.join().expect("relay thread panicked");
+        }
+        let routed: Vec<usize> =
+            self.states.iter().map(|s| s.routed.load(Ordering::Relaxed)).collect();
+        let replicas: Vec<ServerMetrics> = self.replicas.drain(..).map(|h| h.shutdown()).collect();
+        ClusterMetrics {
+            replicas,
+            routed,
+            router_rejections: self.rejections.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cluster-level metrics: the per-replica [`ServerMetrics`] plus the
+/// router's own placement/refusal counters.
+#[derive(Debug)]
+pub struct ClusterMetrics {
+    /// final metrics of each replica engine, in replica order
+    pub replicas: Vec<ServerMetrics>,
+    /// requests the router placed on each replica
+    pub routed: Vec<usize>,
+    /// requests refused by the router itself (before placement)
+    pub router_rejections: usize,
+}
+
+impl ClusterMetrics {
+    /// Requests completed across all replicas.
+    pub fn requests(&self) -> usize {
+        self.replicas.iter().map(|m| m.requests).sum()
+    }
+
+    /// Tokens emitted/scored across all replicas.
+    pub fn tokens_out(&self) -> usize {
+        self.replicas.iter().map(|m| m.tokens_out).sum()
+    }
+
+    /// Aggregate throughput: the sum of per-replica rates (replicas run
+    /// concurrently over the same wall clock).
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.replicas.iter().map(|m| m.tokens_per_sec()).sum()
+    }
+
+    /// Freeze the cluster view into one [`MetricsSnapshot`]: cluster
+    /// aggregates plus a `{replica="N"}`-labeled series family per
+    /// replica, so one Prometheus scrape shows both the fleet and the
+    /// imbalance between its members.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut reg = Registry::new();
+        reg.gauge("cluster_replicas", self.replicas.len() as f64);
+        reg.counter("cluster_requests_total", self.requests() as u64);
+        reg.counter("cluster_tokens_out_total", self.tokens_out() as u64);
+        reg.gauge("cluster_tokens_per_sec", self.tokens_per_sec());
+        reg.counter("router_rejections_total", self.router_rejections as u64);
+        for (i, m) in self.replicas.iter().enumerate() {
+            let id = i.to_string();
+            let labels = [("replica", id.as_str())];
+            reg.counter_with("replica_routed_total", &labels, self.routed[i] as u64);
+            reg.counter_with("replica_requests_total", &labels, m.requests as u64);
+            reg.counter_with("replica_tokens_out_total", &labels, m.tokens_out as u64);
+            reg.counter_with("replica_rejections_total", &labels, m.rejections.total() as u64);
+            reg.gauge_with("replica_tokens_per_sec", &labels, m.tokens_per_sec());
+        }
+        reg.finish()
+    }
+
+    /// Multi-line human summary: one cluster line, then each replica's
+    /// own [`ServerMetrics::report`] line indented under it.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "cluster: replicas={} requests={} tokens={} tok/s={:.1} router_rejections={}",
+            self.replicas.len(),
+            self.requests(),
+            self.tokens_out(),
+            self.tokens_per_sec(),
+            self.router_rejections,
+        );
+        for (i, m) in self.replicas.iter().enumerate() {
+            out.push_str(&format!("\n  replica {i} (routed {}): {}", self.routed[i], m.report()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{start, LmBackend, NativeBackend, ServerOpts};
+    use crate::model::{init_params, ModelConfig};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t",
+            vocab: 256,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch_train: 2,
+            batch_eval: 2,
+        }
+    }
+
+    /// One lockstep replica over the dense native backend. Same seed →
+    /// bit-identical engines, so routing is transparent by construction.
+    fn replica(cfg: ModelConfig, seed: u64) -> ServerHandle {
+        let make = move || -> Result<Box<dyn LmBackend>> {
+            let store = init_params(&cfg, seed);
+            Ok(Box::new(NativeBackend { cfg, store }))
+        };
+        start(make, ServerOpts::default())
+    }
+
+    fn gen(prompt: &[u8], max_new: usize) -> Request {
+        Request::Generate { prompt: prompt.to_vec(), max_new }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_and_replicas_agree() {
+        let cfg = tiny();
+        let handles = vec![replica(cfg, 0), replica(cfg, 0)];
+        let opts = RouterOpts { policy: RoutePolicy::RoundRobin, ..RouterOpts::default() };
+        let router = Router::new(handles, opts);
+        let rxs: Vec<_> = (0..4).map(|_| router.submit(gen(b"ab", 2))).collect();
+        let mut texts = Vec::new();
+        for rx in rxs {
+            match rx.recv().expect("reply") {
+                Response::Generated { text } => texts.push(text),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        // same-seed replicas are bit-identical: every answer must agree
+        for t in &texts[1..] {
+            assert_eq!(t, &texts[0], "replicas diverged");
+        }
+        let metrics = router.shutdown();
+        assert_eq!(metrics.routed, vec![2, 2]);
+        assert_eq!(metrics.requests(), 4);
+        assert_eq!(metrics.tokens_out(), 8);
+        assert_eq!(metrics.router_rejections, 0);
+    }
+
+    #[test]
+    fn least_outstanding_breaks_ties_toward_the_first_replica() {
+        let cfg = tiny();
+        let handles = vec![replica(cfg, 0), replica(cfg, 0)];
+        let router = Router::new(handles, RouterOpts::default());
+        // sequential calls always see both replicas idle (the relay
+        // releases the accounting before the reply is delivered), so the
+        // tie-break sends everything to replica 0
+        for _ in 0..3 {
+            router.call(gen(b"ab", 1)).expect("reply");
+        }
+        let metrics = router.shutdown();
+        assert_eq!(metrics.routed, vec![3, 0]);
+    }
+
+    #[test]
+    fn draining_all_replicas_rejects_up_front() {
+        let cfg = tiny();
+        let router = Router::new(vec![replica(cfg, 0)], RouterOpts::default());
+        router.drain(0);
+        let (rx, trx) = router.submit_timed(gen(b"ab", 1));
+        match rx.recv().expect("reply") {
+            Response::Rejected { reason } => {
+                assert!(reason.starts_with("router: queue full"), "{reason}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        let t = trx.recv().expect("rejected requests still get a minimal timeline");
+        assert!(t.first(Mark::Finish).is_some());
+        router.undrain(0);
+        let resp = router.call(gen(b"ab", 1)).expect("reply");
+        assert!(matches!(resp, Response::Generated { .. }));
+        router.wait_drained(0);
+        let metrics = router.shutdown();
+        assert_eq!(metrics.router_rejections, 1);
+        assert_eq!(metrics.requests(), 1);
+    }
+
+    #[test]
+    fn submit_timed_forwards_replica_timelines() {
+        let cfg = tiny();
+        let router = Router::new(vec![replica(cfg, 0)], RouterOpts::default());
+        let (rx, trx) = router.submit_timed(gen(b"ab", 1));
+        assert!(matches!(rx.recv().expect("reply"), Response::Generated { .. }));
+        let t = trx.recv().expect("timeline forwarded through the relay");
+        assert!(t.first(Mark::Finish).is_some());
+        router.shutdown();
+    }
+
+    #[test]
+    fn sessions_fold_turns_through_the_cluster() {
+        let cfg = tiny();
+        let handles = vec![replica(cfg, 0), replica(cfg, 0)];
+        let opts = RouterOpts { policy: RoutePolicy::RoundRobin, ..RouterOpts::default() };
+        let router = Router::new(handles, opts);
+        let sid = router.begin_session(b"sys ");
+        let t1 = match router.continue_session(sid, b"one ", 2).expect("turn 1") {
+            Response::Generated { text } => text,
+            other => panic!("turn 1: {other:?}"),
+        };
+        let t2 = match router.continue_session(sid, b"two ", 2).expect("turn 2") {
+            Response::Generated { text } => text,
+            other => panic!("turn 2: {other:?}"),
+        };
+        let transcript = router.end_session(sid).expect("open session");
+        let mut want = b"sys one ".to_vec();
+        want.extend_from_slice(&t1);
+        want.extend_from_slice(b"two ");
+        want.extend_from_slice(&t2);
+        assert_eq!(transcript, want);
+        assert!(router.end_session(sid).is_none());
+        router.shutdown();
+    }
+
+    #[test]
+    fn cluster_snapshot_exports_labeled_replica_series() {
+        let cfg = tiny();
+        let handles = vec![replica(cfg, 0), replica(cfg, 0)];
+        let opts = RouterOpts { policy: RoutePolicy::RoundRobin, ..RouterOpts::default() };
+        let router = Router::new(handles, opts);
+        for _ in 0..2 {
+            router.call(gen(b"ab", 1)).expect("reply");
+        }
+        let metrics = router.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counter("cluster_requests_total"), 2);
+        assert_eq!(snap.counter("cluster_tokens_out_total"), 2);
+        assert_eq!(snap.gauge("cluster_replicas") as usize, 2);
+        assert_eq!(snap.counter_labeled("replica_routed_total", &[("replica", "0")]), 1);
+        assert_eq!(snap.counter_labeled("replica_routed_total", &[("replica", "1")]), 1);
+        assert_eq!(snap.counter_family("replica_requests_total"), 2);
+        crate::obs::registry::validate_prometheus(&snap.to_prometheus()).unwrap();
+        let line = metrics.report();
+        assert!(line.starts_with("cluster: replicas=2"), "{line}");
+        assert!(line.contains("replica 0 (routed 1)"), "{line}");
+        assert!(line.contains("replica 1 (routed 1)"), "{line}");
+    }
+}

@@ -16,7 +16,8 @@ use std::time::Instant;
 
 use crate::coordinator::decode_stream::DecodeStats;
 use crate::kvcache::KvCacheStats;
-use crate::obs::{Mark, MetricsSnapshot, Registry, RequestTimeline};
+use crate::obs::{Mark, MetricValue, MetricsSnapshot, Registry, RequestTimeline};
+use crate::serving::queue::RejectionCounts;
 use crate::shard::{imbalance, ShardStat};
 use crate::spec::SpecStats;
 
@@ -153,8 +154,10 @@ pub struct ServerMetrics {
     pub preemptions: usize,
     /// preempted sequences resumed
     pub resumes: usize,
-    /// requests refused with structured backpressure
-    pub rejections: usize,
+    /// requests refused with structured backpressure, tallied per
+    /// [`crate::serving::Backpressure`] variant — `queue_full` means the
+    /// engine is saturated, the rest mean the request itself is infeasible
+    pub rejections: RejectionCounts,
     /// admitted requests that claimed a shared KV prefix instead of
     /// re-prefilling it (prefix sharing on)
     pub prefix_hits: usize,
@@ -195,7 +198,7 @@ impl Default for ServerMetrics {
             prefill_tokens: 0,
             preemptions: 0,
             resumes: 0,
-            rejections: 0,
+            rejections: RejectionCounts::default(),
             prefix_hits: 0,
             prefix_tokens: 0,
             decode: None,
@@ -237,7 +240,9 @@ impl ServerMetrics {
         reg.counter("prefill_tokens_total", self.prefill_tokens as u64);
         reg.counter("preemptions_total", self.preemptions as u64);
         reg.counter("resumes_total", self.resumes as u64);
-        reg.counter("rejections_total", self.rejections as u64);
+        for (reason, n) in self.rejections.breakdown() {
+            reg.counter_with("rejections_total", &[("reason", reason)], n as u64);
+        }
         reg.counter("prefix_hits_total", self.prefix_hits as u64);
         reg.counter("prefix_tokens_total", self.prefix_tokens as u64);
         if let Some(d) = &self.decode {
@@ -347,8 +352,27 @@ pub fn human_line(snap: &MetricsSnapshot) -> String {
             snap.counter("prefill_chunks_total"),
             snap.counter("preemptions_total"),
             snap.counter("resumes_total"),
-            snap.counter("rejections_total"),
+            snap.counter_family("rejections_total"),
         ));
+        // per-reason breakdown, nonzero reasons only: the operational
+        // signal is whether refusals were saturation (queue_full) or
+        // infeasible requests (everything else)
+        if snap.counter_family("rejections_total") > 0 {
+            let mut parts: Vec<String> = Vec::new();
+            for (name, v) in snap.entries() {
+                let reason = name
+                    .strip_prefix("rejections_total{reason=\"")
+                    .and_then(|r| r.strip_suffix("\"}"));
+                if let (Some(reason), MetricValue::Counter(c)) = (reason, v) {
+                    if *c > 0 {
+                        parts.push(format!("{reason}={c}"));
+                    }
+                }
+            }
+            if !parts.is_empty() {
+                out.push_str(&format!("({})", parts.join(",")));
+            }
+        }
     }
     if snap.has("peak_panel_elems") {
         out.push_str(&format!(
@@ -481,13 +505,14 @@ mod tests {
         m.prefill_chunks = 4;
         m.preemptions = 2;
         m.resumes = 2;
-        m.rejections = 1;
+        m.rejections.queue_full = 1;
+        m.rejections.context_overflow = 2;
         let r = m.report();
         assert!(r.contains("ttft_p50=12.0ms"), "{r}");
         assert!(r.contains("steps=7"), "{r}");
         assert!(r.contains("preempt=2"), "{r}");
         assert!(r.contains("resume=2"), "{r}");
-        assert!(r.contains("rejected=1"), "{r}");
+        assert!(r.contains("rejected=3(queue_full=1,context_overflow=2)"), "{r}");
     }
 
     #[test]
@@ -555,7 +580,7 @@ mod tests {
         m.prefill_tokens = 90;
         m.preemptions = 2;
         m.resumes = 2;
-        m.rejections = 1;
+        m.rejections.count(&crate::serving::Backpressure::EmptyPrompt);
         m.decode = Some(DecodeStats { code_bytes: 100, peak_decoded: 64, ..Default::default() });
         m.kv_cache = Some(KvCacheStats { pages_in_use: 2, peak_pages: 5, ..Default::default() });
         m.shards = Some(vec![ShardStat { busy_ns: 10, total_bytes: 50, ..Default::default() }]);
@@ -582,7 +607,7 @@ mod tests {
             "prefill_chunks_total",
             "preemptions_total",
             "resumes_total",
-            "rejections_total",
+            "rejections_total{reason=\"empty_prompt\"}",
             "decoded_bytes_total",
             "kv_pages_quantized_total",
             "kv_decoded_bytes_total",
@@ -610,6 +635,8 @@ mod tests {
             assert!(snap.has(name), "snapshot missing summary {name}");
         }
         assert_eq!(snap.counter("requests_total"), 3);
+        assert_eq!(snap.counter_family("rejections_total"), 1);
+        assert_eq!(snap.counter_labeled("rejections_total", &[("reason", "empty_prompt")]), 1);
         assert_eq!(snap.summary_count("ttft_ms"), 1);
         assert!(snap.has("request_queue_ms"), "timeline attribution summary");
         // the human line renders from the snapshot alone

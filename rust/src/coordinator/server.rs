@@ -94,7 +94,7 @@ pub trait LmBackend {
 
 /// Pad each prefix to `seq_len` (keeping its tail) and return the flat
 /// (B·T) token buffer plus the last valid position of each row.
-fn pad_prefixes(seq_len: usize, prefixes: &[&[i32]]) -> (Vec<i32>, Vec<usize>) {
+pub(crate) fn pad_prefixes(seq_len: usize, prefixes: &[&[i32]]) -> (Vec<i32>, Vec<usize>) {
     let mut flat = Vec::with_capacity(seq_len * prefixes.len());
     let mut last = Vec::with_capacity(prefixes.len());
     for tokens in prefixes {
@@ -109,7 +109,11 @@ fn pad_prefixes(seq_len: usize, prefixes: &[&[i32]]) -> (Vec<i32>, Vec<usize>) {
 
 /// Pull each row's last-position logits out of a flat (B·T × V) matrix —
 /// the gather shared by every native backend.
-fn gather_last_rows(logits: &crate::linalg::Mat, seq_len: usize, last: &[usize]) -> Vec<Vec<f32>> {
+pub(crate) fn gather_last_rows(
+    logits: &crate::linalg::Mat,
+    seq_len: usize,
+    last: &[usize],
+) -> Vec<Vec<f32>> {
     last.iter()
         .enumerate()
         .map(|(b, &l)| logits.row(b * seq_len + l).to_vec())

@@ -200,6 +200,80 @@ fn softmax_rows(m: &mut Mat) {
     }
 }
 
+/// Token + position embedding for a full (B × T) batch: the residual
+/// stream the plan walk starts from. Shared by [`forward_with`] and the
+/// pipeline executor (`cluster::PipelineExec`), which must start from the
+/// exact same bits.
+pub(crate) fn embed_full(
+    cfg: &ModelConfig,
+    store: &TensorStore,
+    tokens: &[i32],
+    batch: usize,
+) -> Result<Mat> {
+    let (t_len, d) = (cfg.seq_len, cfg.d_model);
+    assert_eq!(tokens.len(), batch * t_len);
+    let emb = store.get("emb").context("missing emb")?.to_mat();
+    let pos = store.get("pos").context("missing pos")?.to_mat();
+    let mut h = Mat::zeros(batch * t_len, d);
+    for b in 0..batch {
+        for t in 0..t_len {
+            let tok = tokens[b * t_len + t] as usize;
+            let dst = h.row_mut(b * t_len + t);
+            for j in 0..d {
+                dst[j] = emb.at(tok, j) + pos.at(t, j);
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// The dense causal attention core over an in-call (B × T) batch — the
+/// attend closure of [`forward_with`], extracted so pipeline stage workers
+/// run the identical code. Every sequence (T-row block) is independent, so
+/// splitting a batch across calls reproduces the same bits row for row.
+pub(crate) fn attend_dense(cfg: &ModelConfig, batch: usize, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let (t_len, d) = (cfg.seq_len, cfg.d_model);
+    let (nh, dh) = (cfg.n_head, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut att_out = Mat::zeros(batch * t_len, d);
+    for b in 0..batch {
+        for head in 0..nh {
+            let off = head * dh;
+            // scores (T × T) for this batch/head
+            let mut scores = Mat::zeros(t_len, t_len);
+            for i in 0..t_len {
+                let qi = &q.row(b * t_len + i)[off..off + dh];
+                for j in 0..=i {
+                    let kj = &k.row(b * t_len + j)[off..off + dh];
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += qi[e] * kj[e];
+                    }
+                    *scores.at_mut(i, j) = s * scale;
+                }
+                for j in i + 1..t_len {
+                    *scores.at_mut(i, j) = -1e9;
+                }
+            }
+            softmax_rows(&mut scores);
+            for i in 0..t_len {
+                let dst = &mut att_out.row_mut(b * t_len + i)[off..off + dh];
+                for j in 0..=i {
+                    let w = scores.at(i, j);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vj = &v.row(b * t_len + j)[off..off + dh];
+                    for e in 0..dh {
+                        dst[e] += w * vj[e];
+                    }
+                }
+            }
+        }
+    }
+    att_out
+}
+
 /// Forward pass over one (B × T) token batch with dense weights. Returns
 /// logits (B·T × V). If `capture` is set, quantizable-matmul inputs are
 /// offered to it.
@@ -229,68 +303,10 @@ pub fn forward_with(
     batch: usize,
     capture: Option<&mut CalibCapture>,
 ) -> Result<Mat> {
-    let (t_len, d) = (cfg.seq_len, cfg.d_model);
-    assert_eq!(tokens.len(), batch * t_len);
-    let get = |name: &str| -> Result<Mat> {
-        Ok(store.get(name).with_context(|| format!("missing {name}"))?.to_mat())
-    };
-
-    let emb = get("emb")?;
-    let pos = get("pos")?;
-    // h: (B·T × D)
-    let mut h = Mat::zeros(batch * t_len, d);
-    for b in 0..batch {
-        for t in 0..t_len {
-            let tok = tokens[b * t_len + t] as usize;
-            let dst = h.row_mut(b * t_len + t);
-            for j in 0..d {
-                dst[j] = emb.at(tok, j) + pos.at(t, j);
-            }
-        }
-    }
-
-    let (nh, dh) = (cfg.n_head, cfg.d_head());
-    let scale = 1.0 / (dh as f32).sqrt();
-
+    let mut h = embed_full(cfg, store, tokens, batch)?;
     let model_plan = crate::eval::plan::ModelPlan::of(cfg);
     crate::eval::plan::walk(&model_plan, store, lin, &mut h, capture, |_, q, k, v| {
-        let mut att_out = Mat::zeros(batch * t_len, d);
-        for b in 0..batch {
-            for head in 0..nh {
-                let off = head * dh;
-                // scores (T × T) for this batch/head
-                let mut scores = Mat::zeros(t_len, t_len);
-                for i in 0..t_len {
-                    let qi = &q.row(b * t_len + i)[off..off + dh];
-                    for j in 0..=i {
-                        let kj = &k.row(b * t_len + j)[off..off + dh];
-                        let mut s = 0.0f32;
-                        for e in 0..dh {
-                            s += qi[e] * kj[e];
-                        }
-                        *scores.at_mut(i, j) = s * scale;
-                    }
-                    for j in i + 1..t_len {
-                        *scores.at_mut(i, j) = -1e9;
-                    }
-                }
-                softmax_rows(&mut scores);
-                for i in 0..t_len {
-                    let dst = &mut att_out.row_mut(b * t_len + i)[off..off + dh];
-                    for j in 0..=i {
-                        let w = scores.at(i, j);
-                        if w == 0.0 {
-                            continue;
-                        }
-                        let vj = &v.row(b * t_len + j)[off..off + dh];
-                        for e in 0..dh {
-                            dst[e] += w * vj[e];
-                        }
-                    }
-                }
-            }
-        }
-        Ok(att_out)
+        Ok(attend_dense(cfg, batch, q, k, v))
     })
 }
 

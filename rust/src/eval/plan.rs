@@ -114,8 +114,31 @@ pub fn walk<A>(
     lin: &mut dyn LinearOp,
     h: &mut Mat,
     mut capture: Option<&mut CalibCapture>,
-    mut attend: A,
+    attend: A,
 ) -> Result<Mat>
+where
+    A: FnMut(&LayerPlan, &Mat, &Mat, &Mat) -> Result<Mat>,
+{
+    walk_layers(plan, store, lin, h, capture.as_deref_mut(), attend, 0, plan.layers.len())?;
+    finish_walk(plan, store, lin, h, capture)
+}
+
+/// Walk a contiguous slice `lo..hi` of the plan's layers over the
+/// residual stream `h`, without the final norm / output head. This is the
+/// unit a pipeline stage executes: running `walk_layers(0..n)` followed by
+/// [`finish_walk`] performs exactly the same operations in exactly the
+/// same order as [`walk`], so cutting the layer list at any boundary is
+/// bit-identical by construction.
+pub fn walk_layers<A>(
+    plan: &ModelPlan,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    h: &mut Mat,
+    mut capture: Option<&mut CalibCapture>,
+    mut attend: A,
+    lo: usize,
+    hi: usize,
+) -> Result<()>
 where
     A: FnMut(&LayerPlan, &Mat, &Mat, &Mat) -> Result<Mat>,
 {
@@ -126,7 +149,7 @@ where
             .data
             .clone())
     };
-    for layer in &plan.layers {
+    for layer in &plan.layers[lo..hi] {
         // ---- attention ----
         let a = rmsnorm(h, &gain(&layer.attn_gain)?);
         if let Some(cap) = capture.as_deref_mut() {
@@ -163,8 +186,25 @@ where
             h.data[i] += mlp_out.data[i];
         }
     }
+    Ok(())
+}
 
-    let hf = rmsnorm(h, &gain(&plan.final_gain)?);
+/// The tail of the plan walk: final rmsnorm + output head over a residual
+/// stream that has already been carried through every layer (by [`walk`]
+/// or by the last pipeline stage's [`walk_layers`]).
+pub fn finish_walk(
+    plan: &ModelPlan,
+    store: &TensorStore,
+    lin: &mut dyn LinearOp,
+    h: &Mat,
+    mut capture: Option<&mut CalibCapture>,
+) -> Result<Mat> {
+    let g = store
+        .get(&plan.final_gain)
+        .with_context(|| format!("missing {}", plan.final_gain))?
+        .data
+        .clone();
+    let hf = rmsnorm(h, &g);
     if let Some(cap) = capture.as_deref_mut() {
         cap.offer(&plan.out, &hf);
     }

@@ -23,7 +23,10 @@
 //! traffic the [`serving`] continuous-batching scheduler replaces the
 //! lockstep batch boundary: admission-controlled queueing, chunked
 //! prefill, per-token batch membership, and KV-page preemption with
-//! quantize-to-spill.
+//! quantize-to-spill. The [`cluster`] subsystem scales past one engine:
+//! pipeline-parallel stage execution over the layer plan (bit-identical
+//! at any stage count, composable with sharding) and a replicated-engine
+//! router with draining and per-replica labeled metrics.
 //!
 //! Layout follows DESIGN.md §4; every public item is documented and every
 //! module carries unit tests. The repo-root docs are the entry points:
@@ -49,6 +52,7 @@ pub mod coordinator;
 pub mod serving;
 pub mod shard;
 pub mod spec;
+pub mod cluster;
 pub mod eval;
 pub mod exp;
 pub mod bench_support;

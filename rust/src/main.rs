@@ -12,9 +12,13 @@
 //! Hand-rolled argument parsing (clap is not in the vendored crate set).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use glvq::cluster::{
+    PipeOpts, PipelineExec, PipelinePlan, PipelineWeights, PipelinedBackend, Router, RouterOpts,
+};
 use glvq::config::GlvqConfig;
 use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use glvq::coordinator::scheduler;
@@ -24,10 +28,12 @@ use glvq::coordinator::server::{
 };
 use glvq::serving::ContinuousOpts;
 use glvq::data::corpus::{Corpus, Mix};
+use glvq::eval::plan::ModelPlan;
 use glvq::exp::{tables, Workspace};
 use glvq::glvq::pipeline::PipelineOpts;
 use glvq::info;
 use glvq::kvcache::KvCacheOpts;
+use glvq::obs::RequestTimeline;
 use glvq::quant::format::QuantizedModel;
 use glvq::shard::ShardOpts;
 use glvq::spec::SpeculativeBackend;
@@ -82,8 +88,9 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
-            [--shards N] [--threads N] [--panel-rows R] [--kv-cache]
-            [--kv-bits B] [--kv-page R] [--kv-max-pages N] [--prefix-share]
+            [--shards N] [--pipeline P] [--replicas R] [--threads N]
+            [--panel-rows R] [--kv-cache] [--kv-bits B] [--kv-page R]
+            [--kv-max-pages N] [--prefix-share]
             [--continuous] [--max-batch B] [--prefill-chunk C]
             [--max-tokens-in-flight T] [--max-queue Q] [--speculate K]
             [--metrics-out FILE] [--trace-out FILE]
@@ -108,6 +115,21 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                bit-identical to single-shard serving at any shard count
                (implies serving from the compressed container, default
                glvq-8d; composes with --kv-cache and --continuous)
+  --pipeline   pipeline-parallel lockstep execution: the layer walk is
+               cut into P contiguous stages balanced by stored payload
+               bytes, run by persistent stage workers streaming
+               micro-batched activations over bounded channels; outputs
+               stay bit-identical to single-engine serving at any stage
+               count (composes with --shards — each stage owns its own
+               sharded decode workers, a P x N grid — and with
+               --replicas, but not with --kv-cache/--continuous/
+               --speculate; implies the compressed container, default
+               glvq-8d, unless --quantized none)
+  --replicas   replicated serving: R independent engines behind a
+               least-outstanding-tokens router with per-replica draining
+               and {replica=\"N\"}-labeled metrics; every serve mode can
+               be replicated, and the final report and metrics snapshot
+               fold all replicas into one cluster view
   --kv-cache   serve through the paged KV cache: prefill once, then
                O(T) one-token lockstep steps instead of O(T^2) full
                recompute (composes with --streaming)
@@ -186,6 +208,44 @@ where
         )
     } else {
         server::start(move || Ok(Box::new(make()?) as Box<_>), ServerOpts::default())
+    }
+}
+
+/// Client front end for `serve`: one engine, or a router over R
+/// replicated engines. Both expose the same call/session surface, so the
+/// stdin loop below is identical either way.
+enum Front {
+    Single(server::ServerHandle),
+    Routed(Router),
+}
+
+impl Front {
+    fn call(&self, request: Request) -> Result<Response> {
+        match self {
+            Front::Single(h) => h.call(request),
+            Front::Routed(r) => r.call(request),
+        }
+    }
+
+    fn begin_session(&self, system: &[u8]) -> u64 {
+        match self {
+            Front::Single(h) => h.begin_session(system),
+            Front::Routed(r) => r.begin_session(system),
+        }
+    }
+
+    fn continue_session(&self, sid: u64, user: &[u8], max_new: usize) -> Result<Response> {
+        match self {
+            Front::Single(h) => h.continue_session(sid, user, max_new),
+            Front::Routed(r) => r.continue_session(sid, user, max_new),
+        }
+    }
+
+    fn end_session(&self, sid: u64) -> Option<Vec<u8>> {
+        match self {
+            Front::Single(h) => h.end_session(sid),
+            Front::Routed(r) => r.end_session(sid),
+        }
     }
 }
 
@@ -290,9 +350,11 @@ fn main() -> Result<()> {
             let mut ws = Workspace::new(&artifacts, &dir)?;
             let streaming = args.flags.get("streaming").is_some_and(|v| v != "false");
             let shards = args.get_usize("shards", 0);
+            let pipeline = args.get_usize("pipeline", 1).max(1);
+            let replicas = args.get_usize("replicas", 1).max(1);
             let method = args.get(
                 "quantized",
-                if streaming || shards > 0 { "glvq-8d" } else { "none" },
+                if streaming || shards > 0 || pipeline > 1 { "glvq-8d" } else { "none" },
             );
             let bits = args.get_f64("bits", 2.0);
             let cfg = ws.model_cfg(&model)?;
@@ -317,6 +379,12 @@ fn main() -> Result<()> {
                 quantize_shared: prefix_share && kv_bits > 0,
                 ..KvCacheOpts::default()
             };
+            if pipeline > 1 && (kv_cache || streaming) {
+                bail!(
+                    "--pipeline is a lockstep execution mode: it composes with --shards and \
+                     --replicas, not with --streaming/--kv-cache/--continuous/--speculate"
+                );
+            }
             // --shards N: total --threads split across the persistent
             // shard workers, at least one decode thread each; rounded up
             // so a non-dividing thread count never idles requested cores
@@ -329,16 +397,33 @@ fn main() -> Result<()> {
                     threads_per_shard: threads.div_ceil(shards.max(1)).max(1),
                 }
             };
-            let handle = if continuous {
-                // continuous batching over the cache-aware backend: the
-                // scheduler owns admission, chunked prefill and preemption
-                let copts = ContinuousOpts {
-                    max_batch: args.get_usize("max-batch", 16),
-                    prefill_chunk: args.get_usize("prefill-chunk", 32),
-                    max_queue: args.get_usize("max-queue", 256),
-                    max_tokens_in_flight: args.get_usize("max-tokens-in-flight", 4096),
-                    quantize_spill: kv.quantize,
-                };
+            // fetch the weights once, before the engine loop: replicas
+            // clone the same data, so R engines serve bit-identical
+            // copies of one container
+            let needs_container = shards > 0 || streaming || (pipeline > 1 && method != "none");
+            let qm0: Option<QuantizedModel> = if needs_container {
+                // container-only quantization: no dense dequantized copy is
+                // ever built, so the no-full-layer claim holds process-wide
+                Some(ws.quantize_container(&model, &method, bits, None)?)
+            } else {
+                None
+            };
+            let store0: TensorStore = if needs_container || method == "none" {
+                ws.trained_default(&model)?
+            } else {
+                ws.quantize(&model, &method, bits, None)?.1
+            };
+            if let Some(qm) = &qm0 {
+                info!("container: {} tensors ({method}, {bits} bits)", qm.tensors.len());
+            }
+            let copts = ContinuousOpts {
+                max_batch: args.get_usize("max-batch", 16),
+                prefill_chunk: args.get_usize("prefill-chunk", 32),
+                max_queue: args.get_usize("max-queue", 256),
+                max_tokens_in_flight: args.get_usize("max-tokens-in-flight", 4096),
+                quantize_spill: kv.quantize,
+            };
+            if continuous {
                 info!(
                     "continuous scheduler: max_batch {}, prefill chunk {}, budget {} tokens, kv page {} rows, kv bits {}",
                     copts.max_batch,
@@ -347,151 +432,158 @@ fn main() -> Result<()> {
                     kv.page_rows,
                     if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
                 );
-                if shards > 0 {
-                    // sharded + continuous: the scheduler's ragged steps
-                    // run tensor-parallel across the shard workers
-                    let sopts = shard_opts(shards, &args);
-                    let qm = ws.quantize_container(&model, &method, bits, None)?;
-                    let store = ws.trained_default(&model)?;
-                    info!(
-                        "sharded continuous backend: {} shards x {} threads",
-                        sopts.shards, sopts.threads_per_shard
-                    );
-                    start_continuous_maybe_spec(
-                        move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
-                        copts,
-                        spec_k,
-                    )
-                } else if streaming {
+            }
+            let mut engines: Vec<server::ServerHandle> = Vec::with_capacity(replicas);
+            for _ in 0..replicas {
+                let store = store0.clone();
+                let qm = qm0.clone();
+                let handle = if continuous {
+                    // continuous batching over the cache-aware backend: the
+                    // scheduler owns admission, chunked prefill, preemption
+                    if shards > 0 {
+                        // sharded + continuous: the scheduler's ragged steps
+                        // run tensor-parallel across the shard workers
+                        let sopts = shard_opts(shards, &args);
+                        let qm = qm.expect("container fetched for sharded serve");
+                        start_continuous_maybe_spec(
+                            move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
+                            copts,
+                            spec_k,
+                        )
+                    } else if streaming {
+                        let threads = args.get_usize("threads", scheduler::default_threads());
+                        let panel_rows = args.get_usize("panel-rows", 16);
+                        let qm = qm.expect("container fetched for streaming serve");
+                        start_continuous_maybe_spec(
+                            move || {
+                                let engine = StreamingMatmul::new(panel_rows, threads);
+                                Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+                            },
+                            copts,
+                            spec_k,
+                        )
+                    } else {
+                        start_continuous_maybe_spec(
+                            move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
+                            copts,
+                            spec_k,
+                        )
+                    }
+                } else if pipeline > 1 {
+                    // pipeline-parallel lockstep: persistent stage workers
+                    // execute contiguous layer runs of the plan, streaming
+                    // micro-batched activations between them; with a
+                    // container each stage owns its own sharded decode
+                    // workers (a stages x shards grid), and the total
+                    // --threads budget splits over every stage-shard cell
                     let threads = args.get_usize("threads", scheduler::default_threads());
                     let panel_rows = args.get_usize("panel-rows", 16);
-                    let qm = ws.quantize_container(&model, &method, bits, None)?;
-                    let store = ws.trained_default(&model)?;
-                    start_continuous_maybe_spec(
+                    let per_cell = threads.div_ceil(pipeline * shards.max(1)).max(1);
+                    let weights = match qm {
+                        Some(qm) => PipelineWeights::Sharded {
+                            qm: Arc::new(qm),
+                            opts: ShardOpts {
+                                shards: shards.max(1),
+                                panel_rows,
+                                threads_per_shard: per_cell,
+                            },
+                        },
+                        None => PipelineWeights::Dense,
+                    };
+                    server::start(
+                        move || {
+                            let pplan = match &weights {
+                                PipelineWeights::Sharded { qm, .. } => {
+                                    PipelinePlan::build(&ModelPlan::of(&cfg), qm, pipeline)
+                                }
+                                PipelineWeights::Dense => {
+                                    PipelinePlan::dense(cfg.n_layer, pipeline)
+                                }
+                            };
+                            let exec = PipelineExec::new(
+                                cfg,
+                                store,
+                                pplan,
+                                weights,
+                                PipeOpts::default(),
+                            );
+                            Ok(Box::new(PipelinedBackend { exec }) as Box<_>)
+                        },
+                        ServerOpts::default(),
+                    )
+                } else if kv_cache && shards > 0 {
+                    // sharded lockstep over the paged KV cache
+                    let sopts = shard_opts(shards, &args);
+                    let qm = qm.expect("container fetched for sharded serve");
+                    start_lockstep_maybe_spec(
+                        move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
+                        spec_k,
+                    )
+                } else if kv_cache && streaming {
+                    // compressed weights + paged KV cache: prefill once,
+                    // then one-token steps, every linear streamed from
+                    // the container
+                    let threads = args.get_usize("threads", scheduler::default_threads());
+                    let panel_rows = args.get_usize("panel-rows", 16);
+                    let qm = qm.expect("container fetched for streaming serve");
+                    start_lockstep_maybe_spec(
                         move || {
                             let engine = StreamingMatmul::new(panel_rows, threads);
                             Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
                         },
-                        copts,
                         spec_k,
                     )
-                } else {
-                    let store: TensorStore = if method == "none" {
-                        ws.trained_default(&model)?
-                    } else {
-                        ws.quantize(&model, &method, bits, None)?.1
-                    };
-                    start_continuous_maybe_spec(
+                } else if kv_cache {
+                    start_lockstep_maybe_spec(
                         move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
-                        copts,
                         spec_k,
                     )
-                }
-            } else if kv_cache && shards > 0 {
-                // sharded lockstep over the paged KV cache
-                let sopts = shard_opts(shards, &args);
-                let qm = ws.quantize_container(&model, &method, bits, None)?;
-                let store = ws.trained_default(&model)?;
-                info!(
-                    "sharded cache-aware backend: {} shards x {} threads, kv page {} rows",
-                    sopts.shards, sopts.threads_per_shard, kv.page_rows
-                );
-                start_lockstep_maybe_spec(
-                    move || Ok(CachedNativeBackend::sharded(cfg, store, qm, sopts, kv)),
-                    spec_k,
-                )
-            } else if kv_cache && streaming {
-                // compressed weights + paged KV cache: prefill once, then
-                // one-token steps, every linear streamed from the container
-                let threads = args.get_usize("threads", scheduler::default_threads());
-                let panel_rows = args.get_usize("panel-rows", 16);
-                let qm = ws.quantize_container(&model, &method, bits, None)?;
-                let store = ws.trained_default(&model)?;
-                info!(
-                    "cache-aware streaming backend: {} tensors, kv page {} rows, kv bits {}",
-                    qm.tensors.len(),
-                    kv.page_rows,
-                    if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
-                );
-                start_lockstep_maybe_spec(
-                    move || {
-                        let engine = StreamingMatmul::new(panel_rows, threads);
-                        Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
-                    },
-                    spec_k,
-                )
-            } else if kv_cache {
-                let store: TensorStore = if method == "none" {
-                    ws.trained_default(&model)?
+                } else if shards > 0 {
+                    // cacheless sharded lockstep: every forward is
+                    // tensor-parallel
+                    let sopts = shard_opts(shards, &args);
+                    let qm = qm.expect("container fetched for sharded serve");
+                    server::start(
+                        move || {
+                            let b = server::ShardedNativeBackend::new(cfg, store, qm, sopts);
+                            Ok(Box::new(b) as Box<_>)
+                        },
+                        ServerOpts::default(),
+                    )
+                } else if streaming {
+                    // serve straight from the compressed container: the
+                    // batched streaming engine decodes each group-panel
+                    // once per batch
+                    let threads = args.get_usize("threads", scheduler::default_threads());
+                    let panel_rows = args.get_usize("panel-rows", 16);
+                    let qm = qm.expect("container fetched for streaming serve");
+                    server::start(
+                        move || {
+                            Ok(Box::new(StreamingNativeBackend {
+                                cfg,
+                                store,
+                                qm,
+                                engine: StreamingMatmul::new(panel_rows, threads),
+                                stats: DecodeStats::default(),
+                            }) as Box<_>)
+                        },
+                        ServerOpts::default(),
+                    )
                 } else {
-                    ws.quantize(&model, &method, bits, None)?.1
+                    server::start(
+                        move || Ok(Box::new(NativeBackend { cfg, store }) as Box<_>),
+                        ServerOpts::default(),
+                    )
                 };
-                info!(
-                    "cache-aware backend: kv page {} rows, kv bits {}",
-                    kv.page_rows,
-                    if kv.quantize { kv.kv_bits.to_string() } else { "f32".to_string() }
-                );
-                start_lockstep_maybe_spec(
-                    move || Ok(CachedNativeBackend::dense(cfg, store, kv)),
-                    spec_k,
-                )
-            } else if shards > 0 {
-                // cacheless sharded lockstep: every forward tensor-parallel
-                let sopts = shard_opts(shards, &args);
-                let qm = ws.quantize_container(&model, &method, bits, None)?;
-                let store = ws.trained_default(&model)?;
-                info!(
-                    "sharded backend: {} tensors over {} shards x {} threads",
-                    qm.tensors.len(),
-                    sopts.shards,
-                    sopts.threads_per_shard
-                );
-                server::start(
-                    move || {
-                        let b = server::ShardedNativeBackend::new(cfg, store, qm, sopts);
-                        Ok(Box::new(b) as Box<_>)
-                    },
-                    ServerOpts::default(),
-                )
-            } else if streaming {
-                // serve straight from the compressed container: the batched
-                // streaming engine decodes each group-panel once per batch
-                let threads = args.get_usize("threads", scheduler::default_threads());
-                let panel_rows = args.get_usize("panel-rows", 16);
-                // container-only quantization: no dense dequantized copy is
-                // ever built, so the no-full-layer claim holds process-wide
-                let qm = ws.quantize_container(&model, &method, bits, None)?;
-                let store = ws.trained_default(&model)?;
-                info!(
-                    "streaming backend: {} tensors, {} decode threads, {} panel rows",
-                    qm.tensors.len(),
-                    threads,
-                    panel_rows
-                );
-                server::start(
-                    move || {
-                        Ok(Box::new(StreamingNativeBackend {
-                            cfg,
-                            store,
-                            qm,
-                            engine: StreamingMatmul::new(panel_rows, threads),
-                            stats: DecodeStats::default(),
-                        }) as Box<_>)
-                    },
-                    ServerOpts::default(),
-                )
+                engines.push(handle);
+            }
+            let front = if replicas > 1 {
+                info!("router: {replicas} replicas, least-outstanding placement");
+                Front::Routed(Router::new(engines, RouterOpts::default()))
             } else {
-                let store: TensorStore = if method == "none" {
-                    ws.trained_default(&model)?
-                } else {
-                    ws.quantize(&model, &method, bits, None)?.1
-                };
-                server::start(
-                    move || Ok(Box::new(NativeBackend { cfg, store }) as Box<_>),
-                    ServerOpts::default(),
-                )
+                Front::Single(engines.pop().expect("one engine"))
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}, speculate={spec_k}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, pipeline={pipeline}, replicas={replicas}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}, speculate={spec_k}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
             let stdin = std::io::stdin();
             let mut line = String::new();
             let mut session: Option<u64> = None;
@@ -505,9 +597,9 @@ fn main() -> Result<()> {
                     break;
                 }
                 let resp = if let Some(p) = line.strip_prefix("gen ") {
-                    handle.call(Request::Generate { prompt: p.as_bytes().to_vec(), max_new: 48 })?
+                    front.call(Request::Generate { prompt: p.as_bytes().to_vec(), max_new: 48 })?
                 } else if let Some(p) = line.strip_prefix("score ") {
-                    handle.call(Request::Score {
+                    front.call(Request::Score {
                         prompt: p.as_bytes().to_vec(),
                         continuation: b". the".to_vec(),
                     })?
@@ -516,15 +608,15 @@ fn main() -> Result<()> {
                     // prompt; following 'say' lines resume its transcript
                     // (and, with --prefix-share, its cached KV prefix)
                     if let Some(old) = session.take() {
-                        handle.end_session(old);
+                        front.end_session(old);
                     }
-                    let sid = handle.begin_session(p.as_bytes());
+                    let sid = front.begin_session(p.as_bytes());
                     session = Some(sid);
                     println!("session {sid} open");
                     continue;
                 } else if let Some(p) = line.strip_prefix("say ") {
                     match session {
-                        Some(sid) => handle.continue_session(sid, p.as_bytes(), 48)?,
+                        Some(sid) => front.continue_session(sid, p.as_bytes(), 48)?,
                         None => {
                             println!("no open session (start one with: session <system prompt>)");
                             continue;
@@ -543,18 +635,29 @@ fn main() -> Result<()> {
                     Response::Rejected { reason } => println!("rejected: {reason}"),
                 }
             }
-            let metrics = handle.shutdown();
-            info!("{}", metrics.report());
+            let (report, snapshot, timelines) = match front {
+                Front::Single(h) => {
+                    let m = h.shutdown();
+                    (m.report(), m.snapshot(), m.timelines)
+                }
+                Front::Routed(r) => {
+                    let m = r.shutdown();
+                    let tls: Vec<RequestTimeline> =
+                        m.replicas.iter().flat_map(|s| s.timelines.iter().cloned()).collect();
+                    (m.report(), m.snapshot(), tls)
+                }
+            };
+            info!("{report}");
             if let Some(path) = metrics_out {
-                std::fs::write(&path, metrics.snapshot().to_prometheus())?;
+                std::fs::write(&path, snapshot.to_prometheus())?;
                 info!("wrote metrics snapshot to {path}");
             }
             if let Some(path) = trace_out {
                 glvq::obs::span::set_enabled(false);
                 let spans = glvq::obs::span::drain();
-                let trace = glvq::obs::chrome_trace_json(&spans, &metrics.timelines);
+                let trace = glvq::obs::chrome_trace_json(&spans, &timelines);
                 std::fs::write(&path, trace.to_string())?;
-                info!("wrote {} spans + {} request timelines to {path}", spans.len(), metrics.timelines.len());
+                info!("wrote {} spans + {} request timelines to {path}", spans.len(), timelines.len());
             }
         }
         "exp" => {

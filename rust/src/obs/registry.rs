@@ -38,6 +38,35 @@ pub struct Registry {
     entries: Vec<(String, MetricValue)>,
 }
 
+/// Build the stored entry key for a labeled metric: `name{k="v",...}` in
+/// the given label order, values escaped per the Prometheus text format
+/// (backslash, double quote, newline). With no labels this is just `name`.
+pub fn labeled_name(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::from(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+        s.push_str(k);
+        s.push_str("=\"");
+        s.push_str(&escaped);
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// The family a (possibly labeled) entry name belongs to: everything
+/// before the label set.
+fn family_of(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
 impl Registry {
     pub fn new() -> Registry {
         Registry::default()
@@ -49,6 +78,19 @@ impl Registry {
 
     pub fn gauge(&mut self, name: &str, value: f64) {
         self.entries.push((name.to_string(), MetricValue::Gauge(value)));
+    }
+
+    /// Register one sample of a labeled counter family, e.g.
+    /// `counter_with("rejections_total", &[("reason", "queue_full")], n)`.
+    /// Samples of the same family share one `# TYPE` line in the
+    /// Prometheus exposition; each label set is its own entry.
+    pub fn counter_with(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.entries.push((labeled_name(name, labels), MetricValue::Counter(value)));
+    }
+
+    /// Register one sample of a labeled gauge family (see [`Registry::counter_with`]).
+    pub fn gauge_with(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.entries.push((labeled_name(name, labels), MetricValue::Gauge(value)));
     }
 
     /// Register a distribution summary. `quantiles` are `(q, value)` pairs
@@ -97,6 +139,25 @@ impl MetricsSnapshot {
             Some(MetricValue::Counter(c)) => *c,
             _ => 0,
         }
+    }
+
+    /// One sample of a labeled counter family, 0 when absent.
+    pub fn counter_labeled(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.counter(&labeled_name(name, labels))
+    }
+
+    /// Sum of every counter sample in `family` — the plain entry plus all
+    /// labeled `family{...}` entries. This is how aggregate views (the
+    /// human report line, cluster rollups) read a per-label breakdown.
+    pub fn counter_family(&self, family: &str) -> u64 {
+        self.entries
+            .iter()
+            .filter(|(n, _)| family_of(n) == family)
+            .map(|(_, v)| match v {
+                MetricValue::Counter(c) => *c,
+                _ => 0,
+            })
+            .sum()
     }
 
     /// Gauge value, 0.0 when absent or a different type.
@@ -164,22 +225,34 @@ impl MetricsSnapshot {
         root
     }
 
-    /// Prometheus text exposition: one `# TYPE` line per metric followed
-    /// by its samples; summaries expand to `quantile`-labelled samples
-    /// plus `_sum` and `_count`.
+    /// Prometheus text exposition: one `# TYPE` line per metric *family*
+    /// followed by its samples — labeled samples of the same family (e.g.
+    /// `rejections_total{reason="queue_full"}`) share a single
+    /// declaration; summaries expand to `quantile`-labelled samples plus
+    /// `_sum` and `_count`.
     pub fn to_prometheus(&self) -> String {
+        use std::collections::BTreeSet;
         let mut out = String::new();
+        let mut typed: BTreeSet<String> = BTreeSet::new();
         for (name, v) in &self.entries {
             let n = format!("glvq_{name}");
+            let fam = format!("glvq_{}", family_of(name));
+            let mut declare = |out: &mut String, kind: &str| {
+                if typed.insert(fam.clone()) {
+                    out.push_str(&format!("# TYPE {fam} {kind}\n"));
+                }
+            };
             match v {
                 MetricValue::Counter(c) => {
-                    out.push_str(&format!("# TYPE {n} counter\n{n} {c}\n"));
+                    declare(&mut out, "counter");
+                    out.push_str(&format!("{n} {c}\n"));
                 }
                 MetricValue::Gauge(g) => {
-                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", fmt_f64(*g)));
+                    declare(&mut out, "gauge");
+                    out.push_str(&format!("{n} {}\n", fmt_f64(*g)));
                 }
                 MetricValue::Summary { quantiles, sum, count } => {
-                    out.push_str(&format!("# TYPE {n} summary\n"));
+                    declare(&mut out, "summary");
                     for (q, qv) in quantiles {
                         out.push_str(&format!(
                             "{n}{{quantile=\"{}\"}} {}\n",
@@ -195,14 +268,73 @@ impl MetricsSnapshot {
     }
 }
 
+/// Parse the inside of a label set (`k="v",k2="v2"`, no braces) into
+/// pairs, honoring backslash escapes inside values. Errors on malformed
+/// pairs and on duplicate label names within the set.
+fn parse_label_pairs(s: &str) -> Result<Vec<(String, String)>, &'static str> {
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    let mut rest = s;
+    while !rest.is_empty() {
+        let eq = rest.find('=').ok_or("label missing '='")?;
+        let key = &rest[..eq];
+        let key_ok = !key.is_empty()
+            && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+            && !key.chars().next().unwrap().is_ascii_digit();
+        if !key_ok {
+            return Err("invalid label name");
+        }
+        if pairs.iter().any(|(k, _)| k == key) {
+            return Err("duplicate label name in one sample");
+        }
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            return Err("label value not quoted");
+        }
+        rest = &rest[1..];
+        let mut val = String::new();
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in rest.char_indices() {
+            if escaped {
+                escaped = false;
+                val.push(c);
+                continue;
+            }
+            match c {
+                '\\' => escaped = true,
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                _ => val.push(c),
+            }
+        }
+        let end = end.ok_or("unterminated label value")?;
+        rest = &rest[end + 1..];
+        pairs.push((key.to_string(), val));
+        if let Some(r) = rest.strip_prefix(',') {
+            if r.is_empty() {
+                return Err("trailing comma in label set");
+            }
+            rest = r;
+        } else if !rest.is_empty() {
+            return Err("expected ',' between labels");
+        }
+    }
+    Ok(pairs)
+}
+
 /// Structural check of a Prometheus text exposition: every `# TYPE` line
-/// names a valid type, every sample line parses as `name[{labels}] value`,
-/// and every sample belongs to a declared metric family (allowing the
-/// summary `_sum`/`_count` suffixes). Used by the export golden tests and
-/// the CI artifact check.
+/// names a valid type and never re-declares a family as a different type,
+/// every sample line parses as `name[{labels}] value` with well-formed
+/// label pairs (no duplicate label names, quoted values), no two samples
+/// share the same name + label set, and every sample belongs to a
+/// declared metric family (allowing the summary `_sum`/`_count`
+/// suffixes). Used by the export golden tests and the CI artifact check.
 pub fn validate_prometheus(text: &str) -> Result<(), String> {
-    use std::collections::BTreeSet;
-    let mut declared: BTreeSet<String> = BTreeSet::new();
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut declared: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples: BTreeSet<String> = BTreeSet::new();
     for (i, line) in text.lines().enumerate() {
         let err = |msg: &str| Err(format!("line {}: {msg}: {line:?}", i + 1));
         if line.is_empty() {
@@ -219,7 +351,11 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
                 if !ok {
                     return err("unknown metric type");
                 }
-                declared.insert(parts[1].to_string());
+                if let Some(prev) = declared.insert(parts[1].to_string(), parts[2].to_string()) {
+                    if prev != parts[2] {
+                        return err("family re-declared with a different type");
+                    }
+                }
             }
             continue; // other comments (# HELP ...) are fine
         }
@@ -232,8 +368,12 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
         }
         let base = match name_part.split_once('{') {
             Some((b, labels)) => {
-                if !labels.ends_with('}') {
-                    return err("unterminated label set");
+                let inner = match labels.strip_suffix('}') {
+                    Some(inner) => inner,
+                    None => return err("unterminated label set"),
+                };
+                if let Err(e) = parse_label_pairs(inner) {
+                    return err(e);
                 }
                 b
             }
@@ -247,12 +387,15 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
         {
             return err("invalid metric name");
         }
+        if !samples.insert(name_part.to_string()) {
+            return err("duplicate sample (same name and label set)");
+        }
         let family = base
             .strip_suffix("_sum")
-            .filter(|f| declared.contains(*f))
-            .or_else(|| base.strip_suffix("_count").filter(|f| declared.contains(*f)))
+            .filter(|f| declared.contains_key(*f))
+            .or_else(|| base.strip_suffix("_count").filter(|f| declared.contains_key(*f)))
             .unwrap_or(base);
-        if !declared.contains(family) {
+        if !declared.contains_key(family) {
             return err("sample without a preceding # TYPE declaration");
         }
     }
@@ -320,5 +463,66 @@ mod tests {
         assert!(validate_prometheus("glvq_unregistered 1\n").is_err());
         assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x notanumber\n").is_err());
         assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x\n").is_err());
+    }
+
+    #[test]
+    fn labeled_samples_share_one_family_declaration() {
+        let mut r = Registry::new();
+        r.counter_with("rejections_total", &[("reason", "queue_full")], 2);
+        r.counter_with("rejections_total", &[("reason", "budget")], 1);
+        r.gauge_with("replica_tokens_per_sec", &[("replica", "0")], 10.5);
+        r.gauge_with("replica_tokens_per_sec", &[("replica", "1")], 12.0);
+        let s = r.finish();
+        assert_eq!(s.counter_labeled("rejections_total", &[("reason", "queue_full")]), 2);
+        assert_eq!(s.counter_labeled("rejections_total", &[("reason", "missing")]), 0);
+        assert_eq!(s.counter_family("rejections_total"), 3);
+        let text = s.to_prometheus();
+        validate_prometheus(&text).unwrap();
+        assert_eq!(text.matches("# TYPE glvq_rejections_total counter").count(), 1);
+        assert!(text.contains("glvq_rejections_total{reason=\"queue_full\"} 2\n"), "{text}");
+        assert!(text.contains("glvq_rejections_total{reason=\"budget\"} 1\n"), "{text}");
+        assert_eq!(text.matches("# TYPE glvq_replica_tokens_per_sec gauge").count(), 1);
+        assert!(text.contains("glvq_replica_tokens_per_sec{replica=\"1\"} 12\n"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped_and_reparse() {
+        let mut r = Registry::new();
+        r.counter_with("weird_total", &[("k", "a\"b\\c")], 1);
+        let text = r.finish().to_prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("glvq_weird_total{k=\"a\\\"b\\\\c\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn validator_checks_labeled_families() {
+        // duplicate label name within one sample
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x{a=\"1\",a=\"2\"} 1\n").is_err());
+        // unquoted label value
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x{a=1} 1\n").is_err());
+        // unterminated label set / value
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x{a=\"1\" 1\n").is_err());
+        assert!(validate_prometheus("# TYPE glvq_x counter\nglvq_x{a=\"1} 1\n").is_err());
+        // family re-declared with a different type
+        assert!(
+            validate_prometheus("# TYPE glvq_x counter\nglvq_x 1\n# TYPE glvq_x gauge\n").is_err()
+        );
+        // re-declaring with the same type is tolerated
+        assert!(validate_prometheus(
+            "# TYPE glvq_x counter\nglvq_x{a=\"1\"} 1\n# TYPE glvq_x counter\nglvq_x{a=\"2\"} 2\n"
+        )
+        .is_ok());
+        // duplicate sample: same name and label set
+        assert!(validate_prometheus(
+            "# TYPE glvq_x counter\nglvq_x{a=\"1\"} 1\nglvq_x{a=\"1\"} 2\n"
+        )
+        .is_err());
+        // distinct label values are fine
+        assert!(validate_prometheus(
+            "# TYPE glvq_x counter\nglvq_x{a=\"1\"} 1\nglvq_x{a=\"2\"} 2\n"
+        )
+        .is_ok());
+        // labeled sample of an undeclared family
+        assert!(validate_prometheus("glvq_y{a=\"1\"} 1\n").is_err());
     }
 }

@@ -39,5 +39,5 @@
 pub mod queue;
 pub mod scheduler;
 
-pub use queue::{Backpressure, QueueOpts, RequestQueue};
+pub use queue::{Backpressure, QueueOpts, RejectionCounts, RequestQueue};
 pub use scheduler::{ContinuousOpts, ContinuousScheduler, SeqBackend};

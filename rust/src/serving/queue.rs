@@ -77,6 +77,68 @@ impl fmt::Display for Backpressure {
     }
 }
 
+impl Backpressure {
+    /// Stable short key naming the variant — the label value of the
+    /// per-reason `rejections_total` Prometheus family and the field name
+    /// in [`RejectionCounts`].
+    pub fn key(&self) -> &'static str {
+        match self {
+            Backpressure::QueueFull { .. } => "queue_full",
+            Backpressure::BudgetExceeded { .. } => "budget",
+            Backpressure::ContextOverflow { .. } => "context_overflow",
+            Backpressure::EmptyPrompt => "empty_prompt",
+            Backpressure::ArenaTooSmall { .. } => "arena_too_small",
+        }
+    }
+}
+
+/// Per-variant rejection tally — one counter per [`Backpressure`] reason
+/// instead of a single aggregate. The distinction matters operationally:
+/// `queue_full` means the replica is saturated (a router should re-route
+/// or shed), while `context_overflow` / `empty_prompt` / `budget` mean
+/// the *request* is infeasible and would be refused by every replica.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejectionCounts {
+    pub queue_full: usize,
+    pub budget: usize,
+    pub context_overflow: usize,
+    pub empty_prompt: usize,
+    pub arena_too_small: usize,
+}
+
+impl RejectionCounts {
+    /// Tally one refusal under its variant.
+    pub fn count(&mut self, bp: &Backpressure) {
+        match bp {
+            Backpressure::QueueFull { .. } => self.queue_full += 1,
+            Backpressure::BudgetExceeded { .. } => self.budget += 1,
+            Backpressure::ContextOverflow { .. } => self.context_overflow += 1,
+            Backpressure::EmptyPrompt => self.empty_prompt += 1,
+            Backpressure::ArenaTooSmall { .. } => self.arena_too_small += 1,
+        }
+    }
+
+    /// Total refusals across all variants (the pre-breakdown aggregate).
+    pub fn total(&self) -> usize {
+        self.queue_full
+            + self.budget
+            + self.context_overflow
+            + self.empty_prompt
+            + self.arena_too_small
+    }
+
+    /// `(variant key, count)` pairs in a fixed order, for metric export.
+    pub fn breakdown(&self) -> [(&'static str, usize); 5] {
+        [
+            ("queue_full", self.queue_full),
+            ("budget", self.budget),
+            ("context_overflow", self.context_overflow),
+            ("empty_prompt", self.empty_prompt),
+            ("arena_too_small", self.arena_too_small),
+        ]
+    }
+}
+
 /// Tokens a request will occupy end to end: prompt plus everything it
 /// emits (generated tokens) or forces (scored continuation). This is the
 /// unit of the in-flight budget and of context-fit checks.
@@ -255,6 +317,93 @@ mod tests {
         // popping frees a slot
         q.pop().unwrap();
         assert!(q.push(gen(2, 2), Instant::now(), 64).is_ok());
+    }
+
+    #[test]
+    fn rejection_counts_tally_per_variant() {
+        let mut c = RejectionCounts::default();
+        c.count(&Backpressure::QueueFull { depth: 1, limit: 1 });
+        c.count(&Backpressure::QueueFull { depth: 2, limit: 2 });
+        c.count(&Backpressure::EmptyPrompt);
+        c.count(&Backpressure::ArenaTooSmall { need_pages: 9, capacity: 4 });
+        assert_eq!(c.queue_full, 2);
+        assert_eq!(c.empty_prompt, 1);
+        assert_eq!(c.arena_too_small, 1);
+        assert_eq!(c.total(), 4);
+        let by_key: std::collections::BTreeMap<_, _> = c.breakdown().into_iter().collect();
+        assert_eq!(by_key["queue_full"], 2);
+        assert_eq!(by_key["budget"], 0);
+        assert_eq!(c.breakdown().len(), 5, "every variant exports a counter");
+        // keys match Backpressure::key
+        assert_eq!(Backpressure::EmptyPrompt.key(), "empty_prompt");
+        assert_eq!(Backpressure::BudgetExceeded { need: 1, budget: 0 }.key(), "budget");
+    }
+
+    #[test]
+    fn queue_properties_under_random_interleavings() {
+        // FIFO ordering, exact depth() accounting, and id uniqueness
+        // (push + reserve_id) must survive arbitrary push/pop/reject
+        // interleavings — the queue is instantiated once per replica, so
+        // these are cluster-wide invariants, not single-server ones.
+        use std::collections::{BTreeSet, VecDeque};
+        crate::util::proptest::proptest(64, |rig| {
+            let max_depth = rig.usize_in(1, 8);
+            let budget = rig.usize_in(8, 64);
+            let seq_len = 64usize;
+            let mut q = RequestQueue::new(QueueOpts { max_depth, max_tokens_in_flight: budget });
+            let mut expect: VecDeque<(u64, usize)> = VecDeque::new();
+            let mut seen: BTreeSet<u64> = BTreeSet::new();
+            for _ in 0..rig.usize_in(1, 200) {
+                match rig.usize_in(0, 3) {
+                    0 | 1 => {
+                        let prompt = rig.usize_in(0, 80);
+                        let max_new = rig.usize_in(0, 40);
+                        let req = Request::Generate { prompt: vec![b'x'; prompt], max_new };
+                        let need = token_need(&req);
+                        match q.push(req, Instant::now(), seq_len) {
+                            Ok(id) => {
+                                assert!(prompt > 0 && need <= seq_len + 1 && need <= budget);
+                                assert!(expect.len() < max_depth);
+                                assert!(seen.insert(id), "duplicate id {id}");
+                                expect.push_back((id, need));
+                            }
+                            Err(bp) => match bp {
+                                Backpressure::EmptyPrompt => assert_eq!(prompt, 0),
+                                Backpressure::ContextOverflow { .. } => {
+                                    assert!(need > seq_len + 1)
+                                }
+                                Backpressure::BudgetExceeded { .. } => assert!(need > budget),
+                                Backpressure::QueueFull { .. } => {
+                                    assert_eq!(expect.len(), max_depth)
+                                }
+                                Backpressure::ArenaTooSmall { .. } => {
+                                    panic!("queue never checks the arena")
+                                }
+                            },
+                        }
+                    }
+                    2 => match (q.pop(), expect.pop_front()) {
+                        (None, None) => {}
+                        (Some(g), Some((id, need))) => {
+                            assert_eq!(g.id, id, "FIFO order violated");
+                            assert_eq!(g.need, need, "cached need diverged");
+                        }
+                        (g, w) => panic!("pop mismatch: got {:?} want {w:?}", g.map(|x| x.id)),
+                    },
+                    _ => {
+                        let id = q.reserve_id();
+                        assert!(seen.insert(id), "reserved id {id} reused");
+                    }
+                }
+                assert_eq!(q.depth(), expect.len(), "depth accounting diverged");
+                assert_eq!(q.is_empty(), expect.is_empty());
+            }
+            // drain: the survivors leave in exact submission order
+            while let Some((id, _)) = expect.pop_front() {
+                assert_eq!(q.pop().unwrap().id, id);
+            }
+            assert!(q.pop().is_none());
+        });
     }
 
     #[test]

@@ -264,8 +264,8 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
             _ => {}
         }
         let res = self.queue.push(request, submitted, self.backend.ctx_len());
-        if res.is_err() {
-            self.metrics.rejections += 1;
+        if let Err(bp) = &res {
+            self.metrics.rejections.count(bp);
         }
         res
     }
@@ -460,7 +460,7 @@ impl<B: SeqBackend> ContinuousScheduler<B> {
                     // refused at submit() or deferred to admission
                     let q = self.queue.pop().expect("front checked");
                     let bp = Backpressure::ArenaTooSmall { need_pages, capacity: cap };
-                    self.metrics.rejections += 1;
+                    self.metrics.rejections.count(&bp);
                     self.finished.push((q.id, Response::Rejected { reason: bp.to_string() }));
                     continue;
                 }
@@ -1046,7 +1046,7 @@ mod tests {
             }
             other => panic!("expected rejection, got {other:?}"),
         }
-        assert_eq!(sched.metrics().rejections, 3);
+        assert_eq!(sched.metrics().rejections.total(), 3);
     }
 
     #[test]

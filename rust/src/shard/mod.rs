@@ -28,4 +28,4 @@ pub mod exec;
 pub mod plan;
 
 pub use exec::{imbalance, ShardOpts, ShardStat, ShardedLinear, ShardedMatmul};
-pub use plan::{ShardPlan, SplitAxis, TensorShardPlan};
+pub use plan::{balanced_contiguous, ShardPlan, SplitAxis, TensorShardPlan};

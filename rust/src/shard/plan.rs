@@ -59,7 +59,9 @@ pub struct ShardPlan {
 /// Split `weights` into `shards` contiguous runs with near-equal sums:
 /// run `k` ends at the smallest prefix reaching `total·(k+1)/shards`.
 /// Deterministic; later runs may be empty when cells are few or skewed.
-fn balanced_contiguous(weights: &[usize], shards: usize) -> Vec<(usize, usize)> {
+/// Also the balancing core of `cluster::PipelinePlan`, which feeds it
+/// per-layer payload bytes instead of per-cell bytes.
+pub fn balanced_contiguous(weights: &[usize], shards: usize) -> Vec<(usize, usize)> {
     let total: usize = weights.iter().sum();
     let n = weights.len();
     let mut runs = Vec::with_capacity(shards);

@@ -1,0 +1,293 @@
+//! Cluster scale-out correctness (ISSUE 9 acceptance):
+//!
+//! 1. **Pipeline-parallel execution is bit-identical to the single-engine
+//!    walk** — same logits over the quantized container — at stage counts
+//!    {1, 2, 4} × micro-batch sizes {1, 2}, over both Fixed and Rans
+//!    payloads. Stages execute the same layer ops in the same order on
+//!    the same values, so pipelining is a pure overlap, never an
+//!    approximation.
+//! 2. **Pipelining composes with tensor parallelism**: a 2-stage × 2-shard
+//!    grid produces the same logits again, and greedy generation through
+//!    a [`PipelinedBackend`] matches the streaming backend byte for byte.
+//! 3. **The router adds scale-out, never semantics**: responses from a
+//!    round-robin cluster of continuous replicas match the single-engine
+//!    answers request for request, and draining a replica finishes its
+//!    in-flight work while new traffic re-routes — admitted requests are
+//!    never dropped.
+
+use std::sync::Arc;
+
+use glvq::baselines::rtn::RtnQuantizer;
+use glvq::cluster::{
+    PipeOpts, PipelineExec, PipelinePlan, PipelineWeights, PipelinedBackend, RoutePolicy, Router,
+    RouterOpts,
+};
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::coordinator::server::{
+    start, start_continuous, CachedNativeBackend, LmBackend, Request, Response, ServerHandle,
+    ServerOpts, StreamingNativeBackend,
+};
+use glvq::eval::native_fwd::{self, CalibCapture, StreamedLinear};
+use glvq::eval::plan::ModelPlan;
+use glvq::glvq::pipeline::{quantize_model, PipelineOpts};
+use glvq::kvcache::KvCacheOpts;
+use glvq::model::{init_params, ModelConfig};
+use glvq::quant::format::QuantizedModel;
+use glvq::serving::ContinuousOpts;
+use glvq::shard::ShardOpts;
+use glvq::tensor::TensorStore;
+use glvq::util::rng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t",
+        vocab: 256,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+        seq_len: 48,
+        batch_train: 2,
+        batch_eval: 2,
+    }
+}
+
+/// Quantize the tiny model once (3-bit RTN), optionally with rANS
+/// entropy payloads — the same recipe `tests/shard_parity.rs` uses, so
+/// shard-level and pipeline-level parity cover the same container.
+fn quantized(cfg: &ModelConfig, entropy: bool) -> (TensorStore, QuantizedModel) {
+    let store = init_params(cfg, 0);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+    let mut cap = CalibCapture::new(16, 0);
+    native_fwd::forward(cfg, &store, &toks, 2, Some(&mut cap)).expect("calibration forward");
+    let calib = cap.into_calib_set();
+    let opts = PipelineOpts {
+        target_bits: 3.0,
+        bit_allocation: false,
+        entropy,
+        // 8-wide column groups → every tensor has ≥4 group-aligned cells,
+        // so 2-way shard plans genuinely partition each stage's linears
+        group_size: 8,
+        ..PipelineOpts::default()
+    };
+    let (qm, _) =
+        quantize_model(&cfg.param_specs(), &store, &calib, &RtnQuantizer, &opts).expect("quantize");
+    (store, qm)
+}
+
+fn shard_opts(shards: usize) -> ShardOpts {
+    ShardOpts { shards, panel_rows: 8, threads_per_shard: 1 }
+}
+
+#[test]
+fn pipelined_forward_matches_streaming_logits_bitwise() {
+    let cfg = tiny_cfg();
+    for entropy in [false, true] {
+        let (store, qm) = quantized(&cfg, entropy);
+        let mut rng = Rng::new(17);
+        let toks: Vec<i32> = (0..3 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+
+        let engine = StreamingMatmul::new(8, 2);
+        let mut lin = StreamedLinear {
+            qm: &qm,
+            store: &store,
+            engine: &engine,
+            stats: DecodeStats::default(),
+        };
+        let want = native_fwd::forward_with(&cfg, &store, &mut lin, &toks, 3, None).unwrap();
+
+        let qm = Arc::new(qm);
+        for stages in [1usize, 2, 4] {
+            for micro_batch in [1usize, 2] {
+                let pplan = PipelinePlan::build(&ModelPlan::of(&cfg), &qm, stages);
+                let exec = PipelineExec::new(
+                    cfg,
+                    store.clone(),
+                    pplan,
+                    PipelineWeights::Sharded { qm: Arc::clone(&qm), opts: shard_opts(1) },
+                    PipeOpts { micro_batch, channel_depth: 2 },
+                );
+                let got = exec.forward(&toks, 3).unwrap();
+                assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+                assert_eq!(
+                    got.data, want.data,
+                    "entropy={entropy} stages={stages} mb={micro_batch}: pipeline diverged"
+                );
+                let st = exec.stage_stats();
+                assert_eq!(st.len(), stages);
+                assert!(st.iter().all(|s| s.micro_batches == 3usize.div_ceil(micro_batch)));
+                assert!(exec.decode_stats().is_some(), "sharded stages report decode traffic");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_composes_with_tensor_parallel_shards() {
+    // the 2-stage × 2-shard grid: each stage spreads its linears over two
+    // shard workers, and the grid still matches the reference bitwise
+    let cfg = tiny_cfg();
+    let (store, qm) = quantized(&cfg, true);
+    let mut rng = Rng::new(23);
+    let toks: Vec<i32> = (0..2 * cfg.seq_len).map(|_| rng.below(256) as i32).collect();
+
+    let engine = StreamingMatmul::new(8, 2);
+    let mut lin =
+        StreamedLinear { qm: &qm, store: &store, engine: &engine, stats: DecodeStats::default() };
+    let want = native_fwd::forward_with(&cfg, &store, &mut lin, &toks, 2, None).unwrap();
+
+    let qm = Arc::new(qm);
+    let exec = PipelineExec::new(
+        cfg,
+        store.clone(),
+        PipelinePlan::build(&ModelPlan::of(&cfg), &qm, 2),
+        PipelineWeights::Sharded { qm: Arc::clone(&qm), opts: shard_opts(2) },
+        PipeOpts::default(),
+    );
+    let got = exec.forward(&toks, 2).unwrap();
+    assert_eq!(got.data, want.data, "2×2 grid diverged from the single engine");
+    let per = exec.shard_stats().expect("sharded stages");
+    assert_eq!(per.len(), 2, "one shard-stat row per stage");
+    assert!(per.iter().all(|stage| stage.len() == 2), "two shards per stage");
+}
+
+/// Greedy-generate `max_new` tokens with any backend, returning the bytes.
+fn generate(backend: &mut dyn LmBackend, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut toks: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+    let start = toks.len();
+    for _ in 0..max_new {
+        let logits = backend.logits_last(&toks).expect("forward failed");
+        toks.push(native_fwd::argmax_logit(&logits));
+    }
+    toks[start..].iter().map(|&t| t.clamp(0, 255) as u8).collect()
+}
+
+#[test]
+fn pipelined_backend_generation_matches_streaming() {
+    let cfg = tiny_cfg();
+    let (store, qm) = quantized(&cfg, false);
+    let mut streaming = StreamingNativeBackend {
+        cfg,
+        store: store.clone(),
+        qm: qm.clone(),
+        engine: StreamingMatmul::new(8, 2),
+        stats: DecodeStats::default(),
+    };
+    let want = generate(&mut streaming, b"the kama ", 8);
+
+    let qm = Arc::new(qm);
+    let exec = PipelineExec::new(
+        cfg,
+        store,
+        PipelinePlan::build(&ModelPlan::of(&cfg), &qm, 2),
+        PipelineWeights::Sharded { qm: Arc::clone(&qm), opts: shard_opts(1) },
+        PipeOpts::default(),
+    );
+    let mut pipelined = PipelinedBackend { exec };
+    let got = generate(&mut pipelined, b"the kama ", 8);
+    assert_eq!(got, want, "pipelined generation diverged from streaming");
+}
+
+/// One continuous replica serving the compressed container — a complete
+/// engine (scheduler + paged KV cache + streaming decode), interchangeable
+/// behind the router.
+fn continuous_replica(cfg: ModelConfig, store: TensorStore, qm: QuantizedModel) -> ServerHandle {
+    let kv = KvCacheOpts { page_rows: 4, ..Default::default() };
+    let copts = ContinuousOpts { max_batch: 8, prefill_chunk: 6, ..Default::default() };
+    start_continuous(
+        move || {
+            let engine = StreamingMatmul::new(8, 1);
+            Ok(CachedNativeBackend::streaming(cfg, store, qm, engine, kv))
+        },
+        copts,
+    )
+}
+
+fn assert_same(a: &Response, b: &Response, what: &str) {
+    match (a, b) {
+        (Response::Generated { text: ta }, Response::Generated { text: tb }) => {
+            assert_eq!(ta, tb, "{what}: generation diverged")
+        }
+        (Response::Scored { logprob: la }, Response::Scored { logprob: lb }) => {
+            assert!((la - lb).abs() < 1e-12, "{what}: {la} vs {lb}")
+        }
+        other => panic!("{what}: mismatched kinds {other:?}"),
+    }
+}
+
+#[test]
+fn routed_continuous_replicas_match_the_single_engine() {
+    // scale-out never changes semantics: every response from a 2-replica
+    // round-robin cluster equals the single-engine answer
+    let cfg = tiny_cfg();
+    let (store, qm) = quantized(&cfg, true);
+    let requests = vec![
+        Request::Generate { prompt: vec![7; 14], max_new: 10 },
+        Request::Generate { prompt: b"hi ".to_vec(), max_new: 4 },
+        Request::Score { prompt: b"the ".to_vec(), continuation: b"kam".to_vec() },
+        Request::Generate { prompt: b"mid-flight ".to_vec(), max_new: 5 },
+    ];
+
+    let reference = continuous_replica(cfg, store.clone(), qm.clone());
+    let want: Vec<Response> =
+        requests.iter().map(|r| reference.call(r.clone()).expect("reference reply")).collect();
+    reference.shutdown();
+
+    let replicas = vec![
+        continuous_replica(cfg, store.clone(), qm.clone()),
+        continuous_replica(cfg, store, qm),
+    ];
+    let opts = RouterOpts { policy: RoutePolicy::RoundRobin, ..RouterOpts::default() };
+    let router = Router::new(replicas, opts);
+    let rxs: Vec<_> = requests.iter().map(|r| router.submit(r.clone())).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let got = rx.recv().expect("routed reply");
+        assert_same(&got, &want[i], &format!("request {i}"));
+    }
+    let metrics = router.shutdown();
+    assert_eq!(metrics.routed, vec![2, 2], "round robin spreads evenly");
+    assert_eq!(metrics.requests(), 4);
+    assert_eq!(metrics.router_rejections, 0);
+}
+
+#[test]
+fn draining_finishes_in_flight_work_and_reroutes_new_traffic() {
+    // pipelined replicas behind the router — the two cluster axes
+    // composed end to end. Drain replica 0 mid-stream: its in-flight
+    // requests still answer, later traffic lands on replica 1 only.
+    let cfg = tiny_cfg();
+    let (store, qm) = quantized(&cfg, false);
+    let qm = Arc::new(qm);
+    let pipelined_replica = |store: TensorStore, qm: Arc<QuantizedModel>| {
+        start(
+            move || {
+                let pplan = PipelinePlan::build(&ModelPlan::of(&cfg), &qm, 2);
+                let weights = PipelineWeights::Sharded { qm, opts: shard_opts(1) };
+                let exec = PipelineExec::new(cfg, store, pplan, weights, PipeOpts::default());
+                Ok(Box::new(PipelinedBackend { exec }) as Box<dyn LmBackend>)
+            },
+            ServerOpts::default(),
+        )
+    };
+    let replicas = vec![
+        pipelined_replica(store.clone(), Arc::clone(&qm)),
+        pipelined_replica(store, Arc::clone(&qm)),
+    ];
+    let opts = RouterOpts { policy: RoutePolicy::RoundRobin, ..RouterOpts::default() };
+    let router = Router::new(replicas, opts);
+
+    let gen = |fill: u8| Request::Generate { prompt: vec![fill; 6], max_new: 2 };
+    let first: Vec<_> = (0..4).map(|_| router.submit(gen(7))).collect();
+    router.drain(0);
+    let second: Vec<_> = (0..3).map(|_| router.submit(gen(9))).collect();
+    for rx in first.into_iter().chain(second) {
+        let resp = rx.recv().expect("admitted requests are never dropped");
+        assert!(matches!(resp, Response::Generated { .. }), "unexpected {resp:?}");
+    }
+    router.wait_drained(0);
+    let metrics = router.shutdown();
+    assert_eq!(metrics.router_rejections, 0, "draining re-routes, it does not refuse");
+    assert_eq!(metrics.routed, vec![2, 5], "post-drain traffic lands on replica 1 only");
+    assert_eq!(metrics.requests(), 7);
+}

@@ -250,5 +250,5 @@ fn continuous_backpressure_is_structured_and_recoverable() {
     }
     assert_eq!(done.len(), 2);
     assert!(done.iter().any(|d| d.0 == a) && done.iter().any(|d| d.0 == b));
-    assert_eq!(sched.metrics().rejections, 2);
+    assert_eq!(sched.metrics().rejections.total(), 2);
 }
