@@ -1,22 +1,140 @@
 //! Bench: native hot-path kernels (L1 analogues on the rust side):
 //! Babai batch encode, mu-law compand, blocked matmul, Hadamard, bit
-//! pack/unpack. These are the §Perf optimization targets.
+//! pack/unpack, and the fused decode-GEMM kernel vs the classic
+//! decode-then-FMA slab path. These are the §Perf optimization targets.
+//!
+//! The fused section asserts ≥ 1.5× fused-over-slab on the LUT-eligible
+//! 2–3-bit fixed-rate lattice cells at batch 1 (where decode dominates)
+//! and appends a `bytes_vs_flops` roofline trajectory to
+//! `runs/bench/kernels.json`. `GLVQ_BENCH_SMOKE=1` runs a miniature
+//! workload for CI: parity still checked, perf assertions skipped.
 //!
 //! Run: `cargo bench --bench bench_kernels`
 
-use glvq::bench_support::Bencher;
+use glvq::bench_support::{append_trajectory, Bencher};
 use glvq::compand::MuLaw;
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::kernels::{ExecMode, LUT_WARM_CALLS};
 use glvq::lattice::babai::{babai_batch_into, BabaiEncoder};
 use glvq::lattice::{GenLattice, LatticeEncoder};
 use glvq::linalg::matrix::matmul_into;
 use glvq::linalg::Mat;
+use glvq::quant::format::QuantizedTensor;
 use glvq::quant::pack::{code_range, PackedCodes};
-use glvq::quant::traits::hadamard;
+use glvq::quant::traits::{hadamard, QuantizedGroup, SideInfo};
+use glvq::util::json::Json;
 use glvq::util::rng::Rng;
 
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+/// A synthetic single-group lattice tensor shaped like the quantizer's
+/// output (near-diagonal generation matrix, random in-range codes) —
+/// the decode cost is identical to a trained container, and building it
+/// directly keeps the bench fast.
+fn lattice_tensor(rows: usize, cols: usize, d: usize, bits: u8, seed: u64) -> QuantizedTensor {
+    let mut rng = Rng::new(seed);
+    let mut g = vec![0.0f32; d * d];
+    for i in 0..d {
+        g[i * d + i] = 0.05;
+    }
+    for v in g.iter_mut() {
+        *v += rng.normal_f32() * 0.002;
+    }
+    let (lo, hi) = code_range(bits);
+    let codes: Vec<i32> =
+        (0..rows * cols).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+    let qg = QuantizedGroup {
+        method: "glvq",
+        bits,
+        rows,
+        cols,
+        codes: PackedCodes::pack(&codes, bits).into(),
+        side: SideInfo::Lattice { d, g, mu: 87.0, scale: 0.03 },
+    };
+    QuantizedTensor { name: format!("lat_d{d}_b{bits}"), rows, cols, groups: vec![(0, 0, qg)] }
+}
+
+/// Fused-vs-slab cells: per (d, bits) lattice family, parity-check then
+/// time both modes and append the roofline trajectory.
+fn bench_fused(b: &Bencher) {
+    let (rows, cols) = if smoke() { (64, 64) } else { (512, 512) };
+    println!("# fused decode-GEMM vs slab path: {rows}x{cols} lattice tensors");
+    let mut entries: Vec<Json> = Vec::new();
+    // (d, bits, LUT-eligible → asserted)
+    for &(d, bits, asserted) in &[(8usize, 2u8, true), (4, 3, true), (8, 3, false)] {
+        let qt = lattice_tensor(rows, cols, d, bits, 40 + d as u64 + bits as u64);
+        let slab = StreamingMatmul::new(16, 1).with_mode(ExecMode::Slab);
+        let fused = StreamingMatmul::new(16, 1).with_mode(ExecMode::Fused);
+        let mut speedup_b1 = 0.0f64;
+        for &batch in &[1usize, 8] {
+            let mut rng = Rng::new(41);
+            let x = Mat::random_normal(batch, cols, 1.0, &mut rng);
+            let mut ys = Mat::zeros(batch, rows);
+            let mut yf = Mat::zeros(batch, rows);
+            let mut stats = DecodeStats::default();
+            slab.matmul(&qt, &x, &mut ys, &mut stats);
+            // warm the fused engine past the LUT threshold, checking
+            // parity on every call (pre-warm direct and post-warm LUT
+            // decode must both be bit-identical to the slab path)
+            for _ in 0..LUT_WARM_CALLS + 1 {
+                let mut s = DecodeStats::default();
+                fused.matmul(&qt, &x, &mut yf, &mut s);
+                assert_eq!(yf.data, ys.data, "d{d}/b{bits}: fused != slab (not bit-exact)");
+            }
+            let bytes_per_mac = stats.total_bytes() as f64 / stats.macs.max(1) as f64;
+
+            let mut cell = Vec::new();
+            for (mode, engine, y) in [("slab", &slab, &mut ys), ("fused", &fused, &mut yf)] {
+                let label = format!("decode_matmul/d{d}/b{bits}/{mode}/B{batch}");
+                let r = b.run(&label, batch as f64, || {
+                    let mut s = DecodeStats::default();
+                    engine.matmul(&qt, &x, y, &mut s);
+                    std::hint::black_box(&y);
+                });
+                println!("{}", r.report());
+                cell.push(r.mean_ns);
+                entries.push(Json::obj(vec![
+                    ("cell", Json::str(&format!("d{d}_b{bits}_B{batch}"))),
+                    ("mode", Json::str(mode)),
+                    ("bytes_per_mac", Json::num(bytes_per_mac)),
+                    ("macs", Json::num(stats.macs as f64)),
+                    ("ns", Json::num(r.mean_ns)),
+                ]));
+            }
+            let speedup = cell[0] / cell[1].max(1e-12);
+            println!("  d{d}/b{bits}/B{batch}: fused = {speedup:.2}x slab");
+            entries.push(Json::obj(vec![
+                ("cell", Json::str(&format!("d{d}_b{bits}_B{batch}"))),
+                ("mode", Json::str("speedup")),
+                ("speedup", Json::num(speedup)),
+            ]));
+            if batch == 1 {
+                speedup_b1 = speedup;
+            }
+        }
+        if asserted && !smoke() {
+            assert!(
+                speedup_b1 >= 1.5,
+                "d{d}/b{bits}: fused only {speedup_b1:.2}x over slab at batch 1 (need 1.5x)"
+            );
+        }
+    }
+    append_trajectory("kernels", vec![("bytes_vs_flops", Json::Arr(entries))]);
+}
+
 fn main() {
-    let b = Bencher::default();
+    let b = if smoke() { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(1);
+
+    bench_fused(&b);
+    if smoke() {
+        // CI smoke: the fused section above already parity-checked and
+        // appended its trajectory; skip the long classic-kernel sweep
+        println!("smoke mode: classic kernel cells skipped");
+        return;
+    }
 
     println!("# L3 native kernel hot paths");
 

@@ -7,10 +7,14 @@
 //! scores B tokens while decoding every group-panel exactly once. The
 //! 4-thread batch-16 cell must beat the 1-thread batch-1 baseline by
 //! ≥ 2× tokens/s (asserted for the decode-heavy GLVQ methods — that is
-//! the amortization the engine exists for).
+//! the amortization the engine exists for). Each method also measures
+//! the classic slab path (`ExecMode::Slab`) at the corner cells, so the
+//! trajectory tracks fused-vs-slab end to end.
 //!
 //! Results are appended to `runs/bench/streaming.json` so successive
-//! runs form a trajectory (`{"runs": [...]}`).
+//! runs form a trajectory (`{"runs": [...]}`). `GLVQ_BENCH_SMOKE=1`
+//! runs a miniature grid for CI: parity-relevant structure intact,
+//! perf assertions skipped.
 //!
 //! Run: `cargo bench --bench bench_streaming`
 
@@ -19,33 +23,53 @@ use glvq::bench_support::{append_trajectory, Bencher};
 use glvq::config::GlvqConfig;
 use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
 use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::kernels::ExecMode;
 use glvq::linalg::Mat;
 use glvq::quant::format::QuantizedTensor;
 use glvq::quant::traits::GroupQuantizer;
 use glvq::util::json::Json;
 use glvq::util::rng::Rng;
 
-const DIM: usize = 512;
-const GROUP: usize = 128;
+fn smoke() -> bool {
+    std::env::var("GLVQ_BENCH_SMOKE").is_ok()
+}
+
+fn dim() -> usize {
+    if smoke() {
+        128
+    } else {
+        512
+    }
+}
+
+fn group() -> usize {
+    if smoke() {
+        64
+    } else {
+        128
+    }
+}
 
 fn build(method: &str, bits: u8) -> QuantizedTensor {
+    let (dim, group) = (dim(), group());
     let mut rng = Rng::new(2);
-    let wt = Mat::random_normal(DIM, DIM, 0.02, &mut rng);
-    let x = Mat::random_normal(GROUP, 64, 1.0, &mut rng);
+    let wt = Mat::random_normal(dim, dim, 0.02, &mut rng);
+    let x = Mat::random_normal(group, 64, 1.0, &mut rng);
     let mut groups = Vec::new();
-    for gi in 0..DIM / GROUP {
-        let panel = wt.slice(0, DIM, gi * GROUP, (gi + 1) * GROUP);
+    for gi in 0..dim / group {
+        let panel = wt.slice(0, dim, gi * group, (gi + 1) * group);
         let qg = if let Some(q) = baselines::by_name(method) {
             q.quantize(&panel, &x, bits)
         } else {
             let mut cfg = GlvqConfig::default();
             cfg.lattice_dim = 8;
+            cfg.group_size = group;
             cfg.iters = 4;
             GlvqGroupQuantizer::new(cfg).quantize(&panel, &x, bits)
         };
-        groups.push((0usize, gi * GROUP, qg));
+        groups.push((0usize, gi * group, qg));
     }
-    QuantizedTensor { name: method.into(), rows: DIM, cols: DIM, groups }
+    QuantizedTensor { name: method.into(), rows: dim, cols: dim, groups }
 }
 
 /// Losslessly re-encode every group with the rANS backend (chunk = 8 rows).
@@ -58,9 +82,15 @@ fn to_entropy(qt: &QuantizedTensor) -> QuantizedTensor {
 }
 
 fn main() {
-    let b = Bencher { warmup_iters: 1, min_iters: 3, budget_ms: 200.0 };
-    println!("# streaming serving engine: {DIM}x{DIM} layer, 2-bit, threads x batch grid");
+    let b = if smoke() {
+        Bencher::quick()
+    } else {
+        Bencher { warmup_iters: 1, min_iters: 3, budget_ms: 200.0 }
+    };
+    let dim = dim();
+    println!("# streaming serving engine: {dim}x{dim} layer, 2-bit, threads x batch grid");
     let mut entries: Vec<Json> = Vec::new();
+    let mut fused_vs_slab = 1.0f64;
 
     let variants: Vec<(String, QuantizedTensor)> = {
         let glvq = build("glvq-8d", 2);
@@ -76,48 +106,77 @@ fn main() {
         let mut rng = Rng::new(3);
         let mut baseline_tok_s = 0.0f64;
         let mut best_tok_s = 0.0f64;
+        let mut slab_best_tok_s = 0.0f64;
         for &threads in &[1usize, 2, 4] {
             for &batch in &[1usize, 4, 16] {
-                let engine = StreamingMatmul::new(16, threads);
-                let x = Mat::random_normal(batch, DIM, 1.0, &mut rng);
-                let mut y = Mat::zeros(batch, DIM);
-                // one primed call to capture the per-call byte traffic
-                let mut stats = DecodeStats::default();
-                engine.matmul(qt, &x, &mut y, &mut stats);
-                let bytes_per_tok = stats.total_bytes() as f64 / batch as f64;
+                // fused (engine default resolution = Auto) and, at the
+                // corner cells, the classic slab path for comparison
+                let corner = (threads, batch) == (1, 1) || (threads, batch) == (4, 16);
+                let modes: &[ExecMode] =
+                    if corner { &[ExecMode::Auto, ExecMode::Slab] } else { &[ExecMode::Auto] };
+                for &mode in modes {
+                    let engine = StreamingMatmul::new(16, threads).with_mode(mode);
+                    let x = Mat::random_normal(batch, dim, 1.0, &mut rng);
+                    let mut y = Mat::zeros(batch, dim);
+                    // primed calls: capture per-call byte traffic and warm
+                    // the fused engine past its LUT threshold
+                    let mut stats = DecodeStats::default();
+                    engine.matmul(qt, &x, &mut y, &mut stats);
+                    engine.matmul(qt, &x, &mut y, &mut stats);
+                    let bytes_per_tok = stats.total_bytes() as f64 / (2 * batch) as f64;
+                    let bytes_per_mac = stats.total_bytes() as f64 / stats.macs.max(1) as f64;
 
-                let r = b.run(&format!("{method}/t{threads}/b{batch}"), batch as f64, || {
-                    let mut s = DecodeStats::default();
-                    engine.matmul(qt, &x, &mut y, &mut s);
-                    std::hint::black_box(&y);
-                });
-                let tok_s = r.throughput();
-                println!("{}   ({:.3} MB/token)", r.report(), bytes_per_tok / 1e6);
-                if threads == 1 && batch == 1 {
-                    baseline_tok_s = tok_s;
+                    let label = format!("{method}/t{threads}/b{batch}/{}", mode.name());
+                    let r = b.run(&label, batch as f64, || {
+                        let mut s = DecodeStats::default();
+                        engine.matmul(qt, &x, &mut y, &mut s);
+                        std::hint::black_box(&y);
+                    });
+                    let tok_s = r.throughput();
+                    println!("{}   ({:.3} MB/token)", r.report(), bytes_per_tok / 1e6);
+                    if mode == ExecMode::Auto {
+                        if threads == 1 && batch == 1 {
+                            baseline_tok_s = tok_s;
+                        }
+                        if threads == 4 && batch == 16 {
+                            best_tok_s = tok_s;
+                        }
+                    } else if threads == 4 && batch == 16 {
+                        slab_best_tok_s = tok_s;
+                    }
+                    entries.push(Json::obj(vec![
+                        ("method", Json::str(method)),
+                        ("mode", Json::str(mode.name())),
+                        ("threads", Json::num(threads as f64)),
+                        ("batch", Json::num(batch as f64)),
+                        ("tok_s", Json::num(tok_s)),
+                        ("bytes_per_tok", Json::num(bytes_per_tok)),
+                        ("bytes_per_mac", Json::num(bytes_per_mac)),
+                        ("peak_panel_elems", Json::num(engine.peak_panel_elems(qt) as f64)),
+                    ]));
                 }
-                if threads == 4 && batch == 16 {
-                    best_tok_s = tok_s;
-                }
-                entries.push(Json::obj(vec![
-                    ("method", Json::str(method)),
-                    ("threads", Json::num(threads as f64)),
-                    ("batch", Json::num(batch as f64)),
-                    ("tok_s", Json::num(tok_s)),
-                    ("bytes_per_tok", Json::num(bytes_per_tok)),
-                    ("peak_panel_elems", Json::num(engine.peak_panel_elems(qt) as f64)),
-                ]));
             }
         }
         let speedup = best_tok_s / baseline_tok_s.max(1e-12);
         println!("  {method}: 4-thread batch-16 vs 1-thread batch-1 = {speedup:.2}x tokens/s");
         if method.starts_with("glvq") {
-            assert!(
-                speedup >= 2.0,
-                "{method}: batched multi-threaded engine only {speedup:.2}x over baseline"
-            );
+            if !smoke() {
+                assert!(
+                    speedup >= 2.0,
+                    "{method}: batched multi-threaded engine only {speedup:.2}x over baseline"
+                );
+            }
+            let ratio = best_tok_s / slab_best_tok_s.max(1e-12);
+            println!("  {method}: fused vs slab at t4/b16 = {ratio:.2}x");
+            fused_vs_slab = fused_vs_slab.max(ratio);
         }
     }
 
-    append_trajectory("streaming", vec![("measurements", Json::Arr(entries))]);
+    append_trajectory(
+        "streaming",
+        vec![
+            ("fused_vs_slab", Json::num(fused_vs_slab)),
+            ("measurements", Json::Arr(entries)),
+        ],
+    );
 }

@@ -46,11 +46,15 @@ fn main() {
         let qt = build(method, 2);
         let sm = StreamingMatmul::new(16, 1);
         let mut stats = DecodeStats::default();
-        sm.matvec(&qt, &x, &mut stats); // prime + capture stats
+        let mut y = vec![0.0f32; qt.rows];
+        sm.matvec_into(&qt, &x, &mut y, &mut stats); // prime + capture stats
         let bytes = stats.total_bytes() as f64;
+        // steady state is allocation-free: one caller-owned output buffer
+        // reused across iterations, x borrowed (never cloned into a batch)
         let r = b.run(&format!("decode-matvec/{method}"), bytes, || {
             let mut s = DecodeStats::default();
-            std::hint::black_box(sm.matvec(&qt, &x, &mut s));
+            sm.matvec_into(&qt, &x, &mut y, &mut s);
+            std::hint::black_box(&y);
         });
         println!("{}   ({:.3} MB/token)", r.report(), bytes / 1e6);
     }

@@ -28,12 +28,14 @@
 //! can be reproduced as a bytes-moved model, plus the peak decoded
 //! working set backing the paper's >10× peak-memory claim.
 
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::compand::MuLaw;
 use crate::coordinator::scheduler::parallel_map;
-use crate::entropy::histogram::DecodeTable;
-use crate::linalg::Mat;
+use crate::kernels::fused::fused_panel_slab;
+use crate::kernels::{self, lut, ExecMode, GroupTables, KernelScratch};
+use crate::linalg::{Mat, MatView};
 use crate::quant::format::QuantizedTensor;
 use crate::quant::pack::code_range;
 use crate::quant::traits::{hadamard_inverse, sign_vector, QuantizedGroup, SideInfo};
@@ -77,19 +79,6 @@ impl DecodeStats {
     }
 }
 
-/// Per-worker scratch buffers, reused across panels, groups and batches
-/// (allocation-free steady state).
-#[derive(Default)]
-struct PanelScratch {
-    codes_buf: Vec<i32>,
-    panel: Vec<f32>,
-    /// lattice-decode scratch: codes as f32 blocks (+½) for the blocked
-    /// matmul path (§Perf: scalar per-block loops → one (B×d)@(d×d) GEMM)
-    zf: Vec<f32>,
-    /// rANS chunk-decode scratch (reused across panels and groups)
-    rans_scratch: Vec<i32>,
-}
-
 /// One unit of parallel work: a row-panel of one group (or, for
 /// non-streaming side-info families, the whole group).
 #[derive(Clone, Copy)]
@@ -119,20 +108,46 @@ pub struct PanelSlab {
     pub data: Vec<f32>,
 }
 
-/// Expand the rANS decode tables for the listed groups of `qt` (one
-/// table per entropy-coded group, `None` elsewhere). The returned vector
-/// is full-length (`qt.groups.len()`), indexable by group index, so a
-/// shard worker can build tables for only the groups it owns, once, and
-/// reuse them across every batch.
-pub fn decode_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<Option<DecodeTable>> {
+/// Expand the per-group decode acceleration tables for the listed groups
+/// of `qt`: the rANS symbol table for every entropy-coded group (`None`
+/// elsewhere). The returned vector is full-length (`qt.groups.len()`),
+/// indexable by group index, so a shard worker can build tables for only
+/// the groups it owns, once, and reuse them across every batch. Fused
+/// code→vector tables attach separately — [`attach_luts`] for persistent
+/// workers, the engine's warm cache for everyone else — because they are
+/// worth building only for a payload that will be decoded repeatedly.
+pub fn kernel_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<GroupTables> {
     let _sp = crate::span!("rans_tables");
-    let mut tables: Vec<Option<DecodeTable>> = (0..qt.groups.len()).map(|_| None).collect();
+    let mut tables: Vec<GroupTables> =
+        (0..qt.groups.len()).map(|_| GroupTables::default()).collect();
     for &gi in groups {
         if let crate::quant::traits::CodePayload::Rans(rc) = &qt.groups[gi].2.codes {
-            tables[gi] = Some(rc.hist.decode_table());
+            tables[gi].rans = Some(rc.hist.decode_table());
         }
     }
     tables
+}
+
+/// Build and attach the fused kernel's code→vector tables
+/// ([`lut::LutTable`]) for every eligible listed group, in place. For
+/// callers that own long-lived [`GroupTables`] (shard workers): call once
+/// the tensor is known to be hot. Honors the `GLVQ_LUT=0` kill switch;
+/// groups that already carry a table are left untouched.
+pub fn attach_luts(qt: &QuantizedTensor, groups: &[usize], tables: &mut [GroupTables]) {
+    if !kernels::lut_enabled() {
+        return;
+    }
+    for &gi in groups {
+        let g = &qt.groups[gi].2;
+        let bits = g.codes.bits();
+        let Some(dim) = lut::lut_block_dim(&g.side, bits) else { continue };
+        if g.cols % dim != 0 || tables[gi].lut.is_some() {
+            continue;
+        }
+        if let Some(t) = lut::LutTable::build(&g.side, bits) {
+            tables[gi].lut = Some(Arc::new(t));
+        }
+    }
 }
 
 /// Fold panel slabs into `y` (`y` pre-zeroed by the caller). Slabs must
@@ -141,8 +156,17 @@ pub fn decode_tables(qt: &QuantizedTensor, groups: &[usize]) -> Vec<Option<Decod
 /// makes the float result identical no matter how the slabs were
 /// produced: one engine, many threads, or many shard workers.
 pub fn merge_slabs(qt: &QuantizedTensor, slabs: &[PanelSlab], y: &mut Mat) {
-    let _sp = crate::span!("merge_slabs");
     let batch = y.rows;
+    merge_slabs_into(qt, slabs, batch, &mut y.data);
+}
+
+/// [`merge_slabs`] against a borrowed output buffer (`batch × qt.rows`,
+/// b-major, pre-zeroed) — the allocation-free core the batch-1
+/// [`StreamingMatmul::matvec_into`] hot path folds into directly.
+pub fn merge_slabs_into(qt: &QuantizedTensor, slabs: &[PanelSlab], batch: usize, out: &mut [f32]) {
+    let _sp = crate::span!("merge_slabs");
+    let m = qt.rows;
+    debug_assert_eq!(out.len(), batch * m);
     debug_assert!(
         slabs.windows(2).all(|w| (w[0].gi, w[0].r) < (w[1].gi, w[1].r)),
         "slabs not in canonical (group, panel) order"
@@ -151,13 +175,32 @@ pub fn merge_slabs(qt: &QuantizedTensor, slabs: &[PanelSlab], y: &mut Mat) {
         let r0 = qt.groups[s.gi].0;
         debug_assert_eq!(s.data.len(), batch * s.rows);
         for b in 0..batch {
-            let dst = &mut y.row_mut(b)[r0 + s.r..r0 + s.r + s.rows];
+            let dst = &mut out[b * m + r0 + s.r..b * m + r0 + s.r + s.rows];
             let src = &s.data[b * s.rows..(b + 1) * s.rows];
             for (d, v) in dst.iter_mut().zip(src) {
                 *d += v;
             }
         }
     }
+}
+
+/// One engine's warm cache of fused code→vector tables, keyed by
+/// (tensor name, group index) and fingerprint-checked against the
+/// group's actual side info so a different tensor reusing a name can
+/// never be served stale entries. A table is built only after
+/// [`kernels::LUT_WARM_CALLS`] decodes of the same group through this
+/// engine — one-shot callers never pay a build — and total resident
+/// bytes are capped by [`kernels::LUT_CACHE_BUDGET_BYTES`].
+#[derive(Default)]
+struct LutCache {
+    map: HashMap<(String, usize), LutSlot>,
+    bytes: usize,
+}
+
+struct LutSlot {
+    fp: u64,
+    calls: usize,
+    table: Option<Arc<lut::LutTable>>,
 }
 
 /// Batched multi-threaded streaming decode-matmul engine.
@@ -169,7 +212,17 @@ pub struct StreamingMatmul {
     pub panel_rows: usize,
     /// worker threads row-panel items are spread over
     pub threads: usize,
-    scratch: Vec<Mutex<PanelScratch>>,
+    /// execution mode: fused decode-GEMM vs classic decode-then-FMA slab
+    /// path (resolved from [`kernels::resolve_mode`] at construction,
+    /// overridable via [`StreamingMatmul::with_mode`]). Both modes are
+    /// bit-identical in scalar execution — tested.
+    mode: ExecMode,
+    /// SIMD lane reduction inside the fused dot product; only ever true
+    /// when the `simd` cargo feature is compiled in AND the runtime
+    /// opted in (GLVQ_SIMD=1 / `serve --fused` / `with_simd`)
+    simd: bool,
+    scratch: Vec<Mutex<KernelScratch>>,
+    lut_cache: Mutex<LutCache>,
 }
 
 impl StreamingMatmul {
@@ -178,8 +231,30 @@ impl StreamingMatmul {
         StreamingMatmul {
             panel_rows: panel_rows.max(1),
             threads,
-            scratch: (0..threads).map(|_| Mutex::new(PanelScratch::default())).collect(),
+            mode: kernels::resolve_mode(),
+            simd: kernels::resolve_simd(),
+            scratch: (0..threads).map(|_| Mutex::new(KernelScratch::default())).collect(),
+            lut_cache: Mutex::new(LutCache::default()),
         }
+    }
+
+    /// Builder: pin the execution mode, overriding the process-level
+    /// resolution. `ExecMode::Slab` also disables the LUT warm cache.
+    pub fn with_mode(mut self, mode: ExecMode) -> StreamingMatmul {
+        self.mode = mode;
+        self
+    }
+
+    /// Builder: opt this engine in/out of SIMD lane reduction. A no-op
+    /// (stays scalar) when the `simd` cargo feature is not compiled in.
+    pub fn with_simd(mut self, on: bool) -> StreamingMatmul {
+        self.simd = on && cfg!(feature = "simd");
+        self
+    }
+
+    /// The execution mode this engine resolved to.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
     }
 
     /// Effective panel rows for one group: `panel_rows`, except rANS
@@ -216,25 +291,82 @@ impl StreamingMatmul {
         stats.act_bytes += (x.data.len() + y.data.len()) * 4;
 
         // expand each group's rANS decode table once per batch (not per
-        // panel, not per vector) and share it across workers
+        // panel, not per vector) and share it across workers; attach any
+        // warm fused LUTs from this engine's cache
         let all: Vec<usize> = (0..qt.groups.len()).collect();
-        let tables = decode_tables(qt, &all);
-        let slabs = self.panel_slabs(qt, &all, &tables, x, stats);
+        let mut tables = kernel_tables(qt, &all);
+        self.attach_cached_luts(qt, &all, &mut tables);
+        let slabs = self.panel_slabs(qt, &all, &tables, MatView::of(x), stats);
         // slabs land in canonical item order regardless of which worker
         // ran them, so accumulation order (and hence the float result) is
         // deterministic
         merge_slabs(qt, &slabs, y);
     }
 
+    /// Attach fused code→vector tables for eligible groups from this
+    /// engine's warm cache, building a table only once a group has been
+    /// decoded [`kernels::LUT_WARM_CALLS`] times through this engine and
+    /// the cache budget allows it. Slab mode and `GLVQ_LUT=0` skip
+    /// entirely. Tables are fingerprint-verified against the group's side
+    /// info, so a different tensor reusing a cached name rebuilds instead
+    /// of serving stale entries.
+    fn attach_cached_luts(
+        &self,
+        qt: &QuantizedTensor,
+        groups: &[usize],
+        tables: &mut [GroupTables],
+    ) {
+        if self.mode == ExecMode::Slab || !kernels::lut_enabled() {
+            return;
+        }
+        let mut guard = self.lut_cache.lock().expect("lut cache mutex poisoned");
+        let LutCache { map, bytes } = &mut *guard;
+        for &gi in groups {
+            let g = &qt.groups[gi].2;
+            let bits = g.codes.bits();
+            let Some(dim) = lut::lut_block_dim(&g.side, bits) else { continue };
+            if g.cols % dim != 0 {
+                continue;
+            }
+            let fp = lut::group_fingerprint(g);
+            let slot = map
+                .entry((qt.name.clone(), gi))
+                .or_insert(LutSlot { fp, calls: 0, table: None });
+            if slot.fp != fp {
+                // same (tensor name, group index), different content:
+                // drop the stale table and restart the warm counter
+                if let Some(t) = slot.table.take() {
+                    *bytes = bytes.saturating_sub(t.bytes());
+                }
+                slot.fp = fp;
+                slot.calls = 0;
+            }
+            slot.calls += 1;
+            if slot.table.is_none() && slot.calls >= kernels::LUT_WARM_CALLS {
+                let est = lut::lut_bytes_estimate(&g.side, bits).unwrap_or(usize::MAX);
+                if bytes.saturating_add(est) <= kernels::LUT_CACHE_BUDGET_BYTES {
+                    if let Some(t) = lut::LutTable::build(&g.side, bits) {
+                        *bytes += t.bytes();
+                        slot.table = Some(Arc::new(t));
+                    }
+                }
+            }
+            if let Some(t) = &slot.table {
+                tables[gi].lut = Some(Arc::clone(t));
+            }
+        }
+    }
+
     /// Decode-matmul a **subset** of `qt`'s groups against the batch,
     /// returning one partial-product slab per row-panel in canonical
-    /// (group index, panel row) order. `tables` is the full-length decode
-    /// table vector from [`decode_tables`] (the caller owns it so shard
-    /// workers can build their groups' tables once and reuse them across
-    /// batches). Per-item [`DecodeStats`] are merged into `stats`; the
-    /// activation traffic (`act_bytes`) is *not* charged here — the
-    /// caller that owns x/y charges it once per call, so stats stay
-    /// identical however the groups are partitioned.
+    /// (group index, panel row) order. `tables` is the full-length
+    /// [`GroupTables`] vector from [`kernel_tables`] (the caller owns it
+    /// so shard workers can build their groups' tables once and reuse
+    /// them across batches; [`attach_luts`] upgrades hot groups). Per-item
+    /// [`DecodeStats`] are merged into `stats`; the activation traffic
+    /// (`act_bytes`) is *not* charged here — the caller that owns x/y
+    /// charges it once per call, so stats stay identical however the
+    /// groups are partitioned.
     ///
     /// This is the shard executor's work unit: `matmul` is exactly
     /// `panel_slabs` over all groups followed by [`merge_slabs`].
@@ -242,8 +374,8 @@ impl StreamingMatmul {
         &self,
         qt: &QuantizedTensor,
         groups: &[usize],
-        tables: &[Option<DecodeTable>],
-        x: &Mat,
+        tables: &[GroupTables],
+        x: MatView<'_>,
         stats: &mut DecodeStats,
     ) -> Vec<PanelSlab> {
         assert_eq!(x.cols, qt.cols, "{}: x cols {} != n_in {}", qt.name, x.cols, qt.cols);
@@ -267,22 +399,39 @@ impl StreamingMatmul {
             }
         }
 
-        let slabs = parallel_map(self.threads, &items, |idx, item| {
+        let slabs = parallel_map(self.threads, &items, |worker, _idx, item| {
             // one span per row-panel on the worker's own thread track;
             // inert (a single atomic load) when tracing is off
             let _sp = crate::span!("panel_decode");
             let (_, c0, g) = &qt.groups[item.gi];
-            let mut scratch = self.acquire_scratch(idx);
+            let mut scratch = self.acquire_scratch(worker);
             let mut st = DecodeStats::default();
-            let slab = panel_slab(
-                g,
-                *c0,
-                item,
-                tables[item.gi].as_ref(),
-                x,
-                &mut scratch,
-                &mut st,
-            );
+            let gt = &tables[item.gi];
+            let fused = self.mode != ExecMode::Slab && supports_streaming(&g.side);
+            let slab = if fused {
+                match fused_panel_slab(
+                    g,
+                    *c0,
+                    item.r,
+                    item.rows,
+                    gt,
+                    x,
+                    &mut scratch,
+                    &mut st,
+                    self.simd,
+                ) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // misrouted family: discard the fused attempt's
+                        // counters and redo through the slab path so the
+                        // stats match slab-mode execution exactly
+                        st = DecodeStats::default();
+                        panel_slab(g, *c0, item, gt, x, &mut scratch, &mut st)
+                    }
+                }
+            } else {
+                panel_slab(g, *c0, item, gt, x, &mut scratch, &mut st)
+            };
             // side info is charged once per group per batch: on its first panel
             if item.r == 0 {
                 st.side_bytes += g.side_bytes();
@@ -307,22 +456,40 @@ impl StreamingMatmul {
     /// used to provide). Used by the Table-4 micro benches and the
     /// roundtrip tests.
     pub fn matvec(&self, qt: &QuantizedTensor, x: &[f32], stats: &mut DecodeStats) -> Vec<f32> {
-        let xm = Mat::from_vec(1, x.len(), x.to_vec());
-        let mut y = Mat::zeros(1, qt.rows);
-        self.matmul(qt, &xm, &mut y, stats);
-        y.data
+        let mut y = vec![0.0f32; qt.rows];
+        self.matvec_into(qt, x, &mut y, stats);
+        y
     }
 
-    /// Grab a scratch slab: prefer an uncontended one, fall back to
-    /// blocking on the slot keyed by the item index. Pool size == threads,
-    /// so with ≤ threads concurrent workers a free slab always exists.
-    fn acquire_scratch(&self, idx: usize) -> std::sync::MutexGuard<'_, PanelScratch> {
-        for s in &self.scratch {
-            if let Ok(guard) = s.try_lock() {
-                return guard;
-            }
-        }
-        self.scratch[idx % self.scratch.len()]
+    /// Allocation-free single-vector decode-matmul: `y = decode(qt) · x`
+    /// against caller-owned buffers. `x` is borrowed (no clone into a
+    /// batch matrix) and `y` (len `qt.rows`) is overwritten — the batch-1
+    /// token-decode hot path reuses one output buffer across steps.
+    /// Bit-identical to `matmul` with a 1-row batch.
+    pub fn matvec_into(
+        &self,
+        qt: &QuantizedTensor,
+        x: &[f32],
+        y: &mut [f32],
+        stats: &mut DecodeStats,
+    ) {
+        let _sp = crate::span!("decode_matmul");
+        assert_eq!(y.len(), qt.rows, "{}: bad output length", qt.name);
+        y.fill(0.0);
+        stats.act_bytes += (x.len() + y.len()) * 4;
+        let all: Vec<usize> = (0..qt.groups.len()).collect();
+        let mut tables = kernel_tables(qt, &all);
+        self.attach_cached_luts(qt, &all, &mut tables);
+        let slabs = self.panel_slabs(qt, &all, &tables, MatView::from_slice(1, x.len(), x), stats);
+        merge_slabs_into(qt, &slabs, 1, y);
+    }
+
+    /// Grab this worker's own scratch slab. Pool size == threads and
+    /// worker ids from [`parallel_map`] are stable in `0..threads`, so
+    /// the lock is always uncontended — no try-lock scan over slots other
+    /// workers hold.
+    fn acquire_scratch(&self, worker: usize) -> std::sync::MutexGuard<'_, KernelScratch> {
+        self.scratch[worker % self.scratch.len()]
             .lock()
             .expect("scratch mutex poisoned")
     }
@@ -353,9 +520,9 @@ fn panel_slab(
     g: &QuantizedGroup,
     c0: usize,
     item: &PanelItem,
-    table: Option<&DecodeTable>,
-    x: &Mat,
-    scratch: &mut PanelScratch,
+    tables: &GroupTables,
+    x: MatView<'_>,
+    scratch: &mut KernelScratch,
     stats: &mut DecodeStats,
 ) -> Vec<f32> {
     let (n, batch) = (g.cols, x.rows);
@@ -390,7 +557,7 @@ fn panel_slab(
     let count = rows * n;
     scratch.codes_buf.resize(count, 0);
     scratch.panel.resize(count, 0.0);
-    match (&g.codes, table) {
+    match (&g.codes, tables.rans.as_ref()) {
         (crate::quant::traits::CodePayload::Rans(rc), Some(t)) => rc.decode_range_with(
             item.r * n,
             &mut scratch.codes_buf[..count],
@@ -483,7 +650,7 @@ impl std::error::Error for UnstreamableDecode {}
 /// d/dim. A family that cannot decode from an arbitrary offset returns
 /// [`UnstreamableDecode`] so the caller can fall back to a whole-group
 /// decode.
-fn decode_codes(
+pub(crate) fn decode_codes(
     side: &SideInfo,
     bits: u8,
     codes: &[i32],
@@ -637,8 +804,11 @@ mod tests {
 
     #[test]
     fn streaming_matmul_equals_dense_oracle_bitexact() {
-        // fixed + rANS payloads × batch sizes × thread counts × a panel
-        // size (5) that leaves a ragged 2-row tail on the 32-row groups
+        // fixed + rANS payloads × batch sizes × thread counts × execution
+        // modes × a panel size (5) that leaves a ragged 2-row tail on the
+        // 32-row groups. The fused mode must be bit-identical to the slab
+        // mode and to the dense oracle — the scalar fused kernel's core
+        // contract.
         for method in ["rtn", "glvq"] {
             let (_, qt) = quantized_tensor(method, 3);
             for payload in ["fixed", "rans"] {
@@ -648,18 +818,50 @@ mod tests {
                     let x = Mat::random_normal(batch, 64, 1.0, &mut rng);
                     let want = oracle_matmul(&qt, &x);
                     for &threads in &[1usize, 4] {
-                        let sm = StreamingMatmul::new(5, threads);
-                        let mut y = Mat::zeros(batch, 32);
-                        let mut stats = DecodeStats::default();
-                        sm.matmul(&qt, &x, &mut y, &mut stats);
-                        assert_eq!(
-                            y.data, want.data,
-                            "{method}/{payload} batch={batch} threads={threads} not bit-exact"
-                        );
-                        assert_eq!(stats.macs, batch * 32 * 64);
-                        assert!(stats.code_bytes > 0);
+                        for mode in [ExecMode::Auto, ExecMode::Fused, ExecMode::Slab] {
+                            let sm = StreamingMatmul::new(5, threads).with_mode(mode);
+                            let mut y = Mat::zeros(batch, 32);
+                            let mut stats = DecodeStats::default();
+                            sm.matmul(&qt, &x, &mut y, &mut stats);
+                            assert_eq!(
+                                y.data,
+                                want.data,
+                                "{method}/{payload} batch={batch} threads={threads} \
+                                 mode={} not bit-exact",
+                                mode.name()
+                            );
+                            assert_eq!(stats.macs, batch * 32 * 64);
+                            assert!(stats.code_bytes > 0);
+                        }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_cache_warms_without_changing_bits_or_stats() {
+        // repeated matmuls through one engine cross the LUT warm
+        // threshold; the post-warm LUT decode must stay bit-identical to
+        // the first (pre-warm, direct-decode) call and charge the same
+        // DecodeStats. Slab mode is the reference.
+        let (_, qt) = quantized_tensor("glvq", 17);
+        for payload in ["fixed", "rans"] {
+            let qt = if payload == "rans" { to_entropy_tensor(&qt, 8) } else { qt.clone() };
+            let mut rng = Rng::new(18);
+            let x = Mat::random_normal(4, 64, 1.0, &mut rng);
+            let slab = StreamingMatmul::new(8, 2).with_mode(ExecMode::Slab);
+            let mut want = Mat::zeros(4, 32);
+            let mut s_want = DecodeStats::default();
+            slab.matmul(&qt, &x, &mut want, &mut s_want);
+
+            let fused = StreamingMatmul::new(8, 2); // Auto: warms its LUT cache
+            for call in 0..(kernels::LUT_WARM_CALLS + 2) {
+                let mut y = Mat::zeros(4, 32);
+                let mut s = DecodeStats::default();
+                fused.matmul(&qt, &x, &mut y, &mut s);
+                assert_eq!(y.data, want.data, "{payload}: call {call} drifted from slab mode");
+                assert_eq!(s, s_want, "{payload}: call {call} stats drifted from slab mode");
             }
         }
     }
@@ -820,12 +1022,12 @@ mod tests {
             // two "shards": one per group, each with its own engine+tables
             let e0 = StreamingMatmul::new(5, 1);
             let e1 = StreamingMatmul::new(5, 1);
-            let t0 = decode_tables(&qt, &[0]);
-            let t1 = decode_tables(&qt, &[1]);
+            let t0 = kernel_tables(&qt, &[0]);
+            let t1 = kernel_tables(&qt, &[1]);
             let mut s0 = DecodeStats::default();
             let mut s1 = DecodeStats::default();
-            let mut slabs = e0.panel_slabs(&qt, &[0], &t0, &x, &mut s0);
-            slabs.extend(e1.panel_slabs(&qt, &[1], &t1, &x, &mut s1));
+            let mut slabs = e0.panel_slabs(&qt, &[0], &t0, MatView::of(&x), &mut s0);
+            slabs.extend(e1.panel_slabs(&qt, &[1], &t1, MatView::of(&x), &mut s1));
             slabs.sort_by_key(|s| (s.gi, s.r));
             let mut got = Mat::zeros(3, 32);
             merge_slabs(&qt, &slabs, &mut got);

@@ -27,6 +27,11 @@ pub fn default_threads() -> usize {
 }
 
 /// Map `f` over `items` on `threads` workers; results in input order.
+/// The closure receives `(worker, index, item)`: `worker` is a stable id
+/// in `0..threads` identifying the thread running the call — callers key
+/// per-worker scratch to it so scratch acquisition is contention-free —
+/// and `index` is the item's position (`output[index] = f(_, index,
+/// &items[index])` no matter which worker ran it).
 /// Returns Err((index, message)) if any invocation panicked.
 pub fn parallel_map<T, R, F>(
     threads: usize,
@@ -36,7 +41,7 @@ pub fn parallel_map<T, R, F>(
 where
     T: Sync,
     R: Send,
-    F: Fn(usize, &T) -> R + Sync,
+    F: Fn(usize, usize, &T) -> R + Sync,
 {
     let n = items.len();
     let threads = threads.max(1).min(n.max(1));
@@ -46,7 +51,7 @@ where
         // worker decode without paying a scoped-spawn per call
         let mut out = Vec::with_capacity(n);
         for (i, item) in items.iter().enumerate() {
-            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item))) {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, i, item))) {
                 Ok(r) => out.push(r),
                 Err(e) => {
                     let msg = e
@@ -65,14 +70,15 @@ where
     let next = AtomicUsize::new(0);
 
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
+        let (f, slots, failure, next) = (&f, &slots, &failure, &next);
+        for w in 0..threads {
+            scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n || failure.lock().unwrap().is_some() {
                     break;
                 }
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    f(i, &items[i])
+                    f(w, i, &items[i])
                 }));
                 match result {
                     Ok(r) => {
@@ -111,7 +117,7 @@ mod tests {
     #[test]
     fn results_in_input_order() {
         let items: Vec<usize> = (0..200).collect();
-        let out = parallel_map(8, &items, |i, &x| {
+        let out = parallel_map(8, &items, |_, i, &x| {
             // stagger completion order
             if x % 7 == 0 {
                 std::thread::sleep(std::time::Duration::from_micros(200));
@@ -126,23 +132,37 @@ mod tests {
     }
 
     #[test]
+    fn worker_ids_are_bounded_by_thread_count() {
+        // worker ids are what decode engines key their scratch slots to:
+        // every id must fall in 0..threads, and with one thread it is 0
+        let items: Vec<usize> = (0..100).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let workers = parallel_map(threads, &items, |w, _, _| w).unwrap();
+            assert!(workers.iter().all(|&w| w < threads), "threads={threads}: {workers:?}");
+            if threads == 1 {
+                assert!(workers.iter().all(|&w| w == 0));
+            }
+        }
+    }
+
+    #[test]
     fn single_thread_degenerates_to_sequential() {
         let items = vec![1, 2, 3];
-        let out = parallel_map(1, &items, |_, &x| x + 1).unwrap();
+        let out = parallel_map(1, &items, |_, _, &x| x + 1).unwrap();
         assert_eq!(out, vec![2, 3, 4]);
     }
 
     #[test]
     fn empty_input_ok() {
         let items: Vec<u32> = vec![];
-        let out = parallel_map(4, &items, |_, &x| x).unwrap();
+        let out = parallel_map(4, &items, |_, _, &x| x).unwrap();
         assert!(out.is_empty());
     }
 
     #[test]
     fn worker_panic_reported_with_index() {
         let items: Vec<usize> = (0..50).collect();
-        let err = parallel_map(4, &items, |_, &x| {
+        let err = parallel_map(4, &items, |_, _, &x| {
             if x == 33 {
                 panic!("boom at {x}");
             }
@@ -156,8 +176,8 @@ mod tests {
     #[test]
     fn deterministic_results_across_thread_counts() {
         let items: Vec<usize> = (0..64).collect();
-        let a = parallel_map(1, &items, |_, &x| x * x).unwrap();
-        let b = parallel_map(7, &items, |_, &x| x * x).unwrap();
+        let a = parallel_map(1, &items, |_, _, &x| x * x).unwrap();
+        let b = parallel_map(7, &items, |_, _, &x| x * x).unwrap();
         assert_eq!(a, b);
     }
 

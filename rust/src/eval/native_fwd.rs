@@ -703,6 +703,18 @@ mod tests {
         for (a, b) in got.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
         }
+
+        // the fused decode-GEMM mode (engine default = Auto) and the
+        // classic slab mode must produce bit-identical logits end to end
+        let slab_engine = StreamingMatmul::new(8, 2).with_mode(crate::kernels::ExecMode::Slab);
+        let mut slab_lin = StreamedLinear {
+            qm: &qm,
+            store: &store,
+            engine: &slab_engine,
+            stats: DecodeStats::default(),
+        };
+        let got_slab = forward_with(&cfg, &store, &mut slab_lin, &x, 2, None).unwrap();
+        assert_eq!(got.data, got_slab.data, "fused vs slab logits not bit-identical");
         // §3.4 bound: peak decoded working set ≤ one panel (panel_rows ×
         // n_in), far below any full dequantized layer
         let max_n_in = cfg.d_model.max(cfg.d_ff);

@@ -151,7 +151,7 @@ pub fn quantize_model(
         // ---- bit allocation ----
         let alloc: Allocation = if opts.bit_allocation {
             let base = opts.target_bits.round().max(1.0) as u8;
-            let sal = parallel_map(opts.threads, &panels, |i, (pw, px)| {
+            let sal = parallel_map(opts.threads, &panels, |_, i, (pw, px)| {
                 group_salience(i, pw, px, base)
             })
             .map_err(|(i, m)| anyhow::anyhow!("salience worker {i} panicked: {m}"))?;
@@ -166,7 +166,7 @@ pub fn quantize_model(
             .enumerate()
             .map(|(i, p)| (i, p, alloc.bits[i]))
             .collect();
-        let quantized = parallel_map(opts.threads, &jobs, |_, (gi, (pw, px), bits)| {
+        let quantized = parallel_map(opts.threads, &jobs, |_, _, (gi, (pw, px), bits)| {
             let qg = quantizer.quantize(pw, px, *bits);
             let err = recon_error(pw, &qg.dequantize(), px);
             (*gi, qg, err)

@@ -1,0 +1,199 @@
+//! The fused decode–GEMM micro-kernel.
+//!
+//! One pass over the packed payload per panel: codes are expanded
+//! (through the code→vector table when one is attached, else through the
+//! per-family decoder) into an L1-resident tile of at most
+//! [`crate::kernels::tile::fused_tile_rows`] rows, and each decoded row
+//! is FMA'd against every activation row while still cache-hot. There is
+//! no panel-sized f32 slab and no second sweep — the scratch round-trip
+//! the two-pass path pays is gone.
+//!
+//! **Bit-exactness.** The scalar kernel reproduces the slab path
+//! bit-for-bit: decoded values come from the same decoder (the LUT bakes
+//! its entries with it), and the accumulation is the same c-ascending
+//! scalar dot per output element. `DecodeStats` are charged identically
+//! — including `peak_decoded`, which stays panel-granular for parity
+//! even though the fused tile residency is smaller (see ARCHITECTURE
+//! "Fused kernels"). The SIMD reduction (`simd = true`, compiled under
+//! `--features simd`) folds 8 lanes and may differ in the last ulps;
+//! it is never enabled by default.
+
+use crate::coordinator::decode_stream::{decode_codes, DecodeStats, UnstreamableDecode};
+use crate::kernels::tile::fused_tile_rows;
+use crate::kernels::{GroupTables, KernelScratch};
+use crate::linalg::matrix::MatView;
+use crate::quant::traits::{CodePayload, QuantizedGroup};
+
+/// Decode-and-multiply one panel of `g` (group-local rows
+/// `[r, r + rows)`, absolute activation columns starting at `c0`) into a
+/// partial-product slab `slab[b·rows + i] = Σ_c ŵ[r+i][c] · x[b][c0+c]`
+/// — the same contract as the slab path's `panel_slab`, produced in one
+/// fused pass. Errors with [`UnstreamableDecode`] only if a
+/// non-streamable family was misrouted here; the caller falls back to
+/// the slab path (which carries the dense whole-group fallback).
+pub fn fused_panel_slab(
+    g: &QuantizedGroup,
+    c0: usize,
+    r: usize,
+    rows: usize,
+    tables: &GroupTables,
+    x: MatView<'_>,
+    scratch: &mut KernelScratch,
+    stats: &mut DecodeStats,
+    simd: bool,
+) -> Result<Vec<f32>, UnstreamableDecode> {
+    let (n, batch) = (g.cols, x.rows);
+    let count = rows * n;
+    let mut slab = vec![0.0f32; batch * rows];
+    if count == 0 {
+        return Ok(slab);
+    }
+    let bits = g.codes.bits();
+    // a table decodes this group only if it was built for the same code
+    // width and the row length is whole blocks
+    let lut = tables.lut.as_deref().filter(|t| t.bits == bits && t.dim > 0 && n % t.dim == 0);
+
+    let KernelScratch { codes_buf, rans_scratch, row_codes, row_buf, .. } = scratch;
+
+    // rANS payloads decode chunk-granularly: materialize the whole
+    // panel's codes once (panels snap to whole chunks upstream), exactly
+    // as the slab path does, so the charged traffic stays identical.
+    // Fixed payloads are bit-addressable and unpack tile-granularly below.
+    let panel_codes = matches!(g.codes, CodePayload::Rans(_));
+    if panel_codes {
+        codes_buf.resize(count, 0);
+        match (&g.codes, tables.rans.as_ref()) {
+            (CodePayload::Rans(rc), Some(t)) => {
+                rc.decode_range_with(r * n, &mut codes_buf[..count], t, rans_scratch)
+            }
+            _ => g.codes.unpack_range_into(r * n, &mut codes_buf[..count]),
+        }
+    }
+    stats.code_bytes += g.codes.range_payload_bytes(r * n, count);
+
+    let tile_rows = fused_tile_rows(n, batch).min(rows);
+    row_buf.resize(tile_rows * n, 0.0);
+    if !panel_codes && lut.is_none() {
+        row_codes.resize(n, 0);
+    }
+
+    let mut t0 = 0usize;
+    while t0 < rows {
+        let tr = tile_rows.min(rows - t0);
+        // ---- decode `tr` rows into the L1-resident tile ----
+        for i in 0..tr {
+            let dst = &mut row_buf[i * n..(i + 1) * n];
+            if let Some(t) = lut {
+                let dim = t.dim;
+                if panel_codes {
+                    let codes = &codes_buf[(t0 + i) * n..(t0 + i + 1) * n];
+                    for (k, blk) in dst.chunks_exact_mut(dim).enumerate() {
+                        let idx = t.index_of_codes(&codes[k * dim..(k + 1) * dim]);
+                        blk.copy_from_slice(t.entry(idx));
+                    }
+                } else if let CodePayload::Fixed(p) = &g.codes {
+                    // table index read straight from the packed bit stream
+                    let base = (r + t0 + i) * n;
+                    for (k, blk) in dst.chunks_exact_mut(dim).enumerate() {
+                        let idx = p.read_code_run(base + k * dim, dim) as usize;
+                        blk.copy_from_slice(t.entry(idx));
+                    }
+                }
+            } else {
+                let codes: &[i32] = if panel_codes {
+                    &codes_buf[(t0 + i) * n..(t0 + i + 1) * n]
+                } else {
+                    // tile-granular unpack: only this row's codes are ever
+                    // materialized
+                    g.codes.unpack_range_into((r + t0 + i) * n, &mut row_codes[..n]);
+                    &row_codes[..n]
+                };
+                decode_codes(&g.side, bits, codes, dst)?;
+            }
+        }
+        // ---- FMA the tile into the slab while it is cache-hot ----
+        for b in 0..batch {
+            let xr = &x.row(b)[c0..c0 + n];
+            for i in 0..tr {
+                let w = &row_buf[i * n..(i + 1) * n];
+                slab[b * rows + t0 + i] = dot(w, xr, simd);
+            }
+        }
+        t0 += tr;
+    }
+
+    stats.weights_decoded += count;
+    // panel-granular for parity with the slab path's accounting; the
+    // true fused residency is the (smaller) tile
+    stats.peak_decoded = stats.peak_decoded.max(count);
+    stats.macs += batch * count;
+    Ok(slab)
+}
+
+/// Dot product of one decoded weight row against one activation row.
+/// Scalar: c-ascending `acc += w·x`, matching the slab path exactly.
+/// SIMD (opt-in): 8-lane vertical accumulate + horizontal fold.
+#[inline]
+fn dot(w: &[f32], x: &[f32], simd: bool) -> f32 {
+    #[cfg(feature = "simd")]
+    if simd {
+        return dot_simd(w, x);
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = simd;
+    let mut acc = 0.0f32;
+    for (a, v) in w.iter().zip(x.iter()) {
+        acc += a * v;
+    }
+    acc
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn dot_simd(w: &[f32], x: &[f32]) -> f32 {
+    use std::simd::prelude::*;
+    const LANES: usize = 8;
+    let n = w.len().min(x.len());
+    let chunks = n / LANES;
+    let mut acc = f32x8::splat(0.0);
+    for t in 0..chunks {
+        let a = f32x8::from_slice(&w[t * LANES..]);
+        let b = f32x8::from_slice(&x[t * LANES..]);
+        acc += a * b;
+    }
+    let mut s = acc.reduce_sum();
+    for j in chunks * LANES..n {
+        s += w[j] * x[j];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_dot_is_plain_ascending_accumulation() {
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        let x = [0.5f32, -1.0, 2.0, 0.25];
+        let mut want = 0.0f32;
+        for i in 0..4 {
+            want += w[i] * x[i];
+        }
+        assert_eq!(dot(&w, &x, false), want);
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_dot_matches_scalar_within_tolerance() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        for n in [1usize, 7, 8, 9, 64, 127, 512] {
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let a = dot(&w, &x, false);
+            let b = dot(&w, &x, true);
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "n={n}: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Lookup-table decode for low-bit fixed-rate lattice families.
+//!
+//! A d-dimensional block quantized at b bits has only (2^b)^d distinct
+//! code vectors; at 2–3 bits and d ≤ 8 that is at most 2^16 blocks. A
+//! [`LutTable`] enumerates every one of them through the *same* decoder
+//! the slab path uses — generation matrix, μ-law inverse and scale baked
+//! in — so fused execution replaces the per-block matvec + `exp` with a
+//! direct-indexed load (QuIP#-style fast codebook decode; see PAPERS.md).
+//! Because entries come from [`decode_codes`], LUT decode is bit-identical
+//! to direct decode by construction.
+//!
+//! The table index of a block is its packed-payload bit pattern: field j
+//! (the offset code `z_j − lo`) occupies bits `[j·b, (j+1)·b)`, exactly
+//! the order [`crate::quant::pack::PackedCodes`] stores them, so fixed
+//! payloads address the table straight from the code stream
+//! (`PackedCodes::read_code_run`) without materializing integer codes.
+//!
+//! [`decode_codes`]: crate::coordinator::decode_stream
+
+use crate::lattice::{code_space, unrank_codes};
+use crate::quant::pack::code_range;
+use crate::quant::traits::{CodePayload, QuantizedGroup, SideInfo};
+
+/// Tables are capped at 2^16 entries (bits · d ≤ 16): a 2-bit d=8 or
+/// 3-bit d=4 family fits; wider families fall back to direct fused
+/// decode. Keeps any single table ≤ 2 MiB of f32 entries.
+pub const MAX_LUT_INDEX_BITS: usize = 16;
+
+/// Direct-indexed code→decoded-vector table for one group's side info.
+pub struct LutTable {
+    /// block dimensionality d
+    pub dim: usize,
+    /// code width the index fields are read at
+    pub bits: u8,
+    /// `(2^bits)^dim · dim` decoded weights, entry-major: entry i holds
+    /// the decoded block whose packed bit pattern equals i
+    pub entries: Vec<f32>,
+}
+
+impl LutTable {
+    /// Build the table for an eligible side-info family (see
+    /// [`lut_block_dim`]); `None` if the family is ineligible or its
+    /// decoder refuses (cannot happen for eligible families).
+    pub fn build(side: &SideInfo, bits: u8) -> Option<LutTable> {
+        let _sp = crate::span!("lut_build");
+        let dim = lut_block_dim(side, bits)?;
+        let n_entries = code_space(bits, dim)?;
+        let mut entries = vec![0.0f32; n_entries * dim];
+        let mut codes = vec![0i32; dim];
+        for idx in 0..n_entries {
+            unrank_codes(idx, bits, &mut codes);
+            let out = &mut entries[idx * dim..(idx + 1) * dim];
+            crate::coordinator::decode_stream::decode_codes(side, bits, &codes, out).ok()?;
+        }
+        Some(LutTable { dim, bits, entries })
+    }
+
+    /// Decoded block for a table index.
+    #[inline]
+    pub fn entry(&self, idx: usize) -> &[f32] {
+        &self.entries[idx * self.dim..(idx + 1) * self.dim]
+    }
+
+    /// Table index of a block of signed codes (the rANS path, where codes
+    /// are already materialized): `Σ_j (z_j − lo) << (j·bits)`.
+    #[inline]
+    pub fn index_of_codes(&self, codes: &[i32]) -> usize {
+        let lo = code_range(self.bits).0;
+        let b = self.bits as usize;
+        let mut idx = 0usize;
+        for (j, &c) in codes.iter().enumerate() {
+            idx |= ((c - lo) as usize) << (j * b);
+        }
+        idx
+    }
+
+    /// Resident bytes of the entry storage.
+    pub fn bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `Some(d)` when this family gets a code→vector table: fixed-rate
+/// lattice families (learned or rotated) of block dim ≥ 2 whose index
+/// width `bits · d` fits [`MAX_LUT_INDEX_BITS`]. Uniform (d = 1) gains
+/// nothing from a table; codebook/trellis/binary are not streamable at
+/// all and never reach the fused path.
+pub fn lut_block_dim(side: &SideInfo, bits: u8) -> Option<usize> {
+    let dim = match side {
+        SideInfo::Lattice { d, .. } | SideInfo::RotatedLattice { d, .. } => *d,
+        _ => return None,
+    };
+    if dim < 2 || (bits as usize) * dim > MAX_LUT_INDEX_BITS {
+        return None;
+    }
+    Some(dim)
+}
+
+/// Entry-storage bytes a table for this family would occupy (admission
+/// check for the engine cache budget, before paying the build).
+pub fn lut_bytes_estimate(side: &SideInfo, bits: u8) -> Option<usize> {
+    let dim = lut_block_dim(side, bits)?;
+    let n = code_space(bits, dim)?;
+    Some(n * dim * std::mem::size_of::<f32>())
+}
+
+/// Content fingerprint of everything a [`LutTable`] depends on — the
+/// side-info floats, code width and shape — so the engine cache detects
+/// a different tensor reusing a cached (name, group) key and rebuilds
+/// instead of serving stale entries. FNV-1a over the exact float bits.
+pub fn group_fingerprint(g: &QuantizedGroup) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(h: &mut u64, bytes: &[u8]) {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    let mut h = FNV_OFFSET;
+    mix(&mut h, g.method.as_bytes());
+    for v in [g.rows as u64, g.cols as u64, g.bits as u64, g.codes.bits() as u64] {
+        mix(&mut h, &v.to_le_bytes());
+    }
+    match &g.side {
+        SideInfo::Lattice { d, g: gm, mu, scale } => {
+            mix(&mut h, &(*d as u64).to_le_bytes());
+            for f in gm {
+                mix(&mut h, &f.to_bits().to_le_bytes());
+            }
+            mix(&mut h, &mu.to_bits().to_le_bytes());
+            mix(&mut h, &scale.to_bits().to_le_bytes());
+        }
+        SideInfo::RotatedLattice { d, scale, sign_seed } => {
+            mix(&mut h, &(*d as u64).to_le_bytes());
+            mix(&mut h, &scale.to_bits().to_le_bytes());
+            mix(&mut h, &sign_seed.to_le_bytes());
+        }
+        // non-lattice families never build tables; shape + bits suffice
+        _ => {}
+    }
+    if let CodePayload::Fixed(p) = &g.codes {
+        mix(&mut h, &(p.n as u64).to_le_bytes());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::PackedCodes;
+    use crate::util::rng::Rng;
+
+    fn lattice_side(d: usize, seed: u64) -> SideInfo {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0.0f32; d * d];
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = 0.15 * rng.normal_f32() + if i % (d + 1) == 0 { 0.4 } else { 0.0 };
+        }
+        SideInfo::Lattice { d, g, mu: 87.0, scale: 0.031 }
+    }
+
+    #[test]
+    fn eligibility_matrix() {
+        assert_eq!(lut_block_dim(&lattice_side(8, 1), 2), Some(8)); // 16 index bits
+        assert_eq!(lut_block_dim(&lattice_side(4, 1), 3), Some(4)); // 12 index bits
+        assert_eq!(lut_block_dim(&lattice_side(8, 1), 3), None); // 24 bits: too wide
+        assert_eq!(lut_block_dim(&lattice_side(1, 1), 2), None); // scalar blocks
+        assert_eq!(lut_block_dim(&SideInfo::Uniform { scale: 1.0, zero: 0.0 }, 2), None);
+        assert_eq!(
+            lut_block_dim(&SideInfo::RotatedLattice { d: 8, scale: 0.5, sign_seed: 3 }, 2),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn table_entries_match_direct_decode_bitwise() {
+        for (d, bits) in [(4usize, 2u8), (4, 3), (8, 2)] {
+            let side = lattice_side(d, 7 + d as u64);
+            let t = LutTable::build(&side, bits).expect("eligible");
+            assert_eq!(t.entries.len(), code_space(bits, d).unwrap() * d);
+            let (lo, hi) = code_range(bits);
+            let mut rng = Rng::new(11);
+            for _ in 0..200 {
+                let codes: Vec<i32> =
+                    (0..d).map(|_| rng.below((hi - lo + 1) as usize) as i32 + lo).collect();
+                let mut want = vec![0.0f32; d];
+                crate::coordinator::decode_stream::decode_codes(&side, bits, &codes, &mut want)
+                    .unwrap();
+                let got = t.entry(t.index_of_codes(&codes));
+                assert_eq!(got, &want[..], "d={d} bits={bits} codes={codes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_of_codes_matches_packed_bit_pattern() {
+        // the identity the fixed-payload fast path relies on: the table
+        // index of a block equals its raw packed-field run
+        let (d, bits) = (8usize, 2u8);
+        let (lo, hi) = code_range(bits);
+        let mut rng = Rng::new(5);
+        let codes: Vec<i32> =
+            (0..4 * d).map(|_| rng.below((hi - lo + 1) as usize) as i32 + lo).collect();
+        let packed = PackedCodes::pack(&codes, bits);
+        let side = lattice_side(d, 2);
+        let t = LutTable::build(&side, bits).unwrap();
+        for blk in 0..4 {
+            let want = t.index_of_codes(&codes[blk * d..(blk + 1) * d]);
+            assert_eq!(packed.read_code_run(blk * d, d) as usize, want);
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_side_info_content() {
+        let g = |seed| QuantizedGroup {
+            method: "glvq",
+            bits: 2,
+            rows: 8,
+            cols: 16,
+            codes: PackedCodes::pack(&vec![0i32; 128], 2).into(),
+            side: lattice_side(8, seed),
+        };
+        let a = group_fingerprint(&g(1));
+        assert_eq!(a, group_fingerprint(&g(1)), "fingerprint must be deterministic");
+        assert_ne!(a, group_fingerprint(&g(2)), "different G must change the fingerprint");
+    }
+
+    #[test]
+    fn bytes_estimate_matches_built_table() {
+        let side = lattice_side(4, 3);
+        let t = LutTable::build(&side, 3).unwrap();
+        assert_eq!(lut_bytes_estimate(&side, 3), Some(t.bytes()));
+    }
+}

@@ -1,0 +1,220 @@
+//! Fused decode–GEMM kernel layer.
+//!
+//! The PR-2 slab path ([`crate::coordinator::decode_stream`]) runs every
+//! hot matmul in two passes: decode a group-panel into an f32 scratch
+//! slab, then multiply it — two sweeps over the panel and a scratch
+//! round-trip per call. The GLVQ decoder is itself a tiny matvec
+//! (ŵ = F⁻¹(G z) per d-block), so the decode folds into the GEMM tile:
+//! [`fused::fused_panel_slab`] unpacks codes, expands them through the
+//! per-group generation matrix + μ-law inverse (or a precomputed
+//! code→vector table), and FMAs straight into the output accumulators in
+//! one pass over the packed payload. Tiles are cache-blocked ([`tile`])
+//! so the decoded weights never leave L1/L2 between decode and use.
+//!
+//! Three execution layers, selected per group at runtime:
+//!
+//! - **LUT fused** ([`lut`]): 2–3-bit fixed-rate lattice families index a
+//!   direct table of all (2^bits)^d decoded blocks — generation matrix,
+//!   μ-law expansion and scale baked in at build time, so the hot loop is
+//!   a load + copy + FMA. Tables build once beside the rANS
+//!   `DecodeTable`s and are cached per engine after a warm-up.
+//! - **Direct fused** ([`fused`]): everything streamable that the table
+//!   cannot cover decodes row-at-a-time into an L1-resident tile and
+//!   multiplies immediately.
+//! - **Slab fallback**: non-streamable families (trellis/binary/codebook)
+//!   and [`ExecMode::Slab`] keep the original two-pass path, so shard /
+//!   pipeline executors and `DecodeStats` accounting work unchanged.
+//!
+//! **Bit-exactness contract.** The scalar fused path preserves the slab
+//! path's per-element multiply-accumulate order: logits and
+//! `DecodeStats` are bit-identical to the slab path (tested in
+//! `tests/fused_parity.rs`). The SIMD path (`--features simd`, runtime
+//! opt-in via [`StreamingMatmul::with_simd`]/`GLVQ_SIMD=1`/`serve
+//! --fused`) reorders the dot-product reduction into 8 lanes; it is
+//! token-identical on the generation parity suites with elementwise
+//! tolerance `|Δ| ≤ 1e-4 · (1 + |y|)`.
+//!
+//! [`StreamingMatmul::with_simd`]: crate::coordinator::decode_stream::StreamingMatmul::with_simd
+
+pub mod fused;
+pub mod lut;
+pub mod tile;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+use crate::entropy::histogram::DecodeTable;
+
+/// How [`crate::coordinator::decode_stream::StreamingMatmul`] executes
+/// streamable group-panels. Non-streamable side-info families always take
+/// the whole-group dense fallback regardless of mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Fused decode–GEMM for streamable families, slab/dense fallback
+    /// elsewhere — the default; bit-identical to `Slab`.
+    Auto,
+    /// Fused wherever streamable (what `serve --fused` forces). Same
+    /// dispatch as `Auto`; the explicit variant records operator intent
+    /// and survives an environment that said `Slab`.
+    Fused,
+    /// The original two-pass decode-then-multiply slab path everywhere —
+    /// the reference the fused paths are tested bit-identical against.
+    Slab,
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Auto => "auto",
+            ExecMode::Fused => "fused",
+            ExecMode::Slab => "slab",
+        }
+    }
+}
+
+/// Engine-level LUT cache: tables build only after a (tensor, group) has
+/// been decoded this many times through one engine, so one-shot calls
+/// (quantization-time evals, tests) never pay a table build.
+pub const LUT_WARM_CALLS: usize = 2;
+
+/// Hard ceiling on the bytes of code→vector tables one engine caches.
+pub const LUT_CACHE_BUDGET_BYTES: usize = 512 << 20;
+
+// Process-wide overrides (set by the CLI before engines are built) layered
+// over the environment: override > env > default. Engines snapshot the
+// resolved values at construction.
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0); // 0 unset, 1 auto, 2 fused, 3 slab
+static SIMD_OVERRIDE: AtomicU8 = AtomicU8::new(0); // 0 unset, 1 on, 2 off
+
+/// Force an execution mode for every engine constructed after this call
+/// (`None` restores env/default resolution). `serve --fused` maps here.
+pub fn set_mode_override(mode: Option<ExecMode>) {
+    let v = match mode {
+        None => 0,
+        Some(ExecMode::Auto) => 1,
+        Some(ExecMode::Fused) => 2,
+        Some(ExecMode::Slab) => 3,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Execution mode for new engines: process override, else the
+/// `GLVQ_FUSED` environment variable (`0`/`slab` → slab, `1`/`fused` →
+/// fused), else [`ExecMode::Auto`].
+pub fn resolve_mode() -> ExecMode {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return ExecMode::Auto,
+        2 => return ExecMode::Fused,
+        3 => return ExecMode::Slab,
+        _ => {}
+    }
+    match std::env::var("GLVQ_FUSED").ok().as_deref() {
+        Some("0") | Some("slab") | Some("false") => ExecMode::Slab,
+        Some("1") | Some("fused") | Some("true") => ExecMode::Fused,
+        _ => ExecMode::Auto,
+    }
+}
+
+/// Force SIMD lane reduction on/off for new engines (`None` restores
+/// env/default). Only effective when built with `--features simd`.
+pub fn set_simd_override(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    SIMD_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Whether new engines use the SIMD dot reduction: requires the `simd`
+/// feature, then process override, then `GLVQ_SIMD=1`. Default off even
+/// when compiled in, so default-mode results stay bit-identical to the
+/// scalar path under every feature configuration.
+pub fn resolve_simd() -> bool {
+    if !cfg!(feature = "simd") {
+        return false;
+    }
+    match SIMD_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return true,
+        2 => return false,
+        _ => {}
+    }
+    matches!(std::env::var("GLVQ_SIMD").ok().as_deref(), Some("1") | Some("true"))
+}
+
+/// Kill switch for the code→vector decode tables (`GLVQ_LUT=0`): fused
+/// execution then always decodes directly. Tables change nothing
+/// numerically — entries are produced by the same decoder — so this is a
+/// memory/debug knob, not a correctness one.
+pub fn lut_enabled() -> bool {
+    !matches!(std::env::var("GLVQ_LUT").ok().as_deref(), Some("0") | Some("false"))
+}
+
+/// Per-group decode acceleration structures, built once per batch (or
+/// once per shard worker) and shared read-only across decode threads:
+/// the rANS symbol table for entropy payloads plus, when the family is
+/// eligible and warm, the fused kernel's code→vector table.
+#[derive(Default)]
+pub struct GroupTables {
+    /// rANS decode table (entropy-coded payloads only)
+    pub rans: Option<DecodeTable>,
+    /// direct-indexed code→decoded-block table ([`lut::LutTable`])
+    pub lut: Option<Arc<lut::LutTable>>,
+}
+
+/// Per-worker scratch buffers, reused across panels, groups and batches
+/// (allocation-free steady state). One instance per decode worker, each
+/// worker locking only its own slot.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// decoded integer codes for one panel
+    pub codes_buf: Vec<i32>,
+    /// decoded f32 weights for one panel (slab path)
+    pub panel: Vec<f32>,
+    /// lattice-decode scratch: codes as f32 blocks (+½) for the blocked
+    /// matmul path (§Perf: scalar per-block loops → one (B×d)@(d×d) GEMM)
+    pub zf: Vec<f32>,
+    /// rANS chunk-decode scratch (reused across panels and groups)
+    pub rans_scratch: Vec<i32>,
+    /// fused path: one row of integer codes (tile-granular unpack)
+    pub row_codes: Vec<i32>,
+    /// fused path: the L1-resident decoded tile
+    pub row_buf: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_override_wins_over_default() {
+        // note: tests run in one process — restore the unset state so
+        // other tests constructing engines see default resolution
+        set_mode_override(Some(ExecMode::Slab));
+        assert_eq!(resolve_mode(), ExecMode::Slab);
+        set_mode_override(Some(ExecMode::Fused));
+        assert_eq!(resolve_mode(), ExecMode::Fused);
+        set_mode_override(None);
+        assert_eq!(resolve_mode(), ExecMode::Auto);
+    }
+
+    #[test]
+    fn simd_defaults_off_for_bit_exactness() {
+        // default resolution (no override, no env) must be scalar under
+        // every feature configuration — SIMD is strictly opt-in, so the
+        // bit-exact oracle suites hold with and without `--features simd`.
+        // (Deliberately does not flip the global override: tests share the
+        // process, and a transient SIMD default would race the parity
+        // suites. Mode overrides are safe to flip — every mode is
+        // bit-identical — so the test above exercises that path.)
+        let env_on = matches!(std::env::var("GLVQ_SIMD").ok().as_deref(), Some("1") | Some("true"));
+        assert!(!resolve_simd() || env_on);
+    }
+
+    #[test]
+    fn mode_names_are_stable() {
+        assert_eq!(ExecMode::Auto.name(), "auto");
+        assert_eq!(ExecMode::Fused.name(), "fused");
+        assert_eq!(ExecMode::Slab.name(), "slab");
+    }
+}

@@ -1,0 +1,78 @@
+//! Cache-blocking geometry for the fused decode–GEMM kernel.
+//!
+//! The fused kernel decodes a tile of weight rows into a scratch buffer
+//! and immediately FMAs it against every activation row, so the decoded
+//! weights are consumed while still cache-hot and never round-trip
+//! through memory. This module picks the tile height: the decoded tile
+//! itself must stay inside (a conservative share of) L1d, and tile +
+//! activation panel together inside L2, for any group width.
+//!
+//! Sizes are deliberately static: the repo targets portable scalar/SIMD
+//! Rust, and 32 KiB L1d / 256 KiB-plus L2 per core is the floor of every
+//! deployment target. Halving the budgets leaves room for the code
+//! stream, output slab and stack traffic sharing the same caches.
+
+/// Decoded-tile budget inside L1d (half of a 32 KiB L1d).
+pub const L1_TILE_BYTES: usize = 16 * 1024;
+
+/// Decoded tile + activation panel budget inside L2 (conservative share
+/// of a 256 KiB L2).
+pub const L2_TILE_BYTES: usize = 192 * 1024;
+
+/// Rows of decoded weights the fused kernel materializes per tile for a
+/// group `n_cols` wide under an activation batch of `batch` rows.
+/// Always ≥ 1 (a single row may exceed the L1 share for very wide
+/// groups; it still streams row-at-a-time, the minimum possible
+/// residency).
+pub fn fused_tile_rows(n_cols: usize, batch: usize) -> usize {
+    let row_bytes = n_cols.max(1) * std::mem::size_of::<f32>();
+    let l1_rows = L1_TILE_BYTES / row_bytes;
+    // keep the x rows this tile is multiplied against co-resident in L2
+    let act_bytes = batch.max(1).saturating_mul(row_bytes);
+    let l2_rows = L2_TILE_BYTES.saturating_sub(act_bytes) / row_bytes;
+    l1_rows.min(l2_rows).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_always_at_least_one_row() {
+        for n in [1usize, 8, 64, 512, 4096, 1 << 16] {
+            for batch in [1usize, 16, 256] {
+                assert!(fused_tile_rows(n, batch) >= 1, "n={n} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_respects_l1_budget_when_a_row_fits() {
+        for n in [8usize, 64, 128, 512, 2048] {
+            let rows = fused_tile_rows(n, 1);
+            if n * 4 <= L1_TILE_BYTES {
+                assert!(rows * n * 4 <= L1_TILE_BYTES, "n={n} rows={rows}");
+            } else {
+                assert_eq!(rows, 1, "oversized rows must stream one at a time");
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_batches_shrink_the_tile_not_the_floor() {
+        let wide = fused_tile_rows(512, 1);
+        let batched = fused_tile_rows(512, 64);
+        assert!(batched <= wide);
+        assert!(batched >= 1);
+    }
+
+    #[test]
+    fn tile_monotone_in_group_width() {
+        let mut prev = usize::MAX;
+        for n in [8usize, 32, 128, 512, 2048] {
+            let rows = fused_tile_rows(n, 4);
+            assert!(rows <= prev, "tile rows must not grow with group width");
+            prev = rows;
+        }
+    }
+}

@@ -65,6 +65,33 @@ pub trait LatticeEncoder {
     fn name(&self) -> &'static str;
 }
 
+/// Size of the code space a `bits`-wide, `d`-dimensional block spans —
+/// (2^bits)^d distinct code vectors — when it fits a `usize` index.
+/// The fused kernel's code→vector tables
+/// ([`crate::kernels::lut::LutTable`]) are direct-indexed over exactly
+/// this space.
+pub fn code_space(bits: u8, d: usize) -> Option<usize> {
+    let total = (bits as usize).checked_mul(d)?;
+    if total >= usize::BITS as usize {
+        return None;
+    }
+    Some(1usize << total)
+}
+
+/// Write the `idx`-th code block into `out` (one signed code per
+/// coordinate): field j of the index, bits `[j·bits, (j+1)·bits)`, holds
+/// the offset code `z_j − lo` — the same LSB-first field order
+/// [`crate::quant::pack::PackedCodes`] packs, so ranking/unranking
+/// round-trips through the packed payload's raw bit patterns.
+pub fn unrank_codes(idx: usize, bits: u8, out: &mut [i32]) {
+    let lo = crate::quant::pack::code_range(bits).0;
+    let b = bits as usize;
+    let mask = (1usize << b) - 1;
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = ((idx >> (j * b)) & mask) as i32 + lo;
+    }
+}
+
 /// Quantization error ||y - G z||₂ for a given assignment.
 pub fn encode_error(lat: &GenLattice, y: &[f32], z: &[f32]) -> f32 {
     let rec = lat.decode(z);
@@ -84,6 +111,37 @@ mod tests {
         let lat = GenLattice::scaled_identity(4, 0.5);
         let z = vec![1.0, -2.0, 0.0, 3.0];
         assert_eq!(lat.decode(&z), vec![0.5, -1.0, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn code_space_counts_and_guards_overflow() {
+        assert_eq!(code_space(2, 8), Some(1 << 16));
+        assert_eq!(code_space(3, 4), Some(1 << 12));
+        // 8 bits × d=8 = 64 index bits: does not fit a usize index
+        assert_eq!(code_space(8, 8), None);
+        assert_eq!(code_space(1, 1), Some(2));
+    }
+
+    #[test]
+    fn unrank_enumerates_every_block_exactly_once() {
+        let (bits, d) = (2u8, 3usize);
+        let space = code_space(bits, d).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        let mut codes = vec![0i32; d];
+        let (lo, hi) = crate::quant::pack::code_range(bits);
+        for idx in 0..space {
+            unrank_codes(idx, bits, &mut codes);
+            assert!(codes.iter().all(|&c| c >= lo && c <= hi), "{codes:?}");
+            // re-rank: field j is (c_j - lo) << (j*bits)
+            let rank: usize = codes
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| ((c - lo) as usize) << (j * bits as usize))
+                .sum();
+            assert_eq!(rank, idx);
+            assert!(seen.insert(codes.clone()), "duplicate block {codes:?}");
+        }
+        assert_eq!(seen.len(), space);
     }
 
     #[test]

@@ -33,6 +33,11 @@
 //! `ARCHITECTURE.md` (module map + paper-section index) and `FORMAT.md`
 //! (the byte-level `.glvq` container specification).
 
+// Portable SIMD for the fused decode-GEMM kernels (kernels::fused),
+// nightly-only behind the `simd` cargo feature; the scalar fused path is
+// always compiled and remains the default.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod util;
 pub mod obs;
 pub mod linalg;
@@ -48,6 +53,7 @@ pub mod salience;
 pub mod glvq;
 pub mod baselines;
 pub mod runtime;
+pub mod kernels;
 pub mod coordinator;
 pub mod serving;
 pub mod shard;

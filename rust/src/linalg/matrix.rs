@@ -178,6 +178,35 @@ impl Mat {
     }
 }
 
+/// Borrowed row-major matrix view — the shape of [`Mat`] without the
+/// ownership. The streaming/fused decode engines take activations as a
+/// `MatView` so the batch-1 hot path can pass a bare `&[f32]` without
+/// cloning it into a fresh `Mat` first.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    /// View an owned matrix.
+    pub fn of(m: &'a Mat) -> MatView<'a> {
+        MatView { rows: m.rows, cols: m.cols, data: &m.data }
+    }
+
+    /// View a borrowed slice as a (rows × cols) matrix.
+    pub fn from_slice(rows: usize, cols: usize, data: &'a [f32]) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
 /// C = A @ B into a preallocated C (zeroed by caller or overwritten here).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);

@@ -16,4 +16,4 @@ pub mod matrix;
 pub mod spectral;
 pub mod stats;
 
-pub use matrix::Mat;
+pub use matrix::{Mat, MatView};

@@ -88,8 +88,8 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
   train     --model s|m|l --steps N --lr F --dir runs [--artifacts DIR]
   eval      --model s|m --method M --bits B [--zeroshot]
   serve     --model s|m [--quantized METHOD --bits B] [--streaming]
-            [--shards N] [--pipeline P] [--replicas R] [--threads N]
-            [--panel-rows R] [--kv-cache] [--kv-bits B] [--kv-page R]
+            [--fused] [--shards N] [--pipeline P] [--replicas R]
+            [--threads N] [--panel-rows R] [--kv-cache] [--kv-bits B] [--kv-page R]
             [--kv-max-pages N] [--prefix-share]
             [--continuous] [--max-batch B] [--prefill-chunk C]
             [--max-tokens-in-flight T] [--max-queue Q] [--speculate K]
@@ -106,6 +106,15 @@ const USAGE: &str = "usage: glvq <gen-data|train|quantize|eval|serve|exp|info> [
                batched StreamingMatmul engine: every linear layer decodes
                panel-by-panel per batch, no full dequantized layer is ever
                materialized (implies --quantized, default glvq-8d)
+  --fused      pin the fused decode-GEMM execution mode for every decode
+               engine in this process: lattice points decode straight
+               into the accumulation loop (tiled, LUT-accelerated for
+               2-3-bit lattice families) instead of through a panel
+               buffer, and SIMD lane reduction is enabled when compiled
+               in (--features simd). Default (no flag) is Auto, which
+               already fuses eligible families; --fused 0/GLVQ_FUSED=0
+               forces the classic slab path. Scalar fused output is
+               bit-identical to slab mode
   --threads    decode worker threads for --streaming (default: cores - 1);
                with --shards, split across the shard workers (rounded up,
                so N shards get ceil(threads/N) decode threads each)
@@ -349,6 +358,20 @@ fn main() -> Result<()> {
             }
             let mut ws = Workspace::new(&artifacts, &dir)?;
             let streaming = args.flags.get("streaming").is_some_and(|v| v != "false");
+            // --fused pins the fused decode-GEMM mode (and opts into SIMD
+            // when compiled in) for every engine constructed from here on;
+            // --fused 0 forces the classic slab path instead
+            let fused = args.flags.get("fused").map(|v| v != "false" && v != "0");
+            match fused {
+                Some(true) => {
+                    glvq::kernels::set_mode_override(Some(glvq::kernels::ExecMode::Fused));
+                    glvq::kernels::set_simd_override(Some(true));
+                }
+                Some(false) => {
+                    glvq::kernels::set_mode_override(Some(glvq::kernels::ExecMode::Slab));
+                }
+                None => {}
+            }
             let shards = args.get_usize("shards", 0);
             let pipeline = args.get_usize("pipeline", 1).max(1);
             let replicas = args.get_usize("replicas", 1).max(1);
@@ -583,7 +606,7 @@ fn main() -> Result<()> {
             } else {
                 Front::Single(engines.pop().expect("one engine"))
             };
-            info!("serving model {model} (quantized={method}, streaming={streaming}, shards={shards}, pipeline={pipeline}, replicas={replicas}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}, speculate={spec_k}); type: gen <prompt> | score <p> | session <system> | say <user> | quit");
+            info!("serving model {model} (quantized={method}, streaming={streaming}, mode={}, shards={shards}, pipeline={pipeline}, replicas={replicas}, kv-cache={kv_cache}, prefix-share={prefix_share}, continuous={continuous}, speculate={spec_k}); type: gen <prompt> | score <p> | session <system> | say <user> | quit", glvq::kernels::resolve_mode().name());
             let stdin = std::io::stdin();
             let mut line = String::new();
             let mut session: Option<u64> = None;

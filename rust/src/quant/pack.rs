@@ -96,6 +96,30 @@ impl PackedCodes {
         }
     }
 
+    /// Read `count` consecutive b-bit fields starting at code `start` as
+    /// one little-endian integer: field j (the offset code `c_j − lo`)
+    /// occupies bits `[j·b, (j+1)·b)` of the result — the raw bit pattern
+    /// of the run as stored. This is the fused kernel's table index: a
+    /// d-block's code→vector LUT entry is addressed by exactly this value,
+    /// so lookup decode reads the payload without materializing signed
+    /// codes. `count·bits` must be ≤ 32.
+    #[inline]
+    pub fn read_code_run(&self, start: usize, count: usize) -> u32 {
+        let b = self.bits as usize;
+        let total = count * b;
+        debug_assert!(total > 0 && total <= 32, "run of {count} {b}-bit fields exceeds 32 bits");
+        debug_assert!(start + count <= self.n);
+        let bitpos = start * b;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        // gather up to 8 bytes: a 32-bit run at a 7-bit offset spans ≤ 5
+        let mut v = 0u64;
+        for (k, &x) in self.data[byte..self.data.len().min(byte + 8)].iter().enumerate() {
+            v |= (x as u64) << (8 * k);
+        }
+        ((v >> off) & ((1u64 << total) - 1)) as u32
+    }
+
     pub fn payload_bytes(&self) -> usize {
         self.data.len()
     }
@@ -145,6 +169,46 @@ mod tests {
             packed.unpack_range_into(start, &mut out);
             assert_eq!(&out[..], &codes[start..start + len]);
         });
+    }
+
+    #[test]
+    fn code_run_equals_refolded_unpacked_fields() {
+        // read_code_run(start, count) must equal the little-endian fold of
+        // the `count` unpacked offset codes — at every bit alignment
+        proptest(60, |rig| {
+            let bits = rig.usize_in(1, 8) as u8;
+            let (lo, hi) = code_range(bits);
+            let n = rig.usize_in(1, 120);
+            let codes: Vec<i32> = (0..n)
+                .map(|_| rig.usize_in(0, (hi - lo) as usize) as i32 + lo)
+                .collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            let max_count = (32 / bits as usize).min(n);
+            let count = rig.usize_in(1, max_count);
+            let start = rig.usize_in(0, n - count);
+            let got = packed.read_code_run(start, count);
+            let want: u64 = codes[start..start + count]
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| ((c - lo) as u64) << (j * bits as usize))
+                .sum();
+            assert_eq!(got as u64, want, "bits={bits} start={start} count={count}");
+        });
+    }
+
+    #[test]
+    fn code_run_reads_tail_of_payload() {
+        // the last run ends flush with the payload; the byte gather must
+        // not read past data.len()
+        let codes = vec![1i32, -2, 0, 1, -1];
+        let p = PackedCodes::pack(&codes, 3);
+        let want: u64 = codes
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| ((c + 4) as u64) << (3 * j))
+            .sum();
+        assert_eq!(p.read_code_run(0, 5) as u64, want);
+        assert_eq!(p.read_code_run(4, 1) as u64, (codes[4] + 4) as u64);
     }
 
     #[test]

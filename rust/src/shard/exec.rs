@@ -8,7 +8,8 @@
 //!   `parallel_map` runs inline — no per-call thread spawn);
 //! - its own expanded rANS decode tables, built **once** per tensor on
 //!   first touch and reused for every subsequent batch (the single-engine
-//!   path rebuilds them every call).
+//!   path rebuilds them every call), upgraded in place with fused
+//!   code→vector LUTs once the tensor crosses the warm-call threshold.
 //!
 //! A `matmul` call broadcasts the activation batch to every worker,
 //! gathers their per-panel partial-product slabs, and reduces them in
@@ -32,11 +33,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::decode_stream::{
-    decode_tables, merge_slabs, DecodeStats, PanelSlab, StreamingMatmul,
+    attach_luts, kernel_tables, merge_slabs, DecodeStats, PanelSlab, StreamingMatmul,
 };
-use crate::entropy::histogram::DecodeTable;
 use crate::eval::native_fwd::{DenseLinear, LinearOp};
-use crate::linalg::Mat;
+use crate::kernels::{GroupTables, LUT_WARM_CALLS};
+use crate::linalg::{Mat, MatView};
 use crate::quant::format::QuantizedModel;
 use crate::tensor::TensorStore;
 
@@ -114,8 +115,10 @@ fn worker_loop(
     engine: StreamingMatmul,
     rx: mpsc::Receiver<Job>,
 ) {
-    // decode tables per tensor, expanded once for the owned groups only
-    let mut tables: Vec<Option<Vec<Option<DecodeTable>>>> =
+    // decode tables per tensor, expanded once for the owned groups only;
+    // the touch counter upgrades hot tensors with fused code→vector LUTs
+    // once they cross the warm threshold (same policy as the engine cache)
+    let mut tables: Vec<Option<(usize, Vec<GroupTables>)>> =
         (0..qm.tensors.len()).map(|_| None).collect();
     while let Ok(job) = rx.recv() {
         match job {
@@ -127,11 +130,15 @@ fn worker_loop(
                 let qt = &qm.tensors[tensor];
                 let owned = &plan.tensors[tensor].owners[shard];
                 if tables[tensor].is_none() {
-                    tables[tensor] = Some(decode_tables(qt, owned));
+                    tables[tensor] = Some((0, kernel_tables(qt, owned)));
                 }
-                let tb = tables[tensor].as_ref().expect("tables just built");
+                let (touches, tb) = tables[tensor].as_mut().expect("tables just built");
+                *touches += 1;
+                if *touches == LUT_WARM_CALLS {
+                    attach_luts(qt, owned, tb);
+                }
                 let mut stats = DecodeStats::default();
-                let slabs = engine.panel_slabs(qt, owned, tb, &x, &mut stats);
+                let slabs = engine.panel_slabs(qt, owned, tb, MatView::of(&x), &mut stats);
                 let busy_ns = t0.elapsed().as_nanos() as u64;
                 // a dropped receiver just means the coordinator gave up on
                 // this call; the worker stays alive for the next job

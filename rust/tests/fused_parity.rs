@@ -1,0 +1,181 @@
+//! Integration: fused decode-GEMM kernel parity — the fused execution
+//! mode must be **bit-identical** (outputs and DecodeStats) to the
+//! classic decode-then-FMA slab path for every side-info family, both
+//! payload encodings, every thread count and batch size, before and
+//! after the engine's LUT cache warms. The `simd` feature additionally
+//! gets a documented-tolerance + token-identity check (SIMD lane
+//! reduction reorders the dot-product sum, so bitwise equality is not
+//! promised there).
+
+use glvq::baselines;
+use glvq::config::GlvqConfig;
+use glvq::coordinator::decode_stream::{DecodeStats, StreamingMatmul};
+use glvq::glvq::optimizer::GlvqGroupQuantizer;
+use glvq::kernels::{ExecMode, LUT_WARM_CALLS};
+use glvq::linalg::Mat;
+use glvq::quant::format::QuantizedTensor;
+use glvq::quant::traits::GroupQuantizer;
+use glvq::util::rng::Rng;
+
+/// Quantize a 32×64 weight tensor (two 32-col groups) with the given
+/// method, covering one side-info family per method name.
+fn build(method: &str, bits: u8, seed: u64) -> QuantizedTensor {
+    let mut rng = Rng::new(seed);
+    let wt = Mat::random_normal(32, 64, 0.05, &mut rng);
+    let mut groups = Vec::new();
+    for gi in 0..2 {
+        let panel = wt.slice(0, 32, gi * 32, (gi + 1) * 32);
+        let xc = Mat::random_normal(32, 16, 1.0, &mut rng);
+        let qg = match method {
+            "glvq-8d" => {
+                let mut cfg = GlvqConfig::default();
+                cfg.lattice_dim = 8;
+                cfg.group_size = 32;
+                cfg.iters = 4;
+                GlvqGroupQuantizer::new(cfg).quantize(&panel, &xc, bits)
+            }
+            _ => baselines::by_name(method).expect(method).quantize(&panel, &xc, bits),
+        };
+        groups.push((0usize, gi * 32, qg));
+    }
+    QuantizedTensor { name: format!("{method}_b{bits}"), rows: 32, cols: 64, groups }
+}
+
+/// Losslessly re-encode every group payload with rANS (5 rows per chunk
+/// — deliberately misaligned with the 5-row panels' ragged tail).
+fn to_entropy(qt: &QuantizedTensor) -> QuantizedTensor {
+    let mut out = qt.clone();
+    for (_, _, g) in &mut out.groups {
+        g.codes = g.codes.to_entropy(g.cols * 5, 4);
+    }
+    out
+}
+
+#[test]
+fn fused_mode_is_bitwise_identical_to_slab_across_families() {
+    // (method → side-info family, bits). glvq-8d@2 is LUT-eligible
+    // (8·2 = 16 index bits); glvq-8d@4 exercises the fused non-LUT path;
+    // kmeans_vq / tcq / binary cannot stream and must take the identical
+    // whole-group fallback in both modes.
+    let cases: &[(&str, u8)] = &[
+        ("rtn", 2),
+        ("glvq-8d", 2),
+        ("glvq-8d", 4),
+        ("quip_lite", 2),
+        ("kmeans_vq", 2),
+        ("tcq", 2),
+        ("binary", 1),
+    ];
+    for &(method, bits) in cases {
+        let qt_fixed = build(method, bits, 7);
+        for payload in ["fixed", "rans"] {
+            let qt = if payload == "rans" { to_entropy(&qt_fixed) } else { qt_fixed.clone() };
+            for &threads in &[1usize, 2, 4] {
+                for &batch in &[1usize, 4, 16] {
+                    let mut rng = Rng::new(9);
+                    let x = Mat::random_normal(batch, 64, 1.0, &mut rng);
+
+                    let slab = StreamingMatmul::new(5, threads).with_mode(ExecMode::Slab);
+                    let mut ys = Mat::zeros(batch, 32);
+                    let mut ss = DecodeStats::default();
+                    slab.matmul(&qt, &x, &mut ys, &mut ss);
+
+                    // one engine called past its LUT warm threshold:
+                    // pre-warm calls decode directly, post-warm through
+                    // the code→vector table — every call must match
+                    let fused = StreamingMatmul::new(5, threads).with_mode(ExecMode::Fused);
+                    for call in 0..LUT_WARM_CALLS + 1 {
+                        let mut yf = Mat::zeros(batch, 32);
+                        let mut sf = DecodeStats::default();
+                        fused.matmul(&qt, &x, &mut yf, &mut sf);
+                        let ctx = format!(
+                            "{method}/b{bits}/{payload} threads={threads} batch={batch} call={call}"
+                        );
+                        assert_eq!(yf.data, ys.data, "{ctx}: fused output != slab output");
+                        assert_eq!(sf, ss, "{ctx}: fused stats != slab stats");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn matvec_into_is_the_exact_batch1_matmul() {
+    // the allocation-free matvec path (borrowed x, caller-owned y) must
+    // be bit-identical to a 1-row matmul in both modes, with a reused
+    // output buffer across calls
+    for payload in ["fixed", "rans"] {
+        let qt = build("glvq-8d", 2, 13);
+        let qt = if payload == "rans" { to_entropy(&qt) } else { qt };
+        let mut rng = Rng::new(14);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        for mode in [ExecMode::Fused, ExecMode::Slab] {
+            let engine = StreamingMatmul::new(5, 2).with_mode(mode);
+            let xm = Mat::from_vec(1, 64, x.clone());
+            let mut ym = Mat::zeros(1, 32);
+            let mut sm = DecodeStats::default();
+            engine.matmul(&qt, &xm, &mut ym, &mut sm);
+
+            let mut y = vec![999.0f32; 32]; // stale contents must be overwritten
+            let mut sv = DecodeStats::default();
+            engine.matvec_into(&qt, &x, &mut y, &mut sv);
+            assert_eq!(y, ym.data, "{payload}/{}: matvec_into != batch-1 matmul", mode.name());
+            assert_eq!(sv, sm, "{payload}/{}: stats drifted", mode.name());
+        }
+    }
+}
+
+/// SIMD contract: |fused_simd − slab| ≤ 1e-4 · (1 + |slab|) elementwise
+/// (reduction reorder only — documented in `kernels`), and greedy token
+/// decisions (argmax over the output rows) are identical.
+#[cfg(feature = "simd")]
+mod simd {
+    use super::*;
+
+    fn argmax(row: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn simd_fused_within_tolerance_and_token_identical() {
+        for payload in ["fixed", "rans"] {
+            let qt = build("glvq-8d", 2, 21);
+            let qt = if payload == "rans" { to_entropy(&qt) } else { qt };
+            let mut rng = Rng::new(22);
+            let x = Mat::random_normal(8, 64, 1.0, &mut rng);
+
+            let scalar = StreamingMatmul::new(5, 2).with_mode(ExecMode::Slab);
+            let mut ys = Mat::zeros(8, 32);
+            let mut ss = DecodeStats::default();
+            scalar.matmul(&qt, &x, &mut ys, &mut ss);
+
+            let simd = StreamingMatmul::new(5, 2).with_mode(ExecMode::Fused).with_simd(true);
+            let mut yv = Mat::zeros(8, 32);
+            let mut sv = DecodeStats::default();
+            simd.matmul(&qt, &x, &mut yv, &mut sv);
+
+            for (a, b) in yv.data.iter().zip(&ys.data) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{payload}: simd {a} vs scalar {b} outside documented tolerance"
+                );
+            }
+            for b in 0..8 {
+                assert_eq!(
+                    argmax(yv.row(b)),
+                    argmax(ys.row(b)),
+                    "{payload}: greedy token decision diverged on row {b}"
+                );
+            }
+            // stats accounting is mode-independent
+            assert_eq!(sv, ss, "{payload}: simd stats drifted");
+        }
+    }
+}
